@@ -1,0 +1,110 @@
+"""AOT lowering: JAX graphs → HLO *text* → ``artifacts/*.hlo.txt``.
+
+HLO text (NOT ``HloModuleProto.serialize()``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts            # default shapes
+    python -m compile.aot --shapes 64x16x256,32x8x64 ...
+
+Artifact naming: ``encode_K{K}_R{R}_W{W}_p{P}.hlo.txt`` plus a
+``manifest.txt`` of one ``name k r w p`` line per artifact — consumed by
+``rust/src/runtime/artifacts.rs``.
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .kernels.gf_matmul import DEFAULT_P  # noqa: E402
+from .model import codeword, encode, scaled_encode  # noqa: E402
+
+# The default artifact set: quickstart/bench shapes (K, R, W).
+DEFAULT_SHAPES = [
+    (16, 4, 64),
+    (64, 16, 256),
+    (48, 16, 256),
+    (256, 64, 256),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_encode(k, r, w, p=DEFAULT_P) -> str:
+    import jax.numpy as jnp
+
+    a_spec = jax.ShapeDtypeStruct((k, r), jnp.int32)
+    x_spec = jax.ShapeDtypeStruct((k, w), jnp.int32)
+    return to_hlo_text(jax.jit(lambda a, x: encode(a, x, p=p)).lower(a_spec, x_spec))
+
+
+def lower_codeword(k, r, w, p=DEFAULT_P) -> str:
+    import jax.numpy as jnp
+
+    a_spec = jax.ShapeDtypeStruct((k, r), jnp.int32)
+    x_spec = jax.ShapeDtypeStruct((k, w), jnp.int32)
+    return to_hlo_text(jax.jit(lambda a, x: codeword(a, x, p=p)).lower(a_spec, x_spec))
+
+
+def lower_scaled_encode(k, r, w, p=DEFAULT_P) -> str:
+    import jax.numpy as jnp
+
+    pre_spec = jax.ShapeDtypeStruct((k,), jnp.int32)
+    post_spec = jax.ShapeDtypeStruct((r,), jnp.int32)
+    a_spec = jax.ShapeDtypeStruct((k, r), jnp.int32)
+    x_spec = jax.ShapeDtypeStruct((k, w), jnp.int32)
+    return to_hlo_text(
+        jax.jit(lambda pre, post, a, x: scaled_encode(pre, post, a, x, p=p)).lower(
+            pre_spec, post_spec, a_spec, x_spec
+        )
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shapes",
+        default=",".join(f"{k}x{r}x{w}" for k, r, w in DEFAULT_SHAPES),
+        help="comma-separated KxRxW triples",
+    )
+    ap.add_argument("--prime", type=int, default=DEFAULT_P)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for spec in args.shapes.split(","):
+        k, r, w = (int(t) for t in spec.split("x"))
+        for kind, lower in (
+            ("encode", lower_encode),
+            ("codeword", lower_codeword),
+            ("scaled_encode", lower_scaled_encode),
+        ):
+            name = f"{kind}_K{k}_R{r}_W{w}_p{args.prime}"
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            text = lower(k, r, w, args.prime)
+            with open(path, "w") as fh:
+                fh.write(text)
+            manifest.append(f"{kind} {k} {r} {w} {args.prime} {name}.hlo.txt")
+            print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as fh:
+        fh.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

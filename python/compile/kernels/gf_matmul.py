@@ -1,0 +1,92 @@
+"""Layer 1 — the Pallas GF(p) matmul kernel.
+
+The compute hot-spot of decentralized encoding is bulk finite-field
+encoding: ``Y = (Aᵀ · X) mod p`` for data ``X ∈ F_p^{K×W}`` and a coding
+matrix ``A ∈ F_p^{K×R}`` (each column of ``A`` is one sink's linear
+combination; each row of ``X`` is one source's W-symbol payload).
+
+TPU mapping (DESIGN.md §2 Hardware-Adaptation): the kernel tiles the
+*output* (R × W) across the grid, streams full-K panels of ``A`` and ``X``
+HBM→VMEM per tile, accumulates on the MXU in one ``jnp.dot`` (exact in
+int64: q < 2^20 ⇒ K·q² < 2^63 for K ≤ 2^22), and applies a single modulo
+per output tile. ``interpret=True`` everywhere: the CPU PJRT plugin cannot
+run Mosaic custom-calls, so interpret mode is the correctness path and the
+TPU analysis is static (see EXPERIMENTS.md §Perf).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The repository's default NTT-friendly prime: 3·2^18 + 1 (see
+# rust/src/gf/prime.rs — the two sides must agree).
+DEFAULT_P = 786433
+
+# Output tile sizes. 128 matches the MXU systolic array edge; the VMEM
+# footprint per grid step is K·(TR + TW)·4 bytes for the operand panels
+# plus TR·TW·8 for the accumulator — for K = 4096, TR = TW = 128 that is
+# ~4.2 MiB, comfortably inside the ~16 MiB VMEM budget of a TPU core.
+TILE_R = 128
+TILE_W = 128
+
+
+def _gf_matmul_kernel(a_ref, x_ref, o_ref, *, p):
+    """One (TILE_R × TILE_W) output tile: o = (a_panelᵀ @ x_panel) mod p."""
+    a = a_ref[...].astype(jnp.int64)  # (K, TR) panel
+    x = x_ref[...].astype(jnp.int64)  # (K, TW) panel
+    acc = jnp.dot(a.T, x)  # exact: K·p² < 2^63
+    o_ref[...] = (acc % p).astype(jnp.int32)
+
+
+def gf_matmul(a, x, *, p=DEFAULT_P, tile_r=TILE_R, tile_w=TILE_W):
+    """``(Aᵀ·X) mod p`` via a tiled Pallas kernel.
+
+    Args:
+      a: int32[K, R] coding matrix, entries in [0, p).
+      x: int32[K, W] payload matrix, entries in [0, p).
+      p: field modulus (prime < 2^20 for exact int64 accumulation
+         at any K ≤ 2^22).
+
+    Returns:
+      int32[R, W] coded payloads.
+    """
+    k, r = a.shape
+    k2, w = x.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    tr = min(tile_r, r)
+    tw = min(tile_w, w)
+    # Pallas requires the grid to cover the outputs exactly; pad to tiles.
+    rp = -(-r // tr) * tr
+    wp = -(-w // tw) * tw
+    a_p = jnp.pad(a, ((0, 0), (0, rp - r)))
+    x_p = jnp.pad(x, ((0, 0), (0, wp - w)))
+    out = pl.pallas_call(
+        partial(_gf_matmul_kernel, p=p),
+        grid=(rp // tr, wp // tw),
+        in_specs=[
+            pl.BlockSpec((k, tr), lambda i, j: (0, i)),  # A panel: all K rows
+            pl.BlockSpec((k, tw), lambda i, j: (0, j)),  # X panel: all K rows
+        ],
+        out_specs=pl.BlockSpec((tr, tw), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, wp), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a_p, x_p)
+    return out[:r, :w]
+
+
+def vmem_bytes(k, tile_r=TILE_R, tile_w=TILE_W):
+    """Static VMEM footprint estimate per grid step (bytes)."""
+    panels = k * (tile_r + tile_w) * 4  # int32 operand panels
+    acc = tile_r * tile_w * 8  # int64 accumulator
+    out = tile_r * tile_w * 4
+    return panels + acc + out
+
+
+def mxu_utilization_estimate(k, r, w, tile_r=TILE_R, tile_w=TILE_W):
+    """Fraction of MXU-issue slots doing useful work (static estimate):
+    the int64 dot dominates; padding waste is the only inefficiency."""
+    useful = r * w * k
+    padded = (-(-r // tile_r) * tile_r) * (-(-w // tile_w) * tile_w) * k
+    return useful / padded

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the Pallas kernel — the correctness ground truth.
+
+No Pallas, no tiling: one exact int64 matmul followed by the modulo.
+"""
+
+import jax.numpy as jnp
+
+from .gf_matmul import DEFAULT_P
+
+
+def gf_matmul_ref(a, x, *, p=DEFAULT_P):
+    """``(Aᵀ·X) mod p`` — reference implementation."""
+    acc = jnp.dot(a.astype(jnp.int64).T, x.astype(jnp.int64))
+    return (acc % p).astype(jnp.int32)

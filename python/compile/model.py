@@ -1,0 +1,35 @@
+"""Layer 2 — the JAX compute graphs lowered to PJRT artifacts.
+
+Python runs only at build time (``make artifacts``); the rust coordinator
+loads the resulting HLO text and executes it on the request path.
+
+Graphs:
+  * ``encode(a, x)``      — bulk parity computation ``(Aᵀ·X) mod p``,
+                            the payload hot path (calls the Pallas kernel).
+  * ``codeword(a, x)``    — systematic codeword ``[X; (Aᵀ·X) mod p]``,
+                            used by the coordinator's verifier.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gf_matmul import DEFAULT_P, gf_matmul
+from .kernels.gf_scaled_matmul import gf_scaled_matmul
+
+jax.config.update("jax_enable_x64", True)
+
+
+def encode(a, x, *, p=DEFAULT_P):
+    """Parity packets: int32[R, W] from A: int32[K, R], X: int32[K, W]."""
+    return (gf_matmul(a, x, p=p),)
+
+
+def codeword(a, x, *, p=DEFAULT_P):
+    """Full systematic codeword int32[K+R, W] = [X; parity]."""
+    parity = gf_matmul(a, x, p=p)
+    return (jnp.concatenate([x, parity], axis=0),)
+
+
+def scaled_encode(pre, post, a, x, *, p=DEFAULT_P):
+    """The fused §VI block product ``diag(post)·Aᵀ·diag(pre)·X mod p``."""
+    return (gf_scaled_matmul(pre, post, a, x, p=p),)

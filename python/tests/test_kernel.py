@@ -1,0 +1,107 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and values; exactness is required (integer
+arithmetic — no tolerance).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.gf_matmul import (
+    DEFAULT_P,
+    gf_matmul,
+    mxu_utilization_estimate,
+    vmem_bytes,
+)
+from compile.kernels.ref import gf_matmul_ref
+
+
+def rand(rng, shape, p=DEFAULT_P):
+    return jnp.asarray(rng.integers(0, p, size=shape, dtype=np.int64), jnp.int32)
+
+
+@pytest.mark.parametrize(
+    "k,r,w",
+    [
+        (1, 1, 1),
+        (4, 4, 4),
+        (16, 4, 64),
+        (64, 16, 256),
+        (48, 16, 256),
+        (33, 7, 129),  # deliberately non-tile-aligned
+        (128, 130, 5),
+        (256, 1, 300),
+    ],
+)
+def test_kernel_matches_ref_fixed_shapes(k, r, w):
+    rng = np.random.default_rng(k * 1000 + r * 10 + w)
+    a, x = rand(rng, (k, r)), rand(rng, (k, w))
+    got = gf_matmul(a, x)
+    want = gf_matmul_ref(a, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(1, 96),
+    r=st.integers(1, 40),
+    w=st.integers(1, 160),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(k, r, w, seed):
+    rng = np.random.default_rng(seed)
+    a, x = rand(rng, (k, r)), rand(rng, (k, w))
+    got = gf_matmul(a, x)
+    want = gf_matmul_ref(a, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.sampled_from([786433, 65537, 12289, 257, 7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_other_primes(p, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, (24, 8), p)
+    x = rand(rng, (24, 16), p)
+    got = gf_matmul(a, x, p=p)
+    want = gf_matmul_ref(a, x, p=p)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_extreme_values_no_overflow():
+    # All entries at p−1, K large enough to stress the accumulator.
+    k, r, w = 512, 8, 8
+    a = jnp.full((k, r), DEFAULT_P - 1, jnp.int32)
+    x = jnp.full((k, w), DEFAULT_P - 1, jnp.int32)
+    got = gf_matmul(a, x)
+    want = gf_matmul_ref(a, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # Analytic check: K·(p−1)² mod p = K mod p.
+    assert int(got[0, 0]) == (k * (DEFAULT_P - 1) ** 2) % DEFAULT_P
+
+
+def test_output_range():
+    rng = np.random.default_rng(0)
+    a, x = rand(rng, (50, 20)), rand(rng, (50, 30))
+    y = np.asarray(gf_matmul(a, x))
+    assert y.min() >= 0 and y.max() < DEFAULT_P
+
+
+def test_vmem_estimate_within_budget():
+    # The DESIGN.md claim: K = 4096 with 128×128 tiles fits VMEM.
+    assert vmem_bytes(4096) < 16 * 2**20
+
+
+def test_mxu_estimate_bounds():
+    u = mxu_utilization_estimate(64, 16, 256)
+    assert 0.0 < u <= 1.0
+    assert mxu_utilization_estimate(64, 128, 128) == 1.0

@@ -1,0 +1,92 @@
+//! Bench: **end-to-end system** — full coordinator jobs (plan → simulate
+//! → verify) across algorithms, and the PJRT bulk-encode serving path
+//! (throughput / latency), mirroring the paper's deployment story.
+//!
+//! The PJRT sections need `make artifacts`; they are skipped otherwise.
+
+use dce::coordinator::config::CodeKind;
+use dce::coordinator::{EncodeJob, EncodeService, JobConfig};
+use dce::framework::AlgoRequest;
+use dce::gf::{Field, GfPrime};
+use dce::util::{bench, Rng};
+use std::path::Path;
+
+fn main() {
+    let f = GfPrime::default_field();
+
+    println!("## coordinator jobs: plan → simulate → verify (W = 64)");
+    println!(
+        "{:<12} {:>4} {:>4} | {:>5} {:>8} | {:>12}",
+        "algorithm", "K", "R", "C1", "C2", "wall(med)"
+    );
+    for algo in [
+        AlgoRequest::RsSpecific,
+        AlgoRequest::Universal,
+        AlgoRequest::MultiReduce,
+        AlgoRequest::Direct,
+    ] {
+        let cfg = JobConfig {
+            k: 64,
+            r: 16,
+            w: 64,
+            ports: 2,
+            code: CodeKind::RsStructured,
+            algorithm: algo,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg).unwrap();
+        let rep = job.run().unwrap();
+        assert_eq!(rep.verified, Some(true));
+        let stats = bench(&format!("{algo:?}"), 5, |_| job.run().unwrap());
+        println!(
+            "{:<12} {:>4} {:>4} | {:>5} {:>8} | {:>12?}",
+            format!("{}", rep.choice),
+            64,
+            16,
+            rep.sim.c1,
+            rep.sim.c2,
+            stats.median
+        );
+    }
+
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.txt").exists() {
+        println!("\n(skipping PJRT serving bench: run `make artifacts`)");
+        return;
+    }
+
+    println!("\n## PJRT serving path: batched GF(786433) encode (K=64, R=16)");
+    let code = dce::codes::GrsCode::structured(&f, 64, 16, 2).unwrap();
+    let parity = code.parity_matrix(&f);
+    for &(workers, requests, w) in &[(1usize, 32usize, 256usize), (2, 64, 256), (4, 64, 512)] {
+        let svc = EncodeService::start(&f, &parity, artifacts, 256, workers, 32).unwrap();
+        let mut rng = Rng::new(9);
+        let batches: Vec<Vec<Vec<u64>>> = (0..requests)
+            .map(|_| {
+                (0..64)
+                    .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                    .collect()
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> = batches
+            .iter()
+            .map(|x| svc.submit(x.clone()).unwrap())
+            .collect();
+        for rx in pending {
+            rx.recv().unwrap().y.unwrap();
+        }
+        let wall = t0.elapsed();
+        let elems = requests * 64 * w;
+        println!(
+            "workers={workers} requests={requests} W={w}: {wall:?} — {:>7.1} req/s, {:>7.2} Melem/s",
+            requests as f64 / wall.as_secs_f64(),
+            elems as f64 / wall.as_secs_f64() / 1e6
+        );
+        if let Some((n, p50, p99, max)) = svc.metrics.latency_summary("encode_latency") {
+            println!("  latency µs: n={n} p50={p50} p99={p99} max={max}");
+        }
+        svc.shutdown();
+    }
+    println!("\ne2e bench complete");
+}

@@ -1,0 +1,108 @@
+//! Bench: **Theorems 1–2** — the systematic framework's end-to-end costs
+//! (`max_m C_A2A(A_m) + C_BR`) measured against the component formulas,
+//! for both aspect-ratio regimes and several payload widths; plus the
+//! Appendix-A broadcast/reduce variants.
+
+use dce::collectives::{PipelinedBroadcast, TreeBroadcast};
+use dce::framework::{costs, A2aAlgo, SystematicEncode};
+use dce::gf::{Field, GfPrime, Mat};
+use dce::net::{run, CostModel, Packet, ProcId, Sim};
+use dce::util::bench;
+use std::sync::Arc;
+
+fn payloads(f: &GfPrime, k: usize, w: usize) -> Vec<Packet> {
+    (0..k)
+        .map(|i| (0..w).map(|j| f.elem((i * w + j) as u64 + 1)).collect())
+        .collect()
+}
+
+fn main() {
+    let f = GfPrime::default_field();
+
+    println!("## Theorem 1 (K ≥ R) and Theorem 2 (K < R) — universal framework");
+    println!(
+        "{:>5} {:>5} {:>3} {:>3} | {:>8} {:>8} | {:>8} {:>8} | {:>12}",
+        "K", "R", "W", "p", "C1 meas", "C1 thm", "C2 meas", "C2 thm", "wall(med)"
+    );
+    for &(k, r, w, p) in &[
+        (16usize, 4usize, 1usize, 1usize),
+        (64, 16, 1, 1),
+        (64, 16, 8, 1),
+        (256, 16, 1, 2),
+        (25, 4, 1, 1),
+        (4, 16, 1, 1),
+        (16, 64, 1, 1),
+        (16, 64, 8, 2),
+        (4, 25, 1, 1),
+    ] {
+        let a = Arc::new(Mat::random(&f, k, r, (k * r) as u64));
+        let runner = || {
+            let mut job = SystematicEncode::new(
+                f,
+                a.clone(),
+                payloads(&f, k, w),
+                p,
+                A2aAlgo::Universal,
+            )
+            .expect("job");
+            run(&mut Sim::new(p), &mut job).expect("run")
+        };
+        let rep = runner();
+        // Component formula: block A2A + broadcast/reduce over the grid.
+        let block = k.max(r).div_ceil(k.min(r)).max(1);
+        let a2a = costs::theorem3_universal(k.min(r) as u64, p as u64);
+        let a2a = (a2a.0, a2a.1 * w as u64);
+        let (c1t, c2t) = if k >= r {
+            costs::theorem1_framework(a2a, k as u64, r as u64, w as u64, p as u64)
+        } else {
+            costs::theorem2_framework(a2a, k as u64, r as u64, w as u64, p as u64)
+        };
+        let _ = block;
+        let stats = bench("fw", 8, |_| runner());
+        println!(
+            "{k:>5} {r:>5} {w:>3} {p:>3} | {:>8} {:>8} | {:>8} {:>8} | {:>12?}",
+            rep.c1, c1t, rep.c2, c2t, stats.median
+        );
+        assert!(rep.c1 <= c1t, "C1 {} must be ≤ formula {}", rep.c1, c1t);
+        assert!(rep.c2 <= c2t, "C2 {} must be ≤ formula {}", rep.c2, c2t);
+    }
+
+    println!("\n## Appendix A — broadcast implementations vs W (N = 8, p = 1)");
+    println!(
+        "{:>6} | {:>14} {:>14} | {:>10}",
+        "W", "tree C (model)", "chain C (model)", "winner"
+    );
+    let model = CostModel::new(10.0, 0.1, 20);
+    let procs: Vec<ProcId> = (0..8).collect();
+    for &w in &[1usize, 16, 64, 256, 1024, 4096] {
+        let data: Packet = (0..w as u64).collect();
+        let mut tree = TreeBroadcast::new(procs.clone(), 1, data.clone());
+        let rt = run(&mut Sim::new(1), &mut tree).unwrap();
+        let segments = (w / 8).max(1);
+        let mut chain = PipelinedBroadcast::new(procs.clone(), data, segments);
+        let rc = run(&mut Sim::new(1), &mut chain).unwrap();
+        let (ct, cc) = (rt.cost(&model), rc.cost(&model));
+        println!(
+            "{w:>6} | {ct:>14.1} {cc:>14.1} | {:>10}",
+            if ct <= cc { "tree" } else { "pipelined" }
+        );
+    }
+
+    println!("\n## wall-clock scaling of the full framework (universal, W = 4)");
+    for &(k, r) in &[(64usize, 16usize), (256, 64), (1024, 256)] {
+        let a = Arc::new(Mat::random(&f, k, r, 77));
+        let stats = bench(&format!("framework K={k} R={r}"), 5, |_| {
+            let mut job = SystematicEncode::new(
+                f,
+                a.clone(),
+                payloads(&f, k, 4),
+                2,
+                A2aAlgo::Universal,
+            )
+            .unwrap();
+            run(&mut Sim::new(2), &mut job).unwrap()
+        });
+        println!("{stats}");
+    }
+    println!("\nframework bench complete");
+}

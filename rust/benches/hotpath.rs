@@ -1,0 +1,178 @@
+//! Bench: **hot paths** — the §Perf harness. Micro-benchmarks for every
+//! layer the profile identified:
+//!
+//! * L3 field inner loops: mul / mul_add / packet axpy (Barrett vs naive),
+//! * L3 engine: prepare-and-shoot wall-clock scaling, allocation pressure,
+//! * structured-matrix construction (Vandermonde inverse, Cauchy blocks),
+//! * PJRT bulk encode throughput (the L1/L2 artifact) vs a native rust
+//!   GF matmul, when artifacts are present.
+//!
+//! Before/after numbers from this harness are recorded in
+//! EXPERIMENTS.md §Perf.
+
+use dce::collectives::PrepareShoot;
+use dce::gf::{vandermonde, Field, GfPrime, Mat};
+use dce::net::{pkt_add_scaled, run, Packet, Sim};
+use dce::util::{bench, Rng};
+use std::hint::black_box;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() {
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(1);
+
+    println!("## L3 — field inner loops (1M ops per iteration)");
+    let xs: Vec<u64> = (0..1024).map(|_| rng.below(f.order())).collect();
+    let stats = bench("gf_mul 1M", 20, |_| {
+        let mut acc = 1u64;
+        for _ in 0..1024 {
+            for &x in &xs {
+                acc = f.mul(acc, x | 1);
+            }
+        }
+        acc
+    });
+    println!(
+        "{stats}   ({:.2} ns/mul)",
+        stats.per_iter_ns() / (1024.0 * 1024.0)
+    );
+    let stats = bench("gf_mul_add 1M", 20, |_| {
+        let mut acc = 0u64;
+        for _ in 0..1024 {
+            for &x in &xs {
+                acc = f.mul_add(acc, x, 12345);
+            }
+        }
+        acc
+    });
+    println!(
+        "{stats}   ({:.2} ns/op)",
+        stats.per_iter_ns() / (1024.0 * 1024.0)
+    );
+
+    println!("\n## L3 — packet axpy (W = 4096, 256 terms)");
+    let w = 4096usize;
+    let packets: Vec<Packet> = (0..256)
+        .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+        .collect();
+    let coeffs: Vec<u64> = (0..256).map(|_| rng.below(f.order())).collect();
+    let stats = bench("axpy 256x4096 (per-term reduce)", 20, |_| {
+        let mut acc = vec![0u64; w];
+        for (c, p) in coeffs.iter().zip(&packets) {
+            pkt_add_scaled(&f, &mut acc, *c, p);
+        }
+        acc
+    });
+    println!(
+        "{stats}   ({:.3} Gop/s)",
+        (256.0 * w as f64) / stats.per_iter_ns()
+    );
+    let stats = bench("lincomb 256x4096 (delayed reduce)", 20, |_| {
+        let mut acc = vec![0u64; w];
+        let terms: Vec<(u64, &[u64])> = coeffs
+            .iter()
+            .zip(&packets)
+            .map(|(&c, p)| (c, p.as_slice()))
+            .collect();
+        f.lincomb_into(&mut acc, &terms);
+        acc
+    });
+    println!(
+        "{stats}   ({:.3} Gop/s)",
+        (256.0 * w as f64) / stats.per_iter_ns()
+    );
+
+    println!("\n## L3 — structured matrices");
+    let points: Vec<u64> = (1..=256u64).collect();
+    println!("{}", bench("vandermonde::inverse n=256", 10, |_| {
+        vandermonde::inverse(&f, &points)
+    }));
+    println!("{}", bench("Mat::inverse (GJ) n=256", 5, |_| {
+        let v = vandermonde::square(&f, &points);
+        v.inverse(&f).unwrap()
+    }));
+
+    println!("\n## L3 — prepare-and-shoot engine scaling (W = 1)");
+    for &k in &[256usize, 1024, 4096] {
+        let c = Arc::new(Mat::random(&f, k, k, 3));
+        let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![f.elem(i + 1)]).collect();
+        let stats = bench(&format!("prepare-shoot K={k}"), 5, |_| {
+            let mut ps = PrepareShoot::new(f, (0..k).collect(), 1, c.clone(), inputs.clone());
+            run(&mut Sim::new(1), &mut ps).unwrap()
+        });
+        println!("{stats}");
+    }
+
+    println!("\n## L1/L2 via PJRT vs native rust GF matmul (K=256, R=64, W=256)");
+    let artifacts = Path::new("artifacts");
+    let (k, r, w) = (256usize, 64usize, 256usize);
+    let a = Mat::random(&f, k, r, 5);
+    let x = Mat::random(&f, k, w, 6);
+    let a_flat: Vec<u64> = (0..k).flat_map(|i| a.row(i).to_vec()).collect();
+    let x_flat: Vec<u64> = (0..k).flat_map(|i| x.row(i).to_vec()).collect();
+    let stats = bench("native matmul (per-term reduce)", 10, |_| {
+        // y[j][c] = Σ_i a[i][j]·x[i][c]
+        let mut y = vec![0u64; r * w];
+        for i in 0..k {
+            let xi = x.row(i);
+            for j in 0..r {
+                let aij = a[(i, j)];
+                if aij == 0 {
+                    continue;
+                }
+                let row = &mut y[j * w..(j + 1) * w];
+                for (yy, &xv) in row.iter_mut().zip(xi) {
+                    *yy = f.mul_add(*yy, aij, xv);
+                }
+            }
+        }
+        black_box(y)
+    });
+    let flops = (k * r * w) as f64;
+    println!("{stats}   ({:.3} Gmul/s)", flops / stats.per_iter_ns());
+    let stats = bench("native matmul (lazy reduce)", 10, |_| {
+        let mut y = vec![0u64; r * w];
+        let chunk = f.lazy_chunk();
+        for (i0, rows) in (0..k).collect::<Vec<_>>().chunks(chunk).enumerate() {
+            for &i in rows {
+                let xi = x.row(i);
+                for j in 0..r {
+                    let aij = a[(i, j)];
+                    if aij == 0 {
+                        continue;
+                    }
+                    let row = &mut y[j * w..(j + 1) * w];
+                    for (yy, &xv) in row.iter_mut().zip(xi) {
+                        *yy = f.lazy_mul_acc(*yy, aij, xv);
+                    }
+                }
+            }
+            let _ = i0;
+            for yy in y.iter_mut() {
+                *yy = f.lazy_reduce(*yy);
+            }
+        }
+        black_box(y)
+    });
+    println!("{stats}   ({:.3} Gmul/s)", flops / stats.per_iter_ns());
+    if artifacts.join("manifest.txt").exists() {
+        let rt = dce::runtime::Runtime::cpu().unwrap();
+        let enc = rt.load_encoder(artifacts, k, r, w, f.order()).unwrap();
+        // Warm + measure.
+        let t0 = Instant::now();
+        let iters = 10;
+        for _ in 0..iters {
+            black_box(enc.encode_u64(&a_flat, &x_flat).unwrap());
+        }
+        let per = t0.elapsed() / iters;
+        println!(
+            "pjrt encode 256x64x256                       median {per:?}   ({:.3} Gmul/s)",
+            flops / per.as_nanos() as f64
+        );
+    } else {
+        println!("(skipping PJRT: run `make artifacts`)");
+    }
+    println!("\nhotpath bench complete");
+}

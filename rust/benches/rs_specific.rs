@@ -1,0 +1,140 @@
+//! Bench: **§VI headline + Theorems 7/9** — decentralized encoding of
+//! systematic Reed–Solomon codes: the specific (Cauchy / two
+//! draw-and-loose) path versus the universal path, sweeping R, aspect
+//! ratio and the α/β cost regime. Reproduces the crossover structure the
+//! paper predicts: the specific algorithm doubles C1 but shrinks C2 from
+//! `Θ(√R)` to `Θ(log R)`, so it wins whenever bandwidth dominates and `H`
+//! is large (Remark 8), and loses for small codes or latency-dominated
+//! regimes.
+
+use dce::codes::GrsCode;
+use dce::framework::{A2aAlgo, SystematicEncode};
+use dce::gf::{Field, GfPrime};
+use dce::net::{run, CostModel, Packet, Sim, SimReport};
+use dce::util::bench;
+use std::sync::Arc;
+
+fn payloads(f: &GfPrime, k: usize, w: usize) -> Vec<Packet> {
+    (0..k)
+        .map(|i| (0..w).map(|j| f.elem((i * w + j) as u64 * 31 + 1)).collect())
+        .collect()
+}
+
+fn both(f: &GfPrime, k: usize, r: usize, w: usize, p: usize) -> (SimReport, SimReport) {
+    let code = GrsCode::structured(f, k, r, 2).expect("structured code");
+    let mut spec = SystematicEncode::new_rs(*f, &code, payloads(f, k, w), p).expect("spec");
+    let rep_s = run(&mut Sim::new(p), &mut spec).expect("spec run");
+    let a = Arc::new(code.parity_matrix(f));
+    let mut univ =
+        SystematicEncode::new(*f, a, payloads(f, k, w), p, A2aAlgo::Universal).expect("univ");
+    let rep_u = run(&mut Sim::new(p), &mut univ).expect("univ run");
+    assert_eq!(spec.coded(), univ.coded(), "K={k} R={r}: outputs must agree");
+    (rep_s, rep_u)
+}
+
+fn main() {
+    let f = GfPrime::default_field();
+
+    println!("## specific vs universal — C1/C2 sweep (W = 1, p = 1)");
+    println!(
+        "{:>5} {:>5} | {:>7} {:>7} | {:>7} {:>7} | {:>9}",
+        "K", "R", "C1 spec", "C1 univ", "C2 spec", "C2 univ", "C2 gain"
+    );
+    for &(k, r) in &[
+        (16usize, 16usize),
+        (64, 16),
+        (64, 64),
+        (256, 64),
+        (256, 256),
+        (1024, 256),
+        (1024, 1024),
+        (16, 64),
+        (64, 256),
+    ] {
+        let (s, u) = both(&f, k, r, 1, 1);
+        println!(
+            "{k:>5} {r:>5} | {:>7} {:>7} | {:>7} {:>7} | {:>8.2}x",
+            s.c1,
+            u.c1,
+            s.c2,
+            u.c2,
+            u.c2 as f64 / s.c2 as f64
+        );
+    }
+
+    println!("\n## cost-model crossover (K = R = 256, W = 64): C = αC1 + β·20·C2");
+    println!(
+        "{:>9} {:>9} | {:>12} {:>12} | {:>8}",
+        "alpha", "beta", "C specific", "C universal", "winner"
+    );
+    let (s, u) = both(&f, 256, 256, 64, 1);
+    for &(alpha, beta) in &[
+        (1.0f64, 1.0f64),
+        (10.0, 1.0),
+        (100.0, 1.0),
+        (1000.0, 1.0),
+        (10000.0, 1.0),
+        (1.0, 10.0),
+    ] {
+        let model = CostModel::new(alpha, beta, 20);
+        let (cs, cu) = (s.cost(&model), u.cost(&model));
+        println!(
+            "{alpha:>9.0} {beta:>9.0} | {cs:>12.0} {cu:>12.0} | {:>8}",
+            if cs <= cu { "specific" } else { "universal" }
+        );
+    }
+
+    println!("\n## Theorem 7/9 round structure: C1(spec) = 2·C1(draw-and-loose) + reduce");
+    for &(k, r) in &[(64usize, 64usize), (256, 256)] {
+        let (s, _) = both(&f, k, r, 1, 1);
+        // Single block (K = R): C1 = 2·log2(R) + 0-round scales + 1-col
+        // framework (no reduce needed when M = 1... the row reduce over
+        // M+1 = 2 nodes adds 1 round).
+        let h = (r as f64).log2() as u64;
+        println!("K=R={r}: C1 = {} (2H = {}, +reduce)", s.c1, 2 * h);
+    }
+
+    println!("\n## ablation — Remark 8: draw-and-loose C2 vs DFT depth H (K = 256, p = 1)");
+    println!("(H = 0 degenerates to prepare-and-shoot; gains require large H)");
+    println!("{:>3} {:>5} {:>5} | {:>6} {:>6}", "H", "Z", "M", "C1", "C2");
+    {
+        use dce::codes::StructuredPoints;
+        use dce::collectives::DrawLoose;
+        let n = 256usize;
+        for h in [0u32, 2, 4, 6, 8] {
+            let z = dce::util::ipow(2, h);
+            let m = n / z as usize;
+            let sp = StructuredPoints::with_h(&f, n, 2, h, (0..m as u64).collect()).unwrap();
+            let inputs: Vec<Packet> = (0..n as u64).map(|i| vec![f.elem(i + 1)]).collect();
+            let mut dl = DrawLoose::new(f, (0..n).collect(), 1, &sp, inputs, false).unwrap();
+            let rep = run(&mut Sim::new(1), &mut dl).unwrap();
+            println!("{h:>3} {z:>5} {m:>5} | {:>6} {:>6}", rep.c1, rep.c2);
+        }
+    }
+
+    println!("\n## ablation — structured-point radix P (K = 256, p = 1)");
+    println!("{:>3} {:>3} | {:>6} {:>6}", "P", "H", "C1", "C2");
+    {
+        use dce::codes::StructuredPoints;
+        use dce::collectives::DrawLoose;
+        let n = 256usize;
+        for p_base in [2u64, 4, 16] {
+            let h = StructuredPoints::max_h(&f, n as u64, p_base);
+            let m = n / dce::util::ipow(p_base, h) as usize;
+            let sp = StructuredPoints::with_h(&f, n, p_base, h, (0..m as u64).collect()).unwrap();
+            let inputs: Vec<Packet> = (0..n as u64).map(|i| vec![f.elem(i + 1)]).collect();
+            let mut dl = DrawLoose::new(f, (0..n).collect(), 1, &sp, inputs, false).unwrap();
+            let rep = run(&mut Sim::new(1), &mut dl).unwrap();
+            println!("{p_base:>3} {h:>3} | {:>6} {:>6}", rep.c1, rep.c2);
+        }
+    }
+
+    println!("\n## wall-clock (specific path, W = 16)");
+    for &(k, r) in &[(64usize, 16usize), (256, 64)] {
+        let stats = bench(&format!("rs-specific K={k} R={r} W=16"), 5, |_| {
+            both(&f, k, r, 16, 1)
+        });
+        println!("{stats}");
+    }
+    println!("\nrs_specific bench complete");
+}

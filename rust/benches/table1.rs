@@ -1,0 +1,133 @@
+//! Bench: **Table I** — costs of the all-to-all encode schemes, measured
+//! on the round engine against the paper's closed forms, plus the
+//! Lemma 1/2 lower bounds and wall-clock timings.
+//!
+//! Regenerates:
+//!   * row 1 (universal / Theorem 3) over K ∈ {16..4096}, p ∈ {1,2,3,4},
+//!   * row 2 (DFT / Theorem 4 + Corollary 1) for K = P^H,
+//!   * row 3 (Vandermonde / Theorem 5) for K = M·P^H.
+
+use dce::codes::StructuredPoints;
+use dce::collectives::{DftA2A, DrawLoose, PrepareShoot};
+use dce::framework::costs;
+use dce::gf::{Field, GfPrime, Mat};
+use dce::net::{run, Packet, Sim, SimReport};
+use dce::util::{bench, ipow};
+use std::sync::Arc;
+
+fn inputs(f: &GfPrime, k: usize) -> Vec<Packet> {
+    (0..k as u64).map(|i| vec![f.elem(i * 7 + 1)]).collect()
+}
+
+fn run_universal(f: &GfPrime, k: usize, p: usize) -> SimReport {
+    let c = Arc::new(Mat::random(f, k, k, k as u64));
+    let mut ps = PrepareShoot::new(*f, (0..k).collect(), p, c, inputs(f, k));
+    run(&mut Sim::new(p), &mut ps).expect("universal run")
+}
+
+fn main() {
+    let f = GfPrime::default_field();
+
+    println!("## Table I row 1 — universal (prepare-and-shoot, Theorem 3)");
+    println!(
+        "{:>5} {:>2} | {:>8} {:>8} | {:>8} {:>8} {:>9} | {:>12}",
+        "K", "p", "C1 meas", "C1 thm", "C2 meas", "C2 thm", "C2 lower", "wall(med)"
+    );
+    for &p in &[1usize, 2, 3, 4] {
+        for &k in &[16usize, 64, 256, 1024, 4096] {
+            let rep = run_universal(&f, k, p);
+            let (c1t, c2t) = costs::theorem3_universal(k as u64, p as u64);
+            let lb = costs::lemma2_c2_lower_bound(k as u64, p as u64);
+            let iters = if k >= 1024 { 3 } else { 10 };
+            let stats = bench("univ", iters, |_| run_universal(&f, k, p));
+            println!(
+                "{k:>5} {p:>2} | {:>8} {:>8} | {:>8} {:>8} {:>9.1} | {:>12?}",
+                rep.c1, c1t, rep.c2, c2t, lb, stats.median
+            );
+            assert_eq!(rep.c1, c1t, "C1 must equal Lemma-1 optimum");
+            assert!(rep.c2 <= c2t, "C2 must not exceed Theorem 3");
+        }
+    }
+
+    println!("\n## Table I row 2 — DFT (Theorem 4; Corollary 1 when P = p+1)");
+    println!(
+        "{:>5} {:>2} {:>3} {:>2} | {:>8} {:>8} | {:>8} {:>8} | {:>12}",
+        "K", "P", "H", "p", "C1 meas", "C1 thm", "C2 meas", "C2 thm", "wall(med)"
+    );
+    for &(p_base, h, p) in &[
+        (2u64, 4u32, 1usize),
+        (2, 8, 1),
+        (2, 10, 1),
+        (4, 4, 3),
+        (4, 6, 3),
+        (8, 3, 7),
+        (2, 8, 3),
+    ] {
+        let k = ipow(p_base, h) as usize;
+        let runner = || {
+            let mut d = DftA2A::new(
+                f,
+                (0..k).collect(),
+                p,
+                p_base,
+                h,
+                inputs(&f, k),
+                false,
+            )
+            .expect("dft");
+            run(&mut Sim::new(p), &mut d).expect("dft run")
+        };
+        let rep = runner();
+        let (c1t, c2t) = costs::theorem4_dft(p_base, h, p as u64);
+        let stats = bench("dft", if k >= 1024 { 3 } else { 10 }, |_| runner());
+        println!(
+            "{k:>5} {p_base:>2} {h:>3} {p:>2} | {:>8} {:>8} | {:>8} {:>8} | {:>12?}",
+            rep.c1, c1t, rep.c2, c2t, stats.median
+        );
+        assert_eq!(rep.c1, c1t);
+        assert!(rep.c2 <= c2t);
+    }
+
+    println!("\n## Table I row 3 — Vandermonde (draw-and-loose, Theorem 5)");
+    println!(
+        "{:>5} {:>3} {:>4} {:>2} | {:>8} {:>8} | {:>8} {:>8} | {:>12}",
+        "K", "M", "Z", "p", "C1 meas", "C1 thm", "C2 meas", "C2 thm", "wall(med)"
+    );
+    for &(n, p_base, p) in &[
+        (24usize, 2u64, 1usize),
+        (48, 2, 1),
+        (96, 2, 1),
+        (192, 2, 1),
+        (768, 2, 1),
+        (48, 4, 3),
+        (192, 4, 3),
+    ] {
+        let h = StructuredPoints::max_h(&f, n as u64, p_base);
+        let z = ipow(p_base, h);
+        let m = n / z as usize;
+        let sp = StructuredPoints::new(&f, n, p_base, (0..m as u64).collect()).expect("design");
+        let runner = || {
+            let mut dl =
+                DrawLoose::new(f, (0..n).collect(), p, &sp, inputs(&f, n), false).expect("dl");
+            run(&mut Sim::new(p), &mut dl).expect("dl run")
+        };
+        let rep = runner();
+        let (c1t, c2t) = costs::theorem5_vandermonde(m as u64, p_base, h, p as u64);
+        let stats = bench("vand", if n >= 256 { 3 } else { 10 }, |_| runner());
+        println!(
+            "{n:>5} {m:>3} {z:>4} {p:>2} | {:>8} {:>8} | {:>8} {:>8} | {:>12?}",
+            rep.c1, c1t, rep.c2, c2t, stats.median
+        );
+        assert_eq!(rep.c1, c1t);
+        assert!(rep.c2 <= c2t);
+    }
+
+    println!("\n## Remark 7 — universal C2 within √2 of the Lemma 2 bound");
+    println!("{:>6} | {:>8} {:>9} {:>6}", "K", "C2 univ", "C2 lower", "ratio");
+    for &k in &[256u64, 1024, 4096, 16384, 65536] {
+        let (_, c2) = costs::theorem3_universal(k, 1);
+        let lb = costs::lemma2_c2_lower_bound(k, 1);
+        println!("{k:>6} | {c2:>8} {lb:>9.1} {:>6.3}", c2 as f64 / lb);
+    }
+    println!("\ntable1 bench complete");
+}

@@ -1,0 +1,189 @@
+//! Lagrange codes and Lagrange coded computing (Remark 9).
+//!
+//! LCC interpolates `g` with `g(α_k) = x_k`, hands worker `n` the coded
+//! value `x̃_n = g(β_n)`, evaluates a polynomial `h` on the coded data, and
+//! decodes `h(x_k)` from any `deg(h)(K−1)+1` worker results — because
+//! `h∘g` is itself a polynomial of that degree. The coding matrix
+//! `L_{α,β} = V_α^{-1}·V_β` is Cauchy-like with `u = v = 1`, so all of
+//! §VI applies verbatim; if `β_k = α_k` for `k < K` the code is
+//! systematic.
+
+use crate::gf::{cauchy::CauchyLike, poly, vandermonde, Field, Mat};
+
+/// A Lagrange code: data at `alphas`, coded evaluations at `betas`.
+#[derive(Clone, Debug)]
+pub struct LagrangeCode {
+    pub alphas: Vec<u64>,
+    pub betas: Vec<u64>,
+    /// Structured designs when built via [`structured`](Self::structured):
+    /// the α family and one β family per K-sized block of workers — what
+    /// makes every block of `L_{α,β}` computable with the §VI algorithm
+    /// (Remark 9 + Appendix B).
+    pub alpha_design: Option<crate::codes::StructuredPoints>,
+    pub beta_designs: Vec<crate::codes::StructuredPoints>,
+}
+
+impl LagrangeCode {
+    /// `betas.len() = N` may exceed or overlap `alphas` (overlapping
+    /// prefixes give a systematic code).
+    pub fn new(alphas: Vec<u64>, betas: Vec<u64>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            vandermonde::points_distinct(&alphas),
+            "alpha points must be distinct"
+        );
+        anyhow::ensure!(
+            vandermonde::points_distinct(&betas),
+            "beta points must be distinct"
+        );
+        Ok(LagrangeCode {
+            alphas,
+            betas,
+            alpha_design: None,
+            beta_designs: Vec::new(),
+        })
+    }
+
+    /// Non-systematic Lagrange code on structured points: `K` data owners,
+    /// `n_total` workers (`K | n_total`), with disjoint draw-and-loose
+    /// designs for the α family and each worker block's β family — every
+    /// `K×K` block of `L_{α,β}` is then a §VI Cauchy-like A2A away
+    /// (Remark 9; used by the Appendix-B framework).
+    pub fn structured<F: Field>(
+        f: &F,
+        k: usize,
+        n_total: usize,
+        p_base: u64,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(k >= 1 && n_total >= k, "need N ≥ K ≥ 1");
+        anyhow::ensure!(n_total % k == 0, "structured Lagrange needs K | N");
+        let blocks = n_total / k;
+        let fam = crate::codes::structured::disjoint_family(f, k, p_base, blocks + 1)?;
+        let alpha_design = fam[blocks].clone();
+        let beta_designs = fam[..blocks].to_vec();
+        let betas: Vec<u64> = beta_designs.iter().flat_map(|d| d.points.clone()).collect();
+        Ok(LagrangeCode {
+            alphas: alpha_design.points.clone(),
+            betas,
+            alpha_design: Some(alpha_design),
+            beta_designs,
+        })
+    }
+
+    pub fn k(&self) -> usize {
+        self.alphas.len()
+    }
+
+    pub fn n(&self) -> usize {
+        self.betas.len()
+    }
+
+    /// True iff `β_k = α_k` for all `k < K` (systematic Lagrange code).
+    pub fn is_systematic(&self) -> bool {
+        self.n() >= self.k() && self.betas[..self.k()] == self.alphas[..]
+    }
+
+    /// The Lagrange matrix `L_{α,β} = V_α^{-1}·V_β ∈ F^{K×N}`.
+    pub fn matrix<F: Field>(&self, f: &F) -> Mat {
+        let va_inv = vandermonde::inverse(f, &self.alphas);
+        let vb = vandermonde::vandermonde(f, self.k(), &self.betas);
+        va_inv.mul(f, &vb)
+    }
+
+    /// The Cauchy-like view (Remark 9) of the non-overlapping columns.
+    pub fn cauchy_part<F: Field>(&self, f: &F) -> CauchyLike {
+        let skip = if self.is_systematic() { self.k() } else { 0 };
+        CauchyLike::lagrange(f, self.alphas.clone(), self.betas[skip..].to_vec())
+    }
+
+    /// Encode: `x̃_n = g(β_n)` for the interpolant `g(α_k) = x_k`.
+    pub fn encode<F: Field>(&self, f: &F, x: &[u64]) -> Vec<u64> {
+        assert_eq!(x.len(), self.k());
+        let g = poly::interpolate(f, &self.alphas, x);
+        poly::eval_many(f, &g, &self.betas)
+    }
+
+    /// Decode the *results of a degree-`d` computation* `h` applied to the
+    /// coded data: given ≥ `d(K−1)+1` pairs `(worker index n, h(x̃_n))`,
+    /// recover `h(x_k)` for all `k` by interpolating `h∘g`.
+    pub fn decode_computation<F: Field>(
+        &self,
+        f: &F,
+        degree: usize,
+        results: &[(usize, u64)],
+    ) -> anyhow::Result<Vec<u64>> {
+        let need = degree * (self.k() - 1) + 1;
+        anyhow::ensure!(
+            results.len() >= need,
+            "need {need} results for degree {degree}, got {}",
+            results.len()
+        );
+        let pts: Vec<u64> = results.iter().take(need).map(|&(n, _)| self.betas[n]).collect();
+        let vals: Vec<u64> = results.iter().take(need).map(|&(_, v)| v).collect();
+        anyhow::ensure!(vandermonde::points_distinct(&pts), "repeated workers");
+        let hg = poly::interpolate(f, &pts, &vals);
+        Ok(self
+            .alphas
+            .iter()
+            .map(|&a| poly::eval(f, &hg, a))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::{Field, GfPrime};
+
+    fn f() -> GfPrime {
+        GfPrime::default_field()
+    }
+
+    #[test]
+    fn systematic_when_points_overlap() {
+        let c = LagrangeCode::new(vec![1, 2, 3], vec![1, 2, 3, 10, 11]).unwrap();
+        assert!(c.is_systematic());
+        let f = f();
+        let x = vec![5u64, 7, 9];
+        let cw = c.encode(&f, &x);
+        assert_eq!(&cw[..3], &x[..]);
+    }
+
+    #[test]
+    fn matrix_encode_agrees_with_polynomial_encode() {
+        let f = f();
+        let c = LagrangeCode::new(vec![1, 2, 3, 4], vec![10, 11, 12, 13, 14, 15]).unwrap();
+        let x = vec![3u64, 1, 4, 1];
+        let via_matrix = c.matrix(&f).vec_mul(&f, &x);
+        assert_eq!(via_matrix, c.encode(&f, &x));
+    }
+
+    #[test]
+    fn lcc_quadratic_computation_roundtrip() {
+        // Workers compute h(z) = z² + 5z + 1 on coded data; decode h(x_k)
+        // from 2(K−1)+1 of N worker results.
+        let f = f();
+        let k = 4usize;
+        let n = 9usize; // ≥ 2(K−1)+1 = 7
+        let c = LagrangeCode::new(
+            (1..=k as u64).collect(),
+            (100..100 + n as u64).collect(),
+        )
+        .unwrap();
+        let x: Vec<u64> = vec![12, 99, 786001, 5];
+        let coded = c.encode(&f, &x);
+        let h = |z: u64| f.add(f.add(f.mul(z, z), f.mul(5, z)), 1);
+        let results: Vec<(usize, u64)> = coded.iter().enumerate().map(|(i, &z)| (i, h(z))).collect();
+        // Straggler-resilient: drop two workers.
+        let got = c.decode_computation(&f, 2, &results[2..]).unwrap();
+        let want: Vec<u64> = x.iter().map(|&z| h(z)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn too_few_results_rejected() {
+        let f = f();
+        let c = LagrangeCode::new(vec![1, 2, 3], vec![10, 11, 12, 13]).unwrap();
+        let res = vec![(0usize, 1u64), (1, 2), (2, 3), (3, 4)];
+        assert!(c.decode_computation(&f, 2, &res[..4]).is_err()); // need 5
+    }
+}

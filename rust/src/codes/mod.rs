@@ -1,0 +1,20 @@
+//! Code substrate: generalized Reed–Solomon codes, Lagrange codes, and the
+//! structured evaluation-point designs that make the paper's specific
+//! (draw-and-loose–based) algorithms applicable.
+//!
+//! * [`structured`] — `ω_{i,j} = g^{φ(i)}·g^{j′(q−1)/Z}` point grids
+//!   (eq. (15)); Theorem 5's `((q−1)/Z choose M)` Vandermonde family.
+//! * [`rs`] — GRS generator (eq. (22)), systematic form (eqs. (23)–(24)),
+//!   erasure decoding, MDS checks.
+//! * [`lagrange`] — Lagrange matrices & Lagrange coded computing
+//!   (Remark 9).
+
+pub mod lagrange;
+pub mod rm;
+pub mod rs;
+pub mod structured;
+
+pub use lagrange::LagrangeCode;
+pub use rm::RmCode;
+pub use rs::GrsCode;
+pub use structured::StructuredPoints;

@@ -1,0 +1,187 @@
+//! Reed–Muller codes — the paper's first "future work" target (§VII:
+//! *"extending our results to Reed-Muller codes"*).
+//!
+//! `RM(r, m)` over `GF(2)`: codewords are evaluations of degree-≤ r
+//! multilinear polynomials on `{0,1}^m` — `K = Σ_{i≤r} C(m,i)` data bits,
+//! `N = 2^m` coded bits, minimum distance `2^{m−r}`.
+//!
+//! Decentralized encoding needs nothing new: `G` is a binary generator
+//! matrix, so the Appendix-B non-systematic framework (or the §III
+//! systematic framework after Gaussian systematisation) encodes it with
+//! the universal A2A over `GF(2^w)`-packed symbols — demonstrated in the
+//! tests below. The *specific*-algorithm question (is there a
+//! draw-and-loose analogue exploiting the Plotkin/evaluation structure?)
+//! is exactly what the paper leaves open; we provide the substrate.
+
+use crate::gf::{Field, Mat};
+
+/// The binary Reed–Muller code `RM(r, m)`.
+#[derive(Clone, Debug)]
+pub struct RmCode {
+    pub r: u32,
+    pub m: u32,
+    /// Monomial exponent masks, one per data position (sorted by degree
+    /// then value): data bit `k` multiplies `∏_{i ∈ masks[k]} x_i`.
+    masks: Vec<u32>,
+}
+
+impl RmCode {
+    pub fn new(r: u32, m: u32) -> anyhow::Result<Self> {
+        anyhow::ensure!(m >= 1 && m <= 20, "m in 1..=20");
+        anyhow::ensure!(r <= m, "need r ≤ m");
+        let mut masks: Vec<u32> = (0u32..1 << m)
+            .filter(|s| s.count_ones() <= r)
+            .collect();
+        masks.sort_by_key(|s| (s.count_ones(), *s));
+        Ok(RmCode { r, m, masks })
+    }
+
+    /// Data length `K = Σ_{i≤r} C(m,i)`.
+    pub fn k(&self) -> usize {
+        self.masks.len()
+    }
+
+    /// Block length `N = 2^m`.
+    pub fn n(&self) -> usize {
+        1 << self.m
+    }
+
+    /// Minimum distance `2^{m−r}`.
+    pub fn min_distance(&self) -> usize {
+        1 << (self.m - self.r)
+    }
+
+    /// Generator matrix over GF(2) (entries 0/1 as `u64`): row `k`,
+    /// column `point` = monomial `masks[k]` evaluated at `point`.
+    pub fn generator(&self) -> Mat {
+        Mat::from_fn(self.k(), self.n(), |k, point| {
+            // x_S(point) = 1 iff every variable in S is 1 at `point`.
+            u64::from((point as u32) & self.masks[k] == self.masks[k])
+        })
+    }
+
+    /// Encode over any field of characteristic 2 (the generator is 0/1).
+    pub fn encode<F: Field>(&self, f: &F, data: &[u64]) -> Vec<u64> {
+        assert_eq!(data.len(), self.k());
+        assert_eq!(f.order() & 1, 0, "RM needs characteristic 2");
+        self.generator().vec_mul(f, data)
+    }
+
+    /// Erasure decoding by linear solve: recover the data from any set of
+    /// unerased coordinates whose generator columns have full rank
+    /// (guaranteed when ≥ N − d_min + 1 coordinates survive).
+    pub fn decode_erasures<F: Field>(
+        &self,
+        f: &F,
+        coords: &[(usize, u64)],
+    ) -> anyhow::Result<Vec<u64>> {
+        let k = self.k();
+        anyhow::ensure!(coords.len() >= k, "need at least K coordinates");
+        let g = self.generator();
+        // Solve y = x·G_sub for x: square subsystem from the first K
+        // independent columns.
+        let mut cols = Vec::with_capacity(k);
+        let mut vals = Vec::with_capacity(k);
+        let mut basis = Mat::zero(k, 0);
+        for &(pos, v) in coords {
+            let cand = basis.hstack(&Mat::from_fn(k, 1, |row, _| g[(row, pos)]));
+            if cand.rank(f) > cols.len() {
+                basis = cand;
+                cols.push(pos);
+                vals.push(v);
+                if cols.len() == k {
+                    break;
+                }
+            }
+        }
+        anyhow::ensure!(cols.len() == k, "surviving columns do not span");
+        let sub = Mat::from_fn(k, k, |row, c| g[(row, cols[c])]);
+        let inv = sub
+            .inverse(f)
+            .ok_or_else(|| anyhow::anyhow!("singular subsystem"))?;
+        // x = y · sub^{-1} (row-vector convention: y = x·sub).
+        Ok(inv.vec_mul(f, &vals))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::framework::NonSystematicEncode;
+    use crate::gf::Gf2e;
+    use crate::net::{run, Packet, Sim};
+    use crate::util::Rng;
+    use std::sync::Arc;
+
+    #[test]
+    fn dimensions_and_known_codes() {
+        // RM(1, 3) = [8,4,4] (extended Hamming); RM(1,5) = [32,6,16]
+        // (the Mariner 9 code); RM(2,4) = [16,11,4].
+        let c = RmCode::new(1, 3).unwrap();
+        assert_eq!((c.n(), c.k(), c.min_distance()), (8, 4, 4));
+        let c = RmCode::new(1, 5).unwrap();
+        assert_eq!((c.n(), c.k(), c.min_distance()), (32, 6, 16));
+        let c = RmCode::new(2, 4).unwrap();
+        assert_eq!((c.n(), c.k(), c.min_distance()), (16, 11, 4));
+    }
+
+    #[test]
+    fn min_distance_exhaustive_small() {
+        // Check d_min = 2^{m−r} by enumerating all nonzero codewords.
+        let f = Gf2e::new(1).unwrap();
+        for (r, m) in [(1u32, 3u32), (2, 3), (1, 4)] {
+            let c = RmCode::new(r, m).unwrap();
+            let mut dmin = usize::MAX;
+            for x in 1u64..(1 << c.k()) {
+                let data: Vec<u64> = (0..c.k()).map(|i| (x >> i) & 1).collect();
+                let cw = c.encode(&f, &data);
+                let wt = cw.iter().filter(|&&b| b == 1).count();
+                dmin = dmin.min(wt);
+            }
+            assert_eq!(dmin, c.min_distance(), "RM({r},{m})");
+        }
+    }
+
+    #[test]
+    fn erasure_decode_up_to_dmin_minus_1() {
+        let f = Gf2e::new(1).unwrap();
+        let c = RmCode::new(1, 4).unwrap(); // [16, 5, 8]
+        let data = vec![1u64, 0, 1, 1, 0];
+        let cw = c.encode(&f, &data);
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            // Erase d_min − 1 = 7 random coordinates.
+            let erased = rng.choose(c.n(), c.min_distance() - 1);
+            let coords: Vec<(usize, u64)> = (0..c.n())
+                .filter(|i| !erased.contains(i))
+                .map(|i| (i, cw[i]))
+                .collect();
+            assert_eq!(c.decode_erasures(&f, &coords).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn decentralized_rm_encoding_via_appendix_b() {
+        // §VII future work, realised: RM(1,4) encoded decentrally over
+        // GF(2^8)-packed symbols (8 codeword bits per wire symbol lane,
+        // here W = 4 lanes of independent data).
+        let f = Gf2e::new(8).unwrap();
+        let c = RmCode::new(1, 4).unwrap(); // K = 5, N = 16
+        let g = Arc::new(c.generator());
+        let w = 4usize;
+        let mut rng = Rng::new(11);
+        let inputs: Vec<Packet> = (0..c.k())
+            .map(|_| (0..w).map(|_| rng.below(256)).collect())
+            .collect();
+        let mut job = NonSystematicEncode::new(f.clone(), g.clone(), inputs.clone(), 1).unwrap();
+        run(&mut Sim::new(1), &mut job).unwrap();
+        let cw = job.codeword();
+        // Lane-wise oracle.
+        for lane in 0..w {
+            let data: Vec<u64> = inputs.iter().map(|p| p[lane]).collect();
+            let want = c.encode(&f, &data);
+            let got: Vec<u64> = cw.iter().map(|p| p[lane]).collect();
+            assert_eq!(got, want, "lane {lane}");
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Structured evaluation points — eq. (15) of §V-B.
+//!
+//! Draw-and-loose computes Vandermonde matrices whose points form a
+//! multiplicative grid: with `Z = P^H` dividing `q − 1`, `K = M·Z`, and an
+//! injective `φ : [0, M) → [0, (q−1)/Z)`,
+//!
+//! ```text
+//! ω_{i,j} = α_i · β_{j'},   α_i = g^{φ(i)},   β_{j'} = g^{j'·(q−1)/Z},
+//! ```
+//!
+//! where `j'` is the base-`P` digit reversal of `j`. Processor `i·Z + j`
+//! evaluates the data polynomial at `ω_{i,j}`. Exponent uniqueness
+//! (`φ(i) < (q−1)/Z`) makes all `K` points distinct, so the matrix is an
+//! invertible Vandermonde; Theorem 5 counts `((q−1)/Z choose M)` distinct
+//! such matrices. RS/Lagrange code builders pick their `α`/`β` families
+//! from *disjoint* `φ` ranges so every Theorem-6 factor is draw-and-loose
+//! computable.
+
+use crate::gf::{dft, Field};
+use crate::util::ipow;
+
+/// A draw-and-loose–compatible evaluation point design for `n` processors.
+#[derive(Clone, Debug)]
+pub struct StructuredPoints {
+    /// The radix `P` of the DFT part.
+    pub p_base: u64,
+    /// `H` — the DFT depth; `Z = P^H`.
+    pub h: u32,
+    /// `Z = P^H` (divides both `n` and `q − 1`).
+    pub z: u64,
+    /// `M = n / Z` — the universal (draw-phase) dimension.
+    pub m: usize,
+    /// The injective row map `φ : [0, M) → [0, (q−1)/Z)`.
+    pub phi: Vec<u64>,
+    /// `points[i·Z + j] = ω_{i,j}` in processor-rank order.
+    pub points: Vec<u64>,
+}
+
+impl StructuredPoints {
+    /// Largest `h` with `P^h | n` and `P^h | q−1`.
+    pub fn max_h<F: Field>(f: &F, n: u64, p_base: u64) -> u32 {
+        assert!(p_base >= 2);
+        let q1 = f.order() - 1;
+        let mut h = 0;
+        let mut z = 1u64;
+        while n % (z * p_base) == 0 && q1 % (z * p_base) == 0 {
+            z *= p_base;
+            h += 1;
+        }
+        h
+    }
+
+    /// Design points for `n` processors with radix `P` and row map `φ`
+    /// (`φ.len()` must be `n / P^H`). Pass `phi_offset`-shifted ranges to
+    /// keep several families disjoint (see [`disjoint_family`]).
+    pub fn new<F: Field>(f: &F, n: usize, p_base: u64, phi: Vec<u64>) -> anyhow::Result<Self> {
+        let h = Self::max_h(f, n as u64, p_base);
+        Self::with_h(f, n, p_base, h, phi)
+    }
+
+    /// As [`new`](Self::new) but with an explicit (possibly smaller) `H`.
+    pub fn with_h<F: Field>(
+        f: &F,
+        n: usize,
+        p_base: u64,
+        h: u32,
+        phi: Vec<u64>,
+    ) -> anyhow::Result<Self> {
+        let z = ipow(p_base, h);
+        anyhow::ensure!(n as u64 % z == 0, "Z = {z} must divide n = {n}");
+        anyhow::ensure!((f.order() - 1) % z == 0, "Z = {z} must divide q−1");
+        let m = n / z as usize;
+        anyhow::ensure!(phi.len() == m, "phi must have M = {m} entries");
+        let cap = (f.order() - 1) / z;
+        anyhow::ensure!(
+            phi.iter().all(|&x| x < cap),
+            "phi values must lie below (q−1)/Z = {cap}"
+        );
+        let mut sorted = phi.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        anyhow::ensure!(sorted.len() == m, "phi must be injective");
+        let g = f.generator();
+        let step = (f.order() - 1) / z; // (q−1)/Z
+        let mut points = Vec::with_capacity(n);
+        for i in 0..m {
+            let alpha = f.pow(g, phi[i]);
+            for j in 0..z {
+                let jrev = dft::digit_reverse(j, p_base, h);
+                let beta = f.pow(g, jrev * step);
+                points.push(f.mul(alpha, beta));
+            }
+        }
+        Ok(StructuredPoints {
+            p_base,
+            h,
+            z,
+            m,
+            phi,
+            points,
+        })
+    }
+
+    /// `α_i = g^{φ(i)}` for grid row `i`.
+    pub fn alpha<F: Field>(&self, f: &F, i: usize) -> u64 {
+        f.pow(f.generator(), self.phi[i])
+    }
+
+    /// Number of processors covered.
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// Build `count` point families of `n` points each, all mutually disjoint
+/// (family `t` uses `φ(i) = t·M + i`). Used by the systematic-RS encoder:
+/// one family per α-block plus one for the β (parity) points.
+pub fn disjoint_family<F: Field>(
+    f: &F,
+    n: usize,
+    p_base: u64,
+    count: usize,
+) -> anyhow::Result<Vec<StructuredPoints>> {
+    let h = StructuredPoints::max_h(f, n as u64, p_base);
+    let z = ipow(p_base, h);
+    let m = n / z as usize;
+    anyhow::ensure!(
+        (count * m) as u64 <= (f.order() - 1) / z,
+        "field too small for {count} disjoint families of {n} points"
+    );
+    (0..count)
+        .map(|t| {
+            let phi: Vec<u64> = (0..m as u64).map(|i| t as u64 * m as u64 + i).collect();
+            StructuredPoints::with_h(f, n, p_base, h, phi)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::{vandermonde, GfPrime};
+
+    fn f() -> GfPrime {
+        GfPrime::default_field() // q − 1 = 2^18 · 3
+    }
+
+    #[test]
+    fn max_h_matches_structure() {
+        let f = f();
+        assert_eq!(StructuredPoints::max_h(&f, 16, 2), 4);
+        assert_eq!(StructuredPoints::max_h(&f, 24, 2), 3);
+        assert_eq!(StructuredPoints::max_h(&f, 9, 3), 1); // 3^2 ∤ q−1 (q−1 = 2^18·3)
+        assert_eq!(StructuredPoints::max_h(&f, 5, 2), 0);
+    }
+
+    #[test]
+    fn points_are_distinct_and_invertible() {
+        let f = f();
+        for (n, p) in [(16usize, 2u64), (24, 2), (12, 2), (9, 3)] {
+            let m = n / ipow(p, StructuredPoints::max_h(&f, n as u64, p)) as usize;
+            let phi: Vec<u64> = (0..m as u64).collect();
+            let sp = StructuredPoints::new(&f, n, p, phi).unwrap();
+            assert_eq!(sp.len(), n);
+            assert!(vandermonde::points_distinct(&sp.points), "n={n} P={p}");
+        }
+    }
+
+    #[test]
+    fn families_are_disjoint() {
+        let f = f();
+        let fam = disjoint_family(&f, 8, 2, 4).unwrap();
+        let mut all: Vec<u64> = fam.iter().flat_map(|s| s.points.clone()).collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n);
+    }
+
+    #[test]
+    fn rejects_non_injective_phi() {
+        let f = f();
+        assert!(StructuredPoints::with_h(&f, 8, 2, 2, vec![1, 1]).is_err());
+    }
+
+    #[test]
+    fn pure_dft_when_m_is_1() {
+        // n = Z: the design degenerates to the permuted DFT points
+        // scaled by g^{φ(0)}.
+        let f = f();
+        let sp = StructuredPoints::new(&f, 8, 2, vec![0]).unwrap();
+        let d = crate::gf::dft::permuted_dft_matrix(&f, 2, 3).unwrap();
+        let v = vandermonde::square(&f, &sp.points);
+        assert_eq!(v, d); // φ(0) = 0 ⇒ α_0 = 1
+    }
+}

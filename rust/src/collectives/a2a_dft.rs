@@ -1,0 +1,259 @@
+//! Permuted-DFT all-to-all encode (§V-A) and its inverse (Lemma 5).
+//!
+//! For `K = P^H` with `K | q−1`, processors compute `D_K·Π` (`Π` = base-P
+//! digit reversal): processor `k` obtains `f(β^{k'})`. The algorithm is an
+//! in-network FFT: `H` sequential steps; in step `h`, the `K/P` groups of
+//! processors whose *reversed* indices agree outside digit `h` each
+//! perform a `P×P` all-to-all encode on the Vandermonde `A_k^{(h)}`
+//! (eq. (14)) built from the element tree `γ` (eqs. (9)–(10)) — run here
+//! with prepare-and-shoot, which degenerates to the optimal single-round
+//! exchange when `P ≤ p+1` (Corollary 1).
+//!
+//! The inverse runs the steps in reverse order with `(A_k^{(h)})^{-1}`
+//! (invertible Vandermonde), at identical cost.
+
+use super::{Par, Pipeline, PrepareShoot, StageBuilder};
+use crate::gf::{dft, vandermonde, Field, Mat};
+use crate::net::{Collective, Msg, Packet, ProcId};
+use crate::util::ipow;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// The §V-A specific A2A. Computes `D_K·Π` (or its inverse).
+pub struct DftA2A {
+    pipe: Pipeline,
+    k: usize,
+}
+
+impl DftA2A {
+    /// `procs.len() = K = p_base^h`; `inputs[k]` is held by `procs[k]`.
+    /// `invert = false` computes `D_K·Π`, `true` computes `(D_K·Π)^{-1}`.
+    pub fn new<F: Field>(
+        f: F,
+        procs: Vec<ProcId>,
+        p: usize,
+        p_base: u64,
+        h: u32,
+        inputs: Vec<Packet>,
+        invert: bool,
+    ) -> anyhow::Result<Self> {
+        let k = procs.len();
+        anyhow::ensure!(k as u64 == ipow(p_base, h), "K must equal P^H");
+        anyhow::ensure!(p_base >= 2, "P >= 2");
+        let beta = f
+            .root_of_unity(k as u64)
+            .ok_or_else(|| anyhow::anyhow!("K = {k} must divide q−1 = {}", f.order() - 1))?;
+        anyhow::ensure!(inputs.len() == k);
+
+        // Steps h = 1..=H forward, or H..=1 reversed for the inverse.
+        let steps: Vec<u32> = if invert {
+            (1..=h).rev().collect()
+        } else {
+            (1..=h).collect()
+        };
+        let builders: Vec<StageBuilder> = steps
+            .into_iter()
+            .map(|step_h| {
+                let f = f.clone();
+                let procs = procs.clone();
+                Box::new(move |prev: &HashMap<ProcId, Packet>| {
+                    step_stage(&f, &procs, p, p_base, h, beta, step_h, invert, prev)
+                }) as StageBuilder
+            })
+            .collect();
+        let init: HashMap<ProcId, Packet> = procs
+            .iter()
+            .zip(inputs)
+            .map(|(&pid, pkt)| (pid, pkt))
+            .collect();
+        Ok(DftA2A {
+            pipe: Pipeline::from_inputs(init, builders),
+            k,
+        })
+    }
+
+    /// The matrix this collective computes (oracle for tests):
+    /// `(D_K Π)[i][j] = β^{i·rev(j)}`, or its inverse.
+    pub fn matrix<F: Field>(f: &F, p_base: u64, h: u32, invert: bool) -> Option<Mat> {
+        let m = dft::permuted_dft_matrix(f, p_base, h)?;
+        if invert {
+            m.inverse(f)
+        } else {
+            Some(m)
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+}
+
+/// Build step `h` as a [`Par`] of `K/P` group-wise `P×P` prepare-and-shoots.
+#[allow(clippy::too_many_arguments)]
+fn step_stage<F: Field>(
+    f: &F,
+    procs: &[ProcId],
+    p: usize,
+    p_base: u64,
+    h_total: u32,
+    beta: u64,
+    h: u32,
+    invert: bool,
+    prev: &HashMap<ProcId, Packet>,
+) -> Box<dyn Collective> {
+    let k = procs.len() as u64;
+    let ph_1 = ipow(p_base, h - 1); // P^{h−1} — the digit weight in k′
+    let mut groups: Vec<Box<dyn Collective>> = Vec::new();
+    // Enumerate groups: fix all digits of k′ except digit h.
+    for base in 0..k / p_base {
+        let high = base / ph_1; // digits above position h of k′
+        let low = base % ph_1; // digits below position h of k′
+        // Group members in digit order c = 0..P−1, and their γ points.
+        let mut members = Vec::with_capacity(p_base as usize);
+        let mut points = Vec::with_capacity(p_base as usize);
+        for c in 0..p_base {
+            let kprime = high * ipow(p_base, h) + c * ph_1 + low;
+            let kk = dft::digit_reverse(kprime, p_base, h_total) as usize;
+            members.push(procs[kk]);
+            // γ_{c k'_{h−1}…k'_1} = β^{(c·P^{h−1} + low)·K/P^h}
+            points.push(dft::gamma(f, beta, k, p_base, h, c * ph_1 + low));
+        }
+        // A_k^{(h)}[ρ][c] = γ_c^ρ — a P×P Vandermonde (eq. (14)).
+        let mat = if invert {
+            vandermonde::inverse(f, &points)
+        } else {
+            vandermonde::square(f, &points)
+        };
+        let inputs: Vec<Packet> = members.iter().map(|pid| prev[pid].clone()).collect();
+        groups.push(Box::new(PrepareShoot::new(
+            f.clone(),
+            members,
+            p,
+            Arc::new(mat),
+            inputs,
+        )));
+    }
+    Box::new(Par::new(groups))
+}
+
+impl Collective for DftA2A {
+    fn participants(&self) -> Vec<ProcId> {
+        self.pipe.participants()
+    }
+    fn is_done(&self) -> bool {
+        self.pipe.is_done()
+    }
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        self.pipe.step(inbox)
+    }
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        self.pipe.outputs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::GfPrime;
+    use crate::net::{pkt_add_scaled, pkt_zero, run, Sim};
+
+    fn f() -> GfPrime {
+        GfPrime::default_field()
+    }
+
+    fn inputs_for(k: usize) -> Vec<Packet> {
+        let f = f();
+        (0..k as u64).map(|i| vec![f.elem(i * 997 + 3)]).collect()
+    }
+
+    fn run_dft(p_base: u64, h: u32, p: usize, invert: bool) -> (crate::net::SimReport, Vec<Packet>) {
+        let f = f();
+        let k = ipow(p_base, h) as usize;
+        let mut dft =
+            DftA2A::new(f, (0..k).collect(), p, p_base, h, inputs_for(k), invert).unwrap();
+        let rep = run(&mut Sim::new(p), &mut dft).unwrap();
+        let outs = dft.outputs();
+        let got: Vec<Packet> = (0..k).map(|i| outs[&i].clone()).collect();
+        (rep, got)
+    }
+
+    fn oracle(f: &GfPrime, m: &Mat, inputs: &[Packet]) -> Vec<Packet> {
+        let k = inputs.len();
+        (0..k)
+            .map(|j| {
+                let mut acc = pkt_zero(1);
+                for r in 0..k {
+                    pkt_add_scaled(f, &mut acc, m[(r, j)], &inputs[r]);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn computes_permuted_dft() {
+        let f = f();
+        for (p_base, h, p) in [(2u64, 3u32, 1usize), (2, 4, 1), (4, 2, 3), (2, 3, 2), (8, 2, 7)] {
+            let k = ipow(p_base, h) as usize;
+            let m = DftA2A::matrix(&f, p_base, h, false).unwrap();
+            let (_, got) = run_dft(p_base, h, p, false);
+            assert_eq!(got, oracle(&f, &m, &inputs_for(k)), "P={p_base} H={h} p={p}");
+        }
+    }
+
+    #[test]
+    fn inverse_composes_to_identity() {
+        let f = f();
+        let (p_base, h, p) = (2u64, 3u32, 1usize);
+        let k = ipow(p_base, h) as usize;
+        let inputs = inputs_for(k);
+        let mut fwd =
+            DftA2A::new(f, (0..k).collect(), p, p_base, h, inputs.clone(), false).unwrap();
+        run(&mut Sim::new(p), &mut fwd).unwrap();
+        let mid: Vec<Packet> = (0..k).map(|i| fwd.outputs()[&i].clone()).collect();
+        let mut inv = DftA2A::new(f, (0..k).collect(), p, p_base, h, mid, true).unwrap();
+        run(&mut Sim::new(p), &mut inv).unwrap();
+        let back: Vec<Packet> = (0..k).map(|i| inv.outputs()[&i].clone()).collect();
+        assert_eq!(back, inputs);
+    }
+
+    #[test]
+    fn corollary1_cost_when_p_base_is_p_plus_1() {
+        // K = (p+1)^H: C1 = H, C2 = H (one element per round) — strictly
+        // optimal per Remark 5.
+        for (p, h) in [(1usize, 4u32), (3, 3)] {
+            let p_base = p as u64 + 1;
+            let (rep, _) = run_dft(p_base, h, p, false);
+            assert_eq!(rep.c1, h as u64, "p={p} H={h}");
+            assert_eq!(rep.c2, h as u64, "p={p} H={h}");
+        }
+        // p = 2 needs 3^H | q−1; the default prime has a single factor of
+        // 3, so run K = 27 over q = 109 (108 = 4·27).
+        let f = GfPrime::new(109).unwrap();
+        let k = 27usize;
+        let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![f.elem(i * 5 + 1)]).collect();
+        let mut d = DftA2A::new(f, (0..k).collect(), 2, 3, 3, inputs.clone(), false).unwrap();
+        let rep = run(&mut Sim::new(2), &mut d).unwrap();
+        assert_eq!((rep.c1, rep.c2), (3, 3));
+        let m = DftA2A::matrix(&GfPrime::new(109).unwrap(), 3, 3, false).unwrap();
+        let got: Vec<Packet> = (0..k).map(|i| d.outputs()[&i].clone()).collect();
+        assert_eq!(got, oracle(&GfPrime::new(109).unwrap(), &m, &inputs));
+    }
+
+    #[test]
+    fn theorem4_cost_general() {
+        // C_{A2A,DFT} = H · C_{A2A,Univ}(P): with P = 8, p = 1:
+        // C_univ(8) has C1 = 3 and C2 = (2^2−1)/1 + (2^1−1)/1 = 4.
+        let (rep, _) = run_dft(8, 2, 1, false);
+        assert_eq!(rep.c1, 2 * 3);
+        assert_eq!(rep.c2, 2 * 4);
+    }
+
+    #[test]
+    fn inverse_costs_match_lemma5() {
+        let (fwd, _) = run_dft(2, 4, 1, false);
+        let (inv, _) = run_dft(2, 4, 1, true);
+        assert_eq!(fwd.c1, inv.c1);
+        assert_eq!(fwd.c2, inv.c2);
+    }
+}

@@ -1,0 +1,554 @@
+//! **Prepare-and-shoot** — the optimal universal all-to-all encode (§IV-B).
+//!
+//! For any square matrix `C ∈ F_q^{K×K}`, every processor `P_k` (holding
+//! `x_k`) obtains `x̃_k = Σ_r C[r][k]·x_r` in `C1 = ⌈log_{p+1} K⌉` rounds
+//! (optimal by Lemma 1) with `C2 ≈ 2√K/p` (within `√2` of Lemma 2).
+//!
+//! Let `L = ⌈log_{p+1} K⌉`, `T_p = ⌈L/2⌉`, `T_s = L − T_p`,
+//! `m = (p+1)^{T_p}`, `n = ⌈K/m⌉`.
+//!
+//! * **Prepare** (Algorithm 1): `K` parallel `(p+1)`-nomial broadcasts;
+//!   after round `t` of distances `ρ(p+1)^{T_p−t}`, every `P_k` holds
+//!   `x_r` for `r ∈ R_k^- = {k−ℓ mod K : ℓ < (p+1)^t}`.
+//! * **Shoot** (Algorithm 2): every `P_k` forms the partially-coded
+//!   packets `w_{k,k+ℓm} = Σ_{r∈R_k^-} C[r][k+ℓm]·x_r` and the `K`
+//!   stride-`m` classes run parallel `(p+1)`-ary reductions: writing the
+//!   destination offset `δ = ℓ` in base `p+1`, round `t` moves every
+//!   packet whose digit `t−1` equals `ρ` over distance `ρ(p+1)^{t−1}m`,
+//!   summing into the receiver's matching packet. (Algorithm 2 of the
+//!   paper prints the distance as `ρ·m^t`; Lemma 4 and Fig. 7 are only
+//!   consistent with `ρ·(p+1)^{t−1}·m`, which is what we implement — see
+//!   DESIGN.md §1.)
+//! * **Correction** (eq. (4)): when `mn > K` the stride class wraps and
+//!   `y_k` double-counts `C[r][k]·x_r` for `r ∈ [k−(nm−K)+1 … k]`; each
+//!   processor subtracts those terms locally (it holds all of them).
+//!
+//! Message contents are never tagged on the wire: the scheduling is known
+//! a priori (Remark 1), so receivers recompute the exact (owner / offset)
+//! lists the sender used.
+
+use crate::gf::{Field, Mat};
+use crate::net::{pkt_add, pkt_add_scaled, pkt_zero, Collective, Msg, Packet, ProcId};
+use crate::util::{ceil_log, ipow};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Static shape parameters of a prepare-and-shoot instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PsParams {
+    pub k: usize,
+    pub p: usize,
+    /// `L = ⌈log_{p+1} K⌉` — total rounds.
+    pub l: u32,
+    /// Prepare rounds `T_p = ⌈L/2⌉`.
+    pub tp: u32,
+    /// Shoot rounds `T_s = L − T_p`.
+    pub ts: u32,
+    /// `m = (p+1)^{T_p}`.
+    pub m: u64,
+    /// `n = ⌈K/m⌉`.
+    pub n: u64,
+}
+
+impl PsParams {
+    pub fn new(k: usize, p: usize) -> Self {
+        assert!(k >= 1 && p >= 1);
+        let l = ceil_log(p as u64 + 1, k as u64);
+        let tp = l.div_ceil(2);
+        let ts = l - tp;
+        let m = ipow(p as u64 + 1, tp);
+        let n = (k as u64).div_ceil(m);
+        PsParams {
+            k,
+            p,
+            l,
+            tp,
+            ts,
+            m,
+            n,
+        }
+    }
+}
+
+/// The prepare-and-shoot universal A2A collective.
+pub struct PrepareShoot<F: Field> {
+    f: F,
+    procs: Vec<ProcId>,
+    c: Arc<Mat>,
+    params: PsParams,
+    w: usize,
+    /// Completed step calls (== rounds issued so far).
+    t: u32,
+    /// Per-rank: owner → initial packet (prepare-phase memory).
+    mem: Vec<HashMap<usize, Packet>>,
+    /// Per-rank: partial packet per destination offset δ (dense, len n;
+    /// offsets vacate as packets move toward their destinations).
+    wpkts: Vec<Vec<Option<Packet>>>,
+    out: Vec<Option<Packet>>,
+    done: bool,
+}
+
+impl<F: Field> PrepareShoot<F> {
+    /// `procs[k]` holds `inputs[k]`; computes the matrix `c` (`K×K`).
+    pub fn new(f: F, procs: Vec<ProcId>, p: usize, c: Arc<Mat>, inputs: Vec<Packet>) -> Self {
+        let k = procs.len();
+        assert_eq!(c.rows, k, "matrix rows must equal K");
+        assert_eq!(c.cols, k, "matrix cols must equal K");
+        assert_eq!(inputs.len(), k);
+        let w = inputs.first().map_or(0, |p| p.len());
+        assert!(inputs.iter().all(|p| p.len() == w));
+        let params = PsParams::new(k, p);
+        let mem = inputs
+            .into_iter()
+            .enumerate()
+            .map(|(r, pkt)| HashMap::from([(r, pkt)]))
+            .collect();
+        let mut ps = PrepareShoot {
+            f,
+            procs,
+            c,
+            params,
+            w,
+            t: 0,
+            mem,
+            wpkts: vec![Vec::new(); k],
+            out: vec![None; k],
+            done: false,
+        };
+        if k == 1 {
+            // Degenerate: x̃_0 = C[0][0]·x_0, no communication.
+            let x0 = ps.mem[0][&0].clone();
+            ps.out[0] = Some(crate::net::pkt_scale(&ps.f, ps.c[(0, 0)], &x0));
+            ps.done = true;
+        }
+        ps
+    }
+
+    /// Convenience: build from a pipeline output map.
+    pub fn from_outputs(
+        f: F,
+        procs: Vec<ProcId>,
+        p: usize,
+        c: Arc<Mat>,
+        inputs: &HashMap<ProcId, Packet>,
+    ) -> Self {
+        let packets = procs
+            .iter()
+            .map(|pid| inputs[pid].clone())
+            .collect();
+        PrepareShoot::new(f, procs, p, c, packets)
+    }
+
+    /// Owners held by rank `k` at the start of prepare round `t`
+    /// (1-indexed). Distances shrink over rounds (`ρ(p+1)^{T_p−t}`), so
+    /// after `t−1` rounds the memory holds
+    /// `{k − j·(p+1)^{T_p−t+1} mod K : j < (p+1)^{t−1}}` — contiguous only
+    /// once the phase completes (`t = T_p+1`, stride 1, i.e. `R_k^-`).
+    /// Ordered by `j`, deduplicated on wrap-around.
+    fn prep_owners(&self, k: usize, t: u32) -> Vec<usize> {
+        let kk = self.params.k;
+        let span = ipow(self.params.p as u64 + 1, t - 1);
+        let stride = ipow(self.params.p as u64 + 1, self.params.tp + 1 - t);
+        // Fast path: no wrap-around possible ⇒ all owners distinct
+        // (span·stride = (p+1)^{T_p} = m, so this covers every round
+        // whenever m ≤ K — i.e. all but degenerate instances).
+        if span * stride <= kk as u64 {
+            return (0..span)
+                .map(|j| ((k as u64 + kk as u64 - j * stride) % kk as u64) as usize)
+                .collect();
+        }
+        let mut out = Vec::new();
+        let mut seen = vec![false; kk];
+        for j in 0..span {
+            let back = (j * stride) % kk as u64;
+            let owner = ((k as u64 + kk as u64 - back) % kk as u64) as usize;
+            if !seen[owner] {
+                seen[owner] = true;
+                out.push(owner);
+            }
+            if out.len() == kk {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Offsets alive at the start of shoot round `t` (1-indexed): all
+    /// `δ < n` whose base-(p+1) digits below `t−1` are zero, ascending.
+    fn shoot_offsets(&self, t: u32) -> Vec<u64> {
+        let stride = ipow(self.params.p as u64 + 1, t - 1);
+        (0..self.params.n).filter(|d| d % stride == 0).collect()
+    }
+
+    /// Process one prepare-round inbox.
+    fn absorb_prepare(&mut self, inbox: Vec<Msg>, t: u32) {
+        let rank_of: HashMap<ProcId, usize> =
+            self.procs.iter().enumerate().map(|(i, &p)| (p, i)).collect();
+        for msg in inbox {
+            let dst = rank_of[&msg.dst];
+            let src = rank_of[&msg.src];
+            let owners = self.prep_owners(src, t);
+            assert_eq!(owners.len(), msg.payload.len(), "prepare schedule mismatch");
+            for (owner, pkt) in owners.into_iter().zip(msg.payload) {
+                self.mem[dst].entry(owner).or_insert(pkt);
+            }
+        }
+    }
+
+    /// Emit prepare round `t` (1-indexed): send the whole memory over
+    /// distances `ρ(p+1)^{T_p−t}`, skipping self-targets and duplicates.
+    fn emit_prepare(&self, t: u32) -> Vec<Msg> {
+        let kk = self.params.k;
+        let mut out = Vec::new();
+        for k in 0..kk {
+            let owners = self.prep_owners(k, t);
+            let mut targets = Vec::new();
+            for rho in 1..=self.params.p as u64 {
+                let d = (rho * ipow(self.params.p as u64 + 1, self.params.tp - t)) % kk as u64;
+                if d == 0 {
+                    continue;
+                }
+                let dst = (k + d as usize) % kk;
+                if dst != k && !targets.contains(&dst) {
+                    targets.push(dst);
+                }
+            }
+            for dst in targets {
+                let payload: Vec<Packet> = owners
+                    .iter()
+                    .map(|&o| self.mem[k][&o].clone())
+                    .collect();
+                out.push(Msg::new(self.procs[k], self.procs[dst], payload));
+            }
+        }
+        out
+    }
+
+    /// After the prepare phase: initialise the shoot-phase partial packets
+    /// `w_{k,k+ℓm}` (or compute outputs directly when `n == 1`).
+    fn init_shoot(&mut self) {
+        let PsParams { k: kk, m, n, .. } = self.params;
+        if n == 1 {
+            // m ≥ K: everyone holds everything — pure local combine.
+            for k in 0..kk {
+                let mut acc = pkt_zero(self.w);
+                let terms: Vec<(u64, &[u64])> = (0..kk)
+                    .map(|r| (self.c[(r, k)], self.mem[k][&r].as_slice()))
+                    .collect();
+                self.f.lincomb_into(&mut acc, &terms);
+                self.out[k] = Some(acc);
+            }
+            self.done = true;
+            return;
+        }
+        // Row-sweep accumulation. Every matrix entry `C[r][dest]` is
+        // touched exactly once during w-initialisation (Σ_k m·n ≈ K²);
+        // iterating destination-major per processor reads the K×K matrix
+        // (134 MB at K = 4096) in a cache-hostile scatter. Instead sweep
+        // rows `r` sequentially: row `r` contributes `x_r` to processor
+        // `k ∈ [r, r+m)` and offset `ℓ`, at column `dest = k + ℓm` — so
+        // for fixed `ℓ` the columns form a *contiguous* run of `m`, and
+        // the live accumulator window is only `m·n·W` words (~32 KB).
+        // Products accumulate unreduced (`m ≤ lazy_chunk` always holds
+        // for the supported field sizes; enforced below). §Perf: 2.6×.
+        let lazy_chunk = self.f.lazy_chunk();
+        let per_term_reduce = (m as usize) > lazy_chunk;
+        let mut accs: Vec<Vec<Packet>> = (0..kk)
+            .map(|_| (0..n).map(|_| pkt_zero(self.w)).collect())
+            .collect();
+        for r in 0..kk {
+            let crow = self.c.row(r);
+            // Every processor in [r, r+m) holds an identical copy of x_r
+            // after the prepare phase; read one of them.
+            let x = self.mem[r][&r].as_slice();
+            for l in 0..n as usize {
+                for k_off in 0..m as usize {
+                    let k = (r + k_off) % kk;
+                    let dest = (k + l * m as usize) % kk;
+                    let coeff = crow[dest];
+                    if coeff == 0 {
+                        continue;
+                    }
+                    let acc = &mut accs[k][l];
+                    for (a, &s) in acc.iter_mut().zip(x) {
+                        *a = self.f.lazy_mul_acc(*a, coeff, s);
+                    }
+                    if per_term_reduce {
+                        for a in acc.iter_mut() {
+                            *a = self.f.lazy_reduce(*a);
+                        }
+                    }
+                }
+            }
+        }
+        for (k, dests) in accs.into_iter().enumerate() {
+            let w: Vec<Option<Packet>> = dests
+                .into_iter()
+                .map(|mut acc| {
+                    for a in acc.iter_mut() {
+                        *a = self.f.lazy_reduce(*a);
+                    }
+                    Some(acc)
+                })
+                .collect();
+            self.wpkts[k] = w;
+        }
+    }
+
+    /// Process one shoot-round inbox (accumulate matching offsets).
+    fn absorb_shoot(&mut self, inbox: Vec<Msg>, t: u32) {
+        let rank_of: HashMap<ProcId, usize> =
+            self.procs.iter().enumerate().map(|(i, &p)| (p, i)).collect();
+        let kk = self.params.k as u64;
+        let stride = ipow(self.params.p as u64 + 1, t - 1);
+        for msg in inbox {
+            let dst = rank_of[&msg.dst];
+            let src = rank_of[&msg.src];
+            // Which ρ values map src→dst over distance ρ·stride·m (mod K)?
+            let mut expect: Vec<u64> = Vec::new(); // new offsets, sender order
+            for rho in 1..=self.params.p as u64 {
+                let d = (rho * stride * self.params.m) % kk;
+                if d == 0 {
+                    continue;
+                }
+                if (src as u64 + d) % kk == dst as u64 {
+                    for delta in self.shoot_offsets(t) {
+                        if (delta / stride) % (self.params.p as u64 + 1) == rho {
+                            expect.push(delta - rho * stride);
+                        }
+                    }
+                }
+            }
+            assert_eq!(expect.len(), msg.payload.len(), "shoot schedule mismatch");
+            for (delta_new, pkt) in expect.into_iter().zip(msg.payload) {
+                let acc = self.wpkts[dst][delta_new as usize]
+                    .as_mut()
+                    .expect("receiver missing offset packet");
+                pkt_add(&self.f, acc, &pkt);
+            }
+        }
+    }
+
+    /// Emit shoot round `t` (1-indexed).
+    fn emit_shoot(&mut self, t: u32) -> Vec<Msg> {
+        let PsParams { k: kk, m, p, .. } = self.params;
+        let stride = ipow(p as u64 + 1, t - 1);
+        let mut out = Vec::new();
+        for k in 0..kk {
+            // Group offsets by ρ = digit_{t−1}(δ).
+            let offsets = self.shoot_offsets(t);
+            let mut by_target: Vec<(usize, Vec<u64>)> = Vec::new(); // (dst, old offsets)
+            for rho in 1..=p as u64 {
+                let deltas: Vec<u64> = offsets
+                    .iter()
+                    .copied()
+                    .filter(|d| (d / stride) % (p as u64 + 1) == rho)
+                    .collect();
+                if deltas.is_empty() {
+                    continue;
+                }
+                let d = (rho * stride * m) % kk as u64;
+                if d == 0 {
+                    // Self-target: merge locally, no message.
+                    for delta in deltas {
+                        let pkt = self.wpkts[k][delta as usize]
+                            .take()
+                            .expect("missing offset");
+                        let tgt = (delta - rho * stride) as usize;
+                        let acc = self.wpkts[k][tgt].as_mut().expect("missing target");
+                        pkt_add(&self.f, acc, &pkt);
+                    }
+                    continue;
+                }
+                let dst = (k + d as usize) % kk;
+                if let Some(entry) = by_target.iter_mut().find(|(t, _)| *t == dst) {
+                    entry.1.extend(deltas);
+                } else {
+                    by_target.push((dst, deltas));
+                }
+            }
+            for (dst, deltas) in by_target {
+                let payload: Vec<Packet> = deltas
+                    .iter()
+                    .map(|d| self.wpkts[k][*d as usize].take().expect("missing offset packet"))
+                    .collect();
+                out.push(Msg::new(self.procs[k], self.procs[dst], payload));
+            }
+        }
+        out
+    }
+
+    /// Final local step: `x̃_k = y_k − Σ_{i=K}^{nm−1} C[k−i][k]·x_{k−i}`
+    /// (eq. (4)); no-op when `mn == K`.
+    fn finalize(&mut self) {
+        let PsParams { k: kk, m, n, .. } = self.params;
+        for k in 0..kk {
+            let mut y = self.wpkts[k][0].take().expect("y_k missing");
+            for i in kk as u64..n * m {
+                // r = (k − (i − K)) mod K — the owner counted twice; the
+                // prepare memory still holds x_r (i − K < m).
+                let r = ((k as u64 + kk as u64 - (i - kk as u64)) % kk as u64) as usize;
+                let coeff = self.f.neg(self.c[(r, k)]);
+                let x = self.mem[k].get(&r).expect("missing dup packet");
+                pkt_add_scaled(&self.f, &mut y, coeff, x);
+            }
+            self.out[k] = Some(y);
+        }
+        self.done = true;
+    }
+}
+
+impl<F: Field> Collective for PrepareShoot<F> {
+    fn participants(&self) -> Vec<ProcId> {
+        self.procs.clone()
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        let PsParams { tp, ts, .. } = self.params;
+        // Deliver the previous round's messages.
+        let prev = self.t;
+        if prev >= 1 && prev <= tp {
+            self.absorb_prepare(inbox, prev);
+        } else if prev > tp {
+            self.absorb_shoot(inbox, prev - tp);
+        } else {
+            debug_assert!(inbox.is_empty());
+        }
+        // Phase transitions.
+        if prev == tp {
+            self.init_shoot();
+            if self.done {
+                return Vec::new();
+            }
+        }
+        if prev == tp + ts {
+            self.finalize();
+            return Vec::new();
+        }
+        // Emit the next round.
+        self.t += 1;
+        if self.t <= tp {
+            self.emit_prepare(self.t)
+        } else {
+            self.emit_shoot(self.t - tp)
+        }
+    }
+
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        self.procs
+            .iter()
+            .zip(&self.out)
+            .map(|(&p, o)| (p, o.clone().expect("prepare-and-shoot incomplete")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::GfPrime;
+    use crate::net::{run, Sim};
+
+    fn check(k: usize, p: usize, w: usize, seed: u64) -> crate::net::SimReport {
+        let f = GfPrime::default_field();
+        let c = Arc::new(Mat::random(&f, k, k, seed));
+        let inputs: Vec<Packet> = (0..k)
+            .map(|i| (0..w).map(|j| f.elem((i * w + j) as u64 * 7919 + 13)).collect())
+            .collect();
+        let mut ps = PrepareShoot::new(f, (0..k).collect(), p, c.clone(), inputs.clone());
+        let rep = run(&mut Sim::new(p), &mut ps).unwrap();
+        // Oracle: x̃ = x · C, column k per processor, element-wise over W.
+        let outs = ps.outputs();
+        for kk in 0..k {
+            let mut want = pkt_zero(w);
+            for r in 0..k {
+                pkt_add_scaled(&f, &mut want, c[(r, kk)], &inputs[r]);
+            }
+            assert_eq!(outs[&kk], want, "K={k} p={p} proc {kk}");
+        }
+        rep
+    }
+
+    #[test]
+    fn correct_for_many_shapes() {
+        for (k, p) in [
+            (1usize, 1usize),
+            (2, 1),
+            (3, 1),
+            (4, 1),
+            (5, 1),
+            (8, 1),
+            (9, 1),
+            (16, 1),
+            (25, 1),
+            (3, 2),
+            (9, 2),
+            (10, 2),
+            (27, 2),
+            (65, 2),
+            (4, 3),
+            (16, 3),
+            (31, 3),
+            (100, 4),
+        ] {
+            check(k, p, 1, k as u64 * 31 + p as u64);
+        }
+    }
+
+    #[test]
+    fn correct_for_vector_payloads() {
+        check(25, 2, 4, 99);
+        check(16, 1, 3, 98);
+    }
+
+    #[test]
+    fn c1_is_optimal() {
+        // Lemma 1: C1 = ⌈log_{p+1} K⌉ exactly.
+        for (k, p) in [(4usize, 1usize), (64, 1), (65, 2), (27, 2), (100, 4)] {
+            let rep = check(k, p, 1, 7);
+            assert_eq!(rep.c1, ceil_log(p as u64 + 1, k as u64) as u64);
+        }
+    }
+
+    #[test]
+    fn c2_matches_theorem3_exact_powers() {
+        // Theorem 3 for K = (p+1)^L: C2 = ((p+1)^{T_p} − 1 + (p+1)^{T_s} − 1)/p.
+        for (k, p) in [(16usize, 1usize), (64, 1), (81, 2), (256, 3)] {
+            let rep = check(k, p, 1, 3);
+            let prm = PsParams::new(k, p);
+            let expect = (ipow(p as u64 + 1, prm.tp) - 1) / p as u64
+                + (ipow(p as u64 + 1, prm.ts) - 1) / p as u64;
+            assert_eq!(rep.c2, expect, "K={k} p={p}");
+        }
+    }
+
+    #[test]
+    fn fig2_k4_p1_two_rounds() {
+        // Fig. 2: K=4, p=1 — any C computed in exactly 2 rounds.
+        let rep = check(4, 1, 1, 42);
+        assert_eq!(rep.c1, 2);
+        assert_eq!(rep.c2, 2); // one element per round
+    }
+
+    #[test]
+    fn gf2e_field_also_works() {
+        let f = crate::gf::Gf2e::new(8).unwrap();
+        let k = 13;
+        let c = Arc::new(Mat::random(&f, k, k, 5));
+        let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![(i * 17 + 1) % 256]).collect();
+        let mut ps = PrepareShoot::new(f.clone(), (0..k).collect(), 2, c.clone(), inputs.clone());
+        run(&mut Sim::new(2), &mut ps).unwrap();
+        let outs = ps.outputs();
+        for kk in 0..k {
+            let mut want = pkt_zero(1);
+            for r in 0..k {
+                pkt_add_scaled(&f, &mut want, c[(r, kk)], &inputs[r]);
+            }
+            assert_eq!(outs[&kk], want);
+        }
+    }
+}

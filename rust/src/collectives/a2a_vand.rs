@@ -1,0 +1,285 @@
+//! **Draw-and-loose** — the specific A2A for Vandermonde matrices (§V-B),
+//! and its inverse (Lemma 6).
+//!
+//! For `K = M·Z` processors with `Z = P^H | q−1` and structured evaluation
+//! points `ω_{i,j} = g^{φ(i)}·g^{j′(q−1)/Z}` ([`StructuredPoints`]),
+//! processor `i·Z+j` obtains `f(ω_{i,j})`:
+//!
+//! * **Draw**: `Z` parallel *column* prepare-and-shoots on the `M×M`
+//!   Vandermonde `V_M` (eq. (20), points `α_i^Z`), then a free local scale
+//!   by `α_i^j` — giving processor `(i,j)` the sub-polynomial evaluation
+//!   `f_j(α_i)` (eq. (21)).
+//! * **Loose**: `M` parallel *row* DFT A2As on `D_Z·Π` — combining the
+//!   `f_ℓ(α_i)` into `x̃_{i,j} = Σ_ℓ β_{j'}^ℓ f_ℓ(α_i)` (eq. (19)).
+//!
+//! Cost (Theorem 5): `C = (α + β⌈log2 q⌉)·H·C_univ(P) + C_univ(M)`; for
+//! `H = 0` the structure buys nothing (Remark 8) and the collective
+//! degenerates to a single prepare-and-shoot on the whole matrix.
+//!
+//! The inverse (Lemma 6) runs loose⁻¹ (inverse DFT per row), unscales, then
+//! draw⁻¹ (prepare-and-shoot on `V_M^{-1}` per column).
+
+use super::{DftA2A, LocalOp, Par, Pipeline, PrepareShoot, StageBuilder};
+use crate::codes::StructuredPoints;
+use crate::gf::{vandermonde, Field, Mat};
+use crate::net::{Collective, Msg, Packet, ProcId};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Draw-and-loose for the Vandermonde matrix on a [`StructuredPoints`]
+/// design (`invert = true` computes the inverse Vandermonde).
+pub struct DrawLoose {
+    pipe: Pipeline,
+}
+
+impl DrawLoose {
+    pub fn new<F: Field>(
+        f: F,
+        procs: Vec<ProcId>,
+        p: usize,
+        sp: &StructuredPoints,
+        inputs: Vec<Packet>,
+        invert: bool,
+    ) -> anyhow::Result<Self> {
+        let k = procs.len();
+        anyhow::ensure!(sp.len() == k, "point design covers {} != {k} procs", sp.len());
+        anyhow::ensure!(inputs.len() == k);
+        let z = sp.z as usize;
+        let m = sp.m;
+        let init: HashMap<ProcId, Packet> = procs
+            .iter()
+            .zip(inputs)
+            .map(|(&pid, pkt)| (pid, pkt))
+            .collect();
+
+        // H = 0 ⇒ no DFT structure: fall back to one universal A2A
+        // (Remark 8). The matrix is the (inverse) Vandermonde on points.
+        if sp.h == 0 {
+            let vm = vandermonde::square(&f, &sp.points);
+            let mat = if invert {
+                vm.inverse(&f)
+                    .ok_or_else(|| anyhow::anyhow!("singular Vandermonde"))?
+            } else {
+                vm
+            };
+            let ps = PrepareShoot::from_outputs(f, procs, p, Arc::new(mat), &init);
+            return Ok(DrawLoose {
+                pipe: Pipeline::new(Box::new(ps), vec![]),
+            });
+        }
+
+        // Grid: processor (i, j) = procs[i·Z + j]; column j = {(i,j)}_i,
+        // row i = {(i,j)}_j.
+        let alpha: Vec<u64> = (0..m).map(|i| sp.alpha(&f, i)).collect();
+        let alpha_z: Vec<u64> = alpha.iter().map(|&a| f.pow(a, sp.z)).collect();
+
+        let draw: StageBuilder = {
+            let f = f.clone();
+            let procs = procs.clone();
+            let alpha_z = alpha_z.clone();
+            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+                // V_M[r][c] = (α_c^Z)^r — square Vandermonde on α_i^Z.
+                let vm = vandermonde::square(&f, &alpha_z);
+                let mat = Arc::new(if invert {
+                    vandermonde::inverse(&f, &alpha_z)
+                } else {
+                    vm
+                });
+                let cols: Vec<Box<dyn Collective>> = (0..z)
+                    .map(|j| {
+                        let members: Vec<ProcId> = (0..m).map(|i| procs[i * z + j]).collect();
+                        Box::new(PrepareShoot::from_outputs(
+                            f.clone(),
+                            members,
+                            p,
+                            mat.clone(),
+                            prev,
+                        )) as Box<dyn Collective>
+                    })
+                    .collect();
+                Box::new(Par::new(cols))
+            })
+        };
+
+        let scale: StageBuilder = {
+            let f = f.clone();
+            let procs = procs.clone();
+            let alpha = alpha.clone();
+            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+                let rank_of: HashMap<ProcId, usize> =
+                    procs.iter().enumerate().map(|(i, &p)| (p, i)).collect();
+                Box::new(LocalOp::map(prev, |pid, pkt| {
+                    let rank = rank_of[&pid];
+                    let (i, j) = (rank / z, rank % z);
+                    let s = f.pow(alpha[i], j as u64);
+                    let s = if invert { f.inv(s) } else { s };
+                    crate::net::pkt_scale(&f, s, pkt)
+                }))
+            })
+        };
+
+        let loose: StageBuilder = {
+            let f = f.clone();
+            let procs = procs.clone();
+            let (p_base, h) = (sp.p_base, sp.h);
+            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+                let rows: Vec<Box<dyn Collective>> = (0..m)
+                    .map(|i| {
+                        let members: Vec<ProcId> = (0..z).map(|j| procs[i * z + j]).collect();
+                        let ins: Vec<Packet> =
+                            members.iter().map(|pid| prev[pid].clone()).collect();
+                        Box::new(
+                            DftA2A::new(f.clone(), members, p, p_base, h, ins, invert)
+                                .expect("validated Z | q−1"),
+                        ) as Box<dyn Collective>
+                    })
+                    .collect();
+                Box::new(Par::new(rows))
+            })
+        };
+
+        // Forward: draw → scale → loose. Inverse: loose⁻¹ → scale⁻¹ → draw⁻¹.
+        let stages = if invert {
+            vec![loose, scale, draw]
+        } else {
+            vec![draw, scale, loose]
+        };
+        Ok(DrawLoose {
+            pipe: Pipeline::from_inputs(init, stages),
+        })
+    }
+
+    /// The matrix computed (oracle): the (inverse) square Vandermonde on
+    /// `sp.points` in processor-rank order.
+    pub fn matrix<F: Field>(f: &F, sp: &StructuredPoints, invert: bool) -> Option<Mat> {
+        let v = vandermonde::square(f, &sp.points);
+        if invert {
+            v.inverse(f)
+        } else {
+            Some(v)
+        }
+    }
+}
+
+impl Collective for DrawLoose {
+    fn participants(&self) -> Vec<ProcId> {
+        self.pipe.participants()
+    }
+    fn is_done(&self) -> bool {
+        self.pipe.is_done()
+    }
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        self.pipe.step(inbox)
+    }
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        self.pipe.outputs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::GfPrime;
+    use crate::net::{pkt_add_scaled, pkt_zero, run, Sim};
+
+    fn f() -> GfPrime {
+        GfPrime::default_field()
+    }
+
+    fn oracle(f: &GfPrime, m: &Mat, inputs: &[Packet]) -> Vec<Packet> {
+        (0..m.cols)
+            .map(|j| {
+                let mut acc = pkt_zero(inputs[0].len());
+                for r in 0..m.rows {
+                    pkt_add_scaled(f, &mut acc, m[(r, j)], &inputs[r]);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    fn check(n: usize, p_base: u64, p: usize, invert: bool) -> crate::net::SimReport {
+        let f = f();
+        let hmax = StructuredPoints::max_h(&f, n as u64, p_base);
+        let m = n / crate::util::ipow(p_base, hmax) as usize;
+        let sp = StructuredPoints::new(&f, n, p_base, (0..m as u64).collect()).unwrap();
+        let inputs: Vec<Packet> = (0..n as u64).map(|i| vec![f.elem(i * 131 + 7)]).collect();
+        let mut dl =
+            DrawLoose::new(f, (0..n).collect(), p, &sp, inputs.clone(), invert).unwrap();
+        let rep = run(&mut Sim::new(p), &mut dl).unwrap();
+        let outs = dl.outputs();
+        let got: Vec<Packet> = (0..n).map(|i| outs[&i].clone()).collect();
+        let mat = DrawLoose::matrix(&f, &sp, invert).unwrap();
+        assert_eq!(got, oracle(&f, &mat, &inputs), "n={n} P={p_base} inv={invert}");
+        rep
+    }
+
+    #[test]
+    fn computes_structured_vandermonde() {
+        for (n, p_base, p) in [
+            (8usize, 2u64, 1usize),
+            (16, 2, 1),
+            (24, 2, 1),
+            (12, 2, 3),
+            (9, 3, 2),
+            (48, 4, 3),
+        ] {
+            check(n, p_base, p, false);
+        }
+    }
+
+    #[test]
+    fn computes_inverse_vandermonde() {
+        for (n, p_base, p) in [(8usize, 2u64, 1usize), (24, 2, 1), (12, 2, 3)] {
+            check(n, p_base, p, true);
+        }
+    }
+
+    #[test]
+    fn h0_falls_back_to_universal() {
+        // n = 5 with P = 2: H = 0 (5 is odd) — still correct (Remark 8).
+        check(5, 2, 1, false);
+        check(5, 2, 1, true);
+    }
+
+    #[test]
+    fn inverse_cost_equals_forward_cost() {
+        // Lemma 6: same C1/C2 both directions.
+        let fwd = check(24, 2, 1, false);
+        let inv = check(24, 2, 1, true);
+        assert_eq!(fwd.c1, inv.c1);
+        assert_eq!(fwd.c2, inv.c2);
+    }
+
+    #[test]
+    fn theorem5_special_case_cost() {
+        // K = Z (M = 1): pure DFT — C1 = C2 = H·C_univ(P); with
+        // P = p+1 = 2: C1 = H = log2 K exactly (Theorem 5 with M ≤ P²).
+        let rep = check(16, 2, 1, false);
+        assert_eq!(rep.c1, 4);
+        assert_eq!(rep.c2, 4);
+    }
+
+    #[test]
+    fn beats_universal_c2_when_structured() {
+        // The §V headline: for K = 2^H | q−1, draw-and-loose moves
+        // O(log K) elements where prepare-and-shoot moves O(√K).
+        let f = f();
+        let n = 256usize;
+        let sp = StructuredPoints::new(&f, n, 2, vec![0]).unwrap();
+        let inputs: Vec<Packet> = (0..n as u64).map(|i| vec![f.elem(i + 1)]).collect();
+        let mut dl = DrawLoose::new(f, (0..n).collect(), 1, &sp, inputs.clone(), false).unwrap();
+        let dl_rep = run(&mut Sim::new(1), &mut dl).unwrap();
+
+        let f = GfPrime::default_field();
+        let mat = Arc::new(DrawLoose::matrix(&f, &sp, false).unwrap());
+        let mut ps = PrepareShoot::new(f, (0..n).collect(), 1, mat, inputs);
+        let ps_rep = run(&mut Sim::new(1), &mut ps).unwrap();
+        assert!(
+            dl_rep.c2 < ps_rep.c2 / 2,
+            "draw-and-loose C2 {} should beat universal C2 {}",
+            dl_rep.c2,
+            ps_rep.c2
+        );
+    }
+}

@@ -1,0 +1,168 @@
+//! All-gather (Bruck et al. \[26\]) — every processor ends with every
+//! initial packet. `C1 = ⌈log_{p+1} N⌉`, `C2 ≈ (N−1)·W/p`.
+//!
+//! Not used by the paper's own algorithms (that is the point: prepare-and-
+//! shoot moves `O(√K)` elements where an all-gather-based scheme moves
+//! `O(K)`), but it is the substrate of the multi-reduce baseline of
+//! Jeong et al. \[21\] which §II compares against.
+
+use crate::net::{Collective, Msg, Packet, ProcId};
+use crate::util::ipow;
+use std::collections::HashMap;
+
+/// Bruck all-gather over `procs`; rank `r` contributes `inputs[r]`.
+pub struct AllGather {
+    procs: Vec<ProcId>,
+    p: usize,
+    rounds: u32,
+    t: u32,
+    /// `have[r][j]` = packet of owner `j` if received by rank `r`.
+    have: Vec<Vec<Option<Packet>>>,
+    done: bool,
+}
+
+impl AllGather {
+    pub fn new(procs: Vec<ProcId>, p: usize, inputs: Vec<Packet>) -> Self {
+        assert_eq!(procs.len(), inputs.len());
+        let n = procs.len();
+        let rounds = crate::util::ceil_log(p as u64 + 1, n as u64);
+        let mut have = vec![vec![None; n]; n];
+        for (r, pkt) in inputs.into_iter().enumerate() {
+            have[r][r] = Some(pkt);
+        }
+        AllGather {
+            procs,
+            p,
+            rounds,
+            t: 0,
+            have,
+            done: n <= 1,
+        }
+    }
+
+    /// Owners rank `r` is guaranteed to hold at the start of round `t`
+    /// (1-indexed): `{r − j mod n : j ∈ [0, (p+1)^{t−1})}`.
+    fn held_owners(&self, r: usize, t: u32) -> Vec<usize> {
+        let n = self.procs.len();
+        let span = ipow(self.p as u64 + 1, t - 1).min(n as u64) as usize;
+        (0..span).map(|j| (r + n - j) % n).collect()
+    }
+}
+
+impl Collective for AllGather {
+    fn participants(&self) -> Vec<ProcId> {
+        self.procs.clone()
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        let n = self.procs.len();
+        let rank_of: HashMap<ProcId, usize> =
+            self.procs.iter().enumerate().map(|(i, &p)| (p, i)).collect();
+        // Receivers reconstruct the (deterministic) owner list the sender
+        // used, in the same order.
+        for m in inbox {
+            let dst = rank_of[&m.dst];
+            let src = rank_of[&m.src];
+            let dst_had = self.held_owners(dst, self.t);
+            let src_had = self.held_owners(src, self.t);
+            let expected: Vec<usize> = src_had
+                .into_iter()
+                .filter(|o| !dst_had.contains(o))
+                .collect();
+            assert_eq!(expected.len(), m.payload.len(), "schedule mismatch");
+            for (owner, pkt) in expected.into_iter().zip(m.payload) {
+                // Two ports may collapse to the same distance mod N, in
+                // which case the same owner arrives twice; keep the first.
+                self.have[dst][owner].get_or_insert(pkt);
+            }
+        }
+        if self.t == self.rounds {
+            self.done = true;
+            return Vec::new();
+        }
+        self.t += 1;
+        let mut out = Vec::new();
+        for r in 0..n {
+            let src_had = self.held_owners(r, self.t);
+            let mut targets = Vec::new();
+            for rho in 1..=self.p as u64 {
+                let d = (rho * ipow(self.p as u64 + 1, self.t - 1)) % n as u64;
+                if d == 0 {
+                    continue;
+                }
+                let dst = (r + d as usize) % n;
+                if !targets.contains(&dst) {
+                    targets.push(dst);
+                }
+            }
+            for dst in targets {
+                let dst_had = self.held_owners(dst, self.t);
+                let payload: Vec<Packet> = src_had
+                    .iter()
+                    .filter(|o| !dst_had.contains(o))
+                    .map(|&o| self.have[r][o].clone().expect("sender missing packet"))
+                    .collect();
+                if !payload.is_empty() {
+                    out.push(Msg::new(self.procs[r], self.procs[dst], payload));
+                }
+            }
+        }
+        out
+    }
+
+    /// Every processor's output is the concatenation of all `N` packets in
+    /// owner-rank order.
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        self.procs
+            .iter()
+            .enumerate()
+            .map(|(r, &pid)| {
+                let cat: Packet = (0..self.procs.len())
+                    .flat_map(|o| self.have[r][o].clone().expect("all-gather incomplete"))
+                    .collect();
+                (pid, cat)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{run, Sim};
+
+    #[test]
+    fn everyone_gets_everything() {
+        for (n, p) in [(8usize, 1usize), (9, 2), (7, 1), (5, 2), (16, 3)] {
+            let procs: Vec<ProcId> = (0..n).collect();
+            let inputs: Vec<Packet> = (0..n as u64).map(|i| vec![i, i * i]).collect();
+            let mut ag = AllGather::new(procs, p, inputs);
+            let rep = run(&mut Sim::new(p), &mut ag).unwrap();
+            assert_eq!(
+                rep.c1,
+                crate::util::ceil_log(p as u64 + 1, n as u64) as u64,
+                "n={n} p={p}"
+            );
+            for (_, cat) in ag.outputs() {
+                let want: Packet = (0..n as u64).flat_map(|i| vec![i, i * i]).collect();
+                assert_eq!(cat, want);
+            }
+        }
+    }
+
+    #[test]
+    fn one_port_pow2_c2_is_n_minus_1() {
+        // The classic Bruck bound: C2 = (N−1)·W for p = 1, N a power of 2.
+        let n = 16usize;
+        let procs: Vec<ProcId> = (0..n).collect();
+        let inputs: Vec<Packet> = (0..n as u64).map(|i| vec![i]).collect();
+        let mut ag = AllGather::new(procs, 1, inputs);
+        let rep = run(&mut Sim::new(1), &mut ag).unwrap();
+        assert_eq!(rep.c2, (n - 1) as u64);
+        assert_eq!(rep.c1, 4);
+    }
+}

@@ -1,0 +1,253 @@
+//! One-to-all broadcast (Definition 2) — the folklore `(p+1)`-nomial tree.
+//!
+//! In round `t`, every processor that already holds the packet forwards it
+//! to `p` more, so after `t` rounds `(p+1)^t` processors are covered:
+//! `C1 = ⌈log_{p+1} N⌉`, `C2 = W·⌈log_{p+1} N⌉` (Appendix A's
+//! `C_BR(N, W) = (α + β⌈log2 q⌉W)·⌈log_{p+1} N⌉`).
+//!
+//! A pipelined chain variant for large `W` is provided as
+//! [`PipelinedBroadcast`] (Appendix A discusses this family; the chain is
+//! the simplest member, with `C1 = m + N − 2` rounds of `W/m`-element
+//! messages).
+
+use crate::net::{Collective, Msg, Packet, ProcId};
+use crate::util::ipow;
+use std::collections::HashMap;
+
+/// `(p+1)`-nomial tree broadcast from `procs[0]` to all of `procs`.
+pub struct TreeBroadcast {
+    procs: Vec<ProcId>,
+    rank_of: HashMap<ProcId, usize>,
+    p: usize,
+    rounds: u32,
+    t: u32,
+    have: Vec<Option<Packet>>,
+    done: bool,
+}
+
+impl TreeBroadcast {
+    /// `procs[0]` is the root and must hold `data`.
+    pub fn new(procs: Vec<ProcId>, p: usize, data: Packet) -> Self {
+        assert!(!procs.is_empty());
+        let n = procs.len();
+        let rounds = crate::util::ceil_log(p as u64 + 1, n as u64);
+        let mut have = vec![None; n];
+        have[0] = Some(data);
+        TreeBroadcast {
+            rank_of: procs.iter().enumerate().map(|(i, &p)| (p, i)).collect(),
+            procs,
+            p,
+            rounds,
+            t: 0,
+            have,
+            done: n <= 1,
+        }
+    }
+}
+
+impl Collective for TreeBroadcast {
+    fn participants(&self) -> Vec<ProcId> {
+        self.procs.clone()
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        // Deliver: each receiver stores the packet.
+        for m in inbox {
+            let r = self.rank_of[&m.dst];
+            debug_assert!(self.have[r].is_none(), "duplicate delivery");
+            let [pkt] = <[Packet; 1]>::try_from(m.payload).expect("one packet per message");
+            self.have[r] = Some(pkt);
+        }
+        if self.t == self.rounds {
+            self.done = true;
+            return Vec::new();
+        }
+        self.t += 1;
+        let covered = ipow(self.p as u64 + 1, self.t - 1) as usize;
+        let next_cover = (covered * (self.p + 1)).min(self.procs.len());
+        let mut out = Vec::new();
+        for r in 0..covered.min(self.procs.len()) {
+            let pkt = self.have[r].as_ref().expect("sender must hold data");
+            for rho in 1..=self.p {
+                let dst = r + rho * covered;
+                if dst < next_cover {
+                    out.push(Msg::new(self.procs[r], self.procs[dst], vec![pkt.clone()]));
+                }
+            }
+        }
+        out
+    }
+
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        self.procs
+            .iter()
+            .zip(&self.have)
+            .map(|(&p, h)| (p, h.clone().expect("broadcast incomplete")))
+            .collect()
+    }
+}
+
+/// Pipelined chain broadcast: the root splits its `W`-element packet into
+/// `segments` chunks and streams them down a line; processor `i` forwards
+/// chunk `c` in round `c + i + 1`. One port suffices.
+pub struct PipelinedBroadcast {
+    procs: Vec<ProcId>,
+    segments: usize,
+    chunks: Vec<Packet>,
+    /// chunks received per rank.
+    got: Vec<Vec<Packet>>,
+    t: u32,
+    done: bool,
+}
+
+impl PipelinedBroadcast {
+    pub fn new(procs: Vec<ProcId>, data: Packet, segments: usize) -> Self {
+        assert!(!procs.is_empty());
+        let segments = segments.clamp(1, data.len().max(1));
+        let w = data.len();
+        let base = w / segments;
+        let extra = w % segments;
+        let mut chunks = Vec::with_capacity(segments);
+        let mut off = 0;
+        for i in 0..segments {
+            let len = base + usize::from(i < extra);
+            chunks.push(data[off..off + len].to_vec());
+            off += len;
+        }
+        let n = procs.len();
+        PipelinedBroadcast {
+            procs,
+            segments,
+            got: vec![Vec::new(); n],
+            chunks,
+            t: 0,
+            done: n <= 1,
+        }
+    }
+
+    /// Total rounds: the last chunk leaves the root at round `segments`
+    /// and reaches the tail after `N − 1` hops in total.
+    pub fn rounds(&self) -> u32 {
+        (self.segments + self.procs.len() - 2) as u32
+    }
+}
+
+impl Collective for PipelinedBroadcast {
+    fn participants(&self) -> Vec<ProcId> {
+        self.procs.clone()
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        let rank_of: HashMap<ProcId, usize> =
+            self.procs.iter().enumerate().map(|(i, &p)| (p, i)).collect();
+        for m in inbox {
+            let r = rank_of[&m.dst];
+            for pkt in m.payload {
+                self.got[r].push(pkt);
+            }
+        }
+        if self.t == self.rounds() {
+            self.done = true;
+            return Vec::new();
+        }
+        self.t += 1;
+        let t = self.t as usize;
+        let mut out = Vec::new();
+        // In round t, rank i (0-based) forwards chunk c = t − 1 − i to
+        // rank i+1, if that chunk exists and rank i already has it.
+        for i in 0..self.procs.len() - 1 {
+            if t < i + 1 {
+                continue;
+            }
+            let c = t - 1 - i;
+            if c >= self.segments {
+                continue;
+            }
+            let chunk = if i == 0 {
+                self.chunks[c].clone()
+            } else {
+                self.got[i][c].clone()
+            };
+            out.push(Msg::new(self.procs[i], self.procs[i + 1], vec![chunk]));
+        }
+        out
+    }
+
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        self.procs
+            .iter()
+            .enumerate()
+            .map(|(i, &p)| {
+                let full: Packet = if i == 0 {
+                    self.chunks.concat()
+                } else {
+                    self.got[i].concat()
+                };
+                (p, full)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{run, Sim};
+
+    #[test]
+    fn tree_broadcast_costs_match_appendix_a() {
+        for (n, p) in [(9usize, 1usize), (9, 2), (27, 2), (5, 1), (16, 3), (1, 1)] {
+            let procs: Vec<ProcId> = (100..100 + n).collect();
+            let mut b = TreeBroadcast::new(procs.clone(), p, vec![7, 8, 9]);
+            let rep = run(&mut Sim::new(p), &mut b).unwrap();
+            let l = crate::util::ceil_log(p as u64 + 1, n as u64) as u64;
+            assert_eq!(rep.c1, l, "n={n} p={p}");
+            assert_eq!(rep.c2, 3 * l, "n={n} p={p}");
+            let outs = b.outputs();
+            assert_eq!(outs.len(), n);
+            assert!(outs.values().all(|v| *v == vec![7, 8, 9]));
+        }
+    }
+
+    #[test]
+    fn pipelined_chain_fills_everyone() {
+        let data: Packet = (0..12).collect();
+        let procs: Vec<ProcId> = (0..5).collect();
+        let mut b = PipelinedBroadcast::new(procs.clone(), data.clone(), 4);
+        let rep = run(&mut Sim::new(1), &mut b).unwrap();
+        assert_eq!(rep.c1, (4 + 5 - 2) as u64);
+        assert_eq!(rep.per_round_max[0], 3); // W/m elements per round
+        for (_, v) in b.outputs() {
+            assert_eq!(v, data);
+        }
+    }
+
+    #[test]
+    fn pipelined_beats_tree_for_large_w_small_alpha() {
+        // The Appendix-A motivation: for big W the chain amortises α.
+        let w = 1024usize;
+        let n = 8usize;
+        let data: Packet = (0..w as u64).collect();
+        let procs: Vec<ProcId> = (0..n).collect();
+        let model = crate::net::CostModel::new(1.0, 1.0, 20);
+
+        let mut tree = TreeBroadcast::new(procs.clone(), 1, data.clone());
+        let rt = run(&mut Sim::new(1), &mut tree).unwrap();
+        let mut chain = PipelinedBroadcast::new(procs.clone(), data, 64);
+        let rc = run(&mut Sim::new(1), &mut chain).unwrap();
+        assert!(
+            rc.cost(&model) < rt.cost(&model),
+            "chain {} vs tree {}",
+            rc.cost(&model),
+            rt.cost(&model)
+        );
+    }
+}

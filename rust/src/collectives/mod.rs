@@ -1,0 +1,249 @@
+//! Collective operations — the paper's building blocks, plus combinators.
+//!
+//! Every algorithm in the paper is a composition of a few collectives:
+//!
+//! * [`broadcast`] / [`reduce`] — the classic duals (Defs. 2–3, App. A),
+//! * [`a2a_universal`] — **prepare-and-shoot**, the optimal universal
+//!   all-to-all encode (§IV),
+//! * [`a2a_dft`] — the permuted-DFT specific algorithm (§V-A),
+//! * [`a2a_vand`] — **draw-and-loose** for general Vandermonde matrices
+//!   (§V-B),
+//! * [`a2a_cauchy`] — Cauchy-like matrices via two draw-and-loose passes
+//!   (§VI, Theorems 6–9),
+//! * [`allgather`] / [`multireduce`] — the Jeong et al. \[21\] baseline,
+//! * [`direct`] — the naive direct-transfer baseline (\[22\]-style).
+//!
+//! Composition uses two combinators mirroring the paper's framework
+//! figures: [`Par`] runs processor-disjoint collectives in the same rounds
+//! (the "M instances in parallel" of §III) and [`Pipeline`] sequences
+//! phases, handing each phase the previous phase's outputs.
+
+pub mod a2a_cauchy;
+pub mod a2a_dft;
+pub mod a2a_universal;
+pub mod a2a_vand;
+pub mod allgather;
+pub mod broadcast;
+pub mod direct;
+pub mod multireduce;
+pub mod reduce;
+
+pub use a2a_cauchy::CauchyA2A;
+pub use a2a_dft::DftA2A;
+pub use a2a_universal::PrepareShoot;
+pub use a2a_vand::DrawLoose;
+pub use allgather::AllGather;
+pub use broadcast::{PipelinedBroadcast, TreeBroadcast};
+pub use direct::DirectEncode;
+pub use multireduce::MultiReduce;
+pub use reduce::TreeReduce;
+
+use crate::net::{Collective, Msg, Packet, ProcId};
+use std::collections::{HashMap, VecDeque};
+
+/// A zero-round collective holding fixed outputs. Used as a pipeline
+/// source ("these processors hold these packets") and for free local
+/// computation steps (the model charges only for communication).
+pub struct LocalOp {
+    outs: HashMap<ProcId, Packet>,
+}
+
+impl LocalOp {
+    pub fn new(outs: HashMap<ProcId, Packet>) -> Self {
+        LocalOp { outs }
+    }
+
+    /// Map each processor's packet through `op`.
+    pub fn map(
+        inputs: &HashMap<ProcId, Packet>,
+        mut op: impl FnMut(ProcId, &Packet) -> Packet,
+    ) -> Self {
+        LocalOp {
+            outs: inputs.iter().map(|(&k, v)| (k, op(k, v))).collect(),
+        }
+    }
+}
+
+impl Collective for LocalOp {
+    fn participants(&self) -> Vec<ProcId> {
+        self.outs.keys().copied().collect()
+    }
+    fn is_done(&self) -> bool {
+        true
+    }
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        debug_assert!(inbox.is_empty(), "LocalOp received messages");
+        Vec::new()
+    }
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        self.outs.clone()
+    }
+}
+
+/// Run processor-disjoint collectives in the same round space.
+///
+/// This is the paper's "M instances of … operating in parallel": the
+/// engine sees the union of the children's messages each round, so `C1` is
+/// the max of the children's round counts and `m_t` is the max over all
+/// children — exactly the `max[C_A2A(A_0), …]` of Theorems 1–2.
+pub struct Par {
+    children: Vec<Box<dyn Collective>>,
+}
+
+impl Par {
+    pub fn new(children: Vec<Box<dyn Collective>>) -> Self {
+        // Children must be processor-disjoint; otherwise round-sharing is
+        // not meaningful (and port violations would be unattributable).
+        let mut seen: HashMap<ProcId, usize> = HashMap::new();
+        for (i, c) in children.iter().enumerate() {
+            for p in c.participants() {
+                if let Some(j) = seen.insert(p, i) {
+                    panic!("Par children {j} and {i} share processor {p}");
+                }
+            }
+        }
+        Par { children }
+    }
+}
+
+impl Collective for Par {
+    fn participants(&self) -> Vec<ProcId> {
+        self.children.iter().flat_map(|c| c.participants()).collect()
+    }
+
+    fn is_done(&self) -> bool {
+        self.children.iter().all(|c| c.is_done())
+    }
+
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        // Route by destination; participant sets may evolve (pipelines), so
+        // recompute the routing map each round.
+        let mut route: HashMap<ProcId, usize> = HashMap::new();
+        for (i, c) in self.children.iter().enumerate() {
+            for p in c.participants() {
+                route.insert(p, i);
+            }
+        }
+        let mut boxes: Vec<Vec<Msg>> = (0..self.children.len()).map(|_| Vec::new()).collect();
+        for m in inbox {
+            let i = *route
+                .get(&m.dst)
+                .unwrap_or_else(|| panic!("message to {} matches no child", m.dst));
+            boxes[i].push(m);
+        }
+        let mut out = Vec::new();
+        for (c, b) in self.children.iter_mut().zip(boxes) {
+            if !c.is_done() || !b.is_empty() {
+                out.extend(c.step(b));
+            }
+        }
+        out
+    }
+
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        let mut out = HashMap::new();
+        for c in &self.children {
+            out.extend(c.outputs());
+        }
+        out
+    }
+}
+
+/// Builder invoked with the previous stage's outputs.
+pub type StageBuilder = Box<dyn FnOnce(&HashMap<ProcId, Packet>) -> Box<dyn Collective>>;
+
+/// Sequence collective phases; each stage starts from the previous stage's
+/// outputs. Stage boundaries cost no extra rounds: a stage's first sends
+/// share the round in which the previous stage's last deliveries land.
+pub struct Pipeline {
+    current: Option<Box<dyn Collective>>,
+    builders: VecDeque<Option<StageBuilder>>,
+    last_outputs: HashMap<ProcId, Packet>,
+}
+
+impl Pipeline {
+    /// Start from an explicit first stage.
+    pub fn new(first: Box<dyn Collective>, builders: Vec<StageBuilder>) -> Self {
+        let mut p = Pipeline {
+            current: Some(first),
+            builders: builders.into_iter().map(Some).collect(),
+            last_outputs: HashMap::new(),
+        };
+        p.advance();
+        p
+    }
+
+    /// Start from fixed inputs (a [`LocalOp`] source stage).
+    pub fn from_inputs(inputs: HashMap<ProcId, Packet>, builders: Vec<StageBuilder>) -> Self {
+        Pipeline::new(Box::new(LocalOp::new(inputs)), builders)
+    }
+
+    /// Move past finished stages, building successors as needed.
+    fn advance(&mut self) {
+        loop {
+            match &self.current {
+                Some(c) if c.is_done() => {
+                    self.last_outputs = c.outputs();
+                    match self.builders.pop_front() {
+                        Some(b) => {
+                            let builder = b.expect("builder taken twice");
+                            self.current = Some(builder(&self.last_outputs));
+                        }
+                        None => {
+                            self.current = None;
+                            return;
+                        }
+                    }
+                }
+                Some(_) => return,
+                None => return,
+            }
+        }
+    }
+}
+
+impl Collective for Pipeline {
+    fn participants(&self) -> Vec<ProcId> {
+        match &self.current {
+            Some(c) => c.participants(),
+            None => self.last_outputs.keys().copied().collect(),
+        }
+    }
+
+    fn is_done(&self) -> bool {
+        self.current.is_none()
+    }
+
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        let mut inbox = Some(inbox);
+        loop {
+            let Some(cur) = self.current.as_mut() else {
+                return Vec::new();
+            };
+            let out = cur.step(inbox.take().unwrap_or_default());
+            if !out.is_empty() {
+                return out;
+            }
+            if cur.is_done() {
+                // Stage finished this round; its successor's first sends
+                // may share the same round.
+                self.advance();
+                continue;
+            }
+            return out;
+        }
+    }
+
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        match &self.current {
+            Some(c) => c.outputs(),
+            None => self.last_outputs.clone(),
+        }
+    }
+}
+
+/// Convenience: collect `(proc, packet)` pairs into the map all collective
+/// constructors take.
+pub fn inputs_of(pairs: impl IntoIterator<Item = (ProcId, Packet)>) -> HashMap<ProcId, Packet> {
+    pairs.into_iter().collect()
+}

@@ -1,0 +1,118 @@
+//! Multi-reduce — the Jeong et al. \[21\] baseline the paper compares
+//! against in §II.
+//!
+//! \[21\] builds decentralized MDS encoding from *broadcast* and
+//! *all-gather*: every processor gathers all `K` initial packets
+//! (Bruck all-gather, `C2 = (K−1)·W` one-port), then locally combines
+//! them with its column of the coding matrix. The paper's claim: this
+//! costs `(R − 2√R − 1)·β⌈log2 q⌉·W` *more* than prepare-and-shoot —
+//! `(K−1)·W` versus `≈ 2√K·W` — which `benches/baselines.rs` reproduces.
+//!
+//! Restrictions inherited from \[21\]: designed for the one-port model
+//! (`p = 1`) and `R | K`; the implementation below nevertheless runs for
+//! any `p` via the generalized all-gather.
+
+use super::{AllGather, LocalOp, Pipeline, StageBuilder};
+use crate::gf::{Field, Mat};
+use crate::net::{pkt_zero, Collective, Msg, Packet, ProcId};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// All-gather-then-combine all-to-all encode (the \[21\] baseline).
+pub struct MultiReduce {
+    pipe: Pipeline,
+}
+
+impl MultiReduce {
+    /// Same interface as [`PrepareShoot`](super::PrepareShoot): computes
+    /// `x·C` for arbitrary square `C`.
+    pub fn new<F: Field>(
+        f: F,
+        procs: Vec<ProcId>,
+        p: usize,
+        c: Arc<Mat>,
+        inputs: Vec<Packet>,
+    ) -> Self {
+        let k = procs.len();
+        assert_eq!(c.rows, k);
+        assert_eq!(c.cols, k);
+        let w = inputs.first().map_or(0, |x| x.len());
+        let gather = AllGather::new(procs.clone(), p, inputs);
+        let combine: StageBuilder = {
+            let procs = procs.clone();
+            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+                Box::new(LocalOp::map(prev, |pid, cat| {
+                    // `cat` = concatenation of all K packets in rank order.
+                    let j = procs.iter().position(|&x| x == pid).unwrap();
+                    let mut acc = pkt_zero(w);
+                    let terms: Vec<(u64, &[u64])> = (0..k)
+                        .map(|r| (c[(r, j)], &cat[r * w..(r + 1) * w]))
+                        .collect();
+                    f.lincomb_into(&mut acc, &terms);
+                    acc
+                })) as Box<dyn Collective>
+            })
+        };
+        MultiReduce {
+            pipe: Pipeline::new(Box::new(gather), vec![combine]),
+        }
+    }
+}
+
+impl Collective for MultiReduce {
+    fn participants(&self) -> Vec<ProcId> {
+        self.pipe.participants()
+    }
+    fn is_done(&self) -> bool {
+        self.pipe.is_done()
+    }
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        self.pipe.step(inbox)
+    }
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        self.pipe.outputs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::PrepareShoot;
+    use crate::gf::GfPrime;
+    use crate::net::{run, Sim};
+
+    #[test]
+    fn correct_but_more_expensive_than_prepare_shoot() {
+        let f = GfPrime::default_field();
+        let k = 64usize;
+        let c = Arc::new(Mat::random(&f, k, k, 17));
+        let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![f.elem(i * 13 + 1)]).collect();
+
+        let mut mr = MultiReduce::new(f, (0..k).collect(), 1, c.clone(), inputs.clone());
+        let rep_mr = run(&mut Sim::new(1), &mut mr).unwrap();
+
+        let mut ps = PrepareShoot::new(f, (0..k).collect(), 1, c.clone(), inputs.clone());
+        let rep_ps = run(&mut Sim::new(1), &mut ps).unwrap();
+
+        // Same outputs...
+        assert_eq!(mr.outputs(), ps.outputs());
+        // ...same optimal round count (both are log-trees)...
+        assert_eq!(rep_mr.c1, rep_ps.c1);
+        // ...but C2 = K−1 vs ≈ 2√K (the §II gap).
+        assert_eq!(rep_mr.c2, (k - 1) as u64);
+        assert_eq!(rep_ps.c2, 14); // 2(√64 − 1)/1 = 14
+    }
+
+    #[test]
+    fn multiport_variant_works() {
+        let f = GfPrime::default_field();
+        let k = 27usize;
+        let c = Arc::new(Mat::random(&f, k, k, 3));
+        let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![i, i + 1]).collect();
+        let mut mr = MultiReduce::new(f, (0..k).collect(), 2, c.clone(), inputs.clone());
+        run(&mut Sim::new(2), &mut mr).unwrap();
+        let mut ps = PrepareShoot::new(f, (0..k).collect(), 2, c, inputs);
+        run(&mut Sim::new(2), &mut ps).unwrap();
+        assert_eq!(mr.outputs(), ps.outputs());
+    }
+}

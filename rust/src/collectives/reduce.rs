@@ -1,0 +1,146 @@
+//! All-to-one reduce (Definition 3) — the dual of the `(p+1)`-nomial
+//! broadcast: same tree, communication order reversed, packets summed on
+//! the way down. `C1 = ⌈log_{p+1} N⌉`, `C2 = W·⌈log_{p+1} N⌉`.
+//!
+//! Phase two of the K ≥ R framework (§III-A) runs one instance per grid
+//! row to accumulate the partially-coded packets at the sink.
+
+use crate::gf::Field;
+use crate::net::{pkt_add, Collective, Msg, Packet, ProcId};
+use crate::util::ipow;
+use std::collections::HashMap;
+
+/// `(p+1)`-nomial tree reduce of field-vector packets to `procs[0]`.
+///
+/// Every participant contributes one packet (callers pre-scale if the
+/// reduction is a weighted sum); the root ends with `Σ_i inputs[i]`.
+pub struct TreeReduce<F: Field> {
+    f: F,
+    procs: Vec<ProcId>,
+    p: usize,
+    rounds: u32,
+    t: u32,
+    acc: Vec<Option<Packet>>,
+    done: bool,
+}
+
+impl<F: Field> TreeReduce<F> {
+    /// `inputs[i]` is the packet initially held by `procs[i]`; the result
+    /// accumulates at `procs[0]`.
+    pub fn new(f: F, procs: Vec<ProcId>, p: usize, inputs: Vec<Packet>) -> Self {
+        assert_eq!(procs.len(), inputs.len());
+        assert!(!procs.is_empty());
+        let n = procs.len();
+        let rounds = crate::util::ceil_log(p as u64 + 1, n as u64);
+        TreeReduce {
+            f,
+            procs,
+            p,
+            rounds,
+            t: 0,
+            acc: inputs.into_iter().map(Some).collect(),
+            done: n <= 1,
+        }
+    }
+
+    /// Build from an output map of a previous stage (pipeline glue);
+    /// processors missing from `inputs` contribute zero packets.
+    pub fn from_outputs(
+        f: F,
+        procs: Vec<ProcId>,
+        p: usize,
+        inputs: &HashMap<ProcId, Packet>,
+        w: usize,
+    ) -> Self {
+        let packets = procs
+            .iter()
+            .map(|pid| inputs.get(pid).cloned().unwrap_or_else(|| vec![0; w]))
+            .collect();
+        TreeReduce::new(f, procs, p, packets)
+    }
+}
+
+impl<F: Field> Collective for TreeReduce<F> {
+    fn participants(&self) -> Vec<ProcId> {
+        self.procs.clone()
+    }
+
+    fn is_done(&self) -> bool {
+        self.done
+    }
+
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        let rank_of: HashMap<ProcId, usize> =
+            self.procs.iter().enumerate().map(|(i, &p)| (p, i)).collect();
+        for m in inbox {
+            let r = rank_of[&m.dst];
+            let acc = self.acc[r].as_mut().expect("receiver lost its packet");
+            for pkt in &m.payload {
+                pkt_add(&self.f, acc, pkt);
+            }
+        }
+        if self.t == self.rounds {
+            self.done = true;
+            return Vec::new();
+        }
+        self.t += 1;
+        // Reverse of broadcast round t' = rounds + 1 − t: every rank in
+        // [(p+1)^{t'−1}, min(n, (p+1)^{t'})) sends its accumulator to its
+        // tree parent rank = x mod (p+1)^{t'−1}.
+        let tp = self.rounds + 1 - self.t;
+        let lo = ipow(self.p as u64 + 1, tp - 1) as usize;
+        let hi = (lo * (self.p + 1)).min(self.procs.len());
+        let mut out = Vec::new();
+        for x in lo..hi {
+            let parent = x % lo;
+            let pkt = self.acc[x].take().expect("sender lost its packet");
+            out.push(Msg::new(self.procs[x], self.procs[parent], vec![pkt]));
+        }
+        out
+    }
+
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        let root = self.acc[0].clone().expect("reduce incomplete");
+        HashMap::from([(self.procs[0], root)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::GfPrime;
+    use crate::net::{run, Sim};
+
+    #[test]
+    fn reduce_sums_everything() {
+        let f = GfPrime::default_field();
+        for (n, p) in [(9usize, 1usize), (10, 2), (27, 2), (4, 3), (1, 1), (2, 1)] {
+            let procs: Vec<ProcId> = (0..n).collect();
+            let inputs: Vec<Packet> = (0..n as u64).map(|i| vec![i + 1, 2 * i]).collect();
+            let mut red = TreeReduce::new(f, procs, p, inputs);
+            let rep = run(&mut Sim::new(p), &mut red).unwrap();
+            let l = crate::util::ceil_log(p as u64 + 1, n as u64) as u64;
+            assert_eq!(rep.c1, l, "n={n} p={p}");
+            assert_eq!(rep.c2, 2 * l, "n={n} p={p}");
+            let out = &red.outputs()[&0];
+            let s: u64 = (1..=n as u64).sum();
+            let s2: u64 = (0..n as u64).map(|i| 2 * i).sum();
+            assert_eq!(out, &vec![f.elem(s), f.elem(s2)]);
+        }
+    }
+
+    #[test]
+    fn reduce_is_broadcast_dual_in_cost() {
+        // Same tree ⇒ same C1/C2 as broadcast for equal (n, p, W).
+        let f = GfPrime::default_field();
+        let (n, p, w) = (13usize, 2usize, 5usize);
+        let procs: Vec<ProcId> = (0..n).collect();
+        let inputs: Vec<Packet> = (0..n).map(|_| vec![1; w]).collect();
+        let mut red = TreeReduce::new(f, procs.clone(), p, inputs);
+        let rr = run(&mut Sim::new(p), &mut red).unwrap();
+        let mut b = super::super::TreeBroadcast::new(procs, p, vec![1; w]);
+        let rb = run(&mut Sim::new(p), &mut b).unwrap();
+        assert_eq!(rr.c1, rb.c1);
+        assert_eq!(rr.c2, rb.c2);
+    }
+}

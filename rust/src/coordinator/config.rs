@@ -1,0 +1,230 @@
+//! Job configuration — a minimal `key = value` format (the offline build
+//! has no serde/toml; the grammar is a strict TOML subset so configs stay
+//! valid TOML).
+//!
+//! ```text
+//! # sensor-network.conf
+//! field = "prime:786433"
+//! k = 48
+//! r = 16
+//! w = 256
+//! ports = 2
+//! alpha = 10.0
+//! beta = 0.1
+//! code = "rs-structured"
+//! algorithm = "auto"
+//! verify = "native"
+//! seed = 42
+//! artifacts_dir = "artifacts"
+//! ```
+
+use crate::framework::AlgoRequest;
+use crate::gf::AnyField;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Which code family the job encodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum CodeKind {
+    /// Structured GRS (draw-and-loose–compatible points) — the §VI target.
+    #[default]
+    RsStructured,
+    /// GRS on plain sequential points (universal algorithms only).
+    RsPlain,
+    /// Systematic Lagrange code (Remark 9).
+    Lagrange,
+    /// A random dense parity matrix (universal algorithms only).
+    Random,
+}
+
+impl std::str::FromStr for CodeKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "rs-structured" | "rs" => CodeKind::RsStructured,
+            "rs-plain" => CodeKind::RsPlain,
+            "lagrange" => CodeKind::Lagrange,
+            "random" => CodeKind::Random,
+            other => anyhow::bail!("unknown code kind {other:?}"),
+        })
+    }
+}
+
+/// How to verify coded outputs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum VerifyMode {
+    /// Native rust matrix oracle.
+    #[default]
+    Native,
+    /// The AOT-compiled PJRT artifact (requires `make artifacts`).
+    Pjrt,
+    /// Skip verification.
+    Off,
+}
+
+impl std::str::FromStr for VerifyMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "native" => VerifyMode::Native,
+            "pjrt" => VerifyMode::Pjrt,
+            "off" => VerifyMode::Off,
+            other => anyhow::bail!("unknown verify mode {other:?}"),
+        })
+    }
+}
+
+/// Full description of one decentralized-encoding job.
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    pub field: String,
+    pub k: usize,
+    pub r: usize,
+    pub w: usize,
+    pub ports: usize,
+    /// Cost-model parameters (the paper's α and β).
+    pub alpha: f64,
+    pub beta: f64,
+    pub code: CodeKind,
+    pub algorithm: AlgoRequest,
+    pub verify: VerifyMode,
+    pub seed: u64,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            field: "prime:786433".into(),
+            k: 16,
+            r: 4,
+            w: 64,
+            ports: 1,
+            alpha: 10.0,
+            beta: 0.1,
+            code: CodeKind::RsStructured,
+            algorithm: AlgoRequest::Auto,
+            verify: VerifyMode::Native,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl JobConfig {
+    /// Parse the `key = value` config text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut map: HashMap<&str, String> = HashMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected `key = value`", ln + 1))?;
+            let val = val.trim().trim_matches('"').to_string();
+            map.insert(key.trim_end(), val);
+        }
+        let mut cfg = JobConfig::default();
+        let set = |cfg: &mut JobConfig, k: &str, v: &str| -> Result<()> {
+            match k {
+                "field" => cfg.field = v.into(),
+                "k" => cfg.k = v.parse()?,
+                "r" => cfg.r = v.parse()?,
+                "w" => cfg.w = v.parse()?,
+                "ports" | "p" => cfg.ports = v.parse()?,
+                "alpha" => cfg.alpha = v.parse()?,
+                "beta" => cfg.beta = v.parse()?,
+                "code" => cfg.code = v.parse()?,
+                "algorithm" => cfg.algorithm = v.parse()?,
+                "verify" => cfg.verify = v.parse()?,
+                "seed" => cfg.seed = v.parse()?,
+                "artifacts_dir" => cfg.artifacts_dir = v.into(),
+                other => anyhow::bail!("unknown config key {other:?}"),
+            }
+            Ok(())
+        };
+        let entries: Vec<(String, String)> =
+            map.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+        for (k, v) in entries {
+            set(&mut cfg, &k, &v).with_context(|| format!("config key {k}"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.k >= 1 && self.r >= 1, "need K ≥ 1 and R ≥ 1");
+        anyhow::ensure!(self.w >= 1, "need W ≥ 1");
+        anyhow::ensure!(self.ports >= 1, "need at least one port");
+        let f = self.any_field()?;
+        use crate::gf::Field;
+        anyhow::ensure!(
+            (self.k + self.r) as u64 <= f.order(),
+            "N = K+R must be at most q for GRS codes"
+        );
+        Ok(())
+    }
+
+    pub fn any_field(&self) -> Result<AnyField> {
+        AnyField::parse(&self.field)
+    }
+
+    /// The cost model for this deployment.
+    pub fn cost_model(&self) -> Result<crate::net::CostModel> {
+        use crate::gf::Field;
+        let f = self.any_field()?;
+        Ok(crate::net::CostModel::new(self.alpha, self.beta, f.bits()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = JobConfig::parse(
+            r#"
+            # a comment
+            field = "prime:65537"
+            k = 12
+            r = 4
+            w = 8       # trailing comment
+            ports = 2
+            alpha = 100.0
+            beta = 0.5
+            code = "rs-plain"
+            algorithm = "universal"
+            verify = "off"
+            seed = 7
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.k, 12);
+        assert_eq!(cfg.ports, 2);
+        assert_eq!(cfg.code, CodeKind::RsPlain);
+        assert_eq!(cfg.algorithm, AlgoRequest::Universal);
+        assert_eq!(cfg.verify, VerifyMode::Off);
+        assert_eq!(cfg.cost_model().unwrap().q_bits, 17);
+    }
+
+    #[test]
+    fn defaults_are_valid() {
+        JobConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_oversized_codes() {
+        assert!(JobConfig::parse("bogus = 1").is_err());
+        assert!(JobConfig::parse("field = \"prime:13\"\nk = 10\nr = 10").is_err());
+    }
+}

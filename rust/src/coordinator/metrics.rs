@@ -1,0 +1,106 @@
+//! Lightweight metrics registry (no external deps): monotonic counters
+//! and duration histograms, JSON-dumpable, shared across service threads.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A set of named counters and latency recorders.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    latencies: BTreeMap<String, Vec<u64>>, // µs
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn observe(&self, name: &str, d: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies
+            .entry(name.to_string())
+            .or_default()
+            .push(d.as_micros() as u64);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner
+            .lock()
+            .unwrap()
+            .counters
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// (count, p50, p99, max) in µs for a latency series.
+    pub fn latency_summary(&self, name: &str) -> Option<(usize, u64, u64, u64)> {
+        let g = self.inner.lock().unwrap();
+        let v = g.latencies.get(name)?;
+        if v.is_empty() {
+            return None;
+        }
+        let mut s = v.clone();
+        s.sort_unstable();
+        let pct = |q: f64| s[((s.len() - 1) as f64 * q) as usize];
+        Some((s.len(), pct(0.5), pct(0.99), *s.last().unwrap()))
+    }
+
+    /// JSON dump of all counters and latency summaries.
+    pub fn to_json(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut parts = Vec::new();
+        for (k, v) in &g.counters {
+            parts.push(format!("\"{k}\":{v}"));
+        }
+        for (k, v) in &g.latencies {
+            if v.is_empty() {
+                continue;
+            }
+            let mut s = v.clone();
+            s.sort_unstable();
+            let pct = |q: f64| s[((s.len() - 1) as f64 * q) as usize];
+            parts.push(format!(
+                "\"{k}\":{{\"count\":{},\"p50_us\":{},\"p99_us\":{},\"max_us\":{}}}",
+                s.len(),
+                pct(0.5),
+                pct(0.99),
+                s.last().unwrap()
+            ));
+        }
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_latencies() {
+        let m = Metrics::new();
+        m.incr("requests", 2);
+        m.incr("requests", 3);
+        assert_eq!(m.counter("requests"), 5);
+        m.observe("encode", Duration::from_micros(100));
+        m.observe("encode", Duration::from_micros(300));
+        let (n, p50, _, max) = m.latency_summary("encode").unwrap();
+        assert_eq!(n, 2);
+        assert!(p50 >= 100 && max == 300);
+        let j = m.to_json();
+        assert!(j.contains("\"requests\":5"));
+        assert!(j.contains("\"encode\""));
+    }
+}

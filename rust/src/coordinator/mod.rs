@@ -1,0 +1,25 @@
+//! The deployable layer: configuration, job execution, verification,
+//! metrics, and a threaded batch-encode service.
+//!
+//! A [`JobConfig`] describes one decentralized-encoding deployment (field,
+//! code, K/R/W, ports, cost model, algorithm request); [`job::EncodeJob`]
+//! plans it (via [`framework::plan`](crate::framework::plan)), executes it
+//! on the round engine, verifies the coded output against an oracle
+//! (native matrix math or the PJRT artifact), and emits a
+//! [`job::JobReport`] with the paper's cost metrics.
+//!
+//! [`service::EncodeService`] is the long-running form: worker threads
+//! consume encode requests from a queue and run the bulk-encode hot path
+//! through the AOT-compiled kernel (`runtime::GfEncoder`) — the
+//! "request path never touches Python" property in action.
+
+pub mod config;
+pub mod job;
+pub mod metrics;
+pub mod service;
+pub mod verify;
+
+pub use config::JobConfig;
+pub use job::{EncodeJob, JobReport};
+pub use metrics::Metrics;
+pub use service::{EncodeRequest, EncodeResponse, EncodeService};

@@ -1,0 +1,181 @@
+//! The batch-encode service — the serving-path face of the system.
+//!
+//! Worker threads consume [`EncodeRequest`]s (K payload rows of arbitrary
+//! width) from a bounded queue, chunk them to the AOT artifact's width
+//! `W`, run the PJRT-compiled GF(p) kernel (`runtime::GfEncoder`) and
+//! reply on a per-request channel. Bounded-queue submission gives natural
+//! backpressure; metrics record throughput and latency percentiles.
+//!
+//! (The offline build has no tokio; std threads + mpsc channels provide
+//! the same architecture — see DESIGN.md §1.)
+
+use super::metrics::Metrics;
+use crate::gf::{Field, Mat};
+use crate::runtime::Runtime;
+use anyhow::{Context, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A batch of payloads to encode: `x[k]` is source `k`'s row (all rows
+/// the same width, any width — the service chunks internally).
+pub struct EncodeRequest {
+    pub x: Vec<Vec<u64>>,
+    /// Reply channel.
+    pub reply: mpsc::Sender<EncodeResponse>,
+}
+
+/// Parity rows `y[r]`, one per sink, same width as the request.
+#[derive(Debug)]
+pub struct EncodeResponse {
+    pub y: Result<Vec<Vec<u64>>>,
+    pub wall: std::time::Duration,
+}
+
+/// A running encode service over a fixed code (parity matrix).
+pub struct EncodeService {
+    tx: Option<mpsc::SyncSender<EncodeRequest>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    k: usize,
+}
+
+impl EncodeService {
+    /// Start `n_workers` threads, each with its own compiled encoder for
+    /// `(K, R, W=chunk)` from the artifact directory.
+    pub fn start<F: Field>(
+        f: &F,
+        parity: &Mat,
+        artifacts_dir: &Path,
+        chunk_w: usize,
+        n_workers: usize,
+        queue_depth: usize,
+    ) -> Result<Self> {
+        let (k, r) = (parity.rows, parity.cols);
+        let a_flat: Arc<Vec<u64>> =
+            Arc::new((0..k).flat_map(|i| parity.row(i).to_vec()).collect());
+        let (tx, rx) = mpsc::sync_channel::<EncodeRequest>(queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let q = f.order();
+        let mut workers = Vec::new();
+        for wid in 0..n_workers {
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            let stop = stop.clone();
+            let a_flat = a_flat.clone();
+            let dir = artifacts_dir.to_path_buf();
+            let handle = std::thread::Builder::new()
+                .name(format!("encode-worker-{wid}"))
+                .spawn(move || {
+                    // Per-worker PJRT session + compiled executable: the
+                    // request path never leaves rust.
+                    let rt = match Runtime::cpu() {
+                        Ok(rt) => rt,
+                        Err(e) => {
+                            metrics.incr("worker_init_failures", 1);
+                            eprintln!("worker {wid}: PJRT init failed: {e:#}");
+                            return;
+                        }
+                    };
+                    let enc = match rt.load_encoder(&dir, k, r, chunk_w, q) {
+                        Ok(enc) => enc,
+                        Err(e) => {
+                            metrics.incr("worker_init_failures", 1);
+                            eprintln!("worker {wid}: encoder load failed: {e:#}");
+                            return;
+                        }
+                    };
+                    loop {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let req = {
+                            let guard = rx.lock().unwrap();
+                            match guard.recv_timeout(std::time::Duration::from_millis(50)) {
+                                Ok(req) => req,
+                                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                            }
+                        };
+                        let t0 = Instant::now();
+                        let y = encode_chunked(&enc, &a_flat, &req.x, k, r, chunk_w);
+                        let wall = t0.elapsed();
+                        metrics.incr("requests", 1);
+                        if y.is_err() {
+                            metrics.incr("failures", 1);
+                        }
+                        metrics.observe("encode_latency", wall);
+                        let _ = req.reply.send(EncodeResponse { y, wall });
+                    }
+                })
+                .context("spawning worker")?;
+            workers.push(handle);
+        }
+        Ok(EncodeService {
+            tx: Some(tx),
+            workers,
+            metrics,
+            stop,
+            k,
+        })
+    }
+
+    /// Submit a batch (blocks when the queue is full — backpressure).
+    pub fn submit(&self, x: Vec<Vec<u64>>) -> Result<mpsc::Receiver<EncodeResponse>> {
+        anyhow::ensure!(x.len() == self.k, "need K = {} payload rows", self.k);
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .context("service stopped")?
+            .send(EncodeRequest { x, reply })
+            .ok()
+            .context("service stopped")?;
+        Ok(rx)
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close the queue
+        self.stop.store(true, Ordering::Relaxed);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Encode arbitrary-width payloads by chunking to the artifact width.
+fn encode_chunked(
+    enc: &crate::runtime::GfEncoder,
+    a_flat: &[u64],
+    x: &[Vec<u64>],
+    k: usize,
+    r: usize,
+    chunk_w: usize,
+) -> Result<Vec<Vec<u64>>> {
+    let width = x.first().map_or(0, |row| row.len());
+    anyhow::ensure!(
+        x.iter().all(|row| row.len() == width),
+        "ragged payload rows"
+    );
+    let mut out = vec![Vec::with_capacity(width); r];
+    let mut off = 0;
+    while off < width {
+        let take = chunk_w.min(width - off);
+        // Zero-pad the tail chunk to the artifact width.
+        let mut x_flat = vec![0u64; k * chunk_w];
+        for (i, row) in x.iter().enumerate() {
+            x_flat[i * chunk_w..i * chunk_w + take].copy_from_slice(&row[off..off + take]);
+        }
+        let y = enc.encode_u64(a_flat, &x_flat)?;
+        for (j, row) in out.iter_mut().enumerate() {
+            row.extend_from_slice(&y[j * chunk_w..j * chunk_w + take]);
+        }
+        off += take;
+    }
+    Ok(out)
+}

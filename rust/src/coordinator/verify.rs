@@ -1,0 +1,72 @@
+//! Output verification: the simulated collective's coded packets must
+//! equal `x·A` computed by an independent oracle — either native rust
+//! matrix math or the AOT-compiled PJRT artifact (proving the three-layer
+//! stack agrees end-to-end).
+
+use crate::gf::{Field, Mat};
+use crate::net::{pkt_zero, Packet};
+use std::path::Path;
+
+/// Native oracle: direct `x·A` over packets (delayed-reduction lincomb).
+pub fn native<F: Field>(f: &F, a: &Mat, inputs: &[Packet], coded: &[Packet]) -> bool {
+    let w = inputs.first().map_or(0, |p| p.len());
+    if coded.len() != a.cols {
+        return false;
+    }
+    for j in 0..a.cols {
+        let mut want = pkt_zero(w);
+        let terms: Vec<(u64, &[u64])> = (0..a.rows)
+            .map(|i| (a[(i, j)], inputs[i].as_slice()))
+            .collect();
+        f.lincomb_into(&mut want, &terms);
+        if coded[j] != want {
+            return false;
+        }
+    }
+    true
+}
+
+/// PJRT oracle: run the AOT-compiled `encode` artifact and compare.
+/// Requires a matching artifact shape (K, R, W, p) in `dir`.
+pub fn pjrt<F: Field>(
+    dir: &Path,
+    f: &F,
+    a: &Mat,
+    inputs: &[Packet],
+    coded: &[Packet],
+) -> anyhow::Result<bool> {
+    let (k, r) = (a.rows, a.cols);
+    let w = inputs.first().map_or(0, |p| p.len());
+    let rt = crate::runtime::Runtime::cpu()?;
+    let enc = rt.load_encoder(dir, k, r, w, f.order())?;
+    let a_flat: Vec<u64> = (0..k).flat_map(|i| a.row(i).to_vec()).collect();
+    let x_flat: Vec<u64> = inputs.iter().flatten().copied().collect();
+    let y = enc.encode_u64(&a_flat, &x_flat)?;
+    // y is row-major R×W; coded[j] should equal row j.
+    Ok((0..r).all(|j| coded[j][..] == y[j * w..(j + 1) * w]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::GfPrime;
+
+    #[test]
+    fn native_accepts_correct_and_rejects_wrong() {
+        let f = GfPrime::default_field();
+        let a = Mat::random(&f, 4, 2, 3);
+        let inputs: Vec<Packet> = (0..4u64).map(|i| vec![i + 1, i + 2]).collect();
+        let mut coded: Vec<Packet> = (0..2)
+            .map(|j| {
+                let mut acc = pkt_zero(2);
+                for i in 0..4 {
+                    crate::net::pkt_add_scaled(&f, &mut acc, a[(i, j)], &inputs[i]);
+                }
+                acc
+            })
+            .collect();
+        assert!(native(&f, &a, &inputs, &coded));
+        coded[1][0] ^= 1;
+        assert!(!native(&f, &a, &inputs, &coded));
+    }
+}

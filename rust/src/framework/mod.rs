@@ -1,0 +1,287 @@
+//! The paper's decentralized-encoding frameworks (§III, Appendix B) and
+//! every closed-form cost expression (Table I, Lemmas 1–4, Theorems 1–9,
+//! Corollary 1, Appendix A).
+//!
+//! [`plan`] is the entry point used by the coordinator: given a code /
+//! matrix and the network parameters, it picks the cheapest applicable
+//! algorithm (specific when the structure admits it, universal otherwise)
+//! and returns a ready-to-run [`Collective`](crate::net::Collective).
+
+pub mod costs;
+pub mod nonsystematic;
+pub mod systematic;
+
+pub use nonsystematic::NonSystematicEncode;
+pub use systematic::{A2aAlgo, Layout, SystematicEncode};
+
+use crate::codes::GrsCode;
+use crate::gf::{Field, Mat};
+use crate::net::Packet;
+use std::sync::Arc;
+
+/// What the planner decided to run (reported in job metrics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanChoice {
+    /// §VI specific path: Cauchy blocks via two draw-and-looses.
+    RsSpecific,
+    /// §IV universal path: prepare-and-shoot per block.
+    Universal,
+    /// Jeong et al. \[21\] baseline.
+    MultiReduce,
+    /// Naive dense transfers.
+    Direct,
+}
+
+impl std::fmt::Display for PlanChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            PlanChoice::RsSpecific => "rs-specific",
+            PlanChoice::Universal => "universal",
+            PlanChoice::MultiReduce => "multi-reduce",
+            PlanChoice::Direct => "direct",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Requested algorithm (config); `Auto` lets the planner decide.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AlgoRequest {
+    #[default]
+    Auto,
+    RsSpecific,
+    Universal,
+    MultiReduce,
+    Direct,
+}
+
+impl std::str::FromStr for AlgoRequest {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "auto" => AlgoRequest::Auto,
+            "rs-specific" | "specific" => AlgoRequest::RsSpecific,
+            "universal" => AlgoRequest::Universal,
+            "multi-reduce" | "multireduce" => AlgoRequest::MultiReduce,
+            "direct" => AlgoRequest::Direct,
+            other => anyhow::bail!("unknown algorithm {other:?}"),
+        })
+    }
+}
+
+/// A planned systematic encoding job.
+pub struct Plan {
+    pub choice: PlanChoice,
+    pub job: Box<dyn crate::net::Collective>,
+    pub layout: Layout,
+}
+
+/// Predicted `(C1, C2)` of the specific (§VI) and universal (§IV) paths
+/// for a structured code, from the paper's formulas — used by the
+/// cost-aware `Auto` planner. Returns `(specific, universal)`.
+pub fn predict_costs(code: &GrsCode, w: u64, p: u64) -> ((u64, u64), (u64, u64)) {
+    let (k, r) = (code.k() as u64, code.r() as u64);
+    let block = k.min(r);
+    // Specific: two draw-and-loose passes per Theorem 7/9.
+    let design = code
+        .alpha_designs
+        .first()
+        .expect("structured code has designs");
+    let z = design.z;
+    let m = (block / z).max(1);
+    let spec_a2a = costs::theorem7_cauchy(m, design.p_base, design.h, p);
+    let univ_a2a = costs::theorem3_universal(block, p);
+    let scale = |a2a: (u64, u64)| (a2a.0, a2a.1 * w);
+    let (spec, univ) = if k >= r {
+        (
+            costs::theorem1_framework(scale(spec_a2a), k, r, w, p),
+            costs::theorem1_framework(scale(univ_a2a), k, r, w, p),
+        )
+    } else {
+        (
+            costs::theorem2_framework(scale(spec_a2a), k, r, w, p),
+            costs::theorem2_framework(scale(univ_a2a), k, r, w, p),
+        )
+    };
+    (spec, univ)
+}
+
+/// Plan a systematic encode of `code` (or of an explicit parity matrix
+/// when `code` is `None`) under the given request. `Auto` compares the
+/// paper's cost formulas under `model` (falling back to a
+/// bandwidth-dominated default) and picks the cheaper of specific /
+/// universal — reproducing Remark 8's guidance that the specific path
+/// only pays off when `H` is large relative to the doubled round count.
+pub fn plan<F: Field>(
+    f: &F,
+    code: Option<&GrsCode>,
+    parity: Option<Arc<Mat>>,
+    inputs: Vec<Packet>,
+    p: usize,
+    request: AlgoRequest,
+) -> anyhow::Result<Plan> {
+    plan_with_model(f, code, parity, inputs, p, request, None)
+}
+
+/// [`plan`] with an explicit cost model for the `Auto` decision.
+pub fn plan_with_model<F: Field>(
+    f: &F,
+    code: Option<&GrsCode>,
+    parity: Option<Arc<Mat>>,
+    inputs: Vec<Packet>,
+    p: usize,
+    request: AlgoRequest,
+    model: Option<crate::net::CostModel>,
+) -> anyhow::Result<Plan> {
+    let a: Arc<Mat> = match (&parity, code) {
+        (Some(m), _) => m.clone(),
+        (None, Some(c)) => Arc::new(c.parity_matrix(f)),
+        (None, None) => anyhow::bail!("plan needs a code or a parity matrix"),
+    };
+    let layout = Layout {
+        k: a.rows,
+        r: a.cols,
+    };
+    // The specific path applies when the code carries structured designs
+    // and the aspect ratio is divisible (Remark 4).
+    let specific_ok = code.is_some_and(|c| {
+        let (k, r) = (c.k(), c.r());
+        let div_ok = (k >= r && k % r == 0) || (k < r && r % k == 0);
+        let designs_ok = if k >= r {
+            c.alpha_designs.len() == k.div_ceil(r.max(1)) && c.beta_design.is_some()
+        } else {
+            !c.alpha_designs.is_empty()
+        };
+        div_ok && designs_ok
+    });
+    let choice = match request {
+        AlgoRequest::Auto => {
+            if specific_ok {
+                // Cost-aware: compare the formula-predicted costs.
+                let w = inputs.first().map_or(1, |x| x.len()) as u64;
+                let (spec, univ) = predict_costs(code.expect("specific_ok"), w, p as u64);
+                let model = model
+                    .unwrap_or_else(|| crate::net::CostModel::bandwidth_bound(f.bits()));
+                if model.cost(spec.0, spec.1) <= model.cost(univ.0, univ.1) {
+                    PlanChoice::RsSpecific
+                } else {
+                    PlanChoice::Universal
+                }
+            } else {
+                PlanChoice::Universal
+            }
+        }
+        AlgoRequest::RsSpecific => {
+            anyhow::ensure!(specific_ok, "specific algorithm requires a structured GRS code");
+            PlanChoice::RsSpecific
+        }
+        AlgoRequest::Universal => PlanChoice::Universal,
+        AlgoRequest::MultiReduce => PlanChoice::MultiReduce,
+        AlgoRequest::Direct => PlanChoice::Direct,
+    };
+    let job: Box<dyn crate::net::Collective> = match choice {
+        PlanChoice::RsSpecific => Box::new(SystematicEncode::new_rs(
+            f.clone(),
+            code.expect("specific_ok implies code"),
+            inputs,
+            p,
+        )?),
+        PlanChoice::Universal => Box::new(SystematicEncode::new(
+            f.clone(),
+            a,
+            inputs,
+            p,
+            A2aAlgo::Universal,
+        )?),
+        PlanChoice::MultiReduce => Box::new(SystematicEncode::new(
+            f.clone(),
+            a,
+            inputs,
+            p,
+            A2aAlgo::MultiReduce,
+        )?),
+        PlanChoice::Direct => {
+            let sources: Vec<usize> = (0..layout.k).collect();
+            let sinks: Vec<usize> = (layout.k..layout.n()).collect();
+            Box::new(crate::collectives::DirectEncode::new(
+                f.clone(),
+                sources,
+                sinks,
+                p,
+                a,
+                inputs,
+            ))
+        }
+    };
+    Ok(Plan {
+        choice,
+        job,
+        layout,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{run, Sim};
+
+    #[test]
+    fn auto_is_cost_aware() {
+        let f = crate::gf::GfPrime::default_field();
+        // Large structured code: specific's Θ(log R) C2 wins under the
+        // bandwidth-dominated default model.
+        let code = GrsCode::structured(&f, 256, 256, 2).unwrap();
+        let inputs: Vec<Packet> = (0..256u64).map(|i| vec![i + 1]).collect();
+        let plan_big = plan(&f, Some(&code), None, inputs, 1, AlgoRequest::Auto).unwrap();
+        assert_eq!(plan_big.choice, PlanChoice::RsSpecific);
+        // Small code: the doubled rounds are not worth it (Remark 8).
+        let code = GrsCode::structured(&f, 16, 4, 2).unwrap();
+        let inputs: Vec<Packet> = (0..16u64).map(|i| vec![i + 1]).collect();
+        let plan_small = plan(&f, Some(&code), None, inputs, 1, AlgoRequest::Auto).unwrap();
+        assert_eq!(plan_small.choice, PlanChoice::Universal);
+        // Latency-dominated model: universal even at scale (half the rounds).
+        let code = GrsCode::structured(&f, 256, 256, 2).unwrap();
+        let inputs: Vec<Packet> = (0..256u64).map(|i| vec![i + 1]).collect();
+        let plan_lat = plan_with_model(
+            &f,
+            Some(&code),
+            None,
+            inputs,
+            1,
+            AlgoRequest::Auto,
+            Some(crate::net::CostModel::latency_bound(20)),
+        )
+        .unwrap();
+        assert_eq!(plan_lat.choice, PlanChoice::Universal);
+    }
+
+    #[test]
+    fn auto_falls_back_to_universal() {
+        let f = crate::gf::GfPrime::default_field();
+        let code = GrsCode::plain(&f, (1..=10).collect(), (100..104).collect()).unwrap();
+        let inputs: Vec<Packet> = (0..10u64).map(|i| vec![i + 1]).collect();
+        let plan = plan(&f, Some(&code), None, inputs, 1, AlgoRequest::Auto).unwrap();
+        assert_eq!(plan.choice, PlanChoice::Universal);
+    }
+
+    #[test]
+    fn all_choices_produce_identical_codewords() {
+        let f = crate::gf::GfPrime::default_field();
+        let code = GrsCode::structured(&f, 16, 8, 2).unwrap();
+        let inputs: Vec<Packet> = (0..16u64).map(|i| vec![f.elem(i * 3 + 2)]).collect();
+        let mut outs = Vec::new();
+        for req in [
+            AlgoRequest::RsSpecific,
+            AlgoRequest::Universal,
+            AlgoRequest::MultiReduce,
+            AlgoRequest::Direct,
+        ] {
+            let mut pl = plan(&f, Some(&code), None, inputs.clone(), 1, req).unwrap();
+            run(&mut Sim::new(1), pl.job.as_mut()).unwrap();
+            let o = pl.job.outputs();
+            let coded: Vec<Packet> = (16..24).map(|pid| o[&pid].clone()).collect();
+            outs.push(coded);
+        }
+        assert!(outs.windows(2).all(|w| w[0] == w[1]));
+    }
+}

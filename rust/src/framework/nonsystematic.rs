@@ -1,0 +1,366 @@
+//! Appendix B: decentralized encoding for **non-systematic** codes
+//! `(x̃_0..x̃_{N−1}) = (x_0..x_{K−1})·G`, `G ∈ F^{K×N}`.
+//!
+//! * **K > R** (App. B-A): pad `G' = [G; B] ∈ F^{N×N}` (sinks hold zero
+//!   packets, `B` arbitrary) and run ONE all-to-all encode over all `N`
+//!   processors; processor `j` ends with codeword coordinate `j`.
+//! * **K ≤ R** (App. B-B, Fig. 9): sinks form a `K×⌊R/K⌋` grid with the
+//!   `L = R mod K` leftover sinks stacked one-per-column at the bottom;
+//!   sources are a prepended column. Phase 1: `K` row broadcasts of
+//!   `x_k`. Phase 2: column `m` (height `K + e_m`) runs an A2A on
+//!   `G'_m = [[G_m | G_{M,m}]; [B]]` — stacked sinks hold zeros and
+//!   receive the leftover coordinates; simultaneously the *sources* run
+//!   one A2A among themselves for coordinates `0..K` (the paper's grid
+//!   only covers the sink coordinates; the source column is
+//!   processor-disjoint from the sink columns, so this shares rounds).
+//!
+//! Coordinate ownership: coordinate `j` ends at processor `j` in both
+//! cases (sources `0..K`, sinks `K..N`).
+
+use super::systematic::Layout;
+use crate::collectives::{Par, Pipeline, PrepareShoot, StageBuilder, TreeBroadcast};
+use crate::gf::{Field, Mat};
+use crate::net::{pkt_zero, Collective, Msg, Packet, ProcId};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A non-systematic encoding job. Processor ids: sources `0..K`, sinks
+/// `K..K+R` (`N = K + R` codeword coordinates).
+pub struct NonSystematicEncode {
+    pipe: Pipeline,
+    layout: Layout,
+}
+
+impl NonSystematicEncode {
+    /// `g`: the `K×N` generator; `inputs`: the `K` source packets.
+    pub fn new<F: Field>(
+        f: F,
+        g: Arc<Mat>,
+        inputs: Vec<Packet>,
+        p: usize,
+    ) -> anyhow::Result<Self> {
+        let k = g.rows;
+        let n = g.cols;
+        anyhow::ensure!(n >= k, "generator must have N ≥ K");
+        let r = n - k;
+        anyhow::ensure!(inputs.len() == k);
+        let layout = Layout { k, r };
+        let w = inputs.first().map_or(0, |x| x.len());
+        let pipe = if k > r {
+            Self::build_k_gt_r(f, g, inputs, p, w, layout)
+        } else {
+            Self::build_k_le_r(f, g, inputs, p, w, layout)?
+        };
+        Ok(NonSystematicEncode { pipe, layout })
+    }
+
+    /// K > R: one N×N all-to-all encode on `G' = [G; 0]`.
+    fn build_k_gt_r<F: Field>(
+        f: F,
+        g: Arc<Mat>,
+        inputs: Vec<Packet>,
+        p: usize,
+        w: usize,
+        layout: Layout,
+    ) -> Pipeline {
+        let (k, n) = (layout.k, layout.n());
+        let stage: StageBuilder = Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            let gp = Mat::from_fn(n, n, |row, col| if row < k { g[(row, col)] } else { 0 });
+            let procs: Vec<ProcId> = (0..n).collect();
+            let ins: Vec<Packet> = (0..n)
+                .map(|i| prev.get(&i).cloned().unwrap_or_else(|| pkt_zero(w)))
+                .collect();
+            Box::new(PrepareShoot::new(f.clone(), procs, p, Arc::new(gp), ins))
+                as Box<dyn Collective>
+        });
+        let init: HashMap<ProcId, Packet> = inputs.into_iter().enumerate().collect();
+        Pipeline::from_inputs(init, vec![stage])
+    }
+
+    /// K ≤ R: the Fig. 9 grid.
+    fn build_k_le_r<F: Field>(
+        f: F,
+        g: Arc<Mat>,
+        inputs: Vec<Packet>,
+        p: usize,
+        w: usize,
+        layout: Layout,
+    ) -> anyhow::Result<Pipeline> {
+        let (k, r) = (layout.k, layout.r);
+        let full_cols = r / k; // grid columns of height K
+        let l = r % k; // leftover sinks, stacked one per column
+        anyhow::ensure!(
+            l == 0 || l <= full_cols,
+            "cannot distribute {l} leftover sinks into {full_cols} columns"
+        );
+
+        // Phase 1: K row broadcasts (source kk → its row's grid sinks).
+        let phase1: StageBuilder = Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            let rows: Vec<Box<dyn Collective>> = (0..k)
+                .map(|kk| {
+                    let mut procs: Vec<ProcId> = vec![kk];
+                    for m in 0..full_cols {
+                        procs.push(k + m * k + kk);
+                    }
+                    Box::new(TreeBroadcast::new(procs, p, prev[&kk].clone()))
+                        as Box<dyn Collective>
+                })
+                .collect();
+            Box::new(Par::new(rows)) as Box<dyn Collective>
+        });
+
+        // Phase 2 (one Par): per-column A2As over the sinks, plus the
+        // source-column A2A for coordinates 0..K — all disjoint.
+        let phase2: StageBuilder = Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            let mut groups: Vec<Box<dyn Collective>> = Vec::with_capacity(full_cols + 1);
+            // Sources compute coordinates 0..K among themselves.
+            {
+                let procs: Vec<ProcId> = (0..k).collect();
+                let block = Mat::from_fn(k, k, |row, col| g[(row, col)]);
+                let ins: Vec<Packet> = procs.iter().map(|pid| prev[pid].clone()).collect();
+                groups.push(Box::new(PrepareShoot::new(
+                    f.clone(),
+                    procs,
+                    p,
+                    Arc::new(block),
+                    ins,
+                )));
+            }
+            // Sink column m computes coordinates [K+mK, K+(m+1)K) plus,
+            // if it hosts a stacked sink, coordinate K + full_cols·K + m.
+            for m in 0..full_cols {
+                let extra = usize::from(m < l);
+                let size = k + extra;
+                let mut procs: Vec<ProcId> = (0..k).map(|kk| k + m * k + kk).collect();
+                if extra == 1 {
+                    procs.push(k + full_cols * k + m);
+                }
+                let block = Mat::from_fn(size, size, |row, col| {
+                    if row >= k {
+                        return 0; // B rows — stacked sink holds zero
+                    }
+                    let coord = if col < k {
+                        k + m * k + col
+                    } else {
+                        k + full_cols * k + m
+                    };
+                    g[(row, coord)]
+                });
+                let ins: Vec<Packet> = procs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, pid)| {
+                        if i < k {
+                            prev[pid].clone()
+                        } else {
+                            pkt_zero(w)
+                        }
+                    })
+                    .collect();
+                groups.push(Box::new(PrepareShoot::new(
+                    f.clone(),
+                    procs,
+                    p,
+                    Arc::new(block),
+                    ins,
+                )));
+            }
+            Box::new(Par::new(groups)) as Box<dyn Collective>
+        });
+
+        let init: HashMap<ProcId, Packet> = inputs.into_iter().enumerate().collect();
+        Ok(Pipeline::from_inputs(init, vec![phase1, phase2]))
+    }
+
+    /// Remark 9 + Appendix B: non-systematic **Lagrange** encoding on
+    /// structured points — every `K×K` block `L_m = V_α^{-1}·V_{β,m}` of
+    /// the Lagrange matrix is Cauchy-like with `u = v = 1`, so each grid
+    /// column (and the source column, for coordinates `0..K`) runs the
+    /// §VI two-pass draw-and-loose instead of the universal A2A.
+    /// Requires `K | N` (the code builder guarantees it).
+    pub fn new_lagrange<F: Field>(
+        f: F,
+        code: &crate::codes::LagrangeCode,
+        inputs: Vec<Packet>,
+        p: usize,
+    ) -> anyhow::Result<Self> {
+        let k = code.k();
+        let n = code.n();
+        anyhow::ensure!(n % k == 0 && n >= 2 * k, "need K | N with at least one worker block");
+        let alpha_design = code
+            .alpha_design
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("code must be built with LagrangeCode::structured"))?;
+        let beta_designs = code.beta_designs.clone();
+        anyhow::ensure!(beta_designs.len() == n / k);
+        anyhow::ensure!(inputs.len() == k);
+        let r = n - k;
+        let layout = Layout { k, r };
+        let full_cols = r / k;
+        let ones = vec![1u64; k];
+
+        // Phase 1: K row broadcasts (as in the universal K ≤ R path).
+        let phase1: StageBuilder = Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            let rows: Vec<Box<dyn Collective>> = (0..k)
+                .map(|kk| {
+                    let mut procs: Vec<ProcId> = vec![kk];
+                    for m in 0..full_cols {
+                        procs.push(k + m * k + kk);
+                    }
+                    Box::new(TreeBroadcast::new(procs, p, prev[&kk].clone()))
+                        as Box<dyn Collective>
+                })
+                .collect();
+            Box::new(Par::new(rows)) as Box<dyn Collective>
+        });
+
+        // Phase 2: sources run the block-0 Cauchy A2A (coordinates 0..K);
+        // sink column m runs block m+1 — all disjoint, shared rounds.
+        let phase2: StageBuilder = {
+            let f = f.clone();
+            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+                let mut groups: Vec<Box<dyn Collective>> = Vec::with_capacity(full_cols + 1);
+                for block in 0..=full_cols {
+                    let procs: Vec<ProcId> = if block == 0 {
+                        (0..k).collect()
+                    } else {
+                        (0..k).map(|kk| k + (block - 1) * k + kk).collect()
+                    };
+                    let ins: Vec<Packet> = procs.iter().map(|pid| prev[pid].clone()).collect();
+                    groups.push(Box::new(
+                        crate::collectives::CauchyA2A::new(
+                            f.clone(),
+                            procs,
+                            p,
+                            &alpha_design,
+                            &beta_designs[block],
+                            ones.clone(),
+                            ones.clone(),
+                            ins,
+                        )
+                        .expect("structured Lagrange designs validated"),
+                    ));
+                }
+                Box::new(Par::new(groups)) as Box<dyn Collective>
+            })
+        };
+
+        let init: HashMap<ProcId, Packet> = inputs.into_iter().enumerate().collect();
+        Ok(NonSystematicEncode {
+            pipe: Pipeline::from_inputs(init, vec![phase1, phase2]),
+            layout,
+        })
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// The full codeword in coordinate order (coordinate `j` lives at
+    /// processor `j`).
+    pub fn codeword(&self) -> Vec<Packet> {
+        let outs = self.pipe.outputs();
+        (0..self.layout.n()).map(|pid| outs[&pid].clone()).collect()
+    }
+}
+
+impl Collective for NonSystematicEncode {
+    fn participants(&self) -> Vec<ProcId> {
+        self.pipe.participants()
+    }
+    fn is_done(&self) -> bool {
+        self.pipe.is_done()
+    }
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        self.pipe.step(inbox)
+    }
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        self.pipe.outputs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{pkt_add_scaled, run, Sim};
+
+    fn oracle<F: Field>(f: &F, g: &Mat, inputs: &[Packet]) -> Vec<Packet> {
+        let w = inputs[0].len();
+        (0..g.cols)
+            .map(|j| {
+                let mut acc = pkt_zero(w);
+                for i in 0..g.rows {
+                    pkt_add_scaled(f, &mut acc, g[(i, j)], &inputs[i]);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    fn check(k: usize, r: usize, p: usize) {
+        let f = crate::gf::GfPrime::default_field();
+        let g = Arc::new(Mat::random(&f, k, k + r, (k * 100 + r) as u64));
+        let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![f.elem(i * 11 + 1)]).collect();
+        let mut job = NonSystematicEncode::new(f, g.clone(), inputs.clone(), p).unwrap();
+        run(&mut Sim::new(p), &mut job).unwrap();
+        assert_eq!(job.codeword(), oracle(&f, &g, &inputs), "K={k} R={r} p={p}");
+    }
+
+    #[test]
+    fn k_gt_r_single_a2a() {
+        check(12, 4, 1);
+        check(9, 2, 2);
+    }
+
+    #[test]
+    fn fig9_k4_r27() {
+        // Fig. 9: K = 4, R = 27 — 6 full columns + 3 stacked sinks.
+        check(4, 27, 1);
+    }
+
+    #[test]
+    fn k_le_r_exact_and_ragged_grids() {
+        check(4, 12, 1);
+        check(5, 5, 1);
+        check(3, 10, 2);
+        check(4, 9, 1);
+    }
+
+    #[test]
+    fn lagrange_specific_path_matches_universal() {
+        // Remark 9: the structured non-systematic Lagrange encode via
+        // Cauchy A2As equals the universal App-B encode of L_{α,β}.
+        let f = crate::gf::GfPrime::default_field();
+        for (k, n, ports) in [(8usize, 24usize, 1usize), (8, 32, 2), (16, 32, 1)] {
+            let code = crate::codes::LagrangeCode::structured(&f, k, n, 2).unwrap();
+            let g = Arc::new(code.matrix(&f));
+            let inputs: Vec<Packet> =
+                (0..k as u64).map(|i| vec![f.elem(i * 5 + 1), f.elem(i)]).collect();
+            let mut spec =
+                NonSystematicEncode::new_lagrange(f, &code, inputs.clone(), ports).unwrap();
+            let rep_s = run(&mut Sim::new(ports), &mut spec).unwrap();
+            let mut univ = NonSystematicEncode::new(f, g.clone(), inputs.clone(), ports).unwrap();
+            let rep_u = run(&mut Sim::new(ports), &mut univ).unwrap();
+            assert_eq!(spec.codeword(), univ.codeword(), "K={k} N={n}");
+            assert_eq!(spec.codeword(), oracle(&f, &g, &inputs), "K={k} N={n}");
+            // Both paths move data; costs differ per the §VI trade-off.
+            assert!(rep_s.c1 > 0 && rep_u.c1 > 0);
+        }
+    }
+
+    #[test]
+    fn lagrange_nonsystematic_generator() {
+        // LCC's non-systematic use case (Appendix B motivation).
+        let f = crate::gf::GfPrime::default_field();
+        let code = crate::codes::LagrangeCode::new(
+            (1..=4).collect(),
+            (100..112).collect(),
+        )
+        .unwrap();
+        let g = Arc::new(code.matrix(&f));
+        let inputs: Vec<Packet> = (0..4u64).map(|i| vec![i * 9 + 2]).collect();
+        let mut job = NonSystematicEncode::new(f, g.clone(), inputs.clone(), 1).unwrap();
+        run(&mut Sim::new(1), &mut job).unwrap();
+        assert_eq!(job.codeword(), oracle(&f, &g, &inputs));
+    }
+}

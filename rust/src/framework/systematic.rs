@@ -1,0 +1,531 @@
+//! The §III decentralized-encoding framework for systematic codes
+//! `G = [I | A]`: sources `0..K` hold data, sinks `K..K+R` require
+//! `x̃_r = Σ_k A[k][r]·x_k`.
+//!
+//! * **K ≥ R** (§III-A, Fig. 3): sources form an `R×M` grid
+//!   (`M = ⌈K/R⌉`); missing cells of the last column are filled by
+//!   *borrowing* sinks `T_r` (holding zero packets). Phase 1 runs `M`
+//!   parallel column all-to-all encodes on the stacked blocks
+//!   `A_m` (eq. (1)); phase 2 runs `R` parallel row reduces accumulating
+//!   the partials at each sink.
+//! * **K < R** (§III-B, Fig. 4): sinks form a `K×M` grid
+//!   (`M = ⌈R/K⌉`) with the sources as an extra column. Phase 1 runs `K`
+//!   parallel row broadcasts of `x_k`; phase 2 runs `M` parallel column
+//!   A2As on the concatenated blocks `A_m` (eq. (2)), borrowing `S_k` for
+//!   missing cells.
+//!
+//! Each column A2A is either universal ([`PrepareShoot`]), the
+//! [`MultiReduce`] baseline, or — for structured GRS codes — the §VI
+//! [`CauchyA2A`] (Theorems 6–9).
+
+use crate::codes::GrsCode;
+use crate::collectives::{
+    CauchyA2A, LocalOp, MultiReduce, Par, Pipeline, PrepareShoot, StageBuilder, TreeBroadcast,
+    TreeReduce,
+};
+use crate::gf::{Field, Mat};
+use crate::net::{pkt_zero, Collective, Msg, Packet, ProcId};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Which all-to-all encode implementation drives the column phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum A2aAlgo {
+    /// Prepare-and-shoot (§IV) — works for any matrix.
+    Universal,
+    /// All-gather + local combine (Jeong et al. \[21\] baseline).
+    MultiReduce,
+}
+
+/// Processor-id layout shared by all frameworks: sources then sinks.
+#[derive(Clone, Copy, Debug)]
+pub struct Layout {
+    pub k: usize,
+    pub r: usize,
+}
+
+impl Layout {
+    pub fn source(&self, k: usize) -> ProcId {
+        debug_assert!(k < self.k);
+        k
+    }
+    pub fn sink(&self, r: usize) -> ProcId {
+        debug_assert!(r < self.r);
+        self.k + r
+    }
+    pub fn n(&self) -> usize {
+        self.k + self.r
+    }
+}
+
+/// A fully-composed systematic encoding job (a [`Collective`]); outputs
+/// are the coded packets at the sink processors.
+pub struct SystematicEncode {
+    pipe: Pipeline,
+    layout: Layout,
+}
+
+impl SystematicEncode {
+    /// Universal/baseline path: encode arbitrary `A ∈ F^{K×R}`.
+    pub fn new<F: Field>(
+        f: F,
+        a: Arc<Mat>,
+        inputs: Vec<Packet>,
+        p: usize,
+        algo: A2aAlgo,
+    ) -> anyhow::Result<Self> {
+        let (k, r) = (a.rows, a.cols);
+        anyhow::ensure!(inputs.len() == k, "need K = {k} inputs");
+        let layout = Layout { k, r };
+        let w = inputs.first().map_or(0, |x| x.len());
+        let make_a2a = move |f: &F,
+                             procs: Vec<ProcId>,
+                             p: usize,
+                             c: Arc<Mat>,
+                             ins: Vec<Packet>|
+              -> Box<dyn Collective> {
+            match algo {
+                A2aAlgo::Universal => Box::new(PrepareShoot::new(f.clone(), procs, p, c, ins)),
+                A2aAlgo::MultiReduce => Box::new(MultiReduce::new(f.clone(), procs, p, c, ins)),
+            }
+        };
+        let pipe = if k >= r {
+            build_k_ge_r(f, a, inputs, p, w, layout, make_a2a)
+        } else {
+            build_k_lt_r(f, a, inputs, p, w, layout, make_a2a)
+        };
+        Ok(SystematicEncode { pipe, layout })
+    }
+
+    /// Specific path (§VI): systematic GRS on structured points; the
+    /// parity matrix is derived from the code. Requires `R | K` or `K | R`
+    /// (Remark 4), which [`GrsCode::structured`] guarantees.
+    pub fn new_rs<F: Field>(
+        f: F,
+        code: &GrsCode,
+        inputs: Vec<Packet>,
+        p: usize,
+    ) -> anyhow::Result<Self> {
+        let (k, r) = (code.k(), code.r());
+        anyhow::ensure!(inputs.len() == k);
+        let layout = Layout { k, r };
+        let w = inputs.first().map_or(0, |x| x.len());
+        let cauchy = code.cauchy();
+        if k >= r {
+            anyhow::ensure!(k % r == 0, "specific path needs R | K");
+            anyhow::ensure!(
+                code.alpha_designs.len() == k / r && code.beta_design.is_some(),
+                "code must be built with GrsCode::structured"
+            );
+            let beta_design = code.beta_design.clone().unwrap();
+            let designs = code.alpha_designs.clone();
+            let pipe = build_k_ge_r_with(
+                f.clone(),
+                inputs,
+                p,
+                w,
+                layout,
+                move |ff: &F, procs, pp, m, ins| -> Box<dyn Collective> {
+                    let pre: Vec<u64> =
+                        (0..r).map(|s| ff.inv(cauchy.phi(ff, m, s, r))).collect();
+                    let post: Vec<u64> = (0..r).map(|rr| cauchy.psi(ff, m, rr, r)).collect();
+                    Box::new(
+                        CauchyA2A::new(
+                            ff.clone(),
+                            procs,
+                            pp,
+                            &designs[m],
+                            &beta_design,
+                            pre,
+                            post,
+                            ins,
+                        )
+                        .expect("structured design validated"),
+                    )
+                },
+            );
+            Ok(SystematicEncode { pipe, layout })
+        } else {
+            anyhow::ensure!(r % k == 0, "specific path needs K | R");
+            let (_, beta_designs) =
+                GrsCode::structured_beta_designs(&f, k, r, code.alpha_designs[0].p_base)?;
+            let alpha_design = code.alpha_designs[0].clone();
+            let uinv: Vec<u64> = code.u.iter().map(|&x| f.inv(x)).collect();
+            let v = code.v.clone();
+            let pipe = build_k_lt_r_with(
+                f.clone(),
+                inputs,
+                p,
+                w,
+                layout,
+                move |ff, procs, pp, m, ins| {
+                    let post: Vec<u64> = v[m * k..(m + 1) * k].to_vec();
+                    Box::new(
+                        CauchyA2A::new(
+                            ff.clone(),
+                            procs,
+                            pp,
+                            &alpha_design,
+                            &beta_designs[m],
+                            uinv.clone(),
+                            post,
+                            ins,
+                        )
+                        .expect("structured design validated"),
+                    )
+                },
+            );
+            Ok(SystematicEncode { pipe, layout })
+        }
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    /// Coded packets in sink order `T_0..T_{R−1}`.
+    pub fn coded(&self) -> Vec<Packet> {
+        let outs = self.pipe.outputs();
+        (0..self.layout.r)
+            .map(|r| outs[&self.layout.sink(r)].clone())
+            .collect()
+    }
+}
+
+/// K ≥ R, universal/baseline: generic over the block-A2A factory
+/// (signature: field, procs, ports, block matrix, inputs).
+fn build_k_ge_r<F: Field>(
+    f: F,
+    a: Arc<Mat>,
+    inputs: Vec<Packet>,
+    p: usize,
+    w: usize,
+    layout: Layout,
+    make_a2a: impl Fn(&F, Vec<ProcId>, usize, Arc<Mat>, Vec<Packet>) -> Box<dyn Collective>
+        + 'static,
+) -> Pipeline {
+    let (k, r) = (layout.k, layout.r);
+    let m_cols = k.div_ceil(r);
+    let f2 = f.clone();
+    build_k_ge_r_with(f2, inputs, p, w, layout, move |ff, procs, pp, m, ins| {
+        // Block A_m = rows [mR, (m+1)R) of A, zero-padded past row K
+        // (borrowed processors hold zero data; B is arbitrary).
+        let block = Mat::from_fn(r, r, |s, c| {
+            let row = m * r + s;
+            if row < k {
+                a[(row, c)]
+            } else {
+                0
+            }
+        });
+        let _ = m_cols;
+        make_a2a(ff, procs, pp, Arc::new(block), ins)
+    })
+}
+
+/// K ≥ R grid scaffolding, generic over a per-column A2A factory
+/// (receives the *block index m*).
+fn build_k_ge_r_with<F: Field>(
+    f: F,
+    inputs: Vec<Packet>,
+    p: usize,
+    w: usize,
+    layout: Layout,
+    make_block: impl Fn(&F, Vec<ProcId>, usize, usize, Vec<Packet>) -> Box<dyn Collective> + 'static,
+) -> Pipeline {
+    let (k, r) = (layout.k, layout.r);
+    let m_cols = k.div_ceil(r);
+    // Grid cell (row s, col m) → processor: source s + mR, or the
+    // borrowed sink T_s when s + mR ≥ K (Fig. 3).
+    let cell = move |s: usize, m: usize| -> ProcId {
+        let idx = s + m * r;
+        if idx < k {
+            layout.source(idx)
+        } else {
+            layout.sink(s)
+        }
+    };
+
+    // Phase 1: M parallel column A2As.
+    let phase1: StageBuilder = {
+        let f = f.clone();
+        Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            let cols: Vec<Box<dyn Collective>> = (0..m_cols)
+                .map(|m| {
+                    let procs: Vec<ProcId> = (0..r).map(|s| cell(s, m)).collect();
+                    let ins: Vec<Packet> = (0..r)
+                        .map(|s| {
+                            if s + m * r < k {
+                                prev[&cell(s, m)].clone()
+                            } else {
+                                pkt_zero(w) // borrowed sink: zero data
+                            }
+                        })
+                        .collect();
+                    make_block(&f, procs, p, m, ins)
+                })
+                .collect();
+            Box::new(Par::new(cols)) as Box<dyn Collective>
+        })
+    };
+
+    // Phase 2: R parallel row reduces rooted at the sinks.
+    let phase2: StageBuilder = {
+        let f = f.clone();
+        Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            let rows: Vec<Box<dyn Collective>> = (0..r)
+                .map(|s| {
+                    let mut procs: Vec<ProcId> = vec![layout.sink(s)];
+                    for m in 0..m_cols {
+                        let pid = cell(s, m);
+                        if pid != layout.sink(s) {
+                            procs.push(pid);
+                        }
+                    }
+                    Box::new(TreeReduce::from_outputs(f.clone(), procs, p, prev, w))
+                        as Box<dyn Collective>
+                })
+                .collect();
+            Box::new(Par::new(rows)) as Box<dyn Collective>
+        })
+    };
+
+    let init: HashMap<ProcId, Packet> = inputs
+        .into_iter()
+        .enumerate()
+        .map(|(i, pkt)| (layout.source(i), pkt))
+        .collect();
+    Pipeline::from_inputs(init, vec![phase1, phase2])
+}
+
+/// K < R, universal/baseline.
+fn build_k_lt_r<F: Field>(
+    f: F,
+    a: Arc<Mat>,
+    inputs: Vec<Packet>,
+    p: usize,
+    w: usize,
+    layout: Layout,
+    make_a2a: impl Fn(&F, Vec<ProcId>, usize, Arc<Mat>, Vec<Packet>) -> Box<dyn Collective>
+        + 'static,
+) -> Pipeline {
+    let (k, r) = (layout.k, layout.r);
+    build_k_lt_r_with(f, inputs, p, w, layout, move |ff, procs, pp, m, ins| {
+        // Block A_m = columns [mK, (m+1)K) of A, zero-padded past col R
+        // (borrowed sources require no packet; B is arbitrary).
+        let block = Mat::from_fn(k, k, |row, c| {
+            let col = m * k + c;
+            if col < r {
+                a[(row, col)]
+            } else {
+                0
+            }
+        });
+        make_a2a(ff, procs, pp, Arc::new(block), ins)
+    })
+}
+
+/// K < R grid scaffolding, generic over a per-column A2A factory.
+fn build_k_lt_r_with<F: Field>(
+    f: F,
+    inputs: Vec<Packet>,
+    p: usize,
+    w: usize,
+    layout: Layout,
+    make_block: impl Fn(&F, Vec<ProcId>, usize, usize, Vec<Packet>) -> Box<dyn Collective> + 'static,
+) -> Pipeline {
+    let (k, r) = (layout.k, layout.r);
+    let m_cols = r.div_ceil(k);
+    // Grid cell (row kk, col m) → sink T_{kk + mK}, or borrowed source
+    // S_kk when the sink does not exist (Fig. 4).
+    let cell = move |kk: usize, m: usize| -> ProcId {
+        let idx = kk + m * k;
+        if idx < r {
+            layout.sink(idx)
+        } else {
+            layout.source(kk)
+        }
+    };
+
+    // Phase 1: K parallel row broadcasts (source → its row's sinks).
+    let phase1: StageBuilder = {
+        let f = f.clone();
+        let _ = &f;
+        Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            let rows: Vec<Box<dyn Collective>> = (0..k)
+                .map(|kk| {
+                    let mut procs: Vec<ProcId> = vec![layout.source(kk)];
+                    for m in 0..m_cols {
+                        let pid = cell(kk, m);
+                        if pid != layout.source(kk) {
+                            procs.push(pid);
+                        }
+                    }
+                    Box::new(TreeBroadcast::new(procs, p, prev[&layout.source(kk)].clone()))
+                        as Box<dyn Collective>
+                })
+                .collect();
+            Box::new(Par::new(rows)) as Box<dyn Collective>
+        })
+    };
+
+    // Phase 2: M parallel column A2As on A_m (K×K).
+    let phase2: StageBuilder = {
+        let f = f.clone();
+        Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            let cols: Vec<Box<dyn Collective>> = (0..m_cols)
+                .map(|m| {
+                    let procs: Vec<ProcId> = (0..k).map(|kk| cell(kk, m)).collect();
+                    // Every participant of column m holds x_kk after the
+                    // broadcast (the borrowed source natively).
+                    let ins: Vec<Packet> = procs.iter().map(|pid| prev[pid].clone()).collect();
+                    make_block(&f, procs, p, m, ins)
+                })
+                .collect();
+            Box::new(Par::new(cols)) as Box<dyn Collective>
+        })
+    };
+
+    // Keep only sink outputs (drop the borrowed sources' garbage columns).
+    let cleanup: StageBuilder = Box::new(move |prev: &HashMap<ProcId, Packet>| {
+        let outs: HashMap<ProcId, Packet> = prev
+            .iter()
+            .filter(|(&pid, _)| pid >= k && pid < k + r)
+            .map(|(&pid, pkt)| (pid, pkt.clone()))
+            .collect();
+        Box::new(LocalOp::new(outs)) as Box<dyn Collective>
+    });
+
+    let init: HashMap<ProcId, Packet> = inputs
+        .into_iter()
+        .enumerate()
+        .map(|(i, pkt)| (layout.source(i), pkt))
+        .collect();
+    let _ = w;
+    Pipeline::from_inputs(init, vec![phase1, phase2, cleanup])
+}
+
+impl Collective for SystematicEncode {
+    fn participants(&self) -> Vec<ProcId> {
+        self.pipe.participants()
+    }
+    fn is_done(&self) -> bool {
+        self.pipe.is_done()
+    }
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        self.pipe.step(inbox)
+    }
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        self.pipe.outputs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{run, Sim};
+
+    fn oracle<F: Field>(f: &F, a: &Mat, inputs: &[Packet]) -> Vec<Packet> {
+        let w = inputs[0].len();
+        (0..a.cols)
+            .map(|j| {
+                let mut acc = pkt_zero(w);
+                for i in 0..a.rows {
+                    crate::net::pkt_add_scaled(f, &mut acc, a[(i, j)], &inputs[i]);
+                }
+                acc
+            })
+            .collect()
+    }
+
+    fn check_universal(k: usize, r: usize, p: usize, w: usize, algo: A2aAlgo) {
+        let f = crate::gf::GfPrime::default_field();
+        let a = Arc::new(Mat::random(&f, k, r, (k * 1000 + r) as u64));
+        let inputs: Vec<Packet> = (0..k)
+            .map(|i| (0..w).map(|j| f.elem((i * w + j + 1) as u64 * 37)).collect())
+            .collect();
+        let mut job = SystematicEncode::new(f, a.clone(), inputs.clone(), p, algo).unwrap();
+        run(&mut Sim::new(p), &mut job).unwrap();
+        assert_eq!(job.coded(), oracle(&f, &a, &inputs), "K={k} R={r} p={p}");
+    }
+
+    #[test]
+    fn k_ge_r_divisible() {
+        check_universal(12, 4, 1, 1, A2aAlgo::Universal);
+        check_universal(16, 4, 2, 2, A2aAlgo::Universal);
+    }
+
+    #[test]
+    fn fig3_k25_r4() {
+        // Fig. 3: K = 25, R = 4, p = 1 — borrow T_1..T_3.
+        check_universal(25, 4, 1, 1, A2aAlgo::Universal);
+    }
+
+    #[test]
+    fn fig4_k4_r25() {
+        // Fig. 4: K = 4, R = 25, p = 1 — borrow S_1..S_3.
+        check_universal(4, 25, 1, 1, A2aAlgo::Universal);
+    }
+
+    #[test]
+    fn k_lt_r_divisible() {
+        check_universal(4, 12, 1, 1, A2aAlgo::Universal);
+        check_universal(8, 24, 2, 3, A2aAlgo::Universal);
+    }
+
+    #[test]
+    fn equal_k_r() {
+        check_universal(8, 8, 1, 1, A2aAlgo::Universal);
+        check_universal(7, 7, 2, 1, A2aAlgo::Universal);
+    }
+
+    #[test]
+    fn multireduce_baseline_agrees() {
+        check_universal(12, 4, 1, 1, A2aAlgo::MultiReduce);
+        check_universal(4, 12, 1, 2, A2aAlgo::MultiReduce);
+    }
+
+    #[test]
+    fn rs_specific_k_ge_r() {
+        let f = crate::gf::GfPrime::default_field();
+        let code = GrsCode::structured(&f, 24, 8, 2).unwrap();
+        let a = code.parity_matrix(&f);
+        let inputs: Vec<Packet> = (0..24u64).map(|i| vec![f.elem(i * 71 + 5)]).collect();
+        let mut job = SystematicEncode::new_rs(f, &code, inputs.clone(), 1).unwrap();
+        run(&mut Sim::new(1), &mut job).unwrap();
+        assert_eq!(job.coded(), oracle(&f, &a, &inputs));
+    }
+
+    #[test]
+    fn rs_specific_k_lt_r() {
+        let f = crate::gf::GfPrime::default_field();
+        let code = GrsCode::structured(&f, 8, 24, 2).unwrap();
+        let a = code.parity_matrix(&f);
+        let inputs: Vec<Packet> = (0..8u64).map(|i| vec![f.elem(i * 13 + 3)]).collect();
+        let mut job = SystematicEncode::new_rs(f, &code, inputs.clone(), 1).unwrap();
+        run(&mut Sim::new(1), &mut job).unwrap();
+        assert_eq!(job.coded(), oracle(&f, &a, &inputs));
+    }
+
+    #[test]
+    fn rs_specific_beats_universal_in_c2() {
+        // The §VI headline: specific ≪ universal in C2 for structured RS.
+        let f = crate::gf::GfPrime::default_field();
+        let code = GrsCode::structured(&f, 64, 64, 2).unwrap();
+        let a = Arc::new(code.parity_matrix(&f));
+        let inputs: Vec<Packet> = (0..64u64).map(|i| vec![f.elem(i + 1)]).collect();
+
+        let mut spec = SystematicEncode::new_rs(f, &code, inputs.clone(), 1).unwrap();
+        let rep_s = run(&mut Sim::new(1), &mut spec).unwrap();
+        let mut univ =
+            SystematicEncode::new(f, a, inputs, 1, A2aAlgo::Universal).unwrap();
+        let rep_u = run(&mut Sim::new(1), &mut univ).unwrap();
+        assert_eq!(spec.coded(), univ.coded());
+        assert!(
+            rep_s.c2 < rep_u.c2,
+            "specific C2 {} should beat universal C2 {}",
+            rep_s.c2,
+            rep_u.c2
+        );
+    }
+}

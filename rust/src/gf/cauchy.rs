@@ -1,0 +1,215 @@
+//! Cauchy-like matrices — eq. (24) and the Theorem 6/8 factorizations.
+//!
+//! The non-systematic part of a systematic GRS generator matrix is
+//! *Cauchy-like*: `A_{k,r} = c_k d_r / (β_r − α_k)` (eq. (24), via
+//! Roth–Seroussi), with `A = (V_α P)^{-1} V_β Q` (eq. (23)). Theorem 6
+//! further factors each square block `A_m` of `A` as
+//! `A_m = (V_{α,m} Φ_m)^{-1} V_β Ψ`, which is what lets §VI compute it
+//! with two consecutive draw-and-loose operations.
+
+use super::{vandermonde, Field, Mat};
+
+/// A Cauchy-like matrix specification: `A_{k,r} = c_k d_r / (β_r − α_k)`.
+#[derive(Clone, Debug)]
+pub struct CauchyLike {
+    /// Row points `α_0, …, α_{K−1}` (systematic evaluation points).
+    pub alphas: Vec<u64>,
+    /// Column points `β_0, …, β_{R−1}` (parity evaluation points).
+    pub betas: Vec<u64>,
+    /// Row multipliers `u_0, …, u_{K−1}` (all 1 for Lagrange matrices).
+    pub u: Vec<u64>,
+    /// Column multipliers `v_0, …, v_{R−1}`.
+    pub v: Vec<u64>,
+}
+
+impl CauchyLike {
+    /// A Lagrange matrix `L_{α,β} = V_α^{-1} V_β` (Remark 9): `u = v = 1`.
+    pub fn lagrange<F: Field>(f: &F, alphas: Vec<u64>, betas: Vec<u64>) -> Self {
+        let (k, r) = (alphas.len(), betas.len());
+        CauchyLike {
+            alphas,
+            betas,
+            u: vec![f.one(); k],
+            v: vec![f.one(); r],
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.alphas.len()
+    }
+
+    pub fn r(&self) -> usize {
+        self.betas.len()
+    }
+
+    /// All points distinct (required: `β_r ≠ α_k` keeps entries finite and
+    /// distinctness within each family keeps the Vandermondes invertible).
+    pub fn points_valid(&self) -> bool {
+        let all: Vec<u64> = self.alphas.iter().chain(&self.betas).copied().collect();
+        vandermonde::points_distinct(&all)
+    }
+
+    /// The row factor `c_k = u_k^{-1} / ∏_{t≠k}(α_k − α_t)` of eq. (24).
+    pub fn c<F: Field>(&self, f: &F, k: usize) -> u64 {
+        let mut prod = f.one();
+        for (t, &at) in self.alphas.iter().enumerate() {
+            if t != k {
+                prod = f.mul(prod, f.sub(self.alphas[k], at));
+            }
+        }
+        f.div(f.inv(self.u[k]), prod)
+    }
+
+    /// The column factor `d_r = v_r ∏_k (β_r − α_k)` of eq. (24).
+    pub fn d<F: Field>(&self, f: &F, r: usize) -> u64 {
+        let mut prod = self.v[r];
+        for &ak in &self.alphas {
+            prod = f.mul(prod, f.sub(self.betas[r], ak));
+        }
+        prod
+    }
+
+    /// Materialise `A` entry-wise from eq. (24).
+    pub fn to_mat<F: Field>(&self, f: &F) -> Mat {
+        let cs: Vec<u64> = (0..self.k()).map(|k| self.c(f, k)).collect();
+        let ds: Vec<u64> = (0..self.r()).map(|r| self.d(f, r)).collect();
+        Mat::from_fn(self.k(), self.r(), |k, r| {
+            let denom = f.sub(self.betas[r], self.alphas[k]);
+            f.div(f.mul(cs[k], ds[r]), denom)
+        })
+    }
+
+    /// Materialise `A = (V_α · diag(u))^{-1} · V_β · diag(v)` from eq. (23)
+    /// — the definition the eq. (24) closed form is checked against.
+    pub fn to_mat_by_definition<F: Field>(&self, f: &F) -> Mat {
+        let k = self.k();
+        let va_inv = vandermonde::inverse(f, &self.alphas);
+        // (V_α · diag(u))^{-1} = diag(u)^{-1} · V_α^{-1}
+        let uinv: Vec<u64> = self.u.iter().map(|&x| f.inv(x)).collect();
+        let vb = vandermonde::vandermonde(f, k, &self.betas);
+        va_inv
+            .diag_mul(f, &uinv)
+            .mul(f, &vb)
+            .mul_diag(f, &self.v)
+    }
+
+    /// Theorem 6 row factor `φ_{m,s}` (eq. (26)) for block `m` of size `R`:
+    /// `φ_{m,s} = u_{mR+s} ∏_{j ∉ S_m} (α_{mR+s} − α_j)`.
+    pub fn phi<F: Field>(&self, f: &F, m: usize, s: usize, r_block: usize) -> u64 {
+        let i = m * r_block + s;
+        let block = m * r_block..(m + 1) * r_block;
+        let mut prod = self.u[i];
+        for (j, &aj) in self.alphas.iter().enumerate() {
+            if !block.contains(&j) {
+                prod = f.mul(prod, f.sub(self.alphas[i], aj));
+            }
+        }
+        prod
+    }
+
+    /// Theorem 6 column factor `ψ_r` (eq. (27)) for block `m`:
+    /// `ψ_r = v_r ∏_{j ∉ S_m} (β_r − α_j)`.
+    pub fn psi<F: Field>(&self, f: &F, m: usize, r: usize, r_block: usize) -> u64 {
+        let block = m * r_block..(m + 1) * r_block;
+        let mut prod = self.v[r];
+        for (j, &aj) in self.alphas.iter().enumerate() {
+            if !block.contains(&j) {
+                prod = f.mul(prod, f.sub(self.betas[r], aj));
+            }
+        }
+        prod
+    }
+
+    /// Theorem 8 (K < R case): `A_m = (diag(u)·V_α)^{-1} V_{β,m} diag(v_m)`
+    /// where block `m` takes parity points `T_m = [mK, (m+1)K)`. Returns
+    /// the `K × K` block directly.
+    pub fn block_k_lt_r(&self, m: usize) -> CauchyLike {
+        let k = self.k();
+        CauchyLike {
+            alphas: self.alphas.clone(),
+            betas: self.betas[m * k..(m + 1) * k].to_vec(),
+            u: self.u.clone(),
+            v: self.v[m * k..(m + 1) * k].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::{Field, GfPrime};
+
+    fn f() -> GfPrime {
+        GfPrime::new(786433).unwrap()
+    }
+
+    fn sample(k: usize, r: usize) -> CauchyLike {
+        let f = f();
+        CauchyLike {
+            alphas: (1..=k as u64).collect(),
+            betas: (1000..1000 + r as u64).collect(),
+            u: (1..=k as u64).map(|i| f.elem(i * 7 + 1)).collect(),
+            v: (1..=r as u64).map(|i| f.elem(i * 13 + 2)).collect(),
+        }
+    }
+
+    #[test]
+    fn closed_form_matches_definition() {
+        // eq. (24) (Roth–Seroussi) vs eq. (23) (definition).
+        let f = f();
+        for (k, r) in [(4, 4), (6, 3), (3, 6), (8, 8)] {
+            let c = sample(k, r);
+            assert!(c.points_valid());
+            assert_eq!(c.to_mat(&f), c.to_mat_by_definition(&f), "k={k} r={r}");
+        }
+    }
+
+    #[test]
+    fn theorem6_factorization() {
+        // A_m == (V_{α,m} Φ_m)^{-1} V_β Ψ_m for every block m (K = M·R).
+        let f = f();
+        let (k, r) = (12, 4);
+        let c = sample(k, r);
+        let a = c.to_mat(&f);
+        for m in 0..k / r {
+            let block = a.block(m * r, 0, r, r);
+            let alpha_m = &c.alphas[m * r..(m + 1) * r];
+            let phi: Vec<u64> = (0..r).map(|s| c.phi(&f, m, s, r)).collect();
+            let psi: Vec<u64> = (0..r).map(|rr| c.psi(&f, m, rr, r)).collect();
+            let va_inv = vandermonde::inverse(&f, alpha_m);
+            let phinv: Vec<u64> = phi.iter().map(|&x| f.inv(x)).collect();
+            let vb = vandermonde::square(&f, &c.betas);
+            let reconstructed = va_inv.diag_mul(&f, &phinv).mul(&f, &vb).mul_diag(&f, &psi);
+            assert_eq!(block, reconstructed, "block {m}");
+        }
+    }
+
+    #[test]
+    fn theorem8_blocks() {
+        // K < R: concatenated blocks are Cauchy-like on parity sub-ranges.
+        let f = f();
+        let (k, r) = (4, 12);
+        let c = sample(k, r);
+        let a = c.to_mat(&f);
+        for m in 0..r / k {
+            let block = a.block(0, m * k, k, k);
+            assert_eq!(block, c.block_k_lt_r(m).to_mat(&f), "block {m}");
+        }
+    }
+
+    #[test]
+    fn lagrange_matrix_is_interpolation_then_evaluation() {
+        let f = f();
+        let alphas: Vec<u64> = (1..=5).collect();
+        let betas: Vec<u64> = (100..105).collect();
+        let l = CauchyLike::lagrange(&f, alphas.clone(), betas.clone()).to_mat(&f);
+        // x·L should equal evaluating at β the degree-<5 interpolant of
+        // (α_k, x_k).
+        let x = [3u64, 1, 4, 1, 5];
+        let y = l.vec_mul(&f, &x);
+        let g = crate::gf::poly::interpolate(&f, &alphas, &x);
+        for (j, &b) in betas.iter().enumerate() {
+            assert_eq!(y[j], crate::gf::poly::eval(&f, &g, b));
+        }
+    }
+}

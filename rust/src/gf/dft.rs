@@ -1,0 +1,146 @@
+//! DFT matrices, digit reversal and the two trees of §V-A.
+//!
+//! For `K | q − 1` and `K = P^H`, the paper's specific algorithm computes
+//! the *permuted* DFT matrix `D_K · Π`, where `Π` is the digit-reversal
+//! permutation (`Π_{k,k'} = 1`, `k'` = base-`P` digit reversal of `k`,
+//! eqs. (6)–(7)). Column `j` of `D_K · Π` holds the powers of `β^{rev(j)}`,
+//! so processor `j` ends up with the evaluation `f(β^{rev(j)})`.
+
+use super::{vandermonde, Field, Mat};
+use crate::util::ipow;
+
+/// Base-`P` digit reversal of `k` with `H` digits (eq. (7)).
+pub fn digit_reverse(k: u64, p: u64, h: u32) -> u64 {
+    let mut k = k;
+    let mut out = 0;
+    for _ in 0..h {
+        out = out * p + k % p;
+        k /= p;
+    }
+    out
+}
+
+/// The base-`P` digits of `k`, least significant first (`k_1, …, k_H` in
+/// the paper's notation of eq. (6) — note the paper indexes from 1).
+pub fn digits(k: u64, p: u64, h: u32) -> Vec<u64> {
+    let mut k = k;
+    (0..h)
+        .map(|_| {
+            let d = k % p;
+            k /= p;
+            d
+        })
+        .collect()
+}
+
+/// A primitive `K`-th root of unity `β = g^{(q−1)/K}`; `None` if `K ∤ q−1`.
+pub fn primitive_root<F: Field>(f: &F, k: u64) -> Option<u64> {
+    f.root_of_unity(k)
+}
+
+/// The `K × K` DFT matrix `D_K[i][j] = β^{ij}` (eq. (8)).
+pub fn dft_matrix<F: Field>(f: &F, k: usize) -> Option<Mat> {
+    let beta = primitive_root(f, k as u64)?;
+    let points: Vec<u64> = (0..k as u64).map(|j| f.pow(beta, j)).collect();
+    Some(vandermonde::square(f, &points))
+}
+
+/// The permuted DFT matrix `D_K · Π` computed by the §V-A algorithm:
+/// `(D_K Π)[i][j] = β^{i · rev(j)}`.
+pub fn permuted_dft_matrix<F: Field>(f: &F, p: u64, h: u32) -> Option<Mat> {
+    let k = ipow(p, h);
+    let beta = primitive_root(f, k)?;
+    let points: Vec<u64> = (0..k)
+        .map(|j| f.pow(beta, digit_reverse(j, p, h)))
+        .collect();
+    Some(vandermonde::square(f, &points))
+}
+
+/// The element-tree entry `γ_{k_h…k_1}` of eq. (9): the vertex at level `h`
+/// whose digit index (low `h` digits) is `low` hosts
+/// `γ = (β^{low})^{K/P^h}` — each child a distinct `P`-th root of its
+/// parent (eq. (10)).
+pub fn gamma<F: Field>(f: &F, beta: u64, k: u64, p: u64, h: u32, low: u64) -> u64 {
+    let ph = ipow(p, h);
+    debug_assert!(k % ph == 0 && low < ph);
+    f.pow(beta, low * (k / ph) % (f.order() - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::GfPrime;
+
+    fn f() -> GfPrime {
+        GfPrime::new(786433).unwrap()
+    }
+
+    #[test]
+    fn digit_reverse_involution() {
+        for k in 0..81 {
+            assert_eq!(digit_reverse(digit_reverse(k, 3, 4), 3, 4), k);
+        }
+        assert_eq!(digit_reverse(1, 2, 3), 4); // 001 -> 100
+        assert_eq!(digit_reverse(6, 2, 3), 3); // 110 -> 011
+    }
+
+    #[test]
+    fn digits_reconstruct() {
+        let ds = digits(57, 3, 4); // 57 = 0+3*(1+3*(0+3*2)) -> [0,1,0,2]? 57=2*27+3
+        let mut back = 0;
+        for (i, &d) in ds.iter().enumerate() {
+            back += d * ipow(3, i as u32);
+        }
+        assert_eq!(back, 57);
+    }
+
+    #[test]
+    fn dft_matrix_is_invertible_vandermonde() {
+        let f = f();
+        let d = dft_matrix(&f, 8).unwrap();
+        assert_eq!(d.rank(&f), 8);
+        assert_eq!(d[(0, 5)], 1); // first row all ones
+        assert_eq!(d[(1, 0)], 1); // column 0 is all ones (β^0)
+    }
+
+    #[test]
+    fn permuted_dft_is_column_permutation_of_dft() {
+        let f = f();
+        let (p, h) = (2u64, 3u32);
+        let k = 8usize;
+        let d = dft_matrix(&f, k).unwrap();
+        let perm: Vec<usize> = (0..k).map(|j| digit_reverse(j as u64, p, h) as usize).collect();
+        let dp = d.permute_cols(&perm);
+        assert_eq!(dp, permuted_dft_matrix(&f, p, h).unwrap());
+    }
+
+    #[test]
+    fn gamma_children_are_pth_roots_of_parent() {
+        // Fig. 8 setting: K = 9, P = 3 — every child is a distinct cube
+        // root of its parent; the root (level 0) hosts γ = 1.
+        // (Needs 9 | q−1; the default prime has only one factor of 3, so
+        // use q = 37.)
+        let f = GfPrime::new(37).unwrap();
+        let k = 9u64;
+        let beta = primitive_root(&f, k).unwrap();
+        assert_eq!(gamma(&f, beta, k, 3, 0, 0), 1);
+        for h in 1..=2u32 {
+            for low in 0..ipow(3, h) {
+                let child = gamma(&f, beta, k, 3, h, low);
+                let parent = gamma(&f, beta, k, 3, h - 1, low % ipow(3, h - 1));
+                assert_eq!(f.pow(child, 3), parent, "h={h} low={low}");
+            }
+        }
+        // Leaves host β^k.
+        for kk in 0..k {
+            assert_eq!(gamma(&f, beta, k, 3, 2, kk), f.pow(beta, kk));
+        }
+    }
+
+    #[test]
+    fn no_root_when_k_does_not_divide() {
+        let f = f();
+        assert!(dft_matrix(&f, 5).is_none()); // 5 ∤ 786432
+        assert!(dft_matrix(&f, 512).is_some());
+    }
+}

@@ -1,0 +1,186 @@
+//! Binary extension fields `GF(2^w)`, `1 ≤ w ≤ 16`, via log/antilog tables.
+//!
+//! Used by the storage-flavoured examples and tests (`GF(256)` is the
+//! lingua franca of erasure-coded storage). Addition is XOR;
+//! multiplication is `exp[(log a + log b) mod (2^w − 1)]`.
+
+use super::Field;
+use std::sync::Arc;
+
+/// Standard primitive polynomials (without the leading `x^w` term), indexed
+/// by `w`. E.g. `w = 8` → `x^8 + x^4 + x^3 + x^2 + 1` (0x1D), the AES-adjacent
+/// polynomial used by most storage systems.
+const PRIMITIVE_POLY: [u32; 17] = [
+    0, 0x1, 0x3, 0x3, 0x3, 0x5, 0x3, 0x3, 0x1D, 0x11, 0x9, 0x5, 0x53, 0x1B, 0x2B, 0x3, 0x2D,
+];
+
+#[derive(Debug)]
+struct Tables {
+    w: u32,
+    /// `exp[i] = α^i` for `i ∈ [0, 2(2^w − 1))` (doubled to skip a mod).
+    exp: Vec<u16>,
+    /// `log[a]` for `a ∈ [1, 2^w)`; `log[0]` unused.
+    log: Vec<u32>,
+}
+
+/// `GF(2^w)` with `α` = root of the primitive polynomial (element `2`).
+#[derive(Clone)]
+pub struct Gf2e {
+    t: Arc<Tables>,
+}
+
+impl std::fmt::Debug for Gf2e {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GF(2^{})", self.t.w)
+    }
+}
+
+impl Gf2e {
+    /// Construct `GF(2^w)` for `1 ≤ w ≤ 16`.
+    pub fn new(w: u32) -> anyhow::Result<Self> {
+        anyhow::ensure!((1..=16).contains(&w), "gf2e width must be in 1..=16");
+        let order = 1u32 << w;
+        let mask = order - 1; // 2^w − 1, the multiplicative group order
+        let poly = PRIMITIVE_POLY[w as usize];
+        let mut exp = vec![0u16; 2 * mask as usize + 2];
+        let mut log = vec![0u32; order as usize];
+        let mut x = 1u32;
+        let mut seen = vec![false; order as usize];
+        for i in 0..mask {
+            anyhow::ensure!(!seen[x as usize], "polynomial for w={w} is not primitive");
+            seen[x as usize] = true;
+            exp[i as usize] = x as u16;
+            log[x as usize] = i;
+            x <<= 1;
+            if x & order != 0 {
+                x = (x ^ order) ^ poly;
+            }
+        }
+        anyhow::ensure!(x == 1, "polynomial for w={w} is not primitive");
+        for i in 0..=mask {
+            exp[(mask + i) as usize] = exp[i as usize];
+        }
+        Ok(Gf2e {
+            t: Arc::new(Tables { w, exp, log }),
+        })
+    }
+
+    /// Field width `w`.
+    pub fn width(&self) -> u32 {
+        self.t.w
+    }
+}
+
+impl Field for Gf2e {
+    #[inline]
+    fn order(&self) -> u64 {
+        1u64 << self.t.w
+    }
+
+    #[inline(always)]
+    fn add(&self, a: u64, b: u64) -> u64 {
+        a ^ b
+    }
+
+    #[inline(always)]
+    fn sub(&self, a: u64, b: u64) -> u64 {
+        a ^ b // characteristic 2
+    }
+
+    #[inline(always)]
+    fn neg(&self, a: u64) -> u64 {
+        a
+    }
+
+    #[inline(always)]
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        let t = &*self.t;
+        t.exp[(t.log[a as usize] + t.log[b as usize]) as usize] as u64
+    }
+
+    fn inv(&self, a: u64) -> u64 {
+        assert!(a != 0, "division by zero in GF(2^{})", self.t.w);
+        let t = &*self.t;
+        let mask = (1u32 << t.w) - 1;
+        t.exp[((mask - t.log[a as usize]) % mask) as usize] as u64
+    }
+
+    fn generator(&self) -> u64 {
+        // α itself is primitive by construction (exp table covers F*).
+        2
+    }
+
+    fn elem(&self, x: u64) -> u64 {
+        x & (self.order() - 1)
+    }
+
+    /// XOR accumulation never overflows — no reduction passes needed.
+    fn lazy_chunk(&self) -> usize {
+        usize::MAX
+    }
+
+    #[inline(always)]
+    fn lazy_mul_acc(&self, acc: u64, c: u64, s: u64) -> u64 {
+        acc ^ self.mul(c, s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_widths_build() {
+        for w in 1..=16 {
+            let f = Gf2e::new(w).unwrap();
+            assert_eq!(f.order(), 1 << w);
+            assert_eq!(f.bits(), w);
+        }
+    }
+
+    #[test]
+    fn gf256_known_products() {
+        // Classic GF(256)/0x11D values.
+        let f = Gf2e::new(8).unwrap();
+        assert_eq!(f.mul(2, 128), 29); // α^8 = poly bits 0x1D
+        for a in 1..256u64 {
+            assert_eq!(f.mul(a, f.inv(a)), 1);
+            assert_eq!(f.div(f.mul(a, 77), a), 77);
+        }
+    }
+
+    #[test]
+    fn field_axioms_exhaustive_gf16() {
+        let f = Gf2e::new(4).unwrap();
+        let n = f.order();
+        for a in 0..n {
+            for b in 0..n {
+                assert_eq!(f.mul(a, b), f.mul(b, a));
+                assert_eq!(f.add(a, b), f.add(b, a));
+                for c in 0..n {
+                    assert_eq!(f.mul(a, f.add(b, c)), f.add(f.mul(a, b), f.mul(a, c)));
+                }
+            }
+            if a != 0 {
+                assert_eq!(f.mul(a, f.inv(a)), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn generator_order() {
+        for w in [4u32, 8, 12] {
+            let f = Gf2e::new(w).unwrap();
+            let g = f.generator();
+            let group = f.order() - 1;
+            assert_eq!(f.pow(g, group), 1);
+            // α is primitive: no smaller order among proper divisors.
+            for d in crate::gf::prime::prime_factors(group) {
+                assert_ne!(f.pow(g, group / d), 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! Dense matrices over a finite field.
+//!
+//! Row-major `Vec<u64>` storage; all operations take the field as an
+//! explicit context argument. This is the *oracle* side of the repository:
+//! collectives are verified against direct `x · C` products computed here.
+
+use super::Field;
+
+/// A dense `rows × cols` matrix over some `F_q` (elements in canonical form).
+#[derive(Clone, PartialEq, Eq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    data: Vec<u64>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(8) {
+            writeln!(f, "  {:?}", &self.data[r * self.cols..(r + 1) * self.cols])?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    /// All-zero matrix.
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn identity<F: Field>(f: &F, n: usize) -> Self {
+        let mut m = Mat::zero(n, n);
+        for i in 0..n {
+            m[(i, i)] = f.one();
+        }
+        m
+    }
+
+    /// Build from a row-major closure.
+    pub fn from_fn(rows: usize, cols: usize, mut gen: impl FnMut(usize, usize) -> u64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(gen(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Build from nested slices (tests / examples).
+    pub fn from_rows(rows: &[&[u64]]) -> Self {
+        let cols = rows.first().map_or(0, |r| r.len());
+        assert!(rows.iter().all(|r| r.len() == cols));
+        Mat {
+            rows: rows.len(),
+            cols,
+            data: rows.concat(),
+        }
+    }
+
+    /// Uniformly random matrix (deterministic from `seed`).
+    pub fn random<F: Field>(f: &F, rows: usize, cols: usize, seed: u64) -> Self {
+        let mut rng = crate::util::Rng::new(seed);
+        Mat::from_fn(rows, cols, |_, _| rng.below(f.order()))
+    }
+
+    /// Row `r` as a slice.
+    pub fn row(&self, r: usize) -> &[u64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Column `c` as a fresh vector.
+    pub fn col(&self, c: usize) -> Vec<u64> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    /// Matrix product `self · rhs`.
+    pub fn mul<F: Field>(&self, f: &F, rhs: &Mat) -> Mat {
+        assert_eq!(self.cols, rhs.rows, "dimension mismatch");
+        let mut out = Mat::zero(self.rows, rhs.cols);
+        for r in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self[(r, k)];
+                if a == 0 {
+                    continue;
+                }
+                for c in 0..rhs.cols {
+                    out[(r, c)] = f.mul_add(out[(r, c)], a, rhs[(k, c)]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Row-vector product `x · self` (the encoding operation of Def. 1/4).
+    pub fn vec_mul<F: Field>(&self, f: &F, x: &[u64]) -> Vec<u64> {
+        assert_eq!(x.len(), self.rows);
+        let mut out = vec![0u64; self.cols];
+        let terms: Vec<(u64, &[u64])> = x
+            .iter()
+            .enumerate()
+            .map(|(k, &xv)| (xv, self.row(k)))
+            .collect();
+        f.lincomb_into(&mut out, &terms);
+        out
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |r, c| self[(c, r)])
+    }
+
+    /// Horizontal concatenation `[self | rhs]`.
+    pub fn hstack(&self, rhs: &Mat) -> Mat {
+        assert_eq!(self.rows, rhs.rows);
+        Mat::from_fn(self.rows, self.cols + rhs.cols, |r, c| {
+            if c < self.cols {
+                self[(r, c)]
+            } else {
+                rhs[(r, c - self.cols)]
+            }
+        })
+    }
+
+    /// Vertical concatenation `[self; below]`.
+    pub fn vstack(&self, below: &Mat) -> Mat {
+        assert_eq!(self.cols, below.cols);
+        Mat {
+            rows: self.rows + below.rows,
+            cols: self.cols,
+            data: [self.data.clone(), below.data.clone()].concat(),
+        }
+    }
+
+    /// Sub-block `[r0, r0+rows) × [c0, c0+cols)`.
+    pub fn block(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Mat {
+        assert!(r0 + rows <= self.rows && c0 + cols <= self.cols);
+        Mat::from_fn(rows, cols, |r, c| self[(r0 + r, c0 + c)])
+    }
+
+    /// Scale every entry.
+    pub fn scale<F: Field>(&self, f: &F, s: u64) -> Mat {
+        Mat::from_fn(self.rows, self.cols, |r, c| f.mul(self[(r, c)], s))
+    }
+
+    /// `self · diag(d)` — scale column `c` by `d[c]`.
+    pub fn mul_diag<F: Field>(&self, f: &F, d: &[u64]) -> Mat {
+        assert_eq!(d.len(), self.cols);
+        Mat::from_fn(self.rows, self.cols, |r, c| f.mul(self[(r, c)], d[c]))
+    }
+
+    /// `diag(d) · self` — scale row `r` by `d[r]`.
+    pub fn diag_mul<F: Field>(&self, f: &F, d: &[u64]) -> Mat {
+        assert_eq!(d.len(), self.rows);
+        Mat::from_fn(self.rows, self.cols, |r, c| f.mul(d[r], self[(r, c)]))
+    }
+
+    /// Gauss–Jordan inverse. Returns `None` for singular matrices.
+    pub fn inverse<F: Field>(&self, f: &F) -> Option<Mat> {
+        assert_eq!(self.rows, self.cols, "inverse of non-square matrix");
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut inv = Mat::identity(f, n);
+        for col in 0..n {
+            // Find pivot.
+            let pivot = (col..n).find(|&r| a[(r, col)] != 0)?;
+            if pivot != col {
+                a.swap_rows(pivot, col);
+                inv.swap_rows(pivot, col);
+            }
+            let pinv = f.inv(a[(col, col)]);
+            for c in 0..n {
+                a[(col, c)] = f.mul(a[(col, c)], pinv);
+                inv[(col, c)] = f.mul(inv[(col, c)], pinv);
+            }
+            for r in 0..n {
+                if r == col || a[(r, col)] == 0 {
+                    continue;
+                }
+                let factor = a[(r, col)];
+                for c in 0..n {
+                    let t = f.mul(factor, a[(col, c)]);
+                    a[(r, c)] = f.sub(a[(r, c)], t);
+                    let t = f.mul(factor, inv[(col, c)]);
+                    inv[(r, c)] = f.sub(inv[(r, c)], t);
+                }
+            }
+        }
+        Some(inv)
+    }
+
+    /// Rank via Gaussian elimination.
+    pub fn rank<F: Field>(&self, f: &F) -> usize {
+        let mut a = self.clone();
+        let mut rank = 0;
+        for col in 0..a.cols {
+            let Some(pivot) = (rank..a.rows).find(|&r| a[(r, col)] != 0) else {
+                continue;
+            };
+            a.swap_rows(pivot, rank);
+            let pinv = f.inv(a[(rank, col)]);
+            for r in rank + 1..a.rows {
+                if a[(r, col)] == 0 {
+                    continue;
+                }
+                let factor = f.mul(a[(r, col)], pinv);
+                for c in col..a.cols {
+                    let t = f.mul(factor, a[(rank, c)]);
+                    a[(r, c)] = f.sub(a[(r, c)], t);
+                }
+            }
+            rank += 1;
+            if rank == a.rows {
+                break;
+            }
+        }
+        rank
+    }
+
+    /// Permute columns: `out[:, j] = self[:, perm[j]]`.
+    pub fn permute_cols(&self, perm: &[usize]) -> Mat {
+        assert_eq!(perm.len(), self.cols);
+        Mat::from_fn(self.rows, self.cols, |r, c| self[(r, perm[c])])
+    }
+
+    fn swap_rows(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        for c in 0..self.cols {
+            self.data.swap(a * self.cols + c, b * self.cols + c);
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = u64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &u64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut u64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::GfPrime;
+
+    fn f() -> GfPrime {
+        GfPrime::new(786433).unwrap()
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let f = f();
+        let a = Mat::random(&f, 7, 7, 1);
+        let i = Mat::identity(&f, 7);
+        assert_eq!(a.mul(&f, &i), a);
+        assert_eq!(i.mul(&f, &a), a);
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let f = f();
+        for seed in 0..20u64 {
+            let a = Mat::random(&f, 6, 6, seed);
+            if let Some(ainv) = a.inverse(&f) {
+                assert_eq!(a.mul(&f, &ainv), Mat::identity(&f, 6), "seed {seed}");
+                assert_eq!(ainv.mul(&f, &a), Mat::identity(&f, 6), "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn singular_has_no_inverse() {
+        let f = f();
+        let mut a = Mat::random(&f, 5, 5, 3);
+        let dup: Vec<u64> = a.row(0).to_vec();
+        for c in 0..5 {
+            a[(4, c)] = dup[c];
+        }
+        assert!(a.inverse(&f).is_none());
+        assert!(a.rank(&f) < 5);
+    }
+
+    #[test]
+    fn vec_mul_matches_mat_mul() {
+        let f = f();
+        let a = Mat::random(&f, 9, 5, 7);
+        let x: Vec<u64> = (0..9).map(|i| f.elem(i * 31 + 5)).collect();
+        let xm = Mat {
+            rows: 1,
+            cols: 9,
+            data: x.clone(),
+        };
+        assert_eq!(a.vec_mul(&f, &x), xm.mul(&f, &a).data);
+    }
+
+    #[test]
+    fn rank_of_random_square_is_full_whp() {
+        let f = f();
+        let a = Mat::random(&f, 8, 8, 11);
+        assert_eq!(a.rank(&f), 8);
+    }
+
+    #[test]
+    fn block_stack_roundtrip() {
+        let f = f();
+        let a = Mat::random(&f, 4, 6, 2);
+        let top = a.block(0, 0, 2, 6);
+        let bot = a.block(2, 0, 2, 6);
+        assert_eq!(top.vstack(&bot), a);
+        let l = a.block(0, 0, 4, 3);
+        let r = a.block(0, 3, 4, 3);
+        assert_eq!(l.hstack(&r), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let f = f();
+        let a = Mat::random(&f, 3, 8, 5);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn permute_cols_by_identity() {
+        let f = f();
+        let a = Mat::random(&f, 4, 4, 9);
+        let perm: Vec<usize> = (0..4).collect();
+        assert_eq!(a.permute_cols(&perm), a);
+    }
+}

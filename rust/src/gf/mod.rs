@@ -1,0 +1,244 @@
+//! Finite-field substrate.
+//!
+//! Everything in the paper happens over a finite field `F_q`: the data
+//! symbols, the coding matrices, and the coefficients processors apply to
+//! previously received packets. This module provides
+//!
+//! * [`Field`] — the arithmetic interface all collectives are generic over,
+//! * [`GfPrime`] — prime fields `F_p`, `p < 2^31` (Barrett reduction),
+//! * [`Gf2e`] — binary extension fields `GF(2^w)`, `w ≤ 16` (log tables),
+//! * dense [`matrix`] algebra, [`poly`]nomials and Lagrange interpolation,
+//! * structured matrices: [`vandermonde`], [`cauchy`] (eq. (24) of the
+//!   paper) and [`dft`] (§V-A).
+//!
+//! Field elements are represented uniformly as `u64` values in canonical
+//! form (`< q`); the field object carries the modulus/tables so collectives
+//! can be monomorphised per field kind.
+
+pub mod cauchy;
+pub mod dft;
+pub mod gf2e;
+pub mod matrix;
+pub mod ntt;
+pub mod poly;
+pub mod prime;
+pub mod vandermonde;
+
+pub use cauchy::CauchyLike;
+pub use gf2e::Gf2e;
+pub use matrix::Mat;
+pub use prime::GfPrime;
+
+/// A finite field `F_q` with elements canonically represented as `u64 < q`.
+///
+/// Implementations must be cheap to clone (collectives clone them freely);
+/// table-based fields should wrap their tables in `Arc`.
+pub trait Field: Clone + Send + Sync + std::fmt::Debug + 'static {
+    /// The field order `q`.
+    fn order(&self) -> u64;
+
+    /// The multiplicative identity.
+    fn one(&self) -> u64 {
+        1
+    }
+
+    /// The additive identity.
+    fn zero(&self) -> u64 {
+        0
+    }
+
+    /// `⌈log2 q⌉` — the number of bits a symbol occupies on the wire
+    /// (the `⌈log2 q⌉` factor of the paper's cost `C = αC1 + β⌈log2 q⌉C2`).
+    fn bits(&self) -> u32 {
+        64 - (self.order() - 1).leading_zeros()
+    }
+
+    /// Addition in `F_q`.
+    fn add(&self, a: u64, b: u64) -> u64;
+
+    /// Subtraction in `F_q`.
+    fn sub(&self, a: u64, b: u64) -> u64;
+
+    /// Additive inverse.
+    fn neg(&self, a: u64) -> u64 {
+        self.sub(0, a)
+    }
+
+    /// Multiplication in `F_q`.
+    fn mul(&self, a: u64, b: u64) -> u64;
+
+    /// Multiplicative inverse. Panics on zero.
+    fn inv(&self, a: u64) -> u64;
+
+    /// Division `a / b`. Panics on `b == 0`.
+    fn div(&self, a: u64, b: u64) -> u64 {
+        self.mul(a, self.inv(b))
+    }
+
+    /// Exponentiation by squaring; `pow(0, 0) == 1` by convention.
+    fn pow(&self, a: u64, mut e: u64) -> u64 {
+        let mut base = a;
+        let mut acc = self.one();
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = self.mul(acc, base);
+            }
+            base = self.mul(base, base);
+            e >>= 1;
+        }
+        acc
+    }
+
+    /// A generator of the multiplicative group `F_q^*`.
+    fn generator(&self) -> u64;
+
+    /// Canonicalise an arbitrary `u64` into the field (`x mod q`).
+    fn elem(&self, x: u64) -> u64 {
+        x % self.order()
+    }
+
+    /// `a + b*c` — the fused op of every coding-scheme inner loop.
+    fn mul_add(&self, a: u64, b: u64, c: u64) -> u64 {
+        self.add(a, self.mul(b, c))
+    }
+
+    /// A primitive `n`-th root of unity, if `n | q - 1`.
+    fn root_of_unity(&self, n: u64) -> Option<u64> {
+        let q1 = self.order() - 1;
+        if n == 0 || q1 % n != 0 {
+            return None;
+        }
+        Some(self.pow(self.generator(), q1 / n))
+    }
+
+    /// Lazy-reduction primitives — the hot-loop interface.
+    ///
+    /// `lazy_chunk()` terms may be accumulated with `lazy_mul_acc` before
+    /// a `lazy_reduce` pass is required. Prime fields accumulate raw
+    /// `c·s` products (thousands fit in a `u64` for `p < 2^20`); `GF(2^w)`
+    /// accumulates with XOR, which never overflows. The defaults reduce
+    /// every term. See EXPERIMENTS.md §Perf.
+    fn lazy_chunk(&self) -> usize {
+        1
+    }
+
+    /// One (possibly unreduced) accumulation step `acc ⊞ c·s`.
+    #[inline(always)]
+    fn lazy_mul_acc(&self, acc: u64, c: u64, s: u64) -> u64 {
+        self.mul_add(acc, c, s)
+    }
+
+    /// Canonicalise a lazily-accumulated value.
+    #[inline(always)]
+    fn lazy_reduce(&self, x: u64) -> u64 {
+        x
+    }
+
+    /// `acc[i] += Σ_t coeffs[t]·srcs[t][i]` — the hot loop of every coding
+    /// scheme (shoot-phase initialisation, local combines, oracles),
+    /// implemented over the lazy primitives.
+    fn lincomb_into(&self, acc: &mut [u64], terms: &[(u64, &[u64])]) {
+        for group in terms.chunks(self.lazy_chunk()) {
+            for &(c, src) in group {
+                if c == 0 {
+                    continue;
+                }
+                debug_assert_eq!(acc.len(), src.len());
+                for (a, &s) in acc.iter_mut().zip(src) {
+                    *a = self.lazy_mul_acc(*a, c, s);
+                }
+            }
+            for a in acc.iter_mut() {
+                *a = self.lazy_reduce(*a);
+            }
+        }
+    }
+}
+
+/// Runtime-selected field (CLI / config layer).
+#[derive(Clone, Debug)]
+pub enum AnyField {
+    Prime(GfPrime),
+    Ext(Gf2e),
+}
+
+impl AnyField {
+    /// Parse a field spec: `"prime:786433"` / `"786433"` / `"gf2e:8"`.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        if let Some(rest) = spec.strip_prefix("gf2e:") {
+            let w: u32 = rest.parse()?;
+            Ok(AnyField::Ext(Gf2e::new(w)?))
+        } else {
+            let p: u64 = spec.strip_prefix("prime:").unwrap_or(spec).parse()?;
+            Ok(AnyField::Prime(GfPrime::new(p)?))
+        }
+    }
+}
+
+macro_rules! dispatch {
+    ($self:ident, $f:ident ( $($arg:expr),* )) => {
+        match $self {
+            AnyField::Prime(g) => g.$f($($arg),*),
+            AnyField::Ext(g) => g.$f($($arg),*),
+        }
+    };
+}
+
+impl Field for AnyField {
+    fn order(&self) -> u64 {
+        dispatch!(self, order())
+    }
+    fn add(&self, a: u64, b: u64) -> u64 {
+        dispatch!(self, add(a, b))
+    }
+    fn sub(&self, a: u64, b: u64) -> u64 {
+        dispatch!(self, sub(a, b))
+    }
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        dispatch!(self, mul(a, b))
+    }
+    fn inv(&self, a: u64) -> u64 {
+        dispatch!(self, inv(a))
+    }
+    fn generator(&self) -> u64 {
+        dispatch!(self, generator())
+    }
+    fn elem(&self, x: u64) -> u64 {
+        dispatch!(self, elem(x))
+    }
+    fn lincomb_into(&self, acc: &mut [u64], terms: &[(u64, &[u64])]) {
+        dispatch!(self, lincomb_into(acc, terms))
+    }
+    fn lazy_chunk(&self) -> usize {
+        dispatch!(self, lazy_chunk())
+    }
+    fn lazy_mul_acc(&self, acc: u64, c: u64, s: u64) -> u64 {
+        dispatch!(self, lazy_mul_acc(acc, c, s))
+    }
+    fn lazy_reduce(&self, x: u64) -> u64 {
+        dispatch!(self, lazy_reduce(x))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn any_field_parse() {
+        let f = AnyField::parse("786433").unwrap();
+        assert_eq!(f.order(), 786433);
+        let f = AnyField::parse("prime:65537").unwrap();
+        assert_eq!(f.order(), 65537);
+        let f = AnyField::parse("gf2e:8").unwrap();
+        assert_eq!(f.order(), 256);
+        assert_eq!(f.bits(), 8);
+    }
+
+    #[test]
+    fn bits_is_ceil_log2_q() {
+        assert_eq!(AnyField::parse("786433").unwrap().bits(), 20);
+        assert_eq!(AnyField::parse("65537").unwrap().bits(), 17);
+        assert_eq!(AnyField::parse("gf2e:4").unwrap().bits(), 4);
+    }
+}

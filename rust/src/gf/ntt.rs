@@ -1,0 +1,161 @@
+//! Number-theoretic transform — the `O(n log n)` *local computation*
+//! counterpart of §V-A's *in-network* FFT.
+//!
+//! The paper distributes the Cooley–Tukey recursion across processors
+//! (each §V-A step is one butterfly level, executed as grouped A2As).
+//! Locally, the same recursion gives each processor a fast way to
+//! evaluate/interpolate on structured point sets — used by the codes
+//! layer for `O(n log n)` RS encode/decode over the default NTT-friendly
+//! prime (`q = 786433 = 3·2^18 + 1` supports power-of-two sizes up to
+//! `2^18`).
+
+use super::Field;
+
+/// In-place radix-2 decimation-in-time NTT (size `n = 2^s | q−1`),
+/// bit-reversed input order handled internally: `data[j] ← f(β^j)` for
+/// the polynomial with coefficients `data` and `β` the primitive `n`-th
+/// root.
+pub fn ntt<F: Field>(f: &F, data: &mut [u64]) -> anyhow::Result<()> {
+    transform(f, data, false)
+}
+
+/// Inverse NTT: evaluations at all `n`-th roots → coefficients.
+pub fn intt<F: Field>(f: &F, data: &mut [u64]) -> anyhow::Result<()> {
+    transform(f, data, true)?;
+    let n_inv = f.inv(f.elem(data.len() as u64));
+    for x in data.iter_mut() {
+        *x = f.mul(*x, n_inv);
+    }
+    Ok(())
+}
+
+fn transform<F: Field>(f: &F, data: &mut [u64], invert: bool) -> anyhow::Result<()> {
+    let n = data.len();
+    anyhow::ensure!(n.is_power_of_two(), "NTT size must be a power of two");
+    let mut root = f
+        .root_of_unity(n as u64)
+        .ok_or_else(|| anyhow::anyhow!("{n} must divide q−1"))?;
+    if invert {
+        root = f.inv(root);
+    }
+    // Bit-reversal permutation.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u64).reverse_bits() >> (64 - bits) as u64;
+        let j = j as usize;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    // Butterfly levels.
+    let mut len = 2;
+    while len <= n {
+        let wlen = f.pow(root, (n / len) as u64);
+        for start in (0..n).step_by(len) {
+            let mut w = f.one();
+            for i in 0..len / 2 {
+                let u = data[start + i];
+                let v = f.mul(data[start + i + len / 2], w);
+                data[start + i] = f.add(u, v);
+                data[start + i + len / 2] = f.sub(u, v);
+                w = f.mul(w, wlen);
+            }
+        }
+        len <<= 1;
+    }
+    Ok(())
+}
+
+/// Multiply two polynomials in `O(n log n)` via NTT (prime fields with
+/// enough 2-adicity; falls back to the caller's schoolbook for others).
+pub fn poly_mul_fast<F: Field>(f: &F, a: &[u64], b: &[u64]) -> anyhow::Result<Vec<u64>> {
+    if a.is_empty() || b.is_empty() {
+        return Ok(vec![]);
+    }
+    let out_len = a.len() + b.len() - 1;
+    let n = out_len.next_power_of_two();
+    let mut fa = a.to_vec();
+    fa.resize(n, 0);
+    let mut fb = b.to_vec();
+    fb.resize(n, 0);
+    ntt(f, &mut fa)?;
+    ntt(f, &mut fb)?;
+    for (x, y) in fa.iter_mut().zip(&fb) {
+        *x = f.mul(*x, *y);
+    }
+    intt(f, &mut fa)?;
+    fa.truncate(out_len);
+    Ok(fa)
+}
+
+/// Evaluate a polynomial at *all* `n`-th roots of unity in `O(n log n)`
+/// (the bulk-evaluation primitive behind fast RS encoding).
+pub fn evaluate_at_roots<F: Field>(f: &F, coeffs: &[u64], n: usize) -> anyhow::Result<Vec<u64>> {
+    anyhow::ensure!(coeffs.len() <= n, "degree must be < n");
+    let mut data = coeffs.to_vec();
+    data.resize(n, 0);
+    ntt(f, &mut data)?;
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::{poly, GfPrime};
+
+    fn f() -> GfPrime {
+        GfPrime::default_field()
+    }
+
+    #[test]
+    fn ntt_matches_naive_evaluation() {
+        let f = f();
+        for n in [2usize, 8, 64, 256] {
+            let coeffs: Vec<u64> = (0..n as u64).map(|i| f.elem(i * 37 + 5)).collect();
+            let beta = f.root_of_unity(n as u64).unwrap();
+            let fast = evaluate_at_roots(&f, &coeffs, n).unwrap();
+            for j in 0..n {
+                let pt = f.pow(beta, j as u64);
+                assert_eq!(fast[j], poly::eval(&f, &coeffs, pt), "n={n} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn intt_inverts_ntt() {
+        let f = f();
+        let orig: Vec<u64> = (0..128u64).map(|i| f.elem(i * i + 3)).collect();
+        let mut data = orig.clone();
+        ntt(&f, &mut data).unwrap();
+        intt(&f, &mut data).unwrap();
+        assert_eq!(data, orig);
+    }
+
+    #[test]
+    fn fast_poly_mul_matches_schoolbook() {
+        let f = f();
+        let a: Vec<u64> = (1..=33u64).collect();
+        let b: Vec<u64> = (5..=24u64).map(|i| f.elem(i * 11)).collect();
+        assert_eq!(poly_mul_fast(&f, &a, &b).unwrap(), poly::mul(&f, &a, &b));
+    }
+
+    #[test]
+    fn rejects_unsupported_sizes() {
+        let f = f();
+        let mut d = vec![1u64; 3];
+        assert!(ntt(&f, &mut d).is_err()); // not a power of two
+        let mut d = vec![1u64; 1 << 19];
+        assert!(ntt(&f, &mut d).is_err()); // 2^19 ∤ q−1
+    }
+
+    #[test]
+    fn matches_dft_matrix_product() {
+        // The NTT is exactly multiplication by D_n (eq. (8)).
+        let f = f();
+        let n = 16usize;
+        let coeffs: Vec<u64> = (0..n as u64).map(|i| f.elem(i + 2)).collect();
+        let d = crate::gf::dft::dft_matrix(&f, n).unwrap();
+        let slow = d.vec_mul(&f, &coeffs);
+        assert_eq!(evaluate_at_roots(&f, &coeffs, n).unwrap(), slow);
+    }
+}

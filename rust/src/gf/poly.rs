@@ -1,0 +1,191 @@
+//! Polynomials over `F_q`: evaluation, interpolation, products.
+//!
+//! The paper's specific algorithms are polynomial-evaluation algorithms in
+//! disguise — every processor `P_k` of §V requires `f(α_k)` for the data
+//! polynomial `f(z) = Σ x_k z^k` (eq. (5)) — and the systematic-RS
+//! decomposition (Theorem 6) is a statement about Lagrange basis
+//! polynomials. This module is the local-computation substrate for both,
+//! and the decoder of `codes::rs`.
+
+use super::Field;
+
+/// Evaluate `Σ coeffs[i]·z^i` at `z` (Horner).
+pub fn eval<F: Field>(f: &F, coeffs: &[u64], z: u64) -> u64 {
+    let mut acc = 0u64;
+    for &c in coeffs.iter().rev() {
+        acc = f.mul_add(c, acc, z);
+    }
+    acc
+}
+
+/// Evaluate at many points.
+pub fn eval_many<F: Field>(f: &F, coeffs: &[u64], zs: &[u64]) -> Vec<u64> {
+    zs.iter().map(|&z| eval(f, coeffs, z)).collect()
+}
+
+/// Multiply two polynomials (coefficient vectors).
+pub fn mul<F: Field>(f: &F, a: &[u64], b: &[u64]) -> Vec<u64> {
+    if a.is_empty() || b.is_empty() {
+        return vec![];
+    }
+    let mut out = vec![0u64; a.len() + b.len() - 1];
+    for (i, &ai) in a.iter().enumerate() {
+        if ai == 0 {
+            continue;
+        }
+        for (j, &bj) in b.iter().enumerate() {
+            out[i + j] = f.mul_add(out[i + j], ai, bj);
+        }
+    }
+    out
+}
+
+/// `∏ (z − roots[i])` as a coefficient vector (monic, degree = #roots).
+pub fn from_roots<F: Field>(f: &F, roots: &[u64]) -> Vec<u64> {
+    let mut out = vec![f.one()];
+    for &r in roots {
+        out = mul(f, &out, &[f.neg(r), f.one()]);
+    }
+    out
+}
+
+/// Synthetic division of `poly` by the monic linear factor `(z − root)`.
+/// Returns the quotient; panics if `root` is not actually a root... it is
+/// the caller's job to only divide by true roots (remainder is discarded,
+/// asserted in debug builds).
+pub fn div_linear<F: Field>(f: &F, poly: &[u64], root: u64) -> Vec<u64> {
+    let n = poly.len();
+    assert!(n >= 1);
+    let mut q = vec![0u64; n - 1];
+    let mut carry = 0u64;
+    for i in (0..n).rev() {
+        let v = f.mul_add(poly[i], carry, root);
+        if i == 0 {
+            debug_assert_eq!(v, 0, "div_linear: not a root");
+        } else {
+            q[i - 1] = v;
+            carry = v;
+        }
+    }
+    q
+}
+
+/// Lagrange interpolation: the unique polynomial of degree `< n` through
+/// `(points[i], values[i])` for `n` distinct points. `O(n²)`.
+pub fn interpolate<F: Field>(f: &F, points: &[u64], values: &[u64]) -> Vec<u64> {
+    assert_eq!(points.len(), values.len());
+    let n = points.len();
+    if n == 0 {
+        return vec![];
+    }
+    // master(z) = ∏ (z − x_i)
+    let master = from_roots(f, points);
+    let mut out = vec![0u64; n];
+    for i in 0..n {
+        // ℓ_i(z) = master / (z − x_i) / ∏_{j≠i}(x_i − x_j)
+        let num = div_linear(f, &master, points[i]);
+        let mut denom = f.one();
+        for j in 0..n {
+            if j != i {
+                denom = f.mul(denom, f.sub(points[i], points[j]));
+            }
+        }
+        let scale = f.mul(values[i], f.inv(denom));
+        for (o, &c) in out.iter_mut().zip(&num) {
+            *o = f.mul_add(*o, scale, c);
+        }
+    }
+    out
+}
+
+/// Coefficients of the `i`-th Lagrange basis polynomial
+/// `ℓ_i(z) = ∏_{j≠i} (z − x_j)/(x_i − x_j)` — eq. (28) of the paper.
+pub fn lagrange_basis<F: Field>(f: &F, points: &[u64], i: usize) -> Vec<u64> {
+    let master = from_roots(f, points);
+    let num = div_linear(f, &master, points[i]);
+    let mut denom = f.one();
+    for (j, &xj) in points.iter().enumerate() {
+        if j != i {
+            denom = f.mul(denom, f.sub(points[i], xj));
+        }
+    }
+    let dinv = f.inv(denom);
+    num.iter().map(|&c| f.mul(c, dinv)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::{Gf2e, GfPrime};
+
+    fn f() -> GfPrime {
+        GfPrime::new(786433).unwrap()
+    }
+
+    #[test]
+    fn horner_matches_naive() {
+        let f = f();
+        let coeffs = [3u64, 0, 7, 123456, 1];
+        for z in [0u64, 1, 2, 786432, 55555] {
+            let mut naive = 0;
+            for (i, &c) in coeffs.iter().enumerate() {
+                naive = f.add(naive, f.mul(c, f.pow(z, i as u64)));
+            }
+            assert_eq!(eval(&f, &coeffs, z), naive);
+        }
+    }
+
+    #[test]
+    fn interpolation_roundtrip() {
+        let f = f();
+        let coeffs: Vec<u64> = (0..12).map(|i| f.elem(i * i * 37 + 11)).collect();
+        let points: Vec<u64> = (1..=12).collect();
+        let values = eval_many(&f, &coeffs, &points);
+        let back = interpolate(&f, &points, &values);
+        assert_eq!(back, coeffs);
+    }
+
+    #[test]
+    fn interpolation_roundtrip_gf256() {
+        let f = Gf2e::new(8).unwrap();
+        let coeffs: Vec<u64> = (0..10).map(|i| (i * 29 + 3) % 256).collect();
+        let points: Vec<u64> = (1..=10).collect();
+        let values = eval_many(&f, &coeffs, &points);
+        assert_eq!(interpolate(&f, &points, &values), coeffs);
+    }
+
+    #[test]
+    fn from_roots_vanishes_on_roots() {
+        let f = f();
+        let roots = [5u64, 99, 1234, 786000];
+        let poly = from_roots(&f, &roots);
+        assert_eq!(poly.len(), 5);
+        assert_eq!(*poly.last().unwrap(), 1); // monic
+        for &r in &roots {
+            assert_eq!(eval(&f, &poly, r), 0);
+        }
+        assert_ne!(eval(&f, &poly, 6), 0);
+    }
+
+    #[test]
+    fn div_linear_inverts_mul() {
+        let f = f();
+        let q = [7u64, 3, 0, 9];
+        let root = 42u64;
+        let prod = mul(&f, &q, &[f.neg(root), 1]);
+        assert_eq!(div_linear(&f, &prod, root), q);
+    }
+
+    #[test]
+    fn lagrange_basis_is_indicator() {
+        let f = f();
+        let points = [2u64, 7, 100, 2024, 99999];
+        for i in 0..points.len() {
+            let li = lagrange_basis(&f, &points, i);
+            for (j, &xj) in points.iter().enumerate() {
+                let expect = if i == j { 1 } else { 0 };
+                assert_eq!(eval(&f, &li, xj), expect);
+            }
+        }
+    }
+}

@@ -1,0 +1,362 @@
+//! Prime fields `F_p` for odd primes `p < 2^31`.
+//!
+//! The default field of the repository is `p = 786433 = 3·2^18 + 1`, an
+//! NTT-friendly prime whose multiplicative group contains `2^18`-th roots
+//! of unity — exactly the structure §V-A of the paper needs (`K | q − 1`,
+//! `K = P^H`).
+//!
+//! Multiplication uses Barrett reduction (a single `u128` multiply and a
+//! correction step) rather than `%`, which matters in the payload hot loop
+//! — see EXPERIMENTS.md §Perf.
+
+use super::Field;
+
+/// A prime field `F_p`, `3 ≤ p < 2^31`.
+#[derive(Clone, Copy)]
+pub struct GfPrime {
+    p: u64,
+    /// Barrett constant `⌊2^64 / p⌋`.
+    barrett: u64,
+    generator: u64,
+}
+
+impl std::fmt::Debug for GfPrime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GF({})", self.p)
+    }
+}
+
+/// The repository's default prime: `786433 = 3·2^18 + 1`.
+pub const DEFAULT_PRIME: u64 = 786433;
+
+impl GfPrime {
+    /// Construct `F_p`. Fails if `p` is not an odd prime below `2^31`.
+    pub fn new(p: u64) -> anyhow::Result<Self> {
+        anyhow::ensure!(p >= 3 && p < (1 << 31), "prime must be in [3, 2^31)");
+        anyhow::ensure!(is_prime(p), "{p} is not prime");
+        let generator = find_generator(p);
+        // μ = ⌊2^64 / p⌋; since p is odd it never divides 2^64, so
+        // ⌊(2^64 − 1)/p⌋ == ⌊2^64/p⌋. With x < p² < 2^62 the estimate
+        // q = ⌊x·μ / 2^64⌋ satisfies ⌊x/p⌋ − 1 ≤ q ≤ ⌊x/p⌋, so a single
+        // conditional subtraction completes the reduction.
+        Ok(GfPrime {
+            p,
+            barrett: u64::MAX / p,
+            generator,
+        })
+    }
+
+    /// The default NTT-friendly field `F_786433`.
+    pub fn default_field() -> Self {
+        Self::new(DEFAULT_PRIME).expect("default prime is prime")
+    }
+
+    /// The modulus `p`.
+    #[inline]
+    pub fn modulus(&self) -> u64 {
+        self.p
+    }
+
+    /// Reduce `x < p^2 < 2^62` modulo `p` via Barrett reduction.
+    #[inline(always)]
+    fn reduce(&self, x: u64) -> u64 {
+        // q = ⌊x·μ / 2^64⌋ ≈ ⌊x/p⌋ (may be off by one, never over).
+        let q = ((x as u128 * self.barrett as u128) >> 64) as u64;
+        let r = x - q * self.p;
+        if r >= self.p {
+            r - self.p
+        } else {
+            r
+        }
+    }
+
+    /// Reduce any `x < 2^64` modulo `p` (the Barrett estimate can be off
+    /// by up to 2 for x near 2^64, hence the loop — at most two
+    /// subtractions).
+    #[inline(always)]
+    fn reduce_wide(&self, x: u64) -> u64 {
+        let q = ((x as u128 * self.barrett as u128) >> 64) as u64;
+        let mut r = x - q.wrapping_mul(self.p);
+        while r >= self.p {
+            r -= self.p;
+        }
+        r
+    }
+}
+
+impl Field for GfPrime {
+    #[inline]
+    fn order(&self) -> u64 {
+        self.p
+    }
+
+    #[inline(always)]
+    fn add(&self, a: u64, b: u64) -> u64 {
+        let s = a + b;
+        if s >= self.p {
+            s - self.p
+        } else {
+            s
+        }
+    }
+
+    #[inline(always)]
+    fn sub(&self, a: u64, b: u64) -> u64 {
+        if a >= b {
+            a - b
+        } else {
+            a + self.p - b
+        }
+    }
+
+    #[inline(always)]
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.p && b < self.p);
+        self.reduce(a * b)
+    }
+
+    fn inv(&self, a: u64) -> u64 {
+        assert!(a != 0, "division by zero in GF({})", self.p);
+        // Extended Euclid on (a, p); p prime so gcd == 1.
+        let (mut t, mut new_t): (i64, i64) = (0, 1);
+        let (mut r, mut new_r): (i64, i64) = (self.p as i64, a as i64);
+        while new_r != 0 {
+            let q = r / new_r;
+            (t, new_t) = (new_t, t - q * new_t);
+            (r, new_r) = (new_r, r - q * new_r);
+        }
+        debug_assert_eq!(r, 1);
+        t.rem_euclid(self.p as i64) as u64
+    }
+
+    #[inline]
+    fn generator(&self) -> u64 {
+        self.generator
+    }
+
+    /// Delayed reduction: raw products `c·s < (p−1)²` are accumulated
+    /// unreduced; with `T = ⌊(2^64 − p)/(p−1)²⌋` terms per chunk the
+    /// running sum never overflows, and one Barrett reduction per chunk
+    /// (instead of per term) closes it. For the default `p ≈ 2^20` this
+    /// is ~16700 terms per reduction — effectively one per combine.
+    fn lazy_chunk(&self) -> usize {
+        let p1 = self.p - 1;
+        (((u64::MAX - self.p) / (p1 * p1)) as usize).max(1)
+    }
+
+    #[inline(always)]
+    fn lazy_mul_acc(&self, acc: u64, c: u64, s: u64) -> u64 {
+        acc + c * s // raw product ≤ (p−1)²; sum bounded by lazy_chunk
+    }
+
+    #[inline(always)]
+    fn lazy_reduce(&self, x: u64) -> u64 {
+        self.reduce_wide(x)
+    }
+}
+
+/// Deterministic Miller–Rabin, exact for all `u64` with these witnesses.
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n % p == 0 {
+            return n == p;
+        }
+    }
+    let mut d = n - 1;
+    let mut s = 0;
+    while d % 2 == 0 {
+        d /= 2;
+        s += 1;
+    }
+    'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = pow_mod(a % n, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = mul_mod(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+fn mul_mod(a: u64, b: u64, m: u64) -> u64 {
+    ((a as u128 * b as u128) % m as u128) as u64
+}
+
+fn pow_mod(mut a: u64, mut e: u64, m: u64) -> u64 {
+    let mut acc = 1u64;
+    a %= m;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = mul_mod(acc, a, m);
+        }
+        a = mul_mod(a, a, m);
+        e >>= 1;
+    }
+    acc
+}
+
+/// Find the smallest generator of `F_p^*` by factoring `p − 1`.
+fn find_generator(p: u64) -> u64 {
+    let factors = prime_factors(p - 1);
+    'cand: for g in 2..p {
+        for &f in &factors {
+            if pow_mod(g, (p - 1) / f, p) == 1 {
+                continue 'cand;
+            }
+        }
+        return g;
+    }
+    unreachable!("F_p^* is cyclic, a generator exists")
+}
+
+/// Distinct prime factors by trial division (fine for p − 1 < 2^31).
+pub fn prime_factors(mut n: u64) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut d = 2;
+    while d * d <= n {
+        if n % d == 0 {
+            out.push(d);
+            while n % d == 0 {
+                n /= d;
+            }
+        }
+        d += 1;
+    }
+    if n > 1 {
+        out.push(n);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_prime_structure() {
+        // 786432 = 2^18 · 3, so K = 2^H roots of unity exist up to H = 18.
+        assert!(is_prime(DEFAULT_PRIME));
+        assert_eq!(DEFAULT_PRIME - 1, (1 << 18) * 3);
+    }
+
+    #[test]
+    fn arithmetic_identities() {
+        let f = GfPrime::default_field();
+        let p = f.modulus();
+        for a in [0u64, 1, 2, 17, p - 2, p - 1, 12345, 700001] {
+            assert_eq!(f.add(a, f.neg(a)), 0);
+            assert_eq!(f.sub(a, a), 0);
+            if a != 0 {
+                assert_eq!(f.mul(a, f.inv(a)), 1, "a={a}");
+            }
+            assert_eq!(f.mul(a, 1), a);
+            assert_eq!(f.mul(a, 0), 0);
+        }
+    }
+
+    #[test]
+    fn barrett_matches_naive() {
+        let f = GfPrime::default_field();
+        let p = f.modulus();
+        let mut x = 0x9E3779B97F4A7C15u64;
+        for _ in 0..10_000 {
+            x = x.wrapping_mul(0xBF58476D1CE4E5B9).wrapping_add(1);
+            let a = x % p;
+            let b = (x >> 32) % p;
+            assert_eq!(f.mul(a, b), (a as u128 * b as u128 % p as u128) as u64);
+        }
+    }
+
+    #[test]
+    fn generator_has_full_order() {
+        for p in [786433u64, 65537, 257, 13] {
+            let f = GfPrime::new(p).unwrap();
+            let g = f.generator();
+            assert_eq!(f.pow(g, p - 1), 1);
+            for &q in &prime_factors(p - 1) {
+                assert_ne!(f.pow(g, (p - 1) / q), 1, "g not primitive mod {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn roots_of_unity() {
+        let f = GfPrime::default_field();
+        let w = f.root_of_unity(512).unwrap();
+        assert_eq!(f.pow(w, 512), 1);
+        assert_ne!(f.pow(w, 256), 1);
+        assert!(f.root_of_unity(5).is_none()); // 5 ∤ 786432
+    }
+
+    #[test]
+    fn pow_edge_cases() {
+        let f = GfPrime::new(13).unwrap();
+        assert_eq!(f.pow(0, 0), 1);
+        assert_eq!(f.pow(0, 5), 0);
+        assert_eq!(f.pow(5, 0), 1);
+        assert_eq!(f.pow(2, 12), 1); // Fermat
+    }
+
+    #[test]
+    fn lincomb_matches_naive_all_field_sizes() {
+        // Exercise both the "one reduction per call" regime (small p) and
+        // the chunked regime (p near 2^31 ⇒ ~4 terms per chunk).
+        for p in [786433u64, 65537, 2147483647] {
+            let f = GfPrime::new(p).unwrap();
+            let mut rng = crate::util::Rng::new(p);
+            let w = 37;
+            let n_terms = 100;
+            let srcs: Vec<Vec<u64>> = (0..n_terms)
+                .map(|_| (0..w).map(|_| rng.below(p)).collect())
+                .collect();
+            let coeffs: Vec<u64> = (0..n_terms).map(|_| rng.below(p)).collect();
+            let init: Vec<u64> = (0..w).map(|_| rng.below(p)).collect();
+
+            let mut fast = init.clone();
+            let terms: Vec<(u64, &[u64])> = coeffs
+                .iter()
+                .zip(&srcs)
+                .map(|(&c, s)| (c, s.as_slice()))
+                .collect();
+            f.lincomb_into(&mut fast, &terms);
+
+            let mut naive = init;
+            for (&c, s) in coeffs.iter().zip(&srcs) {
+                for (a, &x) in naive.iter_mut().zip(s) {
+                    *a = f.mul_add(*a, c, x);
+                }
+            }
+            assert_eq!(fast, naive, "p={p}");
+        }
+    }
+
+    #[test]
+    fn reduce_wide_full_range() {
+        let f = GfPrime::default_field();
+        let p = f.modulus();
+        for x in [0u64, 1, p - 1, p, p + 1, u64::MAX, u64::MAX - 1, 1 << 63] {
+            assert_eq!(f.reduce_wide(x), x % p, "x={x}");
+        }
+        let f = GfPrime::new(2147483647).unwrap();
+        for x in [u64::MAX, (1 << 62) + 12345, 4611686018427387904] {
+            assert_eq!(f.reduce_wide(x), x % 2147483647, "x={x}");
+        }
+    }
+
+    #[test]
+    fn rejects_non_primes() {
+        assert!(GfPrime::new(1).is_err());
+        assert!(GfPrime::new(4).is_err());
+        assert!(GfPrime::new(1048575).is_err());
+        assert!(GfPrime::new(1 << 32).is_err());
+    }
+}

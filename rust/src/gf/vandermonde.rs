@@ -1,0 +1,109 @@
+//! Vandermonde matrices and their structured inverses.
+//!
+//! Convention (matching the paper, §V): the matrix is indexed
+//! `V[i][j] = x_j^i` — *column* `j` holds the powers of evaluation point
+//! `x_j`, so the all-to-all encode `x · V` hands processor `j` the
+//! evaluation `f(x_j)` of the data polynomial.
+
+use super::{poly, Field, Mat};
+
+/// `rows × points.len()` Vandermonde: `V[i][j] = points[j]^i`.
+pub fn vandermonde<F: Field>(f: &F, rows: usize, points: &[u64]) -> Mat {
+    let mut m = Mat::zero(rows, points.len());
+    for (j, &x) in points.iter().enumerate() {
+        let mut p = f.one();
+        for i in 0..rows {
+            m[(i, j)] = p;
+            p = f.mul(p, x);
+        }
+    }
+    m
+}
+
+/// Square Vandermonde on `points`.
+pub fn square<F: Field>(f: &F, points: &[u64]) -> Mat {
+    vandermonde(f, points.len(), points)
+}
+
+/// Inverse of the square Vandermonde on distinct `points`, via Lagrange
+/// basis coefficients (eq. (28)): row `j` of `V^{-1}` is the coefficient
+/// vector of `ℓ_j(z)`, since `(V^{-1}·V)[j][j'] = ℓ_j(x_{j'}) = δ_{jj'}`.
+/// `O(n²)` instead of Gauss–Jordan's `O(n³)`.
+pub fn inverse<F: Field>(f: &F, points: &[u64]) -> Mat {
+    let n = points.len();
+    let master = poly::from_roots(f, points);
+    let mut m = Mat::zero(n, n);
+    for j in 0..n {
+        let num = poly::div_linear(f, &master, points[j]);
+        let mut denom = f.one();
+        for (t, &xt) in points.iter().enumerate() {
+            if t != j {
+                denom = f.mul(denom, f.sub(points[j], xt));
+            }
+        }
+        let dinv = f.inv(denom);
+        for (i, &c) in num.iter().enumerate() {
+            m[(j, i)] = f.mul(c, dinv);
+        }
+    }
+    m
+}
+
+/// Check that all points are distinct (a Vandermonde is invertible iff so).
+pub fn points_distinct(points: &[u64]) -> bool {
+    let mut sorted = points.to_vec();
+    sorted.sort_unstable();
+    sorted.windows(2).all(|w| w[0] != w[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::{Field, Gf2e, GfPrime};
+
+    #[test]
+    fn structured_inverse_matches_gauss_jordan() {
+        let f = GfPrime::new(786433).unwrap();
+        let points = [3u64, 17, 86, 1000, 786432, 12];
+        let v = square(&f, &points);
+        let fast = inverse(&f, &points);
+        let slow = v.inverse(&f).unwrap();
+        assert_eq!(fast, slow);
+        assert_eq!(v.mul(&f, &fast), Mat::identity(&f, 6));
+    }
+
+    #[test]
+    fn inverse_in_gf256() {
+        let f = Gf2e::new(8).unwrap();
+        let points: Vec<u64> = (1..=9).collect();
+        let v = square(&f, &points);
+        let vinv = inverse(&f, &points);
+        assert_eq!(v.mul(&f, &vinv), Mat::identity(&f, 9));
+    }
+
+    #[test]
+    fn encode_is_polynomial_evaluation() {
+        let f = GfPrime::new(786433).unwrap();
+        let points = [9u64, 81, 7, 55];
+        let v = square(&f, &points);
+        let x = [5u64, 0, 3, 786001];
+        let y = v.vec_mul(&f, &x);
+        for (j, &pt) in points.iter().enumerate() {
+            assert_eq!(y[j], poly::eval(&f, &x, pt));
+        }
+    }
+
+    #[test]
+    fn rectangular_vandermonde_shape() {
+        let f = GfPrime::new(65537).unwrap();
+        let v = vandermonde(&f, 3, &[1, 2, 3, 4, 5]);
+        assert_eq!((v.rows, v.cols), (3, 5));
+        assert_eq!(v[(2, 3)], f.pow(4, 2));
+    }
+
+    #[test]
+    fn distinctness_guard() {
+        assert!(points_distinct(&[1, 2, 3]));
+        assert!(!points_distinct(&[1, 2, 1]));
+    }
+}

@@ -1,0 +1,40 @@
+//! # dce — Decentralized Coding Engine
+//!
+//! A production-oriented reproduction of *"On the Encoding Process in
+//! Decentralized Systems"* (Wang & Raviv, 2024): decentralized encoding of
+//! systematic (and non-systematic) linear codes in a fully-connected,
+//! multi-port, round-based network, built around the paper's **all-to-all
+//! encode** collective.
+//!
+//! The crate is layered bottom-up:
+//!
+//! * [`gf`] — finite fields, matrices, polynomials, structured matrices;
+//! * [`net`] — the paper's communication model as an executable,
+//!   port-enforcing round simulator with exact `C1`/`C2` accounting;
+//! * [`collectives`] — broadcast/reduce/all-gather, the universal
+//!   **prepare-and-shoot** A2A (§IV), the specific **DFT** (§V-A),
+//!   **draw-and-loose** (§V-B) and **Cauchy-like** (§VI) A2As, plus the
+//!   multi-reduce and direct-transfer baselines;
+//! * [`framework`] — the §III / Appendix B decentralized-encoding
+//!   frameworks and every closed-form cost expression in the paper;
+//! * [`codes`] — GRS / systematic RS / Lagrange codes and the structured
+//!   evaluation-point designs that make the specific algorithms apply;
+//! * [`coordinator`] — the deployable layer: config, planner, jobs,
+//!   verification, metrics, and a threaded batch-encode service;
+//! * [`runtime`] — the PJRT bridge that loads the AOT-compiled Pallas
+//!   GF(p) kernel (`artifacts/*.hlo.txt`) for the bulk-encode hot path.
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
+//! the measured-vs-theory tables.
+
+pub mod codes;
+pub mod collectives;
+pub mod coordinator;
+pub mod framework;
+pub mod gf;
+pub mod net;
+pub mod runtime;
+pub mod util;
+
+pub use gf::{Field, GfPrime, Mat};
+pub use net::{CostModel, SimReport};

@@ -1,0 +1,335 @@
+//! `dce` — the launcher.
+//!
+//! ```text
+//! dce run [--config FILE] [--k N --r N --w N --ports N --algorithm A ...]
+//! dce table1 [--ports-max P]          # regenerate Table I rows
+//! dce sweep --what rs|baselines       # cost-comparison sweeps
+//! dce service [--workers N --requests N --w N]
+//! dce info
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline environment has no clap.)
+
+use anyhow::{Context, Result};
+use dce::coordinator::{EncodeJob, JobConfig};
+use dce::framework::costs;
+use dce::gf::{Field, GfPrime};
+use std::collections::HashMap;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, rest) = match args.split_first() {
+        Some((c, rest)) => (c.as_str(), rest),
+        None => {
+            print_usage();
+            return Ok(());
+        }
+    };
+    let flags = parse_flags(rest)?;
+    match cmd {
+        "run" => cmd_run(&flags),
+        "table1" => cmd_table1(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "service" => cmd_service(&flags),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?} (try `dce help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "dce — Decentralized Coding Engine\n\
+         \n\
+         USAGE:\n\
+         \x20 dce run      [--config FILE] [--k N] [--r N] [--w N] [--ports N]\n\
+         \x20              [--algorithm auto|rs-specific|universal|multi-reduce|direct]\n\
+         \x20              [--code rs-structured|rs-plain|lagrange|random]\n\
+         \x20              [--verify native|pjrt|off] [--alpha F] [--beta F] [--json]\n\
+         \x20 dce table1   [--ports-max P]      regenerate Table I (measured vs formula)\n\
+         \x20 dce sweep    --what rs|baselines  cost-comparison sweeps\n\
+         \x20 dce service  [--workers N] [--requests N] [--w N]\n\
+         \x20 dce info                          environment / artifact status"
+    );
+}
+
+fn parse_flags(rest: &[String]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < rest.len() {
+        let k = rest[i]
+            .strip_prefix("--")
+            .with_context(|| format!("expected --flag, got {:?}", rest[i]))?;
+        if k == "json" {
+            out.insert("json".into(), "true".into());
+            i += 1;
+            continue;
+        }
+        let v = rest
+            .get(i + 1)
+            .with_context(|| format!("--{k} needs a value"))?;
+        out.insert(k.to_string(), v.clone());
+        i += 2;
+    }
+    Ok(out)
+}
+
+fn config_from_flags(flags: &HashMap<String, String>) -> Result<JobConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => JobConfig::load(std::path::Path::new(path))?,
+        None => JobConfig::default(),
+    };
+    if let Some(v) = flags.get("k") {
+        cfg.k = v.parse()?;
+    }
+    if let Some(v) = flags.get("r") {
+        cfg.r = v.parse()?;
+    }
+    if let Some(v) = flags.get("w") {
+        cfg.w = v.parse()?;
+    }
+    if let Some(v) = flags.get("ports") {
+        cfg.ports = v.parse()?;
+    }
+    if let Some(v) = flags.get("alpha") {
+        cfg.alpha = v.parse()?;
+    }
+    if let Some(v) = flags.get("beta") {
+        cfg.beta = v.parse()?;
+    }
+    if let Some(v) = flags.get("field") {
+        cfg.field = v.clone();
+    }
+    if let Some(v) = flags.get("code") {
+        cfg.code = v.parse()?;
+    }
+    if let Some(v) = flags.get("algorithm") {
+        cfg.algorithm = v.parse()?;
+    }
+    if let Some(v) = flags.get("verify") {
+        cfg.verify = v.parse()?;
+    }
+    if let Some(v) = flags.get("seed") {
+        cfg.seed = v.parse()?;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = config_from_flags(flags)?;
+    let job = EncodeJob::synthetic(cfg)?;
+    let report = job.run()?;
+    if flags.contains_key("json") {
+        println!("{}", report.to_json());
+    } else {
+        println!("{report}");
+    }
+    if report.verified == Some(false) {
+        anyhow::bail!("verification failed");
+    }
+    Ok(())
+}
+
+fn cmd_table1(flags: &HashMap<String, String>) -> Result<()> {
+    let pmax: usize = flags.get("ports-max").map_or(Ok(2), |v| v.parse())?;
+    println!("Table I — all-to-all encode costs (measured vs formula)");
+    println!(
+        "{:<10} {:>3} {:>4}  {:>8} {:>8}  {:>8} {:>8}  {:>10}",
+        "algorithm", "p", "K", "C1 meas", "C1 form", "C2 meas", "C2 form", "C2 lower"
+    );
+    let f = GfPrime::default_field();
+    for p in 1..=pmax {
+        for k in [16usize, 64, 256, 1024] {
+            let (rep, _) = support::run_universal(&f, k, p, k as u64)?;
+            let (c1f, c2f) = costs::theorem3_universal(k as u64, p as u64);
+            let lb = costs::lemma2_c2_lower_bound(k as u64, p as u64);
+            println!(
+                "{:<10} {:>3} {:>4}  {:>8} {:>8}  {:>8} {:>8}  {:>10.1}",
+                "universal", p, k, rep.c1, c1f, rep.c2, c2f, lb
+            );
+        }
+    }
+    for (p_base, h) in [(2u64, 4u32), (2, 8), (4, 4)] {
+        let k = dce::util::ipow(p_base, h) as usize;
+        let (rep, _) = support::run_dft(&f, p_base, h, 1)?;
+        let (c1f, c2f) = costs::theorem4_dft(p_base, h, 1);
+        println!(
+            "{:<10} {:>3} {:>4}  {:>8} {:>8}  {:>8} {:>8}  {:>10}",
+            "dft", 1, k, rep.c1, c1f, rep.c2, c2f, "-"
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
+    let what = flags.get("what").map(|s| s.as_str()).unwrap_or("rs");
+    match what {
+        "rs" => {
+            println!("systematic RS: specific vs universal (C2, one port, W=1)");
+            println!(
+                "{:>5} {:>5}  {:>10} {:>10} {:>8}",
+                "K", "R", "specific", "universal", "gain"
+            );
+            let f = GfPrime::default_field();
+            for (k, r) in [(16usize, 16usize), (64, 16), (64, 64), (256, 64)] {
+                let (spec, univ) = support::rs_spec_vs_univ(&f, k, r)?;
+                println!(
+                    "{k:>5} {r:>5}  {:>10} {:>10} {:>7.2}x",
+                    spec.c2,
+                    univ.c2,
+                    univ.c2 as f64 / spec.c2 as f64
+                );
+            }
+        }
+        "baselines" => {
+            println!("A2A baselines (one port, W=1): C2 and the §II gap");
+            println!(
+                "{:>5}  {:>10} {:>12} {:>10} {:>12}",
+                "K", "universal", "multireduce", "gap meas", "gap formula"
+            );
+            let f = GfPrime::default_field();
+            for k in [16usize, 64, 256] {
+                let (ps, mr) = support::univ_vs_multireduce(&f, k)?;
+                let gap = mr.c2 as i64 - ps.c2 as i64;
+                let formula = costs::multireduce_gap(k as u64, 1);
+                println!(
+                    "{k:>5}  {:>10} {:>12} {:>10} {:>12.1}",
+                    ps.c2, mr.c2, gap, formula
+                );
+            }
+        }
+        other => anyhow::bail!("unknown sweep {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_service(flags: &HashMap<String, String>) -> Result<()> {
+    let workers: usize = flags.get("workers").map_or(Ok(2), |v| v.parse())?;
+    let requests: usize = flags.get("requests").map_or(Ok(32), |v| v.parse())?;
+    let w: usize = flags.get("w").map_or(Ok(256), |v| v.parse())?;
+    let f = GfPrime::default_field();
+    let code = dce::codes::GrsCode::structured(&f, 64, 16, 2)?;
+    let parity = code.parity_matrix(&f);
+    let svc = dce::coordinator::EncodeService::start(
+        &f,
+        &parity,
+        std::path::Path::new("artifacts"),
+        256,
+        workers,
+        16,
+    )?;
+    let t0 = std::time::Instant::now();
+    let mut rng = dce::util::Rng::new(1);
+    let mut pending = Vec::new();
+    for _ in 0..requests {
+        let x: Vec<Vec<u64>> = (0..64)
+            .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+            .collect();
+        pending.push(svc.submit(x)?);
+    }
+    let mut ok = 0;
+    for rx in pending {
+        let resp = rx.recv()?;
+        if resp.y.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    println!(
+        "service: {ok}/{requests} requests ok in {wall:?} ({:.1} req/s, {:.2} Melem/s)",
+        requests as f64 / wall.as_secs_f64(),
+        (requests * 64 * w) as f64 / wall.as_secs_f64() / 1e6,
+    );
+    println!("metrics: {}", svc.metrics.to_json());
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let f = GfPrime::default_field();
+    println!(
+        "default field: GF({}) (q−1 = 2^18·3), {} wire bits",
+        f.order(),
+        f.bits()
+    );
+    match dce::runtime::Runtime::cpu() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e:#}"),
+    }
+    match dce::runtime::Manifest::load(std::path::Path::new("artifacts")) {
+        Ok(m) => println!("artifacts: {} entries", m.entries.len()),
+        Err(_) => println!("artifacts: none (run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+/// Small shared helpers for the CLI sweeps (mirrored by the benches).
+mod support {
+    use super::*;
+    use dce::collectives::{MultiReduce, PrepareShoot};
+    use dce::framework::{A2aAlgo, SystematicEncode};
+    use dce::gf::Mat;
+    use dce::net::{run, Collective, Packet, Sim, SimReport};
+    use std::sync::Arc;
+
+    pub fn run_universal(
+        f: &GfPrime,
+        k: usize,
+        p: usize,
+        seed: u64,
+    ) -> Result<(SimReport, Vec<Packet>)> {
+        let c = Arc::new(Mat::random(f, k, k, seed));
+        let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![f.elem(i + 1)]).collect();
+        let mut ps = PrepareShoot::new(*f, (0..k).collect(), p, c, inputs);
+        let rep = run(&mut Sim::new(p), &mut ps)?;
+        let outs = ps.outputs();
+        Ok((rep, (0..k).map(|i| outs[&i].clone()).collect()))
+    }
+
+    pub fn run_dft(
+        f: &GfPrime,
+        p_base: u64,
+        h: u32,
+        p: usize,
+    ) -> Result<(SimReport, Vec<Packet>)> {
+        let k = dce::util::ipow(p_base, h) as usize;
+        let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![f.elem(i + 1)]).collect();
+        let mut d =
+            dce::collectives::DftA2A::new(*f, (0..k).collect(), p, p_base, h, inputs, false)?;
+        let rep = run(&mut Sim::new(p), &mut d)?;
+        let outs = d.outputs();
+        Ok((rep, (0..k).map(|i| outs[&i].clone()).collect()))
+    }
+
+    pub fn rs_spec_vs_univ(f: &GfPrime, k: usize, r: usize) -> Result<(SimReport, SimReport)> {
+        let code = dce::codes::GrsCode::structured(f, k, r, 2)?;
+        let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![f.elem(i + 1)]).collect();
+        let mut spec = SystematicEncode::new_rs(*f, &code, inputs.clone(), 1)?;
+        let rep_s = run(&mut Sim::new(1), &mut spec)?;
+        let a = Arc::new(code.parity_matrix(f));
+        let mut univ = SystematicEncode::new(*f, a, inputs, 1, A2aAlgo::Universal)?;
+        let rep_u = run(&mut Sim::new(1), &mut univ)?;
+        Ok((rep_s, rep_u))
+    }
+
+    pub fn univ_vs_multireduce(f: &GfPrime, k: usize) -> Result<(SimReport, SimReport)> {
+        let c = Arc::new(Mat::random(f, k, k, 5));
+        let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![f.elem(i + 1)]).collect();
+        let mut ps = PrepareShoot::new(*f, (0..k).collect(), 1, c.clone(), inputs.clone());
+        let rep_ps = run(&mut Sim::new(1), &mut ps)?;
+        let mut mr = MultiReduce::new(*f, (0..k).collect(), 1, c, inputs);
+        let rep_mr = run(&mut Sim::new(1), &mut mr)?;
+        Ok((rep_ps, rep_mr))
+    }
+}

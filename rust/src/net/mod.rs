@@ -1,0 +1,27 @@
+//! The paper's communication model, executable.
+//!
+//! A fully-connected, homogeneous, **p-port** network operating in
+//! synchronous rounds: in every round each processor may send one message
+//! and receive one message through each of its `p` ports. Round `t` costs
+//! `α + β·m_t` where `m_t` is the size (in `F_q` elements) of the largest
+//! message in that round, so a full run costs
+//!
+//! ```text
+//! C = α·C1 + β⌈log2 q⌉·C2,   C1 = #rounds,   C2 = Σ_t m_t.
+//! ```
+//!
+//! [`sim::run`] executes a [`sim::Collective`] (an algorithm = scheduling
+//! + coding scheme) against this model, *enforcing* the port constraints
+//! and accounting `C1`/`C2` exactly as defined above.
+
+pub mod model;
+pub mod noisy;
+pub mod payload;
+pub mod sim;
+pub mod trace;
+
+pub use model::CostModel;
+pub use noisy::{ErasureChannel, InnerFec, NoisyCollective};
+pub use payload::{lincomb, pkt_add, pkt_add_scaled, pkt_scale, pkt_zero, Packet};
+pub use sim::{run, Collective, Msg, ProcId, Sim, SimReport};
+pub use trace::TraceEvent;

@@ -1,0 +1,50 @@
+//! The linear communication-cost model (Fraigniaud & Lazard \[16\]).
+
+/// Cost model `C = α·C1 + β·⌈log2 q⌉·C2`.
+///
+/// * `alpha` — per-round start-up time (latency),
+/// * `beta` — per-bit transfer time (inverse bandwidth),
+/// * `q_bits` — `⌈log2 q⌉`, bits per field element on the wire.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    pub alpha: f64,
+    pub beta: f64,
+    pub q_bits: u32,
+}
+
+impl CostModel {
+    pub fn new(alpha: f64, beta: f64, q_bits: u32) -> Self {
+        CostModel {
+            alpha,
+            beta,
+            q_bits,
+        }
+    }
+
+    /// Total cost of a run with the given round/element counts.
+    pub fn cost(&self, c1: u64, c2: u64) -> f64 {
+        self.alpha * c1 as f64 + self.beta * self.q_bits as f64 * c2 as f64
+    }
+
+    /// A latency-dominated regime (large α/β ratio).
+    pub fn latency_bound(q_bits: u32) -> Self {
+        CostModel::new(1000.0, 0.01, q_bits)
+    }
+
+    /// A bandwidth-dominated regime (small α/β ratio).
+    pub fn bandwidth_bound(q_bits: u32) -> Self {
+        CostModel::new(1.0, 1.0, q_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_is_linear() {
+        let m = CostModel::new(10.0, 2.0, 20);
+        assert_eq!(m.cost(0, 0), 0.0);
+        assert_eq!(m.cost(3, 5), 10.0 * 3.0 + 2.0 * 20.0 * 5.0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Noisy links (§VII Discussion): *"our methods can be easily integrated
+//! into noisy environments — the processors apply some error-correcting
+//! code over their sent packets prior to sending them, and the received
+//! packets undergo the respective decoding process."*
+//!
+//! This module implements exactly that integration:
+//!
+//! * [`ErasureChannel`] — a symbol-erasure channel: each field element of
+//!   each message is erased independently with probability `rate`
+//!   (erasures are flagged, as in storage/packet networks);
+//! * [`InnerFec`] — a systematic RS inner code over the *transport* field:
+//!   every packet gets `t` parity symbols appended before transmission and
+//!   is repaired at the receiver if it suffered at most `t` erasures;
+//! * [`NoisyCollective`] — a decorator that FEC-wraps an inner collective:
+//!   outgoing packets are encoded, the channel corrupts them, incoming
+//!   packets are decoded — transparently to the wrapped algorithm.
+//!
+//! The cost impact is visible in the reports: `C2` grows by the factor
+//! `(W+t)/W` — the paper's claim that noise integration is orthogonal to
+//! the scheduling.
+
+use super::payload::Packet;
+use super::sim::{Collective, Msg, ProcId};
+use crate::codes::GrsCode;
+use crate::gf::Field;
+use crate::util::Rng;
+use std::collections::HashMap;
+
+/// Marker for an erased symbol on the wire. Channel-level only; the value
+/// is outside every supported field (fields here have order ≤ 2^31).
+const ERASED: u64 = u64::MAX;
+
+/// Independent symbol-erasure channel.
+#[derive(Debug)]
+pub struct ErasureChannel {
+    pub rate: f64,
+    rng: Rng,
+}
+
+impl ErasureChannel {
+    pub fn new(rate: f64, seed: u64) -> Self {
+        assert!((0.0..1.0).contains(&rate));
+        ErasureChannel {
+            rate,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Corrupt a packet in place.
+    fn hit(&mut self, pkt: &mut Packet) {
+        for s in pkt.iter_mut() {
+            if (self.rng.next_u64() as f64 / u64::MAX as f64) < self.rate {
+                *s = ERASED;
+            }
+        }
+    }
+}
+
+/// Systematic RS inner code: `W` data symbols + `t` parity symbols.
+#[derive(Clone, Debug)]
+pub struct InnerFec<F: Field> {
+    f: F,
+    code: GrsCode,
+    w: usize,
+    t: usize,
+}
+
+impl<F: Field> InnerFec<F> {
+    /// Protect `w`-symbol packets against up to `t` erasures each.
+    pub fn new(f: F, w: usize, t: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(w >= 1 && t >= 1);
+        anyhow::ensure!(
+            (w + t) as u64 <= f.order(),
+            "inner code needs W + t ≤ q"
+        );
+        let code = GrsCode::plain(
+            &f,
+            (0..w as u64).collect(),
+            (w as u64..(w + t) as u64).collect(),
+        )?;
+        Ok(InnerFec { f, code, w, t })
+    }
+
+    /// Encode: append `t` parity symbols.
+    pub fn protect(&self, pkt: &Packet) -> Packet {
+        debug_assert_eq!(pkt.len(), self.w);
+        self.code.encode(&self.f, pkt)
+    }
+
+    /// Decode: repair ≤ `t` erasures; `None` when unrecoverable.
+    pub fn recover(&self, wire: &Packet) -> Option<Packet> {
+        debug_assert_eq!(wire.len(), self.w + self.t);
+        let coords: Vec<(usize, u64)> = wire
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v != ERASED)
+            .map(|(i, &v)| (i, v))
+            .collect();
+        if coords.len() < self.w {
+            return None; // more than t erasures
+        }
+        self.code.decode(&self.f, &coords).ok()
+    }
+}
+
+/// FEC-wrapping decorator: transparently protects every message of the
+/// wrapped collective against the given channel.
+pub struct NoisyCollective<F: Field> {
+    inner: Box<dyn Collective>,
+    fec: InnerFec<F>,
+    channel: ErasureChannel,
+    /// Unrecoverable packets observed (a real deployment would ARQ; the
+    /// round-synchronous model has no retransmission slot, so we count).
+    pub losses: u64,
+}
+
+impl<F: Field> NoisyCollective<F> {
+    pub fn new(inner: Box<dyn Collective>, fec: InnerFec<F>, channel: ErasureChannel) -> Self {
+        NoisyCollective {
+            inner,
+            fec,
+            channel,
+            losses: 0,
+        }
+    }
+}
+
+impl<F: Field> Collective for NoisyCollective<F> {
+    fn participants(&self) -> Vec<ProcId> {
+        self.inner.participants()
+    }
+
+    fn is_done(&self) -> bool {
+        self.inner.is_done()
+    }
+
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        // Decode incoming wire packets back to logical packets.
+        let decoded: Vec<Msg> = inbox
+            .into_iter()
+            .map(|mut m| {
+                m.payload = m
+                    .payload
+                    .iter()
+                    .map(|wire| match self.fec.recover(wire) {
+                        Some(p) => p,
+                        None => {
+                            self.losses += 1;
+                            vec![0; self.fec.w] // erase to zero; counted
+                        }
+                    })
+                    .collect();
+                m
+            })
+            .collect();
+        // Encode outgoing packets and pass them through the channel.
+        let out = self.inner.step(decoded);
+        out.into_iter()
+            .map(|mut m| {
+                m.payload = m
+                    .payload
+                    .iter()
+                    .map(|p| {
+                        let mut wire = self.fec.protect(p);
+                        self.channel.hit(&mut wire);
+                        wire
+                    })
+                    .collect();
+                m
+            })
+            .collect()
+    }
+
+    fn outputs(&self) -> HashMap<ProcId, Packet> {
+        self.inner.outputs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::PrepareShoot;
+    use crate::gf::{GfPrime, Mat};
+    use crate::net::{pkt_add_scaled, pkt_zero, run, Sim};
+    use std::sync::Arc;
+
+    #[test]
+    fn inner_fec_roundtrip_and_limits() {
+        let f = GfPrime::default_field();
+        let fec = InnerFec::new(f, 8, 3).unwrap();
+        let pkt: Packet = (10..18).collect();
+        let wire = fec.protect(&pkt);
+        assert_eq!(wire.len(), 11);
+        assert_eq!(&wire[..8], &pkt[..]); // systematic
+        // Up to t erasures anywhere repair.
+        let mut hit = wire.clone();
+        hit[0] = ERASED;
+        hit[5] = ERASED;
+        hit[9] = ERASED;
+        assert_eq!(fec.recover(&hit).unwrap(), pkt);
+        // t+1 erasures are detected as unrecoverable.
+        hit[10] = ERASED;
+        assert!(fec.recover(&hit).is_none());
+    }
+
+    #[test]
+    fn a2a_survives_noisy_links() {
+        // Prepare-and-shoot over a 2% symbol-erasure channel with a
+        // t = 4 inner code on W = 8 packets: still exact.
+        let f = GfPrime::default_field();
+        let (k, w) = (16usize, 8usize);
+        let c = Arc::new(Mat::random(&f, k, k, 5));
+        let inputs: Vec<Packet> = (0..k)
+            .map(|i| (0..w as u64).map(|j| f.elem(i as u64 * 31 + j)).collect())
+            .collect();
+        let ps = PrepareShoot::new(f, (0..k).collect(), 1, c.clone(), inputs.clone());
+        let fec = InnerFec::new(f, w, 4).unwrap();
+        let mut noisy =
+            NoisyCollective::new(Box::new(ps), fec, ErasureChannel::new(0.02, 42));
+        let rep = run(&mut Sim::new(1), &mut noisy).unwrap();
+        assert_eq!(noisy.losses, 0, "2% noise must be absorbed by t=4 FEC");
+        let outs = noisy.outputs();
+        for kk in 0..k {
+            let mut want = pkt_zero(w);
+            for r in 0..k {
+                pkt_add_scaled(&f, &mut want, c[(r, kk)], &inputs[r]);
+            }
+            assert_eq!(outs[&kk], want, "proc {kk}");
+        }
+        // And the cost impact is the predicted (W+t)/W factor on C2.
+        let ps2 = PrepareShoot::new(f, (0..k).collect(), 1, c, inputs);
+        let mut clean = Sim::new(1);
+        let mut ps2 = ps2;
+        let rep_clean = run(&mut clean, &mut ps2).unwrap();
+        assert_eq!(rep.c1, rep_clean.c1);
+        assert_eq!(rep.c2 * w as u64, rep_clean.c2 * (w + 4) as u64);
+    }
+
+    #[test]
+    fn heavy_noise_without_enough_fec_loses_packets() {
+        let f = GfPrime::default_field();
+        let (k, w) = (16usize, 8usize);
+        let c = Arc::new(Mat::random(&f, k, k, 5));
+        let inputs: Vec<Packet> = (0..k).map(|_| vec![1; w]).collect();
+        let ps = PrepareShoot::new(f, (0..k).collect(), 1, c, inputs);
+        let fec = InnerFec::new(f, w, 1).unwrap();
+        let mut noisy =
+            NoisyCollective::new(Box::new(ps), fec, ErasureChannel::new(0.30, 9));
+        let _ = run(&mut Sim::new(1), &mut noisy).unwrap();
+        assert!(noisy.losses > 0, "30% noise must overwhelm t=1 FEC");
+    }
+}

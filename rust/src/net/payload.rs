@@ -1,0 +1,77 @@
+//! Packet payloads: vectors in `F_q^W`.
+//!
+//! Remark 2 of the paper: an A2A algorithm over `F_q` applies verbatim to
+//! data vectors in `F_q^W` by viewing them as elements of the extension
+//! field `F_{q^W}` while keeping the coding matrix over `F_q` — same `C1`,
+//! `W×` the `C2`. We therefore represent a packet as a `W`-vector of base
+//! field elements and charge `W` elements per packet on the wire.
+
+use crate::gf::Field;
+
+/// A packet: `W` field elements (`W = 1` for the scalar A2A of Def. 4).
+pub type Packet = Vec<u64>;
+
+/// The all-zero packet of width `w`.
+pub fn pkt_zero(w: usize) -> Packet {
+    vec![0; w]
+}
+
+/// `dst += src` (element-wise field addition).
+pub fn pkt_add<F: Field>(f: &F, dst: &mut Packet, src: &Packet) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f.add(*d, s);
+    }
+}
+
+/// `dst += c · src` — the axpy at the heart of every coding scheme.
+pub fn pkt_add_scaled<F: Field>(f: &F, dst: &mut Packet, c: u64, src: &Packet) {
+    debug_assert_eq!(dst.len(), src.len());
+    if c == 0 {
+        return;
+    }
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f.mul_add(*d, c, s);
+    }
+}
+
+/// `c · src` as a fresh packet.
+pub fn pkt_scale<F: Field>(f: &F, c: u64, src: &Packet) -> Packet {
+    src.iter().map(|&s| f.mul(c, s)).collect()
+}
+
+/// `Σ coeffs[i] · pkts[i]` — a full linear combination (delayed-reduction
+/// fast path via [`Field::lincomb_into`]).
+pub fn lincomb<F: Field>(f: &F, terms: &[(u64, &Packet)], w: usize) -> Packet {
+    let mut out = pkt_zero(w);
+    let slices: Vec<(u64, &[u64])> = terms.iter().map(|&(c, p)| (c, p.as_slice())).collect();
+    f.lincomb_into(&mut out, &slices);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::GfPrime;
+
+    #[test]
+    fn axpy_and_lincomb_agree() {
+        let f = GfPrime::default_field();
+        let a: Packet = vec![1, 2, 3];
+        let b: Packet = vec![10, 20, 30];
+        let mut acc = pkt_zero(3);
+        pkt_add_scaled(&f, &mut acc, 5, &a);
+        pkt_add_scaled(&f, &mut acc, 7, &b);
+        assert_eq!(acc, lincomb(&f, &[(5, &a), (7, &b)], 3));
+        assert_eq!(acc, vec![75, 150, 225]);
+    }
+
+    #[test]
+    fn zero_coeff_is_noop() {
+        let f = GfPrime::default_field();
+        let a: Packet = vec![9, 9];
+        let mut acc: Packet = vec![1, 2];
+        pkt_add_scaled(&f, &mut acc, 0, &a);
+        assert_eq!(acc, vec![1, 2]);
+    }
+}

@@ -1,0 +1,310 @@
+//! The synchronous round engine.
+//!
+//! An algorithm in the paper's sense — a *scheduling* (who talks to whom in
+//! each round) plus a *coding scheme* (what linear combinations are sent) —
+//! is a [`Collective`]: a state machine stepped once per round. The engine
+//! [`run`]s a collective to completion while
+//!
+//! * enforcing the p-port constraint (≤ p sends and ≤ p receives per
+//!   processor per round, no self-messages),
+//! * accounting `C1` (rounds) and `C2 = Σ_t m_t` (`m_t` = largest message,
+//!   in field elements, of round `t`) exactly as §I defines them,
+//! * optionally recording a full message trace (used by the figure tests).
+
+use super::payload::Packet;
+use super::trace::TraceEvent;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Global processor identifier.
+pub type ProcId = usize;
+
+/// One message: a set of packets from `src` to `dst` through one port.
+#[derive(Clone, Debug)]
+pub struct Msg {
+    pub src: ProcId,
+    pub dst: ProcId,
+    pub payload: Vec<Packet>,
+}
+
+impl Msg {
+    pub fn new(src: ProcId, dst: ProcId, payload: Vec<Packet>) -> Self {
+        Msg { src, dst, payload }
+    }
+
+    /// Size in `F_q` elements — the unit of `C2`.
+    pub fn elems(&self) -> u64 {
+        self.payload.iter().map(|p| p.len() as u64).sum()
+    }
+}
+
+/// A round-stepped distributed algorithm (scheduling + coding scheme).
+pub trait Collective {
+    /// The processors this collective touches (used for message routing by
+    /// combinators; the engine itself routes by `Msg::dst`).
+    fn participants(&self) -> Vec<ProcId>;
+
+    /// True when no further rounds are needed and [`outputs`] is valid.
+    ///
+    /// [`outputs`]: Collective::outputs
+    fn is_done(&self) -> bool;
+
+    /// Advance one round: consume the messages delivered to this
+    /// collective's processors in the previous round, emit this round's
+    /// sends. An empty return with `is_done()` terminates the run.
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg>;
+
+    /// Per-processor result packets (valid once `is_done()`).
+    fn outputs(&self) -> HashMap<ProcId, Packet>;
+}
+
+/// Engine configuration + trace storage.
+#[derive(Debug)]
+pub struct Sim {
+    /// Ports per processor (`p` of the paper).
+    pub ports: usize,
+    /// Record a full message trace (figure tests, debugging).
+    pub record_trace: bool,
+    pub trace: Vec<TraceEvent>,
+}
+
+impl Sim {
+    pub fn new(ports: usize) -> Self {
+        assert!(ports >= 1, "at least one port");
+        Sim {
+            ports,
+            record_trace: false,
+            trace: Vec::new(),
+        }
+    }
+
+    pub fn with_trace(ports: usize) -> Self {
+        let mut s = Sim::new(ports);
+        s.record_trace = true;
+        s
+    }
+}
+
+/// Communication-cost report of one run (the paper's metrics).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SimReport {
+    /// `C1` — number of rounds.
+    pub c1: u64,
+    /// `C2 = Σ_t m_t` — elements transferred *in sequence*.
+    pub c2: u64,
+    /// `m_t` per round.
+    pub per_round_max: Vec<u64>,
+    /// Total messages sent (all ports, all rounds).
+    pub messages: u64,
+    /// Total elements sent (the *bandwidth* metric the paper contrasts
+    /// with; not part of `C`).
+    pub bandwidth: u64,
+}
+
+impl SimReport {
+    /// Evaluate the linear cost model on this run.
+    pub fn cost(&self, m: &super::CostModel) -> f64 {
+        m.cost(self.c1, self.c2)
+    }
+
+    /// Merge a sequentially-executed phase into this report.
+    pub fn absorb(&mut self, other: &SimReport) {
+        self.c1 += other.c1;
+        self.c2 += other.c2;
+        self.per_round_max.extend_from_slice(&other.per_round_max);
+        self.messages += other.messages;
+        self.bandwidth += other.bandwidth;
+    }
+}
+
+/// Run `coll` to completion under the p-port model; panics-free — all
+/// protocol violations surface as errors naming the offending round.
+pub fn run(sim: &mut Sim, coll: &mut dyn Collective) -> Result<SimReport> {
+    let mut report = SimReport::default();
+    let mut inbox: Vec<Msg> = Vec::new();
+    let mut idle_guard = 0usize;
+    loop {
+        if coll.is_done() && inbox.is_empty() {
+            break;
+        }
+        let out = coll.step(std::mem::take(&mut inbox));
+        if out.is_empty() {
+            if coll.is_done() {
+                break;
+            }
+            idle_guard += 1;
+            if idle_guard > 8 {
+                bail!("collective stalled: {idle_guard} empty rounds without completion");
+            }
+            continue;
+        }
+        idle_guard = 0;
+        // ---- port enforcement ----
+        let round = report.c1 + 1;
+        let mut sends: HashMap<ProcId, usize> = HashMap::new();
+        let mut recvs: HashMap<ProcId, usize> = HashMap::new();
+        let mut m_t = 0u64;
+        for m in &out {
+            if m.src == m.dst {
+                bail!("round {round}: self-message at processor {}", m.src);
+            }
+            let s = sends.entry(m.src).or_default();
+            *s += 1;
+            if *s > sim.ports {
+                bail!(
+                    "round {round}: processor {} exceeds {} send ports",
+                    m.src,
+                    sim.ports
+                );
+            }
+            let r = recvs.entry(m.dst).or_default();
+            *r += 1;
+            if *r > sim.ports {
+                bail!(
+                    "round {round}: processor {} exceeds {} receive ports",
+                    m.dst,
+                    sim.ports
+                );
+            }
+            let e = m.elems();
+            if e == 0 {
+                bail!("round {round}: empty message {} -> {}", m.src, m.dst);
+            }
+            m_t = m_t.max(e);
+            report.messages += 1;
+            report.bandwidth += e;
+            if sim.record_trace {
+                sim.trace.push(TraceEvent {
+                    round,
+                    src: m.src,
+                    dst: m.dst,
+                    elems: e,
+                });
+            }
+        }
+        report.c1 += 1;
+        report.c2 += m_t;
+        report.per_round_max.push(m_t);
+        inbox = out;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy collective: processor 0 sends `x` to 1..n in ⌈(n−1)/p⌉ rounds
+    /// of direct sends (deliberately naive).
+    struct NaiveBroadcast {
+        n: usize,
+        p: usize,
+        sent: usize,
+        data: Packet,
+        done_round: bool,
+    }
+
+    impl Collective for NaiveBroadcast {
+        fn participants(&self) -> Vec<ProcId> {
+            (0..self.n).collect()
+        }
+        fn is_done(&self) -> bool {
+            self.sent >= self.n - 1
+        }
+        fn step(&mut self, _inbox: Vec<Msg>) -> Vec<Msg> {
+            let mut out = Vec::new();
+            for _ in 0..self.p {
+                if self.sent >= self.n - 1 {
+                    break;
+                }
+                self.sent += 1;
+                out.push(Msg::new(0, self.sent, vec![self.data.clone()]));
+            }
+            self.done_round = true;
+            out
+        }
+        fn outputs(&self) -> HashMap<ProcId, Packet> {
+            (0..self.n).map(|i| (i, self.data.clone())).collect()
+        }
+    }
+
+    #[test]
+    fn counts_rounds_and_elems() {
+        let mut sim = Sim::new(2);
+        let mut c = NaiveBroadcast {
+            n: 7,
+            p: 2,
+            sent: 0,
+            data: vec![1, 2, 3],
+            done_round: false,
+        };
+        let r = run(&mut sim, &mut c).unwrap();
+        assert_eq!(r.c1, 3); // ⌈6/2⌉ rounds
+        assert_eq!(r.c2, 9); // 3 elements per round max
+        assert_eq!(r.messages, 6);
+        assert_eq!(r.bandwidth, 18);
+    }
+
+    #[test]
+    fn port_violation_is_caught() {
+        struct Flood;
+        impl Collective for Flood {
+            fn participants(&self) -> Vec<ProcId> {
+                vec![0, 1, 2]
+            }
+            fn is_done(&self) -> bool {
+                false
+            }
+            fn step(&mut self, _: Vec<Msg>) -> Vec<Msg> {
+                vec![Msg::new(0, 1, vec![vec![1]]), Msg::new(0, 2, vec![vec![1]])]
+            }
+            fn outputs(&self) -> HashMap<ProcId, Packet> {
+                HashMap::new()
+            }
+        }
+        let mut sim = Sim::new(1);
+        let err = run(&mut sim, &mut Flood).unwrap_err();
+        assert!(err.to_string().contains("send ports"), "{err}");
+    }
+
+    #[test]
+    fn self_message_is_caught() {
+        struct SelfSend;
+        impl Collective for SelfSend {
+            fn participants(&self) -> Vec<ProcId> {
+                vec![0]
+            }
+            fn is_done(&self) -> bool {
+                false
+            }
+            fn step(&mut self, _: Vec<Msg>) -> Vec<Msg> {
+                vec![Msg::new(0, 0, vec![vec![1]])]
+            }
+            fn outputs(&self) -> HashMap<ProcId, Packet> {
+                HashMap::new()
+            }
+        }
+        let err = run(&mut Sim::new(1), &mut SelfSend).unwrap_err();
+        assert!(err.to_string().contains("self-message"), "{err}");
+    }
+
+    #[test]
+    fn stall_guard_trips() {
+        struct Stall;
+        impl Collective for Stall {
+            fn participants(&self) -> Vec<ProcId> {
+                vec![0]
+            }
+            fn is_done(&self) -> bool {
+                false
+            }
+            fn step(&mut self, _: Vec<Msg>) -> Vec<Msg> {
+                vec![]
+            }
+            fn outputs(&self) -> HashMap<ProcId, Packet> {
+                HashMap::new()
+            }
+        }
+        assert!(run(&mut Sim::new(1), &mut Stall).is_err());
+    }
+}

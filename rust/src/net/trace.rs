@@ -1,0 +1,70 @@
+//! Message traces — who sent how much to whom, per round.
+//!
+//! The figure tests (`rust/tests/figures.rs`) assert the exact
+//! communication patterns of the paper's worked examples (Figs. 2–7, 9)
+//! against these traces.
+
+/// One message observed by the engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// 1-indexed round number.
+    pub round: u64,
+    pub src: usize,
+    pub dst: usize,
+    /// Message size in field elements.
+    pub elems: u64,
+}
+
+/// Group a trace by round: `out[t]` holds the events of round `t+1`.
+pub fn by_round(trace: &[TraceEvent]) -> Vec<Vec<TraceEvent>> {
+    let max_round = trace.iter().map(|e| e.round).max().unwrap_or(0) as usize;
+    let mut out = vec![Vec::new(); max_round];
+    for &e in trace {
+        out[e.round as usize - 1].push(e);
+    }
+    out
+}
+
+/// All (src, dst) pairs of a given round, sorted.
+pub fn edges_of_round(trace: &[TraceEvent], round: u64) -> Vec<(usize, usize)> {
+    let mut v: Vec<(usize, usize)> = trace
+        .iter()
+        .filter(|e| e.round == round)
+        .map(|e| (e.src, e.dst))
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouping() {
+        let t = vec![
+            TraceEvent {
+                round: 1,
+                src: 0,
+                dst: 1,
+                elems: 1,
+            },
+            TraceEvent {
+                round: 2,
+                src: 1,
+                dst: 2,
+                elems: 2,
+            },
+            TraceEvent {
+                round: 1,
+                src: 2,
+                dst: 0,
+                elems: 1,
+            },
+        ];
+        let g = by_round(&t);
+        assert_eq!(g.len(), 2);
+        assert_eq!(g[0].len(), 2);
+        assert_eq!(edges_of_round(&t, 1), vec![(0, 1), (2, 0)]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the rust runtime. One line per artifact:
+//!
+//! ```text
+//! encode 64 16 256 786433 encode_K64_R16_W256_p786433.hlo.txt
+//! ```
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `(A, X) → parity` — the payload hot path.
+    Encode,
+    /// `(A, X) → [X; parity]` — the verifier graph.
+    Codeword,
+    /// `(pre, post, A, X) → parity` — the fused §VI block product
+    /// `diag(post)·Aᵀ·diag(pre)·X`.
+    ScaledEncode,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Option<Self> {
+        match s {
+            "encode" => Some(ArtifactKind::Encode),
+            "codeword" => Some(ArtifactKind::Codeword),
+            "scaled_encode" => Some(ArtifactKind::ScaledEncode),
+            _ => None,
+        }
+    }
+}
+
+/// One manifest row.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub kind: ArtifactKind,
+    pub k: usize,
+    pub r: usize,
+    pub w: usize,
+    pub p: u64,
+    pub file: String,
+}
+
+/// The parsed `artifacts/manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            anyhow::ensure!(parts.len() == 6, "manifest line {} malformed: {line}", ln + 1);
+            let kind = ArtifactKind::parse(parts[0])
+                .with_context(|| format!("unknown artifact kind {}", parts[0]))?;
+            entries.push(ArtifactEntry {
+                kind,
+                k: parts[1].parse()?,
+                r: parts[2].parse()?,
+                w: parts[3].parse()?,
+                p: parts[4].parse()?,
+                file: parts[5].to_string(),
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn find(
+        &self,
+        kind: ArtifactKind,
+        k: usize,
+        r: usize,
+        w: usize,
+        p: u64,
+    ) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == kind && e.k == k && e.r == r && e.w == w && e.p == p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        let m = Manifest::parse(
+            "# comment\n\
+             encode 64 16 256 786433 encode_K64_R16_W256_p786433.hlo.txt\n\
+             codeword 64 16 256 786433 codeword_K64_R16_W256_p786433.hlo.txt\n",
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find(ArtifactKind::Encode, 64, 16, 256, 786433).unwrap();
+        assert!(e.file.starts_with("encode_K64"));
+        assert!(m.find(ArtifactKind::Encode, 1, 2, 3, 5).is_none());
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(Manifest::parse("encode 64 16").is_err());
+        assert!(Manifest::parse("mystery 1 2 3 4 f.hlo.txt").is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Small self-contained utilities: a deterministic PRNG (the offline build
+//! has no `rand` crate) and a micro-benchmark harness (no `criterion`).
+
+use std::time::{Duration, Instant};
+
+/// SplitMix64 — tiny, fast, deterministic; plenty for tests/benches.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng {
+            state: seed.wrapping_add(0x9E3779B97F4A7C15),
+        }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)` (n > 0) via rejection-free multiply-shift.
+    pub fn below(&mut self, n: u64) -> u64 {
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose `k` distinct indices from `[0, n)`.
+    pub fn choose(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx.sort_unstable();
+        idx
+    }
+}
+
+/// Result of one micro-benchmark: wall-clock stats over `iters` runs.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} median {:>12?}  mean {:>12?}  min {:>12?}  (n={})",
+            self.name, self.median, self.mean, self.min, self.iters
+        )
+    }
+}
+
+/// Minimal criterion replacement: warm up, then time `iters` executions of
+/// `body`, reporting median/mean/min/max. `body` receives the iteration
+/// index and should return something opaque to keep the optimiser honest.
+pub fn bench<T>(name: &str, iters: usize, mut body: impl FnMut(usize) -> T) -> BenchStats {
+    // Warm-up: a few runs, or until ~50ms spent.
+    let warm_start = Instant::now();
+    for i in 0..3 {
+        std::hint::black_box(body(i));
+        if warm_start.elapsed() > Duration::from_millis(50) {
+            break;
+        }
+    }
+    let mut times = Vec::with_capacity(iters);
+    for i in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(body(i));
+        times.push(t0.elapsed());
+    }
+    times.sort_unstable();
+    let mean = times.iter().sum::<Duration>() / times.len() as u32;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        median: times[times.len() / 2],
+        mean,
+        min: times[0],
+        max: times[times.len() - 1],
+    }
+}
+
+/// `⌈log_b n⌉` for integers (`b ≥ 2`, `n ≥ 1`) — the `⌈log_{p+1} K⌉` of the
+/// paper, computed exactly (no floating point).
+pub fn ceil_log(b: u64, n: u64) -> u32 {
+    assert!(b >= 2 && n >= 1);
+    let mut pow = 1u64;
+    let mut l = 0u32;
+    while pow < n {
+        pow = pow.saturating_mul(b);
+        l += 1;
+    }
+    l
+}
+
+/// `b^e` with overflow panic (fine for the sizes in this repo).
+pub fn ipow(b: u64, e: u32) -> u64 {
+    b.checked_pow(e).expect("integer overflow in ipow")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log_exact() {
+        assert_eq!(ceil_log(2, 1), 0);
+        assert_eq!(ceil_log(2, 2), 1);
+        assert_eq!(ceil_log(2, 3), 2);
+        assert_eq!(ceil_log(2, 65), 7);
+        assert_eq!(ceil_log(3, 9), 2);
+        assert_eq!(ceil_log(3, 10), 3);
+        assert_eq!(ceil_log(3, 65), 4); // the K=65, p=2 example of Fig. 5
+        assert_eq!(ceil_log(4, 64), 3);
+    }
+
+    #[test]
+    fn rng_below_in_range() {
+        let mut rng = Rng::new(42);
+        for _ in 0..1000 {
+            assert!(rng.below(7) < 7);
+        }
+    }
+
+    #[test]
+    fn choose_is_sorted_distinct() {
+        let mut rng = Rng::new(7);
+        let picked = rng.choose(50, 20);
+        assert_eq!(picked.len(), 20);
+        for w in picked.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn rng_deterministic() {
+        let a: Vec<u64> = {
+            let mut r = Rng::new(5);
+            (0..10).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Rng::new(5);
+            (0..10).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,149 @@
+//! End-to-end: coordinator jobs across configurations, the encode
+//! service, and config-file round trips.
+
+use dce::coordinator::config::{CodeKind, VerifyMode};
+use dce::coordinator::{EncodeJob, EncodeService, JobConfig};
+use dce::framework::{AlgoRequest, PlanChoice};
+use dce::gf::{Field, GfPrime};
+use std::path::Path;
+
+#[test]
+fn jobs_across_the_config_matrix() {
+    for (k, r, code, algo) in [
+        (16usize, 4usize, CodeKind::RsStructured, AlgoRequest::Auto),
+        (16, 4, CodeKind::RsStructured, AlgoRequest::Universal),
+        (16, 4, CodeKind::RsStructured, AlgoRequest::MultiReduce),
+        (16, 4, CodeKind::RsStructured, AlgoRequest::Direct),
+        (8, 24, CodeKind::RsStructured, AlgoRequest::Auto),
+        (10, 7, CodeKind::RsPlain, AlgoRequest::Auto),
+        (7, 10, CodeKind::Random, AlgoRequest::Universal),
+        (12, 12, CodeKind::Lagrange, AlgoRequest::Universal),
+    ] {
+        let cfg = JobConfig {
+            k,
+            r,
+            w: 4,
+            ports: 2,
+            code,
+            algorithm: algo,
+            ..JobConfig::default()
+        };
+        let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+        assert_eq!(
+            rep.verified,
+            Some(true),
+            "K={k} R={r} {code:?} {algo:?} failed verification"
+        );
+    }
+}
+
+#[test]
+fn auto_planner_is_cost_and_structure_aware() {
+    // Large structured code + bandwidth-dominated model → specific.
+    let cfg = JobConfig {
+        k: 256,
+        r: 256,
+        w: 4,
+        alpha: 1.0,
+        beta: 1.0,
+        ..JobConfig::default()
+    };
+    let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+    assert_eq!(rep.choice, PlanChoice::RsSpecific);
+    assert_eq!(rep.verified, Some(true));
+
+    // Small code → universal despite the structure (Remark 8).
+    let cfg = JobConfig {
+        k: 16,
+        r: 4,
+        w: 1,
+        ..JobConfig::default()
+    };
+    let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+    assert_eq!(rep.choice, PlanChoice::Universal);
+
+    // Unstructured points → universal is the only specific-free choice.
+    let cfg = JobConfig {
+        k: 10,
+        r: 7,
+        w: 1,
+        code: CodeKind::RsPlain,
+        ..JobConfig::default()
+    };
+    let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+    assert_eq!(rep.choice, PlanChoice::Universal);
+}
+
+#[test]
+fn config_file_roundtrip() {
+    let dir = std::env::temp_dir().join("dce_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("job.conf");
+    std::fs::write(
+        &path,
+        "k = 12\nr = 4\nw = 8\nports = 2\ncode = \"rs-structured\"\nverify = \"native\"\n",
+    )
+    .unwrap();
+    let cfg = JobConfig::load(&path).unwrap();
+    let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+    assert_eq!(rep.verified, Some(true));
+}
+
+#[test]
+fn encode_service_roundtrip() {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let f = GfPrime::default_field();
+    let code = dce::codes::GrsCode::structured(&f, 16, 4, 2).unwrap();
+    let parity = code.parity_matrix(&f);
+    let svc = EncodeService::start(&f, &parity, artifacts, 64, 2, 8).unwrap();
+    // Submit a few batches, including a ragged width (chunking path).
+    let mut rng = dce::util::Rng::new(5);
+    let mut pending = Vec::new();
+    for w in [64usize, 100, 64, 17] {
+        let x: Vec<Vec<u64>> = (0..16)
+            .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+            .collect();
+        pending.push((x.clone(), svc.submit(x).unwrap()));
+    }
+    for (x, rx) in pending {
+        let resp = rx.recv().unwrap();
+        let y = resp.y.expect("encode ok");
+        assert_eq!(y.len(), 4);
+        // Oracle check.
+        let w = x[0].len();
+        for (j, row) in y.iter().enumerate() {
+            assert_eq!(row.len(), w);
+            for c in 0..w {
+                let mut want = 0u64;
+                for i in 0..16 {
+                    want = f.add(want, f.mul(parity[(i, j)], x[i][c]));
+                }
+                assert_eq!(row[c], want, "sink {j} col {c}");
+            }
+        }
+    }
+    assert_eq!(svc.metrics.counter("requests"), 4);
+    svc.shutdown();
+}
+
+#[test]
+fn pjrt_verified_job_when_artifacts_present() {
+    if !Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let cfg = JobConfig {
+        k: 64,
+        r: 16,
+        w: 256,
+        ports: 2,
+        verify: VerifyMode::Pjrt,
+        ..JobConfig::default()
+    };
+    let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+    assert_eq!(rep.verified, Some(true));
+}

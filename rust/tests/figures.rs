@@ -1,0 +1,194 @@
+//! The paper's worked examples (Figures 2–9), asserted against the
+//! engine's traces and cost reports.
+
+use dce::collectives::{DftA2A, PrepareShoot};
+use dce::framework::{A2aAlgo, NonSystematicEncode, SystematicEncode};
+use dce::gf::{dft, Field, GfPrime, Mat};
+use dce::net::{pkt_add_scaled, pkt_zero, run, trace, Collective, Packet, Sim};
+use dce::util::ipow;
+use std::sync::Arc;
+
+fn f() -> GfPrime {
+    GfPrime::default_field()
+}
+
+fn oracle_a2a<F: Field>(f: &F, c: &Mat, inputs: &[Packet]) -> Vec<Packet> {
+    (0..c.cols)
+        .map(|j| {
+            let mut acc = pkt_zero(inputs[0].len());
+            for r in 0..c.rows {
+                pkt_add_scaled(f, &mut acc, c[(r, j)], &inputs[r]);
+            }
+            acc
+        })
+        .collect()
+}
+
+/// Fig. 2: K = 4, p = 1 — any `C ∈ F^{4×4}` in exactly 2 rounds; in round
+/// 1 every processor receives `x_{k−1}` from `P_{k−1}`, in round 2 a
+/// combined packet from `P_{k−2}`.
+#[test]
+fn fig2_k4_p1() {
+    let f = f();
+    let c = Arc::new(Mat::random(&f, 4, 4, 42));
+    let inputs: Vec<Packet> = (0..4u64).map(|i| vec![f.elem(10 * i + 1)]).collect();
+    let mut ps = PrepareShoot::new(f, (0..4).collect(), 1, c.clone(), inputs.clone());
+    let mut sim = Sim::with_trace(1);
+    let rep = run(&mut sim, &mut ps).unwrap();
+    assert_eq!(rep.c1, 2);
+    assert_eq!(rep.c2, 2);
+    // Round 1: every P_k receives from its neighbour at distance 1.
+    let r1 = trace::edges_of_round(&sim.trace, 1);
+    assert_eq!(r1, vec![(0, 1), (1, 2), (2, 3), (3, 0)]);
+    // Round 2: from distance 2.
+    let r2 = trace::edges_of_round(&sim.trace, 2);
+    assert_eq!(r2, vec![(0, 2), (1, 3), (2, 0), (3, 1)]);
+    let outs = ps.outputs();
+    let want = oracle_a2a(&f, &c, &inputs);
+    for k in 0..4 {
+        assert_eq!(outs[&k], want[k]);
+    }
+}
+
+/// Fig. 3: K = 25, R = 4, p = 1 — sources in a 4×7 grid, borrowed sinks
+/// complete the last column, row-wise reduces deliver to the sinks.
+#[test]
+fn fig3_k25_r4() {
+    let f = f();
+    let a = Arc::new(Mat::random(&f, 25, 4, 3));
+    let inputs: Vec<Packet> = (0..25u64).map(|i| vec![f.elem(i + 1)]).collect();
+    let mut job =
+        SystematicEncode::new(f, a.clone(), inputs.clone(), 1, A2aAlgo::Universal).unwrap();
+    let rep = run(&mut Sim::new(1), &mut job).unwrap();
+    assert_eq!(job.coded(), oracle_a2a(&f, &a, &inputs));
+    // Phase 1 on 4×4 blocks costs ⌈log2 4⌉ = 2 rounds; phase 2 reduces
+    // over M+1 = 8 nodes in 3 rounds.
+    assert_eq!(rep.c1, 2 + 3);
+}
+
+/// Fig. 4: K = 4, R = 25, p = 1 — sinks in a 4×7 grid, sources broadcast
+/// then columns encode.
+#[test]
+fn fig4_k4_r25() {
+    let f = f();
+    let a = Arc::new(Mat::random(&f, 4, 25, 4));
+    let inputs: Vec<Packet> = (0..4u64).map(|i| vec![f.elem(i + 3)]).collect();
+    let mut job =
+        SystematicEncode::new(f, a.clone(), inputs.clone(), 1, A2aAlgo::Universal).unwrap();
+    let rep = run(&mut Sim::new(1), &mut job).unwrap();
+    assert_eq!(job.coded(), oracle_a2a(&f, &a, &inputs));
+    // Phase 1: broadcast over M+1 = 8 nodes (3 rounds); phase 2: 4×4
+    // blocks (2 rounds).
+    assert_eq!(rep.c1, 3 + 2);
+}
+
+/// Figs. 5–7: K = 65, p = 2 — L = 4, T_p = T_s = 2, m = 9, n = 8:
+/// prepare covers `R_k^- = {k, …, k−8}`, shoot reduces the stride-9
+/// classes, and the eq. (4) correction fires (m·n = 72 > 65).
+#[test]
+fn fig5_6_7_k65_p2() {
+    let f = f();
+    let k = 65usize;
+    let c = Arc::new(Mat::random(&f, k, k, 65));
+    let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![f.elem(i * 3 + 2)]).collect();
+    let mut ps = PrepareShoot::new(f, (0..k).collect(), 2, c.clone(), inputs.clone());
+    let mut sim = Sim::with_trace(2);
+    let rep = run(&mut sim, &mut ps).unwrap();
+    assert_eq!(rep.c1, 4); // L = ⌈log3 65⌉ = 4
+    let by_round = trace::by_round(&sim.trace);
+    // Prepare round 1: single packets over distances ρ·3^{T_p−1} = {3, 6}.
+    assert!(by_round[0].iter().all(|e| e.elems == 1));
+    assert!(by_round[0]
+        .iter()
+        .all(|e| [3, 6].contains(&((e.dst + k - e.src) % k))));
+    // Prepare round 2: memory holds 3 packets; distances {1, 2}.
+    assert!(by_round[1].iter().all(|e| e.elems == 3));
+    assert!(by_round[1]
+        .iter()
+        .all(|e| [1, 2].contains(&((e.dst + k - e.src) % k))));
+    // Shoot round 1 (m = 9, n = 8): each port carries the offsets with
+    // digit_0 = ρ — ⌊8/3⌋..⌈8/3⌉ packets over distances {9, 18}.
+    assert!(by_round[2].iter().all(|e| e.elems == 2 || e.elems == 3));
+    assert!(by_round[2]
+        .iter()
+        .all(|e| [9, 18].contains(&((e.dst + k - e.src) % k))));
+    // Shoot round 2: digit_1 over distances {27, 54}.
+    assert!(by_round[3]
+        .iter()
+        .all(|e| [27, 54].contains(&((e.dst + k - e.src) % k))));
+    let outs = ps.outputs();
+    let want = oracle_a2a(&f, &c, &inputs);
+    for kk in 0..k {
+        assert_eq!(outs[&kk], want[kk], "proc {kk}");
+    }
+}
+
+/// Fig. 8: K = 9, P = 3 — the two trees: every child element is a cube
+/// root of its parent, and the DFT A2A produces f(β^{rev(k)}).
+#[test]
+fn fig8_k9_p3_trees() {
+    // Needs 9 | q−1: q = 37 (36 = 4·9).
+    let f = GfPrime::new(37).unwrap();
+    let beta = f.root_of_unity(9).unwrap();
+    // Element tree (right of Fig. 8): root hosts γ = 1, children are
+    // distinct cube roots of their parent.
+    assert_eq!(dft::gamma(&f, beta, 9, 3, 0, 0), 1);
+    let mut lvl1 = Vec::new();
+    for low in 0..3u64 {
+        let child = dft::gamma(&f, beta, 9, 3, 1, low);
+        assert_eq!(f.pow(child, 3), 1);
+        lvl1.push(child);
+    }
+    lvl1.dedup();
+    assert_eq!(lvl1.len(), 3, "distinct cube roots");
+    // Running the DFT A2A reproduces f(β^{rev(j)}) — and with
+    // P = p+1 = 3, Corollary 1's optimal cost H = 2 rounds/elements.
+    let k = 9usize;
+    let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![f.elem(i + 1)]).collect();
+    let mut d = DftA2A::new(f, (0..k).collect(), 2, 3, 2, inputs.clone(), false).unwrap();
+    let rep = run(&mut Sim::new(2), &mut d).unwrap();
+    assert_eq!((rep.c1, rep.c2), (2, 2));
+    let outs = d.outputs();
+    for j in 0..k {
+        let pt = f.pow(beta, dft::digit_reverse(j as u64, 3, 2));
+        let mut want = 0u64;
+        for (i, x) in inputs.iter().enumerate() {
+            want = f.add(want, f.mul(x[0], f.pow(pt, i as u64)));
+        }
+        assert_eq!(outs[&j][0], want, "f(β^rev({j}))");
+    }
+}
+
+/// Fig. 9: non-systematic K = 4, R = 27 — 6 full sink columns plus 3
+/// stacked sinks.
+#[test]
+fn fig9_k4_r27() {
+    let f = f();
+    let g = Arc::new(Mat::random(&f, 4, 31, 9));
+    let inputs: Vec<Packet> = (0..4u64).map(|i| vec![f.elem(2 * i + 1)]).collect();
+    let mut job = NonSystematicEncode::new(f, g.clone(), inputs.clone(), 1).unwrap();
+    let rep = run(&mut Sim::new(1), &mut job).unwrap();
+    assert_eq!(job.codeword(), oracle_a2a(&f, &g, &inputs));
+    // Phase 1: broadcast over 7 nodes (3 rounds); phase 2: column A2As of
+    // size ≤ 5 (3 rounds at p = 1).
+    assert_eq!(rep.c1, 3 + 3);
+}
+
+/// Fig. 6 depicts the two-round dissemination of `x_0` (distances {3,6}
+/// then {1,2}) inside the K = 65, p = 2 prepare phase; its per-round
+/// pattern is asserted in [`fig5_6_7_k65_p2`]. Here: the degenerate K = 9
+/// case has a single prepare round at distances {1, 2}.
+#[test]
+fn fig6_dissemination_k9_p2() {
+    let f = f();
+    let k = 9usize;
+    let c = Arc::new(Mat::random(&f, k, k, 6));
+    let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![f.elem(i + 1)]).collect();
+    let mut ps = PrepareShoot::new(f, (0..k).collect(), 2, c, inputs);
+    let mut sim = Sim::with_trace(2);
+    let rep = run(&mut sim, &mut ps).unwrap();
+    assert_eq!(rep.c1, 2); // L = 2: T_p = 1, T_s = 1
+    let r1 = trace::edges_of_round(&sim.trace, 1);
+    assert!(r1.contains(&(0, 1)) && r1.contains(&(0, 2)));
+    assert_eq!(ipow(3, 2), 9);
+}
