@@ -7,12 +7,13 @@
 //! * PJRT bulk encode throughput (the L1/L2 artifact) vs a native rust
 //!   GF matmul, when artifacts are present.
 //!
-//! Before/after numbers from this harness are recorded in
-//! EXPERIMENTS.md §Perf.
+//! Before/after numbers from this harness are recorded in DESIGN.md
+//! §Perf; the flat-buffer section asserts the ≥ 2× acceptance target
+//! against the seed (vec-of-vecs) representation.
 
 use dce::collectives::PrepareShoot;
 use dce::gf::{vandermonde, Field, GfPrime, Mat};
-use dce::net::{pkt_add_scaled, run, Packet, Sim};
+use dce::net::{pkt_add_scaled, run, Packet, PacketBuf, Sim};
 use dce::util::{bench, Rng};
 use std::hint::black_box;
 use std::path::Path;
@@ -82,6 +83,47 @@ fn main() {
     println!(
         "{stats}   ({:.3} Gop/s)",
         (256.0 * w as f64) / stats.per_iter_ns()
+    );
+
+    println!("\n## L3 — flat buffer vs seed representation (256×4096 lincomb)");
+    // Seed representation: one heap allocation per packet, one Barrett
+    // reduction per element-multiply (the `Vec<Packet>` + `mul_add` hot
+    // path this engine replaced).
+    let seed_stats = bench("seed rep: vec-of-vecs, reduce per multiply", 20, |_| {
+        let mut acc = vec![0u64; w];
+        for (c, p) in coeffs.iter().zip(&packets) {
+            if *c == 0 {
+                continue;
+            }
+            for (a, &s) in acc.iter_mut().zip(p) {
+                *a = f.mul_add(*a, *c, s);
+            }
+        }
+        acc
+    });
+    println!("{seed_stats}");
+    // Flat representation: one contiguous PacketBuf, delayed-reduction
+    // lincomb over slice views.
+    let mut flat = PacketBuf::with_capacity(w, packets.len());
+    for p in &packets {
+        flat.push(p);
+    }
+    let flat_stats = bench("flat rep: PacketBuf lincomb, delayed reduce", 20, |_| {
+        let mut acc = vec![0u64; w];
+        let terms: Vec<(u64, &[u64])> = coeffs
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| (c, flat.pkt(i)))
+            .collect();
+        f.lincomb_into(&mut acc, &terms);
+        acc
+    });
+    println!("{flat_stats}");
+    let speedup = seed_stats.per_iter_ns() / flat_stats.per_iter_ns();
+    println!("flat-buffer speedup: {speedup:.2}x (acceptance target ≥ 2x)");
+    assert!(
+        speedup >= 2.0,
+        "flat-buffer lincomb must be ≥ 2x the seed representation, got {speedup:.2}x"
     );
 
     println!("\n## L3 — structured matrices");

@@ -26,9 +26,16 @@
 //! Message contents are never tagged on the wire: the scheduling is known
 //! a priori (Remark 1), so receivers recompute the exact (owner / offset)
 //! lists the sender used.
+//!
+//! Every per-processor working set — the prepare memory and the `n` shoot
+//! accumulators — lives in one contiguous [`PacketBuf`], and the per-rank
+//! emit/accumulate loops fan out over rayon under the `parallel` feature
+//! (bit-identical to sequential stepping: disjoint outputs merged in rank
+//! order, exact integer accumulation).
 
+use super::{par_flat_map_msgs, par_for_each_mut, par_map_msgs_mut};
 use crate::gf::{Field, Mat};
-use crate::net::{pkt_add, pkt_add_scaled, pkt_zero, Collective, Msg, Packet, ProcId};
+use crate::net::{pkt_add, pkt_add_scaled, pkt_zero, Collective, Msg, Packet, PacketBuf, ProcId};
 use crate::util::{ceil_log, ipow};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -70,20 +77,56 @@ impl PsParams {
     }
 }
 
+/// A rank's prepare-phase memory: every received owner packet appended to
+/// one flat buffer, with an owner → slot index.
+struct PrepMem {
+    buf: PacketBuf,
+    slot: HashMap<usize, usize>,
+}
+
+impl PrepMem {
+    fn new(owner: usize, pkt: Packet) -> Self {
+        PrepMem {
+            buf: PacketBuf::from_packet(pkt),
+            slot: HashMap::from([(owner, 0)]),
+        }
+    }
+
+    /// Store `pkt` for `owner` unless already held (duplicate deliveries
+    /// may occur when two ports collapse to the same distance mod K).
+    fn insert(&mut self, owner: usize, pkt: &[u64]) {
+        if let std::collections::hash_map::Entry::Vacant(e) = self.slot.entry(owner) {
+            e.insert(self.buf.count());
+            self.buf.push(pkt);
+        }
+    }
+
+    fn get(&self, owner: usize) -> &[u64] {
+        self.buf
+            .pkt(*self.slot.get(&owner).expect("missing owner packet"))
+    }
+}
+
+/// A rank's shoot-phase working set: the `n` partial packets `w_{k,k+ℓm}`
+/// in one flat allocation (offsets vacate as packets move toward their
+/// destinations — tracked by `alive`).
+struct ShootSet {
+    buf: PacketBuf,
+    alive: Vec<bool>,
+}
+
 /// The prepare-and-shoot universal A2A collective.
 pub struct PrepareShoot<F: Field> {
     f: F,
     procs: Vec<ProcId>,
+    rank_of: HashMap<ProcId, usize>,
     c: Arc<Mat>,
     params: PsParams,
     w: usize,
     /// Completed step calls (== rounds issued so far).
     t: u32,
-    /// Per-rank: owner → initial packet (prepare-phase memory).
-    mem: Vec<HashMap<usize, Packet>>,
-    /// Per-rank: partial packet per destination offset δ (dense, len n;
-    /// offsets vacate as packets move toward their destinations).
-    wpkts: Vec<Vec<Option<Packet>>>,
+    mem: Vec<PrepMem>,
+    wsets: Vec<ShootSet>,
     out: Vec<Option<Packet>>,
     done: bool,
 }
@@ -101,9 +144,10 @@ impl<F: Field> PrepareShoot<F> {
         let mem = inputs
             .into_iter()
             .enumerate()
-            .map(|(r, pkt)| HashMap::from([(r, pkt)]))
+            .map(|(r, pkt)| PrepMem::new(r, pkt))
             .collect();
         let mut ps = PrepareShoot {
+            rank_of: procs.iter().enumerate().map(|(i, &p)| (p, i)).collect(),
             f,
             procs,
             c,
@@ -111,14 +155,14 @@ impl<F: Field> PrepareShoot<F> {
             w,
             t: 0,
             mem,
-            wpkts: vec![Vec::new(); k],
+            wsets: Vec::new(),
             out: vec![None; k],
             done: false,
         };
         if k == 1 {
             // Degenerate: x̃_0 = C[0][0]·x_0, no communication.
-            let x0 = ps.mem[0][&0].clone();
-            ps.out[0] = Some(crate::net::pkt_scale(&ps.f, ps.c[(0, 0)], &x0));
+            let pkt = crate::net::pkt_scale(&ps.f, ps.c[(0, 0)], ps.mem[0].get(0));
+            ps.out[0] = Some(pkt);
             ps.done = true;
         }
         ps
@@ -132,10 +176,7 @@ impl<F: Field> PrepareShoot<F> {
         c: Arc<Mat>,
         inputs: &HashMap<ProcId, Packet>,
     ) -> Self {
-        let packets = procs
-            .iter()
-            .map(|pid| inputs[pid].clone())
-            .collect();
+        let packets = procs.iter().map(|pid| inputs[pid].clone()).collect();
         PrepareShoot::new(f, procs, p, c, packets)
     }
 
@@ -182,15 +223,17 @@ impl<F: Field> PrepareShoot<F> {
 
     /// Process one prepare-round inbox.
     fn absorb_prepare(&mut self, inbox: Vec<Msg>, t: u32) {
-        let rank_of: HashMap<ProcId, usize> =
-            self.procs.iter().enumerate().map(|(i, &p)| (p, i)).collect();
         for msg in inbox {
-            let dst = rank_of[&msg.dst];
-            let src = rank_of[&msg.src];
+            let dst = self.rank_of[&msg.dst];
+            let src = self.rank_of[&msg.src];
             let owners = self.prep_owners(src, t);
-            assert_eq!(owners.len(), msg.payload.len(), "prepare schedule mismatch");
-            for (owner, pkt) in owners.into_iter().zip(msg.payload) {
-                self.mem[dst].entry(owner).or_insert(pkt);
+            assert_eq!(
+                owners.len(),
+                msg.payload.count(),
+                "prepare schedule mismatch"
+            );
+            for (owner, pkt) in owners.into_iter().zip(msg.payload.iter()) {
+                self.mem[dst].insert(owner, pkt);
             }
         }
     }
@@ -199,8 +242,7 @@ impl<F: Field> PrepareShoot<F> {
     /// distances `ρ(p+1)^{T_p−t}`, skipping self-targets and duplicates.
     fn emit_prepare(&self, t: u32) -> Vec<Msg> {
         let kk = self.params.k;
-        let mut out = Vec::new();
-        for k in 0..kk {
+        par_flat_map_msgs(kk, |k| {
             let owners = self.prep_owners(k, t);
             let mut targets = Vec::new();
             for rho in 1..=self.params.p as u64 {
@@ -213,97 +255,91 @@ impl<F: Field> PrepareShoot<F> {
                     targets.push(dst);
                 }
             }
+            let mut msgs = Vec::with_capacity(targets.len());
             for dst in targets {
-                let payload: Vec<Packet> = owners
-                    .iter()
-                    .map(|&o| self.mem[k][&o].clone())
-                    .collect();
-                out.push(Msg::new(self.procs[k], self.procs[dst], payload));
+                let payload = PacketBuf::from_slices(
+                    self.w,
+                    owners.iter().map(|&o| self.mem[k].get(o)),
+                );
+                msgs.push(Msg::new(self.procs[k], self.procs[dst], payload));
             }
-        }
-        out
+            msgs
+        })
     }
 
     /// After the prepare phase: initialise the shoot-phase partial packets
     /// `w_{k,k+ℓm}` (or compute outputs directly when `n == 1`).
     fn init_shoot(&mut self) {
         let PsParams { k: kk, m, n, .. } = self.params;
+        let f = &self.f;
+        let c = &self.c;
+        let mem = &self.mem;
+        let w = self.w;
         if n == 1 {
             // m ≥ K: everyone holds everything — pure local combine.
-            for k in 0..kk {
-                let mut acc = pkt_zero(self.w);
-                let terms: Vec<(u64, &[u64])> = (0..kk)
-                    .map(|r| (self.c[(r, k)], self.mem[k][&r].as_slice()))
-                    .collect();
-                self.f.lincomb_into(&mut acc, &terms);
-                self.out[k] = Some(acc);
-            }
+            par_for_each_mut(&mut self.out, |k, slot| {
+                let mut acc = pkt_zero(w);
+                let terms: Vec<(u64, &[u64])> =
+                    (0..kk).map(|r| (c[(r, k)], mem[k].get(r))).collect();
+                f.lincomb_into(&mut acc, &terms);
+                *slot = Some(acc);
+            });
             self.done = true;
             return;
         }
-        // Row-sweep accumulation. Every matrix entry `C[r][dest]` is
-        // touched exactly once during w-initialisation (Σ_k m·n ≈ K²);
-        // iterating destination-major per processor reads the K×K matrix
-        // (134 MB at K = 4096) in a cache-hostile scatter. Instead sweep
-        // rows `r` sequentially: row `r` contributes `x_r` to processor
-        // `k ∈ [r, r+m)` and offset `ℓ`, at column `dest = k + ℓm` — so
-        // for fixed `ℓ` the columns form a *contiguous* run of `m`, and
-        // the live accumulator window is only `m·n·W` words (~32 KB).
-        // Products accumulate unreduced (`m ≤ lazy_chunk` always holds
-        // for the supported field sizes; enforced below). §Perf: 2.6×.
-        let lazy_chunk = self.f.lazy_chunk();
+        // k-major sweep: rank k holds x_r for every r ∈ R_k^- = (k−m, k]
+        // after the prepare phase (n ≥ 2 ⇒ m < K, no wrap), so each rank's
+        // n·W accumulator block and its own flat prepare memory are the
+        // only live state — one contiguous working set per processor.
+        // Products accumulate unreduced within the lazy bound (`m` terms
+        // per accumulator); accumulation is exact integer (or XOR)
+        // arithmetic, so the parallel fan-out below is bit-identical to a
+        // sequential sweep.
+        let lazy_chunk = f.lazy_chunk();
         let per_term_reduce = (m as usize) > lazy_chunk;
-        let mut accs: Vec<Vec<Packet>> = (0..kk)
-            .map(|_| (0..n).map(|_| pkt_zero(self.w)).collect())
+        let mut wsets: Vec<ShootSet> = (0..kk)
+            .map(|_| ShootSet {
+                buf: PacketBuf::zeros(w, n as usize),
+                alive: vec![true; n as usize],
+            })
             .collect();
-        for r in 0..kk {
-            let crow = self.c.row(r);
-            // Every processor in [r, r+m) holds an identical copy of x_r
-            // after the prepare phase; read one of them.
-            let x = self.mem[r][&r].as_slice();
-            for l in 0..n as usize {
-                for k_off in 0..m as usize {
-                    let k = (r + k_off) % kk;
+        par_for_each_mut(&mut wsets, |k, ws| {
+            for back in 0..m {
+                let r = ((k as u64 + kk as u64 - back) % kk as u64) as usize;
+                let x = mem[k].get(r);
+                let crow = c.row(r);
+                for l in 0..n as usize {
                     let dest = (k + l * m as usize) % kk;
                     let coeff = crow[dest];
                     if coeff == 0 {
                         continue;
                     }
-                    let acc = &mut accs[k][l];
+                    let acc = ws.buf.pkt_mut(l);
                     for (a, &s) in acc.iter_mut().zip(x) {
-                        *a = self.f.lazy_mul_acc(*a, coeff, s);
+                        *a = f.lazy_mul_acc(*a, coeff, s);
                     }
                     if per_term_reduce {
                         for a in acc.iter_mut() {
-                            *a = self.f.lazy_reduce(*a);
+                            *a = f.lazy_reduce(*a);
                         }
                     }
                 }
             }
-        }
-        for (k, dests) in accs.into_iter().enumerate() {
-            let w: Vec<Option<Packet>> = dests
-                .into_iter()
-                .map(|mut acc| {
-                    for a in acc.iter_mut() {
-                        *a = self.f.lazy_reduce(*a);
-                    }
-                    Some(acc)
-                })
-                .collect();
-            self.wpkts[k] = w;
-        }
+            for a in ws.buf.data_mut() {
+                *a = f.lazy_reduce(*a);
+            }
+        });
+        self.wsets = wsets;
     }
 
     /// Process one shoot-round inbox (accumulate matching offsets).
     fn absorb_shoot(&mut self, inbox: Vec<Msg>, t: u32) {
-        let rank_of: HashMap<ProcId, usize> =
-            self.procs.iter().enumerate().map(|(i, &p)| (p, i)).collect();
         let kk = self.params.k as u64;
         let stride = ipow(self.params.p as u64 + 1, t - 1);
+        let offsets = self.shoot_offsets(t);
         for msg in inbox {
-            let dst = rank_of[&msg.dst];
-            let src = rank_of[&msg.src];
+            let dst = self.rank_of[&msg.dst];
+            let src = self.rank_of[&msg.src];
             // Which ρ values map src→dst over distance ρ·stride·m (mod K)?
             let mut expect: Vec<u64> = Vec::new(); // new offsets, sender order
             for rho in 1..=self.params.p as u64 {
@@ -312,19 +348,21 @@ impl<F: Field> PrepareShoot<F> {
                     continue;
                 }
                 if (src as u64 + d) % kk == dst as u64 {
-                    for delta in self.shoot_offsets(t) {
+                    for &delta in &offsets {
                         if (delta / stride) % (self.params.p as u64 + 1) == rho {
                             expect.push(delta - rho * stride);
                         }
                     }
                 }
             }
-            assert_eq!(expect.len(), msg.payload.len(), "shoot schedule mismatch");
-            for (delta_new, pkt) in expect.into_iter().zip(msg.payload) {
-                let acc = self.wpkts[dst][delta_new as usize]
-                    .as_mut()
-                    .expect("receiver missing offset packet");
-                pkt_add(&self.f, acc, &pkt);
+            assert_eq!(expect.len(), msg.payload.count(), "shoot schedule mismatch");
+            let ws = &mut self.wsets[dst];
+            for (delta_new, pkt) in expect.into_iter().zip(msg.payload.iter()) {
+                assert!(
+                    ws.alive[delta_new as usize],
+                    "receiver missing offset packet"
+                );
+                pkt_add(&self.f, ws.buf.pkt_mut(delta_new as usize), pkt);
             }
         }
     }
@@ -333,10 +371,12 @@ impl<F: Field> PrepareShoot<F> {
     fn emit_shoot(&mut self, t: u32) -> Vec<Msg> {
         let PsParams { k: kk, m, p, .. } = self.params;
         let stride = ipow(p as u64 + 1, t - 1);
-        let mut out = Vec::new();
-        for k in 0..kk {
+        let offsets = self.shoot_offsets(t);
+        let f = &self.f;
+        let procs = &self.procs;
+        let w = self.w;
+        par_map_msgs_mut(&mut self.wsets, |k, ws| {
             // Group offsets by ρ = digit_{t−1}(δ).
-            let offsets = self.shoot_offsets(t);
             let mut by_target: Vec<(usize, Vec<u64>)> = Vec::new(); // (dst, old offsets)
             for rho in 1..=p as u64 {
                 let deltas: Vec<u64> = offsets
@@ -351,12 +391,12 @@ impl<F: Field> PrepareShoot<F> {
                 if d == 0 {
                     // Self-target: merge locally, no message.
                     for delta in deltas {
-                        let pkt = self.wpkts[k][delta as usize]
-                            .take()
-                            .expect("missing offset");
                         let tgt = (delta - rho * stride) as usize;
-                        let acc = self.wpkts[k][tgt].as_mut().expect("missing target");
-                        pkt_add(&self.f, acc, &pkt);
+                        let delta = delta as usize;
+                        assert!(ws.alive[delta] && ws.alive[tgt], "missing offset");
+                        let (dst_pkt, src_pkt) = ws.buf.pair_mut(tgt, delta);
+                        pkt_add(f, dst_pkt, src_pkt);
+                        ws.alive[delta] = false;
                     }
                     continue;
                 }
@@ -367,15 +407,22 @@ impl<F: Field> PrepareShoot<F> {
                     by_target.push((dst, deltas));
                 }
             }
+            let mut msgs = Vec::with_capacity(by_target.len());
             for (dst, deltas) in by_target {
-                let payload: Vec<Packet> = deltas
-                    .iter()
-                    .map(|d| self.wpkts[k][*d as usize].take().expect("missing offset packet"))
-                    .collect();
-                out.push(Msg::new(self.procs[k], self.procs[dst], payload));
+                let payload = PacketBuf::from_slices(
+                    w,
+                    deltas.iter().map(|&d| {
+                        assert!(ws.alive[d as usize], "missing offset packet");
+                        ws.buf.pkt(d as usize)
+                    }),
+                );
+                for &d in &deltas {
+                    ws.alive[d as usize] = false;
+                }
+                msgs.push(Msg::new(procs[k], procs[dst], payload));
             }
-        }
-        out
+            msgs
+        })
     }
 
     /// Final local step: `x̃_k = y_k − Σ_{i=K}^{nm−1} C[k−i][k]·x_{k−i}`
@@ -383,14 +430,15 @@ impl<F: Field> PrepareShoot<F> {
     fn finalize(&mut self) {
         let PsParams { k: kk, m, n, .. } = self.params;
         for k in 0..kk {
-            let mut y = self.wpkts[k][0].take().expect("y_k missing");
+            let ws = &self.wsets[k];
+            assert!(ws.alive[0], "y_k missing");
+            let mut y = ws.buf.pkt(0).to_vec();
             for i in kk as u64..n * m {
                 // r = (k − (i − K)) mod K — the owner counted twice; the
                 // prepare memory still holds x_r (i − K < m).
                 let r = ((k as u64 + kk as u64 - (i - kk as u64)) % kk as u64) as usize;
                 let coeff = self.f.neg(self.c[(r, k)]);
-                let x = self.mem[k].get(&r).expect("missing dup packet");
-                pkt_add_scaled(&self.f, &mut y, coeff, x);
+                pkt_add_scaled(&self.f, &mut y, coeff, self.mem[k].get(r));
             }
             self.out[k] = Some(y);
         }

@@ -6,7 +6,7 @@
 //! `O(K)`), but it is the substrate of the multi-reduce baseline of
 //! Jeong et al. \[21\] which §II compares against.
 
-use crate::net::{Collective, Msg, Packet, ProcId};
+use crate::net::{Collective, Msg, Packet, PacketBuf, ProcId};
 use crate::util::ipow;
 use std::collections::HashMap;
 
@@ -16,6 +16,8 @@ pub struct AllGather {
     p: usize,
     rounds: u32,
     t: u32,
+    /// Packet width `W` (all inputs equal-width).
+    w: usize,
     /// `have[r][j]` = packet of owner `j` if received by rank `r`.
     have: Vec<Vec<Option<Packet>>>,
     done: bool,
@@ -25,6 +27,8 @@ impl AllGather {
     pub fn new(procs: Vec<ProcId>, p: usize, inputs: Vec<Packet>) -> Self {
         assert_eq!(procs.len(), inputs.len());
         let n = procs.len();
+        let w = inputs.first().map_or(0, |x| x.len());
+        assert!(inputs.iter().all(|x| x.len() == w), "equal-width inputs");
         let rounds = crate::util::ceil_log(p as u64 + 1, n as u64);
         let mut have = vec![vec![None; n]; n];
         for (r, pkt) in inputs.into_iter().enumerate() {
@@ -35,6 +39,7 @@ impl AllGather {
             p,
             rounds,
             t: 0,
+            w,
             have,
             done: n <= 1,
         }
@@ -73,11 +78,13 @@ impl Collective for AllGather {
                 .into_iter()
                 .filter(|o| !dst_had.contains(o))
                 .collect();
-            assert_eq!(expected.len(), m.payload.len(), "schedule mismatch");
-            for (owner, pkt) in expected.into_iter().zip(m.payload) {
+            assert_eq!(expected.len(), m.payload.count(), "schedule mismatch");
+            for (owner, pkt) in expected.into_iter().zip(m.payload.iter()) {
                 // Two ports may collapse to the same distance mod N, in
                 // which case the same owner arrives twice; keep the first.
-                self.have[dst][owner].get_or_insert(pkt);
+                if self.have[dst][owner].is_none() {
+                    self.have[dst][owner] = Some(pkt.to_vec());
+                }
             }
         }
         if self.t == self.rounds {
@@ -101,11 +108,13 @@ impl Collective for AllGather {
             }
             for dst in targets {
                 let dst_had = self.held_owners(dst, self.t);
-                let payload: Vec<Packet> = src_had
-                    .iter()
-                    .filter(|o| !dst_had.contains(o))
-                    .map(|&o| self.have[r][o].clone().expect("sender missing packet"))
-                    .collect();
+                let payload = PacketBuf::from_slices(
+                    self.w,
+                    src_had
+                        .iter()
+                        .filter(|o| !dst_had.contains(o))
+                        .map(|&o| self.have[r][o].as_deref().expect("sender missing packet")),
+                );
                 if !payload.is_empty() {
                     out.push(Msg::new(self.procs[r], self.procs[dst], payload));
                 }

@@ -59,8 +59,7 @@ impl Collective for TreeBroadcast {
         for m in inbox {
             let r = self.rank_of[&m.dst];
             debug_assert!(self.have[r].is_none(), "duplicate delivery");
-            let [pkt] = <[Packet; 1]>::try_from(m.payload).expect("one packet per message");
-            self.have[r] = Some(pkt);
+            self.have[r] = Some(m.payload.into_single());
         }
         if self.t == self.rounds {
             self.done = true;
@@ -75,7 +74,7 @@ impl Collective for TreeBroadcast {
             for rho in 1..=self.p {
                 let dst = r + rho * covered;
                 if dst < next_cover {
-                    out.push(Msg::new(self.procs[r], self.procs[dst], vec![pkt.clone()]));
+                    out.push(Msg::single(self.procs[r], self.procs[dst], pkt.clone()));
                 }
             }
         }
@@ -150,9 +149,7 @@ impl Collective for PipelinedBroadcast {
             self.procs.iter().enumerate().map(|(i, &p)| (p, i)).collect();
         for m in inbox {
             let r = rank_of[&m.dst];
-            for pkt in m.payload {
-                self.got[r].push(pkt);
-            }
+            self.got[r].push(m.payload.into_single());
         }
         if self.t == self.rounds() {
             self.done = true;
@@ -176,7 +173,7 @@ impl Collective for PipelinedBroadcast {
             } else {
                 self.got[i][c].clone()
             };
-            out.push(Msg::new(self.procs[i], self.procs[i + 1], vec![chunk]));
+            out.push(Msg::single(self.procs[i], self.procs[i + 1], chunk));
         }
         out
     }

@@ -83,7 +83,7 @@ impl<F: Field> Collective for DirectEncode<F> {
             self.sinks.iter().enumerate().map(|(i, &p)| (p, i)).collect();
         for m in inbox {
             let j = sink_rank[&m.dst];
-            for pkt in &m.payload {
+            for pkt in m.payload.iter() {
                 pkt_add_scaled(&self.f, &mut self.acc[j], 1, pkt);
             }
         }
@@ -103,10 +103,10 @@ impl<F: Field> Collective for DirectEncode<F> {
                 *su += 1;
                 *du += 1;
                 let coeff = self.a[(i, j)];
-                out.push(Msg::new(
+                out.push(Msg::single(
                     self.sources[i],
                     self.sinks[j],
-                    vec![pkt_scale(&self.f, coeff, &self.inputs[i])],
+                    pkt_scale(&self.f, coeff, &self.inputs[i]),
                 ));
             } else {
                 remaining.push((i, j));

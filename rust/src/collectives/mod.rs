@@ -41,6 +41,64 @@ pub use reduce::TreeReduce;
 use crate::net::{Collective, Msg, Packet, ProcId};
 use std::collections::{HashMap, VecDeque};
 
+/// `f(0..n) → Vec<Msg>` flattened in index order — rayon-parallel when the
+/// `parallel` feature is on and enabled. Per-index outputs are independent
+/// and merged in index order, so both paths are bit-identical.
+pub(crate) fn par_flat_map_msgs<F>(n: usize, f: F) -> Vec<Msg>
+where
+    F: Fn(usize) -> Vec<Msg> + Sync + Send,
+{
+    #[cfg(feature = "parallel")]
+    if crate::net::parallel_enabled() {
+        use rayon::prelude::*;
+        let per: Vec<Vec<Msg>> = (0..n).into_par_iter().map(&f).collect();
+        return per.into_iter().flatten().collect();
+    }
+    (0..n).flat_map(f).collect()
+}
+
+/// Apply `f` to every item (disjoint mutable borrows) — rayon-parallel
+/// when the `parallel` feature is on and enabled.
+pub(crate) fn par_for_each_mut<A, F>(items: &mut [A], f: F)
+where
+    A: Send,
+    F: Fn(usize, &mut A) + Sync + Send,
+{
+    #[cfg(feature = "parallel")]
+    if crate::net::parallel_enabled() {
+        use rayon::prelude::*;
+        items.par_iter_mut().enumerate().for_each(|(i, a)| f(i, a));
+        return;
+    }
+    for (i, a) in items.iter_mut().enumerate() {
+        f(i, a);
+    }
+}
+
+/// Map `f` over items (disjoint mutable borrows) collecting per-item
+/// message batches, flattened in item order — rayon-parallel when enabled.
+pub(crate) fn par_map_msgs_mut<A, F>(items: &mut [A], f: F) -> Vec<Msg>
+where
+    A: Send,
+    F: Fn(usize, &mut A) -> Vec<Msg> + Sync + Send,
+{
+    #[cfg(feature = "parallel")]
+    if crate::net::parallel_enabled() {
+        use rayon::prelude::*;
+        let per: Vec<Vec<Msg>> = items
+            .par_iter_mut()
+            .enumerate()
+            .map(|(i, a)| f(i, a))
+            .collect();
+        return per.into_iter().flatten().collect();
+    }
+    let mut out = Vec::new();
+    for (i, a) in items.iter_mut().enumerate() {
+        out.extend(f(i, a));
+    }
+    out
+}
+
 /// A zero-round collective holding fixed outputs. Used as a pipeline
 /// source ("these processors hold these packets") and for free local
 /// computation steps (the model charges only for communication).
@@ -86,6 +144,11 @@ impl Collective for LocalOp {
 /// engine sees the union of the children's messages each round, so `C1` is
 /// the max of the children's round counts and `m_t` is the max over all
 /// children — exactly the `max[C_A2A(A_0), …]` of Theorems 1–2.
+///
+/// With the `parallel` feature the children — being processor-disjoint —
+/// are stepped on rayon workers; their message batches are concatenated
+/// in child order, so the round content is identical to sequential
+/// stepping.
 pub struct Par {
     children: Vec<Box<dyn Collective>>,
 }
@@ -131,13 +194,7 @@ impl Collective for Par {
                 .unwrap_or_else(|| panic!("message to {} matches no child", m.dst));
             boxes[i].push(m);
         }
-        let mut out = Vec::new();
-        for (c, b) in self.children.iter_mut().zip(boxes) {
-            if !c.is_done() || !b.is_empty() {
-                out.extend(c.step(b));
-            }
-        }
-        out
+        step_children(&mut self.children, boxes)
     }
 
     fn outputs(&self) -> HashMap<ProcId, Packet> {
@@ -149,8 +206,36 @@ impl Collective for Par {
     }
 }
 
+/// Step processor-disjoint children against their routed inboxes, merging
+/// the emitted messages in child order.
+fn step_children(children: &mut [Box<dyn Collective>], boxes: Vec<Vec<Msg>>) -> Vec<Msg> {
+    #[cfg(feature = "parallel")]
+    if crate::net::parallel_enabled() {
+        use rayon::prelude::*;
+        let per: Vec<Vec<Msg>> = children
+            .par_iter_mut()
+            .zip(boxes)
+            .map(|(c, b)| {
+                if !c.is_done() || !b.is_empty() {
+                    c.step(b)
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        return per.into_iter().flatten().collect();
+    }
+    let mut out = Vec::new();
+    for (c, b) in children.iter_mut().zip(boxes) {
+        if !c.is_done() || !b.is_empty() {
+            out.extend(c.step(b));
+        }
+    }
+    out
+}
+
 /// Builder invoked with the previous stage's outputs.
-pub type StageBuilder = Box<dyn FnOnce(&HashMap<ProcId, Packet>) -> Box<dyn Collective>>;
+pub type StageBuilder = Box<dyn FnOnce(&HashMap<ProcId, Packet>) -> Box<dyn Collective> + Send>;
 
 /// Sequence collective phases; each stage starts from the previous stage's
 /// outputs. Stage boundaries cost no extra rounds: a stage's first sends

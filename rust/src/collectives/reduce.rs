@@ -75,7 +75,7 @@ impl<F: Field> Collective for TreeReduce<F> {
         for m in inbox {
             let r = rank_of[&m.dst];
             let acc = self.acc[r].as_mut().expect("receiver lost its packet");
-            for pkt in &m.payload {
+            for pkt in m.payload.iter() {
                 pkt_add(&self.f, acc, pkt);
             }
         }
@@ -94,7 +94,7 @@ impl<F: Field> Collective for TreeReduce<F> {
         for x in lo..hi {
             let parent = x % lo;
             let pkt = self.acc[x].take().expect("sender lost its packet");
-            out.push(Msg::new(self.procs[x], self.procs[parent], vec![pkt]));
+            out.push(Msg::single(self.procs[x], self.procs[parent], pkt));
         }
         out
     }

@@ -54,9 +54,12 @@ impl std::str::FromStr for CodeKind {
 /// How to verify coded outputs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum VerifyMode {
-    /// Native rust matrix oracle.
+    /// Native rust matrix oracle (full re-encode).
     #[default]
     Native,
+    /// Freivalds random-projection check — sublinear in the matrix
+    /// volume, error probability ≤ q^{-2}.
+    Freivalds,
     /// The AOT-compiled PJRT artifact (requires `make artifacts`).
     Pjrt,
     /// Skip verification.
@@ -68,6 +71,7 @@ impl std::str::FromStr for VerifyMode {
     fn from_str(s: &str) -> Result<Self> {
         Ok(match s {
             "native" => VerifyMode::Native,
+            "freivalds" => VerifyMode::Freivalds,
             "pjrt" => VerifyMode::Pjrt,
             "off" => VerifyMode::Off,
             other => anyhow::bail!("unknown verify mode {other:?}"),

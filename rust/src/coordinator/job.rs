@@ -143,6 +143,14 @@ impl EncodeJob {
                 &self.inputs,
                 &coded,
             )),
+            VerifyMode::Freivalds => Some(verify::freivalds(
+                &self.field,
+                &self.parity,
+                &self.inputs,
+                &coded,
+                self.config.seed ^ 0xF5EE,
+                2,
+            )),
             VerifyMode::Pjrt => Some(verify::pjrt(
                 &self.config.artifacts_dir,
                 &self.field,
@@ -194,6 +202,19 @@ mod tests {
         let rep2 = EncodeJob::synthetic(cfg2).unwrap().run().unwrap();
         assert_eq!(rep2.verified, Some(true));
         assert_eq!(rep2.choice, PlanChoice::RsSpecific);
+    }
+
+    #[test]
+    fn freivalds_verify_mode_accepts_simulated_encode() {
+        let cfg = JobConfig {
+            k: 16,
+            r: 4,
+            w: 8,
+            verify: crate::coordinator::config::VerifyMode::Freivalds,
+            ..JobConfig::default()
+        };
+        let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+        assert_eq!(rep.verified, Some(true));
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Output verification: the simulated collective's coded packets must
-//! equal `x·A` computed by an independent oracle — either native rust
-//! matrix math or the AOT-compiled PJRT artifact (proving the three-layer
-//! stack agrees end-to-end).
+//! equal `x·A` computed by an independent oracle — native rust matrix
+//! math (full re-encode), a Freivalds-style random projection (sublinear
+//! in the matrix volume), or the AOT-compiled PJRT artifact (proving the
+//! three-layer stack agrees end-to-end).
 
 use crate::gf::{Field, Mat};
 use crate::net::{pkt_zero, Packet};
+use crate::util::Rng;
 use std::path::Path;
 
 /// Native oracle: direct `x·A` over packets (delayed-reduction lincomb).
@@ -20,6 +22,71 @@ pub fn native<F: Field>(f: &F, a: &Mat, inputs: &[Packet], coded: &[Packet]) -> 
             .collect();
         f.lincomb_into(&mut want, &terms);
         if coded[j] != want {
+            return false;
+        }
+    }
+    true
+}
+
+/// Freivalds-style randomized verification of `x·A = y`.
+///
+/// Instead of the `O(K·R·W)` full re-encode of [`native`], draw a random
+/// projection `u ∈ F^R` and compare
+///
+/// ```text
+/// Σ_j u_j·y_j   ==   Σ_i (Σ_j A[i][j]·u_j) · x_i
+/// ```
+///
+/// — `O(R·W + K·R + K·W)` work per round. A wrong codeword survives one
+/// round with probability ≤ 1/q, so `rounds` trials push the error below
+/// `q^{-rounds}` (≈ 2^{-40} for the default field at `rounds = 2`).
+/// Deterministic for a fixed `seed` — regression tests can pin a
+/// known-bad codeword and the projection that rejects it.
+pub fn freivalds<F: Field>(
+    f: &F,
+    a: &Mat,
+    inputs: &[Packet],
+    coded: &[Packet],
+    seed: u64,
+    rounds: u32,
+) -> bool {
+    let w = inputs.first().map_or(0, |p| p.len());
+    if coded.len() != a.cols
+        || inputs.len() != a.rows
+        || inputs.iter().any(|p| p.len() != w)
+        || coded.iter().any(|p| p.len() != w)
+    {
+        return false;
+    }
+    let mut rng = Rng::new(seed);
+    for _ in 0..rounds.max(1) {
+        let u: Vec<u64> = (0..a.cols).map(|_| rng.below(f.order())).collect();
+        // lhs = Σ_j u_j·y_j  — O(R·W).
+        let mut lhs = pkt_zero(w);
+        let terms: Vec<(u64, &[u64])> = u
+            .iter()
+            .zip(coded)
+            .map(|(&c, p)| (c, p.as_slice()))
+            .collect();
+        f.lincomb_into(&mut lhs, &terms);
+        // v_i = Σ_j A[i][j]·u_j — O(K·R); rhs = Σ_i v_i·x_i — O(K·W).
+        let v: Vec<u64> = (0..a.rows)
+            .map(|i| {
+                let mut acc = 0u64;
+                for (&aij, &uj) in a.row(i).iter().zip(&u) {
+                    acc = f.mul_add(acc, aij, uj);
+                }
+                acc
+            })
+            .collect();
+        let mut rhs = pkt_zero(w);
+        let terms: Vec<(u64, &[u64])> = v
+            .iter()
+            .zip(inputs)
+            .map(|(&c, p)| (c, p.as_slice()))
+            .collect();
+        f.lincomb_into(&mut rhs, &terms);
+        if lhs != rhs {
             return false;
         }
     }
@@ -68,5 +135,87 @@ mod tests {
         assert!(native(&f, &a, &inputs, &coded));
         coded[1][0] ^= 1;
         assert!(!native(&f, &a, &inputs, &coded));
+    }
+
+    #[test]
+    fn freivalds_accepts_correct_codewords() {
+        let f = GfPrime::default_field();
+        let mut rng = crate::util::Rng::new(17);
+        for (k, r, w) in [(8usize, 4usize, 3usize), (16, 16, 1), (4, 20, 2)] {
+            let a = Mat::random(&f, k, r, rng.next_u64());
+            let inputs: Vec<Packet> = (0..k)
+                .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                .collect();
+            let coded: Vec<Packet> = (0..r)
+                .map(|j| {
+                    let mut acc = pkt_zero(w);
+                    for i in 0..k {
+                        crate::net::pkt_add_scaled(&f, &mut acc, a[(i, j)], &inputs[i]);
+                    }
+                    acc
+                })
+                .collect();
+            for seed in 0..20 {
+                assert!(freivalds(&f, &a, &inputs, &coded, seed, 2), "K={k} R={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn freivalds_rejects_pinned_bad_codeword() {
+        // Regression pin: this exact corrupted codeword, with this exact
+        // projection seed, must be rejected (and stay rejected — the
+        // projection is deterministic in the seed).
+        let f = GfPrime::default_field();
+        let a = Mat::random(&f, 6, 3, 99);
+        let inputs: Vec<Packet> = (0..6u64).map(|i| vec![i * 41 + 7, i + 1]).collect();
+        let mut coded: Vec<Packet> = (0..3)
+            .map(|j| {
+                let mut acc = pkt_zero(2);
+                for i in 0..6 {
+                    crate::net::pkt_add_scaled(&f, &mut acc, a[(i, j)], &inputs[i]);
+                }
+                acc
+            })
+            .collect();
+        assert!(freivalds(&f, &a, &inputs, &coded, 42, 2));
+        // Corrupt one symbol of one coded packet.
+        coded[2][1] = f.add(coded[2][1], 1);
+        assert!(!freivalds(&f, &a, &inputs, &coded, 42, 2));
+        // Shape mismatches are rejected outright.
+        assert!(!freivalds(&f, &a, &inputs, &coded[..2].to_vec(), 42, 2));
+    }
+
+    #[test]
+    fn freivalds_random_corruptions_rejected() {
+        // Sweep: random single-symbol corruptions must essentially always
+        // be caught at rounds = 2 (error probability q^{-2} ≈ 2^{-40}).
+        let f = GfPrime::default_field();
+        let mut rng = crate::util::Rng::new(0xF5EE);
+        let (k, r, w) = (12usize, 8usize, 4usize);
+        let a = Mat::random(&f, k, r, 5);
+        let inputs: Vec<Packet> = (0..k)
+            .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+            .collect();
+        let coded: Vec<Packet> = (0..r)
+            .map(|j| {
+                let mut acc = pkt_zero(w);
+                for i in 0..k {
+                    crate::net::pkt_add_scaled(&f, &mut acc, a[(i, j)], &inputs[i]);
+                }
+                acc
+            })
+            .collect();
+        for trial in 0..50 {
+            let mut bad = coded.clone();
+            let j = rng.below(r as u64) as usize;
+            let c = rng.below(w as u64) as usize;
+            let delta = rng.range(1, f.order());
+            bad[j][c] = f.add(bad[j][c], delta);
+            assert!(
+                !freivalds(&f, &a, &inputs, &bad, trial, 2),
+                "trial {trial}: corruption at ({j},{c}) slipped through"
+            );
+        }
     }
 }

@@ -202,6 +202,7 @@ fn build_k_ge_r<F: Field>(
     w: usize,
     layout: Layout,
     make_a2a: impl Fn(&F, Vec<ProcId>, usize, Arc<Mat>, Vec<Packet>) -> Box<dyn Collective>
+        + Send
         + 'static,
 ) -> Pipeline {
     let (k, r) = (layout.k, layout.r);
@@ -231,7 +232,9 @@ fn build_k_ge_r_with<F: Field>(
     p: usize,
     w: usize,
     layout: Layout,
-    make_block: impl Fn(&F, Vec<ProcId>, usize, usize, Vec<Packet>) -> Box<dyn Collective> + 'static,
+    make_block: impl Fn(&F, Vec<ProcId>, usize, usize, Vec<Packet>) -> Box<dyn Collective>
+        + Send
+        + 'static,
 ) -> Pipeline {
     let (k, r) = (layout.k, layout.r);
     let m_cols = k.div_ceil(r);
@@ -307,6 +310,7 @@ fn build_k_lt_r<F: Field>(
     w: usize,
     layout: Layout,
     make_a2a: impl Fn(&F, Vec<ProcId>, usize, Arc<Mat>, Vec<Packet>) -> Box<dyn Collective>
+        + Send
         + 'static,
 ) -> Pipeline {
     let (k, r) = (layout.k, layout.r);
@@ -332,7 +336,9 @@ fn build_k_lt_r_with<F: Field>(
     p: usize,
     w: usize,
     layout: Layout,
-    make_block: impl Fn(&F, Vec<ProcId>, usize, usize, Vec<Packet>) -> Box<dyn Collective> + 'static,
+    make_block: impl Fn(&F, Vec<ProcId>, usize, usize, Vec<Packet>) -> Box<dyn Collective>
+        + Send
+        + 'static,
 ) -> Pipeline {
     let (k, r) = (layout.k, layout.r);
     let m_cols = r.div_ceil(k);

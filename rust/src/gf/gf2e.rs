@@ -126,6 +126,47 @@ impl Field for Gf2e {
     fn lazy_mul_acc(&self, acc: u64, c: u64, s: u64) -> u64 {
         acc ^ self.mul(c, s)
     }
+
+    /// Hoisted-log axpy: `log c` is looked up once per call instead of
+    /// once per element, leaving one table read + XOR per element.
+    fn axpy_into(&self, acc: &mut [u64], c: u64, src: &[u64]) {
+        if c == 0 {
+            return;
+        }
+        debug_assert_eq!(acc.len(), src.len());
+        let t = &*self.t;
+        let log_c = t.log[c as usize];
+        for (a, &s) in acc.iter_mut().zip(src) {
+            if s != 0 {
+                *a ^= t.exp[(log_c + t.log[s as usize]) as usize] as u64;
+            }
+        }
+    }
+
+    fn scale_slice(&self, dst: &mut [u64], c: u64, src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        if c == 0 {
+            dst.fill(0);
+            return;
+        }
+        let t = &*self.t;
+        let log_c = t.log[c as usize];
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = if s == 0 {
+                0
+            } else {
+                t.exp[(log_c + t.log[s as usize]) as usize] as u64
+            };
+        }
+    }
+
+    /// A linear combination over `GF(2^w)` is a sequence of hoisted-log
+    /// axpys — XOR accumulation needs no reduction passes at all.
+    fn lincomb_into(&self, acc: &mut [u64], terms: &[(u64, &[u64])]) {
+        for &(c, src) in terms {
+            self.axpy_into(acc, c, src);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -117,7 +117,7 @@ pub trait Field: Clone + Send + Sync + std::fmt::Debug + 'static {
     /// a `lazy_reduce` pass is required. Prime fields accumulate raw
     /// `c·s` products (thousands fit in a `u64` for `p < 2^20`); `GF(2^w)`
     /// accumulates with XOR, which never overflows. The defaults reduce
-    /// every term. See EXPERIMENTS.md §Perf.
+    /// every term. See DESIGN.md §Perf.
     fn lazy_chunk(&self) -> usize {
         1
     }
@@ -151,6 +151,29 @@ pub trait Field: Clone + Send + Sync + std::fmt::Debug + 'static {
             for a in acc.iter_mut() {
                 *a = self.lazy_reduce(*a);
             }
+        }
+    }
+
+    /// `acc[i] += c·src[i]` — the single-term axpy over contiguous slices.
+    ///
+    /// The default applies `mul_add` per element; field implementations
+    /// override with fused kernels (one Barrett reduction per element for
+    /// prime fields, a hoisted `log c` for `GF(2^w)`).
+    fn axpy_into(&self, acc: &mut [u64], c: u64, src: &[u64]) {
+        if c == 0 {
+            return;
+        }
+        debug_assert_eq!(acc.len(), src.len());
+        for (a, &s) in acc.iter_mut().zip(src) {
+            *a = self.mul_add(*a, c, s);
+        }
+    }
+
+    /// `dst[i] = c·src[i]` over contiguous slices.
+    fn scale_slice(&self, dst: &mut [u64], c: u64, src: &[u64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        for (d, &s) in dst.iter_mut().zip(src) {
+            *d = self.mul(c, s);
         }
     }
 }
@@ -208,6 +231,12 @@ impl Field for AnyField {
     }
     fn lincomb_into(&self, acc: &mut [u64], terms: &[(u64, &[u64])]) {
         dispatch!(self, lincomb_into(acc, terms))
+    }
+    fn axpy_into(&self, acc: &mut [u64], c: u64, src: &[u64]) {
+        dispatch!(self, axpy_into(acc, c, src))
+    }
+    fn scale_slice(&self, dst: &mut [u64], c: u64, src: &[u64]) {
+        dispatch!(self, scale_slice(dst, c, src))
     }
     fn lazy_chunk(&self) -> usize {
         dispatch!(self, lazy_chunk())

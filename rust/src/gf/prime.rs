@@ -7,7 +7,7 @@
 //!
 //! Multiplication uses Barrett reduction (a single `u128` multiply and a
 //! correction step) rather than `%`, which matters in the payload hot loop
-//! — see EXPERIMENTS.md §Perf.
+//! — see DESIGN.md §Perf and `benches/hotpath.rs`.
 
 use super::Field;
 
@@ -152,6 +152,19 @@ impl Field for GfPrime {
     #[inline(always)]
     fn lazy_reduce(&self, x: u64) -> u64 {
         self.reduce_wide(x)
+    }
+
+    /// Fused axpy: `a + c·s ≤ (p−1) + (p−1)² < p²`, so a single Barrett
+    /// reduction replaces the reduce-then-add-correct pair of `mul_add`.
+    fn axpy_into(&self, acc: &mut [u64], c: u64, src: &[u64]) {
+        if c == 0 {
+            return;
+        }
+        debug_assert!(c < self.p);
+        debug_assert_eq!(acc.len(), src.len());
+        for (a, &s) in acc.iter_mut().zip(src) {
+            *a = self.reduce(*a + c * s);
+        }
     }
 }
 

@@ -22,10 +22,17 @@
 //! * [`coordinator`] — the deployable layer: config, planner, jobs,
 //!   verification, metrics, and a threaded batch-encode service;
 //! * [`runtime`] — the PJRT bridge that loads the AOT-compiled Pallas
-//!   GF(p) kernel (`artifacts/*.hlo.txt`) for the bulk-encode hot path.
+//!   GF(p) kernel (`artifacts/*.hlo.txt`) for the bulk-encode hot path
+//!   (a graceful stub unless built with the `pjrt` feature).
 //!
-//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
-//! the measured-vs-theory tables.
+//! See `DESIGN.md` (next to this crate's `Cargo.toml`) for the
+//! paper-to-module map; `benches/` regenerates the measured-vs-theory
+//! tables.
+//!
+//! Cargo features: `parallel` steps processor-disjoint collectives and
+//! the prepare-and-shoot per-rank loops on rayon workers —
+//! bit-identically to the sequential engine; `pjrt` enables the XLA
+//! runtime bridge (needs the `xla` bindings crate).
 
 pub mod codes;
 pub mod collectives;
@@ -37,4 +44,4 @@ pub mod runtime;
 pub mod util;
 
 pub use gf::{Field, GfPrime, Mat};
-pub use net::{CostModel, SimReport};
+pub use net::{CostModel, Packet, PacketBuf, SimReport};

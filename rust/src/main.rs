@@ -55,7 +55,7 @@ fn print_usage() {
          \x20 dce run      [--config FILE] [--k N] [--r N] [--w N] [--ports N]\n\
          \x20              [--algorithm auto|rs-specific|universal|multi-reduce|direct]\n\
          \x20              [--code rs-structured|rs-plain|lagrange|random]\n\
-         \x20              [--verify native|pjrt|off] [--alpha F] [--beta F] [--json]\n\
+         \x20              [--verify native|freivalds|pjrt|off] [--alpha F] [--beta F] [--json]\n\
          \x20 dce table1   [--ports-max P]      regenerate Table I (measured vs formula)\n\
          \x20 dce sweep    --what rs|baselines  cost-comparison sweeps\n\
          \x20 dce service  [--workers N] [--requests N] [--w N]\n\

@@ -13,6 +13,12 @@
 //! [`sim::run`] executes a [`sim::Collective`] (an algorithm = scheduling
 //! + coding scheme) against this model, *enforcing* the port constraints
 //! and accounting `C1`/`C2` exactly as defined above.
+//!
+//! With the `parallel` cargo feature, collectives that fan out over
+//! processors (notably [`Par`](crate::collectives::Par) and the
+//! prepare-and-shoot hot loops) step with rayon; [`set_parallel`] toggles
+//! this at runtime so sequential/parallel runs can be compared
+//! bit-for-bit in one process.
 
 pub mod model;
 pub mod noisy;
@@ -22,6 +28,33 @@ pub mod trace;
 
 pub use model::CostModel;
 pub use noisy::{ErasureChannel, InnerFec, NoisyCollective};
-pub use payload::{lincomb, pkt_add, pkt_add_scaled, pkt_scale, pkt_zero, Packet};
+pub use payload::{lincomb, pkt_add, pkt_add_scaled, pkt_scale, pkt_zero, Packet, PacketBuf};
 pub use sim::{run, Collective, Msg, ProcId, Sim, SimReport};
 pub use trace::TraceEvent;
+
+#[cfg(feature = "parallel")]
+static PARALLEL_DISABLED: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+/// Whether parallel round steps are active. Always `false` without the
+/// `parallel` cargo feature.
+pub fn parallel_enabled() -> bool {
+    #[cfg(feature = "parallel")]
+    {
+        !PARALLEL_DISABLED.load(std::sync::atomic::Ordering::Relaxed)
+    }
+    #[cfg(not(feature = "parallel"))]
+    {
+        false
+    }
+}
+
+/// Toggle parallel round steps at runtime (no-op without the `parallel`
+/// feature). Sequential and parallel execution are bit-identical by
+/// construction; this exists so tests can assert exactly that.
+pub fn set_parallel(enabled: bool) {
+    #[cfg(feature = "parallel")]
+    PARALLEL_DISABLED.store(!enabled, std::sync::atomic::Ordering::Relaxed);
+    #[cfg(not(feature = "parallel"))]
+    let _ = enabled;
+}

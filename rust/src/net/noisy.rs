@@ -19,7 +19,7 @@
 //! `(W+t)/W` — the paper's claim that noise integration is orthogonal to
 //! the scheduling.
 
-use super::payload::Packet;
+use super::payload::{Packet, PacketBuf};
 use super::sim::{Collective, Msg, ProcId};
 use crate::codes::GrsCode;
 use crate::gf::Field;
@@ -46,9 +46,9 @@ impl ErasureChannel {
         }
     }
 
-    /// Corrupt a packet in place.
-    fn hit(&mut self, pkt: &mut Packet) {
-        for s in pkt.iter_mut() {
+    /// Corrupt wire symbols in place.
+    fn hit(&mut self, symbols: &mut [u64]) {
+        for s in symbols.iter_mut() {
             if (self.rng.next_u64() as f64 / u64::MAX as f64) < self.rate {
                 *s = ERASED;
             }
@@ -82,13 +82,13 @@ impl<F: Field> InnerFec<F> {
     }
 
     /// Encode: append `t` parity symbols.
-    pub fn protect(&self, pkt: &Packet) -> Packet {
+    pub fn protect(&self, pkt: &[u64]) -> Packet {
         debug_assert_eq!(pkt.len(), self.w);
         self.code.encode(&self.f, pkt)
     }
 
     /// Decode: repair ≤ `t` erasures; `None` when unrecoverable.
-    pub fn recover(&self, wire: &Packet) -> Option<Packet> {
+    pub fn recover(&self, wire: &[u64]) -> Option<Packet> {
         debug_assert_eq!(wire.len(), self.w + self.t);
         let coords: Vec<(usize, u64)> = wire
             .iter()
@@ -139,17 +139,17 @@ impl<F: Field> Collective for NoisyCollective<F> {
         let decoded: Vec<Msg> = inbox
             .into_iter()
             .map(|mut m| {
-                m.payload = m
-                    .payload
-                    .iter()
-                    .map(|wire| match self.fec.recover(wire) {
-                        Some(p) => p,
+                let mut logical = PacketBuf::with_capacity(self.fec.w, m.payload.count());
+                for wire in m.payload.iter() {
+                    match self.fec.recover(wire) {
+                        Some(p) => logical.push(&p),
                         None => {
                             self.losses += 1;
-                            vec![0; self.fec.w] // erase to zero; counted
+                            logical.push(&vec![0; self.fec.w]); // erase to zero; counted
                         }
-                    })
-                    .collect();
+                    }
+                }
+                m.payload = logical;
                 m
             })
             .collect();
@@ -157,15 +157,12 @@ impl<F: Field> Collective for NoisyCollective<F> {
         let out = self.inner.step(decoded);
         out.into_iter()
             .map(|mut m| {
-                m.payload = m
-                    .payload
-                    .iter()
-                    .map(|p| {
-                        let mut wire = self.fec.protect(p);
-                        self.channel.hit(&mut wire);
-                        wire
-                    })
-                    .collect();
+                let mut wire = PacketBuf::with_capacity(self.fec.w + self.fec.t, m.payload.count());
+                for p in m.payload.iter() {
+                    wire.push(&self.fec.protect(p));
+                }
+                self.channel.hit(wire.data_mut());
+                m.payload = wire;
                 m
             })
             .collect()

@@ -1,15 +1,155 @@
-//! Packet payloads: vectors in `F_q^W`.
+//! Packet payloads: vectors in `F_q^W`, stored flat.
 //!
 //! Remark 2 of the paper: an A2A algorithm over `F_q` applies verbatim to
 //! data vectors in `F_q^W` by viewing them as elements of the extension
 //! field `F_{q^W}` while keeping the coding matrix over `F_q` — same `C1`,
-//! `W×` the `C2`. We therefore represent a packet as a `W`-vector of base
-//! field elements and charge `W` elements per packet on the wire.
+//! `W×` the `C2`. A logical packet is therefore a `W`-vector of base field
+//! elements charged as `W` elements on the wire.
+//!
+//! Two representations:
+//!
+//! * [`Packet`] — one owned logical packet (`Vec<u64>`), the currency of
+//!   collective inputs/outputs;
+//! * [`PacketBuf`] — a **width-aware flat buffer**: `count` packets of
+//!   `width` elements each in one contiguous allocation, with
+//!   slice-indexed views. Every wire message and every per-processor
+//!   working set (prepare memories, shoot accumulators) uses this form,
+//!   so the axpy/lincomb kernels run over contiguous memory instead of
+//!   chasing one heap allocation per packet.
 
 use crate::gf::Field;
 
-/// A packet: `W` field elements (`W = 1` for the scalar A2A of Def. 4).
+/// A single logical packet: `W` field elements (`W = 1` for the scalar
+/// A2A of Def. 4).
 pub type Packet = Vec<u64>;
+
+/// A flat buffer of `count` packets, each `width` field elements, in one
+/// contiguous allocation. Packet `i` occupies `data[i·width .. (i+1)·width]`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PacketBuf {
+    width: usize,
+    count: usize,
+    data: Vec<u64>,
+}
+
+impl PacketBuf {
+    /// An empty buffer of the given packet width.
+    pub fn new(width: usize) -> Self {
+        PacketBuf {
+            width,
+            count: 0,
+            data: Vec::new(),
+        }
+    }
+
+    /// An empty buffer with room for `packets` packets.
+    pub fn with_capacity(width: usize, packets: usize) -> Self {
+        PacketBuf {
+            width,
+            count: 0,
+            data: Vec::with_capacity(width * packets),
+        }
+    }
+
+    /// `count` all-zero packets of the given width.
+    pub fn zeros(width: usize, count: usize) -> Self {
+        PacketBuf {
+            width,
+            count,
+            data: vec![0; width * count],
+        }
+    }
+
+    /// A buffer holding exactly one packet (takes ownership — no copy).
+    pub fn from_packet(pkt: Packet) -> Self {
+        PacketBuf {
+            width: pkt.len(),
+            count: 1,
+            data: pkt,
+        }
+    }
+
+    /// Gather packets (all of width `width`) into one flat allocation.
+    pub fn from_slices<'a>(width: usize, parts: impl IntoIterator<Item = &'a [u64]>) -> Self {
+        let mut buf = PacketBuf::new(width);
+        for p in parts {
+            buf.push(p);
+        }
+        buf
+    }
+
+    /// Append one packet (must match the buffer width).
+    pub fn push(&mut self, pkt: &[u64]) {
+        debug_assert_eq!(pkt.len(), self.width, "packet width mismatch");
+        self.data.extend_from_slice(pkt);
+        self.count += 1;
+    }
+
+    /// Packet width `W`.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Number of packets.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Total size in field elements — the unit of `C2`.
+    pub fn elems(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    /// Borrow packet `i`.
+    #[inline]
+    pub fn pkt(&self, i: usize) -> &[u64] {
+        &self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    /// Mutably borrow packet `i`.
+    #[inline]
+    pub fn pkt_mut(&mut self, i: usize) -> &mut [u64] {
+        &mut self.data[i * self.width..(i + 1) * self.width]
+    }
+
+    /// Mutably borrow two distinct packets at once (`i < j`).
+    pub fn pair_mut(&mut self, i: usize, j: usize) -> (&mut [u64], &mut [u64]) {
+        assert!(i < j && j < self.count);
+        let w = self.width;
+        let (lo, hi) = self.data.split_at_mut(j * w);
+        (&mut lo[i * w..(i + 1) * w], &mut hi[..w])
+    }
+
+    /// Iterate over packet views in index order.
+    pub fn iter(&self) -> impl Iterator<Item = &[u64]> + '_ {
+        (0..self.count).map(move |i| self.pkt(i))
+    }
+
+    /// The whole contiguous storage.
+    pub fn data(&self) -> &[u64] {
+        &self.data
+    }
+
+    /// The whole contiguous storage, mutably (reductions, channels).
+    pub fn data_mut(&mut self) -> &mut [u64] {
+        &mut self.data
+    }
+
+    /// Split back into owned packets (copies all but conceptually final).
+    pub fn into_packets(self) -> Vec<Packet> {
+        (0..self.count).map(|i| self.pkt(i).to_vec()).collect()
+    }
+
+    /// Extract the single packet of a one-packet buffer (no copy).
+    pub fn into_single(self) -> Packet {
+        assert_eq!(self.count, 1, "expected exactly one packet");
+        self.data
+    }
+}
 
 /// The all-zero packet of width `w`.
 pub fn pkt_zero(w: usize) -> Packet {
@@ -17,35 +157,31 @@ pub fn pkt_zero(w: usize) -> Packet {
 }
 
 /// `dst += src` (element-wise field addition).
-pub fn pkt_add<F: Field>(f: &F, dst: &mut Packet, src: &Packet) {
+pub fn pkt_add<F: Field>(f: &F, dst: &mut [u64], src: &[u64]) {
     debug_assert_eq!(dst.len(), src.len());
     for (d, &s) in dst.iter_mut().zip(src) {
         *d = f.add(*d, s);
     }
 }
 
-/// `dst += c · src` — the axpy at the heart of every coding scheme.
-pub fn pkt_add_scaled<F: Field>(f: &F, dst: &mut Packet, c: u64, src: &Packet) {
-    debug_assert_eq!(dst.len(), src.len());
-    if c == 0 {
-        return;
-    }
-    for (d, &s) in dst.iter_mut().zip(src) {
-        *d = f.mul_add(*d, c, s);
-    }
+/// `dst += c · src` — the axpy at the heart of every coding scheme
+/// (fused-reduction kernel per field, see [`Field::axpy_into`]).
+pub fn pkt_add_scaled<F: Field>(f: &F, dst: &mut [u64], c: u64, src: &[u64]) {
+    f.axpy_into(dst, c, src);
 }
 
 /// `c · src` as a fresh packet.
-pub fn pkt_scale<F: Field>(f: &F, c: u64, src: &Packet) -> Packet {
-    src.iter().map(|&s| f.mul(c, s)).collect()
+pub fn pkt_scale<F: Field>(f: &F, c: u64, src: &[u64]) -> Packet {
+    let mut out = vec![0; src.len()];
+    f.scale_slice(&mut out, c, src);
+    out
 }
 
-/// `Σ coeffs[i] · pkts[i]` — a full linear combination (delayed-reduction
+/// `Σ coeffs[i] · srcs[i]` — a full linear combination (delayed-reduction
 /// fast path via [`Field::lincomb_into`]).
-pub fn lincomb<F: Field>(f: &F, terms: &[(u64, &Packet)], w: usize) -> Packet {
+pub fn lincomb<F: Field>(f: &F, terms: &[(u64, &[u64])], w: usize) -> Packet {
     let mut out = pkt_zero(w);
-    let slices: Vec<(u64, &[u64])> = terms.iter().map(|&(c, p)| (c, p.as_slice())).collect();
-    f.lincomb_into(&mut out, &slices);
+    f.lincomb_into(&mut out, terms);
     out
 }
 
@@ -73,5 +209,54 @@ mod tests {
         let mut acc: Packet = vec![1, 2];
         pkt_add_scaled(&f, &mut acc, 0, &a);
         assert_eq!(acc, vec![1, 2]);
+    }
+
+    #[test]
+    fn flat_buffer_views_match_layout() {
+        let mut buf = PacketBuf::with_capacity(3, 2);
+        buf.push(&[1, 2, 3]);
+        buf.push(&[4, 5, 6]);
+        assert_eq!(buf.count(), 2);
+        assert_eq!(buf.width(), 3);
+        assert_eq!(buf.elems(), 6);
+        assert_eq!(buf.pkt(0), &[1, 2, 3]);
+        assert_eq!(buf.pkt(1), &[4, 5, 6]);
+        assert_eq!(buf.data(), &[1, 2, 3, 4, 5, 6]);
+        let views: Vec<&[u64]> = buf.iter().collect();
+        assert_eq!(views, vec![&[1u64, 2, 3][..], &[4, 5, 6][..]]);
+        assert_eq!(buf.clone().into_packets(), vec![vec![1, 2, 3], vec![4, 5, 6]]);
+        let (a, b) = buf.pair_mut(0, 1);
+        a[0] = 9;
+        b[2] = 8;
+        assert_eq!(buf.pkt(0), &[9, 2, 3]);
+        assert_eq!(buf.pkt(1), &[4, 5, 8]);
+    }
+
+    #[test]
+    fn flat_buffer_single_roundtrip() {
+        let buf = PacketBuf::from_packet(vec![7, 8]);
+        assert_eq!(buf.count(), 1);
+        assert_eq!(buf.into_single(), vec![7, 8]);
+        let zeros = PacketBuf::zeros(2, 3);
+        assert_eq!(zeros.count(), 3);
+        assert_eq!(zeros.elems(), 6);
+        assert!(zeros.iter().all(|p| p == [0, 0]));
+    }
+
+    #[test]
+    fn flat_axpy_over_contiguous_storage_matches_per_packet() {
+        let f = GfPrime::default_field();
+        let mut buf = PacketBuf::zeros(4, 3);
+        let src: Vec<u64> = (1..=12).collect();
+        // One fused axpy over the whole working set...
+        f.axpy_into(buf.data_mut(), 5, &src);
+        // ...equals three per-packet axpys.
+        let mut per = vec![pkt_zero(4); 3];
+        for (i, p) in per.iter_mut().enumerate() {
+            pkt_add_scaled(&f, p, 5, &src[i * 4..(i + 1) * 4]);
+        }
+        for i in 0..3 {
+            assert_eq!(buf.pkt(i), &per[i][..]);
+        }
     }
 }

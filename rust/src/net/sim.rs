@@ -10,8 +10,17 @@
 //! * accounting `C1` (rounds) and `C2 = Σ_t m_t` (`m_t` = largest message,
 //!   in field elements, of round `t`) exactly as §I defines them,
 //! * optionally recording a full message trace (used by the figure tests).
+//!
+//! Routing uses **preallocated per-processor inboxes** (plain `Vec`s
+//! indexed by `ProcId`, grown on demand) instead of per-round hash maps,
+//! and delivers each round's messages in deterministic destination-major
+//! order. Because delivery order is normalised here, a collective whose
+//! `step` fans out over processors with rayon (the `parallel` feature)
+//! produces bit-identical runs to the sequential engine — field addition
+//! is exactly associative/commutative and all parallel loops merge their
+//! outputs in processor-index order.
 
-use super::payload::Packet;
+use super::payload::{Packet, PacketBuf};
 use super::trace::TraceEvent;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
@@ -19,27 +28,36 @@ use std::collections::HashMap;
 /// Global processor identifier.
 pub type ProcId = usize;
 
-/// One message: a set of packets from `src` to `dst` through one port.
+/// One message: a flat buffer of packets from `src` to `dst` through one
+/// port.
 #[derive(Clone, Debug)]
 pub struct Msg {
     pub src: ProcId,
     pub dst: ProcId,
-    pub payload: Vec<Packet>,
+    pub payload: PacketBuf,
 }
 
 impl Msg {
-    pub fn new(src: ProcId, dst: ProcId, payload: Vec<Packet>) -> Self {
+    pub fn new(src: ProcId, dst: ProcId, payload: PacketBuf) -> Self {
         Msg { src, dst, payload }
+    }
+
+    /// A message carrying a single packet.
+    pub fn single(src: ProcId, dst: ProcId, pkt: Packet) -> Self {
+        Msg::new(src, dst, PacketBuf::from_packet(pkt))
     }
 
     /// Size in `F_q` elements — the unit of `C2`.
     pub fn elems(&self) -> u64 {
-        self.payload.iter().map(|p| p.len() as u64).sum()
+        self.payload.elems()
     }
 }
 
 /// A round-stepped distributed algorithm (scheduling + coding scheme).
-pub trait Collective {
+///
+/// `Send` so processor-disjoint collectives can be stepped from worker
+/// threads (see [`crate::collectives::Par`]).
+pub trait Collective: Send {
     /// The processors this collective touches (used for message routing by
     /// combinators; the engine itself routes by `Msg::dst`).
     fn participants(&self) -> Vec<ProcId>;
@@ -117,49 +135,68 @@ impl SimReport {
     }
 }
 
-/// Run `coll` to completion under the p-port model; panics-free — all
-/// protocol violations surface as errors naming the offending round.
-pub fn run(sim: &mut Sim, coll: &mut dyn Collective) -> Result<SimReport> {
-    let mut report = SimReport::default();
-    let mut inbox: Vec<Msg> = Vec::new();
-    let mut idle_guard = 0usize;
-    loop {
-        if coll.is_done() && inbox.is_empty() {
-            break;
+/// Per-processor routing state, preallocated once per run and reused every
+/// round: port counters and inboxes are `ProcId`-indexed vectors (grown on
+/// demand) rather than per-round hash maps.
+struct Router {
+    send_used: Vec<u32>,
+    recv_used: Vec<u32>,
+    inboxes: Vec<Vec<Msg>>,
+    /// Destinations with a non-empty inbox this round.
+    touched: Vec<ProcId>,
+    /// Processors with non-zero port counters this round.
+    counted: Vec<ProcId>,
+}
+
+impl Router {
+    fn with_capacity(n: usize) -> Self {
+        Router {
+            send_used: vec![0; n],
+            recv_used: vec![0; n],
+            inboxes: (0..n).map(|_| Vec::new()).collect(),
+            touched: Vec::new(),
+            counted: Vec::new(),
         }
-        let out = coll.step(std::mem::take(&mut inbox));
-        if out.is_empty() {
-            if coll.is_done() {
-                break;
-            }
-            idle_guard += 1;
-            if idle_guard > 8 {
-                bail!("collective stalled: {idle_guard} empty rounds without completion");
-            }
-            continue;
+    }
+
+    fn ensure(&mut self, pid: ProcId) {
+        if pid >= self.send_used.len() {
+            self.send_used.resize(pid + 1, 0);
+            self.recv_used.resize(pid + 1, 0);
+            self.inboxes.resize_with(pid + 1, Vec::new);
         }
-        idle_guard = 0;
-        // ---- port enforcement ----
-        let round = report.c1 + 1;
-        let mut sends: HashMap<ProcId, usize> = HashMap::new();
-        let mut recvs: HashMap<ProcId, usize> = HashMap::new();
+    }
+
+    /// Validate and route one round's sends; returns `m_t`.
+    fn route(
+        &mut self,
+        sim: &mut Sim,
+        round: u64,
+        out: Vec<Msg>,
+        report: &mut SimReport,
+    ) -> Result<u64> {
         let mut m_t = 0u64;
-        for m in &out {
+        for m in out {
             if m.src == m.dst {
                 bail!("round {round}: self-message at processor {}", m.src);
             }
-            let s = sends.entry(m.src).or_default();
-            *s += 1;
-            if *s > sim.ports {
+            self.ensure(m.src.max(m.dst));
+            self.send_used[m.src] += 1;
+            if self.send_used[m.src] == 1 {
+                self.counted.push(m.src);
+            }
+            if self.send_used[m.src] as usize > sim.ports {
                 bail!(
                     "round {round}: processor {} exceeds {} send ports",
                     m.src,
                     sim.ports
                 );
             }
-            let r = recvs.entry(m.dst).or_default();
-            *r += 1;
-            if *r > sim.ports {
+            self.recv_used[m.dst] += 1;
+            if self.recv_used[m.dst] == 1 {
+                self.counted.push(m.dst);
+            }
+            if self.recv_used[m.dst] as usize > sim.ports {
                 bail!(
                     "round {round}: processor {} exceeds {} receive ports",
                     m.dst,
@@ -181,11 +218,67 @@ pub fn run(sim: &mut Sim, coll: &mut dyn Collective) -> Result<SimReport> {
                     elems: e,
                 });
             }
+            if self.inboxes[m.dst].is_empty() {
+                self.touched.push(m.dst);
+            }
+            self.inboxes[m.dst].push(m);
         }
+        for &p in &self.counted {
+            self.send_used[p] = 0;
+            self.recv_used[p] = 0;
+        }
+        self.counted.clear();
+        Ok(m_t)
+    }
+
+    /// Drain routed messages in destination-major order (deterministic
+    /// regardless of the order `step` emitted them in).
+    fn drain(&mut self) -> Vec<Msg> {
+        self.touched.sort_unstable();
+        let mut out = Vec::new();
+        for &d in &self.touched {
+            out.append(&mut self.inboxes[d]);
+        }
+        self.touched.clear();
+        out
+    }
+}
+
+/// Run `coll` to completion under the p-port model; panics-free — all
+/// protocol violations surface as errors naming the offending round.
+pub fn run(sim: &mut Sim, coll: &mut dyn Collective) -> Result<SimReport> {
+    let mut report = SimReport::default();
+    let cap = coll
+        .participants()
+        .iter()
+        .copied()
+        .max()
+        .map_or(0, |m| m + 1);
+    let mut router = Router::with_capacity(cap);
+    let mut inbox: Vec<Msg> = Vec::new();
+    let mut idle_guard = 0usize;
+    loop {
+        if coll.is_done() && inbox.is_empty() {
+            break;
+        }
+        let out = coll.step(std::mem::take(&mut inbox));
+        if out.is_empty() {
+            if coll.is_done() {
+                break;
+            }
+            idle_guard += 1;
+            if idle_guard > 8 {
+                bail!("collective stalled: {idle_guard} empty rounds without completion");
+            }
+            continue;
+        }
+        idle_guard = 0;
+        let round = report.c1 + 1;
+        let m_t = router.route(sim, round, out, &mut report)?;
         report.c1 += 1;
         report.c2 += m_t;
         report.per_round_max.push(m_t);
-        inbox = out;
+        inbox = router.drain();
     }
     Ok(report)
 }
@@ -218,7 +311,7 @@ mod tests {
                     break;
                 }
                 self.sent += 1;
-                out.push(Msg::new(0, self.sent, vec![self.data.clone()]));
+                out.push(Msg::single(0, self.sent, self.data.clone()));
             }
             self.done_round = true;
             out
@@ -256,7 +349,7 @@ mod tests {
                 false
             }
             fn step(&mut self, _: Vec<Msg>) -> Vec<Msg> {
-                vec![Msg::new(0, 1, vec![vec![1]]), Msg::new(0, 2, vec![vec![1]])]
+                vec![Msg::single(0, 1, vec![1]), Msg::single(0, 2, vec![1])]
             }
             fn outputs(&self) -> HashMap<ProcId, Packet> {
                 HashMap::new()
@@ -278,7 +371,7 @@ mod tests {
                 false
             }
             fn step(&mut self, _: Vec<Msg>) -> Vec<Msg> {
-                vec![Msg::new(0, 0, vec![vec![1]])]
+                vec![Msg::single(0, 0, vec![1])]
             }
             fn outputs(&self) -> HashMap<ProcId, Packet> {
                 HashMap::new()
@@ -306,5 +399,46 @@ mod tests {
             }
         }
         assert!(run(&mut Sim::new(1), &mut Stall).is_err());
+    }
+
+    #[test]
+    fn inbox_is_destination_major() {
+        // Two senders cross-send; deliveries must arrive sorted by dst
+        // regardless of emission order.
+        struct Cross {
+            t: u32,
+            seen: Vec<(ProcId, ProcId)>,
+        }
+        impl Collective for Cross {
+            fn participants(&self) -> Vec<ProcId> {
+                vec![0, 1, 2]
+            }
+            fn is_done(&self) -> bool {
+                self.t >= 2
+            }
+            fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+                self.seen.extend(inbox.iter().map(|m| (m.dst, m.src)));
+                self.t += 1;
+                if self.t == 1 {
+                    // Deliberately emitted in descending-dst order.
+                    vec![
+                        Msg::single(0, 2, vec![1]),
+                        Msg::single(2, 1, vec![2]),
+                        Msg::single(1, 0, vec![3]),
+                    ]
+                } else {
+                    vec![]
+                }
+            }
+            fn outputs(&self) -> HashMap<ProcId, Packet> {
+                HashMap::new()
+            }
+        }
+        let mut c = Cross {
+            t: 0,
+            seen: Vec::new(),
+        };
+        run(&mut Sim::new(1), &mut c).unwrap();
+        assert_eq!(c.seen, vec![(0, 1), (1, 2), (2, 0)]);
     }
 }

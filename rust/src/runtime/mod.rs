@@ -3,172 +3,29 @@
 //!
 //! `python/compile/aot.py` lowers the Layer-2 JAX graphs (which call the
 //! Layer-1 Pallas GF(p) kernel with `interpret=True`) to **HLO text**;
-//! this module parses that text (`HloModuleProto::from_text_file` — the
-//! text parser reassigns instruction ids, sidestepping the 64-bit-id
-//! protos that xla_extension 0.5.1 rejects), compiles it on the PJRT CPU
-//! client and exposes typed `execute` wrappers.
+//! the `pjrt` cargo feature parses that text (`HloModuleProto::
+//! from_text_file` — the text parser reassigns instruction ids,
+//! sidestepping the 64-bit-id protos that xla_extension 0.5.1 rejects),
+//! compiles it on the PJRT CPU client and exposes typed `execute`
+//! wrappers.
+//!
+//! The feature requires the `xla` bindings crate plus the `xla_extension`
+//! native library, neither of which exists in offline builds — so the
+//! default build ships a **stub** with identical signatures whose
+//! constructors return errors. Every caller (the encode service, the
+//! `pjrt` verify mode, the CLI `info` command, the integration tests)
+//! already treats PJRT as optional and degrades gracefully.
 
 pub mod artifacts;
 
 pub use artifacts::{ArtifactKind, Manifest};
 
-use anyhow::{Context, Result};
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Executable, GfEncoder, Runtime, ScaledGfEncoder};
 
-/// A PJRT CPU session (one per process).
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl Runtime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load and compile an HLO-text artifact.
-    pub fn load(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe })
-    }
-
-    /// Load the `encode` artifact for the given shape from a manifest.
-    pub fn load_encoder(
-        &self,
-        dir: &Path,
-        k: usize,
-        r: usize,
-        w: usize,
-        p: u64,
-    ) -> Result<GfEncoder> {
-        let manifest = Manifest::load(dir)?;
-        let entry = manifest
-            .find(ArtifactKind::Encode, k, r, w, p)
-            .with_context(|| {
-                format!("no encode artifact for K={k} R={r} W={w} p={p}; run `make artifacts`")
-            })?;
-        let exe = self.load(&dir.join(&entry.file))?;
-        Ok(GfEncoder { exe, k, r, w })
-    }
-}
-
-/// A compiled PJRT executable (tuple-returning, per aot.py's lowering).
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl Executable {
-    /// Execute on i32 tensors; returns the flattened first tuple element.
-    pub fn run_i32(&self, args: &[(&[i32], &[i64])]) -> Result<Vec<i32>> {
-        let literals: Vec<xla::Literal> = args
-            .iter()
-            .map(|(data, dims)| xla::Literal::vec1(data).reshape(dims))
-            .collect::<std::result::Result<_, _>>()
-            .context("building input literals")?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()
-            .context("fetching result")?;
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        Ok(out.to_vec::<i32>()?)
-    }
-}
-
-impl Runtime {
-    /// Load the fused §VI scaled encoder for the given shape.
-    pub fn load_scaled_encoder(
-        &self,
-        dir: &Path,
-        k: usize,
-        r: usize,
-        w: usize,
-        p: u64,
-    ) -> Result<ScaledGfEncoder> {
-        let manifest = Manifest::load(dir)?;
-        let entry = manifest
-            .find(ArtifactKind::ScaledEncode, k, r, w, p)
-            .with_context(|| {
-                format!("no scaled_encode artifact for K={k} R={r} W={w} p={p}")
-            })?;
-        let exe = self.load(&dir.join(&entry.file))?;
-        Ok(ScaledGfEncoder { exe, k, r, w })
-    }
-}
-
-/// Typed wrapper for the fused scaled encoder
-/// `Y[R,W] = (diag(post)·Aᵀ·diag(pre)·X) mod p` (the §VI block product).
-pub struct ScaledGfEncoder {
-    exe: Executable,
-    pub k: usize,
-    pub r: usize,
-    pub w: usize,
-}
-
-impl ScaledGfEncoder {
-    pub fn encode_u64(
-        &self,
-        pre: &[u64],
-        post: &[u64],
-        a: &[u64],
-        x: &[u64],
-    ) -> Result<Vec<u64>> {
-        anyhow::ensure!(pre.len() == self.k && post.len() == self.r);
-        anyhow::ensure!(a.len() == self.k * self.r && x.len() == self.k * self.w);
-        let to_i32 = |v: &[u64]| v.iter().map(|&x| x as i32).collect::<Vec<i32>>();
-        let (pi, qi, ai, xi) = (to_i32(pre), to_i32(post), to_i32(a), to_i32(x));
-        let y = self.exe.run_i32(&[
-            (&pi, &[self.k as i64]),
-            (&qi, &[self.r as i64]),
-            (&ai, &[self.k as i64, self.r as i64]),
-            (&xi, &[self.k as i64, self.w as i64]),
-        ])?;
-        Ok(y.into_iter().map(|v| v as u64).collect())
-    }
-}
-
-/// Typed wrapper for the bulk GF(p) encoder `Y[R,W] = (Aᵀ·X) mod p`.
-pub struct GfEncoder {
-    exe: Executable,
-    pub k: usize,
-    pub r: usize,
-    pub w: usize,
-}
-
-impl GfEncoder {
-    /// `a`: row-major `K×R`; `x`: row-major `K×W` → row-major `R×W`.
-    pub fn encode(&self, a: &[i32], x: &[i32]) -> Result<Vec<i32>> {
-        anyhow::ensure!(a.len() == self.k * self.r, "A must be K×R");
-        anyhow::ensure!(x.len() == self.k * self.w, "X must be K×W");
-        let y = self.exe.run_i32(&[
-            (a, &[self.k as i64, self.r as i64]),
-            (x, &[self.k as i64, self.w as i64]),
-        ])?;
-        anyhow::ensure!(y.len() == self.r * self.w, "bad output size");
-        Ok(y)
-    }
-
-    /// Convenience over u64 field elements (must be < 2^31).
-    pub fn encode_u64(&self, a: &[u64], x: &[u64]) -> Result<Vec<u64>> {
-        let ai: Vec<i32> = a.iter().map(|&v| v as i32).collect();
-        let xi: Vec<i32> = x.iter().map(|&v| v as i32).collect();
-        Ok(self.encode(&ai, &xi)?.into_iter().map(|v| v as u64).collect())
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    // Runtime integration tests live in rust/tests/runtime_pjrt.rs — they
-    // require `make artifacts` to have produced the HLO files, which unit
-    // tests must not depend on.
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Executable, GfEncoder, Runtime, ScaledGfEncoder};

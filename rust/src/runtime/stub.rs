@@ -1,0 +1,106 @@
+//! Always-available stand-in for the PJRT bridge (no `pjrt` feature).
+//!
+//! Signature-identical to `runtime::pjrt`; every entry point fails with a
+//! descriptive error, so code paths that *optionally* use the compiled
+//! kernel (service workers, `verify = "pjrt"`, `dce info`) degrade
+//! gracefully instead of failing to link.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+const UNAVAILABLE: &str =
+    "PJRT runtime not compiled in (build with `--features pjrt` and the `xla` bindings)";
+
+/// A PJRT CPU session (one per process) — stub.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    /// Load and compile an HLO-text artifact.
+    pub fn load(&self, _path: &Path) -> Result<Executable> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Load the `encode` artifact for the given shape from a manifest.
+    pub fn load_encoder(
+        &self,
+        _dir: &Path,
+        _k: usize,
+        _r: usize,
+        _w: usize,
+        _p: u64,
+    ) -> Result<GfEncoder> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Load the fused §VI scaled encoder for the given shape.
+    pub fn load_scaled_encoder(
+        &self,
+        _dir: &Path,
+        _k: usize,
+        _r: usize,
+        _w: usize,
+        _p: u64,
+    ) -> Result<ScaledGfEncoder> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// A compiled PJRT executable — stub.
+pub struct Executable {
+    _private: (),
+}
+
+impl Executable {
+    /// Execute on i32 tensors; returns the flattened first tuple element.
+    pub fn run_i32(&self, _args: &[(&[i32], &[i64])]) -> Result<Vec<i32>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Typed wrapper for the bulk GF(p) encoder `Y[R,W] = (Aᵀ·X) mod p` — stub.
+pub struct GfEncoder {
+    pub k: usize,
+    pub r: usize,
+    pub w: usize,
+}
+
+impl GfEncoder {
+    /// `a`: row-major `K×R`; `x`: row-major `K×W` → row-major `R×W`.
+    pub fn encode(&self, _a: &[i32], _x: &[i32]) -> Result<Vec<i32>> {
+        bail!(UNAVAILABLE)
+    }
+
+    /// Convenience over u64 field elements (must be < 2^31).
+    pub fn encode_u64(&self, _a: &[u64], _x: &[u64]) -> Result<Vec<u64>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Typed wrapper for the fused §VI scaled encoder — stub.
+pub struct ScaledGfEncoder {
+    pub k: usize,
+    pub r: usize,
+    pub w: usize,
+}
+
+impl ScaledGfEncoder {
+    pub fn encode_u64(
+        &self,
+        _pre: &[u64],
+        _post: &[u64],
+        _a: &[u64],
+        _x: &[u64],
+    ) -> Result<Vec<u64>> {
+        bail!(UNAVAILABLE)
+    }
+}

@@ -1,0 +1,261 @@
+//! Paper-conformance suite: wherever the paper's preconditions hold, the
+//! engine-measured `C1`/`C2` must **exactly equal** the closed-form
+//! expressions of `framework::costs` (Theorems 1–9, Lemmas 1–4,
+//! Corollary 1) — not just respect the lower bounds.
+//!
+//! Also the engine-equivalence acceptance test: a prepare-and-shoot run
+//! at N = 1024, p = 4, W = 64 completes and is bit-identical under the
+//! sequential and (when compiled) rayon-parallel round steps.
+
+use dce::codes::{structured::disjoint_family, StructuredPoints};
+use dce::collectives::{CauchyA2A, DftA2A, DrawLoose, PrepareShoot};
+use dce::framework::{costs, A2aAlgo, SystematicEncode};
+use dce::gf::{Field, GfPrime, Mat};
+use dce::net::{run, Collective, Packet, Sim};
+use dce::util::ipow;
+use std::sync::Arc;
+
+fn f() -> GfPrime {
+    GfPrime::default_field()
+}
+
+fn inputs(k: usize, w: usize, salt: u64) -> Vec<Packet> {
+    let f = f();
+    (0..k)
+        .map(|i| {
+            (0..w)
+                .map(|j| f.elem((i * w + j) as u64 * 2654435761 + salt))
+                .collect()
+        })
+        .collect()
+}
+
+/// Serialises the tests that toggle the global parallel/sequential mode.
+static MODE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+#[test]
+fn prepare_shoot_equals_theorem3_on_exact_powers() {
+    let f = f();
+    for p in [1usize, 2, 3] {
+        let mut k = p + 1;
+        while k <= 256 {
+            for w in [1usize, 3] {
+                let c = Arc::new(Mat::random(&f, k, k, (k * 7 + p) as u64));
+                let mut ps = PrepareShoot::new(f, (0..k).collect(), p, c, inputs(k, w, 11));
+                let rep = run(&mut Sim::new(p), &mut ps).unwrap();
+                let (c1, c2) = costs::theorem3_universal(k as u64, p as u64);
+                assert_eq!(rep.c1, c1, "C1: K={k} p={p}");
+                assert_eq!(rep.c2, w as u64 * c2, "C2: K={k} p={p} w={w}");
+                // The phase split matches Lemmas 3–4 exactly.
+                let (c1p, c2p) = costs::lemma3_prepare(k as u64, p as u64);
+                let (c1s, c2s) = costs::lemma4_shoot(k as u64, p as u64);
+                assert_eq!(c1, c1p + c1s, "K={k} p={p}");
+                assert_eq!(c2, c2p + c2s, "K={k} p={p}");
+                // And C1 is the Lemma-1 optimum.
+                assert_eq!(c1, costs::lemma1_c1_lower_bound(k as u64, p as u64));
+            }
+            k *= p + 1;
+        }
+    }
+}
+
+#[test]
+fn dft_equals_theorem4_when_radix_is_power_of_ports_plus_1() {
+    let f = f();
+    // P = (p+1)^ℓ makes the per-step P×P universal A2A measured-exact,
+    // so Theorem 4's H·C_univ(P) holds with equality.
+    for (p_base, h, p) in [
+        (2u64, 3u32, 1usize),
+        (2, 6, 1),
+        (4, 2, 1),
+        (4, 3, 3),
+        (8, 2, 1),
+        (16, 2, 3),
+    ] {
+        let k = ipow(p_base, h) as usize;
+        for w in [1usize, 2] {
+            let mut d =
+                DftA2A::new(f, (0..k).collect(), p, p_base, h, inputs(k, w, 3), false).unwrap();
+            let rep = run(&mut Sim::new(p), &mut d).unwrap();
+            let (c1, c2) = costs::theorem4_dft(p_base, h, p as u64);
+            assert_eq!(rep.c1, c1, "C1: P={p_base} H={h} p={p}");
+            assert_eq!(rep.c2, w as u64 * c2, "C2: P={p_base} H={h} p={p} w={w}");
+            // Corollary 1 is the P = p+1 diagonal.
+            if p_base == p as u64 + 1 {
+                assert_eq!((c1, c2), costs::corollary1_dft(h));
+            }
+        }
+    }
+}
+
+#[test]
+fn draw_loose_equals_theorem5() {
+    let f = f();
+    // (M, P, H) with M and P powers of p+1 = 2 — both cost components
+    // measured-exact.
+    for (m, h) in [(1usize, 4u32), (2, 3), (4, 2), (4, 4)] {
+        let n = m * ipow(2, h) as usize;
+        let sp = StructuredPoints::with_h(&f, n, 2, h, (0..m as u64).collect()).unwrap();
+        let mut dl = DrawLoose::new(f, (0..n).collect(), 1, &sp, inputs(n, 1, 9), false).unwrap();
+        let rep = run(&mut Sim::new(1), &mut dl).unwrap();
+        let (c1, c2) = costs::theorem5_vandermonde(m as u64, 2, h, 1);
+        assert_eq!((rep.c1, rep.c2), (c1, c2), "M={m} H={h}");
+        // Lemma 6: the inverse costs the same.
+        let mut inv = DrawLoose::new(f, (0..n).collect(), 1, &sp, inputs(n, 1, 10), true).unwrap();
+        let rep_inv = run(&mut Sim::new(1), &mut inv).unwrap();
+        assert_eq!((rep_inv.c1, rep_inv.c2), (c1, c2), "inverse M={m} H={h}");
+    }
+}
+
+#[test]
+fn cauchy_equals_theorem7() {
+    let f = f();
+    for n in [8usize, 16, 32] {
+        let fam = disjoint_family(&f, n, 2, 2).unwrap();
+        let (spa, spb) = (&fam[0], &fam[1]);
+        assert!(
+            spa.m.is_power_of_two(),
+            "shape chosen so M is a power of p+1"
+        );
+        let pre: Vec<u64> = (0..n as u64).map(|i| f.elem(i * 3 + 1)).collect();
+        let post: Vec<u64> = (0..n as u64).map(|i| f.elem(i * 5 + 2)).collect();
+        let mut ca = CauchyA2A::new(
+            f,
+            (0..n).collect(),
+            1,
+            spa,
+            spb,
+            pre,
+            post,
+            inputs(n, 1, 4),
+        )
+        .unwrap();
+        let rep = run(&mut Sim::new(1), &mut ca).unwrap();
+        let (c1, c2) = costs::theorem7_cauchy(spa.m as u64, spa.p_base, spa.h, 1);
+        assert_eq!((rep.c1, rep.c2), (c1, c2), "n={n}");
+    }
+}
+
+#[test]
+fn frameworks_compose_per_theorems_1_and_2() {
+    let f = f();
+    // K ≥ R (Theorem 1): R = (p+1)^ℓ makes the block A2A measured-exact;
+    // the reduce tree over M+1 grid nodes is always exact (Appendix A).
+    for (k, r, p, w) in [
+        (16usize, 4usize, 1usize, 1usize),
+        (16, 4, 1, 5),
+        (64, 16, 1, 1),
+        (25, 4, 1, 1),
+        (81, 9, 2, 2),
+    ] {
+        let a = Arc::new(Mat::random(&f, k, r, (k * 100 + r) as u64));
+        let mut job = SystematicEncode::new(f, a, inputs(k, w, 8), p, A2aAlgo::Universal).unwrap();
+        let rep = run(&mut Sim::new(p), &mut job).unwrap();
+        let a2a = costs::theorem3_universal(r as u64, p as u64);
+        let a2a = (a2a.0, a2a.1 * w as u64);
+        let (c1, c2) = costs::theorem1_framework(a2a, k as u64, r as u64, w as u64, p as u64);
+        assert_eq!((rep.c1, rep.c2), (c1, c2), "K={k} R={r} p={p} w={w}");
+    }
+    // K < R (Theorem 2): K = (p+1)^ℓ.
+    for (k, r, p, w) in [
+        (4usize, 16usize, 1usize, 1usize),
+        (4, 25, 1, 1),
+        (16, 64, 1, 3),
+        (9, 81, 2, 1),
+    ] {
+        let a = Arc::new(Mat::random(&f, k, r, (k * 100 + r) as u64));
+        let mut job = SystematicEncode::new(f, a, inputs(k, w, 8), p, A2aAlgo::Universal).unwrap();
+        let rep = run(&mut Sim::new(p), &mut job).unwrap();
+        let a2a = costs::theorem3_universal(k as u64, p as u64);
+        let a2a = (a2a.0, a2a.1 * w as u64);
+        let (c1, c2) = costs::theorem2_framework(a2a, k as u64, r as u64, w as u64, p as u64);
+        assert_eq!((rep.c1, rep.c2), (c1, c2), "K={k} R={r} p={p} w={w}");
+    }
+}
+
+/// Run a collective twice — parallel round steps off, then on — and
+/// require bit-identical reports, traces and outputs. Without the
+/// `parallel` feature both runs are sequential and this degenerates to a
+/// determinism check.
+fn assert_mode_identical(p: usize, build: &dyn Fn() -> Box<dyn Collective>) {
+    let _guard = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let go = |on: bool| {
+        dce::net::set_parallel(on);
+        let mut c = build();
+        let mut sim = Sim::with_trace(p);
+        let rep = run(&mut sim, c.as_mut()).unwrap();
+        dce::net::set_parallel(true);
+        (rep, sim.trace, c.outputs())
+    };
+    let (rep_seq, trace_seq, out_seq) = go(false);
+    let (rep_par, trace_par, out_par) = go(true);
+    assert_eq!(rep_seq, rep_par, "report differs between modes");
+    assert_eq!(trace_seq, trace_par, "trace differs between modes");
+    assert_eq!(out_seq, out_par, "outputs differ between modes");
+}
+
+#[test]
+fn parallel_bit_identity_across_collective_families() {
+    let f = f();
+    // Prepare-and-shoot with the eq. (4) correction path (K = 65, p = 2).
+    let c = Arc::new(Mat::random(&f, 65, 65, 65));
+    let ins = inputs(65, 3, 1);
+    assert_mode_identical(2, &move || {
+        let b: Box<dyn Collective> = Box::new(PrepareShoot::new(
+            f,
+            (0..65).collect(),
+            2,
+            c.clone(),
+            ins.clone(),
+        ));
+        b
+    });
+    // DFT (Par of groups inside a Pipeline).
+    let ins = inputs(16, 2, 2);
+    assert_mode_identical(1, &move || {
+        let b: Box<dyn Collective> =
+            Box::new(DftA2A::new(f, (0..16).collect(), 1, 2, 4, ins.clone(), false).unwrap());
+        b
+    });
+    // Full framework (broadcast + Par + reduce phases).
+    let a = Arc::new(Mat::random(&f, 25, 4, 12));
+    let ins = inputs(25, 2, 3);
+    assert_mode_identical(1, &move || {
+        let b: Box<dyn Collective> = Box::new(
+            SystematicEncode::new(f, a.clone(), ins.clone(), 1, A2aAlgo::Universal).unwrap(),
+        );
+        b
+    });
+}
+
+/// Acceptance: a full prepare-and-shoot at N = 1024, p = 4, W = 64
+/// completes, parallel and sequential engines agree bit-for-bit, C1 is
+/// the Lemma-1 optimum and C2 respects Theorem 3.
+#[test]
+fn n1024_p4_w64_parallel_matches_sequential() {
+    let _guard = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let f = f();
+    let (k, p, w) = (1024usize, 4usize, 64usize);
+    let c = Arc::new(Mat::random(&f, k, k, 0xBEEF));
+    let ins = inputs(k, w, 77);
+    let go = |on: bool| {
+        dce::net::set_parallel(on);
+        let mut ps = PrepareShoot::new(f, (0..k).collect(), p, c.clone(), ins.clone());
+        let mut sim = Sim::with_trace(p);
+        let rep = run(&mut sim, &mut ps).unwrap();
+        dce::net::set_parallel(true);
+        (rep, sim.trace, ps.outputs())
+    };
+    let (rep_seq, trace_seq, out_seq) = go(false);
+    let (rep_par, trace_par, out_par) = go(true);
+    assert_eq!(rep_seq, rep_par, "C1/C2 must be engine-independent");
+    assert_eq!(trace_seq, trace_par);
+    assert_eq!(out_seq, out_par);
+    assert_eq!(
+        rep_seq.c1,
+        costs::lemma1_c1_lower_bound(k as u64, p as u64)
+    );
+    let (_, c2_bound) = costs::theorem3_universal(k as u64, p as u64);
+    assert!(rep_seq.c2 <= w as u64 * c2_bound);
+    assert!(rep_seq.c2 as f64 >= costs::lemma2_c2_lower_bound(k as u64, p as u64) * w as f64);
+}

@@ -392,6 +392,191 @@ fn lemma2_baseline_argument_multireduce_never_below_bound() {
 }
 
 #[test]
+fn gf2e_every_a2a_variant_matches_oracle() {
+    // GF(256) through every all-to-all encode family, with W > 1 so the
+    // flat-buffer path carries multi-element packets (q−1 = 255 = 3·5·17).
+    let f = Gf2e::new(8).unwrap();
+    let mut rng = Rng::new(0x2E6);
+    // Universal + baseline.
+    for (k, p, w) in [(13usize, 2usize, 3usize), (16, 1, 2), (40, 3, 1), (1, 1, 2)] {
+        let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+        let inputs = rand_inputs(&f, k, w, &mut rng);
+        let want = oracle(&f, &c, &inputs);
+        let mut ps = PrepareShoot::new(f.clone(), (0..k).collect(), p, c.clone(), inputs.clone());
+        run(&mut Sim::new(p), &mut ps).unwrap();
+        let mut mr = MultiReduce::new(f.clone(), (0..k).collect(), p, c, inputs);
+        run(&mut Sim::new(p), &mut mr).unwrap();
+        for kk in 0..k {
+            assert_eq!(ps.outputs()[&kk], want[kk], "ps K={k} p={p} w={w}");
+            assert_eq!(mr.outputs()[&kk], want[kk], "mr K={k} p={p} w={w}");
+        }
+    }
+    // DFT: every prime-power radix dividing 255, plus the composite 15.
+    for (p_base, h) in [(3u64, 1u32), (5, 1), (15, 1), (17, 1)] {
+        let k = dce::util::ipow(p_base, h) as usize;
+        let inputs = rand_inputs(&f, k, 2, &mut rng);
+        let mut d = dce::collectives::DftA2A::new(
+            f.clone(),
+            (0..k).collect(),
+            2,
+            p_base,
+            h,
+            inputs.clone(),
+            false,
+        )
+        .unwrap();
+        run(&mut Sim::new(2), &mut d).unwrap();
+        let m = dce::collectives::DftA2A::matrix(&f, p_base, h, false).unwrap();
+        let want = oracle(&f, &m, &inputs);
+        for kk in 0..k {
+            assert_eq!(d.outputs()[&kk], want[kk], "dft P={p_base}");
+        }
+    }
+    // Draw-and-loose and the Cauchy two-pass, on structured GF(256) points.
+    let n = 6usize; // M = 2, Z = 3
+    let fam = disjoint_family(&f, n, 3, 2).unwrap();
+    let inputs = rand_inputs(&f, n, 2, &mut rng);
+    let mut dl =
+        DrawLoose::new(f.clone(), (0..n).collect(), 1, &fam[0], inputs.clone(), false).unwrap();
+    run(&mut Sim::new(1), &mut dl).unwrap();
+    let mat = DrawLoose::matrix(&f, &fam[0], false).unwrap();
+    let want = oracle(&f, &mat, &inputs);
+    for kk in 0..n {
+        assert_eq!(dl.outputs()[&kk], want[kk], "draw-loose gf2e");
+    }
+    let pre: Vec<u64> = (0..n as u64).map(|_| rng.range(1, 256)).collect();
+    let post: Vec<u64> = (0..n as u64).map(|_| rng.range(1, 256)).collect();
+    let mut ca = dce::collectives::CauchyA2A::new(
+        f.clone(),
+        (0..n).collect(),
+        1,
+        &fam[0],
+        &fam[1],
+        pre.clone(),
+        post.clone(),
+        inputs.clone(),
+    )
+    .unwrap();
+    run(&mut Sim::new(1), &mut ca).unwrap();
+    let m = dce::collectives::CauchyA2A::matrix(&f, &fam[0], &fam[1], &pre, &post);
+    let want = oracle(&f, &m, &inputs);
+    for kk in 0..n {
+        assert_eq!(ca.outputs()[&kk], want[kk], "cauchy gf2e");
+    }
+}
+
+#[test]
+fn degenerate_shapes_are_exact() {
+    // K = 1 / R = 1 / W = 1 / p = 1 corners through the frameworks and
+    // every primitive collective that admits them.
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xD0D0);
+    for (k, r) in [(1usize, 1usize), (1, 5), (5, 1), (1, 12), (12, 1)] {
+        let a = Arc::new(Mat::random(&f, k, r, rng.next_u64()));
+        let inputs = rand_inputs(&f, k, 1, &mut rng);
+        let mut job =
+            SystematicEncode::new(f, a.clone(), inputs.clone(), 1, A2aAlgo::Universal).unwrap();
+        run(&mut Sim::new(1), &mut job).unwrap();
+        assert_eq!(job.coded(), oracle(&f, &a, &inputs), "sys K={k} R={r}");
+    }
+    for (k, r) in [(1usize, 1usize), (5, 1), (12, 1), (1, 4)] {
+        let g = Arc::new(Mat::random(&f, k, k + r, rng.next_u64()));
+        let inputs = rand_inputs(&f, k, 1, &mut rng);
+        let mut job = NonSystematicEncode::new(f, g.clone(), inputs.clone(), 1).unwrap();
+        run(&mut Sim::new(1), &mut job).unwrap();
+        assert_eq!(job.codeword(), oracle(&f, &g, &inputs), "nonsys K={k} R={r}");
+    }
+    // The smallest possible engine runs: K ∈ {1, 2}.
+    for k in [1usize, 2] {
+        let c = Arc::new(Mat::random(&f, k, k, 3));
+        let inputs = rand_inputs(&f, k, 1, &mut rng);
+        let mut ps = PrepareShoot::new(f, (0..k).collect(), 1, c.clone(), inputs.clone());
+        run(&mut Sim::new(1), &mut ps).unwrap();
+        let want = oracle(&f, &c, &inputs);
+        for kk in 0..k {
+            assert_eq!(ps.outputs()[&kk], want[kk], "ps K={k}");
+        }
+        let mut mr = MultiReduce::new(f, (0..k).collect(), 1, c, inputs);
+        run(&mut Sim::new(1), &mut mr).unwrap();
+        for kk in 0..k {
+            assert_eq!(mr.outputs()[&kk], want[kk], "mr K={k}");
+        }
+    }
+    // Draw-and-loose degenerates to a 1×1 universal at n = 1 (H = 0).
+    let sp = dce::codes::StructuredPoints::new(&f, 1, 2, vec![0]).unwrap();
+    let inputs = rand_inputs(&f, 1, 1, &mut rng);
+    let mut dl = DrawLoose::new(f, vec![0], 1, &sp, inputs.clone(), false).unwrap();
+    run(&mut Sim::new(1), &mut dl).unwrap();
+    let mat = DrawLoose::matrix(&f, &sp, false).unwrap();
+    assert_eq!(dl.outputs()[&0], oracle(&f, &mat, &inputs)[0]);
+}
+
+#[test]
+fn specific_a2a_wide_payloads() {
+    // The flat-buffer path with W > 1 for every specific A2A variant
+    // (Remark 2: same scheduling, per-element packets).
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0x77);
+    for (p_base, h, w) in [(2u64, 3u32, 4usize), (4, 2, 3)] {
+        let k = dce::util::ipow(p_base, h) as usize;
+        let inputs = rand_inputs(&f, k, w, &mut rng);
+        let mut d = dce::collectives::DftA2A::new(
+            f,
+            (0..k).collect(),
+            1,
+            p_base,
+            h,
+            inputs.clone(),
+            false,
+        )
+        .unwrap();
+        run(&mut Sim::new(1), &mut d).unwrap();
+        let m = dce::collectives::DftA2A::matrix(&f, p_base, h, false).unwrap();
+        let want = oracle(&f, &m, &inputs);
+        for kk in 0..k {
+            assert_eq!(d.outputs()[&kk], want[kk], "dft P={p_base} w={w}");
+        }
+    }
+    for (n, w) in [(16usize, 4usize), (24, 2)] {
+        let fam = disjoint_family(&f, n, 2, 1).unwrap();
+        let inputs = rand_inputs(&f, n, w, &mut rng);
+        let mut dl =
+            DrawLoose::new(f, (0..n).collect(), 1, &fam[0], inputs.clone(), false).unwrap();
+        run(&mut Sim::new(1), &mut dl).unwrap();
+        let mat = DrawLoose::matrix(&f, &fam[0], false).unwrap();
+        let want = oracle(&f, &mat, &inputs);
+        for kk in 0..n {
+            assert_eq!(dl.outputs()[&kk], want[kk], "dl n={n} w={w}");
+        }
+    }
+    {
+        let n = 16usize;
+        let w = 3usize;
+        let fam = disjoint_family(&f, n, 2, 2).unwrap();
+        let pre: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+        let post: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+        let inputs = rand_inputs(&f, n, w, &mut rng);
+        let mut ca = dce::collectives::CauchyA2A::new(
+            f,
+            (0..n).collect(),
+            2,
+            &fam[0],
+            &fam[1],
+            pre.clone(),
+            post.clone(),
+            inputs.clone(),
+        )
+        .unwrap();
+        run(&mut Sim::new(2), &mut ca).unwrap();
+        let m = dce::collectives::CauchyA2A::matrix(&f, &fam[0], &fam[1], &pre, &post);
+        let want = oracle(&f, &m, &inputs);
+        for kk in 0..n {
+            assert_eq!(ca.outputs()[&kk], want[kk], "cauchy w={w}");
+        }
+    }
+}
+
+#[test]
 fn payload_width_is_transparent() {
     // Remark 2: W > 1 multiplies C2 by exactly W and leaves C1 unchanged.
     let f = GfPrime::default_field();
