@@ -14,7 +14,7 @@
 use dce::collectives::PrepareShoot;
 use dce::gf::{vandermonde, Field, GfPrime, Mat};
 use dce::net::{pkt_add_scaled, run, Packet, PacketBuf, Sim};
-use dce::util::{bench, Rng};
+use dce::util::{bench, bench_iters, bench_smoke, Rng};
 use std::hint::black_box;
 use std::path::Path;
 use std::sync::Arc;
@@ -26,7 +26,7 @@ fn main() {
 
     println!("## L3 — field inner loops (1M ops per iteration)");
     let xs: Vec<u64> = (0..1024).map(|_| rng.below(f.order())).collect();
-    let stats = bench("gf_mul 1M", 20, |_| {
+    let stats = bench("gf_mul 1M", bench_iters(20), |_| {
         let mut acc = 1u64;
         for _ in 0..1024 {
             for &x in &xs {
@@ -39,7 +39,7 @@ fn main() {
         "{stats}   ({:.2} ns/mul)",
         stats.per_iter_ns() / (1024.0 * 1024.0)
     );
-    let stats = bench("gf_mul_add 1M", 20, |_| {
+    let stats = bench("gf_mul_add 1M", bench_iters(20), |_| {
         let mut acc = 0u64;
         for _ in 0..1024 {
             for &x in &xs {
@@ -59,7 +59,7 @@ fn main() {
         .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
         .collect();
     let coeffs: Vec<u64> = (0..256).map(|_| rng.below(f.order())).collect();
-    let stats = bench("axpy 256x4096 (per-term reduce)", 20, |_| {
+    let stats = bench("axpy 256x4096 (per-term reduce)", bench_iters(20), |_| {
         let mut acc = vec![0u64; w];
         for (c, p) in coeffs.iter().zip(&packets) {
             pkt_add_scaled(&f, &mut acc, *c, p);
@@ -70,7 +70,7 @@ fn main() {
         "{stats}   ({:.3} Gop/s)",
         (256.0 * w as f64) / stats.per_iter_ns()
     );
-    let stats = bench("lincomb 256x4096 (delayed reduce)", 20, |_| {
+    let stats = bench("lincomb 256x4096 (delayed reduce)", bench_iters(20), |_| {
         let mut acc = vec![0u64; w];
         let terms: Vec<(u64, &[u64])> = coeffs
             .iter()
@@ -89,7 +89,7 @@ fn main() {
     // Seed representation: one heap allocation per packet, one Barrett
     // reduction per element-multiply (the `Vec<Packet>` + `mul_add` hot
     // path this engine replaced).
-    let seed_stats = bench("seed rep: vec-of-vecs, reduce per multiply", 20, |_| {
+    let seed_stats = bench("seed rep: vec-of-vecs, reduce per multiply", bench_iters(20), |_| {
         let mut acc = vec![0u64; w];
         for (c, p) in coeffs.iter().zip(&packets) {
             if *c == 0 {
@@ -108,7 +108,7 @@ fn main() {
     for p in &packets {
         flat.push(p);
     }
-    let flat_stats = bench("flat rep: PacketBuf lincomb, delayed reduce", 20, |_| {
+    let flat_stats = bench("flat rep: PacketBuf lincomb, delayed reduce", bench_iters(20), |_| {
         let mut acc = vec![0u64; w];
         let terms: Vec<(u64, &[u64])> = coeffs
             .iter()
@@ -121,26 +121,35 @@ fn main() {
     println!("{flat_stats}");
     let speedup = seed_stats.per_iter_ns() / flat_stats.per_iter_ns();
     println!("flat-buffer speedup: {speedup:.2}x (acceptance target ≥ 2x)");
-    assert!(
-        speedup >= 2.0,
-        "flat-buffer lincomb must be ≥ 2x the seed representation, got {speedup:.2}x"
-    );
+    if bench_smoke() {
+        println!("(smoke mode: timing assertion skipped)");
+    } else {
+        assert!(
+            speedup >= 2.0,
+            "flat-buffer lincomb must be ≥ 2x the seed representation, got {speedup:.2}x"
+        );
+    }
 
     println!("\n## L3 — structured matrices");
     let points: Vec<u64> = (1..=256u64).collect();
-    println!("{}", bench("vandermonde::inverse n=256", 10, |_| {
+    println!("{}", bench("vandermonde::inverse n=256", bench_iters(10), |_| {
         vandermonde::inverse(&f, &points)
     }));
-    println!("{}", bench("Mat::inverse (GJ) n=256", 5, |_| {
+    println!("{}", bench("Mat::inverse (GJ) n=256", bench_iters(5), |_| {
         let v = vandermonde::square(&f, &points);
         v.inverse(&f).unwrap()
     }));
 
     println!("\n## L3 — prepare-and-shoot engine scaling (W = 1)");
-    for &k in &[256usize, 1024, 4096] {
+    let scaling_ks: &[usize] = if bench_smoke() {
+        &[256]
+    } else {
+        &[256, 1024, 4096]
+    };
+    for &k in scaling_ks {
         let c = Arc::new(Mat::random(&f, k, k, 3));
         let inputs: Vec<Packet> = (0..k as u64).map(|i| vec![f.elem(i + 1)]).collect();
-        let stats = bench(&format!("prepare-shoot K={k}"), 5, |_| {
+        let stats = bench(&format!("prepare-shoot K={k}"), bench_iters(5), |_| {
             let mut ps = PrepareShoot::new(f, (0..k).collect(), 1, c.clone(), inputs.clone());
             run(&mut Sim::new(1), &mut ps).unwrap()
         });
@@ -154,7 +163,7 @@ fn main() {
     let x = Mat::random(&f, k, w, 6);
     let a_flat: Vec<u64> = (0..k).flat_map(|i| a.row(i).to_vec()).collect();
     let x_flat: Vec<u64> = (0..k).flat_map(|i| x.row(i).to_vec()).collect();
-    let stats = bench("native matmul (per-term reduce)", 10, |_| {
+    let stats = bench("native matmul (per-term reduce)", bench_iters(10), |_| {
         // y[j][c] = Σ_i a[i][j]·x[i][c]
         let mut y = vec![0u64; r * w];
         for i in 0..k {
@@ -174,7 +183,7 @@ fn main() {
     });
     let flops = (k * r * w) as f64;
     println!("{stats}   ({:.3} Gmul/s)", flops / stats.per_iter_ns());
-    let stats = bench("native matmul (lazy reduce)", 10, |_| {
+    let stats = bench("native matmul (lazy reduce)", bench_iters(10), |_| {
         let mut y = vec![0u64; r * w];
         let chunk = f.lazy_chunk();
         for (i0, rows) in (0..k).collect::<Vec<_>>().chunks(chunk).enumerate() {
@@ -204,7 +213,7 @@ fn main() {
         let enc = rt.load_encoder(artifacts, k, r, w, f.order()).unwrap();
         // Warm + measure.
         let t0 = Instant::now();
-        let iters = 10;
+        let iters = bench_iters(10) as u32;
         for _ in 0..iters {
             black_box(enc.encode_u64(&a_flat, &x_flat).unwrap());
         }

@@ -1,0 +1,113 @@
+//! Bench: **plan-cache replay vs per-request live stepping** — the
+//! amortized serving-path win of the compile/execute split.
+//!
+//! Scenario: a service receives `N` same-shape encode requests. The
+//! pre-Plan-IR path re-plans and re-steps the collective per request;
+//! the cached path compiles the schedule once (the first request's
+//! cache miss, included in the timed region) and replays it for every
+//! request. Acceptance target: ≥ 2× amortized speedup, asserted below
+//! (skipped under `DCE_BENCH_SMOKE=1`, where everything runs once so CI
+//! can't let this target rot).
+
+use dce::coordinator::config::VerifyMode;
+use dce::coordinator::{EncodeJob, JobConfig, PlanCache};
+use dce::framework::AlgoRequest;
+use dce::gf::Field;
+use dce::net::{run, Packet, Sim};
+use dce::util::{bench_iters, bench_smoke, Rng};
+use std::time::Instant;
+
+fn main() {
+    let requests = bench_iters(32);
+    let cfg = JobConfig {
+        k: 64,
+        r: 16,
+        w: 64,
+        ports: 2,
+        algorithm: AlgoRequest::Universal,
+        verify: VerifyMode::Off,
+        ..JobConfig::default()
+    };
+    let job = EncodeJob::synthetic(cfg.clone()).unwrap();
+    let f = job.field.clone();
+    let mut rng = Rng::new(7);
+    let payloads: Vec<Vec<Packet>> = (0..requests)
+        .map(|_| {
+            (0..cfg.k)
+                .map(|_| (0..cfg.w).map(|_| rng.below(f.order())).collect())
+                .collect()
+        })
+        .collect();
+
+    println!("## plan replay vs live stepping (K=64 R=16 W=64 p=2, {requests} requests)");
+
+    // Live path: plan + step the collective per request.
+    let t0 = Instant::now();
+    let mut live_out: Vec<Vec<Packet>> = Vec::with_capacity(requests);
+    for x in &payloads {
+        let mut pl = dce::framework::plan_with_model(
+            &f,
+            job.code.as_ref(),
+            Some(job.parity.clone()),
+            x.clone(),
+            cfg.ports,
+            cfg.algorithm,
+            Some(cfg.cost_model().unwrap()),
+        )
+        .unwrap();
+        run(&mut Sim::new(cfg.ports), pl.job.as_mut()).unwrap();
+        let outs = pl.job.outputs();
+        live_out.push(
+            (0..pl.layout.r)
+                .map(|r| outs[&pl.layout.sink(r)].clone())
+                .collect(),
+        );
+    }
+    let live_total = t0.elapsed();
+
+    // Cached path: compile once, replay per request (compile included).
+    let cache = PlanCache::new();
+    let t0 = Instant::now();
+    let mut cached_out: Vec<Vec<Packet>> = Vec::with_capacity(requests);
+    for x in &payloads {
+        cached_out.push(job.encode_cached(&cache, x).unwrap());
+    }
+    let cached_total = t0.elapsed();
+
+    assert_eq!(live_out, cached_out, "replay must be bit-identical to live stepping");
+    assert_eq!(cache.stats(), (requests as u64 - 1, 1), "one miss, rest hits");
+
+    let speedup = live_total.as_secs_f64() / cached_total.as_secs_f64();
+    println!(
+        "live stepping : {live_total:>12?} total  ({:>10?}/req)",
+        live_total / requests as u32
+    );
+    println!(
+        "plan replay   : {cached_total:>12?} total  ({:>10?}/req, compile amortized)",
+        cached_total / requests as u32
+    );
+    println!("amortized speedup: {speedup:.2}x (acceptance target >= 2x)");
+    if bench_smoke() {
+        println!("(smoke mode: timing assertion skipped)");
+    } else {
+        assert!(
+            speedup >= 2.0,
+            "plan-cache replay must be >= 2x live stepping, got {speedup:.2}x"
+        );
+    }
+
+    // Width-independence: the same cached plan serves other widths.
+    for w in [16usize, 256] {
+        let x: Vec<Packet> = (0..cfg.k)
+            .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+            .collect();
+        let t0 = Instant::now();
+        let y = job.encode_cached(&cache, &x).unwrap();
+        let dt = t0.elapsed();
+        assert_eq!(y.len(), cfg.r);
+        println!("replay W={w:<4} (same plan, no recompile): {dt:?}");
+    }
+    assert_eq!(cache.len(), 1, "one shape, one compiled plan across widths");
+
+    println!("\nplan_replay bench complete");
+}

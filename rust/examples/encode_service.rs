@@ -1,19 +1,26 @@
-//! End-to-end driver: the full three-layer system on a real workload.
+//! End-to-end driver: the batch-encode service on a real workload.
 //!
-//! * **L1/L2**: the AOT-compiled Pallas GF(p) kernel (built once by
-//!   `make artifacts`) executes every batch — Python is not running.
-//! * **Runtime**: each worker thread owns a PJRT CPU executable.
-//! * **L3**: the coordinator batches requests through a bounded queue
-//!   (backpressure), measures latency percentiles and throughput, and
-//!   cross-checks one batch against the *simulated decentralized
-//!   encoding* — proving the serving path and the protocol path agree.
+//! Two serving engines, picked automatically:
+//!
+//! * **PJRT** (when `make artifacts` has run): the AOT-compiled Pallas
+//!   GF(p) kernel executes every batch — Python is not running.
+//! * **Plan replay** (no artifacts needed): the decentralized encoding
+//!   schedule is compiled **once** into the Plan IR and replayed for
+//!   every request — no per-request planning or round stepping. Watch
+//!   `plan_cache_hits` / `plan_cache_misses` in the metrics dump.
+//!
+//! Either way the coordinator batches requests through a bounded queue
+//! (backpressure), measures latency percentiles and throughput, and
+//! cross-checks one batch against the *simulated decentralized
+//! encoding* — proving the serving path and the protocol path agree.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example encode_service
+//! cargo run --release --example encode_service          # plan replay
+//! make artifacts && cargo run --release --example encode_service  # PJRT
 //! ```
 
 use dce::codes::GrsCode;
-use dce::coordinator::EncodeService;
+use dce::coordinator::{EncodeService, JobConfig};
 use dce::framework::SystematicEncode;
 use dce::gf::{Field, GfPrime};
 use dce::net::{run, Packet, Sim};
@@ -23,20 +30,26 @@ use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
     let f = GfPrime::default_field();
-    let (k, r, chunk_w) = (64usize, 16usize, 256usize);
+    let (k, r) = (64usize, 16usize);
     let artifacts = Path::new("artifacts");
-    anyhow::ensure!(
-        artifacts.join("manifest.txt").exists(),
-        "run `make artifacts` first"
-    );
 
     let code = GrsCode::structured(&f, k, r, 2)?;
     let parity = code.parity_matrix(&f);
 
-    println!("== starting encode service: K={k} R={r} chunk W={chunk_w}, 4 workers ==");
-    let svc = EncodeService::start(&f, &parity, artifacts, chunk_w, 4, 32)?;
+    let svc = if artifacts.join("manifest.txt").exists() {
+        println!("== starting PJRT encode service: K={k} R={r}, 4 workers ==");
+        EncodeService::start(&f, &parity, artifacts, 256, 4, 32)?
+    } else {
+        println!("== starting plan-replay encode service: K={k} R={r}, 4 workers ==");
+        let cfg = JobConfig {
+            k,
+            r,
+            ..JobConfig::default()
+        };
+        EncodeService::start_replay(&cfg, 4, 32)?
+    };
 
-    // Workload: 64 batched requests of 64×512 payloads (two chunks each).
+    // Workload: 64 batched requests of 64×512 payloads.
     let requests = 64usize;
     let w = 512usize;
     let mut rng = Rng::new(99);

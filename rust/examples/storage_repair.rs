@@ -35,7 +35,8 @@ fn main() -> anyhow::Result<()> {
     let mut store: Vec<Packet> = data.clone();
     for j in 0..r {
         let mut p = vec![0u64; w];
-        let terms: Vec<(u64, &[u64])> = (0..k).map(|i| (parity[(i, j)], data[i].as_slice())).collect();
+        let terms: Vec<(u64, &[u64])> =
+            (0..k).map(|i| (parity[(i, j)], data[i].as_slice())).collect();
         f.lincomb_into(&mut p, &terms);
         store.push(p);
     }

@@ -17,7 +17,7 @@
 use super::{DrawLoose, LocalOp, Pipeline, StageBuilder};
 use crate::codes::StructuredPoints;
 use crate::gf::{vandermonde, Field, Mat};
-use crate::net::{pkt_scale, Collective, Msg, Packet, ProcId};
+use crate::net::{pkt_scale, Collective, Msg, Outputs, Packet, ProcId};
 use std::collections::HashMap;
 
 /// The §VI Cauchy-like A2A: computes `diag(pre)·V_α^{-1}·V_β·diag(post)`.
@@ -42,7 +42,7 @@ impl CauchyA2A {
         let k = procs.len();
         anyhow::ensure!(sp_alpha.len() == k && sp_beta.len() == k, "point designs must be K×K");
         anyhow::ensure!(pre.len() == k && post.len() == k && inputs.len() == k);
-        let init: HashMap<ProcId, Packet> = procs
+        let init: Outputs = procs
             .iter()
             .map(|&pid| pid)
             .zip(inputs)
@@ -53,7 +53,7 @@ impl CauchyA2A {
         let pre_stage: StageBuilder = {
             let f = f.clone();
             let rank_of = rank_of.clone();
-            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            Box::new(move |prev: &Outputs| {
                 Box::new(LocalOp::map(prev, |pid, pkt| {
                     pkt_scale(&f, pre[rank_of[&pid]], pkt)
                 })) as Box<dyn Collective>
@@ -63,7 +63,7 @@ impl CauchyA2A {
             let f = f.clone();
             let procs = procs.clone();
             let sp = sp_alpha.clone();
-            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            Box::new(move |prev: &Outputs| {
                 let ins: Vec<Packet> = procs.iter().map(|pid| prev[pid].clone()).collect();
                 Box::new(
                     DrawLoose::new(f.clone(), procs.clone(), p, &sp, ins, true)
@@ -75,7 +75,7 @@ impl CauchyA2A {
             let f = f.clone();
             let procs = procs.clone();
             let sp = sp_beta.clone();
-            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            Box::new(move |prev: &Outputs| {
                 let ins: Vec<Packet> = procs.iter().map(|pid| prev[pid].clone()).collect();
                 Box::new(
                     DrawLoose::new(f.clone(), procs.clone(), p, &sp, ins, false)
@@ -85,7 +85,7 @@ impl CauchyA2A {
         };
         let post_stage: StageBuilder = {
             let f = f.clone();
-            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            Box::new(move |prev: &Outputs| {
                 Box::new(LocalOp::map(prev, |pid, pkt| {
                     pkt_scale(&f, post[rank_of[&pid]], pkt)
                 })) as Box<dyn Collective>
@@ -121,7 +121,7 @@ impl Collective for CauchyA2A {
     fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
         self.pipe.step(inbox)
     }
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.pipe.outputs()
     }
 }

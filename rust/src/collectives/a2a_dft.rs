@@ -14,9 +14,8 @@
 
 use super::{Par, Pipeline, PrepareShoot, StageBuilder};
 use crate::gf::{dft, vandermonde, Field, Mat};
-use crate::net::{Collective, Msg, Packet, ProcId};
+use crate::net::{Collective, Msg, Outputs, Packet, ProcId};
 use crate::util::ipow;
-use std::collections::HashMap;
 use std::sync::Arc;
 
 /// The §V-A specific A2A. Computes `D_K·Π` (or its inverse).
@@ -56,12 +55,12 @@ impl DftA2A {
             .map(|step_h| {
                 let f = f.clone();
                 let procs = procs.clone();
-                Box::new(move |prev: &HashMap<ProcId, Packet>| {
+                Box::new(move |prev: &Outputs| {
                     step_stage(&f, &procs, p, p_base, h, beta, step_h, invert, prev)
                 }) as StageBuilder
             })
             .collect();
-        let init: HashMap<ProcId, Packet> = procs
+        let init: Outputs = procs
             .iter()
             .zip(inputs)
             .map(|(&pid, pkt)| (pid, pkt))
@@ -99,7 +98,7 @@ fn step_stage<F: Field>(
     beta: u64,
     h: u32,
     invert: bool,
-    prev: &HashMap<ProcId, Packet>,
+    prev: &Outputs,
 ) -> Box<dyn Collective> {
     let k = procs.len() as u64;
     let ph_1 = ipow(p_base, h - 1); // P^{h−1} — the digit weight in k′
@@ -146,7 +145,7 @@ impl Collective for DftA2A {
     fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
         self.pipe.step(inbox)
     }
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.pipe.outputs()
     }
 }

@@ -35,7 +35,9 @@
 
 use super::{par_flat_map_msgs, par_for_each_mut, par_map_msgs_mut};
 use crate::gf::{Field, Mat};
-use crate::net::{pkt_add, pkt_add_scaled, pkt_zero, Collective, Msg, Packet, PacketBuf, ProcId};
+use crate::net::{
+    pkt_add, pkt_add_scaled, pkt_zero, Collective, Msg, Outputs, Packet, PacketBuf, ProcId,
+};
 use crate::util::{ceil_log, ipow};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -174,7 +176,7 @@ impl<F: Field> PrepareShoot<F> {
         procs: Vec<ProcId>,
         p: usize,
         c: Arc<Mat>,
-        inputs: &HashMap<ProcId, Packet>,
+        inputs: &Outputs,
     ) -> Self {
         let packets = procs.iter().map(|pid| inputs[pid].clone()).collect();
         PrepareShoot::new(f, procs, p, c, packets)
@@ -486,7 +488,7 @@ impl<F: Field> Collective for PrepareShoot<F> {
         }
     }
 
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.procs
             .iter()
             .zip(&self.out)

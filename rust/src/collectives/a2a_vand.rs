@@ -22,7 +22,7 @@
 use super::{DftA2A, LocalOp, Par, Pipeline, PrepareShoot, StageBuilder};
 use crate::codes::StructuredPoints;
 use crate::gf::{vandermonde, Field, Mat};
-use crate::net::{Collective, Msg, Packet, ProcId};
+use crate::net::{Collective, Msg, Outputs, Packet, ProcId};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -46,7 +46,7 @@ impl DrawLoose {
         anyhow::ensure!(inputs.len() == k);
         let z = sp.z as usize;
         let m = sp.m;
-        let init: HashMap<ProcId, Packet> = procs
+        let init: Outputs = procs
             .iter()
             .zip(inputs)
             .map(|(&pid, pkt)| (pid, pkt))
@@ -77,7 +77,7 @@ impl DrawLoose {
             let f = f.clone();
             let procs = procs.clone();
             let alpha_z = alpha_z.clone();
-            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            Box::new(move |prev: &Outputs| {
                 // V_M[r][c] = (α_c^Z)^r — square Vandermonde on α_i^Z.
                 let vm = vandermonde::square(&f, &alpha_z);
                 let mat = Arc::new(if invert {
@@ -105,7 +105,7 @@ impl DrawLoose {
             let f = f.clone();
             let procs = procs.clone();
             let alpha = alpha.clone();
-            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            Box::new(move |prev: &Outputs| {
                 let rank_of: HashMap<ProcId, usize> =
                     procs.iter().enumerate().map(|(i, &p)| (p, i)).collect();
                 Box::new(LocalOp::map(prev, |pid, pkt| {
@@ -122,7 +122,7 @@ impl DrawLoose {
             let f = f.clone();
             let procs = procs.clone();
             let (p_base, h) = (sp.p_base, sp.h);
-            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            Box::new(move |prev: &Outputs| {
                 let rows: Vec<Box<dyn Collective>> = (0..m)
                     .map(|i| {
                         let members: Vec<ProcId> = (0..z).map(|j| procs[i * z + j]).collect();
@@ -171,7 +171,7 @@ impl Collective for DrawLoose {
     fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
         self.pipe.step(inbox)
     }
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.pipe.outputs()
     }
 }

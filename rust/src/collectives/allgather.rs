@@ -6,7 +6,7 @@
 //! `O(K)`), but it is the substrate of the multi-reduce baseline of
 //! Jeong et al. \[21\] which §II compares against.
 
-use crate::net::{Collective, Msg, Packet, PacketBuf, ProcId};
+use crate::net::{Collective, Msg, Outputs, Packet, PacketBuf, ProcId};
 use crate::util::ipow;
 use std::collections::HashMap;
 
@@ -125,7 +125,7 @@ impl Collective for AllGather {
 
     /// Every processor's output is the concatenation of all `N` packets in
     /// owner-rank order.
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.procs
             .iter()
             .enumerate()

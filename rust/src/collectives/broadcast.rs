@@ -10,7 +10,7 @@
 //! the simplest member, with `C1 = m + N − 2` rounds of `W/m`-element
 //! messages).
 
-use crate::net::{Collective, Msg, Packet, ProcId};
+use crate::net::{Collective, Msg, Outputs, Packet, ProcId};
 use crate::util::ipow;
 use std::collections::HashMap;
 
@@ -81,7 +81,7 @@ impl Collective for TreeBroadcast {
         out
     }
 
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.procs
             .iter()
             .zip(&self.have)
@@ -178,7 +178,7 @@ impl Collective for PipelinedBroadcast {
         out
     }
 
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.procs
             .iter()
             .enumerate()

@@ -11,7 +11,7 @@
 //! with `K·W`, versus `O(√K·W)` for prepare-and-shoot.
 
 use crate::gf::{Field, Mat};
-use crate::net::{pkt_add_scaled, pkt_scale, pkt_zero, Collective, Msg, Packet, ProcId};
+use crate::net::{pkt_add_scaled, pkt_scale, pkt_zero, Collective, Msg, Outputs, Packet, ProcId};
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -117,7 +117,7 @@ impl<F: Field> Collective for DirectEncode<F> {
         out
     }
 
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.sinks
             .iter()
             .zip(&self.acc)

@@ -38,7 +38,7 @@ pub use direct::DirectEncode;
 pub use multireduce::MultiReduce;
 pub use reduce::TreeReduce;
 
-use crate::net::{Collective, Msg, Packet, ProcId};
+use crate::net::{Collective, Msg, Outputs, Packet, ProcId};
 use std::collections::{HashMap, VecDeque};
 
 /// `f(0..n) → Vec<Msg>` flattened in index order — rayon-parallel when the
@@ -103,17 +103,17 @@ where
 /// source ("these processors hold these packets") and for free local
 /// computation steps (the model charges only for communication).
 pub struct LocalOp {
-    outs: HashMap<ProcId, Packet>,
+    outs: Outputs,
 }
 
 impl LocalOp {
-    pub fn new(outs: HashMap<ProcId, Packet>) -> Self {
+    pub fn new(outs: Outputs) -> Self {
         LocalOp { outs }
     }
 
     /// Map each processor's packet through `op`.
     pub fn map(
-        inputs: &HashMap<ProcId, Packet>,
+        inputs: &Outputs,
         mut op: impl FnMut(ProcId, &Packet) -> Packet,
     ) -> Self {
         LocalOp {
@@ -133,7 +133,7 @@ impl Collective for LocalOp {
         debug_assert!(inbox.is_empty(), "LocalOp received messages");
         Vec::new()
     }
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.outs.clone()
     }
 }
@@ -197,8 +197,8 @@ impl Collective for Par {
         step_children(&mut self.children, boxes)
     }
 
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
-        let mut out = HashMap::new();
+    fn outputs(&self) -> Outputs {
+        let mut out = Outputs::new();
         for c in &self.children {
             out.extend(c.outputs());
         }
@@ -235,7 +235,7 @@ fn step_children(children: &mut [Box<dyn Collective>], boxes: Vec<Vec<Msg>>) -> 
 }
 
 /// Builder invoked with the previous stage's outputs.
-pub type StageBuilder = Box<dyn FnOnce(&HashMap<ProcId, Packet>) -> Box<dyn Collective> + Send>;
+pub type StageBuilder = Box<dyn FnOnce(&Outputs) -> Box<dyn Collective> + Send>;
 
 /// Sequence collective phases; each stage starts from the previous stage's
 /// outputs. Stage boundaries cost no extra rounds: a stage's first sends
@@ -243,7 +243,7 @@ pub type StageBuilder = Box<dyn FnOnce(&HashMap<ProcId, Packet>) -> Box<dyn Coll
 pub struct Pipeline {
     current: Option<Box<dyn Collective>>,
     builders: VecDeque<Option<StageBuilder>>,
-    last_outputs: HashMap<ProcId, Packet>,
+    last_outputs: Outputs,
 }
 
 impl Pipeline {
@@ -252,14 +252,14 @@ impl Pipeline {
         let mut p = Pipeline {
             current: Some(first),
             builders: builders.into_iter().map(Some).collect(),
-            last_outputs: HashMap::new(),
+            last_outputs: Outputs::new(),
         };
         p.advance();
         p
     }
 
     /// Start from fixed inputs (a [`LocalOp`] source stage).
-    pub fn from_inputs(inputs: HashMap<ProcId, Packet>, builders: Vec<StageBuilder>) -> Self {
+    pub fn from_inputs(inputs: Outputs, builders: Vec<StageBuilder>) -> Self {
         Pipeline::new(Box::new(LocalOp::new(inputs)), builders)
     }
 
@@ -319,7 +319,7 @@ impl Collective for Pipeline {
         }
     }
 
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         match &self.current {
             Some(c) => c.outputs(),
             None => self.last_outputs.clone(),
@@ -329,6 +329,6 @@ impl Collective for Pipeline {
 
 /// Convenience: collect `(proc, packet)` pairs into the map all collective
 /// constructors take.
-pub fn inputs_of(pairs: impl IntoIterator<Item = (ProcId, Packet)>) -> HashMap<ProcId, Packet> {
+pub fn inputs_of(pairs: impl IntoIterator<Item = (ProcId, Packet)>) -> Outputs {
     pairs.into_iter().collect()
 }

@@ -14,8 +14,7 @@
 
 use super::{AllGather, LocalOp, Pipeline, StageBuilder};
 use crate::gf::{Field, Mat};
-use crate::net::{pkt_zero, Collective, Msg, Packet, ProcId};
-use std::collections::HashMap;
+use crate::net::{pkt_zero, Collective, Msg, Outputs, Packet, ProcId};
 use std::sync::Arc;
 
 /// All-gather-then-combine all-to-all encode (the \[21\] baseline).
@@ -40,7 +39,7 @@ impl MultiReduce {
         let gather = AllGather::new(procs.clone(), p, inputs);
         let combine: StageBuilder = {
             let procs = procs.clone();
-            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            Box::new(move |prev: &Outputs| {
                 Box::new(LocalOp::map(prev, |pid, cat| {
                     // `cat` = concatenation of all K packets in rank order.
                     let j = procs.iter().position(|&x| x == pid).unwrap();
@@ -69,7 +68,7 @@ impl Collective for MultiReduce {
     fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
         self.pipe.step(inbox)
     }
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.pipe.outputs()
     }
 }

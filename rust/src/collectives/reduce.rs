@@ -6,7 +6,7 @@
 //! row to accumulate the partially-coded packets at the sink.
 
 use crate::gf::Field;
-use crate::net::{pkt_add, Collective, Msg, Packet, ProcId};
+use crate::net::{pkt_add, Collective, Msg, Outputs, Packet, ProcId};
 use crate::util::ipow;
 use std::collections::HashMap;
 
@@ -49,7 +49,7 @@ impl<F: Field> TreeReduce<F> {
         f: F,
         procs: Vec<ProcId>,
         p: usize,
-        inputs: &HashMap<ProcId, Packet>,
+        inputs: &Outputs,
         w: usize,
     ) -> Self {
         let packets = procs
@@ -99,9 +99,9 @@ impl<F: Field> Collective for TreeReduce<F> {
         out
     }
 
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         let root = self.acc[0].clone().expect("reduce incomplete");
-        HashMap::from([(self.procs[0], root)])
+        Outputs::from([(self.procs[0], root)])
     }
 }
 

@@ -25,7 +25,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 
 /// Which code family the job encodes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
 pub enum CodeKind {
     /// Structured GRS (draw-and-loose–compatible points) — the §VI target.
     #[default]

@@ -1,13 +1,23 @@
 //! One decentralized-encoding job: plan → simulate → verify → report.
+//!
+//! Two execution paths share the verification and reporting logic:
+//!
+//! * [`EncodeJob::run`] — live: build the collective, step it on the
+//!   round engine, measure `C1`/`C2`.
+//! * [`EncodeJob::run_cached`] — replay: fetch (or compile) the shape's
+//!   [`CompiledPlan`](crate::framework::CompiledPlan) from a
+//!   [`PlanCache`] and replay it — bit-identical outputs and the exact
+//!   same report, with zero control-flow rederivation per request.
 
 use super::config::{CodeKind, JobConfig, VerifyMode};
+use super::plan_cache::{PlanCache, PlanKey};
 use super::verify;
 use crate::codes::GrsCode;
-use crate::framework::{systematic::Layout, Plan, PlanChoice};
+use crate::framework::{systematic::Layout, CompiledPlan, PlanChoice, PlannedJob};
 use crate::gf::{AnyField, Field, Mat};
 use crate::net::{run, Packet, Sim, SimReport};
 use crate::util::Rng;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 /// The outcome of one job, with every paper metric.
@@ -75,6 +85,10 @@ pub struct EncodeJob {
     pub code: Option<GrsCode>,
     pub parity: Arc<Mat>,
     pub inputs: Vec<Packet>,
+    /// Memoised [`plan_key`](EncodeJob::plan_key) — the serving hot path
+    /// derives the key once per job, not per request. Mutating `config`
+    /// or `parity` after the first cached call is not supported.
+    plan_key_memo: OnceLock<PlanKey>,
 }
 
 impl EncodeJob {
@@ -114,13 +128,42 @@ impl EncodeJob {
             code,
             parity,
             inputs,
+            plan_key_memo: OnceLock::new(),
         })
     }
 
-    /// Plan, simulate, verify.
+    /// Verify coded sink packets per the configured mode.
+    fn verify_coded(&self, coded: &[Packet]) -> anyhow::Result<Option<bool>> {
+        Ok(match self.config.verify {
+            VerifyMode::Off => None,
+            VerifyMode::Native => Some(verify::native(
+                &self.field,
+                &self.parity,
+                &self.inputs,
+                coded,
+            )),
+            VerifyMode::Freivalds => Some(verify::freivalds(
+                &self.field,
+                &self.parity,
+                &self.inputs,
+                coded,
+                self.config.seed ^ 0xF5EE,
+                2,
+            )),
+            VerifyMode::Pjrt => Some(verify::pjrt(
+                &self.config.artifacts_dir,
+                &self.field,
+                &self.parity,
+                &self.inputs,
+                coded,
+            )?),
+        })
+    }
+
+    /// Plan, simulate (live stepping), verify.
     pub fn run(&self) -> anyhow::Result<JobReport> {
         let t0 = Instant::now();
-        let mut pl: Plan = crate::framework::plan_with_model(
+        let mut pl: PlannedJob = crate::framework::plan_with_model(
             &self.field,
             self.code.as_ref(),
             Some(self.parity.clone()),
@@ -135,35 +178,95 @@ impl EncodeJob {
         let coded: Vec<Packet> = (0..pl.layout.r)
             .map(|r| outs[&pl.layout.sink(r)].clone())
             .collect();
-        let verified = match self.config.verify {
-            VerifyMode::Off => None,
-            VerifyMode::Native => Some(verify::native(
-                &self.field,
-                &self.parity,
-                &self.inputs,
-                &coded,
-            )),
-            VerifyMode::Freivalds => Some(verify::freivalds(
-                &self.field,
-                &self.parity,
-                &self.inputs,
-                &coded,
-                self.config.seed ^ 0xF5EE,
-                2,
-            )),
-            VerifyMode::Pjrt => Some(verify::pjrt(
-                &self.config.artifacts_dir,
-                &self.field,
-                &self.parity,
-                &self.inputs,
-                &coded,
-            )?),
-        };
+        let verified = self.verify_coded(&coded)?;
         let cost = sim_report.cost(&self.config.cost_model()?);
         Ok(JobReport {
             choice: pl.choice,
             layout: pl.layout,
             sim: sim_report,
+            cost,
+            verified,
+            wall: t0.elapsed(),
+        })
+    }
+
+    /// The cache key of this job's compiled plan: the shape, a
+    /// fingerprint of the parity matrix actually encoded against, and
+    /// the *resolved* algorithm choice (width-independent — see
+    /// [`PlanCache`]'s module docs on why `W` is absent). Derived once
+    /// per job and memoised — the per-request path pays a clone, not a
+    /// re-resolution.
+    pub fn plan_key(&self) -> anyhow::Result<PlanKey> {
+        if let Some(key) = self.plan_key_memo.get() {
+            return Ok(key.clone());
+        }
+        let choice = crate::framework::resolve_choice(
+            &self.field,
+            self.code.as_ref(),
+            self.config.w,
+            self.config.ports,
+            self.config.algorithm,
+            Some(self.config.cost_model()?),
+        )?;
+        let key = PlanKey {
+            field: self.config.field.clone(),
+            k: self.config.k,
+            r: self.config.r,
+            ports: self.config.ports,
+            code: self.config.code,
+            seed: self.config.seed,
+            parity_fp: super::plan_cache::parity_fingerprint(&self.parity),
+            choice,
+        };
+        let _ = self.plan_key_memo.set(key.clone());
+        Ok(key)
+    }
+
+    /// Fetch this shape's compiled plan from `cache`, compiling on miss.
+    pub fn compiled(&self, cache: &PlanCache) -> anyhow::Result<Arc<CompiledPlan>> {
+        let key = self.plan_key()?;
+        cache.get_or_compile(&key, || {
+            crate::framework::compile_plan(
+                &self.field,
+                self.code.as_ref(),
+                Some(self.parity.clone()),
+                self.config.ports,
+                self.config.w,
+                self.config.algorithm,
+                Some(self.config.cost_model()?),
+            )
+        })
+    }
+
+    /// Replay-encode arbitrary payload rows (any width) through the
+    /// shape's cached plan — the serving-path hot loop: no planning, no
+    /// round stepping, no routing; just the recorded output lincombs.
+    pub fn encode_cached(&self, cache: &PlanCache, x: &[Packet]) -> anyhow::Result<Vec<Packet>> {
+        anyhow::ensure!(x.len() == self.config.k, "need K = {} rows", self.config.k);
+        let compiled = self.compiled(cache)?;
+        let replay = crate::net::exec::replay(&compiled.plan, &self.field, x)?;
+        Ok((0..compiled.layout.r)
+            .map(|r| replay.outputs[&compiled.layout.sink(r)].clone())
+            .collect())
+    }
+
+    /// Plan-cache execution path: compile-or-fetch, replay, verify.
+    /// Produces bit-identical coded packets and the exact `C1`/`C2`
+    /// report of [`run`](EncodeJob::run), without re-deriving any
+    /// control flow when the cache hits.
+    pub fn run_cached(&self, cache: &PlanCache) -> anyhow::Result<JobReport> {
+        let t0 = Instant::now();
+        let compiled = self.compiled(cache)?;
+        let replay = crate::net::exec::replay(&compiled.plan, &self.field, &self.inputs)?;
+        let coded: Vec<Packet> = (0..compiled.layout.r)
+            .map(|r| replay.outputs[&compiled.layout.sink(r)].clone())
+            .collect();
+        let verified = self.verify_coded(&coded)?;
+        let cost = replay.report.cost(&self.config.cost_model()?);
+        Ok(JobReport {
+            choice: compiled.choice,
+            layout: compiled.layout,
+            sim: replay.report,
             cost,
             verified,
             wall: t0.elapsed(),
@@ -231,6 +334,64 @@ mod tests {
         let rep = job.run().unwrap();
         assert_eq!(rep.verified, Some(true));
         assert_eq!(rep.choice, PlanChoice::Universal);
+    }
+
+    #[test]
+    fn run_cached_matches_live_run_for_every_algorithm() {
+        let cache = crate::coordinator::PlanCache::new();
+        for algo in [
+            AlgoRequest::Auto,
+            AlgoRequest::Universal,
+            AlgoRequest::RsSpecific,
+            AlgoRequest::MultiReduce,
+            AlgoRequest::Direct,
+        ] {
+            let cfg = JobConfig {
+                k: 16,
+                r: 4,
+                w: 8,
+                algorithm: algo,
+                ..JobConfig::default()
+            };
+            let job = EncodeJob::synthetic(cfg).unwrap();
+            let live = job.run().unwrap();
+            let cached = job.run_cached(&cache).unwrap();
+            assert_eq!(cached.verified, Some(true), "{algo:?}");
+            assert_eq!(cached.choice, live.choice, "{algo:?}");
+            // Identical (C1, C2) and full report — statics, not re-runs.
+            assert_eq!(cached.sim, live.sim, "{algo:?}");
+            assert_eq!(cached.cost, live.cost, "{algo:?}");
+        }
+        // Auto resolved to Universal here (Remark 8), so five requests
+        // hit four distinct plans: one hit, four misses.
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.stats(), (1, 4));
+    }
+
+    #[test]
+    fn one_cached_plan_serves_every_width() {
+        let cache = crate::coordinator::PlanCache::new();
+        let cfg = JobConfig {
+            k: 8,
+            r: 4,
+            w: 5,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg.clone()).unwrap();
+        job.run_cached(&cache).unwrap();
+        let f = job.field.clone();
+        use crate::gf::Field;
+        let mut rng = crate::util::Rng::new(3);
+        for w in [1usize, 5, 17] {
+            let x: Vec<Packet> = (0..cfg.k)
+                .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                .collect();
+            let y = job.encode_cached(&cache, &x).unwrap();
+            assert!(crate::coordinator::verify::native(&f, &job.parity, &x, &y), "w={w}");
+        }
+        // One shape, one compile — widths share the plan.
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().1, 1);
     }
 
     #[test]

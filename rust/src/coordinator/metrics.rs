@@ -5,6 +5,11 @@ use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
+/// Counter name: plan-cache lookups served from a compiled plan.
+pub const PLAN_CACHE_HITS: &str = "plan_cache_hits";
+/// Counter name: plan-cache lookups that had to compile.
+pub const PLAN_CACHE_MISSES: &str = "plan_cache_misses";
+
 /// A set of named counters and latency recorders.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -33,6 +38,25 @@ impl Metrics {
             .entry(name.to_string())
             .or_default()
             .push(d.as_micros() as u64);
+    }
+
+    /// Record a plan-cache hit (replayed a compiled plan).
+    pub fn plan_cache_hit(&self) {
+        self.incr(PLAN_CACHE_HITS, 1);
+    }
+
+    /// Record a plan-cache miss (had to compile).
+    pub fn plan_cache_miss(&self) {
+        self.incr(PLAN_CACHE_MISSES, 1);
+    }
+
+    /// `(hits, misses)` of the plan cache. Both appear in [`to_json`]
+    /// alongside the other counters, so the service metrics summary
+    /// exposes them without extra plumbing.
+    ///
+    /// [`to_json`]: Metrics::to_json
+    pub fn plan_cache(&self) -> (u64, u64) {
+        (self.counter(PLAN_CACHE_HITS), self.counter(PLAN_CACHE_MISSES))
     }
 
     pub fn counter(&self, name: &str) -> u64 {
@@ -102,5 +126,17 @@ mod tests {
         let j = m.to_json();
         assert!(j.contains("\"requests\":5"));
         assert!(j.contains("\"encode\""));
+    }
+
+    #[test]
+    fn plan_cache_counters_surface_in_json() {
+        let m = Metrics::new();
+        m.plan_cache_miss();
+        m.plan_cache_hit();
+        m.plan_cache_hit();
+        assert_eq!(m.plan_cache(), (2, 1));
+        let j = m.to_json();
+        assert!(j.contains("\"plan_cache_hits\":2"), "{j}");
+        assert!(j.contains("\"plan_cache_misses\":1"), "{j}");
     }
 }

@@ -16,10 +16,12 @@
 pub mod config;
 pub mod job;
 pub mod metrics;
+pub mod plan_cache;
 pub mod service;
 pub mod verify;
 
 pub use config::JobConfig;
 pub use job::{EncodeJob, JobReport};
 pub use metrics::Metrics;
+pub use plan_cache::{PlanCache, PlanKey};
 pub use service::{EncodeRequest, EncodeResponse, EncodeService};

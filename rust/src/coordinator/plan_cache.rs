@@ -1,0 +1,209 @@
+//! The shape-keyed plan cache: compile an encoding schedule once, replay
+//! it for every subsequent same-shape request.
+//!
+//! A [`PlanKey`] identifies everything the compiled
+//! [`CompiledPlan`](crate::framework::CompiledPlan) depends on: the field,
+//! the `(K, R)` shape, the port budget, the code family + seed, a
+//! [`parity_fingerprint`] of the matrix itself (the config *usually*
+//! determines the matrix, but the plan's coefficients depend on the
+//! entries — the fingerprint enforces it), and the *resolved* algorithm
+//! choice (`Auto` resolves differently per width, so the key carries the
+//! outcome, not the request). Deliberately absent: the payload width `W` —
+//! plans are width-independent (Remark 2), so one compiled plan serves
+//! every `W` of the same shape. That is the cache's big win: a service
+//! seeing mixed-width traffic on one code shape compiles exactly once.
+//!
+//! Hit/miss counters are recorded on the attached
+//! [`Metrics`](super::metrics::Metrics) registry (`plan_cache_hits` /
+//! `plan_cache_misses`), so they appear in the service metrics summary.
+
+use super::metrics::Metrics;
+use crate::framework::{CompiledPlan, PlanChoice};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Everything a compiled plan's bits depend on (see module docs).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Field spec string (e.g. `"prime:786433"`, `"gf2e:8"`).
+    pub field: String,
+    pub k: usize,
+    pub r: usize,
+    pub ports: usize,
+    /// Code family — with `seed`, determines the parity matrix.
+    pub code: super::config::CodeKind,
+    /// Seed for code/matrix construction (`CodeKind::Random` derives the
+    /// matrix from it; structured codes ignore it but keying on it is
+    /// harmlessly conservative).
+    pub seed: u64,
+    /// [`parity_fingerprint`] of the matrix actually compiled against —
+    /// the plan's coefficients are functions of the matrix entries, so
+    /// the key must pin them, not just the config that *usually*
+    /// determines them.
+    pub parity_fp: u64,
+    /// The *resolved* algorithm (post-`Auto`).
+    pub choice: PlanChoice,
+}
+
+/// Positional FNV-1a fingerprint of a parity matrix (shape + every
+/// entry). Not cryptographic — it guards against accidental key
+/// collisions (a job whose matrix diverged from its config), not
+/// adversarial ones.
+pub fn parity_fingerprint(a: &crate::gf::Mat) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    h = (h ^ a.rows as u64).wrapping_mul(PRIME);
+    h = (h ^ a.cols as u64).wrapping_mul(PRIME);
+    for i in 0..a.rows {
+        for &v in a.row(i) {
+            h = (h ^ v).wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+/// A concurrent shape → compiled-plan map with hit/miss accounting.
+pub struct PlanCache {
+    inner: Mutex<HashMap<PlanKey, Arc<CompiledPlan>>>,
+    metrics: Arc<Metrics>,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::with_metrics(Arc::new(Metrics::new()))
+    }
+
+    /// Share a metrics registry (e.g. the service's) so cache counters
+    /// land in the same summary.
+    pub fn with_metrics(metrics: Arc<Metrics>) -> Self {
+        PlanCache {
+            inner: Mutex::new(HashMap::new()),
+            metrics,
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Fetch the plan for `key`, compiling it with `compile` on a miss.
+    /// Concurrent misses may compile redundantly; the first insert wins
+    /// so every caller replays the same plan object.
+    pub fn get_or_compile(
+        &self,
+        key: &PlanKey,
+        compile: impl FnOnce() -> Result<CompiledPlan>,
+    ) -> Result<Arc<CompiledPlan>> {
+        if let Some(hit) = self.inner.lock().unwrap().get(key).cloned() {
+            self.metrics.plan_cache_hit();
+            return Ok(hit);
+        }
+        self.metrics.plan_cache_miss();
+        let fresh = Arc::new(compile()?);
+        let mut guard = self.inner.lock().unwrap();
+        let entry = guard.entry(key.clone()).or_insert(fresh);
+        Ok(entry.clone())
+    }
+
+    /// Number of distinct compiled shapes held.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(hits, misses)` recorded so far.
+    pub fn stats(&self) -> (u64, u64) {
+        self.metrics.plan_cache()
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::CodeKind;
+
+    fn key(k: usize) -> PlanKey {
+        PlanKey {
+            field: "prime:786433".into(),
+            k,
+            r: 4,
+            ports: 1,
+            code: CodeKind::RsStructured,
+            seed: 42,
+            parity_fp: 7,
+            choice: PlanChoice::Universal,
+        }
+    }
+
+    #[test]
+    fn parity_fingerprint_pins_matrix_content() {
+        let f = crate::gf::GfPrime::default_field();
+        let a = crate::gf::Mat::random(&f, 6, 3, 1);
+        let b = crate::gf::Mat::random(&f, 6, 3, 2);
+        assert_eq!(parity_fingerprint(&a), parity_fingerprint(&a.clone()));
+        assert_ne!(parity_fingerprint(&a), parity_fingerprint(&b));
+        // Shape is part of the fingerprint, not just entries.
+        let t = a.transpose();
+        assert_ne!(parity_fingerprint(&a), parity_fingerprint(&t));
+    }
+
+    fn dummy_plan(k: usize) -> CompiledPlan {
+        let f = crate::gf::GfPrime::default_field();
+        let a = std::sync::Arc::new(crate::gf::Mat::random(&f, k, 4, 1));
+        crate::framework::compile_plan(
+            &f,
+            None,
+            Some(a),
+            1,
+            1,
+            crate::framework::AlgoRequest::Universal,
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn caches_by_key_and_counts_hits() {
+        let cache = PlanCache::new();
+        let mut compiles = 0;
+        for _ in 0..3 {
+            cache
+                .get_or_compile(&key(8), || {
+                    compiles += 1;
+                    Ok(dummy_plan(8))
+                })
+                .unwrap();
+        }
+        cache
+            .get_or_compile(&key(12), || {
+                compiles += 1;
+                Ok(dummy_plan(12))
+            })
+            .unwrap();
+        assert_eq!(compiles, 2);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats(), (2, 2)); // 2 hits on the k=8 key
+    }
+
+    #[test]
+    fn failed_compile_is_not_cached() {
+        let cache = PlanCache::new();
+        let err = cache.get_or_compile(&key(8), || anyhow::bail!("boom"));
+        assert!(err.is_err());
+        assert!(cache.is_empty());
+        // A later successful compile goes through.
+        cache.get_or_compile(&key(8), || Ok(dummy_plan(8))).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats(), (0, 2));
+    }
+}

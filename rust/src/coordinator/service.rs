@@ -1,15 +1,26 @@
 //! The batch-encode service — the serving-path face of the system.
 //!
 //! Worker threads consume [`EncodeRequest`]s (K payload rows of arbitrary
-//! width) from a bounded queue, chunk them to the AOT artifact's width
-//! `W`, run the PJRT-compiled GF(p) kernel (`runtime::GfEncoder`) and
-//! reply on a per-request channel. Bounded-queue submission gives natural
-//! backpressure; metrics record throughput and latency percentiles.
+//! width) from a bounded queue and reply on a per-request channel.
+//! Bounded-queue submission gives natural backpressure; metrics record
+//! throughput and latency percentiles. Two engines:
+//!
+//! * [`EncodeService::start`] — the PJRT path: chunk rows to the AOT
+//!   artifact's width `W` and run the compiled GF(p) kernel
+//!   (`runtime::GfEncoder`).
+//! * [`EncodeService::start_replay`] — the plan-replay path: compile the
+//!   shape's decentralized schedule **once** into a
+//!   [`CompiledPlan`](crate::framework::CompiledPlan) (first request =
+//!   one cache miss) and replay it for every request — no per-request
+//!   planning or round stepping, any payload width, no artifacts needed.
+//!   Cache hit/miss counters land in the service metrics summary.
 //!
 //! (The offline build has no tokio; std threads + mpsc channels provide
 //! the same architecture — see DESIGN.md §1.)
 
+use super::job::EncodeJob;
 use super::metrics::Metrics;
+use super::plan_cache::PlanCache;
 use crate::gf::{Field, Mat};
 use crate::runtime::Runtime;
 use anyhow::{Context, Result};
@@ -90,30 +101,55 @@ impl EncodeService {
                             return;
                         }
                     };
-                    loop {
-                        if stop.load(Ordering::Relaxed) {
-                            break;
-                        }
-                        let req = {
-                            let guard = rx.lock().unwrap();
-                            match guard.recv_timeout(std::time::Duration::from_millis(50)) {
-                                Ok(req) => req,
-                                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-                            }
-                        };
-                        let t0 = Instant::now();
-                        let y = encode_chunked(&enc, &a_flat, &req.x, k, r, chunk_w);
-                        let wall = t0.elapsed();
-                        metrics.incr("requests", 1);
-                        if y.is_err() {
-                            metrics.incr("failures", 1);
-                        }
-                        metrics.observe("encode_latency", wall);
-                        let _ = req.reply.send(EncodeResponse { y, wall });
-                    }
+                    worker_loop(&rx, &metrics, &stop, |x| {
+                        encode_chunked(&enc, &a_flat, x, k, r, chunk_w)
+                    });
                 })
                 .context("spawning worker")?;
+            workers.push(handle);
+        }
+        Ok(EncodeService {
+            tx: Some(tx),
+            workers,
+            metrics,
+            stop,
+            k,
+        })
+    }
+
+    /// Start a plan-replay service for the shape described by `cfg`: no
+    /// PJRT artifacts required. Workers share one [`PlanCache`] wired to
+    /// the service metrics; the first request compiles the plan (one
+    /// `plan_cache_misses`), every later request replays it (one
+    /// `plan_cache_hits` each). Requests may have any payload width —
+    /// the compiled plan is width-independent.
+    pub fn start_replay(
+        cfg: &super::JobConfig,
+        n_workers: usize,
+        queue_depth: usize,
+    ) -> Result<Self> {
+        // Build the (field, code, parity) triple once; the synthetic
+        // inputs are ignored — requests carry their own payloads.
+        let job = Arc::new(EncodeJob::synthetic(cfg.clone())?);
+        let k = cfg.k;
+        let (tx, rx) = mpsc::sync_channel::<EncodeRequest>(queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::new());
+        let cache = Arc::new(PlanCache::with_metrics(metrics.clone()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut workers = Vec::new();
+        for wid in 0..n_workers {
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            let stop = stop.clone();
+            let job = job.clone();
+            let cache = cache.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("replay-worker-{wid}"))
+                .spawn(move || {
+                    worker_loop(&rx, &metrics, &stop, |x| job.encode_cached(&cache, x))
+                })
+                .context("spawning replay worker")?;
             workers.push(handle);
         }
         Ok(EncodeService {
@@ -148,6 +184,41 @@ impl EncodeService {
     }
 }
 
+/// The worker protocol shared by both engines: poll the stop flag, drain
+/// the bounded queue (50ms poll so shutdown is prompt), time each
+/// request, record the `requests`/`failures`/`encode_latency` metrics,
+/// reply on the per-request channel. `encode` is the only per-engine
+/// part.
+fn worker_loop(
+    rx: &Mutex<mpsc::Receiver<EncodeRequest>>,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+    encode: impl Fn(&[Vec<u64>]) -> Result<Vec<Vec<u64>>>,
+) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let req = {
+            let guard = rx.lock().unwrap();
+            match guard.recv_timeout(std::time::Duration::from_millis(50)) {
+                Ok(req) => req,
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        };
+        let t0 = Instant::now();
+        let y = encode(&req.x);
+        let wall = t0.elapsed();
+        metrics.incr("requests", 1);
+        if y.is_err() {
+            metrics.incr("failures", 1);
+        }
+        metrics.observe("encode_latency", wall);
+        let _ = req.reply.send(EncodeResponse { y, wall });
+    }
+}
+
 /// Encode arbitrary-width payloads by chunking to the artifact width.
 fn encode_chunked(
     enc: &crate::runtime::GfEncoder,
@@ -178,4 +249,45 @@ fn encode_chunked(
         off += take;
     }
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{verify, JobConfig};
+
+    #[test]
+    fn replay_service_serves_mixed_widths_from_one_compiled_plan() {
+        let cfg = JobConfig {
+            k: 8,
+            r: 4,
+            w: 4,
+            ..JobConfig::default()
+        };
+        // Same config ⇒ same deterministic code/parity as the service.
+        let oracle_job = EncodeJob::synthetic(cfg.clone()).unwrap();
+        let f = cfg.any_field().unwrap();
+        let svc = EncodeService::start_replay(&cfg, 1, 8).unwrap();
+        let mut rng = crate::util::Rng::new(9);
+        let mut pending = Vec::new();
+        for w in [4usize, 9, 1, 4] {
+            let x: Vec<Vec<u64>> = (0..cfg.k)
+                .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                .collect();
+            pending.push((x.clone(), svc.submit(x).unwrap()));
+        }
+        for (x, rx) in pending {
+            let resp = rx.recv().unwrap();
+            let y = resp.y.expect("replay encode ok");
+            assert_eq!(y.len(), cfg.r);
+            assert!(verify::native(&f, &oracle_job.parity, &x, &y));
+        }
+        // One worker: first request compiled (miss), the rest replayed.
+        assert_eq!(svc.metrics.plan_cache(), (3, 1));
+        let j = svc.metrics.to_json();
+        assert!(j.contains("\"plan_cache_hits\":3"), "{j}");
+        assert!(j.contains("\"plan_cache_misses\":1"), "{j}");
+        assert_eq!(svc.metrics.counter("requests"), 4);
+        svc.shutdown();
+    }
 }

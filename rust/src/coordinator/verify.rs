@@ -93,6 +93,29 @@ pub fn freivalds<F: Field>(
     true
 }
 
+/// Freivalds-check a plan **replay**: pull the sink packets out of a
+/// [`Replay`](crate::net::exec::Replay)'s output map in sink order and
+/// random-project them against `x·A` — the sublinear integrity check for
+/// the cached serving path (a replayed plan is only as trustworthy as
+/// the compilation run; this catches a stale or corrupted cache entry
+/// with error probability ≤ `q^{-rounds}`).
+pub fn freivalds_replay<F: Field>(
+    f: &F,
+    a: &Mat,
+    inputs: &[Packet],
+    replay: &crate::net::exec::Replay,
+    layout: &crate::framework::Layout,
+    seed: u64,
+    rounds: u32,
+) -> bool {
+    let coded: Vec<Packet> = (0..layout.r)
+        .filter_map(|r| replay.outputs.get(&layout.sink(r)).cloned())
+        .collect();
+    // A sink missing from the replay surfaces as a length mismatch,
+    // which `freivalds` rejects.
+    freivalds(f, a, inputs, &coded, seed, rounds)
+}
+
 /// PJRT oracle: run the AOT-compiled `encode` artifact and compare.
 /// Requires a matching artifact shape (K, R, W, p) in `dir`.
 pub fn pjrt<F: Field>(
@@ -184,6 +207,48 @@ mod tests {
         assert!(!freivalds(&f, &a, &inputs, &coded, 42, 2));
         // Shape mismatches are rejected outright.
         assert!(!freivalds(&f, &a, &inputs, &coded[..2].to_vec(), 42, 2));
+    }
+
+    #[test]
+    fn freivalds_accepts_replay_and_rejects_corrupted_one() {
+        let f = GfPrime::default_field();
+        let (k, r, w) = (12usize, 4usize, 3usize);
+        let a = std::sync::Arc::new(Mat::random(&f, k, r, 31));
+        let compiled = crate::framework::compile_plan(
+            &f,
+            None,
+            Some(a.clone()),
+            1,
+            w,
+            crate::framework::AlgoRequest::Universal,
+            None,
+        )
+        .unwrap();
+        let inputs: Vec<Packet> = (0..k)
+            .map(|i| (0..w).map(|j| f.elem((i * w + j) as u64 * 7 + 1)).collect())
+            .collect();
+        let mut replay = crate::net::exec::replay(&compiled.plan, &f, &inputs).unwrap();
+        assert!(freivalds_replay(
+            &f,
+            &a,
+            &inputs,
+            &replay,
+            &compiled.layout,
+            77,
+            2
+        ));
+        // Corrupt one sink packet: the projection must reject.
+        let sink = compiled.layout.sink(1);
+        replay.outputs.get_mut(&sink).unwrap()[0] ^= 1;
+        assert!(!freivalds_replay(
+            &f,
+            &a,
+            &inputs,
+            &replay,
+            &compiled.layout,
+            77,
+            2
+        ));
     }
 
     #[test]

@@ -104,6 +104,17 @@ pub fn theorem2_framework(a2a: (u64, u64), k: u64, r: u64, w: u64, p: u64) -> (u
     (a2a.0 + br.0, a2a.1 + br.1)
 }
 
+/// Measured `(C1, C2)` of a compiled [`Plan`](crate::net::plan::Plan) at
+/// payload width `w` — read off the plan's statics, nothing is executed.
+/// This is the zero-cost replacement for the "run the collective and read
+/// the [`SimReport`](crate::net::SimReport)" pattern: where the paper's
+/// preconditions hold, these statics equal the closed forms above exactly
+/// (asserted in the tests below), and elsewhere they are the ground truth
+/// the formulas upper-bound.
+pub fn plan_statics(plan: &crate::net::plan::Plan, w: u64) -> (u64, u64) {
+    (plan.c1(), plan.c2(w))
+}
+
 /// §II: the multi-reduce baseline's `C2` — all-gather then combine:
 /// `(K−1)·W` for one port (p-port: `≈ (K−1)·W/p`).
 pub fn multireduce_c2(k: u64, w: u64, p: u64) -> u64 {
@@ -158,6 +169,29 @@ mod tests {
     fn corollary1_is_theorem4_special_case() {
         for (p, h) in [(1u64, 5u32), (2, 3), (3, 4)] {
             assert_eq!(theorem4_dft(p + 1, h, p), corollary1_dft(h));
+        }
+    }
+
+    #[test]
+    fn plan_statics_match_theorem3_without_execution() {
+        // Compile prepare-and-shoot once per shape; the plan's statics
+        // must equal Theorem 3 exactly at exact powers, for every width.
+        let f = crate::gf::GfPrime::default_field();
+        for (k, p) in [(16usize, 1usize), (81, 2), (64, 1)] {
+            let c = std::sync::Arc::new(crate::gf::Mat::random(&f, k, k, 3));
+            let plan = crate::net::plan::compile(p, k, |basis| {
+                Ok(Box::new(crate::collectives::PrepareShoot::new(
+                    f,
+                    (0..k).collect(),
+                    p,
+                    c.clone(),
+                    basis,
+                )))
+            })
+            .unwrap();
+            let (c1f, c2f) = theorem3_universal(k as u64, p as u64);
+            assert_eq!(plan_statics(&plan, 1), (c1f, c2f), "K={k} p={p}");
+            assert_eq!(plan_statics(&plan, 7), (c1f, 7 * c2f), "K={k} p={p} W=7");
         }
     }
 

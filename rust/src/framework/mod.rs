@@ -20,7 +20,7 @@ use crate::net::Packet;
 use std::sync::Arc;
 
 /// What the planner decided to run (reported in job metrics).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum PlanChoice {
     /// §VI specific path: Cauchy blocks via two draw-and-looses.
     RsSpecific,
@@ -45,7 +45,7 @@ impl std::fmt::Display for PlanChoice {
 }
 
 /// Requested algorithm (config); `Auto` lets the planner decide.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
 pub enum AlgoRequest {
     #[default]
     Auto,
@@ -69,11 +69,25 @@ impl std::str::FromStr for AlgoRequest {
     }
 }
 
-/// A planned systematic encoding job.
-pub struct Plan {
+/// A planned systematic encoding job, ready to step live on the engine.
+///
+/// (Distinct from the compiled, replayable [`crate::net::plan::Plan`] IR —
+/// see [`compile_plan`] for the bridge between the two.)
+pub struct PlannedJob {
     pub choice: PlanChoice,
     pub job: Box<dyn crate::net::Collective>,
     pub layout: Layout,
+}
+
+/// A shape's encoding schedule compiled to the replayable Plan IR: the
+/// planner's `choice`, the processor `layout`, and the [`Plan`] itself.
+/// Cache-friendly (width-independent, `Send + Sync`); the coordinator's
+/// `PlanCache` stores these behind `Arc`s.
+#[derive(Clone, Debug)]
+pub struct CompiledPlan {
+    pub choice: PlanChoice,
+    pub layout: Layout,
+    pub plan: crate::net::plan::Plan,
 }
 
 /// Predicted `(C1, C2)` of the specific (§VI) and universal (§IV) paths
@@ -119,29 +133,35 @@ pub fn plan<F: Field>(
     inputs: Vec<Packet>,
     p: usize,
     request: AlgoRequest,
-) -> anyhow::Result<Plan> {
+) -> anyhow::Result<PlannedJob> {
     plan_with_model(f, code, parity, inputs, p, request, None)
 }
 
-/// [`plan`] with an explicit cost model for the `Auto` decision.
-pub fn plan_with_model<F: Field>(
+/// Resolve the parity matrix a request encodes against.
+fn resolve_matrix<F: Field>(
     f: &F,
     code: Option<&GrsCode>,
     parity: Option<Arc<Mat>>,
-    inputs: Vec<Packet>,
+) -> anyhow::Result<Arc<Mat>> {
+    match (parity, code) {
+        (Some(m), _) => Ok(m),
+        (None, Some(c)) => Ok(Arc::new(c.parity_matrix(f))),
+        (None, None) => anyhow::bail!("plan needs a code or a parity matrix"),
+    }
+}
+
+/// Resolve an [`AlgoRequest`] into a concrete [`PlanChoice`] for payload
+/// width `w` — the cost-aware `Auto` decision of Remark 8, shared by the
+/// live planner and the plan compiler (and by cache-key derivation, which
+/// must know the resolved algorithm without building anything).
+pub fn resolve_choice<F: Field>(
+    f: &F,
+    code: Option<&GrsCode>,
+    w: usize,
     p: usize,
     request: AlgoRequest,
     model: Option<crate::net::CostModel>,
-) -> anyhow::Result<Plan> {
-    let a: Arc<Mat> = match (&parity, code) {
-        (Some(m), _) => m.clone(),
-        (None, Some(c)) => Arc::new(c.parity_matrix(f)),
-        (None, None) => anyhow::bail!("plan needs a code or a parity matrix"),
-    };
-    let layout = Layout {
-        k: a.rows,
-        r: a.cols,
-    };
+) -> anyhow::Result<PlanChoice> {
     // The specific path applies when the code carries structured designs
     // and the aspect ratio is divisible (Remark 4).
     let specific_ok = code.is_some_and(|c| {
@@ -154,12 +174,12 @@ pub fn plan_with_model<F: Field>(
         };
         div_ok && designs_ok
     });
-    let choice = match request {
+    Ok(match request {
         AlgoRequest::Auto => {
             if specific_ok {
                 // Cost-aware: compare the formula-predicted costs.
-                let w = inputs.first().map_or(1, |x| x.len()) as u64;
-                let (spec, univ) = predict_costs(code.expect("specific_ok"), w, p as u64);
+                let (spec, univ) =
+                    predict_costs(code.expect("specific_ok"), w.max(1) as u64, p as u64);
                 let model = model
                     .unwrap_or_else(|| crate::net::CostModel::bandwidth_bound(f.bits()));
                 if model.cost(spec.0, spec.1) <= model.cost(univ.0, univ.1) {
@@ -178,11 +198,26 @@ pub fn plan_with_model<F: Field>(
         AlgoRequest::Universal => PlanChoice::Universal,
         AlgoRequest::MultiReduce => PlanChoice::MultiReduce,
         AlgoRequest::Direct => PlanChoice::Direct,
+    })
+}
+
+/// Build the collective executing `choice` over `inputs`.
+fn build_job<F: Field>(
+    f: &F,
+    code: Option<&GrsCode>,
+    a: Arc<Mat>,
+    inputs: Vec<Packet>,
+    p: usize,
+    choice: PlanChoice,
+) -> anyhow::Result<Box<dyn crate::net::Collective>> {
+    let layout = Layout {
+        k: a.rows,
+        r: a.cols,
     };
-    let job: Box<dyn crate::net::Collective> = match choice {
+    Ok(match choice {
         PlanChoice::RsSpecific => Box::new(SystematicEncode::new_rs(
             f.clone(),
-            code.expect("specific_ok implies code"),
+            code.ok_or_else(|| anyhow::anyhow!("specific path requires a code"))?,
             inputs,
             p,
         )?),
@@ -212,11 +247,64 @@ pub fn plan_with_model<F: Field>(
                 inputs,
             ))
         }
+    })
+}
+
+/// [`plan`] with an explicit cost model for the `Auto` decision.
+pub fn plan_with_model<F: Field>(
+    f: &F,
+    code: Option<&GrsCode>,
+    parity: Option<Arc<Mat>>,
+    inputs: Vec<Packet>,
+    p: usize,
+    request: AlgoRequest,
+    model: Option<crate::net::CostModel>,
+) -> anyhow::Result<PlannedJob> {
+    let a = resolve_matrix(f, code, parity)?;
+    let layout = Layout {
+        k: a.rows,
+        r: a.cols,
     };
-    Ok(Plan {
+    let w = inputs.first().map_or(1, |x| x.len());
+    let choice = resolve_choice(f, code, w, p, request, model)?;
+    let job = build_job(f, code, a, inputs, p, choice)?;
+    Ok(PlannedJob {
         choice,
         job,
         layout,
+    })
+}
+
+/// Compile the encoding schedule for a shape into the replayable
+/// [`Plan`](crate::net::plan::Plan) IR: resolve the `Auto` choice for the
+/// *intended* payload width `w` (the schedule itself is width-independent,
+/// but the cost-aware decision is not), build the chosen collective over
+/// the `K` basis payloads, and record one run through the instrumenting
+/// recorder (`net::plan::compile`). The returned [`CompiledPlan`] replays
+/// any same-shape request via [`crate::net::exec::replay`] with no
+/// control-flow rederivation.
+pub fn compile_plan<F: Field>(
+    f: &F,
+    code: Option<&GrsCode>,
+    parity: Option<Arc<Mat>>,
+    p: usize,
+    w: usize,
+    request: AlgoRequest,
+    model: Option<crate::net::CostModel>,
+) -> anyhow::Result<CompiledPlan> {
+    let a = resolve_matrix(f, code, parity)?;
+    let layout = Layout {
+        k: a.rows,
+        r: a.cols,
+    };
+    let choice = resolve_choice(f, code, w, p, request, model)?;
+    let plan = crate::net::plan::compile(p, layout.k, |basis| {
+        build_job(f, code, a.clone(), basis, p, choice)
+    })?;
+    Ok(CompiledPlan {
+        choice,
+        layout,
+        plan,
     })
 }
 

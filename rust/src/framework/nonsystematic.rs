@@ -20,8 +20,7 @@
 use super::systematic::Layout;
 use crate::collectives::{Par, Pipeline, PrepareShoot, StageBuilder, TreeBroadcast};
 use crate::gf::{Field, Mat};
-use crate::net::{pkt_zero, Collective, Msg, Packet, ProcId};
-use std::collections::HashMap;
+use crate::net::{pkt_zero, Collective, Msg, Outputs, Packet, ProcId};
 use std::sync::Arc;
 
 /// A non-systematic encoding job. Processor ids: sources `0..K`, sinks
@@ -64,7 +63,7 @@ impl NonSystematicEncode {
         layout: Layout,
     ) -> Pipeline {
         let (k, n) = (layout.k, layout.n());
-        let stage: StageBuilder = Box::new(move |prev: &HashMap<ProcId, Packet>| {
+        let stage: StageBuilder = Box::new(move |prev: &Outputs| {
             let gp = Mat::from_fn(n, n, |row, col| if row < k { g[(row, col)] } else { 0 });
             let procs: Vec<ProcId> = (0..n).collect();
             let ins: Vec<Packet> = (0..n)
@@ -73,7 +72,7 @@ impl NonSystematicEncode {
             Box::new(PrepareShoot::new(f.clone(), procs, p, Arc::new(gp), ins))
                 as Box<dyn Collective>
         });
-        let init: HashMap<ProcId, Packet> = inputs.into_iter().enumerate().collect();
+        let init: Outputs = inputs.into_iter().enumerate().collect();
         Pipeline::from_inputs(init, vec![stage])
     }
 
@@ -95,7 +94,7 @@ impl NonSystematicEncode {
         );
 
         // Phase 1: K row broadcasts (source kk → its row's grid sinks).
-        let phase1: StageBuilder = Box::new(move |prev: &HashMap<ProcId, Packet>| {
+        let phase1: StageBuilder = Box::new(move |prev: &Outputs| {
             let rows: Vec<Box<dyn Collective>> = (0..k)
                 .map(|kk| {
                     let mut procs: Vec<ProcId> = vec![kk];
@@ -111,7 +110,7 @@ impl NonSystematicEncode {
 
         // Phase 2 (one Par): per-column A2As over the sinks, plus the
         // source-column A2A for coordinates 0..K — all disjoint.
-        let phase2: StageBuilder = Box::new(move |prev: &HashMap<ProcId, Packet>| {
+        let phase2: StageBuilder = Box::new(move |prev: &Outputs| {
             let mut groups: Vec<Box<dyn Collective>> = Vec::with_capacity(full_cols + 1);
             // Sources compute coordinates 0..K among themselves.
             {
@@ -168,7 +167,7 @@ impl NonSystematicEncode {
             Box::new(Par::new(groups)) as Box<dyn Collective>
         });
 
-        let init: HashMap<ProcId, Packet> = inputs.into_iter().enumerate().collect();
+        let init: Outputs = inputs.into_iter().enumerate().collect();
         Ok(Pipeline::from_inputs(init, vec![phase1, phase2]))
     }
 
@@ -200,7 +199,7 @@ impl NonSystematicEncode {
         let ones = vec![1u64; k];
 
         // Phase 1: K row broadcasts (as in the universal K ≤ R path).
-        let phase1: StageBuilder = Box::new(move |prev: &HashMap<ProcId, Packet>| {
+        let phase1: StageBuilder = Box::new(move |prev: &Outputs| {
             let rows: Vec<Box<dyn Collective>> = (0..k)
                 .map(|kk| {
                     let mut procs: Vec<ProcId> = vec![kk];
@@ -218,7 +217,7 @@ impl NonSystematicEncode {
         // sink column m runs block m+1 — all disjoint, shared rounds.
         let phase2: StageBuilder = {
             let f = f.clone();
-            Box::new(move |prev: &HashMap<ProcId, Packet>| {
+            Box::new(move |prev: &Outputs| {
                 let mut groups: Vec<Box<dyn Collective>> = Vec::with_capacity(full_cols + 1);
                 for block in 0..=full_cols {
                     let procs: Vec<ProcId> = if block == 0 {
@@ -245,7 +244,7 @@ impl NonSystematicEncode {
             })
         };
 
-        let init: HashMap<ProcId, Packet> = inputs.into_iter().enumerate().collect();
+        let init: Outputs = inputs.into_iter().enumerate().collect();
         Ok(NonSystematicEncode {
             pipe: Pipeline::from_inputs(init, vec![phase1, phase2]),
             layout,
@@ -274,7 +273,7 @@ impl Collective for NonSystematicEncode {
     fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
         self.pipe.step(inbox)
     }
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.pipe.outputs()
     }
 }

@@ -24,8 +24,7 @@ use crate::collectives::{
     TreeReduce,
 };
 use crate::gf::{Field, Mat};
-use crate::net::{pkt_zero, Collective, Msg, Packet, ProcId};
-use std::collections::HashMap;
+use crate::net::{pkt_zero, Collective, Msg, Outputs, Packet, ProcId};
 use std::sync::Arc;
 
 /// Which all-to-all encode implementation drives the column phases.
@@ -252,7 +251,7 @@ fn build_k_ge_r_with<F: Field>(
     // Phase 1: M parallel column A2As.
     let phase1: StageBuilder = {
         let f = f.clone();
-        Box::new(move |prev: &HashMap<ProcId, Packet>| {
+        Box::new(move |prev: &Outputs| {
             let cols: Vec<Box<dyn Collective>> = (0..m_cols)
                 .map(|m| {
                     let procs: Vec<ProcId> = (0..r).map(|s| cell(s, m)).collect();
@@ -275,7 +274,7 @@ fn build_k_ge_r_with<F: Field>(
     // Phase 2: R parallel row reduces rooted at the sinks.
     let phase2: StageBuilder = {
         let f = f.clone();
-        Box::new(move |prev: &HashMap<ProcId, Packet>| {
+        Box::new(move |prev: &Outputs| {
             let rows: Vec<Box<dyn Collective>> = (0..r)
                 .map(|s| {
                     let mut procs: Vec<ProcId> = vec![layout.sink(s)];
@@ -293,7 +292,7 @@ fn build_k_ge_r_with<F: Field>(
         })
     };
 
-    let init: HashMap<ProcId, Packet> = inputs
+    let init: Outputs = inputs
         .into_iter()
         .enumerate()
         .map(|(i, pkt)| (layout.source(i), pkt))
@@ -357,7 +356,7 @@ fn build_k_lt_r_with<F: Field>(
     let phase1: StageBuilder = {
         let f = f.clone();
         let _ = &f;
-        Box::new(move |prev: &HashMap<ProcId, Packet>| {
+        Box::new(move |prev: &Outputs| {
             let rows: Vec<Box<dyn Collective>> = (0..k)
                 .map(|kk| {
                     let mut procs: Vec<ProcId> = vec![layout.source(kk)];
@@ -378,7 +377,7 @@ fn build_k_lt_r_with<F: Field>(
     // Phase 2: M parallel column A2As on A_m (K×K).
     let phase2: StageBuilder = {
         let f = f.clone();
-        Box::new(move |prev: &HashMap<ProcId, Packet>| {
+        Box::new(move |prev: &Outputs| {
             let cols: Vec<Box<dyn Collective>> = (0..m_cols)
                 .map(|m| {
                     let procs: Vec<ProcId> = (0..k).map(|kk| cell(kk, m)).collect();
@@ -393,8 +392,8 @@ fn build_k_lt_r_with<F: Field>(
     };
 
     // Keep only sink outputs (drop the borrowed sources' garbage columns).
-    let cleanup: StageBuilder = Box::new(move |prev: &HashMap<ProcId, Packet>| {
-        let outs: HashMap<ProcId, Packet> = prev
+    let cleanup: StageBuilder = Box::new(move |prev: &Outputs| {
+        let outs: Outputs = prev
             .iter()
             .filter(|(&pid, _)| pid >= k && pid < k + r)
             .map(|(&pid, pkt)| (pid, pkt.clone()))
@@ -402,7 +401,7 @@ fn build_k_lt_r_with<F: Field>(
         Box::new(LocalOp::new(outs)) as Box<dyn Collective>
     });
 
-    let init: HashMap<ProcId, Packet> = inputs
+    let init: Outputs = inputs
         .into_iter()
         .enumerate()
         .map(|(i, pkt)| (layout.source(i), pkt))
@@ -421,7 +420,7 @@ impl Collective for SystematicEncode {
     fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
         self.pipe.step(inbox)
     }
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.pipe.outputs()
     }
 }

@@ -10,7 +10,10 @@
 //!
 //! * [`gf`] — finite fields, matrices, polynomials, structured matrices;
 //! * [`net`] — the paper's communication model as an executable,
-//!   port-enforcing round simulator with exact `C1`/`C2` accounting;
+//!   port-enforcing round simulator with exact `C1`/`C2` accounting,
+//!   plus the compile/execute split: [`net::plan`] compiles any
+//!   collective into a reusable, width-independent Plan IR and
+//!   [`net::exec`] replays it with zero control-flow rederivation;
 //! * [`collectives`] — broadcast/reduce/all-gather, the universal
 //!   **prepare-and-shoot** A2A (§IV), the specific **DFT** (§V-A),
 //!   **draw-and-loose** (§V-B) and **Cauchy-like** (§VI) A2As, plus the

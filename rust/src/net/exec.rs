@@ -1,0 +1,217 @@
+//! The zero-rederivation replay executor for compiled [`Plan`]s.
+//!
+//! A live [`run`](crate::net::run) re-derives the entire control flow —
+//! round schedules, owner lists, offset bookkeeping, routing — on every
+//! execution. Replay does none of that: the [`Plan`] already fixes the
+//! schedule and every coefficient, so executing it for new payload data
+//! reduces to evaluating the recorded linear combinations.
+//!
+//! Two entry points:
+//!
+//! * [`replay`] — the serving path. Materialises only the *output* slots
+//!   (one lincomb over the inputs per output packet, delayed-reduction
+//!   kernels, rayon-parallel over independent output ops under the
+//!   `parallel` feature) and reconstructs the exact [`SimReport`] from
+//!   plan statics. Bit-identical to live stepping: every stored packet
+//!   value is canonical (`< q`), so equal field elements are equal bits.
+//! * [`replay_full`] — the inspection path. Materialises every slot
+//!   round by round (rayon-parallel over the independent ops within a
+//!   round) and emits the exact wire [`TraceEvent`]s, for debugging and
+//!   trace tooling.
+
+use super::payload::{pkt_zero, Packet};
+use super::plan::Plan;
+use super::sim::{Outputs, SimReport};
+use super::trace::TraceEvent;
+use crate::gf::Field;
+use anyhow::{ensure, Result};
+
+/// The result of replaying a plan against one payload set.
+#[derive(Clone, Debug)]
+pub struct Replay {
+    /// Final packet per processor — bit-identical to a live run's
+    /// [`Collective::outputs`](crate::net::Collective::outputs).
+    pub outputs: Outputs,
+    /// The exact report a live run would produce, from plan statics.
+    pub report: SimReport,
+}
+
+/// A full (wire-level) replay: every arena slot materialised.
+#[derive(Clone, Debug)]
+pub struct WireReplay {
+    /// `slots[s]` = the packet value of arena slot `s`.
+    pub slots: Vec<Packet>,
+    pub outputs: Outputs,
+    pub report: SimReport,
+    /// The exact trace a live `Sim::with_trace` run would record.
+    pub trace: Vec<TraceEvent>,
+}
+
+/// Map `f` over `0..n` collecting results in index order —
+/// rayon-parallel when the `parallel` feature is on and enabled.
+fn par_map_indexed<U, F>(n: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync + Send,
+{
+    #[cfg(feature = "parallel")]
+    if crate::net::parallel_enabled() {
+        use rayon::prelude::*;
+        return (0..n).into_par_iter().map(f).collect();
+    }
+    (0..n).map(f).collect()
+}
+
+fn check_inputs(plan: &Plan, inputs: &[Packet]) -> Result<usize> {
+    ensure!(
+        inputs.len() == plan.n_inputs,
+        "plan expects {} inputs, got {}",
+        plan.n_inputs,
+        inputs.len()
+    );
+    let w = inputs.first().map_or(0, |x| x.len());
+    ensure!(
+        inputs.iter().all(|x| x.len() == w),
+        "ragged input widths"
+    );
+    Ok(w)
+}
+
+/// Evaluate one slot's recorded lincomb against fresh inputs.
+fn materialize<F: Field>(plan: &Plan, f: &F, inputs: &[Packet], w: usize, slot: usize) -> Packet {
+    if slot < plan.n_inputs {
+        return inputs[slot].clone();
+    }
+    let terms: Vec<(u64, &[u64])> = plan
+        .lincomb(slot)
+        .iter()
+        .map(|&(c, s)| (c, inputs[s].as_slice()))
+        .collect();
+    let mut acc = pkt_zero(w);
+    f.lincomb_into(&mut acc, &terms);
+    acc
+}
+
+/// Replay the plan's outputs for new payload data (see module docs).
+pub fn replay<F: Field>(plan: &Plan, f: &F, inputs: &[Packet]) -> Result<Replay> {
+    let w = check_inputs(plan, inputs)?;
+    let targets: Vec<(usize, usize)> = plan
+        .output_slots()
+        .iter()
+        .map(|(&pid, &slot)| (pid, slot))
+        .collect();
+    let packets = par_map_indexed(targets.len(), |i| {
+        materialize(plan, f, inputs, w, targets[i].1)
+    });
+    let outputs: Outputs = targets
+        .iter()
+        .map(|&(pid, _)| pid)
+        .zip(packets)
+        .collect();
+    Ok(Replay {
+        outputs,
+        report: plan.report(w),
+    })
+}
+
+/// Replay every arena slot round by round, with the wire trace.
+pub fn replay_full<F: Field>(plan: &Plan, f: &F, inputs: &[Packet]) -> Result<WireReplay> {
+    let w = check_inputs(plan, inputs)?;
+    let mut slots: Vec<Packet> = inputs.to_vec();
+    slots.reserve(plan.n_slots() - plan.n_inputs);
+    let mut trace = Vec::new();
+    for (t, round) in plan.rounds().iter().enumerate() {
+        let (lo, hi) = round.new_slots;
+        // The fresh ops of one round are mutually independent.
+        slots.extend(par_map_indexed(hi - lo, |i| {
+            materialize(plan, f, inputs, w, lo + i)
+        }));
+        for s in &round.sends {
+            trace.push(TraceEvent {
+                round: t as u64 + 1,
+                src: s.src,
+                dst: s.dst,
+                elems: (s.slots.len() * w) as u64,
+            });
+        }
+    }
+    // Trailing output-only slots (final local combines).
+    let lo = slots.len();
+    let hi = plan.n_slots();
+    slots.extend(par_map_indexed(hi - lo, |i| {
+        materialize(plan, f, inputs, w, lo + i)
+    }));
+    let outputs: Outputs = plan
+        .output_slots()
+        .iter()
+        .map(|(&pid, &slot)| (pid, slots[slot].clone()))
+        .collect();
+    Ok(WireReplay {
+        slots,
+        outputs,
+        report: plan.report(w),
+        trace,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::PrepareShoot;
+    use crate::gf::{GfPrime, Mat};
+    use crate::net::{plan::compile, run, Collective, Sim};
+    use std::sync::Arc;
+
+    #[test]
+    fn replay_matches_live_run_bit_for_bit() {
+        let f = GfPrime::default_field();
+        let (k, p, w) = (25usize, 2usize, 3usize);
+        let c = Arc::new(Mat::random(&f, k, k, 11));
+        let plan = compile(p, k, |basis| {
+            Ok(Box::new(PrepareShoot::new(
+                f,
+                (0..k).collect(),
+                p,
+                c.clone(),
+                basis,
+            )))
+        })
+        .unwrap();
+
+        let inputs: Vec<Packet> = (0..k)
+            .map(|i| (0..w).map(|j| f.elem((i * w + j) as u64 * 997 + 5)).collect())
+            .collect();
+        let mut live = PrepareShoot::new(f, (0..k).collect(), p, c.clone(), inputs.clone());
+        let mut sim = Sim::with_trace(p);
+        let live_report = run(&mut sim, &mut live).unwrap();
+
+        let rep = replay(&plan, &f, &inputs).unwrap();
+        assert_eq!(rep.outputs, live.outputs());
+        assert_eq!(rep.report, live_report);
+
+        let full = replay_full(&plan, &f, &inputs).unwrap();
+        assert_eq!(full.outputs, live.outputs());
+        assert_eq!(full.report, live_report);
+        // Wire trace identical (engine records in emission order per
+        // round; the recorder preserved it).
+        assert_eq!(full.trace, sim.trace);
+    }
+
+    #[test]
+    fn replay_rejects_wrong_shape() {
+        let f = GfPrime::default_field();
+        let c = Arc::new(Mat::random(&f, 4, 4, 1));
+        let plan = compile(1, 4, |basis| {
+            Ok(Box::new(PrepareShoot::new(
+                f,
+                (0..4).collect(),
+                1,
+                c.clone(),
+                basis,
+            )))
+        })
+        .unwrap();
+        assert!(replay(&plan, &f, &[vec![1], vec![2]]).is_err());
+        assert!(replay(&plan, &f, &[vec![1], vec![2], vec![3], vec![4, 5]]).is_err());
+    }
+}

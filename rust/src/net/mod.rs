@@ -20,16 +20,20 @@
 //! this at runtime so sequential/parallel runs can be compared
 //! bit-for-bit in one process.
 
+pub mod exec;
 pub mod model;
 pub mod noisy;
 pub mod payload;
+pub mod plan;
 pub mod sim;
 pub mod trace;
 
+pub use exec::{replay, replay_full, Replay, WireReplay};
 pub use model::CostModel;
 pub use noisy::{ErasureChannel, InnerFec, NoisyCollective};
 pub use payload::{lincomb, pkt_add, pkt_add_scaled, pkt_scale, pkt_zero, Packet, PacketBuf};
-pub use sim::{run, Collective, Msg, ProcId, Sim, SimReport};
+pub use plan::{compile, ComputeOp, Plan, PlanRecorder, RoundPlan, SendOp, SlotId};
+pub use sim::{run, Collective, Msg, Outputs, ProcId, Sim, SimReport};
 pub use trace::TraceEvent;
 
 #[cfg(feature = "parallel")]

@@ -20,11 +20,10 @@
 //! the scheduling.
 
 use super::payload::{Packet, PacketBuf};
-use super::sim::{Collective, Msg, ProcId};
+use super::sim::{Collective, Msg, Outputs, ProcId};
 use crate::codes::GrsCode;
 use crate::gf::Field;
 use crate::util::Rng;
-use std::collections::HashMap;
 
 /// Marker for an erased symbol on the wire. Channel-level only; the value
 /// is outside every supported field (fields here have order ≤ 2^31).
@@ -168,7 +167,7 @@ impl<F: Field> Collective for NoisyCollective<F> {
             .collect()
     }
 
-    fn outputs(&self) -> HashMap<ProcId, Packet> {
+    fn outputs(&self) -> Outputs {
         self.inner.outputs()
     }
 }

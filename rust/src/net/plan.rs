@@ -1,0 +1,494 @@
+//! Plan compilation: turn one live run of a [`Collective`] into a
+//! reusable, data-independent **Plan IR**.
+//!
+//! Every algorithm in the paper is *linear* and *shape-determined*: for a
+//! fixed `(code, K, R, p)` the round-by-round communication pattern
+//! (the *scheduling*) and the coefficients of every transmitted linear
+//! combination (the *coding scheme*) are identical across runs — only the
+//! payload data changes (Remark 1: message contents are never tagged on
+//! the wire because the schedule is known a priori). A [`Plan`] captures
+//! both halves once so the serving path can replay them without
+//! re-deriving any control flow (see [`crate::net::exec`]).
+//!
+//! **How compilation works.** [`compile`] builds the collective with the
+//! `K` *basis* payloads `e_0 … e_{K−1}` (unit vectors of width `K`, valid
+//! in any field) and runs it once through a [`PlanRecorder`] under the
+//! ordinary engine. Because every local operation is an element-wise
+//! linear combination with scalar coefficients, the value of any packet
+//! in that run *is* its coefficient row: packet `= Σ_k c_k·e_k` carries
+//! exactly `(c_0, …, c_{K−1})`. The recorder therefore reads off, per
+//! round, the exact `SendOp` schedule and the lincomb each transmitted
+//! packet applies to the inputs — symbolic payload tracking at the cost
+//! of one `W = K` run.
+//!
+//! **The IR.** A slot-addressed buffer arena: slots `0..K` are the
+//! inputs; every further slot is defined by one [`ComputeOp`] — a linear
+//! combination over input slots — and is first materialised in the round
+//! that first transmits it (deduplicated: a packet broadcast down a tree
+//! is one slot referenced by many [`SendOp`]s). Outputs are a
+//! `ProcId → slot` map. The IR is validated at compile time (p-port
+//! constraint, no self-messages, slot well-formedness) and its `C1`/`C2`
+//! statics are cross-checked against the recording run's [`SimReport`],
+//! so [`Plan::report`] returns the exact engine metrics for any payload
+//! width `W` without executing anything.
+//!
+//! Collectives that are *not* packet-linear (e.g. the FEC-wrapping
+//! [`NoisyCollective`](crate::net::NoisyCollective) or the sub-packet
+//! chunking [`PipelinedBroadcast`](crate::collectives::PipelinedBroadcast))
+//! change packet widths on the wire and are rejected with an error.
+
+use super::payload::Packet;
+use super::sim::{run, Collective, Msg, Outputs, ProcId, Sim, SimReport};
+use super::trace::TraceEvent;
+use anyhow::{ensure, Result};
+use std::collections::{BTreeMap, HashMap};
+
+/// Index into the plan's slot arena. Slots `0..n_inputs` are the input
+/// packets; higher slots are defined by [`ComputeOp`]s.
+pub type SlotId = usize;
+
+/// One local linear combination over the *input* slots:
+/// `slot = Σ (coeff · inputs[src])` — zero coefficients omitted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ComputeOp {
+    pub slot: SlotId,
+    pub terms: Vec<(u64, SlotId)>,
+}
+
+/// One scheduled message: the packets in `slots` travel `src → dst`
+/// through send-port `port` (ports numbered per source per round).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SendOp {
+    pub src: ProcId,
+    pub dst: ProcId,
+    pub port: u32,
+    /// Payload: one slot per packet, in wire order.
+    pub slots: Vec<SlotId>,
+}
+
+/// One synchronous round of the compiled schedule.
+#[derive(Clone, Debug)]
+pub struct RoundPlan {
+    /// Slots first materialised (and first transmitted) this round:
+    /// the half-open range `[new_slots.0, new_slots.1)`.
+    pub new_slots: (SlotId, SlotId),
+    pub sends: Vec<SendOp>,
+    /// `m_t / W` — the largest packet count of any message this round.
+    pub max_packets: u64,
+}
+
+/// A compiled, reusable schedule + coding scheme (see module docs).
+///
+/// Width-independent: a plan compiled once replays for any payload width
+/// `W` (Remark 2 — the coding matrix stays over `F_q` while payloads live
+/// in `F_q^W`), with `C2` scaling exactly by `W`.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// `K` — number of input slots (and of basis payloads at compile).
+    pub n_inputs: usize,
+    /// `p` — the port budget the schedule was compiled (and validated)
+    /// against.
+    pub ports: usize,
+    rounds: Vec<RoundPlan>,
+    /// `computes[i]` defines slot `n_inputs + i`.
+    computes: Vec<ComputeOp>,
+    /// Final packet per processor, as a slot reference.
+    outputs: BTreeMap<ProcId, SlotId>,
+    /// Fresh slots allocated for outputs that never hit the wire
+    /// (final local combines): `[output_slots.0, output_slots.1)`.
+    output_slots: (SlotId, SlotId),
+    messages: u64,
+    /// Total packets over all messages (`bandwidth / W`).
+    packets: u64,
+}
+
+impl Plan {
+    /// Total number of slots in the arena.
+    pub fn n_slots(&self) -> usize {
+        self.n_inputs + self.computes.len()
+    }
+
+    /// The compiled rounds.
+    pub fn rounds(&self) -> &[RoundPlan] {
+        &self.rounds
+    }
+
+    /// `ProcId → slot` of the final packets.
+    pub fn output_slots(&self) -> &BTreeMap<ProcId, SlotId> {
+        &self.outputs
+    }
+
+    /// The lincomb defining a non-input slot (terms over input slots).
+    pub fn lincomb(&self, slot: SlotId) -> &[(u64, SlotId)] {
+        assert!(slot >= self.n_inputs, "input slots have no lincomb");
+        &self.computes[slot - self.n_inputs].terms
+    }
+
+    /// `C1` — round count, width-independent.
+    pub fn c1(&self) -> u64 {
+        self.rounds.len() as u64
+    }
+
+    /// `C2 = Σ_t m_t` for payload width `w`.
+    pub fn c2(&self, w: u64) -> u64 {
+        self.rounds.iter().map(|r| r.max_packets * w).sum()
+    }
+
+    /// The exact [`SimReport`] a live run at payload width `w` produces —
+    /// from statics alone, nothing is executed.
+    pub fn report(&self, w: usize) -> SimReport {
+        let w = w as u64;
+        let per_round_max: Vec<u64> = self.rounds.iter().map(|r| r.max_packets * w).collect();
+        SimReport {
+            c1: self.rounds.len() as u64,
+            c2: per_round_max.iter().sum(),
+            per_round_max,
+            messages: self.messages,
+            bandwidth: self.packets * w,
+        }
+    }
+
+    /// The exact message trace a live run at payload width `w` produces
+    /// (round/src/dst/size), in round-major send order.
+    pub fn trace_events(&self, w: usize) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.messages as usize);
+        for (t, round) in self.rounds.iter().enumerate() {
+            for s in &round.sends {
+                out.push(TraceEvent {
+                    round: t as u64 + 1,
+                    src: s.src,
+                    dst: s.dst,
+                    elems: (s.slots.len() * w) as u64,
+                });
+            }
+        }
+        out
+    }
+
+    /// Structural validation: the p-port constraint per round, no
+    /// self-messages, no empty payloads, every referenced slot defined
+    /// before use, every compute term over input slots, and the stored
+    /// `C1`/`C2` statics consistent with the schedule.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.ports >= 1, "plan needs at least one port");
+        for (i, c) in self.computes.iter().enumerate() {
+            ensure!(c.slot == self.n_inputs + i, "compute op out of order");
+            for &(coeff, src) in &c.terms {
+                ensure!(src < self.n_inputs, "compute term over non-input slot");
+                ensure!(coeff != 0, "zero coefficient stored in lincomb");
+            }
+        }
+        let mut messages = 0u64;
+        let mut packets = 0u64;
+        let mut defined = self.n_inputs;
+        for (t, round) in self.rounds.iter().enumerate() {
+            let (lo, hi) = round.new_slots;
+            ensure!(lo == defined && hi >= lo, "round {t}: bad slot range");
+            defined = hi;
+            ensure!(!round.sends.is_empty(), "round {t}: no sends");
+            let mut send_used: HashMap<ProcId, usize> = HashMap::new();
+            let mut recv_used: HashMap<ProcId, usize> = HashMap::new();
+            let mut m_t = 0u64;
+            for s in &round.sends {
+                ensure!(s.src != s.dst, "round {t}: self-message at {}", s.src);
+                ensure!(!s.slots.is_empty(), "round {t}: empty payload");
+                ensure!(
+                    s.slots.iter().all(|&sl| sl < defined),
+                    "round {t}: slot used before defined"
+                );
+                ensure!((s.port as usize) < self.ports, "round {t}: port out of range");
+                let su = send_used.entry(s.src).or_default();
+                *su += 1;
+                ensure!(*su <= self.ports, "round {t}: {} exceeds send ports", s.src);
+                let ru = recv_used.entry(s.dst).or_default();
+                *ru += 1;
+                ensure!(*ru <= self.ports, "round {t}: {} exceeds recv ports", s.dst);
+                m_t = m_t.max(s.slots.len() as u64);
+                messages += 1;
+                packets += s.slots.len() as u64;
+            }
+            ensure!(m_t == round.max_packets, "round {t}: m_t mismatch");
+        }
+        let (lo, hi) = self.output_slots;
+        ensure!(lo == defined && hi == self.n_slots(), "bad output slot range");
+        ensure!(messages == self.messages, "message count mismatch");
+        ensure!(packets == self.packets, "packet count mismatch");
+        for (&pid, &slot) in &self.outputs {
+            ensure!(slot < self.n_slots(), "output of {pid} references undefined slot");
+        }
+        Ok(())
+    }
+}
+
+/// The instrumenting recorder: a transparent [`Collective`] decorator
+/// that clones every non-empty round emission (the engine counts `C1`
+/// exactly over non-empty emissions, so recorded rounds align with it).
+pub struct PlanRecorder {
+    inner: Box<dyn Collective>,
+    rounds: Vec<Vec<Msg>>,
+}
+
+impl PlanRecorder {
+    pub fn new(inner: Box<dyn Collective>) -> Self {
+        PlanRecorder {
+            inner,
+            rounds: Vec::new(),
+        }
+    }
+
+    /// The recorded per-round emissions.
+    pub fn rounds(&self) -> &[Vec<Msg>] {
+        &self.rounds
+    }
+}
+
+impl Collective for PlanRecorder {
+    fn participants(&self) -> Vec<ProcId> {
+        self.inner.participants()
+    }
+    fn is_done(&self) -> bool {
+        self.inner.is_done()
+    }
+    fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
+        let out = self.inner.step(inbox);
+        if !out.is_empty() {
+            self.rounds.push(out.clone());
+        }
+        out
+    }
+    fn outputs(&self) -> Outputs {
+        self.inner.outputs()
+    }
+}
+
+/// The `K` basis payloads `e_0 … e_{K−1}` (unit vectors of width `K`) —
+/// valid in every field, since entries are 0/1.
+pub fn basis_inputs(k: usize) -> Vec<Packet> {
+    (0..k)
+        .map(|i| {
+            let mut e = vec![0u64; k];
+            e[i] = 1;
+            e
+        })
+        .collect()
+}
+
+/// Interning state: coefficient row → slot, with input slots pre-seeded
+/// to the unit vectors.
+struct Interner {
+    n_inputs: usize,
+    seen: HashMap<Vec<u64>, SlotId>,
+    computes: Vec<ComputeOp>,
+}
+
+impl Interner {
+    fn new(n_inputs: usize) -> Self {
+        let mut seen = HashMap::with_capacity(n_inputs * 2);
+        for (i, e) in basis_inputs(n_inputs).into_iter().enumerate() {
+            seen.insert(e, i);
+        }
+        Interner {
+            n_inputs,
+            seen,
+            computes: Vec::new(),
+        }
+    }
+
+    fn intern(&mut self, row: &[u64]) -> SlotId {
+        if let Some(&slot) = self.seen.get(row) {
+            return slot;
+        }
+        let slot = self.n_inputs + self.computes.len();
+        let terms: Vec<(u64, SlotId)> = row
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c != 0)
+            .map(|(i, &c)| (c, i))
+            .collect();
+        self.computes.push(ComputeOp { slot, terms });
+        self.seen.insert(row.to_vec(), slot);
+        slot
+    }
+}
+
+/// Compile a collective into a [`Plan`]: `build` receives the `n_inputs`
+/// basis payloads and returns the collective to record (its `inputs[i]`
+/// must be the `i`-th basis packet). One live run under `Sim::new(ports)`
+/// is executed; the resulting plan is validated and its statics
+/// cross-checked against that run's report.
+pub fn compile<B>(ports: usize, n_inputs: usize, build: B) -> Result<Plan>
+where
+    B: FnOnce(Vec<Packet>) -> Result<Box<dyn Collective>>,
+{
+    ensure!(n_inputs >= 1, "plan needs at least one input");
+    let inner = build(basis_inputs(n_inputs))?;
+    let mut recorder = PlanRecorder::new(inner);
+    let mut sim = Sim::new(ports);
+    let live = run(&mut sim, &mut recorder)?;
+
+    let mut interner = Interner::new(n_inputs);
+    let mut rounds = Vec::with_capacity(recorder.rounds.len());
+    let mut messages = 0u64;
+    let mut packets = 0u64;
+    for emitted in &recorder.rounds {
+        let lo = n_inputs + interner.computes.len();
+        let mut sends = Vec::with_capacity(emitted.len());
+        let mut port_of: HashMap<ProcId, u32> = HashMap::new();
+        let mut max_packets = 0u64;
+        for msg in emitted {
+            ensure!(
+                msg.payload.width() == n_inputs,
+                "collective is not packet-linear: wire packet width {} != K = {n_inputs} \
+                 (width-changing collectives cannot be plan-compiled)",
+                msg.payload.width()
+            );
+            let slots: Vec<SlotId> = msg.payload.iter().map(|row| interner.intern(row)).collect();
+            let port = port_of.entry(msg.src).or_insert(0);
+            let send = SendOp {
+                src: msg.src,
+                dst: msg.dst,
+                port: *port,
+                slots,
+            };
+            *port += 1;
+            max_packets = max_packets.max(send.slots.len() as u64);
+            messages += 1;
+            packets += send.slots.len() as u64;
+            sends.push(send);
+        }
+        let hi = n_inputs + interner.computes.len();
+        rounds.push(RoundPlan {
+            new_slots: (lo, hi),
+            sends,
+            max_packets,
+        });
+    }
+
+    // Outputs: final local combines may create slots that never hit the
+    // wire; they land in a trailing range of the arena.
+    let out_lo = n_inputs + interner.computes.len();
+    let outputs: BTreeMap<ProcId, SlotId> = recorder
+        .outputs()
+        .iter()
+        .map(|(&pid, row)| {
+            ensure!(
+                row.len() == n_inputs,
+                "collective is not packet-linear: output width {} != K = {n_inputs}",
+                row.len()
+            );
+            Ok((pid, interner.intern(row)))
+        })
+        .collect::<Result<_>>()?;
+    let out_hi = n_inputs + interner.computes.len();
+
+    let plan = Plan {
+        n_inputs,
+        ports,
+        rounds,
+        computes: interner.computes,
+        outputs,
+        output_slots: (out_lo, out_hi),
+        messages,
+        packets,
+    };
+    plan.validate()?;
+    // Statics cross-check: the plan must predict the recording run
+    // exactly (the basis run has payload width W = K).
+    let predicted = plan.report(n_inputs);
+    ensure!(
+        predicted == live,
+        "compiled statics diverge from the live recording run:\n \
+         plan: {predicted:?}\n live: {live:?}"
+    );
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{PrepareShoot, TreeBroadcast, TreeReduce};
+    use crate::gf::{GfPrime, Mat};
+    use std::sync::Arc;
+
+    #[test]
+    fn basis_inputs_are_unit_vectors() {
+        let b = basis_inputs(3);
+        assert_eq!(b, vec![vec![1, 0, 0], vec![0, 1, 0], vec![0, 0, 1]]);
+    }
+
+    #[test]
+    fn compiled_prepare_shoot_matches_live_statics() {
+        let f = GfPrime::default_field();
+        let k = 16usize;
+        let c = Arc::new(Mat::random(&f, k, k, 7));
+        let plan = compile(1, k, |basis| {
+            Ok(Box::new(PrepareShoot::new(
+                f,
+                (0..k).collect(),
+                1,
+                c.clone(),
+                basis,
+            )))
+        })
+        .unwrap();
+        // Theorem 3 at K = 16, p = 1: C1 = 4, C2 = 6 (per unit width).
+        assert_eq!(plan.c1(), 4);
+        assert_eq!(plan.c2(1), 6);
+        assert_eq!(plan.c2(5), 30);
+        assert_eq!(plan.output_slots().len(), k);
+        plan.validate().unwrap();
+    }
+
+    #[test]
+    fn broadcast_dedups_to_one_slot() {
+        // A tree broadcast forwards one identical packet everywhere: the
+        // plan must intern a single slot (the input itself).
+        let plan = compile(1, 1, |basis| {
+            Ok(Box::new(TreeBroadcast::new(
+                (0..8).collect(),
+                1,
+                basis.into_iter().next().unwrap(),
+            )))
+        })
+        .unwrap();
+        assert_eq!(plan.n_slots(), 1, "no compute ops for a pure forward");
+        assert_eq!(plan.c1(), 3);
+        assert!(plan.output_slots().values().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn reduce_compiles_to_sum_lincomb() {
+        let f = GfPrime::default_field();
+        let n = 5usize;
+        let plan = compile(1, n, |basis| {
+            Ok(Box::new(TreeReduce::new(f, (0..n).collect(), 1, basis)))
+        })
+        .unwrap();
+        // Root output = Σ_i e_i: one slot whose lincomb has n unit terms.
+        let &root_slot = plan.output_slots().get(&0).unwrap();
+        assert!(root_slot >= plan.n_inputs);
+        let mut terms = plan.lincomb(root_slot).to_vec();
+        terms.sort_by_key(|&(_, s)| s);
+        assert_eq!(terms, (0..n).map(|i| (1u64, i)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn degenerate_single_processor_plan() {
+        let f = GfPrime::default_field();
+        let c = Arc::new(Mat::from_fn(1, 1, |_, _| 42));
+        let plan = compile(1, 1, |basis| {
+            Ok(Box::new(PrepareShoot::new(
+                f,
+                vec![0],
+                1,
+                c.clone(),
+                basis,
+            )))
+        })
+        .unwrap();
+        assert_eq!(plan.c1(), 0);
+        assert_eq!(plan.c2(9), 0);
+        let &slot = plan.output_slots().get(&0).unwrap();
+        assert_eq!(plan.lincomb(slot), &[(42, 0)]);
+    }
+}

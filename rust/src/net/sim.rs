@@ -23,10 +23,17 @@
 use super::payload::{Packet, PacketBuf};
 use super::trace::TraceEvent;
 use anyhow::{bail, Result};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Global processor identifier.
 pub type ProcId = usize;
+
+/// Per-processor result packets of a completed collective.
+///
+/// A `BTreeMap` (not a `HashMap`) so iteration order is deterministic:
+/// callers that fold or serialize outputs get the same sequence on every
+/// run, and plan compilation can hash output coefficient rows stably.
+pub type Outputs = BTreeMap<ProcId, Packet>;
 
 /// One message: a flat buffer of packets from `src` to `dst` through one
 /// port.
@@ -72,8 +79,9 @@ pub trait Collective: Send {
     /// sends. An empty return with `is_done()` terminates the run.
     fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg>;
 
-    /// Per-processor result packets (valid once `is_done()`).
-    fn outputs(&self) -> HashMap<ProcId, Packet>;
+    /// Per-processor result packets (valid once `is_done()`), in
+    /// deterministic (`ProcId`-sorted) iteration order.
+    fn outputs(&self) -> Outputs;
 }
 
 /// Engine configuration + trace storage.
@@ -316,7 +324,7 @@ mod tests {
             self.done_round = true;
             out
         }
-        fn outputs(&self) -> HashMap<ProcId, Packet> {
+        fn outputs(&self) -> Outputs {
             (0..self.n).map(|i| (i, self.data.clone())).collect()
         }
     }
@@ -351,8 +359,8 @@ mod tests {
             fn step(&mut self, _: Vec<Msg>) -> Vec<Msg> {
                 vec![Msg::single(0, 1, vec![1]), Msg::single(0, 2, vec![1])]
             }
-            fn outputs(&self) -> HashMap<ProcId, Packet> {
-                HashMap::new()
+            fn outputs(&self) -> Outputs {
+                Outputs::new()
             }
         }
         let mut sim = Sim::new(1);
@@ -373,8 +381,8 @@ mod tests {
             fn step(&mut self, _: Vec<Msg>) -> Vec<Msg> {
                 vec![Msg::single(0, 0, vec![1])]
             }
-            fn outputs(&self) -> HashMap<ProcId, Packet> {
-                HashMap::new()
+            fn outputs(&self) -> Outputs {
+                Outputs::new()
             }
         }
         let err = run(&mut Sim::new(1), &mut SelfSend).unwrap_err();
@@ -394,8 +402,8 @@ mod tests {
             fn step(&mut self, _: Vec<Msg>) -> Vec<Msg> {
                 vec![]
             }
-            fn outputs(&self) -> HashMap<ProcId, Packet> {
-                HashMap::new()
+            fn outputs(&self) -> Outputs {
+                Outputs::new()
             }
         }
         assert!(run(&mut Sim::new(1), &mut Stall).is_err());
@@ -430,8 +438,8 @@ mod tests {
                     vec![]
                 }
             }
-            fn outputs(&self) -> HashMap<ProcId, Packet> {
-                HashMap::new()
+            fn outputs(&self) -> Outputs {
+                Outputs::new()
             }
         }
         let mut c = Cross {

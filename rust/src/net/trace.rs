@@ -1,8 +1,12 @@
-//! Message traces — who sent how much to whom, per round.
+//! Message traces — who sent how much to whom, per round — and plan
+//! serialization for inspection.
 //!
 //! The figure tests (`rust/tests/figures.rs`) assert the exact
 //! communication patterns of the paper's worked examples (Figs. 2–7, 9)
-//! against these traces.
+//! against these traces. [`plan_json`] dumps a compiled
+//! [`Plan`](crate::net::plan::Plan) — schedule, ports, slot lincombs and
+//! statics — as JSON (hand-rolled; the offline build has no serde) so
+//! compiled schedules can be diffed, archived, and eyeballed.
 
 /// One message observed by the engine.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -36,6 +40,63 @@ pub fn edges_of_round(trace: &[TraceEvent], round: u64) -> Vec<(usize, usize)> {
     v
 }
 
+/// Serialize a compiled plan as JSON: shape + statics, the per-round
+/// `SendOp` schedule, every non-input slot's lincomb, and the output map.
+pub fn plan_json(plan: &crate::net::plan::Plan) -> String {
+    let mut rounds = Vec::with_capacity(plan.rounds().len());
+    for (t, round) in plan.rounds().iter().enumerate() {
+        let sends: Vec<String> = round
+            .sends
+            .iter()
+            .map(|s| {
+                let slots: Vec<String> = s.slots.iter().map(|x| x.to_string()).collect();
+                format!(
+                    "{{\"src\":{},\"dst\":{},\"port\":{},\"slots\":[{}]}}",
+                    s.src,
+                    s.dst,
+                    s.port,
+                    slots.join(",")
+                )
+            })
+            .collect();
+        rounds.push(format!(
+            "{{\"round\":{},\"max_packets\":{},\"sends\":[{}]}}",
+            t + 1,
+            round.max_packets,
+            sends.join(",")
+        ));
+    }
+    let computes: Vec<String> = (plan.n_inputs..plan.n_slots())
+        .map(|slot| {
+            let terms: Vec<String> = plan
+                .lincomb(slot)
+                .iter()
+                .map(|&(c, s)| format!("[{c},{s}]"))
+                .collect();
+            format!("{{\"slot\":{slot},\"terms\":[{}]}}", terms.join(","))
+        })
+        .collect();
+    let outputs: Vec<String> = plan
+        .output_slots()
+        .iter()
+        .map(|(pid, slot)| format!("\"{pid}\":{slot}"))
+        .collect();
+    format!(
+        concat!(
+            "{{\"n_inputs\":{},\"ports\":{},\"c1\":{},\"c2_per_width\":{},",
+            "\"slots\":{},\"rounds\":[{}],\"computes\":[{}],\"outputs\":{{{}}}}}"
+        ),
+        plan.n_inputs,
+        plan.ports,
+        plan.c1(),
+        plan.c2(1),
+        plan.n_slots(),
+        rounds.join(","),
+        computes.join(","),
+        outputs.join(",")
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -66,5 +127,24 @@ mod tests {
         assert_eq!(g.len(), 2);
         assert_eq!(g[0].len(), 2);
         assert_eq!(edges_of_round(&t, 1), vec![(0, 1), (2, 0)]);
+    }
+
+    #[test]
+    fn plan_json_is_wellformed() {
+        let f = crate::gf::GfPrime::default_field();
+        let plan = crate::net::plan::compile(1, 4, |basis| {
+            Ok(Box::new(crate::collectives::TreeReduce::new(
+                f,
+                (0..4).collect(),
+                1,
+                basis,
+            )))
+        })
+        .unwrap();
+        let j = plan_json(&plan);
+        assert!(j.starts_with('{') && j.ends_with('}'), "{j}");
+        assert!(j.contains("\"c1\":2"), "{j}");
+        assert!(j.contains("\"rounds\":[{\"round\":1"), "{j}");
+        assert!(j.contains("\"outputs\":{\"0\":"), "{j}");
     }
 }

@@ -79,6 +79,23 @@ impl std::fmt::Display for BenchStats {
     }
 }
 
+/// True when `DCE_BENCH_SMOKE` is set (and not `"0"`): bench binaries run
+/// in *smoke mode* — one iteration per benchmark, timing assertions
+/// skipped. CI uses this so bench targets are executed (and can't
+/// silently rot) without flaking on shared-runner timing noise.
+pub fn bench_smoke() -> bool {
+    std::env::var_os("DCE_BENCH_SMOKE").is_some_and(|v| v != "0")
+}
+
+/// `iters`, or 1 in smoke mode (see [`bench_smoke`]).
+pub fn bench_iters(iters: usize) -> usize {
+    if bench_smoke() {
+        1
+    } else {
+        iters
+    }
+}
+
 /// Minimal criterion replacement: warm up, then time `iters` executions of
 /// `body`, reporting median/mean/min/max. `body` receives the iteration
 /// index and should return something opaque to keep the optimiser honest.

@@ -1,0 +1,281 @@
+//! Plan compile/replay conformance: for every A2A variant, over both
+//! field families, across degenerate shapes, a compiled plan replayed
+//! against fresh payloads must be **bit-identical** to live `Sim::run`
+//! stepping — same outputs, same `(C1, C2)` (indeed the same full
+//! [`SimReport`]), same wire trace.
+//!
+//! Property-style (seeded random sweeps, no proptest offline): each
+//! shape's plan is compiled once and replayed against several random
+//! payload sets, mirroring the cache's repeated-same-shape serving
+//! pattern.
+
+use dce::codes::{structured::disjoint_family, StructuredPoints};
+use dce::collectives::{CauchyA2A, DftA2A, DrawLoose, MultiReduce, PrepareShoot};
+use dce::coordinator::{EncodeJob, JobConfig, PlanCache};
+use dce::framework::{A2aAlgo, AlgoRequest, SystematicEncode};
+use dce::gf::{Field, Gf2e, GfPrime, Mat};
+use dce::net::{exec, plan, run, Collective, Packet, Sim};
+use dce::util::{ipow, Rng};
+use std::sync::Arc;
+
+fn rand_inputs<F: Field>(f: &F, k: usize, w: usize, rng: &mut Rng) -> Vec<Packet> {
+    (0..k)
+        .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+        .collect()
+}
+
+/// Compile the collective once, then check several fresh payload sets:
+/// replay must match live stepping bit-for-bit (outputs + report +
+/// trace), for both the output-only and the full-wire executor.
+fn assert_replay_matches<F, B>(tag: &str, f: &F, ports: usize, k: usize, w: usize, build: B)
+where
+    F: Field,
+    B: Fn(Vec<Packet>) -> Box<dyn Collective>,
+{
+    let compiled = plan::compile(ports, k, |basis| Ok(build(basis))).unwrap();
+    let mut rng = Rng::new(k as u64 * 1009 + ports as u64 * 31 + w as u64);
+    for trial in 0..3 {
+        let inputs = rand_inputs(f, k, w, &mut rng);
+        let mut live = build(inputs.clone());
+        let mut sim = Sim::with_trace(ports);
+        let live_report = run(&mut sim, live.as_mut()).unwrap();
+        let live_outputs = live.outputs();
+
+        let rep = exec::replay(&compiled, f, &inputs).unwrap();
+        assert_eq!(rep.outputs, live_outputs, "{tag} trial {trial}: outputs");
+        assert_eq!(rep.report, live_report, "{tag} trial {trial}: report");
+        assert_eq!(
+            (rep.report.c1, rep.report.c2),
+            (live_report.c1, live_report.c2),
+            "{tag} trial {trial}: (C1, C2)"
+        );
+
+        let full = exec::replay_full(&compiled, f, &inputs).unwrap();
+        assert_eq!(full.outputs, live_outputs, "{tag} trial {trial}: full outputs");
+        assert_eq!(full.trace, sim.trace, "{tag} trial {trial}: wire trace");
+    }
+}
+
+#[test]
+fn prepare_shoot_prime_field_including_degenerate() {
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xA11);
+    for (k, p, w) in [
+        (1usize, 1usize, 1usize), // fully degenerate
+        (2, 1, 1),
+        (5, 1, 1),
+        (16, 1, 4),
+        (25, 2, 3),
+        (10, 2, 1),
+        (100, 4, 2),
+    ] {
+        let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+        let c2 = c.clone();
+        assert_replay_matches(&format!("ps K={k} p={p} w={w}"), &f, p, k, w, move |ins| {
+            Box::new(PrepareShoot::new(f, (0..k).collect(), p, c2.clone(), ins))
+        });
+    }
+}
+
+#[test]
+fn prepare_shoot_gf2e_including_degenerate() {
+    let f = Gf2e::new(8).unwrap();
+    let mut rng = Rng::new(0xA12);
+    for (k, p, w) in [(1usize, 1usize, 1usize), (13, 2, 3), (16, 1, 2), (40, 3, 1)] {
+        let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+        let ff = f.clone();
+        assert_replay_matches(&format!("ps/gf2e K={k} p={p} w={w}"), &f, p, k, w, move |ins| {
+            Box::new(PrepareShoot::new(
+                ff.clone(),
+                (0..k).collect(),
+                p,
+                c.clone(),
+                ins,
+            ))
+        });
+    }
+}
+
+#[test]
+fn multireduce_baseline_replays_identically() {
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xA13);
+    for (k, p, w) in [(16usize, 1usize, 1usize), (27, 2, 2), (1, 1, 1)] {
+        let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+        let c2 = c.clone();
+        assert_replay_matches(&format!("mr K={k} p={p} w={w}"), &f, p, k, w, move |ins| {
+            Box::new(MultiReduce::new(f, (0..k).collect(), p, c2.clone(), ins))
+        });
+    }
+}
+
+#[test]
+fn dft_a2a_both_fields() {
+    let f = GfPrime::default_field();
+    for (p_base, h, p, w) in [(2u64, 3u32, 1usize, 1usize), (4, 2, 3, 2), (2, 4, 1, 3)] {
+        let k = ipow(p_base, h) as usize;
+        assert_replay_matches(
+            &format!("dft P={p_base} H={h} p={p}"),
+            &f,
+            p,
+            k,
+            w,
+            move |ins| {
+                Box::new(DftA2A::new(f, (0..k).collect(), p, p_base, h, ins, false).unwrap())
+            },
+        );
+    }
+    // GF(256): q−1 = 255 = 3·5·17 — prime radixes only (H = 1 each).
+    let f = Gf2e::new(8).unwrap();
+    for (p_base, p, w) in [(3u64, 2usize, 2usize), (5, 2, 1), (17, 2, 2)] {
+        let k = p_base as usize;
+        let ff = f.clone();
+        assert_replay_matches(
+            &format!("dft/gf2e P={p_base} p={p}"),
+            &f,
+            p,
+            k,
+            w,
+            move |ins| {
+                Box::new(
+                    DftA2A::new(ff.clone(), (0..k).collect(), p, p_base, 1, ins, false).unwrap(),
+                )
+            },
+        );
+    }
+}
+
+#[test]
+fn draw_loose_both_fields_and_inverse() {
+    let f = GfPrime::default_field();
+    for (n, p_base, p, w, invert) in [
+        (8usize, 2u64, 1usize, 1usize, false),
+        (24, 2, 1, 2, false),
+        (12, 2, 3, 1, false),
+        (24, 2, 1, 1, true),
+        (5, 2, 1, 2, false), // H = 0 fallback (Remark 8)
+    ] {
+        let hmax = StructuredPoints::max_h(&f, n as u64, p_base);
+        let m = n / ipow(p_base, hmax) as usize;
+        let sp = StructuredPoints::new(&f, n, p_base, (0..m as u64).collect()).unwrap();
+        assert_replay_matches(
+            &format!("dl n={n} P={p_base} p={p} inv={invert}"),
+            &f,
+            p,
+            n,
+            w,
+            move |ins| {
+                Box::new(DrawLoose::new(f, (0..n).collect(), p, &sp, ins, invert).unwrap())
+            },
+        );
+    }
+    // GF(256), radix 3: M = 2, Z = 3.
+    let f = Gf2e::new(8).unwrap();
+    let n = 6usize;
+    let sp = StructuredPoints::new(&f, n, 3, vec![0, 1]).unwrap();
+    let ff = f.clone();
+    assert_replay_matches("dl/gf2e n=6", &f, 1, n, 2, move |ins| {
+        Box::new(DrawLoose::new(ff.clone(), (0..n).collect(), 1, &sp, ins, false).unwrap())
+    });
+}
+
+#[test]
+fn cauchy_a2a_both_fields() {
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xCA2);
+    for (n, p, w) in [(8usize, 1usize, 1usize), (16, 2, 2)] {
+        let fam = disjoint_family(&f, n, 2, 2).unwrap();
+        let pre: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+        let post: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+        assert_replay_matches(&format!("cauchy n={n} p={p}"), &f, p, n, w, move |ins| {
+            Box::new(
+                CauchyA2A::new(
+                    f,
+                    (0..n).collect(),
+                    p,
+                    &fam[0],
+                    &fam[1],
+                    pre.clone(),
+                    post.clone(),
+                    ins,
+                )
+                .unwrap(),
+            )
+        });
+    }
+    let f = Gf2e::new(8).unwrap();
+    let n = 6usize;
+    let fam = disjoint_family(&f, n, 3, 2).unwrap();
+    let pre: Vec<u64> = (0..n).map(|_| rng.range(1, 256)).collect();
+    let post: Vec<u64> = (0..n).map(|_| rng.range(1, 256)).collect();
+    let ff = f.clone();
+    assert_replay_matches("cauchy/gf2e n=6", &f, 1, n, 2, move |ins| {
+        Box::new(
+            CauchyA2A::new(
+                ff.clone(),
+                (0..n).collect(),
+                1,
+                &fam[0],
+                &fam[1],
+                pre.clone(),
+                post.clone(),
+                ins,
+            )
+            .unwrap(),
+        )
+    });
+}
+
+#[test]
+fn systematic_framework_degenerate_shapes() {
+    // The framework around the A2As, at the degenerate corners the
+    // satellite names: K=1, R=1, p=1, W=1 (and small mixes).
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xDE6);
+    for (k, r, p, w) in [
+        (1usize, 1usize, 1usize, 1usize),
+        (4, 1, 1, 1),
+        (1, 4, 1, 1),
+        (1, 1, 1, 3),
+        (2, 2, 1, 1),
+        (12, 4, 2, 2),
+        (4, 12, 2, 2),
+    ] {
+        let a = Arc::new(Mat::random(&f, k, r, rng.next_u64()));
+        let a2 = a.clone();
+        assert_replay_matches(
+            &format!("sys K={k} R={r} p={p} w={w}"),
+            &f,
+            p,
+            k,
+            w,
+            move |ins| {
+                Box::new(SystematicEncode::new(f, a2.clone(), ins, p, A2aAlgo::Universal).unwrap())
+            },
+        );
+    }
+}
+
+#[test]
+fn framework_compile_plan_replays_rs_specific() {
+    // The full coordinator-facing compile path on the §VI specific
+    // algorithm, checked against a live EncodeJob run per width.
+    let cache = PlanCache::new();
+    for w in [1usize, 4] {
+        let cfg = JobConfig {
+            k: 24,
+            r: 8,
+            w,
+            algorithm: AlgoRequest::RsSpecific,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg).unwrap();
+        let live = job.run().unwrap();
+        let cached = job.run_cached(&cache).unwrap();
+        assert_eq!(cached.sim, live.sim, "w={w}");
+        assert_eq!(cached.verified, Some(true), "w={w}");
+    }
+    // Width changes do not re-compile: one plan in the cache.
+    assert_eq!(cache.len(), 1);
+    assert_eq!(cache.stats(), (1, 1));
+}
