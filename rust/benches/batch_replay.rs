@@ -1,0 +1,229 @@
+//! Bench: **batched columnar replay vs looped single-job replay** — the
+//! throughput win of serving micro-batches through one
+//! `OutputMatrix · arena` gemm pass.
+//!
+//! Scenario: a service holds `B` same-shape, same-width encode jobs
+//! (the micro-batching queue of `EncodeService::start_replay`). The
+//! baseline replays the *same optimized plan* one job at a time
+//! (`replay_opt`); the batched path packs the jobs into one `K × (W·B)`
+//! columnar arena and evaluates every output row once across all of
+//! them (`replay_batch`). Small per-job widths are exactly the
+//! micro-batch regime — tiny payloads at high request rates, where
+//! per-coefficient fixed costs (term setup, reduction bookkeeping,
+//! per-job allocation) rival the element work itself and amortize over
+//! `W·B` columns instead of `W`.
+//!
+//! Acceptance targets, asserted below:
+//! * `replay_batch` at `B ≥ 16` reaches ≥ 2× per-job throughput over
+//!   the looped single-job baseline (timing assertion skipped under
+//!   `DCE_BENCH_SMOKE=1`, where everything runs once);
+//! * optimized plans report **strictly fewer live slots** than raw
+//!   plans for every A2A variant at `N ≥ 64` (always asserted).
+//!
+//! Machine-readable results land in `BENCH_batch.json` at the repo
+//! root, so the perf trajectory is recorded run over run.
+
+use dce::codes::{structured::disjoint_family, StructuredPoints};
+use dce::collectives::{CauchyA2A, DftA2A, DrawLoose, PrepareShoot};
+use dce::framework::{compile_plan, AlgoRequest};
+use dce::gf::{Field, GfPrime, Mat};
+use dce::net::{exec, opt, plan, Collective, Packet};
+use dce::util::{bench, bench_iters, bench_smoke, ipow, Rng};
+use std::sync::Arc;
+
+fn main() {
+    let f = GfPrime::default_field();
+    let (k, r, w, ports) = (64usize, 16usize, 2usize, 2usize);
+    let b = 32usize; // acceptance target is stated at B >= 16
+    let iters = bench_iters(30);
+
+    let a = Arc::new(Mat::random(&f, k, r, 7));
+    let compiled = compile_plan(&f, None, Some(a), ports, w, AlgoRequest::Universal, None)
+        .expect("compile universal plan");
+    let optimized = &compiled.opt;
+    println!(
+        "## batched columnar replay (K={k} R={r} W={w} p={ports}, B={b}, {iters} rounds)"
+    );
+    println!(
+        "optimizer: {} -> {} live slots ({} lincombs eliminated)",
+        optimized.stats.slots_before,
+        optimized.stats.slots_after,
+        optimized.stats.lincombs_eliminated()
+    );
+
+    let mut rng = Rng::new(41);
+    let jobs: Vec<Vec<Packet>> = (0..b)
+        .map(|_| {
+            (0..k)
+                .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                .collect()
+        })
+        .collect();
+    let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
+
+    // Correctness first: batch ≡ per-job singles, bit for bit.
+    let batched = exec::replay_batch(optimized, &f, &refs).unwrap();
+    for (j, x) in jobs.iter().enumerate() {
+        let single = exec::replay_opt(optimized, &f, x).unwrap();
+        assert_eq!(batched[j].outputs, single.outputs, "job {j}: outputs");
+        assert_eq!(batched[j].report, single.report, "job {j}: report");
+    }
+
+    let singles = bench("looped replay_opt (B jobs, one at a time)", iters, |_| {
+        let mut served = 0usize;
+        for x in &jobs {
+            served += exec::replay_opt(optimized, &f, x).unwrap().outputs.len();
+        }
+        served
+    });
+    let batch = bench("replay_batch (one columnar pass)", iters, |_| {
+        exec::replay_batch(optimized, &f, &refs).unwrap().len()
+    });
+    println!("{singles}");
+    println!("{batch}");
+
+    let singles_per_job_us = singles.median.as_secs_f64() * 1e6 / b as f64;
+    let batch_per_job_us = batch.median.as_secs_f64() * 1e6 / b as f64;
+    let speedup = singles.median.as_secs_f64() / batch.median.as_secs_f64();
+    println!(
+        "per-job: singles {singles_per_job_us:.2}us  batch {batch_per_job_us:.2}us  \
+         speedup {speedup:.2}x (acceptance target >= 2x at B >= 16)"
+    );
+
+    // Live-slot reduction across every A2A variant at N = 64.
+    let variant_stats = a2a_variant_stats(&f, 64);
+    for (name, stats) in &variant_stats {
+        println!(
+            "{name:<12} N=64: {} -> {} live slots ({} dead, {} CSE)",
+            stats.slots_before, stats.slots_after, stats.dead_lincombs, stats.cse_merged
+        );
+        assert!(
+            stats.slots_after < stats.slots_before,
+            "{name}: optimized plan must have strictly fewer live slots, got {stats:?}"
+        );
+    }
+
+    write_json(k, r, w, ports, b, singles_per_job_us, batch_per_job_us, speedup, &variant_stats);
+
+    if bench_smoke() {
+        println!("(smoke mode: timing assertion skipped)");
+    } else {
+        assert!(
+            speedup >= 2.0,
+            "replay_batch must reach >= 2x per-job throughput over looped \
+             single-job replay, got {speedup:.2}x"
+        );
+    }
+    println!("\nbatch_replay bench complete");
+}
+
+/// Compile each A2A variant at `N = n` and report its optimizer stats.
+fn a2a_variant_stats(f: &GfPrime, n: usize) -> Vec<(&'static str, opt::OptStats)> {
+    let f = *f;
+    let mut rng = Rng::new(0xBE);
+    let mut out = Vec::new();
+
+    let c = Arc::new(Mat::random(&f, n, n, rng.next_u64()));
+    out.push((
+        "universal",
+        stats_of(n, |basis| {
+            Box::new(PrepareShoot::new(f, (0..n).collect(), 1, c.clone(), basis))
+        }),
+    ));
+    out.push((
+        "dft",
+        stats_of(n, |basis| {
+            Box::new(DftA2A::new(f, (0..n).collect(), 1, 2, 6, basis, false).unwrap())
+        }),
+    ));
+    let hmax = StructuredPoints::max_h(&f, n as u64, 2);
+    let m = n / ipow(2, hmax) as usize;
+    let sp = StructuredPoints::new(&f, n, 2, (0..m as u64).collect()).unwrap();
+    out.push((
+        "vandermonde",
+        stats_of(n, |basis| {
+            Box::new(DrawLoose::new(f, (0..n).collect(), 1, &sp, basis, false).unwrap())
+        }),
+    ));
+    let fam = disjoint_family(&f, n, 2, 2).unwrap();
+    let pre: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+    let post: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+    out.push((
+        "cauchy",
+        stats_of(n, |basis| {
+            Box::new(
+                CauchyA2A::new(
+                    f,
+                    (0..n).collect(),
+                    1,
+                    &fam[0],
+                    &fam[1],
+                    pre.clone(),
+                    post.clone(),
+                    basis,
+                )
+                .unwrap(),
+            )
+        }),
+    ));
+    out
+}
+
+fn stats_of(n: usize, build: impl Fn(Vec<Packet>) -> Box<dyn Collective>) -> opt::OptStats {
+    let compiled = plan::compile(1, n, |basis| Ok(build(basis))).unwrap();
+    opt::optimize(&compiled).stats
+}
+
+/// Emit `BENCH_batch.json` at the repo root (manifest dir's parent).
+#[allow(clippy::too_many_arguments)]
+fn write_json(
+    k: usize,
+    r: usize,
+    w: usize,
+    ports: usize,
+    b: usize,
+    singles_per_job_us: f64,
+    batch_per_job_us: f64,
+    speedup: f64,
+    variants: &[(&'static str, opt::OptStats)],
+) {
+    let variant_json: Vec<String> = variants
+        .iter()
+        .map(|(name, s)| {
+            format!(
+                concat!(
+                    "{{\"name\":\"{}\",\"slots_before\":{},\"slots_after\":{},",
+                    "\"dead_lincombs\":{},\"cse_merged\":{}}}"
+                ),
+                name, s.slots_before, s.slots_after, s.dead_lincombs, s.cse_merged
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"batch_replay\",\"smoke\":{},",
+            "\"shape\":{{\"k\":{},\"r\":{},\"w\":{},\"ports\":{}}},\"batch\":{},",
+            "\"singles_us_per_job\":{:.3},\"batch_us_per_job\":{:.3},",
+            "\"speedup\":{:.3},\"a2a_variants_n64\":[{}]}}"
+        ),
+        bench_smoke(),
+        k,
+        r,
+        w,
+        ports,
+        b,
+        singles_per_job_us,
+        batch_per_job_us,
+        speedup,
+        variant_json.join(",")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("manifest dir has a parent")
+        .join("BENCH_batch.json");
+    // Fail loudly: a missing BENCH_batch.json silently breaks the
+    // "perf trajectory is recorded" contract this bench exists for.
+    std::fs::write(&path, format!("{json}\n"))
+        .unwrap_or_else(|e| panic!("could not write {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+}

@@ -15,7 +15,7 @@ use super::verify;
 use crate::codes::GrsCode;
 use crate::framework::{systematic::Layout, CompiledPlan, PlanChoice, PlannedJob};
 use crate::gf::{AnyField, Field, Mat};
-use crate::net::{run, Packet, Sim, SimReport};
+use crate::net::{run, Outputs, Packet, Sim, SimReport};
 use crate::util::Rng;
 use std::sync::{Arc, OnceLock};
 use std::time::Instant;
@@ -239,15 +239,39 @@ impl EncodeJob {
     }
 
     /// Replay-encode arbitrary payload rows (any width) through the
-    /// shape's cached plan — the serving-path hot loop: no planning, no
-    /// round stepping, no routing; just the recorded output lincombs.
+    /// shape's cached *optimized* plan — the serving-path hot loop: no
+    /// planning, no round stepping, no routing; just the flattened
+    /// output rows (`net::exec::replay_opt`), bit-identical to raw-plan
+    /// replay and to live stepping.
     pub fn encode_cached(&self, cache: &PlanCache, x: &[Packet]) -> anyhow::Result<Vec<Packet>> {
         anyhow::ensure!(x.len() == self.config.k, "need K = {} rows", self.config.k);
         let compiled = self.compiled(cache)?;
-        let replay = crate::net::exec::replay(&compiled.plan, &self.field, x)?;
-        Ok((0..compiled.layout.r)
-            .map(|r| replay.outputs[&compiled.layout.sink(r)].clone())
-            .collect())
+        let mut replay = crate::net::exec::replay_opt(&compiled.opt, &self.field, x)?;
+        take_sinks(&compiled.layout, &mut replay.outputs)
+    }
+
+    /// Batch-encode `B` same-width payload sets in **one columnar pass**
+    /// over the shape's cached optimized plan
+    /// (`net::exec::replay_batch`) — the micro-batching service path.
+    /// Returns the `R` coded rows per job, in job order, bit-identical
+    /// to [`encode_cached`](EncodeJob::encode_cached) per job.
+    pub fn encode_batch_cached(
+        &self,
+        cache: &PlanCache,
+        jobs: &[&[Packet]],
+    ) -> anyhow::Result<Vec<Vec<Packet>>> {
+        // A batch of one skips the arena pack/unpack entirely — the
+        // common low-load case when the micro-batch window expires with
+        // a single request.
+        if let [x] = jobs {
+            return Ok(vec![self.encode_cached(cache, x)?]);
+        }
+        let compiled = self.compiled(cache)?;
+        let replays = crate::net::exec::replay_batch(&compiled.opt, &self.field, jobs)?;
+        replays
+            .into_iter()
+            .map(|mut rep| take_sinks(&compiled.layout, &mut rep.outputs))
+            .collect()
     }
 
     /// Plan-cache execution path: compile-or-fetch, replay, verify.
@@ -257,10 +281,8 @@ impl EncodeJob {
     pub fn run_cached(&self, cache: &PlanCache) -> anyhow::Result<JobReport> {
         let t0 = Instant::now();
         let compiled = self.compiled(cache)?;
-        let replay = crate::net::exec::replay(&compiled.plan, &self.field, &self.inputs)?;
-        let coded: Vec<Packet> = (0..compiled.layout.r)
-            .map(|r| replay.outputs[&compiled.layout.sink(r)].clone())
-            .collect();
+        let mut replay = crate::net::exec::replay_opt(&compiled.opt, &self.field, &self.inputs)?;
+        let coded = take_sinks(&compiled.layout, &mut replay.outputs)?;
         let verified = self.verify_coded(&coded)?;
         let cost = replay.report.cost(&self.config.cost_model()?);
         Ok(JobReport {
@@ -272,6 +294,20 @@ impl EncodeJob {
             wall: t0.elapsed(),
         })
     }
+}
+
+/// Pull the `R` sink packets out of a replay's output map, in sink
+/// order — the one sink-extraction path shared by every cached
+/// execution route.
+fn take_sinks(layout: &Layout, outputs: &mut Outputs) -> anyhow::Result<Vec<Packet>> {
+    (0..layout.r)
+        .map(|r| {
+            let pid = layout.sink(r);
+            outputs
+                .remove(&pid)
+                .ok_or_else(|| anyhow::anyhow!("replay missing sink {pid}"))
+        })
+        .collect()
 }
 
 /// Build a structured GRS code, preferring the largest usable radix.
@@ -391,6 +427,37 @@ mod tests {
         }
         // One shape, one compile — widths share the plan.
         assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().1, 1);
+    }
+
+    #[test]
+    fn batch_encode_matches_per_job_encode_bit_for_bit() {
+        let cache = crate::coordinator::PlanCache::new();
+        let cfg = JobConfig {
+            k: 8,
+            r: 4,
+            w: 3,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg.clone()).unwrap();
+        let f = job.field.clone();
+        use crate::gf::Field;
+        let mut rng = crate::util::Rng::new(11);
+        let jobs: Vec<Vec<Packet>> = (0..5)
+            .map(|_| {
+                (0..cfg.k)
+                    .map(|_| (0..cfg.w).map(|_| rng.below(f.order())).collect())
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
+        let batched = job.encode_batch_cached(&cache, &refs).unwrap();
+        assert_eq!(batched.len(), jobs.len());
+        for (x, y) in jobs.iter().zip(&batched) {
+            assert_eq!(y, &job.encode_cached(&cache, x).unwrap());
+            assert!(verify::native(&f, &job.parity, x, y));
+        }
+        // One shape: the whole batch plus the singles hit one compile.
         assert_eq!(cache.stats().1, 1);
     }
 

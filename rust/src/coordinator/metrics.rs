@@ -9,6 +9,16 @@ use std::time::Duration;
 pub const PLAN_CACHE_HITS: &str = "plan_cache_hits";
 /// Counter name: plan-cache lookups that had to compile.
 pub const PLAN_CACHE_MISSES: &str = "plan_cache_misses";
+/// Counter name: micro-batches served by the replay service.
+pub const BATCHES: &str = "batches";
+/// Counter name: requests served *inside* micro-batches
+/// (`batched_requests / batches` = mean batch occupancy).
+pub const BATCHED_REQUESTS: &str = "batched_requests";
+/// Counter name: high-water mark of requests in one micro-batch.
+pub const BATCH_OCCUPANCY_MAX: &str = "batch_occupancy_max";
+/// Counter name: total output field elements produced by the service —
+/// the throughput numerator (divide by wall time for elems/s).
+pub const ENCODED_ELEMS: &str = "encoded_elems";
 
 /// A set of named counters and latency recorders.
 #[derive(Debug, Default)]
@@ -38,6 +48,30 @@ impl Metrics {
             .entry(name.to_string())
             .or_default()
             .push(d.as_micros() as u64);
+    }
+
+    /// Raise `name` to `max(current, v)` — for high-water marks.
+    pub fn incr_to_max(&self, name: &str, v: u64) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.counters.entry(name.to_string()).or_default();
+        *e = (*e).max(v);
+    }
+
+    /// Record one served micro-batch of `size` requests: bumps
+    /// `batches` / `batched_requests` and the occupancy high-water mark.
+    pub fn record_batch(&self, size: u64) {
+        self.incr(BATCHES, 1);
+        self.incr(BATCHED_REQUESTS, size);
+        self.incr_to_max(BATCH_OCCUPANCY_MAX, size);
+    }
+
+    /// `(batches, batched_requests, occupancy_max)` recorded so far.
+    pub fn batch_stats(&self) -> (u64, u64, u64) {
+        (
+            self.counter(BATCHES),
+            self.counter(BATCHED_REQUESTS),
+            self.counter(BATCH_OCCUPANCY_MAX),
+        )
     }
 
     /// Record a plan-cache hit (replayed a compiled plan).
@@ -126,6 +160,21 @@ mod tests {
         let j = m.to_json();
         assert!(j.contains("\"requests\":5"));
         assert!(j.contains("\"encode\""));
+    }
+
+    #[test]
+    fn batch_counters_track_occupancy() {
+        let m = Metrics::new();
+        m.record_batch(1);
+        m.record_batch(7);
+        m.record_batch(3);
+        assert_eq!(m.batch_stats(), (3, 11, 7));
+        m.incr_to_max(BATCH_OCCUPANCY_MAX, 2); // never lowers the mark
+        assert_eq!(m.counter(BATCH_OCCUPANCY_MAX), 7);
+        let j = m.to_json();
+        assert!(j.contains("\"batches\":3"), "{j}");
+        assert!(j.contains("\"batched_requests\":11"), "{j}");
+        assert!(j.contains("\"batch_occupancy_max\":7"), "{j}");
     }
 
     #[test]

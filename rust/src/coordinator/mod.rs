@@ -10,7 +10,10 @@
 //!
 //! [`service::EncodeService`] is the long-running form: worker threads
 //! consume encode requests from a queue and run the bulk-encode hot path
-//! through the AOT-compiled kernel (`runtime::GfEncoder`) — the
+//! through the AOT-compiled kernel (`runtime::GfEncoder`) or — the
+//! artifact-free replay engine — through the shape's cached optimized
+//! plan, micro-batching queued requests into one columnar
+//! `replay_batch` pass per width (`service::BatchPolicy`). The
 //! "request path never touches Python" property in action.
 
 pub mod config;
@@ -24,4 +27,4 @@ pub use config::JobConfig;
 pub use job::{EncodeJob, JobReport};
 pub use metrics::Metrics;
 pub use plan_cache::{PlanCache, PlanKey};
-pub use service::{EncodeRequest, EncodeResponse, EncodeService};
+pub use service::{BatchPolicy, EncodeRequest, EncodeResponse, EncodeService};

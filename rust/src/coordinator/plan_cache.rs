@@ -1,6 +1,13 @@
 //! The shape-keyed plan cache: compile an encoding schedule once, replay
 //! it for every subsequent same-shape request.
 //!
+//! Each cached [`CompiledPlan`](crate::framework::CompiledPlan) carries
+//! **both** forms of the schedule: the raw Plan IR (wire-level replay,
+//! tracing, inspection) and its optimizer-pass lowering
+//! ([`OptimizedPlan`](crate::net::opt::OptimizedPlan) — the flattened
+//! `OutputMatrix` the serving and micro-batching paths execute). One
+//! miss pays for compile + optimize; every hit serves either form.
+//!
 //! A [`PlanKey`] identifies everything the compiled
 //! [`CompiledPlan`](crate::framework::CompiledPlan) depends on: the field,
 //! the `(K, R)` shape, the port budget, the code family + seed, a

@@ -11,9 +11,20 @@
 //! * [`EncodeService::start_replay`] — the plan-replay path: compile the
 //!   shape's decentralized schedule **once** into a
 //!   [`CompiledPlan`](crate::framework::CompiledPlan) (first request =
-//!   one cache miss) and replay it for every request — no per-request
-//!   planning or round stepping, any payload width, no artifacts needed.
-//!   Cache hit/miss counters land in the service metrics summary.
+//!   one cache miss) and replay its optimized form for every request —
+//!   no per-request planning or round stepping, any payload width, no
+//!   artifacts needed. Workers **micro-batch**: having taken one
+//!   request, a worker keeps draining the queue until it holds
+//!   [`BatchPolicy::max_batch`] requests or [`BatchPolicy::max_delay`]
+//!   has elapsed, then serves the whole batch in one columnar
+//!   [`replay_batch`](crate::net::exec::replay_batch) pass per payload
+//!   width. Cache hit/miss, batch-size/occupancy and throughput
+//!   counters all land in the service metrics summary.
+//!
+//! Malformed payloads (wrong row count, ragged or empty widths) are
+//! rejected with a proper `Err` — at [`EncodeService::submit`] before
+//! they ever enqueue, and again per request inside the batch worker, so
+//! one bad request can neither poison a batch nor kill a worker.
 //!
 //! (The offline build has no tokio; std threads + mpsc channels provide
 //! the same architecture — see DESIGN.md §1.)
@@ -24,11 +35,12 @@ use super::plan_cache::PlanCache;
 use crate::gf::{Field, Mat};
 use crate::runtime::Runtime;
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A batch of payloads to encode: `x[k]` is source `k`'s row (all rows
 /// the same width, any width — the service chunks internally).
@@ -43,6 +55,28 @@ pub struct EncodeRequest {
 pub struct EncodeResponse {
     pub y: Result<Vec<Vec<u64>>>,
     pub wall: std::time::Duration,
+}
+
+/// Micro-batching policy for the replay service: a worker that has
+/// taken one request keeps draining the queue until it holds
+/// `max_batch` requests or `max_delay` has passed since the first take,
+/// then serves everything it collected in one columnar pass per payload
+/// width. `max_batch = 1` degenerates to request-at-a-time serving.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Largest number of requests served in one `replay_batch` call.
+    pub max_batch: usize,
+    /// Longest a taken request waits for co-batched company.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 32,
+            max_delay: Duration::from_micros(500),
+        }
+    }
 }
 
 /// A running encode service over a fixed code (parity matrix).
@@ -117,17 +151,30 @@ impl EncodeService {
         })
     }
 
-    /// Start a plan-replay service for the shape described by `cfg`: no
-    /// PJRT artifacts required. Workers share one [`PlanCache`] wired to
-    /// the service metrics; the first request compiles the plan (one
-    /// `plan_cache_misses`), every later request replays it (one
-    /// `plan_cache_hits` each). Requests may have any payload width —
-    /// the compiled plan is width-independent.
+    /// Start a plan-replay service for the shape described by `cfg` with
+    /// the default [`BatchPolicy`]: no PJRT artifacts required. Workers
+    /// share one [`PlanCache`] wired to the service metrics; the first
+    /// batch compiles the plan (one `plan_cache_misses`), every later
+    /// batch replays it. Requests may have any payload width — the
+    /// compiled plan is width-independent (each micro-batch is served
+    /// with one columnar pass per width it contains).
     pub fn start_replay(
         cfg: &super::JobConfig,
         n_workers: usize,
         queue_depth: usize,
     ) -> Result<Self> {
+        Self::start_replay_with(cfg, n_workers, queue_depth, BatchPolicy::default())
+    }
+
+    /// [`start_replay`](EncodeService::start_replay) with an explicit
+    /// micro-batching policy.
+    pub fn start_replay_with(
+        cfg: &super::JobConfig,
+        n_workers: usize,
+        queue_depth: usize,
+        policy: BatchPolicy,
+    ) -> Result<Self> {
+        anyhow::ensure!(policy.max_batch >= 1, "batch policy needs max_batch >= 1");
         // Build the (field, code, parity) triple once; the synthetic
         // inputs are ignored — requests carry their own payloads.
         let job = Arc::new(EncodeJob::synthetic(cfg.clone())?);
@@ -147,7 +194,9 @@ impl EncodeService {
             let handle = std::thread::Builder::new()
                 .name(format!("replay-worker-{wid}"))
                 .spawn(move || {
-                    worker_loop(&rx, &metrics, &stop, |x| job.encode_cached(&cache, x))
+                    batch_worker_loop(&rx, &metrics, &stop, k, policy, |jobs| {
+                        job.encode_batch_cached(&cache, jobs)
+                    })
                 })
                 .context("spawning replay worker")?;
             workers.push(handle);
@@ -162,8 +211,16 @@ impl EncodeService {
     }
 
     /// Submit a batch (blocks when the queue is full — backpressure).
+    /// Malformed payloads — wrong row count, ragged or empty widths —
+    /// are rejected here with an `Err` before they enqueue.
     pub fn submit(&self, x: Vec<Vec<u64>>) -> Result<mpsc::Receiver<EncodeResponse>> {
-        anyhow::ensure!(x.len() == self.k, "need K = {} payload rows", self.k);
+        validate_payload(self.k, &x)?;
+        self.enqueue(x)
+    }
+
+    /// The shared enqueue path: build the reply channel and send the
+    /// request into the bounded queue.
+    fn enqueue(&self, x: Vec<Vec<u64>>) -> Result<mpsc::Receiver<EncodeResponse>> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .as_ref()
@@ -172,6 +229,13 @@ impl EncodeService {
             .ok()
             .context("service stopped")?;
         Ok(rx)
+    }
+
+    /// Test-only: enqueue a payload *without* submit-side validation, to
+    /// exercise the worker's own shape checks.
+    #[cfg(test)]
+    fn submit_unchecked(&self, x: Vec<Vec<u64>>) -> Result<mpsc::Receiver<EncodeResponse>> {
+        self.enqueue(x)
     }
 
     /// Drain and stop all workers.
@@ -217,6 +281,155 @@ fn worker_loop(
         metrics.observe("encode_latency", wall);
         let _ = req.reply.send(EncodeResponse { y, wall });
     }
+}
+
+/// Shape-check one submitted payload: exactly `k` rows, uniform nonzero
+/// width. Shared by [`EncodeService::submit`] and the batch worker.
+fn validate_payload(k: usize, x: &[Vec<u64>]) -> Result<()> {
+    anyhow::ensure!(
+        x.len() == k,
+        "need K = {k} payload rows, got {}",
+        x.len()
+    );
+    let w = x.first().map_or(0, |r| r.len());
+    anyhow::ensure!(w > 0, "empty payload rows (width 0)");
+    anyhow::ensure!(x.iter().all(|r| r.len() == w), "ragged payload rows");
+    Ok(())
+}
+
+/// The micro-batching worker protocol of the replay engine: take one
+/// request (50ms poll so shutdown stays prompt), then keep draining the
+/// queue until the batch holds `policy.max_batch` requests or
+/// `policy.max_delay` has elapsed, and serve the whole batch. The queue
+/// lock is held only while collecting — the encode itself runs
+/// lock-free so other workers can collect their own batches meanwhile.
+fn batch_worker_loop(
+    rx: &Mutex<mpsc::Receiver<EncodeRequest>>,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+    k: usize,
+    policy: BatchPolicy,
+    encode_batch: impl Fn(&[&[Vec<u64>]]) -> Result<Vec<Vec<Vec<u64>>>>,
+) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let mut batch: Vec<EncodeRequest> = Vec::with_capacity(policy.max_batch);
+        let disconnected = {
+            let guard = rx.lock().unwrap();
+            match guard.recv_timeout(Duration::from_millis(50)) {
+                Ok(req) => batch.push(req),
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            let deadline = Instant::now() + policy.max_delay;
+            let mut disconnected = false;
+            while batch.len() < policy.max_batch {
+                let left = deadline.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    break;
+                }
+                match guard.recv_timeout(left) {
+                    Ok(req) => batch.push(req),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        disconnected = true;
+                        break;
+                    }
+                }
+            }
+            disconnected
+        };
+        serve_batch(batch, metrics, k, &encode_batch);
+        if disconnected {
+            // The queue closed while collecting: the batch just served
+            // was the drain's tail — nothing more will arrive.
+            break;
+        }
+    }
+}
+
+/// Serve one collected micro-batch: shape-validate each request (bad
+/// ones get their own `Err` reply and never poison the batch), group
+/// the valid ones by payload width, run one columnar `encode_batch`
+/// pass per width, and reply per request **as its width group
+/// finishes** — a request's `wall` / `encode_latency` is the serve time
+/// of its own group, not of the whole batch (queueing delay inside the
+/// collection window is not included; `batch_latency` covers the full
+/// serve). Records the batch-size/occupancy/throughput counters.
+fn serve_batch(
+    batch: Vec<EncodeRequest>,
+    metrics: &Metrics,
+    k: usize,
+    encode_batch: &impl Fn(&[&[Vec<u64>]]) -> Result<Vec<Vec<Vec<u64>>>>,
+) {
+    let batch_t0 = Instant::now();
+    let mut valid: Vec<Option<EncodeRequest>> = Vec::with_capacity(batch.len());
+    for req in batch {
+        if let Err(e) = validate_payload(k, &req.x) {
+            metrics.incr("requests", 1);
+            metrics.incr("failures", 1);
+            let _ = req.reply.send(EncodeResponse {
+                y: Err(e),
+                wall: batch_t0.elapsed(),
+            });
+        } else {
+            valid.push(Some(req));
+        }
+    }
+    if valid.is_empty() {
+        return;
+    }
+    metrics.record_batch(valid.len() as u64);
+
+    // One columnar pass per payload width (mixed-width batches split
+    // into width groups; single-width traffic gets exactly one pass).
+    let mut by_width: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, req) in valid.iter().enumerate() {
+        let req = req.as_ref().expect("request present before serving");
+        by_width.entry(req.x[0].len()).or_default().push(i);
+    }
+    let mut elems = 0u64;
+    for idxs in by_width.values() {
+        let jobs: Vec<&[Vec<u64>]> = idxs
+            .iter()
+            .map(|&i| valid[i].as_ref().expect("unserved request").x.as_slice())
+            .collect();
+        let t0 = Instant::now();
+        let result = encode_batch(&jobs);
+        drop(jobs);
+        let wall = t0.elapsed();
+        match result {
+            Ok(ys) => {
+                for (&slot, y) in idxs.iter().zip(ys) {
+                    let req = valid[slot].take().expect("reply slot served once");
+                    metrics.incr("requests", 1);
+                    elems += y.iter().map(|r| r.len() as u64).sum::<u64>();
+                    metrics.observe("encode_latency", wall);
+                    let _ = req.reply.send(EncodeResponse { y: Ok(y), wall });
+                }
+            }
+            Err(e) => {
+                // Group-level failure: every request in the width group
+                // carries the error (anyhow errors don't clone — each
+                // reply gets the formatted chain).
+                let msg = format!("{e:#}");
+                for &slot in idxs {
+                    let req = valid[slot].take().expect("reply slot served once");
+                    metrics.incr("requests", 1);
+                    metrics.incr("failures", 1);
+                    metrics.observe("encode_latency", wall);
+                    let _ = req.reply.send(EncodeResponse {
+                        y: Err(anyhow::anyhow!(msg.clone())),
+                        wall,
+                    });
+                }
+            }
+        }
+    }
+    metrics.incr(super::metrics::ENCODED_ELEMS, elems);
+    metrics.observe("batch_latency", batch_t0.elapsed());
 }
 
 /// Encode arbitrary-width payloads by chunking to the artifact width.
@@ -269,25 +482,157 @@ mod tests {
         let f = cfg.any_field().unwrap();
         let svc = EncodeService::start_replay(&cfg, 1, 8).unwrap();
         let mut rng = crate::util::Rng::new(9);
-        let mut pending = Vec::new();
+        // Sequential submit/await so every request lands in its own
+        // micro-batch — the cache accounting below stays deterministic.
         for w in [4usize, 9, 1, 4] {
+            let x: Vec<Vec<u64>> = (0..cfg.k)
+                .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                .collect();
+            let rx = svc.submit(x.clone()).unwrap();
+            let resp = rx.recv().unwrap();
+            let y = resp.y.expect("replay encode ok");
+            assert_eq!(y.len(), cfg.r);
+            assert!(verify::native(&f, &oracle_job.parity, &x, &y));
+        }
+        // One worker: the first batch compiled (miss), the rest replayed.
+        assert_eq!(svc.metrics.plan_cache(), (3, 1));
+        let j = svc.metrics.to_json();
+        assert!(j.contains("\"plan_cache_hits\":3"), "{j}");
+        assert!(j.contains("\"plan_cache_misses\":1"), "{j}");
+        assert_eq!(svc.metrics.counter("requests"), 4);
+        // Four single-request micro-batches.
+        assert_eq!(svc.metrics.batch_stats(), (4, 4, 1));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_rejects_malformed_payloads_and_workers_survive() {
+        let cfg = JobConfig {
+            k: 4,
+            r: 2,
+            w: 4,
+            ..JobConfig::default()
+        };
+        let f = cfg.any_field().unwrap();
+        let oracle_job = EncodeJob::synthetic(cfg.clone()).unwrap();
+        let svc = EncodeService::start_replay(&cfg, 1, 8).unwrap();
+        // Submit-side rejection: wrong K, ragged rows, empty width.
+        assert!(svc.submit(vec![vec![1, 2]; 3]).is_err(), "wrong K");
+        assert!(
+            svc.submit(vec![vec![1, 2], vec![1, 2], vec![1], vec![1, 2]])
+                .is_err(),
+            "ragged rows"
+        );
+        assert!(svc.submit(vec![Vec::new(); 4]).is_err(), "empty width");
+        // Worker-side rejection: bypass submit's checks — the worker
+        // must reply with a proper Err, not die on a downstream panic.
+        let rx = svc.submit_unchecked(vec![vec![7, 7], vec![7]]).unwrap();
+        let resp = rx.recv().expect("worker replied instead of dying");
+        assert!(resp.y.is_err());
+        let rx = svc.submit_unchecked(vec![Vec::new(); 4]).unwrap();
+        assert!(rx.recv().unwrap().y.is_err(), "empty width at the worker");
+        // The same worker still serves well-formed requests afterwards.
+        let x: Vec<Vec<u64>> = (0..cfg.k).map(|i| vec![i as u64 + 1, 3]).collect();
+        let y = svc.submit(x.clone()).unwrap().recv().unwrap().y.unwrap();
+        assert!(verify::native(&f, &oracle_job.parity, &x, &y));
+        assert_eq!(svc.metrics.counter("failures"), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn one_mixed_width_batch_splits_into_width_groups_without_crossing_replies() {
+        let cfg = JobConfig {
+            k: 5,
+            r: 3,
+            w: 4,
+            ..JobConfig::default()
+        };
+        let f = cfg.any_field().unwrap();
+        let oracle_job = EncodeJob::synthetic(cfg.clone()).unwrap();
+        // Widths deliberately interleaved: the reply-index remapping
+        // across the three width groups must route every group's rows
+        // back to the right request.
+        let widths = [3usize, 7, 3, 1, 7, 3];
+        let svc = EncodeService::start_replay_with(
+            &cfg,
+            1,
+            16,
+            BatchPolicy {
+                max_batch: widths.len(),
+                max_delay: std::time::Duration::from_secs(5),
+            },
+        )
+        .unwrap();
+        let mut rng = crate::util::Rng::new(47);
+        let mut pending = Vec::new();
+        for &w in &widths {
             let x: Vec<Vec<u64>> = (0..cfg.k)
                 .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
                 .collect();
             pending.push((x.clone(), svc.submit(x).unwrap()));
         }
         for (x, rx) in pending {
-            let resp = rx.recv().unwrap();
-            let y = resp.y.expect("replay encode ok");
+            let y = rx.recv().unwrap().y.expect("mixed-width batch ok");
             assert_eq!(y.len(), cfg.r);
+            // Random payloads per request: a crossed reply (another
+            // request's rows, or another width group's) fails the
+            // parity verification against this request's own x.
             assert!(verify::native(&f, &oracle_job.parity, &x, &y));
         }
-        // One worker: first request compiled (miss), the rest replayed.
-        assert_eq!(svc.metrics.plan_cache(), (3, 1));
-        let j = svc.metrics.to_json();
-        assert!(j.contains("\"plan_cache_hits\":3"), "{j}");
-        assert!(j.contains("\"plan_cache_misses\":1"), "{j}");
-        assert_eq!(svc.metrics.counter("requests"), 4);
+        // One batch of six requests, served as three width groups:
+        // one plan compile, then a cache hit per further group.
+        assert_eq!(svc.metrics.batch_stats(), (1, widths.len() as u64, widths.len() as u64));
+        assert_eq!(svc.metrics.plan_cache(), (2, 1));
+        assert_eq!(svc.metrics.counter("requests"), widths.len() as u64);
+        assert_eq!(svc.metrics.counter("failures"), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn micro_batching_coalesces_requests_into_one_columnar_pass() {
+        let cfg = JobConfig {
+            k: 6,
+            r: 3,
+            w: 5,
+            ..JobConfig::default()
+        };
+        let f = cfg.any_field().unwrap();
+        let oracle_job = EncodeJob::synthetic(cfg.clone()).unwrap();
+        let n_req = 8usize;
+        // One worker, a batch window big enough that all requests (sent
+        // back-to-back below) coalesce into exactly one micro-batch.
+        let svc = EncodeService::start_replay_with(
+            &cfg,
+            1,
+            16,
+            BatchPolicy {
+                max_batch: n_req,
+                max_delay: std::time::Duration::from_secs(5),
+            },
+        )
+        .unwrap();
+        let mut rng = crate::util::Rng::new(31);
+        let mut pending = Vec::new();
+        for _ in 0..n_req {
+            let x: Vec<Vec<u64>> = (0..cfg.k)
+                .map(|_| (0..cfg.w).map(|_| rng.below(f.order())).collect())
+                .collect();
+            pending.push((x.clone(), svc.submit(x).unwrap()));
+        }
+        for (x, rx) in pending {
+            let y = rx.recv().unwrap().y.expect("batched encode ok");
+            assert!(verify::native(&f, &oracle_job.parity, &x, &y));
+        }
+        let (batches, batched, occ_max) = svc.metrics.batch_stats();
+        assert_eq!(batched, n_req as u64);
+        assert_eq!(occ_max, n_req as u64, "all requests in one batch");
+        assert_eq!(batches, 1);
+        // One compile for the whole batch; throughput counter adds up.
+        assert_eq!(svc.metrics.plan_cache(), (0, 1));
+        assert_eq!(
+            svc.metrics.counter(super::super::metrics::ENCODED_ELEMS),
+            (n_req * cfg.r * cfg.w) as u64
+        );
         svc.shutdown();
     }
 }

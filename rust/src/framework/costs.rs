@@ -115,6 +115,34 @@ pub fn plan_statics(plan: &crate::net::plan::Plan, w: u64) -> (u64, u64) {
     (plan.c1(), plan.c2(w))
 }
 
+/// A compiled plan's communication statics side by side with what the
+/// optimizer pass pipeline (`net::opt`) bought for the shape: arena
+/// slots before/after and the interned lincombs eliminated (dead
+/// wire-only intermediates + CSE merges). `C1`/`C2` are untouched by
+/// optimization — the passes change what replay *computes*, never what
+/// the schedule *costs*.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanProfile {
+    pub c1: u64,
+    pub c2: u64,
+    pub slots_before: usize,
+    pub slots_after: usize,
+    pub lincombs_eliminated: usize,
+}
+
+/// Profile a plan at payload width `w`: its `(C1, C2)` statics plus the
+/// optimizer statics of running the pass pipeline over it.
+pub fn plan_profile(plan: &crate::net::plan::Plan, w: u64) -> PlanProfile {
+    let stats = crate::net::opt::optimize(plan).stats;
+    PlanProfile {
+        c1: plan.c1(),
+        c2: plan.c2(w),
+        slots_before: stats.slots_before,
+        slots_after: stats.slots_after,
+        lincombs_eliminated: stats.lincombs_eliminated(),
+    }
+}
+
 /// §II: the multi-reduce baseline's `C2` — all-gather then combine:
 /// `(K−1)·W` for one port (p-port: `≈ (K−1)·W/p`).
 pub fn multireduce_c2(k: u64, w: u64, p: u64) -> u64 {
@@ -193,6 +221,33 @@ mod tests {
             assert_eq!(plan_statics(&plan, 1), (c1f, c2f), "K={k} p={p}");
             assert_eq!(plan_statics(&plan, 7), (c1f, 7 * c2f), "K={k} p={p} W=7");
         }
+    }
+
+    #[test]
+    fn plan_profile_reports_optimizer_statics_next_to_costs() {
+        let f = crate::gf::GfPrime::default_field();
+        let (k, p) = (64usize, 1usize);
+        let c = std::sync::Arc::new(crate::gf::Mat::random(&f, k, k, 9));
+        let plan = crate::net::plan::compile(p, k, |basis| {
+            Ok(Box::new(crate::collectives::PrepareShoot::new(
+                f,
+                (0..k).collect(),
+                p,
+                c.clone(),
+                basis,
+            )))
+        })
+        .unwrap();
+        let prof = plan_profile(&plan, 3);
+        // Costs agree with the raw statics (optimization never changes them).
+        assert_eq!((prof.c1, prof.c2), plan_statics(&plan, 3));
+        // The pass pipeline dropped the wire-only prepare intermediates.
+        assert!(prof.slots_after < prof.slots_before, "{prof:?}");
+        assert_eq!(
+            prof.lincombs_eliminated,
+            prof.slots_before - prof.slots_after,
+            "{prof:?}"
+        );
     }
 
     #[test]

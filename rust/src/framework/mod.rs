@@ -80,14 +80,19 @@ pub struct PlannedJob {
 }
 
 /// A shape's encoding schedule compiled to the replayable Plan IR: the
-/// planner's `choice`, the processor `layout`, and the [`Plan`] itself.
-/// Cache-friendly (width-independent, `Send + Sync`); the coordinator's
-/// `PlanCache` stores these behind `Arc`s.
+/// planner's `choice`, the processor `layout`, the raw [`Plan`], and
+/// its pass-pipeline lowering (the flattened
+/// [`OptimizedPlan`](crate::net::opt::OptimizedPlan) the serving path
+/// executes — the raw plan stays alongside for wire-level replay,
+/// tracing and inspection). Cache-friendly (width-independent,
+/// `Send + Sync`); the coordinator's `PlanCache` stores these behind
+/// `Arc`s.
 #[derive(Clone, Debug)]
 pub struct CompiledPlan {
     pub choice: PlanChoice,
     pub layout: Layout,
     pub plan: crate::net::plan::Plan,
+    pub opt: crate::net::opt::OptimizedPlan,
 }
 
 /// Predicted `(C1, C2)` of the specific (§VI) and universal (§IV) paths
@@ -301,10 +306,34 @@ pub fn compile_plan<F: Field>(
     let plan = crate::net::plan::compile(p, layout.k, |basis| {
         build_job(f, code, a.clone(), basis, p, choice)
     })?;
+    let opt = crate::net::opt::optimize(&plan);
+    // Cross-check the flattening against the code's algebra: sink `r`
+    // must end up with `Σ_k A[k][r]·x_k`, so its dense row over the
+    // inputs is exactly column `r` of the parity matrix (column `K + r`
+    // of the systematic generator `G = [I | A]`). Any divergence means a
+    // miscompiled schedule or a broken optimizer pass — fail before the
+    // plan can be cached.
+    for r in 0..layout.r {
+        let pid = layout.sink(r);
+        let row = opt
+            .matrix
+            .row_for(pid)
+            .ok_or_else(|| anyhow::anyhow!("compiled plan has no output for sink {pid}"))?;
+        for k in 0..layout.k {
+            anyhow::ensure!(
+                row[k] == a[(k, r)],
+                "flattened row of sink {r} diverges from the generator matrix at \
+                 input {k}: plan has {}, code has {}",
+                row[k],
+                a[(k, r)]
+            );
+        }
+    }
     Ok(CompiledPlan {
         choice,
         layout,
         plan,
+        opt,
     })
 }
 

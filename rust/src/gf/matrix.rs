@@ -243,6 +243,71 @@ impl Mat {
     }
 }
 
+/// Column tile width (in elements) for the blocked gemm kernels: the
+/// working set of one tile — an accumulator stripe plus the matching
+/// stripes of the source rows — stays L1/L2-resident while every
+/// coefficient row streams over it exactly once.
+pub const GEMM_TILE: usize = 4096;
+
+/// `out += coeffs · b` for one output row: `out[j] = Σ_k coeffs[k]·b[k][j]`
+/// over the row-major `b` (`coeffs.len() × n`). `out` must be
+/// zero-initialised (the kernel accumulates).
+///
+/// Column-tiled so long rows stay cache-resident, with the field's fused
+/// reduction discipline per tile: delayed reduction for prime fields
+/// (raw `c·s` products accumulate unreduced up to `lazy_chunk` terms,
+/// one Barrett pass per chunk) and hoisted-log axpys for `GF(2^w)` —
+/// both inherited from [`Field::lincomb_into`]. Zero coefficients are
+/// skipped *before* chunking, so the per-element operation sequence is
+/// identical to a sparse lincomb over the same nonzero terms — callers
+/// relying on bit-identity with term-list evaluation (the plan replay
+/// path) get it by construction.
+pub fn gemm_row_into<F: Field>(f: &F, coeffs: &[u64], b: &[u64], n: usize, out: &mut [u64]) {
+    assert_eq!(out.len(), n, "output row width mismatch");
+    assert_eq!(b.len(), coeffs.len() * n, "source arena shape mismatch");
+    let nz: Vec<(u64, usize)> = coeffs
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c != 0)
+        .map(|(k, &c)| (c, k))
+        .collect();
+    // One term buffer reused across tiles — no per-tile allocation in
+    // the hot loop, only the slice bounds are rewritten.
+    let mut terms: Vec<(u64, &[u64])> = Vec::with_capacity(nz.len());
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + GEMM_TILE).min(n);
+        terms.clear();
+        terms.extend(nz.iter().map(|&(c, k)| (c, &b[k * n + j0..k * n + j1])));
+        f.lincomb_into(&mut out[j0..j1], &terms);
+        j0 = j1;
+    }
+}
+
+/// Dense `out = a · b` over flat row-major buffers: `a` is `m × k`,
+/// `b` is `k × n`, `out` is `m × n` and must be zero-initialised.
+/// Row-by-row over [`gemm_row_into`] — callers wanting parallelism over
+/// output rows split `out` into row chunks themselves (see
+/// `net::exec::replay_batch`).
+pub fn gemm_into<F: Field>(
+    f: &F,
+    m: usize,
+    k: usize,
+    a: &[u64],
+    b: &[u64],
+    n: usize,
+    out: &mut [u64],
+) {
+    assert_eq!(a.len(), m * k, "lhs shape mismatch");
+    assert_eq!(out.len(), m * n, "output shape mismatch");
+    if n == 0 {
+        return;
+    }
+    for (i, out_row) in out.chunks_mut(n).enumerate() {
+        gemm_row_into(f, &a[i * k..(i + 1) * k], b, n, out_row);
+    }
+}
+
 impl std::ops::Index<(usize, usize)> for Mat {
     type Output = u64;
     #[inline]
@@ -345,5 +410,69 @@ mod tests {
         let a = Mat::random(&f, 4, 4, 9);
         let perm: Vec<usize> = (0..4).collect();
         assert_eq!(a.permute_cols(&perm), a);
+    }
+
+    #[test]
+    fn gemm_matches_mat_mul_prime() {
+        let f = f();
+        // n spans below/at/above one tile so the tiling seam is exercised.
+        for (m, k, n) in [(3usize, 5usize, 7usize), (4, 8, GEMM_TILE), (2, 6, GEMM_TILE + 37)] {
+            let a = Mat::random(&f, m, k, (m * k) as u64);
+            let b = Mat::random(&f, k, n, (k * n) as u64);
+            let oracle = a.mul(&f, &b);
+            let a_flat: Vec<u64> = (0..m).flat_map(|i| a.row(i).to_vec()).collect();
+            let b_flat: Vec<u64> = (0..k).flat_map(|i| b.row(i).to_vec()).collect();
+            let mut out = vec![0u64; m * n];
+            gemm_into(&f, m, k, &a_flat, &b_flat, n, &mut out);
+            for i in 0..m {
+                assert_eq!(&out[i * n..(i + 1) * n], oracle.row(i), "row {i} (m={m} k={k} n={n})");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_mat_mul_gf2e() {
+        let f = crate::gf::Gf2e::new(8).unwrap();
+        let (m, k, n) = (5usize, 9usize, 100usize);
+        let a = Mat::random(&f, m, k, 21);
+        let b = Mat::random(&f, k, n, 22);
+        let oracle = a.mul(&f, &b);
+        let a_flat: Vec<u64> = (0..m).flat_map(|i| a.row(i).to_vec()).collect();
+        let b_flat: Vec<u64> = (0..k).flat_map(|i| b.row(i).to_vec()).collect();
+        let mut out = vec![0u64; m * n];
+        gemm_into(&f, m, k, &a_flat, &b_flat, n, &mut out);
+        for i in 0..m {
+            assert_eq!(&out[i * n..(i + 1) * n], oracle.row(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn gemm_row_bit_identical_to_sparse_lincomb() {
+        // The replay path's contract: dense-row evaluation with zeros
+        // skipped must equal the sparse term-list evaluation bit for bit
+        // (same term order, same chunk boundaries) — including across a
+        // GEMM_TILE seam, where the tiled kernel splits one logical
+        // lincomb into several `lincomb_into` calls.
+        let f = f();
+        let k = 40usize;
+        for n in [130usize, GEMM_TILE + 37] {
+            let mut rng = crate::util::Rng::new(77);
+            let mut coeffs: Vec<u64> = (0..k).map(|_| rng.below(f.order())).collect();
+            for z in [0usize, 3, 7, 11, 39] {
+                coeffs[z] = 0; // interleave zeros
+            }
+            let b: Vec<u64> = (0..k * n).map(|_| rng.below(f.order())).collect();
+            let mut dense = vec![0u64; n];
+            gemm_row_into(&f, &coeffs, &b, n, &mut dense);
+            let terms: Vec<(u64, &[u64])> = coeffs
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c != 0)
+                .map(|(i, &c)| (c, &b[i * n..(i + 1) * n]))
+                .collect();
+            let mut sparse = vec![0u64; n];
+            f.lincomb_into(&mut sparse, &terms);
+            assert_eq!(dense, sparse, "n={n}");
+        }
     }
 }

@@ -6,23 +6,37 @@
 //! schedule and every coefficient, so executing it for new payload data
 //! reduces to evaluating the recorded linear combinations.
 //!
-//! Two entry points:
+//! Four entry points:
 //!
-//! * [`replay`] — the serving path. Materialises only the *output* slots
-//!   (one lincomb over the inputs per output packet, delayed-reduction
-//!   kernels, rayon-parallel over independent output ops under the
-//!   `parallel` feature) and reconstructs the exact [`SimReport`] from
-//!   plan statics. Bit-identical to live stepping: every stored packet
-//!   value is canonical (`< q`), so equal field elements are equal bits.
+//! * [`replay`] — the single-job serving path over the raw plan.
+//!   Materialises only the *output* slots (one lincomb over the inputs
+//!   per output packet, delayed-reduction kernels, rayon-parallel over
+//!   independent output ops under the `parallel` feature) and
+//!   reconstructs the exact [`SimReport`] from plan statics.
+//!   Bit-identical to live stepping: every stored packet value is
+//!   canonical (`< q`), so equal field elements are equal bits.
+//! * [`replay_opt`] — the single-job serving path over an
+//!   [`OptimizedPlan`]: evaluate the flattened [`OutputMatrix`] rows
+//!   with the dense gemm kernel. Bit-identical to [`replay`].
+//! * [`replay_batch`] — the high-throughput serving path: `B` same-width
+//!   jobs packed into one strided columnar arena (`K × (W·B)`
+//!   contiguous, job `j`'s columns at `[j·W, (j+1)·W)`), evaluated in a
+//!   single gemm pass over the optimized plan (rayon-parallel over
+//!   output rows). Bit-identical per job to [`replay`] — same nonzero
+//!   terms in the same order with the same reduction chunking.
 //! * [`replay_full`] — the inspection path. Materialises every slot
 //!   round by round (rayon-parallel over the independent ops within a
 //!   round) and emits the exact wire [`TraceEvent`]s, for debugging and
 //!   trace tooling.
 
+use super::opt::OptimizedPlan;
 use super::payload::{pkt_zero, Packet};
 use super::plan::Plan;
 use super::sim::{Outputs, SimReport};
 use super::trace::TraceEvent;
+use crate::gf::matrix::gemm_into;
+#[cfg(feature = "parallel")]
+use crate::gf::matrix::gemm_row_into;
 use crate::gf::Field;
 use anyhow::{ensure, Result};
 
@@ -114,6 +128,142 @@ pub fn replay<F: Field>(plan: &Plan, f: &F, inputs: &[Packet]) -> Result<Replay>
     })
 }
 
+/// Shape-check a batch: every job has `K` rows, every row the batch's
+/// single common width. Returns that width (0 for an empty batch of
+/// empty-width jobs — mirroring [`replay`]'s tolerance).
+fn check_batch(opt: &OptimizedPlan, jobs: &[&[Packet]]) -> Result<usize> {
+    let mut width = None;
+    for (j, job) in jobs.iter().enumerate() {
+        ensure!(
+            job.len() == opt.n_inputs,
+            "job {j}: plan expects {} inputs, got {}",
+            opt.n_inputs,
+            job.len()
+        );
+        let w = job.first().map_or(0, |x| x.len());
+        ensure!(
+            job.iter().all(|x| x.len() == w),
+            "job {j}: ragged input widths"
+        );
+        match width {
+            None => width = Some(w),
+            Some(prev) => ensure!(
+                prev == w,
+                "job {j}: width {w} != batch width {prev} (a batch is single-width)"
+            ),
+        }
+    }
+    Ok(width.unwrap_or(0))
+}
+
+/// Evaluate the output rows `out = M · arena` — rayon-parallel over the
+/// independent rows when enabled, the blocked [`gemm_into`] kernel
+/// otherwise. `out` is zeroed `n_rows × n` row-major.
+fn eval_rows<F: Field>(f: &F, opt: &OptimizedPlan, arena: &[u64], n: usize, out: &mut [u64]) {
+    #[cfg(feature = "parallel")]
+    if crate::net::parallel_enabled() && n > 0 {
+        use rayon::prelude::*;
+        out.par_chunks_mut(n)
+            .enumerate()
+            .for_each(|(i, row)| gemm_row_into(f, opt.matrix.row(i), arena, n, row));
+        return;
+    }
+    gemm_into(
+        f,
+        opt.matrix.n_rows(),
+        opt.matrix.k(),
+        opt.matrix.rows_flat(),
+        arena,
+        n,
+        out,
+    );
+}
+
+/// Replay one job through an optimized plan: evaluate its flattened
+/// [`OutputMatrix`](super::opt::OutputMatrix) rows. Bit-identical to
+/// [`replay`] on the raw plan (same nonzero terms, same order, same
+/// reduction chunking), with the same report.
+///
+/// Single-job fast path: rows are evaluated directly over the caller's
+/// packet slices (rayon-parallel over the distinct rows) — no columnar
+/// arena packing or output staging, which only pay off at `B > 1`.
+pub fn replay_opt<F: Field>(opt: &OptimizedPlan, f: &F, inputs: &[Packet]) -> Result<Replay> {
+    let w = check_batch(opt, &[inputs])?;
+    let packets = par_map_indexed(opt.matrix.n_rows(), |i| {
+        let terms: Vec<(u64, &[u64])> = opt
+            .matrix
+            .row(i)
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c != 0)
+            .map(|(src, &c)| (c, inputs[src].as_slice()))
+            .collect();
+        let mut acc = pkt_zero(w);
+        f.lincomb_into(&mut acc, &terms);
+        acc
+    });
+    let outputs: Outputs = opt
+        .matrix
+        .assignment()
+        .iter()
+        .map(|(&pid, &ri)| (pid, packets[ri].clone()))
+        .collect();
+    Ok(Replay {
+        outputs,
+        report: opt.report(w),
+    })
+}
+
+/// Replay `B` same-width jobs in **one pass**: pack them into a strided
+/// columnar arena (`K × (W·B)` contiguous — input `k`'s row holds job
+/// `j`'s packet at columns `[j·W, (j+1)·W)`), evaluate
+/// `OutputMatrix · arena` with the blocked gemm kernels, and unpack one
+/// [`Replay`] per job. The per-coefficient fixed costs (term setup,
+/// reduction bookkeeping) amortize over `W·B` columns instead of `W`,
+/// which is where the batch throughput win comes from (see
+/// `benches/batch_replay.rs`). Outputs are bit-identical per job to
+/// [`replay`] / [`replay_opt`].
+pub fn replay_batch<F: Field>(
+    opt: &OptimizedPlan,
+    f: &F,
+    jobs: &[&[Packet]],
+) -> Result<Vec<Replay>> {
+    let w = check_batch(opt, jobs)?;
+    let b = jobs.len();
+    let wb = w * b;
+    let k = opt.n_inputs;
+
+    // Pack: columnar arena, K rows of W·B elements.
+    let mut arena = vec![0u64; k * wb];
+    for (j, job) in jobs.iter().enumerate() {
+        for (ki, row) in job.iter().enumerate() {
+            arena[ki * wb + j * w..ki * wb + (j + 1) * w].copy_from_slice(row);
+        }
+    }
+
+    // Evaluate every distinct output row once across the whole batch.
+    let n_rows = opt.matrix.n_rows();
+    let mut out = vec![0u64; n_rows * wb];
+    eval_rows(f, opt, &arena, wb, &mut out);
+
+    // Unpack: slice each job's columns back out per processor.
+    let report = opt.report(w);
+    Ok((0..b)
+        .map(|j| {
+            let outputs: Outputs = opt
+                .matrix
+                .assignment()
+                .iter()
+                .map(|(&pid, &ri)| (pid, out[ri * wb + j * w..ri * wb + (j + 1) * w].to_vec()))
+                .collect();
+            Replay {
+                outputs,
+                report: report.clone(),
+            }
+        })
+        .collect())
+}
+
 /// Replay every arena slot round by round, with the wire trace.
 pub fn replay_full<F: Field>(plan: &Plan, f: &F, inputs: &[Packet]) -> Result<WireReplay> {
     let w = check_inputs(plan, inputs)?;
@@ -195,6 +345,69 @@ mod tests {
         // Wire trace identical (engine records in emission order per
         // round; the recorder preserved it).
         assert_eq!(full.trace, sim.trace);
+    }
+
+    #[test]
+    fn optimized_and_batched_replay_bit_identical_to_raw() {
+        let f = GfPrime::default_field();
+        let (k, p) = (16usize, 2usize);
+        let c = Arc::new(Mat::random(&f, k, k, 3));
+        let plan = compile(p, k, |basis| {
+            Ok(Box::new(PrepareShoot::new(
+                f,
+                (0..k).collect(),
+                p,
+                c.clone(),
+                basis,
+            )))
+        })
+        .unwrap();
+        let opt = crate::net::opt::optimize(&plan);
+        let mut rng = crate::util::Rng::new(17);
+        for w in [1usize, 5] {
+            let jobs: Vec<Vec<Packet>> = (0..4)
+                .map(|_| {
+                    (0..k)
+                        .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                        .collect()
+                })
+                .collect();
+            let singles: Vec<Replay> =
+                jobs.iter().map(|x| replay(&plan, &f, x).unwrap()).collect();
+            let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
+            let batched = replay_batch(&opt, &f, &refs).unwrap();
+            assert_eq!(batched.len(), jobs.len());
+            for (j, (single, batch)) in singles.iter().zip(&batched).enumerate() {
+                assert_eq!(batch.outputs, single.outputs, "w={w} job {j}: outputs");
+                assert_eq!(batch.report, single.report, "w={w} job {j}: report");
+                let one = replay_opt(&opt, &f, &jobs[j]).unwrap();
+                assert_eq!(one.outputs, single.outputs, "w={w} job {j}: replay_opt");
+                assert_eq!(one.report, single.report, "w={w} job {j}: opt report");
+            }
+        }
+    }
+
+    #[test]
+    fn replay_batch_rejects_mixed_widths_and_wrong_k() {
+        let f = GfPrime::default_field();
+        let c = Arc::new(Mat::random(&f, 4, 4, 1));
+        let plan = compile(1, 4, |basis| {
+            Ok(Box::new(PrepareShoot::new(
+                f,
+                (0..4).collect(),
+                1,
+                c.clone(),
+                basis,
+            )))
+        })
+        .unwrap();
+        let opt = crate::net::opt::optimize(&plan);
+        let a: Vec<Packet> = vec![vec![1], vec![2], vec![3], vec![4]];
+        let wide: Vec<Packet> = vec![vec![1, 1], vec![2, 2], vec![3, 3], vec![4, 4]];
+        let short: Vec<Packet> = vec![vec![1], vec![2]];
+        assert!(replay_batch(&opt, &f, &[&a, &wide]).is_err(), "mixed widths");
+        assert!(replay_batch(&opt, &f, &[&a, &short]).is_err(), "wrong K");
+        assert!(replay_batch(&opt, &f, &[]).unwrap().is_empty(), "B = 0 ok");
     }
 
     #[test]

@@ -23,14 +23,16 @@
 pub mod exec;
 pub mod model;
 pub mod noisy;
+pub mod opt;
 pub mod payload;
 pub mod plan;
 pub mod sim;
 pub mod trace;
 
-pub use exec::{replay, replay_full, Replay, WireReplay};
+pub use exec::{replay, replay_batch, replay_full, replay_opt, Replay, WireReplay};
 pub use model::CostModel;
 pub use noisy::{ErasureChannel, InnerFec, NoisyCollective};
+pub use opt::{optimize, OptStats, OptimizedPlan, OutputMatrix};
 pub use payload::{lincomb, pkt_add, pkt_add_scaled, pkt_scale, pkt_zero, Packet, PacketBuf};
 pub use plan::{compile, ComputeOp, Plan, PlanRecorder, RoundPlan, SendOp, SlotId};
 pub use sim::{run, Collective, Msg, Outputs, ProcId, Sim, SimReport};

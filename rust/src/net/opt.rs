@@ -1,0 +1,298 @@
+//! The Plan-IR optimizer: a pass pipeline that turns a recorded
+//! [`Plan`] into the densest possible serving artifact.
+//!
+//! A compiled plan is a *coefficient program*: every slot is a fixed
+//! linear combination of the `K` inputs (Remark 2 — width-independent),
+//! and the only slots a serving replay ever needs are the ones
+//! `output_slots` names. The pipeline exploits exactly that:
+//!
+//! 1. **Liveness / dead-slot elimination** — walk backwards from
+//!    `output_slots` through the defining lincombs. The IR stores every
+//!    lincomb over the *input* slots, so the backward closure terminates
+//!    in one step: live = output slots ∪ inputs. Everything else — the
+//!    wire-only intermediates of the prepare/butterfly/draw phases — is
+//!    dead for replay and dropped.
+//! 2. **CSE / re-interning** — surviving lincombs are re-interned by
+//!    coefficient row, merging duplicates and renumbering densely.
+//!    (Compile-time interning already dedups globally, so on
+//!    compiler-produced plans this pass merges nothing; it is the
+//!    normalisation guarantee for any future IR transform, and it counts
+//!    what it merged.)
+//! 3. **Flattening** — every live output lincomb is lowered to a dense
+//!    row over the `K` inputs, yielding the [`OutputMatrix`]: serving a
+//!    job is now literally `M · x`, a gemm
+//!    ([`gemm_row_into`](crate::gf::matrix::gemm_row_into), driven by
+//!    [`replay_opt`](crate::net::exec::replay_opt) /
+//!    [`replay_batch`](crate::net::exec::replay_batch)).
+//!
+//! For a systematic encode the `OutputMatrix` rows at the sink
+//! processors *are* the parity columns of the code's generator matrix —
+//! `framework::compile_plan` cross-checks them against the `codes::`
+//! algebra on every compile, so a miscompiled or corrupted plan fails
+//! loudly before it is ever cached.
+
+use super::plan::Plan;
+use super::sim::{ProcId, SimReport};
+use std::collections::{BTreeMap, HashMap};
+
+/// What the pass pipeline did to one plan. Reported next to `C1`/`C2`
+/// by [`plan_profile`](crate::framework::costs::plan_profile).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OptStats {
+    /// Arena slots in the raw plan (`K` inputs + interned lincombs).
+    pub slots_before: usize,
+    /// Live slots after DCE + CSE (`K` inputs + surviving lincombs).
+    pub slots_after: usize,
+    /// Interned lincombs dropped by liveness (wire-only intermediates).
+    pub dead_lincombs: usize,
+    /// Live lincombs merged by re-interning (duplicate coefficient rows).
+    pub cse_merged: usize,
+}
+
+impl OptStats {
+    /// Total interned lincombs the pipeline eliminated.
+    pub fn lincombs_eliminated(&self) -> usize {
+        self.dead_lincombs + self.cse_merged
+    }
+}
+
+/// The flattened form of a plan's outputs: one dense coefficient row
+/// over the `K` inputs per distinct live output lincomb, plus the
+/// `ProcId → row` assignment. Evaluating a job is `M · x`; several
+/// processors may share one row (e.g. a broadcast is a single row
+/// referenced by every participant).
+#[derive(Clone, Debug)]
+pub struct OutputMatrix {
+    k: usize,
+    n_rows: usize,
+    /// Row-major `n_rows × k` coefficient rows.
+    rows: Vec<u64>,
+    /// Final-packet row index per processor.
+    assignment: BTreeMap<ProcId, usize>,
+}
+
+impl OutputMatrix {
+    /// `K` — the number of columns (input slots).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of distinct coefficient rows.
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Dense coefficient row `i`.
+    pub fn row(&self, i: usize) -> &[u64] {
+        &self.rows[i * self.k..(i + 1) * self.k]
+    }
+
+    /// The dense row computing `pid`'s final packet, if `pid` has one.
+    pub fn row_for(&self, pid: ProcId) -> Option<&[u64]> {
+        self.assignment.get(&pid).map(|&i| self.row(i))
+    }
+
+    /// `ProcId → row index` of every final packet.
+    pub fn assignment(&self) -> &BTreeMap<ProcId, usize> {
+        &self.assignment
+    }
+
+    /// The whole matrix as a flat row-major buffer.
+    pub fn rows_flat(&self) -> &[u64] {
+        &self.rows
+    }
+}
+
+/// A plan lowered through the full pass pipeline: the [`OutputMatrix`],
+/// the pipeline's [`OptStats`], and enough statics to reproduce the
+/// exact [`SimReport`] of a live run at any width. This is what the
+/// serving path executes; the raw [`Plan`] is kept alongside it (in
+/// `framework::CompiledPlan`) for wire-level replay and inspection.
+#[derive(Clone, Debug)]
+pub struct OptimizedPlan {
+    /// `K` — number of input slots.
+    pub n_inputs: usize,
+    pub matrix: OutputMatrix,
+    pub stats: OptStats,
+    /// The raw plan's report at unit width; [`report`](Self::report)
+    /// scales it (every term of `C2`/bandwidth is linear in `W`).
+    unit_report: SimReport,
+}
+
+impl OptimizedPlan {
+    /// The exact [`SimReport`] a live run at payload width `w` produces
+    /// — identical to [`Plan::report`] on the raw plan.
+    pub fn report(&self, w: usize) -> SimReport {
+        let w = w as u64;
+        let per_round_max: Vec<u64> =
+            self.unit_report.per_round_max.iter().map(|m| m * w).collect();
+        SimReport {
+            c1: self.unit_report.c1,
+            c2: per_round_max.iter().sum(),
+            per_round_max,
+            messages: self.unit_report.messages,
+            bandwidth: self.unit_report.bandwidth * w,
+        }
+    }
+
+    /// Live slots after the pipeline (`stats.slots_after`).
+    pub fn live_slots(&self) -> usize {
+        self.stats.slots_after
+    }
+}
+
+/// Run the pass pipeline (liveness → CSE/re-intern → flatten) over a
+/// compiled plan. Pure function of the plan; the result replays
+/// bit-identically to the raw plan (asserted in `tests/plan_opt.rs`).
+pub fn optimize(plan: &Plan) -> OptimizedPlan {
+    let k = plan.n_inputs;
+
+    // Pass 1 — liveness: the replay path needs exactly the output slots
+    // (their lincombs are stored over the inputs, so the backward
+    // closure adds nothing further). Dedup'd in slot order so the later
+    // passes are deterministic.
+    let mut live: Vec<usize> = plan.output_slots().values().copied().collect();
+    live.sort_unstable();
+    live.dedup();
+    let live_compute_count = live.iter().filter(|&&s| s >= k).count();
+    let dead_lincombs = (plan.n_slots() - k) - live_compute_count;
+
+    // Pass 2 + 3 — re-intern by dense coefficient row and flatten. An
+    // input slot flattens to its unit vector; a compute slot scatters
+    // its (coeff, src) terms into a dense row.
+    let mut seen: HashMap<Vec<u64>, usize> = HashMap::with_capacity(live.len());
+    let mut rows: Vec<u64> = Vec::with_capacity(live.len() * k);
+    let mut slot_row: HashMap<usize, usize> = HashMap::with_capacity(live.len());
+    let mut cse_merged = 0usize;
+    let mut live_after_cse = 0usize;
+    for &slot in &live {
+        let mut row = vec![0u64; k];
+        if slot < k {
+            row[slot] = 1;
+        } else {
+            for &(c, src) in plan.lincomb(slot) {
+                row[src] = c;
+            }
+        }
+        let idx = if let Some(&i) = seen.get(&row) {
+            if slot >= k {
+                cse_merged += 1;
+            }
+            i
+        } else {
+            let i = seen.len();
+            rows.extend_from_slice(&row);
+            seen.insert(row, i);
+            if slot >= k {
+                live_after_cse += 1;
+            }
+            i
+        };
+        slot_row.insert(slot, idx);
+    }
+    let assignment: BTreeMap<ProcId, usize> = plan
+        .output_slots()
+        .iter()
+        .map(|(&pid, &slot)| (pid, slot_row[&slot]))
+        .collect();
+
+    let n_rows = seen.len();
+    OptimizedPlan {
+        n_inputs: k,
+        matrix: OutputMatrix {
+            k,
+            n_rows,
+            rows,
+            assignment,
+        },
+        stats: OptStats {
+            slots_before: plan.n_slots(),
+            slots_after: k + live_after_cse,
+            dead_lincombs,
+            cse_merged,
+        },
+        unit_report: plan.report(1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{PrepareShoot, TreeBroadcast, TreeReduce};
+    use crate::gf::{GfPrime, Mat};
+    use crate::net::plan::compile;
+    use std::sync::Arc;
+
+    #[test]
+    fn prepare_shoot_drops_wire_only_slots() {
+        let f = GfPrime::default_field();
+        let k = 16usize;
+        let c = Arc::new(Mat::random(&f, k, k, 5));
+        let plan = compile(1, k, |basis| {
+            Ok(Box::new(PrepareShoot::new(
+                f,
+                (0..k).collect(),
+                1,
+                c.clone(),
+                basis,
+            )))
+        })
+        .unwrap();
+        let opt = optimize(&plan);
+        assert_eq!(opt.stats.slots_before, plan.n_slots());
+        assert!(
+            opt.stats.slots_after < opt.stats.slots_before,
+            "prepare-phase partials must be dead: {:?}",
+            opt.stats
+        );
+        assert!(opt.stats.dead_lincombs > 0);
+        assert_eq!(opt.stats.cse_merged, 0, "compile interning already dedups");
+        assert_eq!(
+            opt.stats.slots_before - opt.stats.slots_after,
+            opt.stats.lincombs_eliminated()
+        );
+        // Flattened rows at each processor are the columns of C: output
+        // of proc j is Σ_k C[k][j]·x_k.
+        for j in 0..k {
+            let row = opt.matrix.row_for(j).unwrap();
+            for i in 0..k {
+                assert_eq!(row[i], c[(i, j)], "proc {j} input {i}");
+            }
+        }
+        // The report statics survive the lowering, at every width.
+        for w in [1usize, 7] {
+            assert_eq!(opt.report(w), plan.report(w), "w={w}");
+        }
+    }
+
+    #[test]
+    fn broadcast_flattens_to_one_shared_unit_row() {
+        let plan = compile(1, 1, |basis| {
+            Ok(Box::new(TreeBroadcast::new(
+                (0..8).collect(),
+                1,
+                basis.into_iter().next().unwrap(),
+            )))
+        })
+        .unwrap();
+        let opt = optimize(&plan);
+        assert_eq!(opt.matrix.n_rows(), 1, "one row shared by all 8 procs");
+        assert_eq!(opt.matrix.row(0), &[1]);
+        assert_eq!(opt.matrix.assignment().len(), 8);
+        assert!(opt.matrix.assignment().values().all(|&i| i == 0));
+        assert_eq!(opt.stats.slots_after, 1);
+    }
+
+    #[test]
+    fn reduce_flattens_root_to_all_ones_row() {
+        let f = GfPrime::default_field();
+        let n = 5usize;
+        let plan = compile(1, n, |basis| {
+            Ok(Box::new(TreeReduce::new(f, (0..n).collect(), 1, basis)))
+        })
+        .unwrap();
+        let opt = optimize(&plan);
+        let root = opt.matrix.row_for(0).unwrap();
+        assert_eq!(root, vec![1u64; n]);
+    }
+}

@@ -167,8 +167,10 @@ impl Plan {
 
     /// Structural validation: the p-port constraint per round, no
     /// self-messages, no empty payloads, every referenced slot defined
-    /// before use, every compute term over input slots, and the stored
-    /// `C1`/`C2` statics consistent with the schedule.
+    /// before use, every compute term over input slots in canonical
+    /// (strictly ascending, duplicate-free) order, every output slot
+    /// live and well-formed, and the stored `C1`/`C2` statics consistent
+    /// with the schedule.
     pub fn validate(&self) -> Result<()> {
         ensure!(self.ports >= 1, "plan needs at least one port");
         for (i, c) in self.computes.iter().enumerate() {
@@ -177,6 +179,14 @@ impl Plan {
                 ensure!(src < self.n_inputs, "compute term over non-input slot");
                 ensure!(coeff != 0, "zero coefficient stored in lincomb");
             }
+            // Canonical term order: the interner emits sources strictly
+            // ascending; flattening and replay rely on it for
+            // deterministic, bit-identical evaluation.
+            ensure!(
+                c.terms.windows(2).all(|t| t[0].1 < t[1].1),
+                "lincomb terms of slot {} not in strictly ascending source order",
+                c.slot
+            );
         }
         let mut messages = 0u64;
         let mut packets = 0u64;
@@ -213,8 +223,21 @@ impl Plan {
         ensure!(lo == defined && hi == self.n_slots(), "bad output slot range");
         ensure!(messages == self.messages, "message count mismatch");
         ensure!(packets == self.packets, "packet count mismatch");
+        ensure!(!self.outputs.is_empty(), "plan has no outputs");
         for (&pid, &slot) in &self.outputs {
             ensure!(slot < self.n_slots(), "output of {pid} references undefined slot");
+        }
+        // Liveness of the trailing output-only range: those slots exist
+        // *only* because an output first materialised them, so each must
+        // be referenced by some output — anything else is dead weight a
+        // recorder bug smuggled in.
+        let referenced: std::collections::HashSet<SlotId> =
+            self.outputs.values().copied().collect();
+        for s in lo..hi {
+            ensure!(
+                referenced.contains(&s),
+                "output-only slot {s} is not referenced by any output"
+            );
         }
         Ok(())
     }

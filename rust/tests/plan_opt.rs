@@ -1,0 +1,372 @@
+//! Optimizer conformance: for every A2A variant, over both field
+//! families, across degenerate shapes and batch sizes, the optimized
+//! plan — replayed one job at a time (`replay_opt`) or as one columnar
+//! batch (`replay_batch`) — must be **bit-identical** to unoptimized
+//! raw-plan `replay`, which in turn must be bit-identical to live
+//! `Sim::run` stepping (outputs *and* report).
+//!
+//! Also asserts the pass-pipeline statics: the optimizer never grows a
+//! plan, preserves the `SimReport` statics exactly, and at `N ≥ 64`
+//! strictly shrinks every A2A variant (the wire-only prepare/butterfly
+//! /draw intermediates are dead for serving).
+
+use dce::codes::{structured::disjoint_family, StructuredPoints};
+use dce::collectives::{CauchyA2A, DftA2A, DrawLoose, PrepareShoot};
+use dce::framework::{A2aAlgo, SystematicEncode};
+use dce::gf::{Field, Gf2e, GfPrime, Mat};
+use dce::net::{exec, opt, plan, run, Collective, Packet, Sim};
+use dce::util::{ipow, Rng};
+use std::sync::Arc;
+
+const BATCH_SIZES: [usize; 3] = [1, 3, 32];
+
+fn rand_inputs<F: Field>(f: &F, k: usize, w: usize, rng: &mut Rng) -> Vec<Packet> {
+    (0..k)
+        .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+        .collect()
+}
+
+/// Compile + optimize the collective once, then for each batch size `B`:
+/// `replay_batch` over `B` fresh payload sets must equal per-job raw
+/// `replay` (outputs + report) bit for bit; job 0 additionally checks
+/// `replay_opt` and a live `Sim::run` (outputs + report).
+fn assert_opt_matches<F, B>(tag: &str, f: &F, ports: usize, k: usize, w: usize, build: B)
+where
+    F: Field,
+    B: Fn(Vec<Packet>) -> Box<dyn Collective>,
+{
+    let compiled = plan::compile(ports, k, |basis| Ok(build(basis))).unwrap();
+    let optimized = opt::optimize(&compiled);
+    assert!(
+        optimized.stats.slots_after <= optimized.stats.slots_before,
+        "{tag}: optimizer grew the plan: {:?}",
+        optimized.stats
+    );
+    assert_eq!(
+        optimized.report(w),
+        compiled.report(w),
+        "{tag}: lowering changed the report statics"
+    );
+
+    let mut rng = Rng::new(k as u64 * 7817 + ports as u64 * 131 + w as u64);
+    for b in BATCH_SIZES {
+        let jobs: Vec<Vec<Packet>> = (0..b).map(|_| rand_inputs(f, k, w, &mut rng)).collect();
+        let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
+        let batched = exec::replay_batch(&optimized, f, &refs).unwrap();
+        assert_eq!(batched.len(), b, "{tag} B={b}: replay count");
+
+        for (j, x) in jobs.iter().enumerate() {
+            let raw = exec::replay(&compiled, f, x).unwrap();
+            assert_eq!(
+                batched[j].outputs, raw.outputs,
+                "{tag} B={b} job {j}: batch vs raw outputs"
+            );
+            assert_eq!(
+                batched[j].report, raw.report,
+                "{tag} B={b} job {j}: batch vs raw report"
+            );
+            if j == 0 {
+                let single = exec::replay_opt(&optimized, f, x).unwrap();
+                assert_eq!(single.outputs, raw.outputs, "{tag} B={b}: replay_opt outputs");
+                assert_eq!(single.report, raw.report, "{tag} B={b}: replay_opt report");
+
+                let mut live = build(x.clone());
+                let live_report = run(&mut Sim::new(ports), live.as_mut()).unwrap();
+                assert_eq!(raw.outputs, live.outputs(), "{tag} B={b}: raw vs live outputs");
+                assert_eq!(raw.report, live_report, "{tag} B={b}: raw vs live report");
+            }
+        }
+    }
+}
+
+#[test]
+fn prepare_shoot_prime_and_gf2e_including_degenerate() {
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xB01);
+    for (k, p, w) in [
+        (1usize, 1usize, 1usize), // fully degenerate
+        (2, 1, 1),
+        (16, 1, 4),
+        (25, 2, 3),
+        (100, 4, 2),
+    ] {
+        let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+        let c2 = c.clone();
+        assert_opt_matches(&format!("ps K={k} p={p} w={w}"), &f, p, k, w, move |ins| {
+            Box::new(PrepareShoot::new(f, (0..k).collect(), p, c2.clone(), ins))
+        });
+    }
+    let f = Gf2e::new(8).unwrap();
+    for (k, p, w) in [(1usize, 1usize, 1usize), (13, 2, 3), (40, 3, 1)] {
+        let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+        let ff = f.clone();
+        assert_opt_matches(
+            &format!("ps/gf2e K={k} p={p} w={w}"),
+            &f,
+            p,
+            k,
+            w,
+            move |ins| {
+                Box::new(PrepareShoot::new(
+                    ff.clone(),
+                    (0..k).collect(),
+                    p,
+                    c.clone(),
+                    ins,
+                ))
+            },
+        );
+    }
+}
+
+#[test]
+fn dft_a2a_both_fields() {
+    let f = GfPrime::default_field();
+    for (p_base, h, p, w) in [(2u64, 3u32, 1usize, 1usize), (4, 2, 3, 2), (2, 4, 1, 3)] {
+        let k = ipow(p_base, h) as usize;
+        assert_opt_matches(
+            &format!("dft P={p_base} H={h} p={p}"),
+            &f,
+            p,
+            k,
+            w,
+            move |ins| {
+                Box::new(DftA2A::new(f, (0..k).collect(), p, p_base, h, ins, false).unwrap())
+            },
+        );
+    }
+    // GF(256): q−1 = 255 = 3·5·17 — prime radixes only (H = 1 each).
+    let f = Gf2e::new(8).unwrap();
+    for (p_base, p, w) in [(3u64, 2usize, 2usize), (17, 2, 1)] {
+        let k = p_base as usize;
+        let ff = f.clone();
+        assert_opt_matches(
+            &format!("dft/gf2e P={p_base} p={p}"),
+            &f,
+            p,
+            k,
+            w,
+            move |ins| {
+                Box::new(
+                    DftA2A::new(ff.clone(), (0..k).collect(), p, p_base, 1, ins, false).unwrap(),
+                )
+            },
+        );
+    }
+}
+
+#[test]
+fn draw_loose_both_fields() {
+    let f = GfPrime::default_field();
+    for (n, p_base, p, w, invert) in [
+        (8usize, 2u64, 1usize, 1usize, false),
+        (24, 2, 1, 2, false),
+        (24, 2, 1, 1, true),
+        (5, 2, 1, 2, false), // H = 0 fallback
+    ] {
+        let hmax = StructuredPoints::max_h(&f, n as u64, p_base);
+        let m = n / ipow(p_base, hmax) as usize;
+        let sp = StructuredPoints::new(&f, n, p_base, (0..m as u64).collect()).unwrap();
+        assert_opt_matches(
+            &format!("dl n={n} P={p_base} p={p} inv={invert}"),
+            &f,
+            p,
+            n,
+            w,
+            move |ins| {
+                Box::new(DrawLoose::new(f, (0..n).collect(), p, &sp, ins, invert).unwrap())
+            },
+        );
+    }
+    let f = Gf2e::new(8).unwrap();
+    let n = 6usize;
+    let sp = StructuredPoints::new(&f, n, 3, vec![0, 1]).unwrap();
+    let ff = f.clone();
+    assert_opt_matches("dl/gf2e n=6", &f, 1, n, 2, move |ins| {
+        Box::new(DrawLoose::new(ff.clone(), (0..n).collect(), 1, &sp, ins, false).unwrap())
+    });
+}
+
+#[test]
+fn cauchy_a2a_both_fields() {
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xB05);
+    for (n, p, w) in [(8usize, 1usize, 1usize), (16, 2, 2)] {
+        let fam = disjoint_family(&f, n, 2, 2).unwrap();
+        let pre: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+        let post: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+        assert_opt_matches(&format!("cauchy n={n} p={p}"), &f, p, n, w, move |ins| {
+            Box::new(
+                CauchyA2A::new(
+                    f,
+                    (0..n).collect(),
+                    p,
+                    &fam[0],
+                    &fam[1],
+                    pre.clone(),
+                    post.clone(),
+                    ins,
+                )
+                .unwrap(),
+            )
+        });
+    }
+    let f = Gf2e::new(8).unwrap();
+    let n = 6usize;
+    let fam = disjoint_family(&f, n, 3, 2).unwrap();
+    let pre: Vec<u64> = (0..n).map(|_| rng.range(1, 256)).collect();
+    let post: Vec<u64> = (0..n).map(|_| rng.range(1, 256)).collect();
+    let ff = f.clone();
+    assert_opt_matches("cauchy/gf2e n=6", &f, 1, n, 2, move |ins| {
+        Box::new(
+            CauchyA2A::new(
+                ff.clone(),
+                (0..n).collect(),
+                1,
+                &fam[0],
+                &fam[1],
+                pre.clone(),
+                post.clone(),
+                ins,
+            )
+            .unwrap(),
+        )
+    });
+}
+
+#[test]
+fn systematic_framework_degenerate_shapes() {
+    // The framework around the A2As at the degenerate corners the
+    // satellite names: K=1, R=1, p=1, W=1 (and small mixes).
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xB06);
+    for (k, r, p, w) in [
+        (1usize, 1usize, 1usize, 1usize),
+        (4, 1, 1, 1),
+        (1, 4, 1, 1),
+        (1, 1, 1, 3),
+        (12, 4, 2, 2),
+        (4, 12, 2, 2),
+    ] {
+        let a = Arc::new(Mat::random(&f, k, r, rng.next_u64()));
+        let a2 = a.clone();
+        assert_opt_matches(
+            &format!("sys K={k} R={r} p={p} w={w}"),
+            &f,
+            p,
+            k,
+            w,
+            move |ins| {
+                Box::new(SystematicEncode::new(f, a2.clone(), ins, p, A2aAlgo::Universal).unwrap())
+            },
+        );
+    }
+}
+
+#[test]
+fn every_a2a_variant_strictly_shrinks_at_n64() {
+    // The acceptance claim: at N ≥ 64 every A2A variant carries
+    // wire-only intermediate slots, so the optimized plan has strictly
+    // fewer live slots than the raw plan.
+    let f = GfPrime::default_field();
+    let n = 64usize;
+    let mut rng = Rng::new(0xB07);
+
+    type Build = Box<dyn Fn(Vec<Packet>) -> Box<dyn Collective>>;
+    let c = Arc::new(Mat::random(&f, n, n, rng.next_u64()));
+    let c2 = c.clone();
+    let mut variants: Vec<(&str, Build)> = vec![(
+        "universal",
+        Box::new(move |ins| {
+            Box::new(PrepareShoot::new(f, (0..n).collect(), 1, c2.clone(), ins))
+        }),
+    )];
+    variants.push((
+        "dft",
+        Box::new(move |ins| {
+            Box::new(DftA2A::new(f, (0..n).collect(), 1, 2, 6, ins, false).unwrap())
+        }),
+    ));
+    let hmax = StructuredPoints::max_h(&f, n as u64, 2);
+    let m = n / ipow(2, hmax) as usize;
+    let sp = StructuredPoints::new(&f, n, 2, (0..m as u64).collect()).unwrap();
+    variants.push((
+        "vandermonde",
+        Box::new(move |ins| {
+            Box::new(DrawLoose::new(f, (0..n).collect(), 1, &sp, ins, false).unwrap())
+        }),
+    ));
+    let fam = disjoint_family(&f, n, 2, 2).unwrap();
+    let pre: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+    let post: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+    variants.push((
+        "cauchy",
+        Box::new(move |ins| {
+            Box::new(
+                CauchyA2A::new(
+                    f,
+                    (0..n).collect(),
+                    1,
+                    &fam[0],
+                    &fam[1],
+                    pre.clone(),
+                    post.clone(),
+                    ins,
+                )
+                .unwrap(),
+            )
+        }),
+    ));
+
+    for (tag, build) in &variants {
+        let compiled = plan::compile(1, n, |basis| Ok(build(basis))).unwrap();
+        let optimized = opt::optimize(&compiled);
+        assert!(
+            optimized.stats.slots_after < optimized.stats.slots_before,
+            "{tag} at N={n}: expected strict live-slot reduction, got {:?}",
+            optimized.stats
+        );
+        assert!(optimized.stats.dead_lincombs > 0, "{tag}: {:?}", optimized.stats);
+    }
+}
+
+#[test]
+fn compiled_plan_carries_opt_and_cross_checked_sink_rows() {
+    // The coordinator-facing path: every cached CompiledPlan stores the
+    // optimized form, and its flattened sink rows equal the parity
+    // columns (compile_plan cross-checks; re-assert here explicitly).
+    use dce::coordinator::{EncodeJob, JobConfig, PlanCache};
+    use dce::framework::AlgoRequest;
+    let cache = PlanCache::new();
+    for algo in [
+        AlgoRequest::Universal,
+        AlgoRequest::RsSpecific,
+        AlgoRequest::MultiReduce,
+        AlgoRequest::Direct,
+    ] {
+        let cfg = JobConfig {
+            k: 16,
+            r: 4,
+            w: 8,
+            algorithm: algo,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg).unwrap();
+        let compiled = job.compiled(&cache).unwrap();
+        for r in 0..compiled.layout.r {
+            let row = compiled
+                .opt
+                .matrix
+                .row_for(compiled.layout.sink(r))
+                .expect("sink has a flattened row");
+            for k in 0..compiled.layout.k {
+                assert_eq!(row[k], job.parity[(k, r)], "{algo:?} sink {r} input {k}");
+            }
+        }
+        // Live vs cached equivalence through the optimized path.
+        let live = job.run().unwrap();
+        let cached = job.run_cached(&cache).unwrap();
+        assert_eq!(cached.sim, live.sim, "{algo:?}");
+        assert_eq!(cached.verified, Some(true), "{algo:?}");
+    }
+}
