@@ -1,0 +1,139 @@
+//! Bench: **erasure-recovery throughput vs fraction of failed
+//! processors** — the cost of serving a batch through the degraded
+//! path (taint analysis + surviving-rows columnar pass + survivor →
+//! lost-sink repair) as the failure count sweeps 0 → R.
+//!
+//! Scenario: a `[N = 80, K = 64]` structured-RS shape loses `F`
+//! processors (drawn over sources *and* sinks, storage-loss style) and
+//! the service keeps answering every request with all `R` parity rows —
+//! lost sinks reconstructed from any `K` survivors instead of
+//! re-encoded. Correctness is asserted unconditionally: every degraded
+//! batch must be **bit-identical** to the healthy batch at every
+//! failure count up to `R`. Timings land in `BENCH_fault.json` at the
+//! repo root for the CI `bench-trend` job (smoke runs gate structure
+//! only; commit a non-smoke run to track the perf trajectory).
+
+use dce::coordinator::{EncodeJob, JobConfig, PlanCache};
+use dce::gf::Field;
+use dce::net::{FaultSpec, POST_RUN};
+use dce::util::{bench, bench_iters, bench_smoke, Rng};
+
+struct Point {
+    failed: usize,
+    frac: f64,
+    us_per_job: f64,
+    recovered_per_job: usize,
+    recovered_per_s: f64,
+}
+
+fn main() {
+    let cfg = JobConfig {
+        k: 64,
+        r: 16,
+        w: 4,
+        ports: 2,
+        ..JobConfig::default()
+    };
+    let (k, r, w, ports) = (cfg.k, cfg.r, cfg.w, cfg.ports);
+    let n = k + r;
+    let b = 16usize;
+    let iters = bench_iters(20);
+    let job = EncodeJob::synthetic(cfg).unwrap();
+    let cache = PlanCache::new();
+    let f = job.field.clone();
+
+    let mut rng = Rng::new(0xFA);
+    let jobs: Vec<Vec<Vec<u64>>> = (0..b)
+        .map(|_| {
+            (0..k)
+                .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                .collect()
+        })
+        .collect();
+    let refs: Vec<&[Vec<u64>]> = jobs.iter().map(|x| x.as_slice()).collect();
+    let healthy = job.encode_batch_cached(&cache, &refs).unwrap();
+
+    println!("## erasure recovery (K={k} R={r} W={w} p={ports}, B={b}, {iters} rounds)");
+    let procs: Vec<usize> = (0..n).collect();
+    let mut points = Vec::new();
+    for failed in [0usize, 4, 8, 12, 16] {
+        let faults = FaultSpec::random_crashes(0xFA + failed as u64, &procs, failed, POST_RUN);
+        // Correctness gate first — at every failure count up to R, the
+        // repaired batch is bit-identical to the healthy one.
+        let (coded, stats) = job
+            .encode_degraded_batch_cached(&cache, &refs, &faults)
+            .expect("≤ R crashes are always recoverable");
+        assert_eq!(coded, healthy, "failed={failed}: repaired ≡ healthy");
+        assert_eq!(
+            stats.outputs_recovered,
+            (stats.outputs_lost * b) as u64,
+            "failed={failed}"
+        );
+
+        let st = bench(&format!("degraded batch serve, {failed:>2} failed"), iters, |_| {
+            job.encode_degraded_batch_cached(&cache, &refs, &faults)
+                .unwrap()
+                .0
+                .len()
+        });
+        println!("{st}");
+        let secs = st.median.as_secs_f64();
+        let recovered = stats.outputs_recovered as f64;
+        points.push(Point {
+            failed,
+            frac: failed as f64 / n as f64,
+            us_per_job: secs * 1e6 / b as f64,
+            recovered_per_job: stats.outputs_lost,
+            recovered_per_s: if secs > 0.0 { recovered / secs } else { 0.0 },
+        });
+    }
+    for p in &points {
+        println!(
+            "failed {:>2} ({:>5.1}%): {:>8.2} us/job, {} sinks repaired/job, {:>10.0} repairs/s",
+            p.failed,
+            p.frac * 100.0,
+            p.us_per_job,
+            p.recovered_per_job,
+            p.recovered_per_s
+        );
+    }
+    write_json(k, r, w, ports, b, &points);
+    println!("\nfault_recovery bench complete");
+}
+
+/// Emit `BENCH_fault.json` at the repo root (manifest dir's parent).
+fn write_json(k: usize, r: usize, w: usize, ports: usize, b: usize, points: &[Point]) {
+    let point_json: Vec<String> = points
+        .iter()
+        .map(|p| {
+            format!(
+                concat!(
+                    "{{\"failed\":{},\"frac\":{:.4},\"us_per_job\":{:.3},",
+                    "\"recovered_per_job\":{},\"recovered_per_s\":{:.1}}}"
+                ),
+                p.failed, p.frac, p.us_per_job, p.recovered_per_job, p.recovered_per_s
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"fault_recovery\",\"smoke\":{},",
+            "\"shape\":{{\"k\":{},\"r\":{},\"w\":{},\"ports\":{}}},\"batch\":{},",
+            "\"recovery_exact\":true,\"points\":[{}]}}"
+        ),
+        bench_smoke(),
+        k,
+        r,
+        w,
+        ports,
+        b,
+        point_json.join(",")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("manifest dir has a parent")
+        .join("BENCH_fault.json");
+    std::fs::write(&path, format!("{json}\n"))
+        .unwrap_or_else(|e| panic!("could not write {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+}

@@ -8,13 +8,19 @@
 //!   erasure decoding, MDS checks.
 //! * [`lagrange`] — Lagrange matrices & Lagrange coded computing
 //!   (Remark 9).
+//! * [`recovery`] — the erasure-recovery operator the coordinator's
+//!   repair path executes: survivors → data / lost sink outputs, as one
+//!   dense matrix per failure pattern (GRS interpolation algebra, with a
+//!   Gaussian-elimination fallback for arbitrary linear codes).
 
 pub mod lagrange;
+pub mod recovery;
 pub mod rm;
 pub mod rs;
 pub mod structured;
 
 pub use lagrange::LagrangeCode;
+pub use recovery::Recovery;
 pub use rm::RmCode;
 pub use rs::GrsCode;
 pub use structured::StructuredPoints;

@@ -1,0 +1,176 @@
+//! The erasure-recovery operator: survivors → lost outputs, as one
+//! dense matrix per failure pattern.
+//!
+//! This is the layer the coordinator's repair path executes. Given a
+//! systematic code `G = [I | A]` and the `K` survivor coordinate
+//! positions a [`DegradedReport`](crate::net::DegradedReport) certifies,
+//! it precomputes
+//!
+//! * the **data matrix** `D` (`K×K`, `x = c·D`) — by structured
+//!   Lagrange-interpolation algebra for GRS/Lagrange codes
+//!   ([`GrsCode::decode_matrix`], `O(K²)` construction via
+//!   `gf/vandermonde` + `gf/poly`) or by Gaussian elimination for
+//!   arbitrary parity matrices
+//!   ([`structured::solve_data_matrix`](super::structured::solve_data_matrix));
+//! * the **repair matrix** `R = D·A_lost` (`K×L`) mapping survivor
+//!   packets straight to the `L` lost sink outputs.
+//!
+//! Applying the operator is then `L` dense lincombs over the survivor
+//! packets per job — exactly the `OutputMatrix · x` evaluation
+//! discipline of the serving path, so recovered packets are
+//! **bit-identical** to the healthy run's (canonical field elements are
+//! unique, and every evaluation path reduces to the same exact sum).
+
+use super::rs::GrsCode;
+use super::structured::solve_data_matrix;
+use crate::gf::{Field, Mat};
+
+/// A reusable recovery operator for one `(code, failure-pattern)` pair.
+#[derive(Clone, Debug)]
+pub struct Recovery {
+    /// Survivor coordinate positions, in the order packets must be fed.
+    positions: Vec<usize>,
+    /// `K×K` data matrix: `x = c · D`.
+    data: Mat,
+    /// Lost sink indices (`r` in `[0, R)`) this operator reconstructs.
+    lost_sinks: Vec<usize>,
+    /// `K×L` repair matrix: `y_lost = c · (D·A_lost)`.
+    repair: Mat,
+}
+
+impl Recovery {
+    /// Build the operator from any `K` survivor `positions` (codeword
+    /// coordinates in `[0, N)`) for the `lost_sinks` to reconstruct.
+    /// Uses the GRS interpolation algebra when `code` is given, the
+    /// Gaussian fallback on the raw parity matrix otherwise.
+    pub fn plan<F: Field>(
+        f: &F,
+        code: Option<&GrsCode>,
+        a: &Mat,
+        positions: &[usize],
+        lost_sinks: &[usize],
+    ) -> anyhow::Result<Self> {
+        let (k, r) = (a.rows, a.cols);
+        anyhow::ensure!(
+            lost_sinks.iter().all(|&s| s < r),
+            "lost sink index out of range"
+        );
+        let data = match code {
+            Some(c) => {
+                anyhow::ensure!(
+                    c.k() == k && c.r() == r,
+                    "code shape ({}, {}) != parity shape ({k}, {r})",
+                    c.k(),
+                    c.r()
+                );
+                c.decode_matrix(f, positions)?
+            }
+            None => solve_data_matrix(f, a, positions)?,
+        };
+        // A_lost: the parity columns of the lost sinks, K×L.
+        let a_lost = a.select_cols(lost_sinks);
+        let repair = data.mul(f, &a_lost);
+        Ok(Recovery {
+            positions: positions.to_vec(),
+            data,
+            lost_sinks: lost_sinks.to_vec(),
+            repair,
+        })
+    }
+
+    /// The survivor positions this operator consumes, in feed order.
+    pub fn positions(&self) -> &[usize] {
+        &self.positions
+    }
+
+    /// The sink indices this operator reconstructs.
+    pub fn lost_sinks(&self) -> &[usize] {
+        &self.lost_sinks
+    }
+
+    /// Reconstruct the data packets from the survivor packets
+    /// (`coords[i]` = the packet at `positions[i]`).
+    pub fn data_packets<F: Field>(&self, f: &F, coords: &[&[u64]]) -> Vec<Vec<u64>> {
+        assert_eq!(coords.len(), self.positions.len(), "survivor count");
+        self.data.packet_vec_mul(f, coords)
+    }
+
+    /// Reconstruct the lost sinks' outputs (in `lost_sinks` order) from
+    /// the survivor packets — bit-identical to the healthy run's
+    /// packets at those sinks.
+    pub fn lost_outputs<F: Field>(&self, f: &F, coords: &[&[u64]]) -> Vec<Vec<u64>> {
+        assert_eq!(coords.len(), self.positions.len(), "survivor count");
+        self.repair.packet_vec_mul(f, coords)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::GfPrime;
+    use crate::net::pkt_add_scaled;
+    use crate::util::Rng;
+
+    fn encode_all<F: Field>(f: &F, a: &Mat, xs: &[Vec<u64>]) -> Vec<Vec<u64>> {
+        let w = xs[0].len();
+        let mut all = xs.to_vec();
+        for r in 0..a.cols {
+            let mut acc = vec![0u64; w];
+            for k in 0..a.rows {
+                pkt_add_scaled(f, &mut acc, a[(k, r)], &xs[k]);
+            }
+            all.push(acc);
+        }
+        all
+    }
+
+    #[test]
+    fn grs_and_gaussian_paths_reconstruct_identically() {
+        let f = GfPrime::default_field();
+        let code = GrsCode::structured(&f, 8, 4, 2).unwrap();
+        let a = code.parity_matrix(&f);
+        let mut rng = Rng::new(3);
+        let xs: Vec<Vec<u64>> = (0..8)
+            .map(|_| (0..3).map(|_| rng.below(f.order())).collect())
+            .collect();
+        let all = encode_all(&f, &a, &xs);
+        for trial in 0..15 {
+            let survivors = rng.choose(12, 8);
+            let lost_sinks: Vec<usize> = (0..4)
+                .filter(|&r| !survivors.contains(&(8 + r)))
+                .collect();
+            let coords: Vec<&[u64]> = survivors.iter().map(|&i| all[i].as_slice()).collect();
+            let grs = Recovery::plan(&f, Some(&code), &a, &survivors, &lost_sinks).unwrap();
+            let gauss = Recovery::plan(&f, None, &a, &survivors, &lost_sinks).unwrap();
+            assert_eq!(grs.data_packets(&f, &coords), xs, "trial {trial}: grs data");
+            assert_eq!(gauss.data_packets(&f, &coords), xs, "trial {trial}: gauss data");
+            let want: Vec<Vec<u64>> =
+                lost_sinks.iter().map(|&r| all[8 + r].clone()).collect();
+            assert_eq!(grs.lost_outputs(&f, &coords), want, "trial {trial}: grs sinks");
+            assert_eq!(gauss.lost_outputs(&f, &coords), want, "trial {trial}: gauss sinks");
+        }
+    }
+
+    #[test]
+    fn recovery_works_over_gf2e() {
+        let f = crate::gf::Gf2e::new(8).unwrap();
+        let code = GrsCode::plain(&f, (1..=4).collect(), (9..12).collect()).unwrap();
+        let a = code.parity_matrix(&f);
+        let xs: Vec<Vec<u64>> = (0..4u64).map(|i| vec![(i * 53 + 1) % 256]).collect();
+        let all = encode_all(&f, &a, &xs);
+        // Lose sink 0 and source 2; recover from {0, 1, 3, K+1}.
+        let survivors = vec![0usize, 1, 3, 5];
+        let rec = Recovery::plan(&f, Some(&code), &a, &survivors, &[0]).unwrap();
+        let coords: Vec<&[u64]> = survivors.iter().map(|&i| all[i].as_slice()).collect();
+        assert_eq!(rec.data_packets(&f, &coords), xs);
+        assert_eq!(rec.lost_outputs(&f, &coords), vec![all[4].clone()]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let f = GfPrime::default_field();
+        let a = Mat::random(&f, 4, 2, 1);
+        assert!(Recovery::plan(&f, None, &a, &[0, 1, 2], &[0]).is_err(), "too few");
+        assert!(Recovery::plan(&f, None, &a, &[0, 1, 2, 3], &[7]).is_err(), "bad sink");
+    }
+}

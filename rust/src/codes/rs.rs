@@ -140,6 +140,71 @@ impl GrsCode {
         x.iter().copied().chain(parity).collect()
     }
 
+    /// The `K×K` erasure-decoding matrix for the codeword `positions`
+    /// (distinct, in `[0, N)`): with `c` the row vector of the codeword
+    /// values at those positions, the data is `x = c · D`.
+    ///
+    /// Derivation (all via `gf/poly` + `gf/vandermonde`): the codeword is
+    /// `c_i = m_i·g(z_i)` for the degree-`<K` polynomial `g`, the
+    /// evaluation point `z_i` (`α` or `β`) and multiplier `m_i` (`u` or
+    /// `v`) of position `i`. Row `j` of the structured Vandermonde
+    /// inverse on the survivor points is the coefficient vector of the
+    /// Lagrange basis `ℓ_j` (eq. (28)), so `g = (c ⊙ m^{-1}) · V^{-1}`
+    /// and `x_k = u_k·g(α_k)` gives
+    ///
+    /// ```text
+    /// D = diag(m^{-1}) · V_pts^{-1} · V_α · diag(u).
+    /// ```
+    ///
+    /// Computing `D` once per failure pattern turns packet-wise decoding
+    /// into `K` lincombs per packet column — the same dense-row
+    /// evaluation discipline as the serving path's `OutputMatrix`.
+    pub fn decode_matrix<F: Field>(&self, f: &F, positions: &[usize]) -> anyhow::Result<Mat> {
+        let k = self.k();
+        anyhow::ensure!(
+            positions.len() == k,
+            "need exactly K = {k} positions, got {}",
+            positions.len()
+        );
+        let mut pts = Vec::with_capacity(k);
+        let mut minv = Vec::with_capacity(k);
+        for &pos in positions {
+            anyhow::ensure!(pos < self.n(), "position {pos} out of range");
+            if pos < k {
+                pts.push(self.alphas[pos]);
+                minv.push(f.inv(self.u[pos]));
+            } else {
+                pts.push(self.betas[pos - k]);
+                minv.push(f.inv(self.v[pos - k]));
+            }
+        }
+        anyhow::ensure!(vandermonde::points_distinct(&pts), "repeated positions");
+        let vinv = vandermonde::inverse(f, &pts);
+        let va = vandermonde::vandermonde(f, k, &self.alphas);
+        Ok(vinv.diag_mul(f, &minv).mul(f, &va).mul_diag(f, &self.u))
+    }
+
+    /// Packet-wise erasure decode: reconstruct the `K` data packets from
+    /// any `K` surviving codeword coordinates (`(position, packet)`
+    /// pairs; extra coordinates beyond `K` are ignored). Element-wise
+    /// over the packet width — Remark 2's `F_q^W` view applies to
+    /// decoding exactly as it does to encoding.
+    pub fn decode_packets<F: Field>(
+        &self,
+        f: &F,
+        coords: &[(usize, &[u64])],
+    ) -> anyhow::Result<Vec<Vec<u64>>> {
+        let k = self.k();
+        anyhow::ensure!(coords.len() >= k, "need at least K = {k} coordinates");
+        let coords = &coords[..k];
+        let w = coords.first().map_or(0, |(_, p)| p.len());
+        anyhow::ensure!(coords.iter().all(|(_, p)| p.len() == w), "ragged packets");
+        let positions: Vec<usize> = coords.iter().map(|&(pos, _)| pos).collect();
+        let d = self.decode_matrix(f, &positions)?;
+        let pkts: Vec<&[u64]> = coords.iter().map(|&(_, p)| p).collect();
+        Ok(d.packet_vec_mul(f, &pkts))
+    }
+
     /// Erasure-decode the data `x` from any `K` codeword coordinates
     /// (`(position, value)` pairs, positions in `[0, N)`).
     pub fn decode<F: Field>(&self, f: &F, coords: &[(usize, u64)]) -> anyhow::Result<Vec<u64>> {
@@ -259,6 +324,80 @@ mod tests {
         for (r, &b) in code.betas.iter().enumerate() {
             assert_eq!(cw[3 + r], poly::eval(&f, &y, b));
         }
+    }
+
+    #[test]
+    fn decode_matrix_agrees_with_interpolation_decode() {
+        let f = f();
+        let code = GrsCode::plain(&f, (1..=6).collect(), (60..64).collect()).unwrap();
+        let x: Vec<u64> = vec![5, 786000, 0, 17, 99, 3];
+        let cw = code.encode(&f, &x);
+        let mut rng = crate::util::Rng::new(21);
+        for trial in 0..30 {
+            let subset = rng.choose(code.n(), code.k());
+            // Scalar path (poly interpolation per call).
+            let coords: Vec<(usize, u64)> = subset.iter().map(|&i| (i, cw[i])).collect();
+            assert_eq!(code.decode(&f, &coords).unwrap(), x, "trial {trial}");
+            // Matrix path: x = c · D.
+            let d = code.decode_matrix(&f, &subset).unwrap();
+            let got: Vec<u64> = (0..code.k())
+                .map(|kk| {
+                    let mut acc = 0u64;
+                    for (i, &pos) in subset.iter().enumerate() {
+                        acc = f.add(acc, f.mul(cw[pos], d[(i, kk)]));
+                    }
+                    acc
+                })
+                .collect();
+            assert_eq!(got, x, "trial {trial}: decode matrix");
+        }
+    }
+
+    #[test]
+    fn decode_packets_roundtrips_wide_payloads_both_fields() {
+        let f = f();
+        let code = GrsCode::structured(&f, 8, 4, 2).unwrap();
+        let w = 5usize;
+        let mut rng = crate::util::Rng::new(8);
+        let xs: Vec<Vec<u64>> = (0..8)
+            .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+            .collect();
+        // Column-wise encode: coordinate j's packet.
+        let a = code.parity_matrix(&f);
+        let mut coords_all: Vec<Vec<u64>> = xs.clone();
+        for r in 0..4 {
+            let mut acc = vec![0u64; w];
+            for k in 0..8 {
+                crate::net::pkt_add_scaled(&f, &mut acc, a[(k, r)], &xs[k]);
+            }
+            coords_all.push(acc);
+        }
+        for trial in 0..20 {
+            let subset = rng.choose(12, 8);
+            let coords: Vec<(usize, &[u64])> =
+                subset.iter().map(|&i| (i, coords_all[i].as_slice())).collect();
+            assert_eq!(code.decode_packets(&f, &coords).unwrap(), xs, "trial {trial}");
+        }
+        // GF(2^8): same story on a plain code.
+        let f = crate::gf::Gf2e::new(8).unwrap();
+        let code = GrsCode::plain(&f, (1..=5).collect(), (10..13).collect()).unwrap();
+        let xs: Vec<Vec<u64>> = (0..5u64)
+            .map(|i| vec![(i * 31) % 256, (i * 7 + 2) % 256])
+            .collect();
+        let a = code.parity_matrix(&f);
+        let mut coords_all = xs.clone();
+        for r in 0..3 {
+            let mut acc = vec![0u64; 2];
+            for k in 0..5 {
+                crate::net::pkt_add_scaled(&f, &mut acc, a[(k, r)], &xs[k]);
+            }
+            coords_all.push(acc);
+        }
+        let coords: Vec<(usize, &[u64])> =
+            (3..8).map(|i| (i, coords_all[i].as_slice())).collect();
+        assert_eq!(code.decode_packets(&f, &coords).unwrap(), xs);
+        // Too few coordinates is a proper error, not a panic.
+        assert!(code.decode_packets(&f, &coords[..4]).is_err());
     }
 
     #[test]

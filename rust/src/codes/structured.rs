@@ -16,7 +16,7 @@
 //! from *disjoint* `φ` ranges so every Theorem-6 factor is draw-and-loose
 //! computable.
 
-use crate::gf::{dft, Field};
+use crate::gf::{dft, Field, Mat};
 use crate::util::ipow;
 
 /// A draw-and-loose–compatible evaluation point design for `n` processors.
@@ -140,6 +140,122 @@ pub fn disjoint_family<F: Field>(
         .collect()
 }
 
+/// Generic erasure recovery for an *arbitrary* systematic linear code
+/// `G = [I | A]` — the Gaussian-elimination fallback behind
+/// [`codes::recovery`](crate::codes::recovery) when no GRS structure is
+/// available (e.g. a random parity matrix): with `c` the row vector of
+/// codeword values at `positions` (`K` distinct coordinates in
+/// `[0, N)`), solve `c = x · G_S` for the data `x` by inverting the
+/// `K×K` survivor submatrix `G_S`. Returns the `K×K` matrix `D` with
+/// `x = c · D`, or an error when the surviving columns are dependent
+/// (impossible for an MDS code, possible for arbitrary `A`).
+pub fn solve_data_matrix<F: Field>(f: &F, a: &Mat, positions: &[usize]) -> anyhow::Result<Mat> {
+    let (k, r) = (a.rows, a.cols);
+    anyhow::ensure!(
+        positions.len() == k,
+        "need exactly K = {k} positions, got {}",
+        positions.len()
+    );
+    anyhow::ensure!(
+        positions.iter().all(|&p| p < k + r),
+        "position out of range (N = {})",
+        k + r
+    );
+    let mut sorted = positions.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    anyhow::ensure!(sorted.len() == k, "repeated positions");
+    // G_S in column order of `positions`: column i is generator column
+    // `positions[i]`.
+    let mut gs = Mat::zero(k, k);
+    for (i, &pos) in positions.iter().enumerate() {
+        for (kk, v) in generator_column(a, pos).into_iter().enumerate() {
+            gs[(kk, i)] = v;
+        }
+    }
+    // c = x·G_S  ⇔  x = c·G_S^{-1}: one Gauss–Jordan inversion per
+    // failure pattern, then packet recovery is K lincombs.
+    gs.inverse(f).ok_or_else(|| {
+        anyhow::anyhow!("surviving coordinates do not determine the data (dependent columns)")
+    })
+}
+
+/// Column `pos` of the systematic generator `G = [I | A]`: a unit
+/// vector for systematic coordinates (`pos < K`), a parity column of
+/// `A` otherwise. `pos < K + R` is release-checked — the shared guard
+/// of both the Gaussian solver and the rank-revealing selector.
+fn generator_column(a: &Mat, pos: usize) -> Vec<u64> {
+    let k = a.rows;
+    assert!(pos < k + a.cols, "coordinate {pos} out of range (N = {})", k + a.cols);
+    (0..k)
+        .map(|kk| {
+            if pos < k {
+                u64::from(pos == kk)
+            } else {
+                a[(kk, pos - k)]
+            }
+        })
+        .collect()
+}
+
+/// Choose up to `K` positions whose generator columns (`G = [I | A]`)
+/// are linearly independent, scanning `candidates` in order (first-fit
+/// Gaussian elimination, `O(K²·|candidates|)`). For an MDS code this is
+/// simply the first `K` candidates; for arbitrary `A` it *skips*
+/// dependent coordinates, so a survivor set of full rank is never
+/// spuriously rejected just because its first `K` entries happen to be
+/// dependent. Returns fewer than `K` positions exactly when the
+/// candidate columns do not span — i.e. the data is genuinely
+/// unrecoverable.
+pub fn independent_positions<F: Field>(f: &F, a: &Mat, candidates: &[usize]) -> Vec<usize> {
+    let k = a.rows;
+    // Incremental elimination: each kept column is normalized on its
+    // pivot row; a fresh column is reduced against all kept ones and
+    // admitted iff a nonzero residue remains.
+    let mut basis: Vec<(usize, Vec<u64>)> = Vec::new();
+    let mut chosen = Vec::with_capacity(k);
+    for &pos in candidates {
+        if chosen.len() == k {
+            break;
+        }
+        let mut v = generator_column(a, pos);
+        for (piv, b) in &basis {
+            let c = v[*piv];
+            if c != 0 {
+                for (vi, &bi) in v.iter_mut().zip(b) {
+                    *vi = f.sub(*vi, f.mul(c, bi));
+                }
+            }
+        }
+        if let Some(piv) = v.iter().position(|&x| x != 0) {
+            let inv = f.inv(v[piv]);
+            let b: Vec<u64> = v.iter().map(|&x| f.mul(x, inv)).collect();
+            basis.push((piv, b));
+            chosen.push(pos);
+        }
+    }
+    chosen
+}
+
+/// Packet-wise form of [`solve_data_matrix`]: reconstruct the `K` data
+/// packets from any `K` independent surviving coordinates
+/// (`(position, packet)` pairs; extras ignored).
+pub fn recover_data<F: Field>(
+    f: &F,
+    a: &Mat,
+    coords: &[(usize, &[u64])],
+) -> anyhow::Result<Vec<Vec<u64>>> {
+    let k = a.rows;
+    anyhow::ensure!(coords.len() >= k, "need at least K = {k} coordinates");
+    let coords = &coords[..k];
+    let w = coords.first().map_or(0, |(_, p)| p.len());
+    anyhow::ensure!(coords.iter().all(|(_, p)| p.len() == w), "ragged packets");
+    let positions: Vec<usize> = coords.iter().map(|&(pos, _)| pos).collect();
+    let d = solve_data_matrix(f, a, &positions)?;
+    let pkts: Vec<&[u64]> = coords.iter().map(|&(_, p)| p).collect();
+    Ok(d.packet_vec_mul(f, &pkts))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +301,70 @@ mod tests {
     fn rejects_non_injective_phi() {
         let f = f();
         assert!(StructuredPoints::with_h(&f, 8, 2, 2, vec![1, 1]).is_err());
+    }
+
+    #[test]
+    fn independent_positions_skips_dependent_columns() {
+        let f = f();
+        let k = 4usize;
+        // Parity with a duplicated column: coordinate K+1 is dependent
+        // on K+0 and must be skipped in favor of a systematic column.
+        let col: Vec<u64> = vec![1, 2, 3, 4];
+        let a = Mat::from_fn(k, 2, |kk, _| col[kk]);
+        let candidates = [4usize, 5, 0, 1, 2, 3];
+        let chosen = independent_positions(&f, &a, &candidates);
+        assert_eq!(chosen.len(), k);
+        assert_eq!(chosen, vec![4, 0, 1, 2]);
+        assert!(solve_data_matrix(&f, &a, &chosen).is_ok());
+        // MDS-like case: first K candidates independent → first-fit
+        // keeps exactly the old truncate order.
+        let b = Mat::random(&f, 3, 3, 9);
+        let all = [0usize, 1, 2, 3, 4, 5];
+        assert_eq!(independent_positions(&f, &b, &all)[..], all[..3]);
+        // Not enough rank: fewer than K come back.
+        let short = independent_positions(&f, &a, &[4, 5]);
+        assert_eq!(short.len(), 1);
+    }
+
+    #[test]
+    fn gaussian_fallback_recovers_data_from_any_full_rank_subset() {
+        let f = f();
+        let (k, r, w) = (6usize, 4usize, 3usize);
+        let a = Mat::random(&f, k, r, 77);
+        let mut rng = crate::util::Rng::new(5);
+        let xs: Vec<Vec<u64>> = (0..k)
+            .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+            .collect();
+        let mut coords_all = xs.clone();
+        for rr in 0..r {
+            let mut acc = vec![0u64; w];
+            for kk in 0..k {
+                crate::net::pkt_add_scaled(&f, &mut acc, a[(kk, rr)], &xs[kk]);
+            }
+            coords_all.push(acc);
+        }
+        for trial in 0..20 {
+            let subset = rng.choose(k + r, k);
+            let coords: Vec<(usize, &[u64])> =
+                subset.iter().map(|&i| (i, coords_all[i].as_slice())).collect();
+            match recover_data(&f, &a, &coords) {
+                Ok(got) => assert_eq!(got, xs, "trial {trial}"),
+                // A random (non-MDS) matrix may have dependent subsets;
+                // the fallback must report, not panic.
+                Err(e) => assert!(e.to_string().contains("determine"), "trial {trial}: {e}"),
+            }
+        }
+        // The all-systematic subset is the identity solve.
+        let coords: Vec<(usize, &[u64])> =
+            (0..k).map(|i| (i, coords_all[i].as_slice())).collect();
+        assert_eq!(recover_data(&f, &a, &coords).unwrap(), xs);
+        assert!(recover_data(&f, &a, &coords[..k - 1]).is_err(), "too few");
+        // An out-of-range coordinate is a proper error, never a silent
+        // read of the wrong parity element.
+        let bad: Vec<(usize, &[u64])> = (0..k)
+            .map(|i| (if i == 0 { k + r } else { i }, coords_all[i].as_slice()))
+            .collect();
+        assert!(recover_data(&f, &a, &bad).is_err(), "position N rejected");
     }
 
     #[test]

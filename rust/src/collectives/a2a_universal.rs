@@ -84,13 +84,20 @@ impl PsParams {
 struct PrepMem {
     buf: PacketBuf,
     slot: HashMap<usize, usize>,
+    /// Substitute for owners that never arrived: under crash-stop fault
+    /// injection (`net::run_degraded`) an expected delivery may be
+    /// dropped; the rank is then *tainted* — its values are garbage by
+    /// definition — but it must keep the schedule, so it sends zeros in
+    /// place of the missing packet instead of panicking.
+    zero: Packet,
 }
 
 impl PrepMem {
     fn new(owner: usize, pkt: Packet) -> Self {
         PrepMem {
-            buf: PacketBuf::from_packet(pkt),
+            zero: vec![0; pkt.len()],
             slot: HashMap::from([(owner, 0)]),
+            buf: PacketBuf::from_packet(pkt),
         }
     }
 
@@ -103,9 +110,14 @@ impl PrepMem {
         }
     }
 
+    /// The packet held for `owner`, or zeros if its delivery was dropped
+    /// (possible only on a tainted rank of a degraded run — healthy runs
+    /// always hold every scheduled owner).
     fn get(&self, owner: usize) -> &[u64] {
-        self.buf
-            .pkt(*self.slot.get(&owner).expect("missing owner packet"))
+        match self.slot.get(&owner) {
+            Some(&s) => self.buf.pkt(s),
+            None => self.zero.as_slice(),
+        }
     }
 }
 

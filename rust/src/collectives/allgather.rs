@@ -20,6 +20,10 @@ pub struct AllGather {
     w: usize,
     /// `have[r][j]` = packet of owner `j` if received by rank `r`.
     have: Vec<Vec<Option<Packet>>>,
+    /// Schedule-preserving substitute for owners whose delivery was
+    /// dropped under fault injection (`net::run_degraded`): a tainted
+    /// rank forwards zeros instead of panicking.
+    zero: Packet,
     done: bool,
 }
 
@@ -41,6 +45,7 @@ impl AllGather {
             t: 0,
             w,
             have,
+            zero: vec![0; w],
             done: n <= 1,
         }
     }
@@ -113,7 +118,7 @@ impl Collective for AllGather {
                     src_had
                         .iter()
                         .filter(|o| !dst_had.contains(o))
-                        .map(|&o| self.have[r][o].as_deref().expect("sender missing packet")),
+                        .map(|&o| self.have[r][o].as_deref().unwrap_or(self.zero.as_slice())),
                 );
                 if !payload.is_empty() {
                     out.push(Msg::new(self.procs[r], self.procs[dst], payload));
@@ -131,7 +136,11 @@ impl Collective for AllGather {
             .enumerate()
             .map(|(r, &pid)| {
                 let cat: Packet = (0..self.procs.len())
-                    .flat_map(|o| self.have[r][o].clone().expect("all-gather incomplete"))
+                    .flat_map(|o| {
+                        self.have[r][o]
+                            .clone()
+                            .unwrap_or_else(|| self.zero.clone())
+                    })
                     .collect();
                 (pid, cat)
             })

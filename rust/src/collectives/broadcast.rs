@@ -22,6 +22,10 @@ pub struct TreeBroadcast {
     rounds: u32,
     t: u32,
     have: Vec<Option<Packet>>,
+    /// Schedule-preserving substitute for a dropped delivery: a tainted
+    /// rank of a degraded run (`net::run_degraded`) forwards zeros
+    /// instead of panicking — healthy runs never touch it.
+    zero: Packet,
     done: bool,
 }
 
@@ -31,6 +35,7 @@ impl TreeBroadcast {
         assert!(!procs.is_empty());
         let n = procs.len();
         let rounds = crate::util::ceil_log(p as u64 + 1, n as u64);
+        let zero = vec![0; data.len()];
         let mut have = vec![None; n];
         have[0] = Some(data);
         TreeBroadcast {
@@ -40,6 +45,7 @@ impl TreeBroadcast {
             rounds,
             t: 0,
             have,
+            zero,
             done: n <= 1,
         }
     }
@@ -70,7 +76,7 @@ impl Collective for TreeBroadcast {
         let next_cover = (covered * (self.p + 1)).min(self.procs.len());
         let mut out = Vec::new();
         for r in 0..covered.min(self.procs.len()) {
-            let pkt = self.have[r].as_ref().expect("sender must hold data");
+            let pkt = self.have[r].as_ref().unwrap_or(&self.zero);
             for rho in 1..=self.p {
                 let dst = r + rho * covered;
                 if dst < next_cover {
@@ -85,7 +91,7 @@ impl Collective for TreeBroadcast {
         self.procs
             .iter()
             .zip(&self.have)
-            .map(|(&p, h)| (p, h.clone().expect("broadcast incomplete")))
+            .map(|(&p, h)| (p, h.clone().unwrap_or_else(|| self.zero.clone())))
             .collect()
     }
 }

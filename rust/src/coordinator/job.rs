@@ -12,13 +12,14 @@
 use super::config::{CodeKind, JobConfig, VerifyMode};
 use super::plan_cache::{PlanCache, PlanKey};
 use super::verify;
-use crate::codes::GrsCode;
+use crate::codes::structured::independent_positions;
+use crate::codes::{GrsCode, Recovery, StructuredPoints};
 use crate::framework::{systematic::Layout, CompiledPlan, PlanChoice, PlannedJob};
 use crate::gf::{AnyField, Field, Mat};
-use crate::net::{run, Outputs, Packet, Sim, SimReport};
-use crate::util::Rng;
+use crate::net::{run, DegradedReport, FaultSpec, Outputs, Packet, ProcId, Sim, SimReport};
+use crate::util::{ipow, Rng};
 use std::sync::{Arc, OnceLock};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// The outcome of one job, with every paper metric.
 #[derive(Clone, Debug)]
@@ -294,6 +295,256 @@ impl EncodeJob {
             wall: t0.elapsed(),
         })
     }
+
+    /// Live fault-injected execution: step the planned collective under
+    /// `faults` (`net::run_degraded`), then **repair** — reconstruct
+    /// every lost sink output from any `K` surviving coordinates
+    /// (`codes::recovery`) instead of re-encoding. The returned `coded`
+    /// rows are bit-identical to a healthy run whenever at most `R`
+    /// coordinates are lost; an unrecoverable pattern (fewer than `K`
+    /// survivors) is a proper error naming the shortfall.
+    pub fn run_degraded(&self, faults: &FaultSpec) -> anyhow::Result<DegradedJobReport> {
+        let t0 = Instant::now();
+        let mut pl: PlannedJob = crate::framework::plan_with_model(
+            &self.field,
+            self.code.as_ref(),
+            Some(self.parity.clone()),
+            self.inputs.clone(),
+            self.config.ports,
+            self.config.algorithm,
+            Some(self.config.cost_model()?),
+        )?;
+        let mut sim = Sim::new(self.config.ports);
+        let deg = crate::net::run_degraded(&mut sim, pl.job.as_mut(), faults)?;
+        self.finish_degraded(pl.choice, pl.layout, deg.fault, &deg.outputs, faults, t0)
+    }
+
+    /// The replay-path twin of [`run_degraded`](EncodeJob::run_degraded):
+    /// fetch the shape's compiled plan, analyze the failure pattern on
+    /// the plan's schedule, evaluate only the surviving output rows
+    /// through the batched columnar engine, and repair the rest.
+    /// Bit-identical coded rows and failure analysis to the live path.
+    pub fn run_degraded_cached(
+        &self,
+        cache: &PlanCache,
+        faults: &FaultSpec,
+    ) -> anyhow::Result<DegradedJobReport> {
+        let t0 = Instant::now();
+        let compiled = self.compiled(cache)?;
+        let jobs = [self.inputs.as_slice()];
+        let (fault, mut outs) = compiled.replay_degraded_batch(&self.field, &jobs, faults)?;
+        let outputs = outs.pop().expect("one job in, one out");
+        self.finish_degraded(compiled.choice, compiled.layout, fault, &outputs, faults, t0)
+    }
+
+    /// Batch-serve `B` same-width jobs under one failure pattern: one
+    /// taint analysis, one columnar pass over the surviving rows, one
+    /// recovery operator applied per job — the degraded serving path of
+    /// [`EncodeService::start_degraded`](super::EncodeService::start_degraded).
+    /// Every job's `R` rows come back complete and bit-identical to
+    /// healthy [`encode_batch_cached`](EncodeJob::encode_batch_cached).
+    pub fn encode_degraded_batch_cached(
+        &self,
+        cache: &PlanCache,
+        jobs: &[&[Packet]],
+        faults: &FaultSpec,
+    ) -> anyhow::Result<(Vec<Vec<Packet>>, RecoveryStats)> {
+        let compiled = self.compiled(cache)?;
+        let (fault, outs) = compiled.replay_degraded_batch(&self.field, jobs, faults)?;
+        let rt0 = Instant::now();
+        let repair = self.plan_repair(&compiled.layout, &fault)?;
+        let coded: Vec<Vec<Packet>> = outs
+            .iter()
+            .zip(jobs)
+            .map(|(o, x)| self.apply_repair(&repair, &compiled.layout, x, o))
+            .collect::<anyhow::Result<_>>()?;
+        let stats = RecoveryStats {
+            faults_injected: faults.injected(),
+            outputs_lost: repair.lost_sinks.len(),
+            outputs_recovered: (repair.lost_sinks.len() * jobs.len()) as u64,
+            recovery_wall: rt0.elapsed(),
+        };
+        Ok((coded, stats))
+    }
+
+    /// Shared tail of the degraded paths: plan the repair, assemble the
+    /// full coded rows, verify, report.
+    fn finish_degraded(
+        &self,
+        choice: PlanChoice,
+        layout: Layout,
+        fault: DegradedReport,
+        outputs: &Outputs,
+        faults: &FaultSpec,
+        t0: Instant,
+    ) -> anyhow::Result<DegradedJobReport> {
+        let rt0 = Instant::now();
+        let repair = self.plan_repair(&layout, &fault)?;
+        let coded = self.apply_repair(&repair, &layout, &self.inputs, outputs)?;
+        let recovery_wall = rt0.elapsed();
+        let verified = self.verify_coded(&coded)?;
+        Ok(DegradedJobReport {
+            choice,
+            layout,
+            sim: fault.delivered,
+            faults_injected: faults.injected(),
+            crashed: fault.crashed.iter().copied().collect(),
+            outputs_recovered: repair.lost_sinks.len(),
+            surviving_sinks: repair.surviving_sinks,
+            lost_sinks: repair.lost_sinks,
+            recovery_wall,
+            verified,
+            wall: t0.elapsed(),
+            coded,
+        })
+    }
+
+    /// Build the repair strategy for one failure pattern: lost vs
+    /// surviving sinks, the first `K` survivor coordinates (alive
+    /// sources keep their input data even when their computed state is
+    /// tainted; surviving sinks contribute their coded outputs), and the
+    /// [`Recovery`] operator when anything was lost.
+    fn plan_repair(&self, layout: &Layout, fault: &DegradedReport) -> anyhow::Result<Repair> {
+        let (k, r) = (layout.k, layout.r);
+        let (surviving_sinks, lost_sinks): (Vec<usize>, Vec<usize>) =
+            (0..r).partition(|&s| fault.survives(layout.sink(s)));
+        if lost_sinks.is_empty() {
+            return Ok(Repair {
+                surviving_sinks,
+                lost_sinks,
+                positions: Vec::new(),
+                op: None,
+            });
+        }
+        let mut candidates: Vec<usize> = (0..k)
+            .filter(|&kk| fault.holds_data(layout.source(kk)))
+            .collect();
+        candidates.extend(surviving_sinks.iter().map(|&s| k + s));
+        // Rank-revealing selection: for MDS codes this keeps the first
+        // K candidates verbatim; for arbitrary parity it skips
+        // dependent coordinates so a full-rank survivor set is never
+        // spuriously rejected.
+        let positions = independent_positions(&self.field, &self.parity, &candidates);
+        anyhow::ensure!(
+            positions.len() == k,
+            "unrecoverable failure pattern: only {} independent coordinates among the \
+             {} survivors, K = {k} needed ({} crashed, {} tainted)",
+            positions.len(),
+            candidates.len(),
+            fault.crashed.len(),
+            fault.tainted.len()
+        );
+        let op = Recovery::plan(
+            &self.field,
+            self.code.as_ref(),
+            &self.parity,
+            &positions,
+            &lost_sinks,
+        )?;
+        Ok(Repair {
+            surviving_sinks,
+            lost_sinks,
+            positions,
+            op: Some(op),
+        })
+    }
+
+    /// Assemble one job's full `R` coded rows: surviving sink packets
+    /// verbatim from `outputs`, lost sinks reconstructed from the
+    /// survivor coordinates (`x` rows for sources, `outputs` for sinks).
+    fn apply_repair(
+        &self,
+        repair: &Repair,
+        layout: &Layout,
+        x: &[Packet],
+        outputs: &Outputs,
+    ) -> anyhow::Result<Vec<Packet>> {
+        let k = layout.k;
+        let sink_pkt = |s: usize| {
+            outputs
+                .get(&layout.sink(s))
+                .ok_or_else(|| anyhow::anyhow!("surviving sink {s} missing from outputs"))
+        };
+        let mut coded: Vec<Option<Packet>> = vec![None; layout.r];
+        for &s in &repair.surviving_sinks {
+            coded[s] = Some(sink_pkt(s)?.clone());
+        }
+        if let Some(op) = &repair.op {
+            let coords: Vec<&[u64]> = repair
+                .positions
+                .iter()
+                .map(|&pos| {
+                    if pos < k {
+                        Ok(x[pos].as_slice())
+                    } else {
+                        sink_pkt(pos - k).map(|p| p.as_slice())
+                    }
+                })
+                .collect::<anyhow::Result<_>>()?;
+            for (&s, pkt) in repair.lost_sinks.iter().zip(op.lost_outputs(&self.field, &coords)) {
+                coded[s] = Some(pkt);
+            }
+        }
+        Ok(coded
+            .into_iter()
+            .map(|p| p.expect("every sink surviving or repaired"))
+            .collect())
+    }
+}
+
+/// The outcome of one degraded job: delivered-traffic metrics, the
+/// failure analysis, and the **full** `R` coded rows — surviving sinks
+/// verbatim, lost sinks reconstructed from survivors — bit-identical to
+/// a healthy run's.
+#[derive(Clone, Debug)]
+pub struct DegradedJobReport {
+    pub choice: PlanChoice,
+    pub layout: Layout,
+    /// Delivered traffic (`C1` counts every scheduled round; the rest
+    /// counts surviving messages only).
+    pub sim: SimReport,
+    /// Fault directives in the spec (crashes + links + erasures).
+    pub faults_injected: u64,
+    pub crashed: Vec<ProcId>,
+    /// Sink indices whose outputs survived untainted.
+    pub surviving_sinks: Vec<usize>,
+    /// Sink indices reconstructed from survivors.
+    pub lost_sinks: Vec<usize>,
+    pub outputs_recovered: usize,
+    /// Wall time of the recovery pass (operator build + lincombs).
+    pub recovery_wall: Duration,
+    pub verified: Option<bool>,
+    pub wall: Duration,
+    /// All `R` coded rows in sink order.
+    pub coded: Vec<Packet>,
+}
+
+/// Aggregate stats of one degraded batch serve (the service metrics
+/// source).
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryStats {
+    /// Fault directives honored, per job in the batch.
+    pub faults_injected: u64,
+    /// Sink outputs lost per job (the failure pattern is shape-level).
+    pub outputs_lost: usize,
+    /// Sink outputs reconstructed across the whole batch.
+    pub outputs_recovered: u64,
+    /// Wall time of the recovery pass (operator build + lincombs, whole
+    /// batch).
+    pub recovery_wall: Duration,
+}
+
+/// One failure pattern's repair strategy: which sinks are lost, which
+/// `K` survivor coordinates feed the [`Recovery`] operator. Built once
+/// per (shape, fault) pair, applied per job.
+struct Repair {
+    surviving_sinks: Vec<usize>,
+    lost_sinks: Vec<usize>,
+    /// `K` independent survivor coordinate positions (first-fit over
+    /// sources ascending, then surviving sinks ascending), when
+    /// anything needs recovering.
+    positions: Vec<usize>,
+    op: Option<Recovery>,
 }
 
 /// Pull the `R` sink packets out of a replay's output map, in sink
@@ -310,10 +561,25 @@ fn take_sinks(layout: &Layout, outputs: &mut Outputs) -> anyhow::Result<Vec<Pack
         .collect()
 }
 
-/// Build a structured GRS code, preferring the largest usable radix.
+/// Build a structured GRS code. Radix 2 stays the default whenever it
+/// buys *any* DFT structure for the Theorem-6/8 block size (`Z = 2^H >
+/// 1`) — existing prime-field shapes keep their exact historical
+/// designs. Only when radix 2 is structureless (e.g. `GF(2^8)`, where
+/// `q−1 = 255` is odd, or odd block sizes) do we fall through to the
+/// radix with the largest `Z`.
 fn build_structured(f: &AnyField, k: usize, r: usize) -> anyhow::Result<GrsCode> {
-    // Radix 2 maximises H for the default prime (q−1 = 2^18·3).
-    GrsCode::structured(f, k, r, 2)
+    let block = if k >= r { r } else { k } as u64;
+    if StructuredPoints::max_h(f, block, 2) >= 1 {
+        return GrsCode::structured(f, k, r, 2);
+    }
+    let mut best = (2u64, 1u64);
+    for p_base in [3u64, 5, 7] {
+        let z = ipow(p_base, StructuredPoints::max_h(f, block, p_base));
+        if z > best.1 {
+            best = (p_base, z);
+        }
+    }
+    GrsCode::structured(f, k, r, best.0)
 }
 
 #[cfg(test)]
@@ -459,6 +725,111 @@ mod tests {
         }
         // One shape: the whole batch plus the singles hit one compile.
         assert_eq!(cache.stats().1, 1);
+    }
+
+    #[test]
+    fn degraded_run_repairs_lost_sinks_bit_identically() {
+        let cache = crate::coordinator::PlanCache::new();
+        let cfg = JobConfig {
+            k: 16,
+            r: 4,
+            w: 6,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg).unwrap();
+        let healthy = job.encode_cached(&cache, &job.inputs).unwrap();
+        // Lose two sinks and one source after the run completed.
+        let faults = crate::net::FaultSpec::new()
+            .crash_after(16)
+            .crash_after(18)
+            .crash_after(3);
+        let live = job.run_degraded(&faults).unwrap();
+        assert_eq!(live.coded, healthy, "live repair ≡ healthy");
+        assert_eq!(live.verified, Some(true));
+        assert_eq!(live.lost_sinks, vec![0, 2]);
+        assert_eq!(live.surviving_sinks, vec![1, 3]);
+        assert_eq!(live.outputs_recovered, 2);
+        assert_eq!(live.faults_injected, 3);
+        let cached = job.run_degraded_cached(&cache, &faults).unwrap();
+        assert_eq!(cached.coded, healthy, "cached repair ≡ healthy");
+        assert_eq!(cached.sim, live.sim, "delivered stats agree live vs replay");
+        assert_eq!(cached.lost_sinks, live.lost_sinks);
+    }
+
+    #[test]
+    fn degraded_batch_matches_healthy_batch() {
+        use crate::net::POST_RUN;
+        let cache = crate::coordinator::PlanCache::new();
+        let cfg = JobConfig {
+            k: 8,
+            r: 4,
+            w: 3,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg.clone()).unwrap();
+        let f = job.field.clone();
+        use crate::gf::Field;
+        let mut rng = crate::util::Rng::new(13);
+        let jobs: Vec<Vec<Packet>> = (0..4)
+            .map(|_| {
+                (0..cfg.k)
+                    .map(|_| (0..cfg.w).map(|_| rng.below(f.order())).collect())
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
+        let healthy = job.encode_batch_cached(&cache, &refs).unwrap();
+        let procs: Vec<usize> = (0..cfg.k + cfg.r).collect();
+        let faults = crate::net::FaultSpec::random_crashes(7, &procs, cfg.r, POST_RUN);
+        let (coded, stats) = job
+            .encode_degraded_batch_cached(&cache, &refs, &faults)
+            .unwrap();
+        assert_eq!(coded, healthy, "degraded batch ≡ healthy batch");
+        assert_eq!(stats.faults_injected, cfg.r as u64);
+        assert_eq!(
+            stats.outputs_recovered,
+            (stats.outputs_lost * jobs.len()) as u64
+        );
+    }
+
+    #[test]
+    fn unrecoverable_pattern_is_a_proper_error() {
+        // Crash R+1 = 5 processors post-run: fewer than K coordinates
+        // survive only if sinks+sources lost exceed R... here K=4, R=2,
+        // N=6; crashing 3 leaves 3 < K=4 coordinates.
+        let cfg = JobConfig {
+            k: 4,
+            r: 2,
+            w: 2,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg).unwrap();
+        let faults = crate::net::FaultSpec::new()
+            .crash_after(0)
+            .crash_after(1)
+            .crash_after(4);
+        let err = job.run_degraded(&faults).unwrap_err();
+        assert!(err.to_string().contains("unrecoverable"), "{err}");
+    }
+
+    #[test]
+    fn structured_codes_pick_a_usable_radix_per_field() {
+        // GF(2^8): q−1 = 255 is odd — radix 3 must be chosen and the
+        // specific path must still verify.
+        let cfg = JobConfig {
+            field: "gf2e:8".into(),
+            k: 6,
+            r: 3,
+            w: 4,
+            algorithm: crate::framework::AlgoRequest::RsSpecific,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg).unwrap();
+        let code = job.code.as_ref().unwrap();
+        assert!(code.alpha_designs.iter().all(|d| d.p_base == 3 && d.h >= 1));
+        let rep = job.run().unwrap();
+        assert_eq!(rep.verified, Some(true));
+        assert_eq!(rep.choice, PlanChoice::RsSpecific);
     }
 
     #[test]

@@ -19,6 +19,15 @@ pub const BATCH_OCCUPANCY_MAX: &str = "batch_occupancy_max";
 /// Counter name: total output field elements produced by the service —
 /// the throughput numerator (divide by wall time for elems/s).
 pub const ENCODED_ELEMS: &str = "encoded_elems";
+/// Counter name: fault directives honored while serving (one per
+/// crash/link/erasure directive per served request).
+pub const FAULTS_INJECTED: &str = "faults_injected";
+/// Counter name: sink outputs reconstructed from survivors instead of
+/// re-encoded.
+pub const OUTPUTS_RECOVERED: &str = "outputs_recovered";
+/// Latency-series name: wall time of the erasure-recovery pass
+/// (decode-matrix build + survivor lincombs), per served batch.
+pub const RECOVERY_LATENCY: &str = "recovery_latency";
 
 /// A set of named counters and latency recorders.
 #[derive(Debug, Default)]

@@ -24,7 +24,7 @@ pub mod service;
 pub mod verify;
 
 pub use config::JobConfig;
-pub use job::{EncodeJob, JobReport};
+pub use job::{DegradedJobReport, EncodeJob, JobReport, RecoveryStats};
 pub use metrics::Metrics;
 pub use plan_cache::{PlanCache, PlanKey};
 pub use service::{BatchPolicy, EncodeRequest, EncodeResponse, EncodeService};

@@ -166,6 +166,26 @@ impl EncodeService {
         Self::start_replay_with(cfg, n_workers, queue_depth, BatchPolicy::default())
     }
 
+    /// Start a **degraded** replay service: every request is served
+    /// through the fault-injected replay path (`faults` applied to the
+    /// shape's compiled schedule), and lost sink outputs are
+    /// **repaired** — reconstructed from the surviving coordinates via
+    /// the code's redundancy (`codes::recovery`) — instead of
+    /// re-encoded. Responses carry all `R` parity rows, bit-identical
+    /// to the healthy service's, as long as the failure pattern leaves
+    /// `K` coordinates alive; the `faults_injected` /
+    /// `outputs_recovered` counters and the `recovery_latency`
+    /// histogram land in the service metrics next to the batch and
+    /// plan-cache counters.
+    pub fn start_degraded(
+        cfg: &super::JobConfig,
+        n_workers: usize,
+        queue_depth: usize,
+        faults: crate::net::FaultSpec,
+    ) -> Result<Self> {
+        Self::start_replay_inner(cfg, n_workers, queue_depth, BatchPolicy::default(), Some(faults))
+    }
+
     /// [`start_replay`](EncodeService::start_replay) with an explicit
     /// micro-batching policy.
     pub fn start_replay_with(
@@ -174,10 +194,23 @@ impl EncodeService {
         queue_depth: usize,
         policy: BatchPolicy,
     ) -> Result<Self> {
+        Self::start_replay_inner(cfg, n_workers, queue_depth, policy, None)
+    }
+
+    /// The shared replay-service spawner: healthy micro-batching when
+    /// `faults` is `None`, the degraded repair path otherwise.
+    fn start_replay_inner(
+        cfg: &super::JobConfig,
+        n_workers: usize,
+        queue_depth: usize,
+        policy: BatchPolicy,
+        faults: Option<crate::net::FaultSpec>,
+    ) -> Result<Self> {
         anyhow::ensure!(policy.max_batch >= 1, "batch policy needs max_batch >= 1");
         // Build the (field, code, parity) triple once; the synthetic
         // inputs are ignored — requests carry their own payloads.
         let job = Arc::new(EncodeJob::synthetic(cfg.clone())?);
+        let faults = Arc::new(faults);
         let k = cfg.k;
         let (tx, rx) = mpsc::sync_channel::<EncodeRequest>(queue_depth);
         let rx = Arc::new(Mutex::new(rx));
@@ -191,11 +224,25 @@ impl EncodeService {
             let stop = stop.clone();
             let job = job.clone();
             let cache = cache.clone();
+            let faults = faults.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("replay-worker-{wid}"))
                 .spawn(move || {
-                    batch_worker_loop(&rx, &metrics, &stop, k, policy, |jobs| {
-                        job.encode_batch_cached(&cache, jobs)
+                    let metrics_for_recovery = metrics.clone();
+                    batch_worker_loop(&rx, &metrics, &stop, k, policy, move |jobs| {
+                        match &*faults {
+                            None => job.encode_batch_cached(&cache, jobs),
+                            Some(spec) => {
+                                let (ys, stats) =
+                                    job.encode_degraded_batch_cached(&cache, jobs, spec)?;
+                                let m = &metrics_for_recovery;
+                                let injected = stats.faults_injected * jobs.len() as u64;
+                                m.incr(super::metrics::FAULTS_INJECTED, injected);
+                                m.incr(super::metrics::OUTPUTS_RECOVERED, stats.outputs_recovered);
+                                m.observe(super::metrics::RECOVERY_LATENCY, stats.recovery_wall);
+                                Ok(ys)
+                            }
+                        }
                     })
                 })
                 .context("spawning replay worker")?;
@@ -585,6 +632,51 @@ mod tests {
         assert_eq!(svc.metrics.plan_cache(), (2, 1));
         assert_eq!(svc.metrics.counter("requests"), widths.len() as u64);
         assert_eq!(svc.metrics.counter("failures"), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn degraded_service_repairs_failed_sinks_transparently() {
+        let cfg = JobConfig {
+            k: 8,
+            r: 4,
+            w: 4,
+            ..JobConfig::default()
+        };
+        let f = cfg.any_field().unwrap();
+        let oracle_job = EncodeJob::synthetic(cfg.clone()).unwrap();
+        // Two sinks lost after encoding (storage-loss scenario) plus one
+        // source: the service must keep answering with all R rows.
+        let faults = crate::net::FaultSpec::new()
+            .crash_after(8)
+            .crash_after(10)
+            .crash_after(2);
+        let n_faults = faults.injected();
+        let svc = EncodeService::start_degraded(&cfg, 1, 8, faults).unwrap();
+        let mut rng = crate::util::Rng::new(77);
+        let n_req = 3usize;
+        for _ in 0..n_req {
+            let x: Vec<Vec<u64>> = (0..cfg.k)
+                .map(|_| (0..cfg.w).map(|_| rng.below(f.order())).collect())
+                .collect();
+            let y = svc.submit(x.clone()).unwrap().recv().unwrap().y.unwrap();
+            assert_eq!(y.len(), cfg.r, "all R rows, repaired ones included");
+            // A repaired row that diverged from x·A fails verification.
+            assert!(verify::native(&f, &oracle_job.parity, &x, &y));
+        }
+        assert_eq!(
+            svc.metrics.counter(super::super::metrics::FAULTS_INJECTED),
+            n_faults * n_req as u64
+        );
+        assert_eq!(
+            svc.metrics.counter(super::super::metrics::OUTPUTS_RECOVERED),
+            2 * n_req as u64,
+            "two sinks repaired per request"
+        );
+        assert!(svc
+            .metrics
+            .latency_summary(super::super::metrics::RECOVERY_LATENCY)
+            .is_some());
         svc.shutdown();
     }
 

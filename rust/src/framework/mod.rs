@@ -95,6 +95,24 @@ pub struct CompiledPlan {
     pub opt: crate::net::opt::OptimizedPlan,
 }
 
+impl CompiledPlan {
+    /// Degraded batched replay through this compiled schedule: the
+    /// failure pattern is analyzed once on the raw plan's round/SendOp
+    /// schedule (which is the live emission stream verbatim), then one
+    /// strided columnar pass evaluates only the surviving rows of the
+    /// optimized plan. The pairing of raw + optimized forms is exactly
+    /// why this struct keeps both — see
+    /// [`replay_degraded_batch`](crate::net::exec::replay_degraded_batch).
+    pub fn replay_degraded_batch<F: Field>(
+        &self,
+        f: &F,
+        jobs: &[&[Packet]],
+        faults: &crate::net::FaultSpec,
+    ) -> anyhow::Result<(crate::net::DegradedReport, Vec<crate::net::Outputs>)> {
+        crate::net::exec::replay_degraded_batch(&self.plan, &self.opt, f, jobs, faults)
+    }
+}
+
 /// Predicted `(C1, C2)` of the specific (§VI) and universal (§IV) paths
 /// for a structured code, from the paper's formulas — used by the
 /// cost-aware `Auto` planner. Returns `(specific, universal)`.

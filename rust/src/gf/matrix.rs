@@ -115,6 +115,29 @@ impl Mat {
         out
     }
 
+    /// Packet-valued row-vector product `y = c · self`: coordinate `i`
+    /// carries the packet `coords[i]` and `y[j] = Σ_i self[(i,j)]·c_i`
+    /// element-wise over the packet width (Remark 2's `F_q^W` view) —
+    /// the shared kernel of the erasure decoders
+    /// ([`GrsCode::decode_packets`](crate::codes::GrsCode::decode_packets),
+    /// `codes::recovery`).
+    pub fn packet_vec_mul<F: Field>(&self, f: &F, coords: &[&[u64]]) -> Vec<Vec<u64>> {
+        assert_eq!(coords.len(), self.rows, "coordinate count");
+        let w = coords.first().map_or(0, |p| p.len());
+        (0..self.cols)
+            .map(|j| {
+                let terms: Vec<(u64, &[u64])> = coords
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &pkt)| (self[(i, j)], pkt))
+                    .collect();
+                let mut acc = vec![0u64; w];
+                f.lincomb_into(&mut acc, &terms);
+                acc
+            })
+            .collect()
+    }
+
     /// Transpose.
     pub fn transpose(&self) -> Mat {
         Mat::from_fn(self.cols, self.rows, |r, c| self[(c, r)])
@@ -231,6 +254,14 @@ impl Mat {
     pub fn permute_cols(&self, perm: &[usize]) -> Mat {
         assert_eq!(perm.len(), self.cols);
         Mat::from_fn(self.rows, self.cols, |r, c| self[(r, perm[c])])
+    }
+
+    /// Column gather: `out[:, j] = self[:, cols[j]]` for any index list
+    /// (repeats allowed, any length) — e.g. the lost-sink parity columns
+    /// an erasure-recovery operator reconstructs (`codes::recovery`).
+    pub fn select_cols(&self, cols: &[usize]) -> Mat {
+        assert!(cols.iter().all(|&c| c < self.cols), "column out of range");
+        Mat::from_fn(self.rows, cols.len(), |r, j| self[(r, cols[j])])
     }
 
     fn swap_rows(&mut self, a: usize, b: usize) {
@@ -410,6 +441,19 @@ mod tests {
         let a = Mat::random(&f, 4, 4, 9);
         let perm: Vec<usize> = (0..4).collect();
         assert_eq!(a.permute_cols(&perm), a);
+    }
+
+    #[test]
+    fn select_cols_gathers_any_subset() {
+        let f = f();
+        let a = Mat::random(&f, 3, 5, 2);
+        let s = a.select_cols(&[4, 1, 1]);
+        assert_eq!((s.rows, s.cols), (3, 3));
+        for r in 0..3 {
+            assert_eq!(s[(r, 0)], a[(r, 4)]);
+            assert_eq!(s[(r, 1)], a[(r, 1)]);
+            assert_eq!(s[(r, 2)], a[(r, 1)]);
+        }
     }
 
     #[test]

@@ -29,14 +29,13 @@
 //!   round) and emits the exact wire [`TraceEvent`]s, for debugging and
 //!   trace tooling.
 
+use super::fault::{analyze_plan, DegradedReport, FaultSpec};
 use super::opt::OptimizedPlan;
 use super::payload::{pkt_zero, Packet};
 use super::plan::Plan;
-use super::sim::{Outputs, SimReport};
+use super::sim::{Outputs, ProcId, SimReport};
 use super::trace::TraceEvent;
-use crate::gf::matrix::gemm_into;
-#[cfg(feature = "parallel")]
-use crate::gf::matrix::gemm_row_into;
+use crate::gf::matrix::{gemm_into, gemm_row_into};
 use crate::gf::Field;
 use anyhow::{ensure, Result};
 
@@ -264,6 +263,120 @@ pub fn replay_batch<F: Field>(
         .collect())
 }
 
+/// The result of a degraded replay: outputs of the surviving processors
+/// and the full fault analysis (identical to what a degraded live run
+/// of the same collective records).
+#[derive(Clone, Debug)]
+pub struct DegradedReplay {
+    /// Surviving outputs only — bit-identical to the healthy replay's
+    /// packets at the same processors.
+    pub outputs: Outputs,
+    pub fault: DegradedReport,
+}
+
+/// Replay a plan under `spec`-injected faults: walk the compiled
+/// schedule through the taint closure
+/// ([`analyze_plan`](crate::net::fault::analyze_plan)) and materialise
+/// the output lincombs of the surviving processors only. Mirrors
+/// [`run_degraded`](crate::net::run_degraded) exactly — same
+/// [`DegradedReport`], same surviving outputs, zero control-flow
+/// rederivation.
+pub fn replay_degraded<F: Field>(
+    plan: &Plan,
+    f: &F,
+    inputs: &[Packet],
+    spec: &FaultSpec,
+) -> Result<DegradedReplay> {
+    let w = check_inputs(plan, inputs)?;
+    let fault = analyze_plan(plan, w, spec);
+    let targets: Vec<(usize, usize)> = plan
+        .output_slots()
+        .iter()
+        .filter(|&(&pid, _)| fault.survives(pid))
+        .map(|(&pid, &slot)| (pid, slot))
+        .collect();
+    let packets = par_map_indexed(targets.len(), |i| {
+        materialize(plan, f, inputs, w, targets[i].1)
+    });
+    let outputs: Outputs = targets.iter().map(|&(pid, _)| pid).zip(packets).collect();
+    Ok(DegradedReplay { outputs, fault })
+}
+
+/// Degraded **batched** columnar replay: one taint analysis for the
+/// whole batch (the failure pattern is shape-level, not per-job), then
+/// one strided-arena gemm pass over *only the surviving output rows* of
+/// the optimized plan — dead rows are never evaluated, so a heavily
+/// degraded batch costs proportionally less than a healthy one. Returns
+/// the shared [`DegradedReport`] and each job's surviving outputs,
+/// bit-identical per job to [`replay_degraded`] on the raw plan.
+pub fn replay_degraded_batch<F: Field>(
+    plan: &Plan,
+    opt: &OptimizedPlan,
+    f: &F,
+    jobs: &[&[Packet]],
+    spec: &FaultSpec,
+) -> Result<(DegradedReport, Vec<Outputs>)> {
+    ensure!(
+        plan.n_inputs == opt.n_inputs,
+        "raw and optimized plan disagree on K"
+    );
+    let w = check_batch(opt, jobs)?;
+    let fault = analyze_plan(plan, w, spec);
+    let b = jobs.len();
+    let wb = w * b;
+    let k = opt.n_inputs;
+
+    let mut arena = vec![0u64; k * wb];
+    for (j, job) in jobs.iter().enumerate() {
+        for (ki, row) in job.iter().enumerate() {
+            arena[ki * wb + j * w..ki * wb + (j + 1) * w].copy_from_slice(row);
+        }
+    }
+
+    // Evaluate only the rows some surviving processor needs.
+    let live_rows = opt.matrix.rows_where(|pid| fault.survives(pid));
+    let mut out = vec![0u64; live_rows.len() * wb];
+    if wb > 0 {
+        #[cfg(feature = "parallel")]
+        if crate::net::parallel_enabled() {
+            use rayon::prelude::*;
+            out.par_chunks_mut(wb).enumerate().for_each(|(ri, row)| {
+                gemm_row_into(f, opt.matrix.row(live_rows[ri]), &arena, wb, row)
+            });
+        } else {
+            for (ri, row) in out.chunks_mut(wb).enumerate() {
+                gemm_row_into(f, opt.matrix.row(live_rows[ri]), &arena, wb, row);
+            }
+        }
+        #[cfg(not(feature = "parallel"))]
+        for (ri, row) in out.chunks_mut(wb).enumerate() {
+            gemm_row_into(f, opt.matrix.row(live_rows[ri]), &arena, wb, row);
+        }
+    }
+
+    // Resolve each surviving processor's compact row position once
+    // (live_rows is ascending), not per job of the batch.
+    let survivors: Vec<(ProcId, usize)> = opt
+        .matrix
+        .assignment()
+        .iter()
+        .filter(|&(&pid, _)| fault.survives(pid))
+        .map(|(&pid, &ri)| {
+            let p = live_rows.binary_search(&ri).expect("surviving row present");
+            (pid, p)
+        })
+        .collect();
+    let outs: Vec<Outputs> = (0..b)
+        .map(|j| {
+            survivors
+                .iter()
+                .map(|&(pid, p)| (pid, out[p * wb + j * w..p * wb + (j + 1) * w].to_vec()))
+                .collect()
+        })
+        .collect();
+    Ok((fault, outs))
+}
+
 /// Replay every arena slot round by round, with the wire trace.
 pub fn replay_full<F: Field>(plan: &Plan, f: &F, inputs: &[Packet]) -> Result<WireReplay> {
     let w = check_inputs(plan, inputs)?;
@@ -408,6 +521,55 @@ mod tests {
         assert!(replay_batch(&opt, &f, &[&a, &wide]).is_err(), "mixed widths");
         assert!(replay_batch(&opt, &f, &[&a, &short]).is_err(), "wrong K");
         assert!(replay_batch(&opt, &f, &[]).unwrap().is_empty(), "B = 0 ok");
+    }
+
+    #[test]
+    fn degraded_replay_matches_degraded_live_run() {
+        use crate::net::fault::{FaultSpec, POST_RUN};
+        use crate::net::sim::run_degraded;
+        let f = GfPrime::default_field();
+        let (k, p, w) = (16usize, 2usize, 3usize);
+        let c = Arc::new(Mat::random(&f, k, k, 23));
+        let plan = compile(p, k, |basis| {
+            Ok(Box::new(PrepareShoot::new(
+                f,
+                (0..k).collect(),
+                p,
+                c.clone(),
+                basis,
+            )))
+        })
+        .unwrap();
+        let opt = crate::net::opt::optimize(&plan);
+        let inputs: Vec<Packet> = (0..k)
+            .map(|i| (0..w).map(|j| f.elem((i * w + j) as u64 * 131 + 7)).collect())
+            .collect();
+        let healthy = replay(&plan, &f, &inputs).unwrap();
+        for spec in [
+            FaultSpec::new(),
+            FaultSpec::new().crash_after(3).crash_after(11),
+            FaultSpec::new().crash_from(5, 2),
+            FaultSpec::new().erase(1, 1, 2).drop_link(0, 4),
+            FaultSpec::random_crashes(9, &(0..k).collect::<Vec<_>>(), 4, POST_RUN),
+        ] {
+            let mut live = PrepareShoot::new(f, (0..k).collect(), p, c.clone(), inputs.clone());
+            let live_deg = run_degraded(&mut Sim::new(p), &mut live, &spec).unwrap();
+            let rep_deg = replay_degraded(&plan, &f, &inputs, &spec).unwrap();
+            assert_eq!(rep_deg.fault, live_deg.fault, "{spec:?}: fault analysis");
+            assert_eq!(rep_deg.outputs, live_deg.outputs, "{spec:?}: surviving outputs");
+            // Survivors are bit-identical to the healthy run.
+            for (pid, pkt) in &rep_deg.outputs {
+                assert_eq!(pkt, &healthy.outputs[pid], "{spec:?}: survivor {pid}");
+            }
+            // The batched columnar path agrees per job.
+            let jobs = [inputs.as_slice(), inputs.as_slice()];
+            let (fault_b, outs_b) =
+                replay_degraded_batch(&plan, &opt, &f, &jobs, &spec).unwrap();
+            assert_eq!(fault_b, rep_deg.fault, "{spec:?}: batch fault analysis");
+            for (j, outs) in outs_b.iter().enumerate() {
+                assert_eq!(outs, &rep_deg.outputs, "{spec:?}: batch job {j}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! Fault injection: crash-stop processors, dropped links, per-round
+//! erasures — and the **taint closure** that says exactly which outputs
+//! survive a degraded run.
+//!
+//! The paper's entire reason for encoding with an MDS generator (§II,
+//! §V–§VI) is that the system tolerates processor loss: any `K` of the
+//! `N = K + R` codeword coordinates determine the data. This module
+//! supplies the failure half of that story for both execution engines:
+//!
+//! * a [`FaultSpec`] describes *what fails* — crash-stop processors
+//!   (dead from a given round on; `round = POST_RUN` models storage loss
+//!   after a completed run), dropped directed links, and per-round
+//!   erasure sets — with seeded deterministic injection for tests and
+//!   benches;
+//! * [`analyze_plan`] / the engine-side tracker compute *what that
+//!   implies*: a message is dropped when its sender or receiver is dead
+//!   or its link/round is erased, a processor that misses an expected
+//!   message is **tainted**, and taint propagates along every later
+//!   delivery out of a tainted sender. The closure is conservative and
+//!   exact for the crash-stop model: an untainted, alive processor saw
+//!   *precisely* the inbox sequence of the healthy run, so its outputs
+//!   are bit-identical to the healthy run's — the property
+//!   `tests/fault_recovery.rs` asserts across every algorithm.
+//!
+//! Because every schedule in this codebase is shape-determined
+//! (Remark 1: who sends what to whom never depends on payload data —
+//! tainted processors keep the schedule and send garbage), the same
+//! analysis applies to a live [`run_degraded`](crate::net::run_degraded)
+//! and to a compiled [`Plan`](crate::net::plan::Plan) walk, and the two
+//! produce identical [`DegradedReport`]s.
+
+use super::plan::Plan;
+use super::sim::{ProcId, SimReport};
+use crate::util::Rng;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Crash round modelling a processor lost *after* the run completed
+/// (the distributed-storage scenario: the node encoded and replied, then
+/// its disk died). No message is ever dropped; the output is lost.
+pub const POST_RUN: u64 = u64::MAX;
+
+/// A deterministic description of which processors, links and rounds
+/// fail. Builder-style; all constructors are order-insensitive.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// `pid → first dead round` (1-based): the processor neither sends
+    /// nor receives from that round on, and its output is lost.
+    crashes: BTreeMap<ProcId, u64>,
+    /// Directed links dropped in every round.
+    links: BTreeSet<(ProcId, ProcId)>,
+    /// Single-round erasures `(round, src, dst)`.
+    erasures: BTreeSet<(u64, ProcId, ProcId)>,
+}
+
+impl FaultSpec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.links.is_empty() && self.erasures.is_empty()
+    }
+
+    /// Number of injected fault directives (crashes + links + erasures)
+    /// — the `faults_injected` metric.
+    pub fn injected(&self) -> u64 {
+        (self.crashes.len() + self.links.len() + self.erasures.len()) as u64
+    }
+
+    /// Crash-stop `pid` before it ever sends (dead from round 1).
+    pub fn crash(self, pid: ProcId) -> Self {
+        self.crash_from(pid, 1)
+    }
+
+    /// Crash-stop `pid` from `round` (1-based) on: rounds `< round` are
+    /// healthy, everything later is dead. An earlier crash wins.
+    pub fn crash_from(mut self, pid: ProcId, round: u64) -> Self {
+        assert!(round >= 1, "rounds are 1-based");
+        let e = self.crashes.entry(pid).or_insert(round);
+        *e = (*e).min(round);
+        self
+    }
+
+    /// Lose `pid` *after* the run completed (no messages dropped, output
+    /// lost) — see [`POST_RUN`].
+    pub fn crash_after(self, pid: ProcId) -> Self {
+        self.crash_from(pid, POST_RUN)
+    }
+
+    /// Drop every message `src → dst` (directed), in every round.
+    pub fn drop_link(mut self, src: ProcId, dst: ProcId) -> Self {
+        self.links.insert((src, dst));
+        self
+    }
+
+    /// Erase the messages `src → dst` of one specific round.
+    pub fn erase(mut self, round: u64, src: ProcId, dst: ProcId) -> Self {
+        self.erasures.insert((round, src, dst));
+        self
+    }
+
+    /// Seeded deterministic injection: crash `n` distinct processors
+    /// drawn from `candidates`, all from `round` on (pass [`POST_RUN`]
+    /// for the storage-loss scenario). `n > candidates.len()` crashes
+    /// them all.
+    pub fn random_crashes(seed: u64, candidates: &[ProcId], n: usize, round: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let picks = rng.choose(candidates.len(), n.min(candidates.len()));
+        picks
+            .into_iter()
+            .fold(FaultSpec::new(), |s, i| s.crash_from(candidates[i], round))
+    }
+
+    /// Processors named by a crash directive (any round).
+    pub fn crashed_procs(&self) -> Vec<ProcId> {
+        self.crashes.keys().copied().collect()
+    }
+
+    /// Is `pid` dead in round `round`?
+    pub fn crashed_by(&self, pid: ProcId, round: u64) -> bool {
+        self.crashes.get(&pid).is_some_and(|&r| round >= r)
+    }
+
+    /// Is `pid` crashed at all (its output is lost even if every round
+    /// ran healthily, e.g. a [`POST_RUN`] loss)?
+    pub fn is_crashed(&self, pid: ProcId) -> bool {
+        self.crashes.contains_key(&pid)
+    }
+
+    fn link_or_erasure(&self, round: u64, src: ProcId, dst: ProcId) -> bool {
+        self.links.contains(&(src, dst)) || self.erasures.contains(&(round, src, dst))
+    }
+}
+
+/// What a degraded run did and who survived it. Produced identically by
+/// the live engine ([`run_degraded`](crate::net::run_degraded)) and the
+/// plan walk ([`analyze_plan`]) — `tests/fault_recovery.rs` asserts the
+/// equality.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DegradedReport {
+    /// Traffic actually delivered (`C1` still counts every scheduled
+    /// round — wall-clock rounds elapse whether or not their messages
+    /// arrive; `m_t`, `C2`, `messages`, `bandwidth` count survivors
+    /// only).
+    pub delivered: SimReport,
+    pub dropped_messages: u64,
+    /// Field elements dropped (the erased-traffic counterpart of
+    /// `bandwidth`).
+    pub dropped_elems: u64,
+    /// Processors named by a crash directive: their outputs are lost and
+    /// — crucially — so is their *input data* (a dead node holds
+    /// nothing).
+    pub crashed: BTreeSet<ProcId>,
+    /// Alive processors whose computed state diverged (missed a message,
+    /// or consumed one computed from divergent state). Their *outputs*
+    /// are garbage, but they still hold their own input data.
+    pub tainted: BTreeSet<ProcId>,
+}
+
+impl DegradedReport {
+    /// Did `pid`'s *output* survive (alive and untainted — guaranteed
+    /// bit-identical to the healthy run)?
+    pub fn survives(&self, pid: ProcId) -> bool {
+        !self.crashed.contains(&pid) && !self.tainted.contains(&pid)
+    }
+
+    /// Does `pid` still hold its own *input* packet? Taint corrupts
+    /// computed state, not the initial holding; only death loses it.
+    pub fn holds_data(&self, pid: ProcId) -> bool {
+        !self.crashed.contains(&pid)
+    }
+
+    /// All processors whose outputs are lost (crashed ∪ tainted).
+    pub fn lost(&self) -> BTreeSet<ProcId> {
+        self.crashed.union(&self.tainted).copied().collect()
+    }
+}
+
+/// The shared taint-closure state machine: both engines feed it every
+/// scheduled message in round order and route only what it admits.
+pub(crate) struct FaultTracker<'a> {
+    spec: &'a FaultSpec,
+    /// `pid → round after whose absorption the state is wrong`; sends of
+    /// any strictly later round propagate taint.
+    taint_round: BTreeMap<ProcId, u64>,
+    dropped_messages: u64,
+    dropped_elems: u64,
+}
+
+impl<'a> FaultTracker<'a> {
+    pub(crate) fn new(spec: &'a FaultSpec) -> Self {
+        FaultTracker {
+            spec,
+            taint_round: BTreeMap::new(),
+            dropped_messages: 0,
+            dropped_elems: 0,
+        }
+    }
+
+    /// Decide one scheduled message of round `t` (1-based). Returns
+    /// `true` when it is delivered. Order-insensitive within a round:
+    /// round-`t` sends were computed before round-`t` deliveries, so
+    /// only taint acquired in rounds `< t` propagates.
+    pub(crate) fn on_message(&mut self, t: u64, src: ProcId, dst: ProcId, elems: u64) -> bool {
+        let dropped = self.spec.crashed_by(src, t)
+            || self.spec.crashed_by(dst, t)
+            || self.spec.link_or_erasure(t, src, dst);
+        if dropped {
+            self.dropped_messages += 1;
+            self.dropped_elems += elems;
+            if !self.spec.crashed_by(dst, t) {
+                // The receiver is alive and missed an input.
+                self.taint(dst, t);
+            }
+            return false;
+        }
+        if self.tainted_before(src, t) {
+            // Delivered, but computed from divergent state.
+            self.taint(dst, t);
+        }
+        true
+    }
+
+    fn tainted_before(&self, pid: ProcId, t: u64) -> bool {
+        self.taint_round.get(&pid).is_some_and(|&t0| t0 < t)
+    }
+
+    fn taint(&mut self, pid: ProcId, t: u64) {
+        let e = self.taint_round.entry(pid).or_insert(t);
+        *e = (*e).min(t);
+    }
+
+    /// Seal the analysis with the delivered-traffic report.
+    pub(crate) fn finish(self, delivered: SimReport) -> DegradedReport {
+        DegradedReport {
+            delivered,
+            dropped_messages: self.dropped_messages,
+            dropped_elems: self.dropped_elems,
+            crashed: self.spec.crashes.keys().copied().collect(),
+            tainted: self.taint_round.keys().copied().collect(),
+        }
+    }
+}
+
+/// Walk a compiled plan's schedule under `spec` at payload width `w`:
+/// the exact [`DegradedReport`] a degraded *live* run of the same
+/// collective records (the schedule is shape-determined, so the plan's
+/// `SendOp`s are the live emissions verbatim).
+pub fn analyze_plan(plan: &Plan, w: usize, spec: &FaultSpec) -> DegradedReport {
+    let w = w as u64;
+    let mut tracker = FaultTracker::new(spec);
+    let mut delivered = SimReport::default();
+    for (t, round) in plan.rounds().iter().enumerate() {
+        let t = t as u64 + 1;
+        let mut m_t = 0u64;
+        for s in &round.sends {
+            let elems = s.slots.len() as u64 * w;
+            if tracker.on_message(t, s.src, s.dst, elems) {
+                m_t = m_t.max(elems);
+                delivered.messages += 1;
+                delivered.bandwidth += elems;
+            }
+        }
+        delivered.c1 += 1;
+        delivered.c2 += m_t;
+        delivered.per_round_max.push(m_t);
+    }
+    tracker.finish(delivered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_spec_drops_and_taints_nothing() {
+        let spec = FaultSpec::new();
+        assert!(spec.is_empty());
+        assert_eq!(spec.injected(), 0);
+        let mut tr = FaultTracker::new(&spec);
+        assert!(tr.on_message(1, 0, 1, 3));
+        assert!(tr.on_message(2, 1, 2, 3));
+        let rep = tr.finish(SimReport::default());
+        assert_eq!(rep.dropped_messages, 0);
+        assert!(rep.crashed.is_empty() && rep.tainted.is_empty());
+        assert!(rep.survives(0) && rep.survives(1) && rep.survives(2));
+    }
+
+    #[test]
+    fn crash_drops_sends_from_its_round_on() {
+        let spec = FaultSpec::new().crash_from(1, 2);
+        let mut tr = FaultTracker::new(&spec);
+        assert!(tr.on_message(1, 1, 2, 1), "round 1: still healthy");
+        assert!(!tr.on_message(2, 1, 2, 1), "round 2: dead");
+        assert!(!tr.on_message(3, 0, 1, 1), "dead receivers drop too");
+        let rep = tr.finish(SimReport::default());
+        assert_eq!(rep.dropped_messages, 2);
+        assert!(rep.crashed.contains(&1));
+        // 2 missed a round-2 input → tainted; 0's send to the dead 1
+        // taints nobody.
+        assert!(rep.tainted.contains(&2));
+        assert!(!rep.tainted.contains(&0));
+        assert!(!rep.holds_data(1) && rep.holds_data(2));
+        assert!(!rep.survives(2) && rep.survives(0));
+    }
+
+    #[test]
+    fn taint_propagates_only_through_later_deliveries() {
+        let spec = FaultSpec::new().erase(1, 0, 1);
+        let mut tr = FaultTracker::new(&spec);
+        assert!(!tr.on_message(1, 0, 1, 5), "erased");
+        // Same round: 1's sends were computed before the miss — clean.
+        assert!(tr.on_message(1, 1, 2, 5));
+        // Later round: 1's state is wrong, 3 inherits the taint.
+        assert!(tr.on_message(2, 1, 3, 5));
+        let rep = tr.finish(SimReport::default());
+        assert_eq!(
+            rep.tainted.iter().copied().collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+        assert_eq!(rep.dropped_elems, 5);
+    }
+
+    #[test]
+    fn post_run_crash_never_drops() {
+        let spec = FaultSpec::new().crash_after(7);
+        let mut tr = FaultTracker::new(&spec);
+        assert!(tr.on_message(1, 7, 0, 1));
+        assert!(tr.on_message(9, 0, 7, 1));
+        let rep = tr.finish(SimReport::default());
+        assert_eq!(rep.dropped_messages, 0);
+        assert!(rep.tainted.is_empty());
+        assert!(!rep.survives(7) && !rep.holds_data(7), "output + data lost");
+    }
+
+    #[test]
+    fn dropped_link_is_directed_and_earlier_crash_wins() {
+        let spec = FaultSpec::new().drop_link(0, 1);
+        let mut tr = FaultTracker::new(&spec);
+        assert!(!tr.on_message(4, 0, 1, 1));
+        assert!(tr.on_message(4, 1, 0, 1), "reverse direction intact");
+        let spec = FaultSpec::new().crash_from(3, 5).crash_from(3, 2);
+        assert!(spec.crashed_by(3, 2));
+        assert!(!spec.crashed_by(3, 1));
+    }
+
+    #[test]
+    fn random_crashes_are_deterministic_and_distinct() {
+        let procs: Vec<ProcId> = (0..10).collect();
+        let a = FaultSpec::random_crashes(42, &procs, 4, POST_RUN);
+        let b = FaultSpec::random_crashes(42, &procs, 4, POST_RUN);
+        assert_eq!(a, b);
+        assert_eq!(a.crashed_procs().len(), 4);
+        assert_eq!(a.injected(), 4);
+        let c = FaultSpec::random_crashes(43, &procs, 20, 1);
+        assert_eq!(c.crashed_procs().len(), 10, "capped at the candidates");
+    }
+}

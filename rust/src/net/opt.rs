@@ -101,6 +101,21 @@ impl OutputMatrix {
     pub fn rows_flat(&self) -> &[u64] {
         &self.rows
     }
+
+    /// Distinct row indices computing the outputs of the processors
+    /// `keep` accepts, ascending — the degraded replay path evaluates
+    /// exactly the rows of the surviving processors and skips the rest.
+    pub fn rows_where(&self, mut keep: impl FnMut(ProcId) -> bool) -> Vec<usize> {
+        let mut rows: Vec<usize> = self
+            .assignment
+            .iter()
+            .filter(|&(&pid, _)| keep(pid))
+            .map(|(_, &r)| r)
+            .collect();
+        rows.sort_unstable();
+        rows.dedup();
+        rows
+    }
 }
 
 /// A plan lowered through the full pass pipeline: the [`OutputMatrix`],

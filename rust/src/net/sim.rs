@@ -20,6 +20,7 @@
 //! is exactly associative/commutative and all parallel loops merge their
 //! outputs in processor-index order.
 
+use super::fault::{DegradedReport, FaultSpec, FaultTracker};
 use super::payload::{Packet, PacketBuf};
 use super::trace::TraceEvent;
 use anyhow::{bail, Result};
@@ -255,6 +256,19 @@ impl Router {
 /// Run `coll` to completion under the p-port model; panics-free — all
 /// protocol violations surface as errors naming the offending round.
 pub fn run(sim: &mut Sim, coll: &mut dyn Collective) -> Result<SimReport> {
+    run_loop(sim, coll, None)
+}
+
+/// The engine loop shared by [`run`] and [`run_degraded`]: one stepping
+/// path, so the two execution modes cannot drift apart. When a fault
+/// tracker is supplied, the messages it rejects are discarded *before*
+/// routing — the schedule (and hence `C1`) is untouched, only delivery
+/// and the `m_t`-based metrics see the loss.
+fn run_loop(
+    sim: &mut Sim,
+    coll: &mut dyn Collective,
+    mut tracker: Option<&mut FaultTracker<'_>>,
+) -> Result<SimReport> {
     let mut report = SimReport::default();
     let cap = coll
         .participants()
@@ -269,7 +283,7 @@ pub fn run(sim: &mut Sim, coll: &mut dyn Collective) -> Result<SimReport> {
         if coll.is_done() && inbox.is_empty() {
             break;
         }
-        let out = coll.step(std::mem::take(&mut inbox));
+        let mut out = coll.step(std::mem::take(&mut inbox));
         if out.is_empty() {
             if coll.is_done() {
                 break;
@@ -282,6 +296,9 @@ pub fn run(sim: &mut Sim, coll: &mut dyn Collective) -> Result<SimReport> {
         }
         idle_guard = 0;
         let round = report.c1 + 1;
+        if let Some(tr) = tracker.as_mut() {
+            out.retain(|m| tr.on_message(round, m.src, m.dst, m.elems()));
+        }
         let m_t = router.route(sim, round, out, &mut report)?;
         report.c1 += 1;
         report.c2 += m_t;
@@ -289,6 +306,41 @@ pub fn run(sim: &mut Sim, coll: &mut dyn Collective) -> Result<SimReport> {
         inbox = router.drain();
     }
     Ok(report)
+}
+
+/// The outcome of a degraded live run: the surviving outputs and the
+/// full fault analysis.
+#[derive(Clone, Debug)]
+pub struct DegradedRun {
+    /// Outputs of processors whose state never diverged — guaranteed
+    /// bit-identical to the same processors' outputs in a healthy run.
+    pub outputs: Outputs,
+    pub fault: DegradedReport,
+}
+
+/// Run `coll` to completion under `spec`-injected faults: the collective
+/// steps exactly as in [`run`] (schedules are shape-determined — tainted
+/// processors keep sending, with degraded values), but messages whose
+/// sender/receiver is dead or whose link/round is erased are discarded
+/// *before* routing. `C1` counts every scheduled round; `m_t`/`C2`/
+/// `messages`/`bandwidth` count delivered traffic only. Outputs are
+/// returned for surviving processors alone — the rest are lost and must
+/// be reconstructed from the code's redundancy
+/// (`codes::recovery`).
+pub fn run_degraded(
+    sim: &mut Sim,
+    coll: &mut dyn Collective,
+    spec: &FaultSpec,
+) -> Result<DegradedRun> {
+    let mut tracker = FaultTracker::new(spec);
+    let report = run_loop(sim, coll, Some(&mut tracker))?;
+    let fault = tracker.finish(report);
+    let outputs: Outputs = coll
+        .outputs()
+        .into_iter()
+        .filter(|&(pid, _)| fault.survives(pid))
+        .collect();
+    Ok(DegradedRun { outputs, fault })
 }
 
 #[cfg(test)]
@@ -344,6 +396,53 @@ mod tests {
         assert_eq!(r.c2, 9); // 3 elements per round max
         assert_eq!(r.messages, 6);
         assert_eq!(r.bandwidth, 18);
+    }
+
+    #[test]
+    fn degraded_run_with_no_faults_matches_healthy() {
+        let mk = || NaiveBroadcast {
+            n: 7,
+            p: 2,
+            sent: 0,
+            data: vec![1, 2, 3],
+            done_round: false,
+        };
+        let healthy = run(&mut Sim::new(2), &mut mk()).unwrap();
+        let mut c = mk();
+        let deg = run_degraded(&mut Sim::new(2), &mut c, &FaultSpec::new()).unwrap();
+        assert_eq!(deg.fault.delivered, healthy);
+        assert_eq!(deg.fault.dropped_messages, 0);
+        assert_eq!(deg.outputs.len(), 7, "everyone survives");
+    }
+
+    #[test]
+    fn degraded_run_drops_crashed_senders_and_counts_rounds() {
+        // Crash the only sender from round 2 on: rounds still elapse
+        // (C1 = 3 as in the healthy run) but rounds 2–3 deliver nothing.
+        let mut c = NaiveBroadcast {
+            n: 7,
+            p: 2,
+            sent: 0,
+            data: vec![1, 2, 3],
+            done_round: false,
+        };
+        let spec = FaultSpec::new().crash_from(0, 2);
+        let deg = run_degraded(&mut Sim::new(2), &mut c, &spec).unwrap();
+        assert_eq!(deg.fault.delivered.c1, 3);
+        assert_eq!(deg.fault.delivered.per_round_max, vec![3, 0, 0]);
+        assert_eq!(deg.fault.delivered.messages, 2);
+        assert_eq!(deg.fault.dropped_messages, 4);
+        assert_eq!(deg.fault.dropped_elems, 12);
+        // Receivers of dropped messages are tainted; round-1 receivers
+        // and the crashed root are not *tainted* (the root is crashed).
+        assert!(deg.fault.crashed.contains(&0));
+        assert_eq!(deg.fault.tainted.len(), 4);
+        assert!(!deg.outputs.contains_key(&0));
+        assert_eq!(
+            deg.outputs.keys().copied().collect::<Vec<_>>(),
+            vec![1, 2],
+            "only the round-1 receivers survive"
+        );
     }
 
     #[test]

@@ -1,0 +1,263 @@
+//! Fault-scenario conformance: for every planner algorithm, over both
+//! field families, across degenerate shapes and **every failure count
+//! from 0 to R**, recovery from crashed processors must reproduce all
+//! sink outputs **bit-identically** to the healthy run — through both
+//! the live-sim (`EncodeJob::run_degraded`) and the batched-replay
+//! (`EncodeJob::run_degraded_cached` /
+//! `net::exec::replay_degraded_batch`) paths.
+//!
+//! Also asserts the two engines produce identical failure analyses
+//! (delivered traffic, crashed/tainted sets, lost sinks) for mid-run
+//! crash-stop, dropped-link and per-round-erasure scenarios, and that
+//! unrecoverable patterns (fewer than `K` surviving coordinates) fail
+//! with a proper error on both paths instead of fabricating data.
+
+use dce::coordinator::{config::CodeKind, DegradedJobReport, EncodeJob, JobConfig, PlanCache};
+use dce::framework::AlgoRequest;
+use dce::net::{FaultSpec, POST_RUN};
+
+fn job_for(
+    field: &str,
+    algo: AlgoRequest,
+    code: CodeKind,
+    k: usize,
+    r: usize,
+    ports: usize,
+    w: usize,
+) -> EncodeJob {
+    let cfg = JobConfig {
+        field: field.into(),
+        k,
+        r,
+        w,
+        ports,
+        code,
+        algorithm: algo,
+        seed: (k * 1000 + r * 10 + ports) as u64,
+        ..JobConfig::default()
+    };
+    EncodeJob::synthetic(cfg).unwrap()
+}
+
+/// Run both degraded paths under `faults` and assert full bit-identical
+/// repair against the healthy coded rows.
+fn assert_recovers(
+    tag: &str,
+    job: &EncodeJob,
+    cache: &PlanCache,
+    healthy: &[Vec<u64>],
+    faults: &FaultSpec,
+) -> DegradedJobReport {
+    let live = job.run_degraded(faults).unwrap_or_else(|e| {
+        panic!("{tag}: live degraded run failed: {e:#}");
+    });
+    assert_eq!(live.coded, healthy, "{tag}: live repair ≡ healthy");
+    assert_eq!(live.verified, Some(true), "{tag}: live verification");
+    assert_eq!(
+        live.outputs_recovered,
+        live.lost_sinks.len(),
+        "{tag}: every lost sink recovered"
+    );
+    let cached = job.run_degraded_cached(cache, faults).unwrap_or_else(|e| {
+        panic!("{tag}: cached degraded run failed: {e:#}");
+    });
+    assert_eq!(cached.coded, healthy, "{tag}: cached repair ≡ healthy");
+    assert_eq!(cached.sim, live.sim, "{tag}: delivered stats live ≡ replay");
+    assert_eq!(cached.crashed, live.crashed, "{tag}: crashed sets");
+    assert_eq!(cached.lost_sinks, live.lost_sinks, "{tag}: lost sinks");
+    assert_eq!(
+        cached.surviving_sinks, live.surviving_sinks,
+        "{tag}: surviving sinks"
+    );
+    live
+}
+
+/// The satellite grid: every planner algorithm × both fields, post-run
+/// losses of every size 0..=R drawn over sources *and* sinks.
+#[test]
+fn every_algorithm_and_field_recovers_from_any_post_run_loss() {
+    let grid: &[(&str, AlgoRequest, CodeKind, usize, usize, usize, usize)] = &[
+        // prime field (q = 786433)
+        ("prime:786433", AlgoRequest::RsSpecific, CodeKind::RsStructured, 16, 4, 2, 3),
+        ("prime:786433", AlgoRequest::RsSpecific, CodeKind::RsStructured, 4, 8, 1, 2),
+        ("prime:786433", AlgoRequest::Universal, CodeKind::RsPlain, 12, 5, 2, 4),
+        ("prime:786433", AlgoRequest::MultiReduce, CodeKind::Lagrange, 6, 3, 1, 2),
+        ("prime:786433", AlgoRequest::Direct, CodeKind::RsStructured, 8, 4, 2, 1),
+        // GF(2^8) (q − 1 = 255 — structured codes pick radix 3)
+        ("gf2e:8", AlgoRequest::RsSpecific, CodeKind::RsStructured, 6, 3, 1, 3),
+        ("gf2e:8", AlgoRequest::Universal, CodeKind::RsPlain, 7, 4, 2, 2),
+        ("gf2e:8", AlgoRequest::MultiReduce, CodeKind::RsPlain, 5, 2, 1, 1),
+        ("gf2e:8", AlgoRequest::Direct, CodeKind::Lagrange, 4, 4, 1, 2),
+    ];
+    for &(field, algo, code, k, r, p, w) in grid {
+        let tag = format!("{field} {algo:?} K={k} R={r}");
+        let job = job_for(field, algo, code, k, r, p, w);
+        let cache = PlanCache::new();
+        let healthy = job.encode_cached(&cache, &job.inputs).unwrap();
+        let procs: Vec<usize> = (0..k + r).collect();
+        for failures in 0..=r {
+            let faults =
+                FaultSpec::random_crashes(failures as u64 * 31 + 7, &procs, failures, POST_RUN);
+            let rep = assert_recovers(
+                &format!("{tag} failures={failures}"),
+                &job,
+                &cache,
+                &healthy,
+                &faults,
+            );
+            assert_eq!(rep.faults_injected, failures as u64);
+            assert_eq!(rep.crashed.len(), failures);
+        }
+    }
+}
+
+/// The degenerate corners the satellite names: K=1, R=1, p=1, W=1 (and
+/// small mixes), every algorithm, every failure count.
+#[test]
+fn degenerate_shapes_recover_for_every_algorithm() {
+    for algo in [
+        AlgoRequest::Auto,
+        AlgoRequest::Universal,
+        AlgoRequest::MultiReduce,
+        AlgoRequest::Direct,
+        AlgoRequest::RsSpecific,
+    ] {
+        for (k, r, p, w) in [
+            (1usize, 1usize, 1usize, 1usize),
+            (2, 1, 1, 1),
+            (1, 2, 1, 1),
+            (1, 1, 1, 3),
+        ] {
+            let tag = format!("{algo:?} K={k} R={r} p={p} W={w}");
+            let job = job_for("prime:786433", algo, CodeKind::RsStructured, k, r, p, w);
+            let cache = PlanCache::new();
+            let healthy = job.encode_cached(&cache, &job.inputs).unwrap();
+            let procs: Vec<usize> = (0..k + r).collect();
+            for failures in 0..=r {
+                let faults = FaultSpec::random_crashes(
+                    failures as u64 + 1,
+                    &procs,
+                    failures,
+                    POST_RUN,
+                );
+                assert_recovers(
+                    &format!("{tag} failures={failures}"),
+                    &job,
+                    &cache,
+                    &healthy,
+                    &faults,
+                );
+            }
+        }
+    }
+}
+
+/// Mid-encode crash of a reduce-root sink: in the divisible K ≥ R
+/// framework a sink only *receives* (phase-2 reduce root), so killing it
+/// from round 1 loses exactly its own output — recoverable from the
+/// other N−1 coordinates even though messages were really dropped
+/// mid-protocol.
+#[test]
+fn mid_encode_sink_crash_loses_only_that_sink() {
+    let job = job_for("prime:786433", AlgoRequest::Universal, CodeKind::RsStructured, 16, 4, 1, 2);
+    let cache = PlanCache::new();
+    let healthy = job.encode_cached(&cache, &job.inputs).unwrap();
+    for sink in 0..4usize {
+        let faults = FaultSpec::new().crash(16 + sink);
+        let rep = assert_recovers(
+            &format!("sink {sink} dead from round 1"),
+            &job,
+            &cache,
+            &healthy,
+            &faults,
+        );
+        assert_eq!(rep.lost_sinks, vec![sink]);
+        assert!(rep.sim.messages > 0, "the rest of the protocol ran");
+    }
+    // Same story through a dropped last-hop link: source 0 is the rank-1
+    // child of row 0's reduce, so killing link 0 → sink 16 taints only
+    // the sink.
+    let faults = FaultSpec::new().drop_link(0, 16);
+    let rep = assert_recovers("link 0→16 dropped", &job, &cache, &healthy, &faults);
+    assert_eq!(rep.lost_sinks, vec![0]);
+    assert!(rep.crashed.is_empty(), "nobody crashed — taint only");
+}
+
+/// Mid-encode *source* crashes: taint may spread to every sink, in
+/// which case fewer than K coordinates survive and both paths must
+/// refuse identically (a proper error, never fabricated data); when
+/// enough coordinates survive, both paths must repair identically.
+#[test]
+fn mid_encode_source_crash_is_consistent_across_engines() {
+    for algo in [
+        AlgoRequest::Universal,
+        AlgoRequest::MultiReduce,
+        AlgoRequest::Direct,
+        AlgoRequest::RsSpecific,
+    ] {
+        let job = job_for("prime:786433", algo, CodeKind::RsStructured, 16, 4, 1, 2);
+        let cache = PlanCache::new();
+        let healthy = job.encode_cached(&cache, &job.inputs).unwrap();
+        for spec in [
+            FaultSpec::new().crash_from(3, 2),
+            FaultSpec::new().erase(1, 1, 2),
+            FaultSpec::new().crash_from(0, 3).crash_after(17),
+        ] {
+            let tag = format!("{algo:?} {spec:?}");
+            let live = job.run_degraded(&spec);
+            let cached = job.run_degraded_cached(&cache, &spec);
+            match (live, cached) {
+                (Ok(l), Ok(c)) => {
+                    assert_eq!(l.coded, healthy, "{tag}: live repair");
+                    assert_eq!(c.coded, healthy, "{tag}: cached repair");
+                    assert_eq!(l.sim, c.sim, "{tag}: delivered stats");
+                    assert_eq!(l.lost_sinks, c.lost_sinks, "{tag}: lost sinks");
+                }
+                (Err(le), Err(ce)) => {
+                    assert!(
+                        le.to_string().contains("unrecoverable"),
+                        "{tag}: live error: {le:#}"
+                    );
+                    assert!(
+                        ce.to_string().contains("unrecoverable"),
+                        "{tag}: cached error: {ce:#}"
+                    );
+                }
+                (l, c) => panic!(
+                    "{tag}: engines disagree — live {:?}, cached {:?}",
+                    l.map(|r| r.lost_sinks),
+                    c.map(|r| r.lost_sinks)
+                ),
+            }
+        }
+    }
+}
+
+/// The degraded batch path serves B jobs through one analysis + one
+/// columnar pass, bit-identical per job to the healthy batch.
+#[test]
+fn degraded_batch_is_bit_identical_per_job_across_widths() {
+    use dce::gf::Field;
+    let job = job_for("prime:786433", AlgoRequest::Universal, CodeKind::RsStructured, 8, 4, 2, 4);
+    let cache = PlanCache::new();
+    let f = job.field.clone();
+    let mut rng = dce::util::Rng::new(99);
+    let procs: Vec<usize> = (0..12).collect();
+    let faults = FaultSpec::random_crashes(5, &procs, 4, POST_RUN);
+    for (b, w) in [(1usize, 1usize), (3, 5), (16, 2)] {
+        let jobs: Vec<Vec<Vec<u64>>> = (0..b)
+            .map(|_| {
+                (0..8)
+                    .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[Vec<u64>]> = jobs.iter().map(|x| x.as_slice()).collect();
+        let healthy = job.encode_batch_cached(&cache, &refs).unwrap();
+        let (coded, stats) = job
+            .encode_degraded_batch_cached(&cache, &refs, &faults)
+            .unwrap();
+        assert_eq!(coded, healthy, "B={b} W={w}");
+        assert_eq!(stats.outputs_recovered, (stats.outputs_lost * b) as u64);
+    }
+}

@@ -1,0 +1,174 @@
+#!/usr/bin/env python3
+"""Gate bench results against committed baselines.
+
+Usage:
+    bench_trend.py --baseline-dir DIR --current-dir DIR FILE [FILE...]
+
+Each FILE is a ``BENCH_*.json`` emitted by one of the ``harness = false``
+bench binaries (they write to the repo root). The committed copy at the
+repo root is the baseline; a CI run stashes it aside, re-runs the bench,
+and compares.
+
+Gating rules
+------------
+* The current file must exist, parse, and carry the same ``"bench"``
+  name as the baseline.
+* A baseline marked ``"seed_baseline": true`` has never been measured:
+  only structure is checked, and a refresh notice is printed. Committing
+  the artifact of a real (non-smoke) bench run replaces it.
+* **Deterministic** fields gate unconditionally:
+  - ``slots_after`` must not increase (optimizer regressions),
+  - ``recovery_exact`` must not flip away from ``true``.
+* **Timing** fields gate only when *both* files were produced with
+  ``smoke == false`` (a real multi-iteration run on comparable
+  hardware). Smoke runs execute one iteration on shared runners — their
+  timings are reported as advisory deltas, never failed on:
+  - lower-is-better (fail when current > 1.30 x baseline):
+    ``singles_us_per_job``, ``batch_us_per_job``, ``us_per_job``;
+  - higher-is-better (fail when current < baseline / 1.30):
+    ``speedup``, ``recovered_per_s``.
+
+Exit status: 0 when every gate passes, 1 otherwise.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+TOLERANCE = 1.30
+TIMING_LOWER_BETTER = {"singles_us_per_job", "batch_us_per_job", "us_per_job"}
+TIMING_HIGHER_BETTER = {"speedup", "recovered_per_s"}
+EXACT_LOWER_OR_EQUAL = {"slots_after"}
+EXACT_MUST_HOLD = {"recovery_exact"}
+# Keys that identify entries when aligning lists of objects.
+ALIGN_KEYS = ("name", "failed")
+
+failures = []
+notices = []
+
+
+def align(base_list, cur_list):
+    """Pair up list entries by an identifying key, else by index."""
+    if base_list and isinstance(base_list[0], dict):
+        for key in ALIGN_KEYS:
+            if all(isinstance(e, dict) and key in e for e in base_list + cur_list):
+                cur_by = {e[key]: e for e in cur_list}
+                return [
+                    (f"[{key}={b[key]}]", b, cur_by.get(b[key]))
+                    for b in base_list
+                ]
+    pairs = []
+    for i, b in enumerate(base_list):
+        pairs.append((f"[{i}]", b, cur_list[i] if i < len(cur_list) else None))
+    return pairs
+
+
+def compare(path, base, cur, timing_gated):
+    if isinstance(base, dict):
+        if not isinstance(cur, dict):
+            failures.append(f"{path}: object became {type(cur).__name__}")
+            return
+        for k, bv in base.items():
+            if k not in cur:
+                failures.append(f"{path}.{k}: missing from current result")
+                continue
+            compare_field(f"{path}.{k}", k, bv, cur[k], timing_gated)
+    elif isinstance(base, list):
+        if not isinstance(cur, list):
+            failures.append(f"{path}: list became {type(cur).__name__}")
+            return
+        for tag, b, c in align(base, cur):
+            if c is None:
+                failures.append(f"{path}{tag}: entry missing from current result")
+            else:
+                compare(f"{path}{tag}", b, c, timing_gated)
+
+
+def compare_field(path, key, bv, cv, timing_gated):
+    if isinstance(bv, (dict, list)):
+        compare(path, bv, cv, timing_gated)
+        return
+    if key in EXACT_MUST_HOLD:
+        if bv is True and cv is not True:
+            failures.append(f"{path}: was {bv!r}, now {cv!r}")
+        return
+    if key in EXACT_LOWER_OR_EQUAL:
+        if isinstance(bv, (int, float)) and isinstance(cv, (int, float)) and cv > bv:
+            failures.append(f"{path}: regressed {bv} -> {cv} (must not increase)")
+        return
+    if key in TIMING_LOWER_BETTER or key in TIMING_HIGHER_BETTER:
+        if not isinstance(bv, (int, float)) or not isinstance(cv, (int, float)):
+            return
+        if bv <= 0:
+            return
+        ratio = cv / bv
+        worse = ratio > TOLERANCE if key in TIMING_LOWER_BETTER else ratio < 1 / TOLERANCE
+        line = f"{path}: {bv:.3f} -> {cv:.3f} ({ratio:.2f}x)"
+        if not timing_gated:
+            notices.append(f"advisory (smoke timings not gated) {line}")
+        elif worse:
+            failures.append(f"{line} exceeds the {TOLERANCE - 1:.0%} regression tolerance")
+
+
+def check_file(name, baseline_dir, current_dir):
+    base_path = os.path.join(baseline_dir, name)
+    cur_path = os.path.join(current_dir, name)
+    if not os.path.exists(base_path):
+        failures.append(f"{name}: no committed baseline at {base_path}")
+        return
+    if not os.path.exists(cur_path):
+        failures.append(f"{name}: bench did not produce {cur_path}")
+        return
+    try:
+        base = json.load(open(base_path))
+    except json.JSONDecodeError as e:
+        failures.append(f"{name}: baseline is not valid JSON: {e}")
+        return
+    try:
+        cur = json.load(open(cur_path))
+    except json.JSONDecodeError as e:
+        failures.append(f"{name}: current result is not valid JSON: {e}")
+        return
+    if base.get("bench") != cur.get("bench"):
+        failures.append(
+            f"{name}: bench name changed: {base.get('bench')!r} -> {cur.get('bench')!r}"
+        )
+        return
+    if base.get("seed_baseline"):
+        notices.append(
+            f"{name}: seed baseline (never measured) — structure checked only; "
+            f"commit a fresh non-smoke run of this bench to start gating numbers"
+        )
+        return
+    timing_gated = base.get("smoke") is False and cur.get("smoke") is False
+    if not timing_gated:
+        notices.append(
+            f"{name}: smoke-mode timings (base smoke={base.get('smoke')}, "
+            f"current smoke={cur.get('smoke')}) — timing deltas advisory, "
+            f"deterministic fields still gated"
+        )
+    compare(name, base, cur, timing_gated)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", required=True)
+    ap.add_argument("--current-dir", required=True)
+    ap.add_argument("files", nargs="+")
+    args = ap.parse_args()
+    for name in args.files:
+        check_file(name, args.baseline_dir, args.current_dir)
+    for n in notices:
+        print(f"NOTE  {n}")
+    for f in failures:
+        print(f"FAIL  {f}")
+    if failures:
+        print(f"\nbench-trend: {len(failures)} regression(s) against committed baselines")
+        return 1
+    print(f"\nbench-trend: OK ({len(args.files)} result file(s) checked)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
