@@ -1,0 +1,291 @@
+//! Bench: **packed narrow-lane kernels vs the scalar `u64` field path**
+//! — the memory-bandwidth win of storing each wire symbol in the
+//! `⌈log2 q⌉`-sized lane the cost model already charges for.
+//!
+//! Two sections:
+//!
+//! * **micro** — axpy / lincomb / gemm per field, packed
+//!   (`gf::kernels`) vs scalar (`Field` trait over `u64`), equal inputs,
+//!   correctness asserted before any timing;
+//! * **batched replay** — the serving path end to end:
+//!   `replay_batch` (packed columnar arena) vs `replay_batch_scalar`
+//!   (the pre-packing `u64` engine) on a compiled universal plan at
+//!   `B = 32`.
+//!
+//! Acceptance targets, asserted below (skipped under
+//! `DCE_BENCH_SMOKE=1`): **≥ 3×** per-job batched-replay throughput on
+//! `gf2e:8` (u8 lanes, 8× less traffic + nibble-split tables) and
+//! **≥ 1.5×** on the default prime 786433 (u32 lanes, 2× less traffic).
+//! Machine-readable results land in `BENCH_kernels.json` at the repo
+//! root for the CI bench-trend gate.
+
+use dce::framework::{compile_plan, AlgoRequest};
+use dce::gf::matrix::gemm_into;
+use dce::gf::{AnyField, Field, Kernels, Mat};
+use dce::net::{exec, Packet};
+use dce::util::{bench, bench_iters, bench_smoke, Rng};
+use std::sync::Arc;
+
+struct MicroResult {
+    name: &'static str,
+    layout: &'static str,
+    axpy_speedup: f64,
+    lincomb_speedup: f64,
+    gemm_speedup: f64,
+}
+
+struct ReplayResult {
+    name: &'static str,
+    layout: &'static str,
+    b: usize,
+    w: usize,
+    scalar_us_per_job: f64,
+    packed_us_per_job: f64,
+    speedup: f64,
+    target: f64,
+}
+
+fn rand_vec(f: &AnyField, n: usize, rng: &mut Rng) -> Vec<u64> {
+    (0..n).map(|_| rng.below(f.order())).collect()
+}
+
+fn micro(name: &'static str, iters: usize, rng: &mut Rng) -> MicroResult {
+    let f = AnyField::parse(name).unwrap();
+    let kern = Kernels::for_field(&f);
+    let layout = kern.layout().name();
+    let n = 1 << 16;
+    let (m, k) = (80usize, 64usize);
+
+    // --- axpy ---
+    let src = rand_vec(&f, n, rng);
+    let acc0 = rand_vec(&f, n, rng);
+    let c = rng.range(1, f.order());
+    {
+        let mut s = acc0.clone();
+        f.axpy_into(&mut s, c, &src);
+        let mut p = kern.pack(&acc0);
+        kern.axpy(&mut p, c, &kern.pack(&src));
+        assert_eq!(p.to_u64(), s, "{name}: packed axpy != scalar axpy");
+    }
+    let mut acc_s = acc0.clone();
+    let axpy_scalar = bench(&format!("{name:<16} axpy scalar/u64"), iters, |_| {
+        f.axpy_into(&mut acc_s, c, &src);
+        acc_s[0]
+    });
+    let mut acc_p = kern.pack(&acc0);
+    let src_p = kern.pack(&src);
+    let axpy_packed = bench(&format!("{name:<16} axpy packed/{layout}"), iters, |_| {
+        kern.axpy(&mut acc_p, c, &src_p);
+        acc_p.get(0)
+    });
+
+    // --- lincomb (k terms over n-lane rows) ---
+    let arena = rand_vec(&f, k * n, rng);
+    let coeffs = rand_vec(&f, k, rng);
+    let terms: Vec<(u64, &[u64])> = coeffs
+        .iter()
+        .enumerate()
+        .map(|(i, &cc)| (cc, &arena[i * n..(i + 1) * n]))
+        .collect();
+    let arena_p = kern.pack(&arena);
+    {
+        let mut s = vec![0u64; n];
+        f.lincomb_into(&mut s, &terms);
+        let mut p = kern.zeros(n);
+        kern.lincomb(&mut p, &coeffs, &arena_p);
+        assert_eq!(p.to_u64(), s, "{name}: packed lincomb != scalar lincomb");
+    }
+    let mut lin_s = vec![0u64; n];
+    let lincomb_scalar = bench(&format!("{name:<16} lincomb scalar/u64"), iters, |_| {
+        lin_s.fill(0);
+        f.lincomb_into(&mut lin_s, &terms);
+        lin_s[0]
+    });
+    let mut lin_p = kern.zeros(n);
+    let lincomb_packed = bench(&format!("{name:<16} lincomb packed/{layout}"), iters, |_| {
+        lin_p.fill_zero();
+        kern.lincomb(&mut lin_p, &coeffs, &arena_p);
+        lin_p.get(0)
+    });
+
+    // --- gemm (m output rows over the same arena) ---
+    let a = rand_vec(&f, m * k, rng);
+    let rows: Vec<&[u64]> = (0..m).map(|i| &a[i * k..(i + 1) * k]).collect();
+    {
+        let mut s = vec![0u64; m * n];
+        gemm_into(&f, m, k, &a, &arena, n, &mut s);
+        let mut p = kern.zeros(m * n);
+        kern.gemm_rows(&rows, &arena_p, n, &mut p, false);
+        assert_eq!(p.to_u64(), s, "{name}: packed gemm != scalar gemm");
+    }
+    let mut gemm_s = vec![0u64; m * n];
+    let gemm_scalar = bench(&format!("{name:<16} gemm scalar/u64"), iters, |_| {
+        gemm_s.fill(0);
+        gemm_into(&f, m, k, &a, &arena, n, &mut gemm_s);
+        gemm_s[0]
+    });
+    let mut gemm_p = kern.zeros(m * n);
+    let gemm_packed = bench(&format!("{name:<16} gemm packed/{layout}"), iters, |_| {
+        gemm_p.fill_zero();
+        kern.gemm_rows(&rows, &arena_p, n, &mut gemm_p, false);
+        gemm_p.get(0)
+    });
+
+    for st in [
+        &axpy_scalar,
+        &axpy_packed,
+        &lincomb_scalar,
+        &lincomb_packed,
+        &gemm_scalar,
+        &gemm_packed,
+    ] {
+        println!("{st}");
+    }
+    MicroResult {
+        name,
+        layout,
+        axpy_speedup: axpy_scalar.median.as_secs_f64() / axpy_packed.median.as_secs_f64().max(1e-12),
+        lincomb_speedup: lincomb_scalar.median.as_secs_f64()
+            / lincomb_packed.median.as_secs_f64().max(1e-12),
+        gemm_speedup: gemm_scalar.median.as_secs_f64() / gemm_packed.median.as_secs_f64().max(1e-12),
+    }
+}
+
+fn batched_replay(name: &'static str, target: f64, iters: usize, rng: &mut Rng) -> ReplayResult {
+    let f = AnyField::parse(name).unwrap();
+    let kern = Kernels::for_field(&f);
+    let layout = kern.layout().name();
+    let (k, r, w, ports, b) = (64usize, 16usize, 256usize, 2usize, 32usize);
+    let parity = Arc::new(Mat::random(&f, k, r, 0xC0DE));
+    let compiled = compile_plan(&f, None, Some(parity), ports, w, AlgoRequest::Universal, None)
+        .expect("compile universal plan");
+    let opt = &compiled.opt;
+
+    let jobs: Vec<Vec<Packet>> = (0..b)
+        .map(|_| (0..k).map(|_| rand_vec(&f, w, rng)).collect())
+        .collect();
+    let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
+
+    // Correctness gate: packed ≡ scalar, bit for bit, before timing.
+    let packed = exec::replay_batch_kernels(opt, &compiled.kernels, &refs).unwrap();
+    let scalar = exec::replay_batch_scalar(opt, &f, &refs).unwrap();
+    for (j, (pj, sj)) in packed.iter().zip(&scalar).enumerate() {
+        assert_eq!(pj.outputs, sj.outputs, "{name} job {j}: packed != scalar");
+    }
+
+    let scalar_st = bench(&format!("{name:<16} replay_batch scalar/u64"), iters, |_| {
+        exec::replay_batch_scalar(opt, &f, &refs).unwrap().len()
+    });
+    let packed_st = bench(
+        &format!("{name:<16} replay_batch packed/{layout}"),
+        iters,
+        |_| exec::replay_batch_kernels(opt, &compiled.kernels, &refs).unwrap().len(),
+    );
+    println!("{scalar_st}");
+    println!("{packed_st}");
+    let scalar_us = scalar_st.median.as_secs_f64() * 1e6 / b as f64;
+    let packed_us = packed_st.median.as_secs_f64() * 1e6 / b as f64;
+    let speedup = scalar_st.median.as_secs_f64() / packed_st.median.as_secs_f64().max(1e-12);
+    println!(
+        "{name}: per-job scalar {scalar_us:.2}us  packed {packed_us:.2}us  \
+         speedup {speedup:.2}x (target >= {target}x)"
+    );
+    ReplayResult {
+        name,
+        layout,
+        b,
+        w,
+        scalar_us_per_job: scalar_us,
+        packed_us_per_job: packed_us,
+        speedup,
+        target,
+    }
+}
+
+fn main() {
+    let iters = bench_iters(20);
+    let mut rng = Rng::new(0x5EED);
+    println!("## packed-symbol kernels vs scalar u64 ({iters} rounds)");
+
+    let micro_results: Vec<MicroResult> = ["gf2e:8", "gf2e:12", "prime:786433", "prime:2147483647"]
+        .into_iter()
+        .map(|name| micro(name, iters, &mut rng))
+        .collect();
+    for m in &micro_results {
+        println!(
+            "{:<18} [{:>3}] axpy {:>5.2}x  lincomb {:>5.2}x  gemm {:>5.2}x",
+            m.name, m.layout, m.axpy_speedup, m.lincomb_speedup, m.gemm_speedup
+        );
+    }
+
+    println!("\n## batched replay, packed vs scalar (B=32)");
+    let replay_results: Vec<ReplayResult> = [("gf2e:8", 3.0), ("prime:786433", 1.5)]
+        .into_iter()
+        .map(|(name, target)| batched_replay(name, target, iters, &mut rng))
+        .collect();
+
+    write_json(&micro_results, &replay_results);
+
+    if bench_smoke() {
+        println!("(smoke mode: timing assertions skipped)");
+    } else {
+        for r in &replay_results {
+            assert!(
+                r.speedup >= r.target,
+                "{}: packed batched replay must reach >= {}x over the scalar u64 \
+                 path at B={}, got {:.2}x",
+                r.name,
+                r.target,
+                r.b,
+                r.speedup
+            );
+        }
+    }
+    println!("\nkernels bench complete");
+}
+
+/// Emit `BENCH_kernels.json` at the repo root (manifest dir's parent).
+fn write_json(micro: &[MicroResult], replay: &[ReplayResult]) {
+    let micro_json: Vec<String> = micro
+        .iter()
+        .map(|m| {
+            format!(
+                concat!(
+                    "{{\"name\":\"{}\",\"layout\":\"{}\",\"axpy_speedup\":{:.3},",
+                    "\"lincomb_speedup\":{:.3},\"gemm_speedup\":{:.3}}}"
+                ),
+                m.name, m.layout, m.axpy_speedup, m.lincomb_speedup, m.gemm_speedup
+            )
+        })
+        .collect();
+    let replay_json: Vec<String> = replay
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "{{\"name\":\"{}\",\"layout\":\"{}\",\"batch\":{},\"w\":{},",
+                    "\"scalar_us_per_job\":{:.3},\"packed_us_per_job\":{:.3},",
+                    "\"speedup\":{:.3},\"target\":{}}}"
+                ),
+                r.name, r.layout, r.b, r.w, r.scalar_us_per_job, r.packed_us_per_job, r.speedup,
+                r.target
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"kernels\",\"smoke\":{},\"packed_equals_scalar\":true,",
+            "\"micro\":[{}],\"replay\":[{}]}}"
+        ),
+        bench_smoke(),
+        micro_json.join(","),
+        replay_json.join(",")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("manifest dir has a parent")
+        .join("BENCH_kernels.json");
+    std::fs::write(&path, format!("{json}\n"))
+        .unwrap_or_else(|e| panic!("could not write {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+}

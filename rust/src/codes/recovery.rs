@@ -24,6 +24,7 @@
 use super::rs::GrsCode;
 use super::structured::solve_data_matrix;
 use crate::gf::{Field, Mat};
+use crate::net::PacketBuf;
 
 /// A reusable recovery operator for one `(code, failure-pattern)` pair.
 #[derive(Clone, Debug)]
@@ -89,16 +90,17 @@ impl Recovery {
     }
 
     /// Reconstruct the data packets from the survivor packets
-    /// (`coords[i]` = the packet at `positions[i]`).
-    pub fn data_packets<F: Field>(&self, f: &F, coords: &[&[u64]]) -> Vec<Vec<u64>> {
+    /// (`coords[i]` = the packet at `positions[i]`), as one flat
+    /// width-aware [`PacketBuf`] — a single allocation per repair pass.
+    pub fn data_packets<F: Field>(&self, f: &F, coords: &[&[u64]]) -> PacketBuf {
         assert_eq!(coords.len(), self.positions.len(), "survivor count");
         self.data.packet_vec_mul(f, coords)
     }
 
     /// Reconstruct the lost sinks' outputs (in `lost_sinks` order) from
     /// the survivor packets — bit-identical to the healthy run's
-    /// packets at those sinks.
-    pub fn lost_outputs<F: Field>(&self, f: &F, coords: &[&[u64]]) -> Vec<Vec<u64>> {
+    /// packets at those sinks. Flat [`PacketBuf`], one allocation.
+    pub fn lost_outputs<F: Field>(&self, f: &F, coords: &[&[u64]]) -> PacketBuf {
         assert_eq!(coords.len(), self.positions.len(), "survivor count");
         self.repair.packet_vec_mul(f, coords)
     }
@@ -142,12 +144,28 @@ mod tests {
             let coords: Vec<&[u64]> = survivors.iter().map(|&i| all[i].as_slice()).collect();
             let grs = Recovery::plan(&f, Some(&code), &a, &survivors, &lost_sinks).unwrap();
             let gauss = Recovery::plan(&f, None, &a, &survivors, &lost_sinks).unwrap();
-            assert_eq!(grs.data_packets(&f, &coords), xs, "trial {trial}: grs data");
-            assert_eq!(gauss.data_packets(&f, &coords), xs, "trial {trial}: gauss data");
+            assert_eq!(
+                grs.data_packets(&f, &coords).into_packets(),
+                xs,
+                "trial {trial}: grs data"
+            );
+            assert_eq!(
+                gauss.data_packets(&f, &coords).into_packets(),
+                xs,
+                "trial {trial}: gauss data"
+            );
             let want: Vec<Vec<u64>> =
                 lost_sinks.iter().map(|&r| all[8 + r].clone()).collect();
-            assert_eq!(grs.lost_outputs(&f, &coords), want, "trial {trial}: grs sinks");
-            assert_eq!(gauss.lost_outputs(&f, &coords), want, "trial {trial}: gauss sinks");
+            assert_eq!(
+                grs.lost_outputs(&f, &coords).into_packets(),
+                want,
+                "trial {trial}: grs sinks"
+            );
+            assert_eq!(
+                gauss.lost_outputs(&f, &coords).into_packets(),
+                want,
+                "trial {trial}: gauss sinks"
+            );
         }
     }
 
@@ -162,8 +180,11 @@ mod tests {
         let survivors = vec![0usize, 1, 3, 5];
         let rec = Recovery::plan(&f, Some(&code), &a, &survivors, &[0]).unwrap();
         let coords: Vec<&[u64]> = survivors.iter().map(|&i| all[i].as_slice()).collect();
-        assert_eq!(rec.data_packets(&f, &coords), xs);
-        assert_eq!(rec.lost_outputs(&f, &coords), vec![all[4].clone()]);
+        assert_eq!(rec.data_packets(&f, &coords).into_packets(), xs);
+        assert_eq!(
+            rec.lost_outputs(&f, &coords).into_packets(),
+            vec![all[4].clone()]
+        );
     }
 
     #[test]

@@ -188,12 +188,14 @@ impl GrsCode {
     /// any `K` surviving codeword coordinates (`(position, packet)`
     /// pairs; extra coordinates beyond `K` are ignored). Element-wise
     /// over the packet width — Remark 2's `F_q^W` view applies to
-    /// decoding exactly as it does to encoding.
+    /// decoding exactly as it does to encoding. Returns one flat
+    /// width-aware [`PacketBuf`](crate::net::PacketBuf), not a heap
+    /// vector per recovered packet.
     pub fn decode_packets<F: Field>(
         &self,
         f: &F,
         coords: &[(usize, &[u64])],
-    ) -> anyhow::Result<Vec<Vec<u64>>> {
+    ) -> anyhow::Result<crate::net::PacketBuf> {
         let k = self.k();
         anyhow::ensure!(coords.len() >= k, "need at least K = {k} coordinates");
         let coords = &coords[..k];
@@ -376,7 +378,11 @@ mod tests {
             let subset = rng.choose(12, 8);
             let coords: Vec<(usize, &[u64])> =
                 subset.iter().map(|&i| (i, coords_all[i].as_slice())).collect();
-            assert_eq!(code.decode_packets(&f, &coords).unwrap(), xs, "trial {trial}");
+            assert_eq!(
+                code.decode_packets(&f, &coords).unwrap().into_packets(),
+                xs,
+                "trial {trial}"
+            );
         }
         // GF(2^8): same story on a plain code.
         let f = crate::gf::Gf2e::new(8).unwrap();
@@ -395,7 +401,7 @@ mod tests {
         }
         let coords: Vec<(usize, &[u64])> =
             (3..8).map(|i| (i, coords_all[i].as_slice())).collect();
-        assert_eq!(code.decode_packets(&f, &coords).unwrap(), xs);
+        assert_eq!(code.decode_packets(&f, &coords).unwrap().into_packets(), xs);
         // Too few coordinates is a proper error, not a panic.
         assert!(code.decode_packets(&f, &coords[..4]).is_err());
     }

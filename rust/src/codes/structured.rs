@@ -239,12 +239,13 @@ pub fn independent_positions<F: Field>(f: &F, a: &Mat, candidates: &[usize]) -> 
 
 /// Packet-wise form of [`solve_data_matrix`]: reconstruct the `K` data
 /// packets from any `K` independent surviving coordinates
-/// (`(position, packet)` pairs; extras ignored).
+/// (`(position, packet)` pairs; extras ignored). Returns one flat
+/// width-aware [`PacketBuf`](crate::net::PacketBuf).
 pub fn recover_data<F: Field>(
     f: &F,
     a: &Mat,
     coords: &[(usize, &[u64])],
-) -> anyhow::Result<Vec<Vec<u64>>> {
+) -> anyhow::Result<crate::net::PacketBuf> {
     let k = a.rows;
     anyhow::ensure!(coords.len() >= k, "need at least K = {k} coordinates");
     let coords = &coords[..k];
@@ -348,7 +349,7 @@ mod tests {
             let coords: Vec<(usize, &[u64])> =
                 subset.iter().map(|&i| (i, coords_all[i].as_slice())).collect();
             match recover_data(&f, &a, &coords) {
-                Ok(got) => assert_eq!(got, xs, "trial {trial}"),
+                Ok(got) => assert_eq!(got.into_packets(), xs, "trial {trial}"),
                 // A random (non-MDS) matrix may have dependent subsets;
                 // the fallback must report, not panic.
                 Err(e) => assert!(e.to_string().contains("determine"), "trial {trial}: {e}"),
@@ -357,7 +358,7 @@ mod tests {
         // The all-systematic subset is the identity solve.
         let coords: Vec<(usize, &[u64])> =
             (0..k).map(|i| (i, coords_all[i].as_slice())).collect();
-        assert_eq!(recover_data(&f, &a, &coords).unwrap(), xs);
+        assert_eq!(recover_data(&f, &a, &coords).unwrap().into_packets(), xs);
         assert!(recover_data(&f, &a, &coords[..k - 1]).is_err(), "too few");
         // An out-of-range coordinate is a proper error, never a silent
         // read of the wrong parity element.

@@ -246,16 +246,30 @@ impl EncodeJob {
     /// replay and to live stepping.
     pub fn encode_cached(&self, cache: &PlanCache, x: &[Packet]) -> anyhow::Result<Vec<Packet>> {
         anyhow::ensure!(x.len() == self.config.k, "need K = {} rows", self.config.k);
+        // Non-canonical elements must be a proper Err on the single-job
+        // path too (the batched engines validate before packing; the
+        // scalar GF(2^w) kernels would panic on a table lookup instead
+        // — killing a service worker).
+        let q = self.field.order();
+        for row in x {
+            if let Some(&v) = row.iter().find(|&&v| v >= q) {
+                anyhow::bail!("payload element {v} is not canonical (field order {q})");
+            }
+        }
         let compiled = self.compiled(cache)?;
         let mut replay = crate::net::exec::replay_opt(&compiled.opt, &self.field, x)?;
         take_sinks(&compiled.layout, &mut replay.outputs)
     }
 
     /// Batch-encode `B` same-width payload sets in **one columnar pass**
-    /// over the shape's cached optimized plan
-    /// (`net::exec::replay_batch`) — the micro-batching service path.
-    /// Returns the `R` coded rows per job, in job order, bit-identical
-    /// to [`encode_cached`](EncodeJob::encode_cached) per job.
+    /// over the shape's cached optimized plan — the micro-batching
+    /// service path. The pass runs over packed narrow-lane storage: the
+    /// symbol layout was selected from the field's `⌈log2 q⌉` when the
+    /// plan compiled (`CompiledPlan::kernels`), so per job shape the
+    /// batch streams `u8`/`u16`/`u32` lanes with zero per-element field
+    /// dispatch (`net::exec::replay_batch_kernels`). Returns the `R`
+    /// coded rows per job, in job order, bit-identical to
+    /// [`encode_cached`](EncodeJob::encode_cached) per job.
     pub fn encode_batch_cached(
         &self,
         cache: &PlanCache,
@@ -268,7 +282,7 @@ impl EncodeJob {
             return Ok(vec![self.encode_cached(cache, x)?]);
         }
         let compiled = self.compiled(cache)?;
-        let replays = crate::net::exec::replay_batch(&compiled.opt, &self.field, jobs)?;
+        let replays = compiled.replay_batch(jobs)?;
         replays
             .into_iter()
             .map(|mut rep| take_sinks(&compiled.layout, &mut rep.outputs))
@@ -332,7 +346,7 @@ impl EncodeJob {
         let t0 = Instant::now();
         let compiled = self.compiled(cache)?;
         let jobs = [self.inputs.as_slice()];
-        let (fault, mut outs) = compiled.replay_degraded_batch(&self.field, &jobs, faults)?;
+        let (fault, mut outs) = compiled.replay_degraded_batch(&jobs, faults)?;
         let outputs = outs.pop().expect("one job in, one out");
         self.finish_degraded(compiled.choice, compiled.layout, fault, &outputs, faults, t0)
     }
@@ -350,7 +364,7 @@ impl EncodeJob {
         faults: &FaultSpec,
     ) -> anyhow::Result<(Vec<Vec<Packet>>, RecoveryStats)> {
         let compiled = self.compiled(cache)?;
-        let (fault, outs) = compiled.replay_degraded_batch(&self.field, jobs, faults)?;
+        let (fault, outs) = compiled.replay_degraded_batch(jobs, faults)?;
         let rt0 = Instant::now();
         let repair = self.plan_repair(&compiled.layout, &fault)?;
         let coded: Vec<Vec<Packet>> = outs
@@ -481,7 +495,8 @@ impl EncodeJob {
                     }
                 })
                 .collect::<anyhow::Result<_>>()?;
-            for (&s, pkt) in repair.lost_sinks.iter().zip(op.lost_outputs(&self.field, &coords)) {
+            let repaired = op.lost_outputs(&self.field, &coords);
+            for (&s, pkt) in repair.lost_sinks.iter().zip(repaired.into_packets()) {
                 coded[s] = Some(pkt);
             }
         }

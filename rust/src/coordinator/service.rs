@@ -578,11 +578,17 @@ mod tests {
         assert!(resp.y.is_err());
         let rx = svc.submit_unchecked(vec![Vec::new(); 4]).unwrap();
         assert!(rx.recv().unwrap().y.is_err(), "empty width at the worker");
+        // Non-canonical field elements: a proper Err reply (the encode
+        // paths validate the canonical range), not a dead worker.
+        let rx = svc
+            .submit_unchecked(vec![vec![1 << 40, 2], vec![1, 2], vec![1, 2], vec![1, 2]])
+            .unwrap();
+        assert!(rx.recv().expect("worker survived").y.is_err(), "non-canonical");
         // The same worker still serves well-formed requests afterwards.
         let x: Vec<Vec<u64>> = (0..cfg.k).map(|i| vec![i as u64 + 1, 3]).collect();
         let y = svc.submit(x.clone()).unwrap().recv().unwrap().y.unwrap();
         assert!(verify::native(&f, &oracle_job.parity, &x, &y));
-        assert_eq!(svc.metrics.counter("failures"), 2);
+        assert_eq!(svc.metrics.counter("failures"), 3);
         svc.shutdown();
     }
 

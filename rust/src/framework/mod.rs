@@ -80,36 +80,57 @@ pub struct PlannedJob {
 }
 
 /// A shape's encoding schedule compiled to the replayable Plan IR: the
-/// planner's `choice`, the processor `layout`, the raw [`Plan`], and
-/// its pass-pipeline lowering (the flattened
+/// planner's `choice`, the processor `layout`, the raw [`Plan`], its
+/// pass-pipeline lowering (the flattened
 /// [`OptimizedPlan`](crate::net::opt::OptimizedPlan) the serving path
 /// executes — the raw plan stays alongside for wire-level replay,
-/// tracing and inspection). Cache-friendly (width-independent,
-/// `Send + Sync`); the coordinator's `PlanCache` stores these behind
-/// `Arc`s.
+/// tracing and inspection), and the field's packed-symbol
+/// [`Kernels`](crate::gf::kernels::Kernels) vtable resolved **once
+/// here** so no per-request (let alone per-element) field dispatch
+/// survives on the batched serving path. Cache-friendly
+/// (width-independent, `Send + Sync`); the coordinator's `PlanCache`
+/// stores these behind `Arc`s.
 #[derive(Clone, Debug)]
 pub struct CompiledPlan {
     pub choice: PlanChoice,
     pub layout: Layout,
     pub plan: crate::net::plan::Plan,
     pub opt: crate::net::opt::OptimizedPlan,
+    pub kernels: crate::gf::kernels::Kernels,
 }
 
 impl CompiledPlan {
+    /// Batched columnar replay through this compiled schedule with the
+    /// plan's pre-resolved packed kernels — the coordinator's
+    /// batch-serving hot loop
+    /// ([`replay_batch_kernels`](crate::net::exec::replay_batch_kernels)).
+    pub fn replay_batch(
+        &self,
+        jobs: &[&[Packet]],
+    ) -> anyhow::Result<Vec<crate::net::Replay>> {
+        crate::net::exec::replay_batch_kernels(&self.opt, &self.kernels, jobs)
+    }
+
     /// Degraded batched replay through this compiled schedule: the
     /// failure pattern is analyzed once on the raw plan's round/SendOp
     /// schedule (which is the live emission stream verbatim), then one
     /// strided columnar pass evaluates only the surviving rows of the
-    /// optimized plan. The pairing of raw + optimized forms is exactly
-    /// why this struct keeps both — see
+    /// optimized plan — through the plan's packed kernels. The pairing
+    /// of raw + optimized forms is exactly why this struct keeps both —
+    /// see
     /// [`replay_degraded_batch`](crate::net::exec::replay_degraded_batch).
-    pub fn replay_degraded_batch<F: Field>(
+    pub fn replay_degraded_batch(
         &self,
-        f: &F,
         jobs: &[&[Packet]],
         faults: &crate::net::FaultSpec,
     ) -> anyhow::Result<(crate::net::DegradedReport, Vec<crate::net::Outputs>)> {
-        crate::net::exec::replay_degraded_batch(&self.plan, &self.opt, f, jobs, faults)
+        crate::net::exec::replay_degraded_batch_kernels(
+            &self.plan,
+            &self.opt,
+            &self.kernels,
+            jobs,
+            faults,
+        )
     }
 }
 
@@ -352,6 +373,11 @@ pub fn compile_plan<F: Field>(
         layout,
         plan,
         opt,
+        // Resolved once per compile: every cached replay (batched,
+        // degraded, service path) reuses this vtable instead of
+        // re-deriving layout/tables — and instead of per-element
+        // `AnyField` dispatch.
+        kernels: crate::gf::kernels::Kernels::for_field(f),
     })
 }
 

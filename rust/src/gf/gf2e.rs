@@ -69,6 +69,21 @@ impl Gf2e {
     pub fn width(&self) -> u32 {
         self.t.w
     }
+
+    /// Packed-kernel hook: `log a` for a **nonzero** element (`log[0]`
+    /// is an unused table slot — callers guard zero themselves). Lets
+    /// `gf/kernels.rs` hoist `log c` out of its narrow-lane loops.
+    #[inline(always)]
+    pub(crate) fn log_of(&self, a: u64) -> u32 {
+        self.t.log[a as usize]
+    }
+
+    /// Packed-kernel hook: raw exp-table read, valid for any index below
+    /// `2(2^w − 1)` — i.e. for any sum of two logs.
+    #[inline(always)]
+    pub(crate) fn exp_at(&self, i: u32) -> u16 {
+        self.t.exp[i as usize]
+    }
 }
 
 impl Field for Gf2e {

@@ -1,0 +1,824 @@
+//! Packed-symbol storage and per-field vectorized kernels — the serving
+//! hot path's answer to the paper's `⌈log2 q⌉` accounting.
+//!
+//! The cost model charges every wire symbol `⌈log2 q⌉` bits
+//! (`C = α·C1 + β⌈log2 q⌉·C2`), yet canonical storage spends a full
+//! `u64` per element: 8× over-provisioned for `GF(2^8)`, ~3× for the
+//! default 20-bit prime. On the batched replay path — a pure
+//! `OutputMatrix · arena` streaming workload — memory bandwidth is the
+//! binding resource, so this module provides
+//!
+//! * [`SymbolLayout`] — the narrow lane type (`u8`/`u16`/`u32`/`u64`)
+//!   chosen from [`Field::bits`],
+//! * [`PackedBuf`] — canonical `u64` symbols packed into one narrow-lane
+//!   allocation (pack/unpack are pure width casts: canonical elements
+//!   always fit their layout's lane),
+//! * [`Kernels`] — a per-field kernel vtable resolved **once per plan**
+//!   ([`Kernels::for_field`]), providing fused `axpy` / `lincomb` /
+//!   `gemm_rows` over packed slices with *monomorphic* inner loops — no
+//!   per-element [`AnyField`] dispatch anywhere on the hot path.
+//!
+//! Kernel selection:
+//!
+//! | field | layout | inner loop |
+//! |---|---|---|
+//! | `GF(2^w)`, `w ≤ 8` | `u8` | two 16×256 nibble-split product tables (8 KB, L1-resident): `c·x = lo[c&15][x] ⊕ hi[c≫4][x]` — one XOR of two byte loads per element, autovectorization-friendly |
+//! | `GF(2^w)`, `8 < w ≤ 16` | `u16` | hoisted-log axpy (`log c` read once per row) over `u16` lanes |
+//! | `F_p` (`p < 2^31`) | from `bits()` | delayed reduction: raw `c·s` products accumulate in a `u64` scratch tile, one Barrett pass per [`Field::lazy_chunk`] terms, lanes only loaded/stored narrow |
+//! | anything else | `u64` | the [`Field`] trait's own fused kernels, behind one virtual call per row |
+//!
+//! **Bit-identity.** Every kernel computes the exact field value of the
+//! same linear combination, and canonical representatives are unique —
+//! so unpacking a packed result yields the same `u64`s as the scalar
+//! path, bit for bit, regardless of lane width or reduction schedule.
+//! `tests/kernels.rs` asserts this exhaustively for `GF(2^8)` and with
+//! seeded sweeps elsewhere; `tests/plan_opt.rs` asserts it end-to-end
+//! through `replay_batch` for every A2A variant.
+
+use super::matrix::GEMM_TILE;
+use super::{AnyField, Field, Gf2e, GfPrime};
+use std::sync::Arc;
+
+/// The wire-faithful storage width of one field symbol.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SymbolLayout {
+    U8,
+    U16,
+    U32,
+    U64,
+}
+
+impl SymbolLayout {
+    /// The narrowest lane holding every canonical element of a field
+    /// with `⌈log2 q⌉ = bits` — the layout-selection rule.
+    pub fn for_bits(bits: u32) -> Self {
+        match bits {
+            0..=8 => SymbolLayout::U8,
+            9..=16 => SymbolLayout::U16,
+            17..=32 => SymbolLayout::U32,
+            _ => SymbolLayout::U64,
+        }
+    }
+
+    /// Bytes per stored symbol.
+    pub fn bytes(self) -> usize {
+        match self {
+            SymbolLayout::U8 => 1,
+            SymbolLayout::U16 => 2,
+            SymbolLayout::U32 => 4,
+            SymbolLayout::U64 => 8,
+        }
+    }
+
+    /// Lowercase lane name (bench/report labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            SymbolLayout::U8 => "u8",
+            SymbolLayout::U16 => "u16",
+            SymbolLayout::U32 => "u32",
+            SymbolLayout::U64 => "u64",
+        }
+    }
+}
+
+/// A lane type symbols are stored in. `from_u64` is a plain truncation
+/// — callers pack canonical elements only, which always fit.
+trait Lane: Copy + Send + Sync + 'static {
+    fn to_u64(self) -> u64;
+    fn from_u64(x: u64) -> Self;
+}
+
+macro_rules! impl_lane_narrow {
+    ($($t:ty),*) => {$(
+        impl Lane for $t {
+            #[inline(always)]
+            fn to_u64(self) -> u64 {
+                self as u64
+            }
+            #[inline(always)]
+            fn from_u64(x: u64) -> Self {
+                debug_assert!(x <= <$t>::MAX as u64, "non-canonical symbol {x}");
+                x as $t
+            }
+        }
+    )*};
+}
+impl_lane_narrow!(u8, u16, u32);
+
+impl Lane for u64 {
+    #[inline(always)]
+    fn to_u64(self) -> u64 {
+        self
+    }
+    #[inline(always)]
+    fn from_u64(x: u64) -> Self {
+        x
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum PackedData {
+    U8(Vec<u8>),
+    U16(Vec<u16>),
+    U32(Vec<u32>),
+    U64(Vec<u64>),
+}
+
+/// A flat buffer of field symbols in narrow-lane storage. Pack/unpack
+/// are pure lane-width casts (no field arithmetic): canonical elements
+/// (`< q ≤ 2^bits`) round-trip exactly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedBuf {
+    data: PackedData,
+}
+
+fn copy_lanes_in<L: Lane>(dst: &mut [L], src: &[u64]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = L::from_u64(s);
+    }
+}
+
+fn copy_lanes_out<L: Lane>(src: &[L], dst: &mut [u64]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s.to_u64();
+    }
+}
+
+impl PackedBuf {
+    /// `len` zero symbols in the given layout.
+    pub fn zeros(layout: SymbolLayout, len: usize) -> Self {
+        let data = match layout {
+            SymbolLayout::U8 => PackedData::U8(vec![0; len]),
+            SymbolLayout::U16 => PackedData::U16(vec![0; len]),
+            SymbolLayout::U32 => PackedData::U32(vec![0; len]),
+            SymbolLayout::U64 => PackedData::U64(vec![0; len]),
+        };
+        PackedBuf { data }
+    }
+
+    /// Pack canonical `u64` symbols into narrow storage.
+    pub fn pack(layout: SymbolLayout, src: &[u64]) -> Self {
+        let mut buf = Self::zeros(layout, src.len());
+        buf.copy_from_u64(0, src);
+        buf
+    }
+
+    pub fn layout(&self) -> SymbolLayout {
+        match &self.data {
+            PackedData::U8(_) => SymbolLayout::U8,
+            PackedData::U16(_) => SymbolLayout::U16,
+            PackedData::U32(_) => SymbolLayout::U32,
+            PackedData::U64(_) => SymbolLayout::U64,
+        }
+    }
+
+    /// Number of symbols stored.
+    pub fn len(&self) -> usize {
+        match &self.data {
+            PackedData::U8(v) => v.len(),
+            PackedData::U16(v) => v.len(),
+            PackedData::U32(v) => v.len(),
+            PackedData::U64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total storage footprint in bytes — the packing win made visible.
+    pub fn bytes(&self) -> usize {
+        self.len() * self.layout().bytes()
+    }
+
+    /// Write `src` (canonical `u64`s) at symbol offset `at`.
+    pub fn copy_from_u64(&mut self, at: usize, src: &[u64]) {
+        match &mut self.data {
+            PackedData::U8(v) => copy_lanes_in(&mut v[at..at + src.len()], src),
+            PackedData::U16(v) => copy_lanes_in(&mut v[at..at + src.len()], src),
+            PackedData::U32(v) => copy_lanes_in(&mut v[at..at + src.len()], src),
+            PackedData::U64(v) => v[at..at + src.len()].copy_from_slice(src),
+        }
+    }
+
+    /// Symbol `i`, unpacked.
+    pub fn get(&self, i: usize) -> u64 {
+        match &self.data {
+            PackedData::U8(v) => v[i] as u64,
+            PackedData::U16(v) => v[i] as u64,
+            PackedData::U32(v) => v[i] as u64,
+            PackedData::U64(v) => v[i],
+        }
+    }
+
+    /// Read `dst.len()` symbols starting at `at` back out as `u64`s.
+    pub fn unpack_into(&self, at: usize, dst: &mut [u64]) {
+        match &self.data {
+            PackedData::U8(v) => copy_lanes_out(&v[at..at + dst.len()], dst),
+            PackedData::U16(v) => copy_lanes_out(&v[at..at + dst.len()], dst),
+            PackedData::U32(v) => copy_lanes_out(&v[at..at + dst.len()], dst),
+            PackedData::U64(v) => dst.copy_from_slice(&v[at..at + dst.len()]),
+        }
+    }
+
+    /// `len` symbols starting at `at`, unpacked to a fresh `u64` vector.
+    pub fn unpack_range(&self, at: usize, len: usize) -> Vec<u64> {
+        let mut out = vec![0u64; len];
+        self.unpack_into(at, &mut out);
+        out
+    }
+
+    /// The whole buffer unpacked.
+    pub fn to_u64(&self) -> Vec<u64> {
+        self.unpack_range(0, self.len())
+    }
+
+    /// Reset every symbol to zero (accumulator reuse without realloc).
+    pub fn fill_zero(&mut self) {
+        match &mut self.data {
+            PackedData::U8(v) => v.fill(0),
+            PackedData::U16(v) => v.fill(0),
+            PackedData::U32(v) => v.fill(0),
+            PackedData::U64(v) => v.fill(0),
+        }
+    }
+
+    /// An empty buffer with room for `cap` symbols — append-only
+    /// construction via [`extend_from_u64`](Self::extend_from_u64),
+    /// with no zero-fill pass over storage that is about to be
+    /// overwritten anyway.
+    pub fn with_capacity(layout: SymbolLayout, cap: usize) -> Self {
+        let data = match layout {
+            SymbolLayout::U8 => PackedData::U8(Vec::with_capacity(cap)),
+            SymbolLayout::U16 => PackedData::U16(Vec::with_capacity(cap)),
+            SymbolLayout::U32 => PackedData::U32(Vec::with_capacity(cap)),
+            SymbolLayout::U64 => PackedData::U64(Vec::with_capacity(cap)),
+        };
+        PackedBuf { data }
+    }
+
+    /// Append canonical `u64` symbols, packing as they land.
+    pub fn extend_from_u64(&mut self, src: &[u64]) {
+        match &mut self.data {
+            PackedData::U8(v) => v.extend(src.iter().map(|&s| u8::from_u64(s))),
+            PackedData::U16(v) => v.extend(src.iter().map(|&s| u16::from_u64(s))),
+            PackedData::U32(v) => v.extend(src.iter().map(|&s| u32::from_u64(s))),
+            PackedData::U64(v) => v.extend_from_slice(src),
+        }
+    }
+}
+
+/// Object-safe escape hatch for fields without a specialized kernel:
+/// the `Field` trait's own fused loops behind one virtual call per row.
+/// The gemm row is [`gemm_row_into`](crate::gf::matrix::gemm_row_into)
+/// itself — same tiling, same zero-skip-before-chunking discipline the
+/// bit-identity guarantee rests on — not a reimplementation.
+trait DynField: Send + Sync {
+    fn dyn_order(&self) -> u64;
+    fn dyn_axpy_into(&self, acc: &mut [u64], c: u64, src: &[u64]);
+    fn dyn_gemm_row(&self, coeffs: &[u64], b: &[u64], n: usize, out: &mut [u64]);
+}
+
+impl<F: Field> DynField for F {
+    fn dyn_order(&self) -> u64 {
+        self.order()
+    }
+    fn dyn_axpy_into(&self, acc: &mut [u64], c: u64, src: &[u64]) {
+        self.axpy_into(acc, c, src);
+    }
+    fn dyn_gemm_row(&self, coeffs: &[u64], b: &[u64], n: usize, out: &mut [u64]) {
+        super::matrix::gemm_row_into(self, coeffs, b, n, out);
+    }
+}
+
+/// `GF(2^w ≤ 8)` product kernel: two 16×256 nibble-split tables.
+/// `c = (c_hi ≪ 4) ⊕ c_lo` and multiplication distributes over XOR, so
+/// `c·x = hi[c_hi][x] ⊕ lo[c_lo][x]` — per element, two byte loads from
+/// 256-byte L1-resident rows and one XOR.
+#[derive(Clone)]
+struct Gf2eNibble {
+    width: u32,
+    /// `lo[n·256 + x] = n · x` for every field element `x`.
+    lo: Arc<[u8]>,
+    /// `hi[n·256 + x] = (n ≪ 4) · x` for every field element `x`.
+    hi: Arc<[u8]>,
+}
+
+impl Gf2eNibble {
+    fn new(g: &Gf2e) -> Self {
+        let order = g.order();
+        let mut lo = vec![0u8; 16 * 256];
+        let mut hi = vec![0u8; 16 * 256];
+        for nib in 0..16u64 {
+            for x in 0..order {
+                if nib < order {
+                    lo[nib as usize * 256 + x as usize] = g.mul(nib, x) as u8;
+                }
+                if nib << 4 < order {
+                    hi[nib as usize * 256 + x as usize] = g.mul(nib << 4, x) as u8;
+                }
+            }
+        }
+        Gf2eNibble {
+            width: g.width(),
+            lo: lo.into(),
+            hi: hi.into(),
+        }
+    }
+
+    #[inline]
+    fn tables(&self, c: usize) -> (&[u8], &[u8]) {
+        (
+            &self.lo[(c & 0xF) * 256..(c & 0xF) * 256 + 256],
+            &self.hi[(c >> 4) * 256..(c >> 4) * 256 + 256],
+        )
+    }
+
+    fn axpy(&self, acc: &mut [u8], c: u64, src: &[u8]) {
+        debug_assert_eq!(acc.len(), src.len());
+        if c == 0 {
+            return;
+        }
+        if c == 1 {
+            for (a, &s) in acc.iter_mut().zip(src) {
+                *a ^= s;
+            }
+            return;
+        }
+        let (lo, hi) = self.tables(c as usize);
+        for (a, &s) in acc.iter_mut().zip(src) {
+            *a ^= lo[s as usize] ^ hi[s as usize];
+        }
+    }
+
+    fn gemm_row(&self, coeffs: &[u64], b: &[u8], n: usize, out: &mut [u8]) {
+        gemm_row_tiled(coeffs, b, n, out, |o, c, s| self.axpy(o, c, s));
+    }
+}
+
+/// The one column-tile walk every XOR-accumulating packed gemm row
+/// shares — the same `GEMM_TILE` + zero-coefficient-skip discipline as
+/// [`crate::gf::matrix::gemm_row_into`], parameterized by the per-tile
+/// axpy so the discipline cannot drift between lane types.
+fn gemm_row_tiled<L>(
+    coeffs: &[u64],
+    b: &[L],
+    n: usize,
+    out: &mut [L],
+    mut axpy: impl FnMut(&mut [L], u64, &[L]),
+) {
+    debug_assert_eq!(out.len(), n);
+    debug_assert_eq!(b.len(), coeffs.len() * n);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + GEMM_TILE).min(n);
+        for (k, &c) in coeffs.iter().enumerate() {
+            if c != 0 {
+                axpy(&mut out[j0..j1], c, &b[k * n + j0..k * n + j1]);
+            }
+        }
+        j0 = j1;
+    }
+}
+
+/// `GF(2^w)`, `8 < w ≤ 16`: hoisted-log axpy over `u16` lanes.
+fn gf2e_wide_axpy(g: &Gf2e, acc: &mut [u16], c: u64, src: &[u16]) {
+    debug_assert_eq!(acc.len(), src.len());
+    if c == 0 {
+        return;
+    }
+    let log_c = g.log_of(c);
+    for (a, &s) in acc.iter_mut().zip(src) {
+        if s != 0 {
+            *a ^= g.exp_at(log_c + g.log_of(s as u64));
+        }
+    }
+}
+
+fn gf2e_wide_gemm_row(g: &Gf2e, coeffs: &[u64], b: &[u16], n: usize, out: &mut [u16]) {
+    gemm_row_tiled(coeffs, b, n, out, |o, c, s| gf2e_wide_axpy(g, o, c, s));
+}
+
+/// Prime-field fused axpy over narrow lanes: `a + c·s < p²`, one Barrett
+/// reduction per element, loads/stores in lane width only.
+fn prime_axpy<L: Lane>(p: &GfPrime, acc: &mut [L], c: u64, src: &[L]) {
+    debug_assert_eq!(acc.len(), src.len());
+    if c == 0 {
+        return;
+    }
+    for (a, &s) in acc.iter_mut().zip(src) {
+        *a = L::from_u64(p.reduce(a.to_u64() + c * s.to_u64()));
+    }
+}
+
+/// Prime-field packed gemm row with delayed reduction: raw `c·s`
+/// products accumulate in a `u64` scratch tile, one `reduce_wide` pass
+/// per [`Field::lazy_chunk`] terms (the same overflow discipline as
+/// [`Field::lincomb_into`]: `acc < p` plus `lazy_chunk·(p−1)²` never
+/// wraps), lanes only touched narrow on load and final store.
+fn prime_gemm_row<L: Lane>(p: &GfPrime, coeffs: &[u64], b: &[L], n: usize, out: &mut [L]) {
+    debug_assert_eq!(out.len(), n);
+    debug_assert_eq!(b.len(), coeffs.len() * n);
+    let nz: Vec<(u64, usize)> = coeffs
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c != 0)
+        .map(|(k, &c)| (c, k))
+        .collect();
+    if nz.is_empty() || n == 0 {
+        return;
+    }
+    let chunk = p.lazy_chunk();
+    let mut scratch = vec![0u64; GEMM_TILE.min(n)];
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + GEMM_TILE).min(n);
+        let sc = &mut scratch[..j1 - j0];
+        for (s, o) in sc.iter_mut().zip(out[j0..j1].iter()) {
+            *s = o.to_u64();
+        }
+        for group in nz.chunks(chunk) {
+            for &(c, k) in group {
+                for (s, x) in sc.iter_mut().zip(b[k * n + j0..k * n + j1].iter()) {
+                    *s += c * x.to_u64();
+                }
+            }
+            for s in sc.iter_mut() {
+                *s = p.reduce_wide(*s);
+            }
+        }
+        for (o, &s) in out[j0..j1].iter_mut().zip(sc.iter()) {
+            *o = L::from_u64(s);
+        }
+        j0 = j1;
+    }
+}
+
+#[derive(Clone)]
+enum Impl {
+    Gf2eNibble(Gf2eNibble),
+    Gf2eWide(Gf2e),
+    Prime(GfPrime, SymbolLayout),
+    Scalar(Arc<dyn DynField>),
+}
+
+impl std::fmt::Debug for Impl {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Impl::Gf2eNibble(k) => write!(f, "gf2e-nibble(w={})", k.width),
+            Impl::Gf2eWide(g) => write!(f, "gf2e-wide({g:?})"),
+            Impl::Prime(p, l) => write!(f, "prime-packed({p:?}, {l:?})"),
+            Impl::Scalar(_) => write!(f, "scalar-u64"),
+        }
+    }
+}
+
+/// The per-field kernel vtable (see module docs). Resolve once per plan
+/// with [`Kernels::for_field`]; every method then runs monomorphic
+/// narrow-lane loops with no per-element field dispatch.
+#[derive(Clone, Debug)]
+pub struct Kernels {
+    imp: Impl,
+}
+
+/// Run `body(i, row_i)` over the `n`-lane rows of `out`, rayon-parallel
+/// when `par` (and the `parallel` feature) is on.
+fn row_loop<T: Send>(out: &mut [T], n: usize, par: bool, body: impl Fn(usize, &mut [T]) + Sync + Send) {
+    #[cfg(feature = "parallel")]
+    if par {
+        use rayon::prelude::*;
+        out.par_chunks_mut(n).enumerate().for_each(|(i, row)| body(i, row));
+        return;
+    }
+    let _ = par;
+    for (i, row) in out.chunks_mut(n).enumerate() {
+        body(i, row);
+    }
+}
+
+impl Kernels {
+    /// Resolve the kernel set for a field — once per plan, not per
+    /// element. Recognizes the crate's concrete fields (including
+    /// through [`AnyField`], which is what kills the per-element enum
+    /// dispatch on the coordinator's serving path); anything else gets
+    /// the `u64` scalar fallback driven through the `Field` trait.
+    pub fn for_field<F: Field>(f: &F) -> Kernels {
+        let any: &dyn std::any::Any = f;
+        if let Some(af) = any.downcast_ref::<AnyField>() {
+            return match af {
+                AnyField::Prime(p) => Kernels::prime(*p),
+                AnyField::Ext(g) => Kernels::gf2e(g.clone()),
+            };
+        }
+        if let Some(p) = any.downcast_ref::<GfPrime>() {
+            return Kernels::prime(*p);
+        }
+        if let Some(g) = any.downcast_ref::<Gf2e>() {
+            return Kernels::gf2e(g.clone());
+        }
+        Kernels {
+            imp: Impl::Scalar(Arc::new(f.clone())),
+        }
+    }
+
+    fn prime(p: GfPrime) -> Kernels {
+        let layout = SymbolLayout::for_bits(p.bits());
+        Kernels {
+            imp: Impl::Prime(p, layout),
+        }
+    }
+
+    fn gf2e(g: Gf2e) -> Kernels {
+        let imp = if g.width() <= 8 {
+            Impl::Gf2eNibble(Gf2eNibble::new(&g))
+        } else {
+            Impl::Gf2eWide(g)
+        };
+        Kernels { imp }
+    }
+
+    /// The field order `q` these kernels compute in — the canonical
+    /// range packing callers must validate against (a width cast is
+    /// only lossless for elements `< q`; see `exec::check_canonical`).
+    pub fn order(&self) -> u64 {
+        match &self.imp {
+            Impl::Gf2eNibble(k) => 1u64 << k.width,
+            Impl::Gf2eWide(g) => g.order(),
+            Impl::Prime(p, _) => p.order(),
+            Impl::Scalar(ops) => ops.dyn_order(),
+        }
+    }
+
+    /// The storage layout this field's symbols pack into.
+    pub fn layout(&self) -> SymbolLayout {
+        match &self.imp {
+            Impl::Gf2eNibble(_) => SymbolLayout::U8,
+            Impl::Gf2eWide(_) => SymbolLayout::U16,
+            Impl::Prime(_, l) => *l,
+            Impl::Scalar(_) => SymbolLayout::U64,
+        }
+    }
+
+    /// Pack canonical symbols into this field's layout.
+    pub fn pack(&self, src: &[u64]) -> PackedBuf {
+        PackedBuf::pack(self.layout(), src)
+    }
+
+    /// `len` packed zeros in this field's layout.
+    pub fn zeros(&self, len: usize) -> PackedBuf {
+        PackedBuf::zeros(self.layout(), len)
+    }
+
+    /// `acc[i] += c·src[i]` over packed storage.
+    pub fn axpy(&self, acc: &mut PackedBuf, c: u64, src: &PackedBuf) {
+        assert_eq!(acc.len(), src.len(), "packed axpy length mismatch");
+        match (&self.imp, &mut acc.data, &src.data) {
+            (Impl::Gf2eNibble(k), PackedData::U8(a), PackedData::U8(s)) => k.axpy(a, c, s),
+            (Impl::Gf2eWide(g), PackedData::U16(a), PackedData::U16(s)) => {
+                gf2e_wide_axpy(g, a, c, s)
+            }
+            (Impl::Prime(p, _), PackedData::U8(a), PackedData::U8(s)) => prime_axpy(p, a, c, s),
+            (Impl::Prime(p, _), PackedData::U16(a), PackedData::U16(s)) => prime_axpy(p, a, c, s),
+            (Impl::Prime(p, _), PackedData::U32(a), PackedData::U32(s)) => prime_axpy(p, a, c, s),
+            (Impl::Scalar(ops), PackedData::U64(a), PackedData::U64(s)) => {
+                ops.dyn_axpy_into(a, c, s)
+            }
+            _ => panic!("packed buffer layout does not match the field's kernels"),
+        }
+    }
+
+    /// `acc[j] += Σ_k coeffs[k]·srcs[k·n + j]` — one dense lincomb over
+    /// a row-major packed arena of `coeffs.len()` rows × `acc.len()`
+    /// lanes.
+    pub fn lincomb(&self, acc: &mut PackedBuf, coeffs: &[u64], srcs: &PackedBuf) {
+        let n = acc.len();
+        assert_eq!(srcs.len(), coeffs.len() * n, "packed lincomb arena shape");
+        match (&self.imp, &mut acc.data, &srcs.data) {
+            (Impl::Gf2eNibble(k), PackedData::U8(a), PackedData::U8(s)) => {
+                k.gemm_row(coeffs, s, n, a)
+            }
+            (Impl::Gf2eWide(g), PackedData::U16(a), PackedData::U16(s)) => {
+                gf2e_wide_gemm_row(g, coeffs, s, n, a)
+            }
+            (Impl::Prime(p, _), PackedData::U8(a), PackedData::U8(s)) => {
+                prime_gemm_row(p, coeffs, s, n, a)
+            }
+            (Impl::Prime(p, _), PackedData::U16(a), PackedData::U16(s)) => {
+                prime_gemm_row(p, coeffs, s, n, a)
+            }
+            (Impl::Prime(p, _), PackedData::U32(a), PackedData::U32(s)) => {
+                prime_gemm_row(p, coeffs, s, n, a)
+            }
+            (Impl::Scalar(ops), PackedData::U64(a), PackedData::U64(s)) => {
+                ops.dyn_gemm_row(coeffs, s, n, a)
+            }
+            _ => panic!("packed buffer layout does not match the field's kernels"),
+        }
+    }
+
+    /// The batched serving kernel: `out[i·n + j] += Σ_k rows[i][k]·b[k·n + j]`
+    /// — every coefficient row evaluated over the packed arena `b`
+    /// (`rows[i].len()` rows × `n` lanes), rayon-parallel over the
+    /// independent output rows when `par` is set (and the `parallel`
+    /// feature is compiled in). `out` must hold `rows.len()·n` lanes
+    /// (zeroed by the caller; the kernels accumulate).
+    pub fn gemm_rows(&self, rows: &[&[u64]], b: &PackedBuf, n: usize, out: &mut PackedBuf, par: bool) {
+        assert_eq!(out.len(), rows.len() * n, "packed gemm output shape");
+        if n == 0 || rows.is_empty() {
+            return;
+        }
+        match (&self.imp, &mut out.data, &b.data) {
+            (Impl::Gf2eNibble(k), PackedData::U8(o), PackedData::U8(bs)) => {
+                row_loop(o, n, par, |i, row| k.gemm_row(rows[i], bs, n, row))
+            }
+            (Impl::Gf2eWide(g), PackedData::U16(o), PackedData::U16(bs)) => {
+                row_loop(o, n, par, |i, row| gf2e_wide_gemm_row(g, rows[i], bs, n, row))
+            }
+            (Impl::Prime(p, _), PackedData::U8(o), PackedData::U8(bs)) => {
+                row_loop(o, n, par, |i, row| prime_gemm_row(p, rows[i], bs, n, row))
+            }
+            (Impl::Prime(p, _), PackedData::U16(o), PackedData::U16(bs)) => {
+                row_loop(o, n, par, |i, row| prime_gemm_row(p, rows[i], bs, n, row))
+            }
+            (Impl::Prime(p, _), PackedData::U32(o), PackedData::U32(bs)) => {
+                row_loop(o, n, par, |i, row| prime_gemm_row(p, rows[i], bs, n, row))
+            }
+            (Impl::Scalar(ops), PackedData::U64(o), PackedData::U64(bs)) => {
+                row_loop(o, n, par, |i, row| ops.dyn_gemm_row(rows[i], bs, n, row))
+            }
+            _ => panic!("packed buffer layout does not match the field's kernels"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn layout_selection_rule() {
+        assert_eq!(SymbolLayout::for_bits(1), SymbolLayout::U8);
+        assert_eq!(SymbolLayout::for_bits(8), SymbolLayout::U8);
+        assert_eq!(SymbolLayout::for_bits(9), SymbolLayout::U16);
+        assert_eq!(SymbolLayout::for_bits(16), SymbolLayout::U16);
+        assert_eq!(SymbolLayout::for_bits(17), SymbolLayout::U32);
+        assert_eq!(SymbolLayout::for_bits(32), SymbolLayout::U32);
+        assert_eq!(SymbolLayout::for_bits(33), SymbolLayout::U64);
+        // Concrete fields, direct and through AnyField.
+        assert_eq!(Kernels::for_field(&Gf2e::new(8).unwrap()).layout(), SymbolLayout::U8);
+        assert_eq!(Kernels::for_field(&Gf2e::new(12).unwrap()).layout(), SymbolLayout::U16);
+        assert_eq!(
+            Kernels::for_field(&GfPrime::default_field()).layout(),
+            SymbolLayout::U32 // 20-bit prime
+        );
+        assert_eq!(
+            Kernels::for_field(&GfPrime::new(251).unwrap()).layout(),
+            SymbolLayout::U8
+        );
+        assert_eq!(
+            Kernels::for_field(&GfPrime::new(257).unwrap()).layout(),
+            SymbolLayout::U16
+        );
+        for (spec, want) in [
+            ("gf2e:8", SymbolLayout::U8),
+            ("gf2e:16", SymbolLayout::U16),
+            ("786433", SymbolLayout::U32),
+            ("2147483647", SymbolLayout::U32),
+        ] {
+            let f = AnyField::parse(spec).unwrap();
+            assert_eq!(Kernels::for_field(&f).layout(), want, "{spec}");
+        }
+    }
+
+    #[test]
+    fn pack_roundtrip_every_layout() {
+        for layout in [
+            SymbolLayout::U8,
+            SymbolLayout::U16,
+            SymbolLayout::U32,
+            SymbolLayout::U64,
+        ] {
+            let max = match layout {
+                SymbolLayout::U8 => u8::MAX as u64,
+                SymbolLayout::U16 => u16::MAX as u64,
+                SymbolLayout::U32 => u32::MAX as u64,
+                SymbolLayout::U64 => u64::MAX,
+            };
+            let vals = vec![0u64, 1, 2, max / 2, max];
+            let buf = PackedBuf::pack(layout, &vals);
+            assert_eq!(buf.layout(), layout);
+            assert_eq!(buf.len(), vals.len());
+            assert_eq!(buf.bytes(), vals.len() * layout.bytes());
+            assert_eq!(buf.to_u64(), vals);
+            assert_eq!(buf.unpack_range(1, 2), vec![1, 2]);
+        }
+    }
+
+    #[test]
+    fn packed_axpy_matches_scalar_per_field() {
+        let mut rng = Rng::new(0xACC);
+        let fields = [
+            AnyField::parse("gf2e:8").unwrap(),
+            AnyField::parse("gf2e:12").unwrap(),
+            AnyField::parse("786433").unwrap(),
+            AnyField::parse("2147483647").unwrap(),
+        ];
+        for f in &fields {
+            let kern = Kernels::for_field(f);
+            for n in [1usize, 7, 64, 100] {
+                let acc0: Vec<u64> = (0..n).map(|_| rng.below(f.order())).collect();
+                let src: Vec<u64> = (0..n).map(|_| rng.below(f.order())).collect();
+                let c = rng.below(f.order());
+                let mut scalar = acc0.clone();
+                f.axpy_into(&mut scalar, c, &src);
+                let mut packed = kern.pack(&acc0);
+                kern.axpy(&mut packed, c, &kern.pack(&src));
+                assert_eq!(packed.to_u64(), scalar, "{f:?} n={n} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_fallback_serves_unknown_field_shapes() {
+        // A custom Field impl that none of the specialized kernels
+        // recognize must fall back to u64 lanes and stay correct.
+        #[derive(Clone, Debug)]
+        struct Mod7;
+        impl Field for Mod7 {
+            fn order(&self) -> u64 {
+                7
+            }
+            fn add(&self, a: u64, b: u64) -> u64 {
+                (a + b) % 7
+            }
+            fn sub(&self, a: u64, b: u64) -> u64 {
+                (a + 7 - b) % 7
+            }
+            fn mul(&self, a: u64, b: u64) -> u64 {
+                a * b % 7
+            }
+            fn inv(&self, a: u64) -> u64 {
+                self.pow(a, 5)
+            }
+            fn generator(&self) -> u64 {
+                3
+            }
+        }
+        let f = Mod7;
+        let kern = Kernels::for_field(&f);
+        assert_eq!(kern.layout(), SymbolLayout::U64);
+        let mut acc = kern.pack(&[1, 2, 3, 4]);
+        kern.axpy(&mut acc, 3, &kern.pack(&[5, 6, 0, 1]));
+        assert_eq!(acc.to_u64(), vec![(1 + 15) % 7, (2 + 18) % 7, 3, (4 + 3) % 7]);
+
+        // The fallback's lincomb and gemm_rows arms, against a naive
+        // mod-7 oracle (coeffs include a zero — the skip must hold).
+        let n = 5usize;
+        let coeffs = [3u64, 0, 6];
+        let arena_u64: Vec<u64> = (0..coeffs.len() * n).map(|i| (i as u64 * 3 + 1) % 7).collect();
+        let arena = kern.pack(&arena_u64);
+        let oracle_row = |cs: &[u64], init: &[u64]| -> Vec<u64> {
+            (0..n)
+                .map(|j| {
+                    cs.iter().enumerate().fold(init[j], |acc, (t, &c)| {
+                        (acc + c * arena_u64[t * n + j]) % 7
+                    })
+                })
+                .collect()
+        };
+        let init = [4u64, 5, 6, 0, 1];
+        let mut acc = kern.pack(&init);
+        kern.lincomb(&mut acc, &coeffs, &arena);
+        assert_eq!(acc.to_u64(), oracle_row(&coeffs, &init), "fallback lincomb");
+        let row2 = [1u64, 2, 4];
+        let rows: Vec<&[u64]> = vec![&coeffs, &row2];
+        let mut out = kern.zeros(2 * n);
+        kern.gemm_rows(&rows, &arena, n, &mut out, false);
+        assert_eq!(out.unpack_range(0, n), oracle_row(&coeffs, &[0; 5]), "fallback gemm row 0");
+        assert_eq!(out.unpack_range(n, n), oracle_row(&row2, &[0; 5]), "fallback gemm row 1");
+    }
+
+    #[test]
+    fn packed_gemm_rows_matches_lincomb() {
+        let mut rng = Rng::new(0x6E);
+        for spec in ["gf2e:8", "786433"] {
+            let f = AnyField::parse(spec).unwrap();
+            let kern = Kernels::for_field(&f);
+            let (m, k, n) = (5usize, 9usize, 33usize);
+            let rows: Vec<Vec<u64>> = (0..m)
+                .map(|_| (0..k).map(|_| rng.below(f.order())).collect())
+                .collect();
+            let arena_u64: Vec<u64> = (0..k * n).map(|_| rng.below(f.order())).collect();
+            let arena = kern.pack(&arena_u64);
+            let mut out = kern.zeros(m * n);
+            let row_refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
+            kern.gemm_rows(&row_refs, &arena, n, &mut out, false);
+            for (i, row) in rows.iter().enumerate() {
+                let mut want = kern.zeros(n);
+                kern.lincomb(&mut want, row, &arena);
+                assert_eq!(out.unpack_range(i * n, n), want.to_u64(), "{spec} row {i}");
+            }
+        }
+    }
+}

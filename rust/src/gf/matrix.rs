@@ -116,26 +116,27 @@ impl Mat {
     }
 
     /// Packet-valued row-vector product `y = c · self`: coordinate `i`
-    /// carries the packet `coords[i]` and `y[j] = Σ_i self[(i,j)]·c_i`
-    /// element-wise over the packet width (Remark 2's `F_q^W` view) —
-    /// the shared kernel of the erasure decoders
+    /// carries the packet `coords[i]` and packet `j` of the result is
+    /// `Σ_i self[(i,j)]·c_i` element-wise over the packet width
+    /// (Remark 2's `F_q^W` view) — the shared kernel of the erasure
+    /// decoders
     /// ([`GrsCode::decode_packets`](crate::codes::GrsCode::decode_packets),
-    /// `codes::recovery`).
-    pub fn packet_vec_mul<F: Field>(&self, f: &F, coords: &[&[u64]]) -> Vec<Vec<u64>> {
+    /// `codes::recovery`). Returns one flat width-aware
+    /// [`PacketBuf`](crate::net::PacketBuf) — a single allocation, not
+    /// one heap vector per output packet.
+    pub fn packet_vec_mul<F: Field>(&self, f: &F, coords: &[&[u64]]) -> crate::net::PacketBuf {
         assert_eq!(coords.len(), self.rows, "coordinate count");
         let w = coords.first().map_or(0, |p| p.len());
-        (0..self.cols)
-            .map(|j| {
-                let terms: Vec<(u64, &[u64])> = coords
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &pkt)| (self[(i, j)], pkt))
-                    .collect();
-                let mut acc = vec![0u64; w];
-                f.lincomb_into(&mut acc, &terms);
-                acc
-            })
-            .collect()
+        let mut out = crate::net::PacketBuf::zeros(w, self.cols);
+        for j in 0..self.cols {
+            let terms: Vec<(u64, &[u64])> = coords
+                .iter()
+                .enumerate()
+                .map(|(i, &pkt)| (self[(i, j)], pkt))
+                .collect();
+            f.lincomb_into(out.pkt_mut(j), &terms);
+        }
+        out
     }
 
     /// Transpose.

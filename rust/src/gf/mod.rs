@@ -7,6 +7,9 @@
 //! * [`Field`] — the arithmetic interface all collectives are generic over,
 //! * [`GfPrime`] — prime fields `F_p`, `p < 2^31` (Barrett reduction),
 //! * [`Gf2e`] — binary extension fields `GF(2^w)`, `w ≤ 16` (log tables),
+//! * [`kernels`] — packed-symbol storage ([`SymbolLayout`]/[`PackedBuf`])
+//!   and the per-field vectorized kernel vtable ([`Kernels`]) behind the
+//!   batched serving hot path,
 //! * dense [`matrix`] algebra, [`poly`]nomials and Lagrange interpolation,
 //! * structured matrices: [`vandermonde`], [`cauchy`] (eq. (24) of the
 //!   paper) and [`dft`] (§V-A).
@@ -18,6 +21,7 @@
 pub mod cauchy;
 pub mod dft;
 pub mod gf2e;
+pub mod kernels;
 pub mod matrix;
 pub mod ntt;
 pub mod poly;
@@ -26,6 +30,7 @@ pub mod vandermonde;
 
 pub use cauchy::CauchyLike;
 pub use gf2e::Gf2e;
+pub use kernels::{Kernels, PackedBuf, SymbolLayout};
 pub use matrix::Mat;
 pub use prime::GfPrime;
 

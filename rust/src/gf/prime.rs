@@ -58,8 +58,10 @@ impl GfPrime {
     }
 
     /// Reduce `x < p^2 < 2^62` modulo `p` via Barrett reduction.
+    /// (`pub(crate)`: the packed kernels in `gf/kernels.rs` fuse it into
+    /// their narrow-lane loops.)
     #[inline(always)]
-    fn reduce(&self, x: u64) -> u64 {
+    pub(crate) fn reduce(&self, x: u64) -> u64 {
         // q = ⌊x·μ / 2^64⌋ ≈ ⌊x/p⌋ (may be off by one, never over).
         let q = ((x as u128 * self.barrett as u128) >> 64) as u64;
         let r = x - q * self.p;
@@ -74,7 +76,7 @@ impl GfPrime {
     /// by up to 2 for x near 2^64, hence the loop — at most two
     /// subtractions).
     #[inline(always)]
-    fn reduce_wide(&self, x: u64) -> u64 {
+    pub(crate) fn reduce_wide(&self, x: u64) -> u64 {
         let q = ((x as u128 * self.barrett as u128) >> 64) as u64;
         let mut r = x - q.wrapping_mul(self.p);
         while r >= self.p {

@@ -19,11 +19,19 @@
 //!   [`OptimizedPlan`]: evaluate the flattened [`OutputMatrix`] rows
 //!   with the dense gemm kernel. Bit-identical to [`replay`].
 //! * [`replay_batch`] — the high-throughput serving path: `B` same-width
-//!   jobs packed into one strided columnar arena (`K × (W·B)`
-//!   contiguous, job `j`'s columns at `[j·W, (j+1)·W)`), evaluated in a
-//!   single gemm pass over the optimized plan (rayon-parallel over
-//!   output rows). Bit-identical per job to [`replay`] — same nonzero
-//!   terms in the same order with the same reduction chunking.
+//!   jobs **packed once** into one strided columnar arena of narrow
+//!   symbol lanes (`K × (W·B)` contiguous, job `j`'s columns at
+//!   `[j·W, (j+1)·W)`, one `u8`/`u16`/`u32` lane per symbol instead of
+//!   a `u64` — see [`Kernels`]), evaluated in a single packed gemm pass
+//!   over the optimized plan (rayon-parallel over output rows) and
+//!   unpacked to canonical `u64` only at the output boundary.
+//!   Bit-identical per job to [`replay`]: every kernel computes the
+//!   exact field value and canonical representatives are unique.
+//!   [`replay_batch_kernels`] is the same path with the kernel vtable
+//!   resolved ahead of time (once per plan — what `CompiledPlan` does);
+//!   [`replay_batch_scalar`] keeps the unpacked `u64` engine as the
+//!   reference the packed path is measured and equivalence-tested
+//!   against.
 //! * [`replay_full`] — the inspection path. Materialises every slot
 //!   round by round (rayon-parallel over the independent ops within a
 //!   round) and emits the exact wire [`TraceEvent`]s, for debugging and
@@ -31,11 +39,14 @@
 
 use super::fault::{analyze_plan, DegradedReport, FaultSpec};
 use super::opt::OptimizedPlan;
-use super::payload::{pkt_zero, Packet};
+use super::payload::{pkt_zero, Packet, PackedPacketBuf};
 use super::plan::Plan;
 use super::sim::{Outputs, ProcId, SimReport};
 use super::trace::TraceEvent;
-use crate::gf::matrix::{gemm_into, gemm_row_into};
+use crate::gf::kernels::Kernels;
+use crate::gf::matrix::gemm_into;
+#[cfg(feature = "parallel")]
+use crate::gf::matrix::gemm_row_into;
 use crate::gf::Field;
 use anyhow::{ensure, Result};
 
@@ -155,6 +166,26 @@ fn check_batch(opt: &OptimizedPlan, jobs: &[&[Packet]]) -> Result<usize> {
     Ok(width.unwrap_or(0))
 }
 
+/// Reject non-canonical payload elements (`≥ q`) before packing: a
+/// narrow-lane width cast is only lossless for canonical values, and
+/// the table kernels index by symbol — out-of-range input must be a
+/// proper error, never a silent truncation. (The scalar u64 engines
+/// inherit the `Field` kernels' own behavior instead: a loud
+/// out-of-bounds panic for `GF(2^w)`, implicit reduction for primes.)
+fn check_canonical(kernels: &Kernels, jobs: &[&[Packet]]) -> Result<()> {
+    let q = kernels.order();
+    for (j, job) in jobs.iter().enumerate() {
+        for row in job.iter() {
+            if let Some(&v) = row.iter().find(|&&v| v >= q) {
+                anyhow::bail!(
+                    "job {j}: payload element {v} is not canonical (field order {q})"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Evaluate the output rows `out = M · arena` — rayon-parallel over the
 /// independent rows when enabled, the blocked [`gemm_into`] kernel
 /// otherwise. `out` is zeroed `n_rows × n` row-major.
@@ -214,15 +245,80 @@ pub fn replay_opt<F: Field>(opt: &OptimizedPlan, f: &F, inputs: &[Packet]) -> Re
 }
 
 /// Replay `B` same-width jobs in **one pass**: pack them into a strided
-/// columnar arena (`K × (W·B)` contiguous — input `k`'s row holds job
-/// `j`'s packet at columns `[j·W, (j+1)·W)`), evaluate
-/// `OutputMatrix · arena` with the blocked gemm kernels, and unpack one
-/// [`Replay`] per job. The per-coefficient fixed costs (term setup,
-/// reduction bookkeeping) amortize over `W·B` columns instead of `W`,
-/// which is where the batch throughput win comes from (see
-/// `benches/batch_replay.rs`). Outputs are bit-identical per job to
+/// columnar arena of narrow symbol lanes (`K × (W·B)` contiguous —
+/// input `k`'s row holds job `j`'s packet at columns `[j·W, (j+1)·W)`),
+/// evaluate `OutputMatrix · arena` with the field's packed gemm kernels
+/// ([`Kernels`]), and unpack one [`Replay`] per job. Two wins compound:
+/// per-coefficient fixed costs amortize over `W·B` columns instead of
+/// `W`, and the gemm — which streams the whole arena once per output
+/// row — moves 1–4-byte lanes instead of `u64`s (see
+/// `benches/kernels.rs`). Outputs are bit-identical per job to
 /// [`replay`] / [`replay_opt`].
+///
+/// Resolves the kernel vtable from `f` per call; cached serving paths
+/// hold a `CompiledPlan` and use [`replay_batch_kernels`] so resolution
+/// happens once per plan.
 pub fn replay_batch<F: Field>(
+    opt: &OptimizedPlan,
+    f: &F,
+    jobs: &[&[Packet]],
+) -> Result<Vec<Replay>> {
+    replay_batch_kernels(opt, &Kernels::for_field(f), jobs)
+}
+
+/// [`replay_batch`] with a pre-resolved kernel vtable.
+pub fn replay_batch_kernels(
+    opt: &OptimizedPlan,
+    kernels: &Kernels,
+    jobs: &[&[Packet]],
+) -> Result<Vec<Replay>> {
+    let w = check_batch(opt, jobs)?;
+    check_canonical(kernels, jobs)?;
+    let b = jobs.len();
+    let wb = w * b;
+    let layout = kernels.layout();
+
+    // Pack once: strided columnar arena, K rows of W·B narrow lanes.
+    let arena = PackedPacketBuf::pack_columnar(layout, jobs, w);
+
+    // Evaluate every distinct output row once across the whole batch.
+    let n_rows = opt.matrix.n_rows();
+    let mut out = PackedPacketBuf::zeros(layout, wb, n_rows);
+    if wb > 0 {
+        let rows: Vec<&[u64]> = (0..n_rows).map(|i| opt.matrix.row(i)).collect();
+        kernels.gemm_rows(
+            &rows,
+            arena.buf(),
+            wb,
+            out.buf_mut(),
+            crate::net::parallel_enabled(),
+        );
+    }
+
+    // Unpack: slice each job's columns back out per processor,
+    // canonical u64 at the API boundary.
+    let report = opt.report(w);
+    Ok((0..b)
+        .map(|j| {
+            let outputs: Outputs = opt
+                .matrix
+                .assignment()
+                .iter()
+                .map(|(&pid, &ri)| (pid, out.unpack_range(ri * wb + j * w, w)))
+                .collect();
+            Replay {
+                outputs,
+                report: report.clone(),
+            }
+        })
+        .collect())
+}
+
+/// The unpacked `u64` reference engine of [`replay_batch`] — the exact
+/// pre-packing columnar path, kept as the baseline the packed kernels
+/// are equivalence-tested (`tests/kernels.rs`, `tests/plan_opt.rs`) and
+/// benchmarked (`benches/kernels.rs`) against.
+pub fn replay_batch_scalar<F: Field>(
     opt: &OptimizedPlan,
     f: &F,
     jobs: &[&[Packet]],
@@ -316,42 +412,43 @@ pub fn replay_degraded_batch<F: Field>(
     jobs: &[&[Packet]],
     spec: &FaultSpec,
 ) -> Result<(DegradedReport, Vec<Outputs>)> {
+    replay_degraded_batch_kernels(plan, opt, &Kernels::for_field(f), jobs, spec)
+}
+
+/// [`replay_degraded_batch`] with a pre-resolved kernel vtable (the
+/// `CompiledPlan` serving path — resolution once per plan).
+pub fn replay_degraded_batch_kernels(
+    plan: &Plan,
+    opt: &OptimizedPlan,
+    kernels: &Kernels,
+    jobs: &[&[Packet]],
+    spec: &FaultSpec,
+) -> Result<(DegradedReport, Vec<Outputs>)> {
     ensure!(
         plan.n_inputs == opt.n_inputs,
         "raw and optimized plan disagree on K"
     );
     let w = check_batch(opt, jobs)?;
+    check_canonical(kernels, jobs)?;
     let fault = analyze_plan(plan, w, spec);
     let b = jobs.len();
     let wb = w * b;
-    let k = opt.n_inputs;
+    let layout = kernels.layout();
 
-    let mut arena = vec![0u64; k * wb];
-    for (j, job) in jobs.iter().enumerate() {
-        for (ki, row) in job.iter().enumerate() {
-            arena[ki * wb + j * w..ki * wb + (j + 1) * w].copy_from_slice(row);
-        }
-    }
+    let arena = PackedPacketBuf::pack_columnar(layout, jobs, w);
 
     // Evaluate only the rows some surviving processor needs.
     let live_rows = opt.matrix.rows_where(|pid| fault.survives(pid));
-    let mut out = vec![0u64; live_rows.len() * wb];
-    if wb > 0 {
-        #[cfg(feature = "parallel")]
-        if crate::net::parallel_enabled() {
-            use rayon::prelude::*;
-            out.par_chunks_mut(wb).enumerate().for_each(|(ri, row)| {
-                gemm_row_into(f, opt.matrix.row(live_rows[ri]), &arena, wb, row)
-            });
-        } else {
-            for (ri, row) in out.chunks_mut(wb).enumerate() {
-                gemm_row_into(f, opt.matrix.row(live_rows[ri]), &arena, wb, row);
-            }
-        }
-        #[cfg(not(feature = "parallel"))]
-        for (ri, row) in out.chunks_mut(wb).enumerate() {
-            gemm_row_into(f, opt.matrix.row(live_rows[ri]), &arena, wb, row);
-        }
+    let mut out = PackedPacketBuf::zeros(layout, wb, live_rows.len());
+    if wb > 0 && !live_rows.is_empty() {
+        let rows: Vec<&[u64]> = live_rows.iter().map(|&ri| opt.matrix.row(ri)).collect();
+        kernels.gemm_rows(
+            &rows,
+            arena.buf(),
+            wb,
+            out.buf_mut(),
+            crate::net::parallel_enabled(),
+        );
     }
 
     // Resolve each surviving processor's compact row position once
@@ -370,7 +467,7 @@ pub fn replay_degraded_batch<F: Field>(
         .map(|j| {
             survivors
                 .iter()
-                .map(|&(pid, p)| (pid, out[p * wb + j * w..p * wb + (j + 1) * w].to_vec()))
+                .map(|&(pid, p)| (pid, out.unpack_range(p * wb + j * w, w)))
                 .collect()
         })
         .collect();
@@ -490,6 +587,15 @@ mod tests {
             let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
             let batched = replay_batch(&opt, &f, &refs).unwrap();
             assert_eq!(batched.len(), jobs.len());
+            // The packed path is bit-identical to the u64 reference
+            // engine (and resolving kernels ahead of time changes
+            // nothing).
+            let scalar = replay_batch_scalar(&opt, &f, &refs).unwrap();
+            let pre = replay_batch_kernels(&opt, &Kernels::for_field(&f), &refs).unwrap();
+            for (j, (bj, sj)) in batched.iter().zip(&scalar).enumerate() {
+                assert_eq!(bj.outputs, sj.outputs, "w={w} job {j}: packed vs scalar");
+                assert_eq!(pre[j].outputs, sj.outputs, "w={w} job {j}: pre-resolved");
+            }
             for (j, (single, batch)) in singles.iter().zip(&batched).enumerate() {
                 assert_eq!(batch.outputs, single.outputs, "w={w} job {j}: outputs");
                 assert_eq!(batch.report, single.report, "w={w} job {j}: report");
@@ -498,6 +604,33 @@ mod tests {
                 assert_eq!(one.report, single.report, "w={w} job {j}: opt report");
             }
         }
+    }
+
+    #[test]
+    fn replay_batch_rejects_non_canonical_elements() {
+        // Out-of-field payload values must be a proper Err from the
+        // packed path — never a silent narrow-lane truncation (and
+        // never the worker-killing panic the old GF(2^w) scalar path
+        // produced).
+        let f = crate::gf::Gf2e::new(8).unwrap();
+        let c = Arc::new(Mat::random(&f, 4, 4, 9));
+        let ff = f.clone();
+        let plan = compile(1, 4, |basis| {
+            Ok(Box::new(PrepareShoot::new(
+                ff,
+                (0..4).collect(),
+                1,
+                c.clone(),
+                basis,
+            )))
+        })
+        .unwrap();
+        let opt = crate::net::opt::optimize(&plan);
+        let bad: Vec<Packet> = vec![vec![1], vec![300], vec![3], vec![4]];
+        let err = replay_batch(&opt, &f, &[&bad]).unwrap_err();
+        assert!(err.to_string().contains("not canonical"), "{err}");
+        let spec = crate::net::fault::FaultSpec::new();
+        assert!(replay_degraded_batch(&plan, &opt, &f, &[&bad], &spec).is_err());
     }
 
     #[test]

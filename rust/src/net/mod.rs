@@ -31,14 +31,17 @@ pub mod sim;
 pub mod trace;
 
 pub use exec::{
-    replay, replay_batch, replay_degraded, replay_degraded_batch, replay_full, replay_opt,
+    replay, replay_batch, replay_batch_kernels, replay_batch_scalar, replay_degraded,
+    replay_degraded_batch, replay_degraded_batch_kernels, replay_full, replay_opt,
     DegradedReplay, Replay, WireReplay,
 };
 pub use fault::{analyze_plan, DegradedReport, FaultSpec, POST_RUN};
 pub use model::CostModel;
 pub use noisy::{ErasureChannel, InnerFec, NoisyCollective};
 pub use opt::{optimize, OptStats, OptimizedPlan, OutputMatrix};
-pub use payload::{lincomb, pkt_add, pkt_add_scaled, pkt_scale, pkt_zero, Packet, PacketBuf};
+pub use payload::{
+    lincomb, pkt_add, pkt_add_scaled, pkt_scale, pkt_zero, Packet, PackedPacketBuf, PacketBuf,
+};
 pub use plan::{compile, ComputeOp, Plan, PlanRecorder, RoundPlan, SendOp, SlotId};
 pub use sim::{run, run_degraded, Collective, DegradedRun, Msg, Outputs, ProcId, Sim, SimReport};
 pub use trace::TraceEvent;

@@ -15,8 +15,13 @@
 //!   slice-indexed views. Every wire message and every per-processor
 //!   working set (prepare memories, shoot accumulators) uses this form,
 //!   so the axpy/lincomb kernels run over contiguous memory instead of
-//!   chasing one heap allocation per packet.
+//!   chasing one heap allocation per packet;
+//! * [`PackedPacketBuf`] — the packed twin: the same flat shape but in
+//!   narrow-lane storage (`u8`/`u16`/`u32` per the field's `⌈log2 q⌉`),
+//!   the columnar-arena form the batched replay engine streams through
+//!   the `gf::kernels` vtable.
 
+use crate::gf::kernels::{PackedBuf, SymbolLayout};
 use crate::gf::Field;
 
 /// A single logical packet: `W` field elements (`W = 1` for the scalar
@@ -67,6 +72,19 @@ impl PacketBuf {
             count: 1,
             data: pkt,
         }
+    }
+
+    /// Reinterpret a flat element vector as `data.len() / width` packets
+    /// of `width` elements (no copy). `width = 0` requires empty data.
+    pub fn from_flat(width: usize, data: Vec<u64>) -> Self {
+        let count = if width == 0 {
+            assert!(data.is_empty(), "width-0 buffer must be empty");
+            0
+        } else {
+            assert_eq!(data.len() % width, 0, "flat data not a multiple of width");
+            data.len() / width
+        };
+        PacketBuf { width, count, data }
     }
 
     /// Gather packets (all of width `width`) into one flat allocation.
@@ -148,6 +166,131 @@ impl PacketBuf {
     pub fn into_single(self) -> Packet {
         assert_eq!(self.count, 1, "expected exactly one packet");
         self.data
+    }
+}
+
+/// The packed twin of [`PacketBuf`]: `count` packets of `width` field
+/// elements in one **narrow-lane** allocation, the layout chosen from
+/// the field's `⌈log2 q⌉` via
+/// [`SymbolLayout`](crate::gf::kernels::SymbolLayout). This is the
+/// columnar-arena currency of the batched serving path
+/// ([`replay_batch`](crate::net::exec::replay_batch)): inputs are packed
+/// once, every gemm pass streams 1–4-byte lanes instead of `u64`s, and
+/// outputs unpack back to canonical `u64` only at the API boundary.
+/// Pack/unpack are pure width casts — canonical elements round-trip
+/// exactly, so packed serving is bit-identical to scalar serving.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedPacketBuf {
+    width: usize,
+    count: usize,
+    buf: PackedBuf,
+}
+
+impl PackedPacketBuf {
+    /// `count` all-zero packets of the given width in `layout` storage.
+    pub fn zeros(layout: SymbolLayout, width: usize, count: usize) -> Self {
+        PackedPacketBuf {
+            width,
+            count,
+            buf: PackedBuf::zeros(layout, width * count),
+        }
+    }
+
+    /// Pack an unpacked [`PacketBuf`] (canonical elements) into `layout`.
+    pub fn pack(layout: SymbolLayout, src: &PacketBuf) -> Self {
+        PackedPacketBuf {
+            width: src.width(),
+            count: src.count(),
+            buf: PackedBuf::pack(layout, src.data()),
+        }
+    }
+
+    /// Pack `B` same-shape jobs into the strided **columnar arena** of
+    /// the batched replay engine: `K` packets of width `W·B`, with job
+    /// `j`'s packet `k` at columns `[j·W, (j+1)·W)`. Built append-only
+    /// in storage order — no zero-fill pass over lanes that are about
+    /// to be overwritten. Callers guarantee the jobs are rectangular
+    /// (`K` rows each, common width `w`), as `exec::check_batch` does.
+    pub fn pack_columnar(layout: SymbolLayout, jobs: &[&[Packet]], w: usize) -> Self {
+        let b = jobs.len();
+        let k = jobs.first().map_or(0, |job| job.len());
+        let mut buf = PackedBuf::with_capacity(layout, k * w * b);
+        for ki in 0..k {
+            for job in jobs {
+                debug_assert_eq!(job[ki].len(), w, "ragged job in columnar pack");
+                buf.extend_from_u64(&job[ki]);
+            }
+        }
+        PackedPacketBuf {
+            width: w * b,
+            count: k,
+            buf,
+        }
+    }
+
+    /// Packet width `W`.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Number of packets.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Total size in field elements — the unit of `C2`.
+    pub fn elems(&self) -> u64 {
+        (self.width * self.count) as u64
+    }
+
+    /// Storage footprint in bytes (`elems × lane bytes`).
+    pub fn bytes(&self) -> usize {
+        self.buf.bytes()
+    }
+
+    pub fn layout(&self) -> SymbolLayout {
+        self.buf.layout()
+    }
+
+    /// Overwrite packet `i` from canonical `u64` elements.
+    pub fn set_pkt(&mut self, i: usize, pkt: &[u64]) {
+        debug_assert_eq!(pkt.len(), self.width, "packet width mismatch");
+        self.buf.copy_from_u64(i * self.width, pkt);
+    }
+
+    /// Write canonical elements at a raw element offset — strided
+    /// columnar arenas address sub-packet column ranges directly.
+    pub fn copy_from_u64(&mut self, at: usize, src: &[u64]) {
+        self.buf.copy_from_u64(at, src);
+    }
+
+    /// Packet `i`, unpacked to canonical `u64`s.
+    pub fn pkt(&self, i: usize) -> Packet {
+        self.buf.unpack_range(i * self.width, self.width)
+    }
+
+    /// `len` elements from raw element offset `at`, unpacked.
+    pub fn unpack_range(&self, at: usize, len: usize) -> Vec<u64> {
+        self.buf.unpack_range(at, len)
+    }
+
+    /// The underlying packed storage (kernel operand).
+    pub fn buf(&self) -> &PackedBuf {
+        &self.buf
+    }
+
+    /// The underlying packed storage, mutably (kernel output).
+    pub fn buf_mut(&mut self) -> &mut PackedBuf {
+        &mut self.buf
+    }
+
+    /// Unpack the whole buffer into a fresh [`PacketBuf`].
+    pub fn to_packet_buf(&self) -> PacketBuf {
+        PacketBuf::from_flat(self.width, self.buf.to_u64())
     }
 }
 
@@ -241,6 +384,36 @@ mod tests {
         assert_eq!(zeros.count(), 3);
         assert_eq!(zeros.elems(), 6);
         assert!(zeros.iter().all(|p| p == [0, 0]));
+    }
+
+    #[test]
+    fn packed_twin_roundtrips_and_halves_storage() {
+        let mut buf = PacketBuf::with_capacity(3, 2);
+        buf.push(&[1, 250, 3]);
+        buf.push(&[4, 5, 255]);
+        let packed = PackedPacketBuf::pack(SymbolLayout::U8, &buf);
+        assert_eq!(packed.width(), 3);
+        assert_eq!(packed.count(), 2);
+        assert_eq!(packed.elems(), 6);
+        assert_eq!(packed.bytes(), 6, "one byte per element in u8 layout");
+        assert_eq!(packed.pkt(0), vec![1, 250, 3]);
+        assert_eq!(packed.pkt(1), vec![4, 5, 255]);
+        assert_eq!(packed.to_packet_buf(), buf);
+        let mut z = PackedPacketBuf::zeros(SymbolLayout::U16, 2, 2);
+        z.set_pkt(1, &[7, 65535]);
+        z.copy_from_u64(0, &[9]);
+        assert_eq!(z.pkt(0), vec![9, 0]);
+        assert_eq!(z.pkt(1), vec![7, 65535]);
+        assert_eq!(z.unpack_range(1, 2), vec![0, 7]);
+    }
+
+    #[test]
+    fn from_flat_reinterprets_without_copying_semantics() {
+        let buf = PacketBuf::from_flat(2, vec![1, 2, 3, 4]);
+        assert_eq!(buf.count(), 2);
+        assert_eq!(buf.pkt(1), &[3, 4]);
+        let empty = PacketBuf::from_flat(0, Vec::new());
+        assert_eq!(empty.count(), 0);
     }
 
     #[test]

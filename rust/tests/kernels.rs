@@ -1,0 +1,224 @@
+//! Packed-kernel equivalence suite: every narrow-lane kernel
+//! (`gf/kernels.rs`) must agree **bit for bit** with the scalar `u64`
+//! `Field` path it replaces —
+//!
+//! * exhaustively for `GF(2^8)`: all 256 coefficients × unaligned
+//!   lengths, for axpy and for full lincombs;
+//! * seeded sweeps for every `GF(2^w)` width, the default prime and a
+//!   near-`2^31` prime, including term counts straddling the
+//!   `lazy_chunk` reduction boundary (≈4 terms for `p = 2^31 − 1`) and
+//!   lengths straddling the gemm column tile;
+//! * end-to-end: `replay_batch` (packed) ≡ `replay_batch_scalar` ≡
+//!   per-job `replay` through a compiled plan, both field families.
+
+use dce::gf::matrix::{gemm_into, GEMM_TILE};
+use dce::gf::{AnyField, Field, Gf2e, GfPrime, Kernels, SymbolLayout};
+use dce::net::{exec, plan, Packet};
+use dce::util::Rng;
+
+/// Unaligned lengths: primes/odd sizes around cache-line and vector
+/// register widths, so no kernel gets to rely on alignment.
+const LENGTHS: [usize; 7] = [1, 3, 7, 15, 33, 100, 257];
+
+fn rand_vec<F: Field>(f: &F, n: usize, rng: &mut Rng) -> Vec<u64> {
+    (0..n).map(|_| rng.below(f.order())).collect()
+}
+
+/// Scalar-oracle lincomb: the `Field` trait path over `u64`s.
+fn scalar_lincomb<F: Field>(f: &F, init: &[u64], coeffs: &[u64], srcs: &[Vec<u64>]) -> Vec<u64> {
+    let mut acc = init.to_vec();
+    let terms: Vec<(u64, &[u64])> = coeffs
+        .iter()
+        .zip(srcs)
+        .map(|(&c, s)| (c, s.as_slice()))
+        .collect();
+    f.lincomb_into(&mut acc, &terms);
+    acc
+}
+
+/// Packed lincomb through the vtable, unpacked back to `u64`.
+fn packed_lincomb(kern: &Kernels, init: &[u64], coeffs: &[u64], srcs: &[Vec<u64>]) -> Vec<u64> {
+    let mut acc = kern.pack(init);
+    let flat: Vec<u64> = srcs.iter().flatten().copied().collect();
+    kern.lincomb(&mut acc, coeffs, &kern.pack(&flat));
+    acc.to_u64()
+}
+
+#[test]
+fn gf256_axpy_exhaustive_over_all_coefficients() {
+    let f = Gf2e::new(8).unwrap();
+    let kern = Kernels::for_field(&f);
+    assert_eq!(kern.layout(), SymbolLayout::U8);
+    let mut rng = Rng::new(0x256);
+    for n in LENGTHS {
+        // Sources seeded with zeros interleaved — the zero-symbol skip
+        // of the log path has no analogue in the table path, and both
+        // must still agree.
+        let mut src = rand_vec(&f, n, &mut rng);
+        if n > 2 {
+            src[n / 2] = 0;
+            src[n - 1] = 0;
+        }
+        let acc0 = rand_vec(&f, n, &mut rng);
+        for c in 0..256u64 {
+            let mut scalar = acc0.clone();
+            f.axpy_into(&mut scalar, c, &src);
+            let mut packed = kern.pack(&acc0);
+            kern.axpy(&mut packed, c, &kern.pack(&src));
+            assert_eq!(packed.to_u64(), scalar, "c={c} n={n}");
+        }
+    }
+}
+
+#[test]
+fn gf256_lincomb_exhaustive_coefficient_sweep() {
+    // Every coefficient appears in some lincomb: 32 lincombs of 8 terms
+    // cover 0..256 exactly, on an unaligned length.
+    let f = Gf2e::new(8).unwrap();
+    let kern = Kernels::for_field(&f);
+    let mut rng = Rng::new(0x257);
+    let n = 37;
+    for block in 0..32u64 {
+        let coeffs: Vec<u64> = (0..8).map(|i| block * 8 + i).collect();
+        let srcs: Vec<Vec<u64>> = (0..8).map(|_| rand_vec(&f, n, &mut rng)).collect();
+        let init = rand_vec(&f, n, &mut rng);
+        assert_eq!(
+            packed_lincomb(&kern, &init, &coeffs, &srcs),
+            scalar_lincomb(&f, &init, &coeffs, &srcs),
+            "coefficient block {block}"
+        );
+    }
+}
+
+#[test]
+fn gf2e_every_width_seeded_sweep() {
+    let mut rng = Rng::new(0x2E);
+    for w in 1..=16u32 {
+        let f = Gf2e::new(w).unwrap();
+        let kern = Kernels::for_field(&f);
+        assert_eq!(
+            kern.layout(),
+            if w <= 8 { SymbolLayout::U8 } else { SymbolLayout::U16 },
+            "w={w}"
+        );
+        for n in [1usize, 9, 64] {
+            let n_terms = 5;
+            let coeffs = rand_vec(&f, n_terms, &mut rng);
+            let srcs: Vec<Vec<u64>> = (0..n_terms).map(|_| rand_vec(&f, n, &mut rng)).collect();
+            let init = rand_vec(&f, n, &mut rng);
+            assert_eq!(
+                packed_lincomb(&kern, &init, &coeffs, &srcs),
+                scalar_lincomb(&f, &init, &coeffs, &srcs),
+                "w={w} n={n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prime_fields_across_lazy_chunk_boundaries() {
+    // The near-2^31 prime reduces every ~4 terms; the default prime
+    // every ~3·10^7 (i.e. once). Sweep term counts straddling both
+    // boundaries plus the plain small fields.
+    let mut rng = Rng::new(0x31);
+    for p in [786433u64, 2147483647, 65537, 257, 251] {
+        let f = GfPrime::new(p).unwrap();
+        let kern = Kernels::for_field(&f);
+        assert_eq!(kern.layout(), SymbolLayout::for_bits(f.bits()), "p={p}");
+        let chunk = f.lazy_chunk();
+        let mut term_counts = vec![1usize, 2, 3, 4, 5, 8, 9, 17, 100];
+        for d in [-1i64, 0, 1] {
+            let t = chunk as i64 + d;
+            if (1..=256).contains(&t) {
+                term_counts.push(t as usize);
+            }
+        }
+        for &n_terms in &term_counts {
+            for n in [1usize, 5, 37] {
+                let coeffs = rand_vec(&f, n_terms, &mut rng);
+                let srcs: Vec<Vec<u64>> =
+                    (0..n_terms).map(|_| rand_vec(&f, n, &mut rng)).collect();
+                let init = rand_vec(&f, n, &mut rng);
+                assert_eq!(
+                    packed_lincomb(&kern, &init, &coeffs, &srcs),
+                    scalar_lincomb(&f, &init, &coeffs, &srcs),
+                    "p={p} terms={n_terms} n={n}"
+                );
+            }
+        }
+        // Worst-case coefficients/symbols (p−1 everywhere) right at the
+        // chunk boundary — the overflow-headroom edge.
+        let n_terms = chunk.min(64);
+        let coeffs = vec![p - 1; n_terms];
+        let srcs: Vec<Vec<u64>> = (0..n_terms).map(|_| vec![p - 1; 8]).collect();
+        let init = vec![p - 1; 8];
+        assert_eq!(
+            packed_lincomb(&kern, &init, &coeffs, &srcs),
+            scalar_lincomb(&f, &init, &coeffs, &srcs),
+            "p={p} worst-case chunk"
+        );
+    }
+}
+
+#[test]
+fn packed_gemm_matches_scalar_gemm_across_tile_seam() {
+    let mut rng = Rng::new(0x93);
+    for spec in ["gf2e:8", "gf2e:12", "786433", "2147483647"] {
+        let f = AnyField::parse(spec).unwrap();
+        let kern = Kernels::for_field(&f);
+        for (m, k, n) in [(3usize, 5usize, 33usize), (4, 7, GEMM_TILE + 29)] {
+            let mut a: Vec<u64> = rand_vec(&f, m * k, &mut rng);
+            a[1] = 0; // zero-coefficient skip must not change results
+            let b: Vec<u64> = rand_vec(&f, k * n, &mut rng);
+            let mut scalar = vec![0u64; m * n];
+            gemm_into(&f, m, k, &a, &b, n, &mut scalar);
+            let rows: Vec<&[u64]> = (0..m).map(|i| &a[i * k..(i + 1) * k]).collect();
+            let mut packed = kern.zeros(m * n);
+            kern.gemm_rows(&rows, &kern.pack(&b), n, &mut packed, false);
+            assert_eq!(packed.to_u64(), scalar, "{spec} m={m} k={k} n={n}");
+        }
+    }
+}
+
+#[test]
+fn packed_replay_batch_equals_scalar_and_raw_replay() {
+    use dce::collectives::PrepareShoot;
+    use dce::gf::Mat;
+    use std::sync::Arc;
+    let mut rng = Rng::new(0xE2E);
+    for spec in ["786433", "gf2e:8"] {
+        let f = AnyField::parse(spec).unwrap();
+        let (k, ports) = (12usize, 2usize);
+        let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+        let ff = f.clone();
+        let c2 = c.clone();
+        let compiled = plan::compile(ports, k, move |basis| {
+            Ok(Box::new(PrepareShoot::new(
+                ff.clone(),
+                (0..k).collect(),
+                ports,
+                c2.clone(),
+                basis,
+            )))
+        })
+        .unwrap();
+        let opt = dce::net::optimize(&compiled);
+        let kern = Kernels::for_field(&f);
+        for (b, w) in [(1usize, 3usize), (5, 1), (32, 4)] {
+            let jobs: Vec<Vec<Packet>> = (0..b)
+                .map(|_| (0..k).map(|_| rand_vec(&f, w, &mut rng)).collect())
+                .collect();
+            let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
+            let packed = exec::replay_batch(&opt, &f, &refs).unwrap();
+            let pre = exec::replay_batch_kernels(&opt, &kern, &refs).unwrap();
+            let scalar = exec::replay_batch_scalar(&opt, &f, &refs).unwrap();
+            for j in 0..b {
+                let raw = exec::replay(&compiled, &f, &jobs[j]).unwrap();
+                assert_eq!(packed[j].outputs, raw.outputs, "{spec} B={b} job {j}");
+                assert_eq!(scalar[j].outputs, raw.outputs, "{spec} B={b} job {j} scalar");
+                assert_eq!(pre[j].outputs, raw.outputs, "{spec} B={b} job {j} kernels");
+                assert_eq!(packed[j].report, raw.report, "{spec} B={b} job {j} report");
+            }
+        }
+    }
+}

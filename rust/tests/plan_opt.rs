@@ -55,6 +55,15 @@ where
         let batched = exec::replay_batch(&optimized, f, &refs).unwrap();
         assert_eq!(batched.len(), b, "{tag} B={b}: replay count");
 
+        // The packed narrow-lane engine must agree with the unpacked
+        // u64 reference engine bit for bit, for every variant, field
+        // family, degenerate shape and batch size swept here.
+        let scalar = exec::replay_batch_scalar(&optimized, f, &refs).unwrap();
+        for (j, (bj, sj)) in batched.iter().zip(&scalar).enumerate() {
+            assert_eq!(bj.outputs, sj.outputs, "{tag} B={b} job {j}: packed vs scalar");
+            assert_eq!(bj.report, sj.report, "{tag} B={b} job {j}: packed vs scalar report");
+        }
+
         for (j, x) in jobs.iter().enumerate() {
             let raw = exec::replay(&compiled, f, x).unwrap();
             assert_eq!(

@@ -18,15 +18,18 @@ Gating rules
   the artifact of a real (non-smoke) bench run replaces it.
 * **Deterministic** fields gate unconditionally:
   - ``slots_after`` must not increase (optimizer regressions),
-  - ``recovery_exact`` must not flip away from ``true``.
+  - ``recovery_exact`` and ``packed_equals_scalar`` must not flip away
+    from ``true``.
 * **Timing** fields gate only when *both* files were produced with
   ``smoke == false`` (a real multi-iteration run on comparable
   hardware). Smoke runs execute one iteration on shared runners — their
   timings are reported as advisory deltas, never failed on:
   - lower-is-better (fail when current > 1.30 x baseline):
-    ``singles_us_per_job``, ``batch_us_per_job``, ``us_per_job``;
+    ``singles_us_per_job``, ``batch_us_per_job``, ``us_per_job``,
+    ``packed_us_per_job``;
   - higher-is-better (fail when current < baseline / 1.30):
-    ``speedup``, ``recovered_per_s``.
+    ``speedup``, ``recovered_per_s``, ``axpy_speedup``,
+    ``lincomb_speedup``, ``gemm_speedup``.
 
 Exit status: 0 when every gate passes, 1 otherwise.
 """
@@ -37,10 +40,23 @@ import os
 import sys
 
 TOLERANCE = 1.30
-TIMING_LOWER_BETTER = {"singles_us_per_job", "batch_us_per_job", "us_per_job"}
-TIMING_HIGHER_BETTER = {"speedup", "recovered_per_s"}
+TIMING_LOWER_BETTER = {
+    "singles_us_per_job",
+    "batch_us_per_job",
+    "us_per_job",
+    "packed_us_per_job",
+}
+TIMING_HIGHER_BETTER = {
+    "speedup",
+    "recovered_per_s",
+    "axpy_speedup",
+    "lincomb_speedup",
+    "gemm_speedup",
+}
 EXACT_LOWER_OR_EQUAL = {"slots_after"}
-EXACT_MUST_HOLD = {"recovery_exact"}
+# Booleans that may never flip away from true: exact erasure recovery,
+# packed-kernel/scalar bit-identity.
+EXACT_MUST_HOLD = {"recovery_exact", "packed_equals_scalar"}
 # Keys that identify entries when aligning lists of objects.
 ALIGN_KEYS = ("name", "failed")
 
