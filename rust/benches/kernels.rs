@@ -64,7 +64,7 @@ fn micro(name: &'static str, iters: usize, rng: &mut Rng) -> MicroResult {
         let mut s = acc0.clone();
         f.axpy_into(&mut s, c, &src);
         let mut p = kern.pack(&acc0);
-        kern.axpy(&mut p, c, &kern.pack(&src));
+        kern.axpy(&mut p, c, &kern.pack(&src)).unwrap();
         assert_eq!(p.to_u64(), s, "{name}: packed axpy != scalar axpy");
     }
     let mut acc_s = acc0.clone();
@@ -75,7 +75,7 @@ fn micro(name: &'static str, iters: usize, rng: &mut Rng) -> MicroResult {
     let mut acc_p = kern.pack(&acc0);
     let src_p = kern.pack(&src);
     let axpy_packed = bench(&format!("{name:<16} axpy packed/{layout}"), iters, |_| {
-        kern.axpy(&mut acc_p, c, &src_p);
+        kern.axpy(&mut acc_p, c, &src_p).unwrap();
         acc_p.get(0)
     });
 
@@ -92,7 +92,7 @@ fn micro(name: &'static str, iters: usize, rng: &mut Rng) -> MicroResult {
         let mut s = vec![0u64; n];
         f.lincomb_into(&mut s, &terms);
         let mut p = kern.zeros(n);
-        kern.lincomb(&mut p, &coeffs, &arena_p);
+        kern.lincomb(&mut p, &coeffs, &arena_p).unwrap();
         assert_eq!(p.to_u64(), s, "{name}: packed lincomb != scalar lincomb");
     }
     let mut lin_s = vec![0u64; n];
@@ -104,7 +104,7 @@ fn micro(name: &'static str, iters: usize, rng: &mut Rng) -> MicroResult {
     let mut lin_p = kern.zeros(n);
     let lincomb_packed = bench(&format!("{name:<16} lincomb packed/{layout}"), iters, |_| {
         lin_p.fill_zero();
-        kern.lincomb(&mut lin_p, &coeffs, &arena_p);
+        kern.lincomb(&mut lin_p, &coeffs, &arena_p).unwrap();
         lin_p.get(0)
     });
 
@@ -115,7 +115,7 @@ fn micro(name: &'static str, iters: usize, rng: &mut Rng) -> MicroResult {
         let mut s = vec![0u64; m * n];
         gemm_into(&f, m, k, &a, &arena, n, &mut s);
         let mut p = kern.zeros(m * n);
-        kern.gemm_rows(&rows, &arena_p, n, &mut p, false);
+        kern.gemm_rows(&rows, &arena_p, n, &mut p, false).unwrap();
         assert_eq!(p.to_u64(), s, "{name}: packed gemm != scalar gemm");
     }
     let mut gemm_s = vec![0u64; m * n];
@@ -127,7 +127,7 @@ fn micro(name: &'static str, iters: usize, rng: &mut Rng) -> MicroResult {
     let mut gemm_p = kern.zeros(m * n);
     let gemm_packed = bench(&format!("{name:<16} gemm packed/{layout}"), iters, |_| {
         gemm_p.fill_zero();
-        kern.gemm_rows(&rows, &arena_p, n, &mut gemm_p, false);
+        kern.gemm_rows(&rows, &arena_p, n, &mut gemm_p, false).unwrap();
         gemm_p.get(0)
     });
 

@@ -1,0 +1,208 @@
+//! Bench: **NTT encode backend vs the dense gemm engine** — the
+//! `O(K log K)` transform pipeline against the packed `OutputMatrix`
+//! replay it replaces past the op-count crossover.
+//!
+//! Scenario: batched serving (`B = 32` jobs, `W = 2` payload symbols)
+//! of NTT-friendly GRS codes over a K-sweep with `R = K/4`. At each K
+//! both engines replay the identical columnar arena; the sweep records
+//! per-job latency for each, the measured speedup, and which backend
+//! the selection pass would actually serve
+//! ([`select_backend`](dce::net::select_backend) with the
+//! `NTT_DENSE_OP_RATIO` gate).
+//!
+//! Acceptance targets, asserted below:
+//! * both engines are **bit-identical** on every job at every K
+//!   (always asserted — `backend_equals_dense` in the JSON);
+//! * the transform reaches ≥ 2× per-job throughput over the dense
+//!   engine at `K = 1024` (timing assertion skipped under
+//!   `DCE_BENCH_SMOKE=1`);
+//! * the compile-time selection matches the op-count gate at every
+//!   swept K (always asserted).
+//!
+//! Machine-readable results land in `BENCH_ntt.json` at the repo root
+//! with the K-sweep crossover curve, so the perf trajectory is recorded
+//! run over run (CI bench-trend gates on it; see
+//! `scripts/bench_trend.py`).
+
+use dce::codes::GrsCode;
+use dce::framework::{compile_plan, AlgoRequest};
+use dce::gf::{Field, GfPrime};
+use dce::net::{
+    replay_batch_kernels, replay_batch_ntt, BackendKind, CodeShape, NttBackend, Packet,
+};
+use dce::util::{bench, bench_iters, bench_smoke, Rng};
+
+struct SweepPoint {
+    k: usize,
+    r: usize,
+    selected: BackendKind,
+    dense_ops: usize,
+    ntt_ops: usize,
+    dense_us_per_job: f64,
+    ntt_us_per_job: f64,
+    speedup: f64,
+}
+
+fn main() {
+    let f = GfPrime::default_field();
+    let (w, b) = (2usize, 32usize);
+    let iters = bench_iters(20);
+    println!("## NTT encode backend vs dense gemm (R=K/4, W={w}, B={b}, {iters} rounds)");
+
+    let mut equals_dense = true;
+    let mut sweep = Vec::new();
+    for k in [64usize, 256, 1024] {
+        let r = k / 4;
+        let mut mrng = Rng::new(0x17A7 ^ k as u64);
+        let u: Vec<u64> = (0..k).map(|_| mrng.below(f.order() - 1) + 1).collect();
+        let v: Vec<u64> = (0..r).map(|_| mrng.below(f.order() - 1) + 1).collect();
+        let code = GrsCode::ntt_friendly(&f, k, r, u, v).expect("ntt-friendly code");
+        let compiled = compile_plan(&f, Some(&code), None, 1, w, AlgoRequest::Direct, None)
+            .expect("compile direct plan");
+        let shape = CodeShape {
+            alphas: &code.alphas,
+            betas: &code.betas,
+            u: &code.u,
+            v: &code.v,
+        };
+        let sink_rows: Vec<usize> = (0..r)
+            .map(|ri| compiled.opt.matrix.assignment()[&compiled.layout.sink(ri)])
+            .collect();
+        let backend = NttBackend::detect(&f, &compiled.opt.matrix, &shape, &sink_rows)
+            .expect("cross-check")
+            .expect("sweep shapes are NTT-friendly by construction");
+        // The selection pass must agree with the op-count gate.
+        let want = if backend.ntt_wins() {
+            BackendKind::Ntt
+        } else {
+            BackendKind::Dense
+        };
+        assert_eq!(
+            compiled.backend.kind(),
+            want,
+            "K={k}: selected backend disagrees with the op-count gate"
+        );
+
+        let mut rng = Rng::new(43 + k as u64);
+        let jobs: Vec<Vec<Packet>> = (0..b)
+            .map(|_| {
+                (0..k)
+                    .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
+
+        // Correctness first: transform ≡ dense, bit for bit, every job.
+        let dense = replay_batch_kernels(&compiled.opt, &compiled.kernels, &refs).unwrap();
+        let ntt = replay_batch_ntt(&compiled.opt, &backend, &refs).unwrap();
+        for j in 0..b {
+            if ntt[j].outputs != dense[j].outputs || ntt[j].report != dense[j].report {
+                equals_dense = false;
+                println!("K={k} job {j}: NTT output DIVERGES from dense");
+            }
+        }
+
+        let dense_stats = bench(&format!("dense gemm      K={k:<5}"), iters, |_| {
+            replay_batch_kernels(&compiled.opt, &compiled.kernels, &refs)
+                .unwrap()
+                .len()
+        });
+        let ntt_stats = bench(&format!("ntt pipeline    K={k:<5}"), iters, |_| {
+            replay_batch_ntt(&compiled.opt, &backend, &refs).unwrap().len()
+        });
+        println!("{dense_stats}");
+        println!("{ntt_stats}");
+        let dense_us = dense_stats.median.as_secs_f64() * 1e6 / b as f64;
+        let ntt_us = ntt_stats.median.as_secs_f64() * 1e6 / b as f64;
+        let speedup = dense_stats.median.as_secs_f64() / ntt_stats.median.as_secs_f64();
+        println!(
+            "K={k:<5} R={r:<4} ops {}:{} selected={} per-job: dense {dense_us:.2}us  \
+             ntt {ntt_us:.2}us  speedup {speedup:.2}x",
+            backend.dense_ops(),
+            backend.ntt_ops(),
+            want.name(),
+        );
+        sweep.push(SweepPoint {
+            k,
+            r,
+            selected: want,
+            dense_ops: backend.dense_ops(),
+            ntt_ops: backend.ntt_ops(),
+            dense_us_per_job: dense_us,
+            ntt_us_per_job: ntt_us,
+            speedup,
+        });
+    }
+
+    // Measured crossover: the smallest swept K where the transform wins
+    // wall time (0 = never did, in this run).
+    let crossover_k = sweep.iter().find(|p| p.speedup >= 1.0).map_or(0, |p| p.k);
+    println!("measured crossover K: {crossover_k} (0 = dense won everywhere)");
+    assert!(equals_dense, "NTT backend must be bit-identical to the dense engine");
+
+    write_json(w, b, equals_dense, crossover_k, &sweep);
+
+    if bench_smoke() {
+        println!("(smoke mode: timing assertion skipped)");
+    } else {
+        let big = sweep.last().expect("non-empty sweep");
+        assert!(
+            big.speedup >= 2.0,
+            "NTT backend must reach >= 2x per-job throughput over the dense \
+             engine at K={}, got {:.2}x",
+            big.k,
+            big.speedup
+        );
+    }
+    println!("\nntt_backend bench complete");
+}
+
+/// Emit `BENCH_ntt.json` at the repo root (manifest dir's parent).
+fn write_json(w: usize, b: usize, equals_dense: bool, crossover_k: usize, sweep: &[SweepPoint]) {
+    let sweep_json: Vec<String> = sweep
+        .iter()
+        .map(|p| {
+            format!(
+                concat!(
+                    "{{\"name\":\"k{}\",\"k\":{},\"r\":{},\"selected\":\"{}\",",
+                    "\"dense_ops\":{},\"ntt_ops\":{},",
+                    "\"dense_us_per_job\":{:.3},\"ntt_us_per_job\":{:.3},",
+                    "\"speedup\":{:.3}}}"
+                ),
+                p.k,
+                p.k,
+                p.r,
+                p.selected.name(),
+                p.dense_ops,
+                p.ntt_ops,
+                p.dense_us_per_job,
+                p.ntt_us_per_job,
+                p.speedup
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"ntt_backend\",\"smoke\":{},",
+            "\"shape\":{{\"w\":{},\"batch\":{},\"ratio_gate\":{}}},",
+            "\"backend_equals_dense\":{},\"crossover_k\":{},\"sweep\":[{}]}}"
+        ),
+        bench_smoke(),
+        w,
+        b,
+        dce::net::NTT_DENSE_OP_RATIO,
+        equals_dense,
+        crossover_k,
+        sweep_json.join(",")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("manifest dir has a parent")
+        .join("BENCH_ntt.json");
+    // Fail loudly: a missing BENCH_ntt.json silently breaks the
+    // "perf trajectory is recorded" contract this bench exists for.
+    std::fs::write(&path, format!("{json}\n"))
+        .unwrap_or_else(|e| panic!("could not write {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+}

@@ -95,6 +95,54 @@ impl GrsCode {
         }
     }
 
+    /// NTT-friendly GRS: `α_i = ω₁^i` sweeps *all* `K`-th roots of unity
+    /// and `β_r = c·ω₂^r` lives on the coset `c·⟨ω₂⟩` of the `n2`-th
+    /// roots (`n2 = max(1, R.next_power_of_two())`, `c = f.generator()`),
+    /// so systematic encode is one size-`K` inverse NTT followed by one
+    /// twisted size-`n2` forward NTT — the shape
+    /// [`net::opt::NttBackend`](crate::net) detects. Multipliers `u`/`v`
+    /// are arbitrary nonzero (pass all-ones for a plain Lagrange code).
+    ///
+    /// `K` and `n2` must be powers of two dividing the field's two-adic
+    /// torsion, and the coset must miss the α set — guaranteed when
+    /// `ord(c) = q−1` has an odd factor (true for `q = 3·2^18 + 1`), but
+    /// checked explicitly so Fermat-prime-like fields fail loudly.
+    pub fn ntt_friendly<F: Field>(
+        f: &F,
+        k: usize,
+        r: usize,
+        u: Vec<u64>,
+        v: Vec<u64>,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(k >= 1 && r >= 1, "need K ≥ 1 and R ≥ 1");
+        anyhow::ensure!(k.is_power_of_two(), "NTT-friendly codes need K a power of two");
+        anyhow::ensure!(u.len() == k && v.len() == r, "multiplier lengths must be K and R");
+        anyhow::ensure!(u.iter().chain(&v).all(|&m| m != 0), "multipliers must be nonzero");
+        let n2 = r.next_power_of_two();
+        let w1 = f
+            .root_of_unity(k as u64)
+            .ok_or_else(|| anyhow::anyhow!("no {k}-th root of unity: K must divide q−1"))?;
+        let w2 = f
+            .root_of_unity(n2 as u64)
+            .ok_or_else(|| anyhow::anyhow!("no {n2}-th root of unity: R̂ must divide q−1"))?;
+        let c = f.generator();
+        let alphas: Vec<u64> = (0..k as u64).map(|i| f.pow(w1, i)).collect();
+        let betas: Vec<u64> = (0..r as u64).map(|j| f.mul(c, f.pow(w2, j))).collect();
+        let all: Vec<u64> = alphas.iter().chain(&betas).copied().collect();
+        anyhow::ensure!(
+            vandermonde::points_distinct(&all),
+            "coset β points collide with the α roots over this field"
+        );
+        Ok(GrsCode {
+            alphas,
+            betas,
+            u,
+            v,
+            alpha_designs: Vec::new(),
+            beta_design: None,
+        })
+    }
+
     /// Structured GRS keeping the per-block β designs (K < R case).
     pub fn structured_beta_designs<F: Field>(
         f: &F,
@@ -404,6 +452,30 @@ mod tests {
         assert_eq!(code.decode_packets(&f, &coords).unwrap().into_packets(), xs);
         // Too few coordinates is a proper error, not a panic.
         assert!(code.decode_packets(&f, &coords[..4]).is_err());
+    }
+
+    #[test]
+    fn ntt_friendly_code_is_a_real_grs_code() {
+        let f = f();
+        let mut rng = crate::util::Rng::new(9);
+        for (k, r) in [(1usize, 1usize), (2, 3), (8, 4), (16, 5)] {
+            let u: Vec<u64> = (0..k).map(|_| rng.below(f.order() - 1) + 1).collect();
+            let v: Vec<u64> = (0..r).map(|_| rng.below(f.order() - 1) + 1).collect();
+            let code = GrsCode::ntt_friendly(&f, k, r, u, v).unwrap();
+            assert_eq!((code.k(), code.r()), (k, r));
+            assert!(code.is_mds(&f, 20, 3), "K={k} R={r}");
+            // α's really are the K-th roots, β's really are on the coset.
+            let w1 = f.root_of_unity(k as u64).unwrap();
+            for (i, &a) in code.alphas.iter().enumerate() {
+                assert_eq!(a, f.pow(w1, i as u64));
+            }
+            let x: Vec<u64> = (0..k as u64).map(|i| f.elem(i * 13 + 1)).collect();
+            let cw = code.encode(&f, &x);
+            assert_eq!(&cw[..k], &x[..]); // systematic prefix survives
+        }
+        // Non-power-of-two K and zero multipliers are rejected loudly.
+        assert!(GrsCode::ntt_friendly(&f, 3, 2, vec![1; 3], vec![1; 2]).is_err());
+        assert!(GrsCode::ntt_friendly(&f, 2, 2, vec![1, 0], vec![1, 1]).is_err());
     }
 
     #[test]

@@ -132,7 +132,7 @@ fn step_stage<F: Field>(
             inputs,
         )));
     }
-    Box::new(Par::new(groups))
+    Box::new(Par::new(groups).expect("disjoint by construction"))
 }
 
 impl Collective for DftA2A {

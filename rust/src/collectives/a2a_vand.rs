@@ -97,7 +97,7 @@ impl DrawLoose {
                         )) as Box<dyn Collective>
                     })
                     .collect();
-                Box::new(Par::new(cols))
+                Box::new(Par::new(cols).expect("disjoint by construction"))
             })
         };
 
@@ -134,7 +134,7 @@ impl DrawLoose {
                         ) as Box<dyn Collective>
                     })
                     .collect();
-                Box::new(Par::new(rows))
+                Box::new(Par::new(rows).expect("disjoint by construction"))
             })
         };
 

@@ -151,21 +151,32 @@ impl Collective for LocalOp {
 /// stepping.
 pub struct Par {
     children: Vec<Box<dyn Collective>>,
+    /// Accumulated `processor → child` routing map: seeded with the
+    /// construction-time participant sets and extended every round as
+    /// children (pipelines) evolve. Sticky entries keep late in-flight
+    /// deliveries routable after a child's stage has moved on.
+    route: HashMap<ProcId, usize>,
 }
 
 impl Par {
-    pub fn new(children: Vec<Box<dyn Collective>>) -> Self {
-        // Children must be processor-disjoint; otherwise round-sharing is
-        // not meaningful (and port violations would be unattributable).
-        let mut seen: HashMap<ProcId, usize> = HashMap::new();
+    /// Compose processor-disjoint children. Overlapping participant sets
+    /// are a construction-time `Err` naming the offending pair — a
+    /// malformed composition can never crash mid-round. (Round-sharing
+    /// over shared processors is not meaningful, and port violations
+    /// would be unattributable.)
+    pub fn new(children: Vec<Box<dyn Collective>>) -> anyhow::Result<Self> {
+        let mut route: HashMap<ProcId, usize> = HashMap::new();
         for (i, c) in children.iter().enumerate() {
             for p in c.participants() {
-                if let Some(j) = seen.insert(p, i) {
-                    panic!("Par children {j} and {i} share processor {p}");
+                if let Some(j) = route.insert(p, i) {
+                    anyhow::bail!(
+                        "Par children {j} and {i} share processor {p}: \
+                         parallel collectives must be processor-disjoint"
+                    );
                 }
             }
         }
-        Par { children }
+        Ok(Par { children, route })
     }
 }
 
@@ -179,20 +190,25 @@ impl Collective for Par {
     }
 
     fn step(&mut self, inbox: Vec<Msg>) -> Vec<Msg> {
-        // Route by destination; participant sets may evolve (pipelines), so
-        // recompute the routing map each round.
-        let mut route: HashMap<ProcId, usize> = HashMap::new();
+        // Route by destination. Participant sets may evolve (pipelines),
+        // so fold the current sets into the sticky map each round;
+        // construction seeded it, so a destination with no *current*
+        // claimant still routes to its last one (in-flight deliveries
+        // landing as a child finishes a stage). A destination no child
+        // ever claimed cannot arise from a disjointness-validated
+        // composition; tolerate it as a dropped message rather than a
+        // mid-round crash.
         for (i, c) in self.children.iter().enumerate() {
             for p in c.participants() {
-                route.insert(p, i);
+                self.route.insert(p, i);
             }
         }
         let mut boxes: Vec<Vec<Msg>> = (0..self.children.len()).map(|_| Vec::new()).collect();
         for m in inbox {
-            let i = *route
-                .get(&m.dst)
-                .unwrap_or_else(|| panic!("message to {} matches no child", m.dst));
-            boxes[i].push(m);
+            match self.route.get(&m.dst) {
+                Some(&i) => boxes[i].push(m),
+                None => debug_assert!(false, "message to {} matches no child", m.dst),
+            }
         }
         step_children(&mut self.children, boxes)
     }
@@ -331,4 +347,28 @@ impl Collective for Pipeline {
 /// constructors take.
 pub fn inputs_of(pairs: impl IntoIterator<Item = (ProcId, Packet)>) -> Outputs {
     pairs.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_rejects_overlapping_children_at_construction() {
+        let a = Box::new(LocalOp::new(inputs_of([(0, vec![1u64]), (1, vec![2])])))
+            as Box<dyn Collective>;
+        let b = Box::new(LocalOp::new(inputs_of([(1, vec![3u64])]))) as Box<dyn Collective>;
+        let err = Par::new(vec![a, b]).unwrap_err();
+        assert!(err.to_string().contains("share processor 1"), "{err}");
+    }
+
+    #[test]
+    fn par_accepts_disjoint_children() {
+        let a = Box::new(LocalOp::new(inputs_of([(0, vec![1u64])]))) as Box<dyn Collective>;
+        let b = Box::new(LocalOp::new(inputs_of([(1, vec![2u64])]))) as Box<dyn Collective>;
+        let par = Par::new(vec![a, b]).unwrap();
+        assert_eq!(par.participants().len(), 2);
+        assert!(par.is_done());
+        assert_eq!(par.outputs().len(), 2);
+    }
 }

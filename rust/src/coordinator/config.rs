@@ -34,6 +34,10 @@ pub enum CodeKind {
     RsPlain,
     /// Systematic Lagrange code (Remark 9).
     Lagrange,
+    /// GRS on NTT-friendly geometry (`α` = K-th roots of unity, `β` on
+    /// a generator coset) — eligible for the `O(K log K)` encode backend
+    /// at large K ([`NttBackend`](crate::net::NttBackend)).
+    RsNtt,
     /// A random dense parity matrix (universal algorithms only).
     Random,
 }
@@ -45,6 +49,7 @@ impl std::str::FromStr for CodeKind {
             "rs-structured" | "rs" => CodeKind::RsStructured,
             "rs-plain" => CodeKind::RsPlain,
             "lagrange" => CodeKind::Lagrange,
+            "rs-ntt" => CodeKind::RsNtt,
             "random" => CodeKind::Random,
             other => anyhow::bail!("unknown code kind {other:?}"),
         })

@@ -113,6 +113,16 @@ impl EncodeJob {
                     (k as u64 + 1..=(k + r) as u64).collect(),
                 )?)
             }
+            CodeKind::RsNtt => {
+                // NTT-friendly geometry (roots + generator coset) with
+                // seeded non-unit multipliers — the general GRS flavor
+                // of the transform backend. A field without the two-adic
+                // root tower is a proper construction error.
+                let mut mrng = Rng::new(config.seed ^ 0x17A7);
+                let u: Vec<u64> = (0..k).map(|_| mrng.below(field.order() - 1) + 1).collect();
+                let v: Vec<u64> = (0..r).map(|_| mrng.below(field.order() - 1) + 1).collect();
+                Some(GrsCode::ntt_friendly(&field, k, r, u, v)?)
+            }
             CodeKind::Random => None,
         };
         let parity: Arc<Mat> = match &code {

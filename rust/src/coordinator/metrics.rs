@@ -28,6 +28,11 @@ pub const OUTPUTS_RECOVERED: &str = "outputs_recovered";
 /// Latency-series name: wall time of the erasure-recovery pass
 /// (decode-matrix build + survivor lincombs), per served batch.
 pub const RECOVERY_LATENCY: &str = "recovery_latency";
+/// Counter name: jobs rejected because their packed-buffer layout did
+/// not match the plan's kernels (a typed
+/// [`LayoutMismatch`](crate::gf::kernels::LayoutMismatch), not a
+/// worker-killing panic).
+pub const KERNEL_LAYOUT_REJECTS: &str = "kernel_layout_rejects";
 
 /// A set of named counters and latency recorders.
 #[derive(Debug, Default)]

@@ -460,7 +460,15 @@ fn serve_batch(
             Err(e) => {
                 // Group-level failure: every request in the width group
                 // carries the error (anyhow errors don't clone — each
-                // reply gets the formatted chain).
+                // reply gets the formatted chain). A kernel layout
+                // mismatch — a plan paired with buffers packed for a
+                // different field — used to panic the batcher thread; it
+                // is now a typed rejection with its own counter.
+                if e.chain()
+                    .any(|c| c.downcast_ref::<crate::gf::kernels::LayoutMismatch>().is_some())
+                {
+                    metrics.incr(super::metrics::KERNEL_LAYOUT_REJECTS, idxs.len() as u64);
+                }
                 let msg = format!("{e:#}");
                 for &slot in idxs {
                     let req = valid[slot].take().expect("reply slot served once");
@@ -590,6 +598,40 @@ mod tests {
         assert!(verify::native(&f, &oracle_job.parity, &x, &y));
         assert_eq!(svc.metrics.counter("failures"), 3);
         svc.shutdown();
+    }
+
+    #[test]
+    fn kernel_layout_mismatch_is_a_counted_rejection_not_a_dead_worker() {
+        use crate::gf::kernels::Kernels;
+        // Drive the batch-serving tail with an encode path that trips
+        // the typed layout mismatch (prime kernels against GF(2^8)
+        // buffers — what used to be a batcher-killing panic): the
+        // request must get a proper Err reply and the dedicated counter
+        // must move alongside the generic failure count.
+        let metrics = Metrics::new();
+        let (tx, reply_rx) = mpsc::channel();
+        let req = EncodeRequest {
+            x: vec![vec![1u64]; 4],
+            reply: tx,
+        };
+        let encode = |_jobs: &[&[Vec<u64>]]| -> Result<Vec<Vec<Vec<u64>>>> {
+            let prime = Kernels::for_field(&crate::gf::GfPrime::default_field());
+            let wrong = Kernels::for_field(&crate::gf::Gf2e::new(8).unwrap());
+            let b = wrong.zeros(4);
+            let mut out = wrong.zeros(4);
+            let row: &[u64] = &[1, 2, 3, 4];
+            prime.gemm_rows(&[row], &b, 4, &mut out, false)?;
+            unreachable!("mismatched layouts must error");
+        };
+        serve_batch(vec![req], &metrics, 4, &encode);
+        let resp = reply_rx.recv().expect("a reply, not a panic");
+        let err = resp.y.unwrap_err();
+        assert!(err.to_string().contains("does not match"), "{err}");
+        assert_eq!(metrics.counter("failures"), 1);
+        assert_eq!(
+            metrics.counter(crate::coordinator::metrics::KERNEL_LAYOUT_REJECTS),
+            1
+        );
     }
 
     #[test]

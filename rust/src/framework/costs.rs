@@ -128,6 +128,17 @@ pub struct PlanProfile {
     pub slots_before: usize,
     pub slots_after: usize,
     pub lincombs_eliminated: usize,
+    /// The encode engine serving this plan's batched replays
+    /// ([`select_backend`](crate::net::opt::select_backend)); a bare
+    /// [`plan_profile`] (no compiled backend in hand) reports the dense
+    /// default — [`CompiledPlan::profile`](super::CompiledPlan::profile)
+    /// reports the selected one.
+    pub backend: crate::net::opt::BackendKind,
+    /// Per-column op counts behind the crossover decision (dense
+    /// `R·K` vs transform `K log K + …`); zero when no NTT shape was
+    /// detected, so the gate never ran.
+    pub backend_dense_ops: usize,
+    pub backend_ntt_ops: usize,
 }
 
 /// Profile a plan at payload width `w`: its `(C1, C2)` statics plus the
@@ -140,6 +151,9 @@ pub fn plan_profile(plan: &crate::net::plan::Plan, w: u64) -> PlanProfile {
         slots_before: stats.slots_before,
         slots_after: stats.slots_after,
         lincombs_eliminated: stats.lincombs_eliminated(),
+        backend: crate::net::opt::BackendKind::Dense,
+        backend_dense_ops: 0,
+        backend_ntt_ops: 0,
     }
 }
 

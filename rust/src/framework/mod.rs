@@ -97,18 +97,49 @@ pub struct CompiledPlan {
     pub plan: crate::net::plan::Plan,
     pub opt: crate::net::opt::OptimizedPlan,
     pub kernels: crate::gf::kernels::Kernels,
+    /// The encode engine the backend-selection pass picked for batched
+    /// replays ([`select_backend`](crate::net::opt::select_backend)):
+    /// the packed dense gemm, or — for GRS/Lagrange codes on NTT-friendly
+    /// geometry past the op-count crossover — the `O(K log K)` transform
+    /// pipeline. Cross-checked against the generator algebra at compile
+    /// time, exactly like the [`OutputMatrix`](crate::net::OutputMatrix).
+    pub backend: crate::net::opt::EncodeBackend,
 }
 
 impl CompiledPlan {
-    /// Batched columnar replay through this compiled schedule with the
-    /// plan's pre-resolved packed kernels — the coordinator's
-    /// batch-serving hot loop
-    /// ([`replay_batch_kernels`](crate::net::exec::replay_batch_kernels)).
+    /// Batched columnar replay through this compiled schedule — the
+    /// coordinator's batch-serving hot loop. Dispatches to whichever
+    /// engine the backend-selection pass picked: the plan's pre-resolved
+    /// packed kernels
+    /// ([`replay_batch_kernels`](crate::net::exec::replay_batch_kernels))
+    /// or the NTT pipeline
+    /// ([`replay_batch_ntt`](crate::net::exec::replay_batch_ntt)) — both
+    /// bit-identical per job.
     pub fn replay_batch(
         &self,
         jobs: &[&[Packet]],
     ) -> anyhow::Result<Vec<crate::net::Replay>> {
-        crate::net::exec::replay_batch_kernels(&self.opt, &self.kernels, jobs)
+        match &self.backend {
+            crate::net::opt::EncodeBackend::Ntt(b) => {
+                crate::net::exec::replay_batch_ntt(&self.opt, b, jobs)
+            }
+            crate::net::opt::EncodeBackend::Dense => {
+                crate::net::exec::replay_batch_kernels(&self.opt, &self.kernels, jobs)
+            }
+        }
+    }
+
+    /// The plan's [`PlanProfile`](costs::PlanProfile) at payload width
+    /// `w`: communication statics, optimizer statics, and the chosen
+    /// encode backend with the op counts behind the crossover decision.
+    pub fn profile(&self, w: u64) -> costs::PlanProfile {
+        let mut prof = costs::plan_profile(&self.plan, w);
+        prof.backend = self.backend.kind();
+        if let crate::net::opt::EncodeBackend::Ntt(b) = &self.backend {
+            prof.backend_dense_ops = b.dense_ops();
+            prof.backend_ntt_ops = b.ntt_ops();
+        }
+        prof
     }
 
     /// Degraded batched replay through this compiled schedule: the
@@ -352,6 +383,7 @@ pub fn compile_plan<F: Field>(
     // of the systematic generator `G = [I | A]`). Any divergence means a
     // miscompiled schedule or a broken optimizer pass — fail before the
     // plan can be cached.
+    let mut sink_rows = Vec::with_capacity(layout.r);
     for r in 0..layout.r {
         let pid = layout.sink(r);
         let row = opt
@@ -367,12 +399,25 @@ pub fn compile_plan<F: Field>(
                 a[(k, r)]
             );
         }
+        sink_rows.push(opt.matrix.assignment()[&pid]);
     }
+    // Backend selection (the second compile-time cross-check): when the
+    // code's evaluation geometry admits the NTT pipeline *and* the
+    // op-count crossover favors it, the serving path gets the transform;
+    // a detected-but-divergent shape is a hard compile error.
+    let shape = code.map(|c| crate::net::opt::CodeShape {
+        alphas: &c.alphas,
+        betas: &c.betas,
+        u: &c.u,
+        v: &c.v,
+    });
+    let backend = crate::net::opt::select_backend(f, &opt, shape, &sink_rows)?;
     Ok(CompiledPlan {
         choice,
         layout,
         plan,
         opt,
+        backend,
         // Resolved once per compile: every cached replay (batched,
         // degraded, service path) reuses this vtable instead of
         // re-deriving layout/tables — and instead of per-element

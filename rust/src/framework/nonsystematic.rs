@@ -105,7 +105,7 @@ impl NonSystematicEncode {
                         as Box<dyn Collective>
                 })
                 .collect();
-            Box::new(Par::new(rows)) as Box<dyn Collective>
+            Box::new(Par::new(rows).expect("disjoint by construction")) as Box<dyn Collective>
         });
 
         // Phase 2 (one Par): per-column A2As over the sinks, plus the
@@ -164,7 +164,7 @@ impl NonSystematicEncode {
                     ins,
                 )));
             }
-            Box::new(Par::new(groups)) as Box<dyn Collective>
+            Box::new(Par::new(groups).expect("disjoint by construction")) as Box<dyn Collective>
         });
 
         let init: Outputs = inputs.into_iter().enumerate().collect();
@@ -210,7 +210,7 @@ impl NonSystematicEncode {
                         as Box<dyn Collective>
                 })
                 .collect();
-            Box::new(Par::new(rows)) as Box<dyn Collective>
+            Box::new(Par::new(rows).expect("disjoint by construction")) as Box<dyn Collective>
         });
 
         // Phase 2: sources run the block-0 Cauchy A2A (coordinates 0..K);
@@ -240,7 +240,7 @@ impl NonSystematicEncode {
                         .expect("structured Lagrange designs validated"),
                     ));
                 }
-                Box::new(Par::new(groups)) as Box<dyn Collective>
+                Box::new(Par::new(groups).expect("disjoint by construction")) as Box<dyn Collective>
             })
         };
 

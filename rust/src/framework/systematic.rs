@@ -267,7 +267,7 @@ fn build_k_ge_r_with<F: Field>(
                     make_block(&f, procs, p, m, ins)
                 })
                 .collect();
-            Box::new(Par::new(cols)) as Box<dyn Collective>
+            Box::new(Par::new(cols).expect("disjoint by construction")) as Box<dyn Collective>
         })
     };
 
@@ -288,7 +288,7 @@ fn build_k_ge_r_with<F: Field>(
                         as Box<dyn Collective>
                 })
                 .collect();
-            Box::new(Par::new(rows)) as Box<dyn Collective>
+            Box::new(Par::new(rows).expect("disjoint by construction")) as Box<dyn Collective>
         })
     };
 
@@ -370,7 +370,7 @@ fn build_k_lt_r_with<F: Field>(
                         as Box<dyn Collective>
                 })
                 .collect();
-            Box::new(Par::new(rows)) as Box<dyn Collective>
+            Box::new(Par::new(rows).expect("disjoint by construction")) as Box<dyn Collective>
         })
     };
 
@@ -387,7 +387,7 @@ fn build_k_lt_r_with<F: Field>(
                     make_block(&f, procs, p, m, ins)
                 })
                 .collect();
-            Box::new(Par::new(cols)) as Box<dyn Collective>
+            Box::new(Par::new(cols).expect("disjoint by construction")) as Box<dyn Collective>
         })
     };
 

@@ -481,6 +481,35 @@ pub struct Kernels {
     imp: Impl,
 }
 
+/// A packed buffer whose lane layout does not match the field the
+/// kernels were resolved for. This is the *typed* form of what used to
+/// be a worker-killing `panic!` in the kernel dispatch arms: a caller
+/// pairing a plan's kernels with a buffer packed for a different field
+/// now gets a recoverable error that propagates through
+/// [`replay_batch`](crate::net::exec::replay_batch) and surfaces in the
+/// coordinator as a rejected job (`coordinator::metrics::KERNEL_LAYOUT_REJECTS`)
+/// instead of poisoning the batcher thread.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayoutMismatch {
+    /// The layout this field's kernels compute in.
+    pub expected: SymbolLayout,
+    /// The offending buffer's layout.
+    pub got: SymbolLayout,
+}
+
+impl std::fmt::Display for LayoutMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "packed buffer layout ({} lanes) does not match the field's kernels ({} lanes)",
+            self.got.name(),
+            self.expected.name()
+        )
+    }
+}
+
+impl std::error::Error for LayoutMismatch {}
+
 /// Run `body(i, row_i)` over the `n`-lane rows of `out`, rayon-parallel
 /// when `par` (and the `parallel` feature) is on.
 fn row_loop<T: Send>(out: &mut [T], n: usize, par: bool, body: impl Fn(usize, &mut [T]) + Sync + Send) {
@@ -569,9 +598,26 @@ impl Kernels {
         PackedBuf::zeros(self.layout(), len)
     }
 
+    /// The [`LayoutMismatch`] for a dispatch miss against `bufs`.
+    fn mismatch(&self, bufs: &[SymbolLayout]) -> LayoutMismatch {
+        let expected = self.layout();
+        let got = bufs
+            .iter()
+            .copied()
+            .find(|&l| l != expected)
+            .unwrap_or(expected);
+        LayoutMismatch { expected, got }
+    }
+
     /// `acc[i] += c·src[i]` over packed storage.
-    pub fn axpy(&self, acc: &mut PackedBuf, c: u64, src: &PackedBuf) {
+    pub fn axpy(
+        &self,
+        acc: &mut PackedBuf,
+        c: u64,
+        src: &PackedBuf,
+    ) -> Result<(), LayoutMismatch> {
         assert_eq!(acc.len(), src.len(), "packed axpy length mismatch");
+        let bufs = [acc.layout(), src.layout()];
         match (&self.imp, &mut acc.data, &src.data) {
             (Impl::Gf2eNibble(k), PackedData::U8(a), PackedData::U8(s)) => k.axpy(a, c, s),
             (Impl::Gf2eWide(g), PackedData::U16(a), PackedData::U16(s)) => {
@@ -583,16 +629,23 @@ impl Kernels {
             (Impl::Scalar(ops), PackedData::U64(a), PackedData::U64(s)) => {
                 ops.dyn_axpy_into(a, c, s)
             }
-            _ => panic!("packed buffer layout does not match the field's kernels"),
+            _ => return Err(self.mismatch(&bufs)),
         }
+        Ok(())
     }
 
     /// `acc[j] += Σ_k coeffs[k]·srcs[k·n + j]` — one dense lincomb over
     /// a row-major packed arena of `coeffs.len()` rows × `acc.len()`
     /// lanes.
-    pub fn lincomb(&self, acc: &mut PackedBuf, coeffs: &[u64], srcs: &PackedBuf) {
+    pub fn lincomb(
+        &self,
+        acc: &mut PackedBuf,
+        coeffs: &[u64],
+        srcs: &PackedBuf,
+    ) -> Result<(), LayoutMismatch> {
         let n = acc.len();
         assert_eq!(srcs.len(), coeffs.len() * n, "packed lincomb arena shape");
+        let bufs = [acc.layout(), srcs.layout()];
         match (&self.imp, &mut acc.data, &srcs.data) {
             (Impl::Gf2eNibble(k), PackedData::U8(a), PackedData::U8(s)) => {
                 k.gemm_row(coeffs, s, n, a)
@@ -612,8 +665,9 @@ impl Kernels {
             (Impl::Scalar(ops), PackedData::U64(a), PackedData::U64(s)) => {
                 ops.dyn_gemm_row(coeffs, s, n, a)
             }
-            _ => panic!("packed buffer layout does not match the field's kernels"),
+            _ => return Err(self.mismatch(&bufs)),
         }
+        Ok(())
     }
 
     /// The batched serving kernel: `out[i·n + j] += Σ_k rows[i][k]·b[k·n + j]`
@@ -622,11 +676,19 @@ impl Kernels {
     /// independent output rows when `par` is set (and the `parallel`
     /// feature is compiled in). `out` must hold `rows.len()·n` lanes
     /// (zeroed by the caller; the kernels accumulate).
-    pub fn gemm_rows(&self, rows: &[&[u64]], b: &PackedBuf, n: usize, out: &mut PackedBuf, par: bool) {
+    pub fn gemm_rows(
+        &self,
+        rows: &[&[u64]],
+        b: &PackedBuf,
+        n: usize,
+        out: &mut PackedBuf,
+        par: bool,
+    ) -> Result<(), LayoutMismatch> {
         assert_eq!(out.len(), rows.len() * n, "packed gemm output shape");
         if n == 0 || rows.is_empty() {
-            return;
+            return Ok(());
         }
+        let bufs = [out.layout(), b.layout()];
         match (&self.imp, &mut out.data, &b.data) {
             (Impl::Gf2eNibble(k), PackedData::U8(o), PackedData::U8(bs)) => {
                 row_loop(o, n, par, |i, row| k.gemm_row(rows[i], bs, n, row))
@@ -646,8 +708,9 @@ impl Kernels {
             (Impl::Scalar(ops), PackedData::U64(o), PackedData::U64(bs)) => {
                 row_loop(o, n, par, |i, row| ops.dyn_gemm_row(rows[i], bs, n, row))
             }
-            _ => panic!("packed buffer layout does not match the field's kernels"),
+            _ => return Err(self.mismatch(&bufs)),
         }
+        Ok(())
     }
 }
 
@@ -733,7 +796,7 @@ mod tests {
                 let mut scalar = acc0.clone();
                 f.axpy_into(&mut scalar, c, &src);
                 let mut packed = kern.pack(&acc0);
-                kern.axpy(&mut packed, c, &kern.pack(&src));
+                kern.axpy(&mut packed, c, &kern.pack(&src)).unwrap();
                 assert_eq!(packed.to_u64(), scalar, "{f:?} n={n} c={c}");
             }
         }
@@ -769,7 +832,7 @@ mod tests {
         let kern = Kernels::for_field(&f);
         assert_eq!(kern.layout(), SymbolLayout::U64);
         let mut acc = kern.pack(&[1, 2, 3, 4]);
-        kern.axpy(&mut acc, 3, &kern.pack(&[5, 6, 0, 1]));
+        kern.axpy(&mut acc, 3, &kern.pack(&[5, 6, 0, 1])).unwrap();
         assert_eq!(acc.to_u64(), vec![(1 + 15) % 7, (2 + 18) % 7, 3, (4 + 3) % 7]);
 
         // The fallback's lincomb and gemm_rows arms, against a naive
@@ -789,14 +852,38 @@ mod tests {
         };
         let init = [4u64, 5, 6, 0, 1];
         let mut acc = kern.pack(&init);
-        kern.lincomb(&mut acc, &coeffs, &arena);
+        kern.lincomb(&mut acc, &coeffs, &arena).unwrap();
         assert_eq!(acc.to_u64(), oracle_row(&coeffs, &init), "fallback lincomb");
         let row2 = [1u64, 2, 4];
         let rows: Vec<&[u64]> = vec![&coeffs, &row2];
         let mut out = kern.zeros(2 * n);
-        kern.gemm_rows(&rows, &arena, n, &mut out, false);
+        kern.gemm_rows(&rows, &arena, n, &mut out, false).unwrap();
         assert_eq!(out.unpack_range(0, n), oracle_row(&coeffs, &[0; 5]), "fallback gemm row 0");
         assert_eq!(out.unpack_range(n, n), oracle_row(&row2, &[0; 5]), "fallback gemm row 1");
+    }
+
+    #[test]
+    fn layout_mismatch_is_a_typed_error_not_a_panic() {
+        // Kernels resolved for one field, buffers packed for another:
+        // every vtable entry must return the typed error (the serving
+        // path turns it into a rejected job), never panic.
+        let prime = Kernels::for_field(&GfPrime::default_field()); // u32 lanes
+        let bytes = Kernels::for_field(&Gf2e::new(8).unwrap()); // u8 lanes
+        let mut acc = prime.zeros(4);
+        let err = bytes.axpy(&mut acc, 3, &prime.zeros(4)).unwrap_err();
+        assert_eq!(err.expected, SymbolLayout::U8);
+        assert_eq!(err.got, SymbolLayout::U32);
+        assert!(err.to_string().contains("does not match"), "{err}");
+        let mut acc = prime.zeros(4);
+        assert!(bytes.lincomb(&mut acc, &[1, 2], &prime.zeros(8)).is_err());
+        let mut out = prime.zeros(4);
+        let row: &[u64] = &[1, 2];
+        assert!(bytes.gemm_rows(&[row], &prime.zeros(8), 4, &mut out, false).is_err());
+        // And through anyhow chains the concrete type stays reachable.
+        let any: anyhow::Error = err.into();
+        assert!(any
+            .chain()
+            .any(|c| c.downcast_ref::<LayoutMismatch>().is_some()));
     }
 
     #[test]
@@ -813,10 +900,10 @@ mod tests {
             let arena = kern.pack(&arena_u64);
             let mut out = kern.zeros(m * n);
             let row_refs: Vec<&[u64]> = rows.iter().map(|r| r.as_slice()).collect();
-            kern.gemm_rows(&row_refs, &arena, n, &mut out, false);
+            kern.gemm_rows(&row_refs, &arena, n, &mut out, false).unwrap();
             for (i, row) in rows.iter().enumerate() {
                 let mut want = kern.zeros(n);
-                kern.lincomb(&mut want, row, &arena);
+                kern.lincomb(&mut want, row, &arena).unwrap();
                 assert_eq!(out.unpack_range(i * n, n), want.to_u64(), "{spec} row {i}");
             }
         }

@@ -32,6 +32,12 @@ pub fn intt<F: Field>(f: &F, data: &mut [u64]) -> anyhow::Result<()> {
 fn transform<F: Field>(f: &F, data: &mut [u64], invert: bool) -> anyhow::Result<()> {
     let n = data.len();
     anyhow::ensure!(n.is_power_of_two(), "NTT size must be a power of two");
+    // n ≤ 1 is the identity transform: a degree-0 polynomial already *is*
+    // its evaluation at the sole 1st root of unity. (Also keeps the
+    // bit-reversal below well-defined — `bits = 0` would shift by 64.)
+    if n <= 1 {
+        return Ok(());
+    }
     let mut root = f
         .root_of_unity(n as u64)
         .ok_or_else(|| anyhow::anyhow!("{n} must divide q−1"))?;
@@ -58,6 +64,79 @@ fn transform<F: Field>(f: &F, data: &mut [u64], invert: bool) -> anyhow::Result<
                 let v = f.mul(data[start + i + len / 2], w);
                 data[start + i] = f.add(u, v);
                 data[start + i + len / 2] = f.sub(u, v);
+                w = f.mul(w, wlen);
+            }
+        }
+        len <<= 1;
+    }
+    Ok(())
+}
+
+/// Row-batched forward NTT: `data` is a row-major `n × width` arena and
+/// every *column* is transformed independently — the butterflies run on
+/// whole rows, so one twiddle fetch serves `width` lanes. This is the
+/// columnar-serving counterpart of [`evaluate_at_roots`]: with the rows
+/// holding a polynomial's coefficients per column, row `j` ends up with
+/// the evaluations at `β^j` (`β` the primitive `n`-th root), for all
+/// `width` columns at once. Used by the optimizer's NTT encode backend
+/// over the `W·B` batch arena (`net::opt::NttBackend`).
+pub fn ntt_rows<F: Field>(f: &F, data: &mut [u64], n: usize, width: usize) -> anyhow::Result<()> {
+    transform_rows(f, data, n, width, false)
+}
+
+/// Row-batched inverse NTT — see [`ntt_rows`]; scales by `n^{-1}`.
+pub fn intt_rows<F: Field>(f: &F, data: &mut [u64], n: usize, width: usize) -> anyhow::Result<()> {
+    transform_rows(f, data, n, width, true)?;
+    let n_inv = f.inv(f.elem(n as u64));
+    for x in data.iter_mut() {
+        *x = f.mul(*x, n_inv);
+    }
+    Ok(())
+}
+
+fn transform_rows<F: Field>(
+    f: &F,
+    data: &mut [u64],
+    n: usize,
+    width: usize,
+    invert: bool,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(n.is_power_of_two(), "NTT size must be a power of two");
+    anyhow::ensure!(data.len() == n * width, "arena must be n × width");
+    if n <= 1 || width == 0 {
+        return Ok(());
+    }
+    let mut root = f
+        .root_of_unity(n as u64)
+        .ok_or_else(|| anyhow::anyhow!("{n} must divide q−1"))?;
+    if invert {
+        root = f.inv(root);
+    }
+    // Bit-reversal permutation of whole rows.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = ((i as u64).reverse_bits() >> (64 - bits) as u64) as usize;
+        if i < j {
+            for x in 0..width {
+                data.swap(i * width + x, j * width + x);
+            }
+        }
+    }
+    // Butterfly levels, each pairing operating element-wise on two rows.
+    let mut len = 2;
+    while len <= n {
+        let wlen = f.pow(root, (n / len) as u64);
+        for start in (0..n).step_by(len) {
+            let mut w = f.one();
+            for i in 0..len / 2 {
+                let ui = (start + i) * width;
+                let vi = (start + i + len / 2) * width;
+                for x in 0..width {
+                    let u = data[ui + x];
+                    let v = f.mul(data[vi + x], w);
+                    data[ui + x] = f.add(u, v);
+                    data[vi + x] = f.sub(u, v);
+                }
                 w = f.mul(w, wlen);
             }
         }
@@ -137,6 +216,65 @@ mod tests {
         let a: Vec<u64> = (1..=33u64).collect();
         let b: Vec<u64> = (5..=24u64).map(|i| f.elem(i * 11)).collect();
         assert_eq!(poly_mul_fast(&f, &a, &b).unwrap(), poly::mul(&f, &a, &b));
+    }
+
+    #[test]
+    fn size_one_transform_is_identity() {
+        // Regression: n = 1 used to shift the bit-reversal index by 64
+        // (a debug-build panic). A constant polynomial is its own
+        // evaluation/interpolation at the sole 1st root of unity.
+        let f = f();
+        let mut d = vec![42u64];
+        ntt(&f, &mut d).unwrap();
+        assert_eq!(d, vec![42]);
+        intt(&f, &mut d).unwrap();
+        assert_eq!(d, vec![42]);
+        assert_eq!(evaluate_at_roots(&f, &[7], 1).unwrap(), vec![7]);
+        // Reachable from poly_mul_fast on two constants: out_len = 1.
+        assert_eq!(poly_mul_fast(&f, &[3], &[5]).unwrap(), vec![15]);
+        assert_eq!(
+            poly_mul_fast(&f, &[786432], &[2]).unwrap(),
+            vec![f.mul(786432, 2)]
+        );
+        // And the row-batched variants degrade the same way.
+        let mut rows = vec![9u64, 8, 7];
+        ntt_rows(&f, &mut rows, 1, 3).unwrap();
+        assert_eq!(rows, vec![9, 8, 7]);
+        intt_rows(&f, &mut rows, 1, 3).unwrap();
+        assert_eq!(rows, vec![9, 8, 7]);
+    }
+
+    #[test]
+    fn row_transforms_match_per_column_transforms() {
+        let f = f();
+        for (n, width) in [(2usize, 1usize), (8, 3), (64, 5), (256, 2)] {
+            let mut rng = crate::util::Rng::new((n * width) as u64);
+            let arena: Vec<u64> = (0..n * width).map(|_| rng.below(f.order())).collect();
+            for invert in [false, true] {
+                let mut rows = arena.clone();
+                if invert {
+                    intt_rows(&f, &mut rows, n, width).unwrap();
+                } else {
+                    ntt_rows(&f, &mut rows, n, width).unwrap();
+                }
+                for col in 0..width {
+                    let mut column: Vec<u64> =
+                        (0..n).map(|i| arena[i * width + col]).collect();
+                    if invert {
+                        intt(&f, &mut column).unwrap();
+                    } else {
+                        ntt(&f, &mut column).unwrap();
+                    }
+                    for i in 0..n {
+                        assert_eq!(
+                            rows[i * width + col],
+                            column[i],
+                            "n={n} width={width} invert={invert} row {i} col {col}"
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

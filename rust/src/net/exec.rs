@@ -38,7 +38,7 @@
 //!   trace tooling.
 
 use super::fault::{analyze_plan, DegradedReport, FaultSpec};
-use super::opt::OptimizedPlan;
+use super::opt::{NttBackend, OptimizedPlan, RowKind};
 use super::payload::{pkt_zero, Packet, PackedPacketBuf};
 use super::plan::Plan;
 use super::sim::{Outputs, ProcId, SimReport};
@@ -292,7 +292,7 @@ pub fn replay_batch_kernels(
             wb,
             out.buf_mut(),
             crate::net::parallel_enabled(),
-        );
+        )?;
     }
 
     // Unpack: slice each job's columns back out per processor,
@@ -350,6 +350,81 @@ pub fn replay_batch_scalar<F: Field>(
                 .assignment()
                 .iter()
                 .map(|(&pid, &ri)| (pid, out[ri * wb + j * w..ri * wb + (j + 1) * w].to_vec()))
+                .collect();
+            Replay {
+                outputs,
+                report: report.clone(),
+            }
+        })
+        .collect())
+}
+
+/// [`replay_batch`] through a detected [`NttBackend`]: interpolate →
+/// twist → fold → evaluate over the columnar `K × (W·B)` arena instead
+/// of the dense gemm — `O(K log K)` per column where the gemm pays
+/// `O(R·K)`. Unit (systematic) outputs are copied straight from the
+/// jobs; parity outputs come from the backend's staging buffer. Outputs
+/// and report are bit-identical per job to [`replay_batch`] /
+/// [`replay`]: every intermediate is an exact canonical field value, so
+/// equal elements are equal bits (asserted across the differential
+/// matrix in `tests/ntt_backend.rs`).
+pub fn replay_batch_ntt(
+    opt: &OptimizedPlan,
+    backend: &NttBackend,
+    jobs: &[&[Packet]],
+) -> Result<Vec<Replay>> {
+    let w = check_batch(opt, jobs)?;
+    ensure!(
+        backend.k() == opt.n_inputs && backend.n_rows() == opt.matrix.n_rows(),
+        "NTT backend was detected against a different plan shape"
+    );
+    // Same canonical-input contract as the packed dense path.
+    let q = backend.order();
+    for (j, job) in jobs.iter().enumerate() {
+        for row in job.iter() {
+            if let Some(&v) = row.iter().find(|&&v| v >= q) {
+                anyhow::bail!(
+                    "job {j}: payload element {v} is not canonical (field order {q})"
+                );
+            }
+        }
+    }
+    let b = jobs.len();
+    let wb = w * b;
+    let k = opt.n_inputs;
+
+    // Pack: columnar u64 arena, K rows of W·B elements (the transform
+    // butterflies are full-width modmuls — no narrow-lane packing).
+    let mut arena = vec![0u64; k * wb];
+    for (j, job) in jobs.iter().enumerate() {
+        for (ki, row) in job.iter().enumerate() {
+            arena[ki * wb + j * w..ki * wb + (j + 1) * w].copy_from_slice(row);
+        }
+    }
+    let parity = if wb > 0 {
+        backend.parity_rows(&arena, wb)?
+    } else {
+        Vec::new()
+    };
+
+    // Unpack: unit rows are the job's own packets, parity rows slice
+    // the staging buffer.
+    let report = opt.report(w);
+    Ok((0..b)
+        .map(|j| {
+            let outputs: Outputs = opt
+                .matrix
+                .assignment()
+                .iter()
+                .map(|(&pid, &ri)| {
+                    let pkt = match backend.row_kind(ri) {
+                        RowKind::Unit(src) => jobs[j][src].clone(),
+                        RowKind::Parity(r) => {
+                            parity[r * wb + j * w..r * wb + (j + 1) * w].to_vec()
+                        }
+                    };
+                    (pid, pkt)
+                })
                 .collect();
             Replay {
                 outputs,
@@ -448,7 +523,7 @@ pub fn replay_degraded_batch_kernels(
             wb,
             out.buf_mut(),
             crate::net::parallel_enabled(),
-        );
+        )?;
     }
 
     // Resolve each surviving processor's compact row position once

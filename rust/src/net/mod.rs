@@ -31,14 +31,17 @@ pub mod sim;
 pub mod trace;
 
 pub use exec::{
-    replay, replay_batch, replay_batch_kernels, replay_batch_scalar, replay_degraded,
-    replay_degraded_batch, replay_degraded_batch_kernels, replay_full, replay_opt,
-    DegradedReplay, Replay, WireReplay,
+    replay, replay_batch, replay_batch_kernels, replay_batch_ntt, replay_batch_scalar,
+    replay_degraded, replay_degraded_batch, replay_degraded_batch_kernels, replay_full,
+    replay_opt, DegradedReplay, Replay, WireReplay,
 };
 pub use fault::{analyze_plan, DegradedReport, FaultSpec, POST_RUN};
 pub use model::CostModel;
 pub use noisy::{ErasureChannel, InnerFec, NoisyCollective};
-pub use opt::{optimize, OptStats, OptimizedPlan, OutputMatrix};
+pub use opt::{
+    optimize, select_backend, BackendKind, CodeShape, EncodeBackend, NttBackend, OptStats,
+    OptimizedPlan, OutputMatrix, RowKind, NTT_DENSE_OP_RATIO,
+};
 pub use payload::{
     lincomb, pkt_add, pkt_add_scaled, pkt_scale, pkt_zero, Packet, PackedPacketBuf, PacketBuf,
 };

@@ -33,6 +33,7 @@
 
 use super::plan::Plan;
 use super::sim::{ProcId, SimReport};
+use crate::gf::{ntt, AnyField, Field, GfPrime};
 use std::collections::{BTreeMap, HashMap};
 
 /// What the pass pipeline did to one plan. Reported next to `C1`/`C2`
@@ -227,6 +228,331 @@ pub fn optimize(plan: &Plan) -> OptimizedPlan {
             cse_merged,
         },
         unit_report: plan.report(1),
+    }
+}
+
+/// The GRS/Lagrange evaluation geometry of a compiled plan's code —
+/// borrowed views of the pieces backend selection needs, so `net` does
+/// not depend on the `codes` layer (which already depends on `net`).
+#[derive(Clone, Copy, Debug)]
+pub struct CodeShape<'a> {
+    /// Systematic evaluation points `α_0..α_{K−1}`.
+    pub alphas: &'a [u64],
+    /// Parity evaluation points `β_0..β_{R−1}`.
+    pub betas: &'a [u64],
+    /// Column multipliers `u` (systematic) and `v` (parity).
+    pub u: &'a [u64],
+    pub v: &'a [u64],
+}
+
+/// What one [`OutputMatrix`] row computes, as the NTT backend sees it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowKind {
+    /// The unit row `e_j`: the output *is* input `j` (systematic half).
+    Unit(usize),
+    /// Parity coordinate `r` of the code (`c_{K+r} = v_r·g(β_r)`).
+    Parity(usize),
+}
+
+/// Dense-op : NTT-op threshold for preferring the transform. The NTT's
+/// per-op constant (full-width `u64` modmul butterflies) is worse than
+/// the packed gemm's narrow-lane delayed-reduction multiply-add, so the
+/// transform must win the *op count* by a comfortable factor before it
+/// wins wall time; `benches/ntt_backend.rs` measures the real crossover.
+pub const NTT_DENSE_OP_RATIO: usize = 4;
+
+/// The `O(K log K)` encode engine for GRS/Lagrange codes on NTT-friendly
+/// geometry: `α` sweeping all `K`-th roots of unity and `β` on a coset
+/// `c·⟨ω₂⟩` of the `n2`-th roots (`n2 = R.next_power_of_two()`). One
+/// batch encode over the columnar `K × (W·B)` arena is then
+///
+/// ```text
+/// t = x ⊙ u⁻¹   →   y = INTT_K(t)   →   ŷ_i = c^i·y_i   →
+/// z_m = Σ_{i ≡ m (n2)} ŷ_i   →   NTT_{n2}(z)   →   parity_r = v_r·z_r
+/// ```
+///
+/// — interpolation of `g` (degree < K, `x_k = u_k·g(α_k)`), a single
+/// diagonal *twist* moving the evaluation grid onto the coset, a fold
+/// exploiting `ω₂^{n2} = 1`, and one small forward transform. Detection
+/// ([`detect`](Self::detect)) is structural and separate from the
+/// cost-gate policy ([`select_backend`]), so tests can force the
+/// transform at any `K`; every detected backend is cross-checked against
+/// the flattened [`OutputMatrix`] on a `K × K` identity arena before it
+/// is trusted (divergence is a loud error, exactly like the generator
+/// cross-check in `framework::compile_plan`).
+#[derive(Clone, Debug)]
+pub struct NttBackend {
+    field: GfPrime,
+    k: usize,
+    r: usize,
+    /// Transform size of the parity-side NTT: `max(1, R)` rounded up to
+    /// a power of two.
+    n2: usize,
+    /// `u_k^{-1}` — undoes the systematic multipliers before interpolation.
+    u_inv: Vec<u64>,
+    /// `c^i` for `i < K`, `c = f.generator()` — the coset twist diagonal.
+    twist: Vec<u64>,
+    /// Parity multipliers `v_r`, applied after evaluation.
+    v: Vec<u64>,
+    /// What each [`OutputMatrix`] row computes, by row index.
+    row_kinds: Vec<RowKind>,
+}
+
+/// Resolve `f` to the crate's concrete prime field, including through
+/// [`AnyField`] (the coordinator's erased field) — same discipline as
+/// `Kernels::for_field`. Extension fields have no two-adic root tower
+/// here, so they never get an NTT backend.
+fn prime_of<F: Field>(f: &F) -> Option<GfPrime> {
+    let any: &dyn std::any::Any = f;
+    if let Some(af) = any.downcast_ref::<AnyField>() {
+        return match af {
+            AnyField::Prime(p) => Some(*p),
+            _ => None,
+        };
+    }
+    any.downcast_ref::<GfPrime>().copied()
+}
+
+impl NttBackend {
+    /// Structural detection: does this plan's flattened output matrix
+    /// compute exactly an NTT-friendly GRS encode? `sink_rows[r]` is the
+    /// matrix row computing parity coordinate `r` (from the compiled
+    /// layout's sink assignment). Returns `Ok(None)` when the shape does
+    /// not fit (non-prime field, `K` not a power of two, points off the
+    /// root/coset grid, a non-unit non-sink row); returns `Err` only
+    /// when the shape *claims* to fit but the identity cross-check
+    /// against the matrix algebra diverges — a miscompile, never a
+    /// fallback.
+    pub fn detect<F: Field>(
+        f: &F,
+        matrix: &OutputMatrix,
+        shape: &CodeShape<'_>,
+        sink_rows: &[usize],
+    ) -> anyhow::Result<Option<Self>> {
+        let Some(p) = prime_of(f) else {
+            return Ok(None);
+        };
+        let k = matrix.k();
+        let r = shape.betas.len();
+        if k == 0 || r == 0 || !k.is_power_of_two() {
+            return Ok(None);
+        }
+        if shape.alphas.len() != k || shape.u.len() != k || shape.v.len() != r {
+            return Ok(None);
+        }
+        if sink_rows.len() != r || shape.u.iter().chain(shape.v).any(|&m| m == 0) {
+            return Ok(None);
+        }
+        let n2 = r.next_power_of_two();
+        let (Some(w1), Some(w2)) =
+            (p.root_of_unity(k as u64), p.root_of_unity(n2 as u64))
+        else {
+            return Ok(None);
+        };
+        let c = p.generator();
+        // The evaluation grid must be exactly roots + coset, in order.
+        for (i, &a) in shape.alphas.iter().enumerate() {
+            if a != p.pow(w1, i as u64) {
+                return Ok(None);
+            }
+        }
+        for (j, &b) in shape.betas.iter().enumerate() {
+            if b != p.mul(c, p.pow(w2, j as u64)) {
+                return Ok(None);
+            }
+        }
+        // Classify every matrix row: parity rows come from the sink
+        // assignment, everything else must be a coefficient-1 unit row.
+        let n_rows = matrix.n_rows();
+        let mut row_kinds = vec![None; n_rows];
+        for (pr, &ri) in sink_rows.iter().enumerate() {
+            if ri >= n_rows || row_kinds[ri].is_some() {
+                return Ok(None);
+            }
+            row_kinds[ri] = Some(RowKind::Parity(pr));
+        }
+        for (ri, kind) in row_kinds.iter_mut().enumerate() {
+            if kind.is_some() {
+                continue;
+            }
+            let row = matrix.row(ri);
+            let mut unit = None;
+            for (j, &cv) in row.iter().enumerate() {
+                if cv != 0 {
+                    if cv != p.one() || unit.is_some() {
+                        return Ok(None);
+                    }
+                    unit = Some(j);
+                }
+            }
+            match unit {
+                Some(j) => *kind = Some(RowKind::Unit(j)),
+                None => return Ok(None),
+            }
+        }
+        let backend = NttBackend {
+            field: p,
+            k,
+            r,
+            n2,
+            u_inv: shape.u.iter().map(|&m| p.inv(m)).collect(),
+            twist: (0..k as u64).map(|i| p.pow(c, i)).collect(),
+            v: shape.v.to_vec(),
+            row_kinds: row_kinds.into_iter().map(Option::unwrap).collect(),
+        };
+        // Compile-time cross-check against the flattened algebra: on the
+        // K × K identity arena, parity staging row `r` must reproduce
+        // the matrix's parity row bit for bit.
+        let mut ident = vec![0u64; k * k];
+        for i in 0..k {
+            ident[i * k + i] = p.one();
+        }
+        let staging = backend.parity_rows(&ident, k)?;
+        for (pr, &ri) in sink_rows.iter().enumerate() {
+            if &staging[pr * k..(pr + 1) * k] != matrix.row(ri) {
+                anyhow::bail!(
+                    "NTT backend diverges from the flattened output matrix at \
+                     parity row {pr}: the compiled plan does not encode the \
+                     claimed GRS code"
+                );
+            }
+        }
+        Ok(Some(backend))
+    }
+
+    /// Evaluate all parity coordinates across a columnar `K × width`
+    /// arena (`width = W·B` on the serving path): the interpolate →
+    /// twist → fold → evaluate pipeline from the type docs. Returns the
+    /// `R × width` parity staging buffer, canonical `u64`.
+    pub fn parity_rows(&self, arena: &[u64], width: usize) -> anyhow::Result<Vec<u64>> {
+        let f = self.field;
+        anyhow::ensure!(arena.len() == self.k * width, "arena must be K × width");
+        // t = x ⊙ u⁻¹: undo the systematic multipliers.
+        let mut t = arena.to_vec();
+        for (ki, &ui) in self.u_inv.iter().enumerate() {
+            for x in &mut t[ki * width..(ki + 1) * width] {
+                *x = f.mul(*x, ui);
+            }
+        }
+        // y = INTT_K(t): coefficients of g (α_i = ω₁^i, natural order).
+        ntt::intt_rows(&f, &mut t, self.k, width)?;
+        // Twist by c^i, then fold mod n2: since ω₂^{n2} = 1, evaluating
+        // Σ c^i·y_i·ω₂^{ij} only needs the folded sums z_m.
+        let mut z = vec![0u64; self.n2 * width];
+        for (i, &ci) in self.twist.iter().enumerate() {
+            let zi = (i % self.n2) * width;
+            for x in 0..width {
+                z[zi + x] = f.add(z[zi + x], f.mul(t[i * width + x], ci));
+            }
+        }
+        // NTT_{n2}(z): g(c·ω₂^j) for every parity point at once.
+        ntt::ntt_rows(&f, &mut z, self.n2, width)?;
+        // parity_r = v_r·g(β_r).
+        let mut out = vec![0u64; self.r * width];
+        for (r, &vr) in self.v.iter().enumerate() {
+            for x in 0..width {
+                out[r * width + x] = f.mul(vr, z[r * width + x]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// What matrix row `ri` computes.
+    pub fn row_kind(&self, ri: usize) -> RowKind {
+        self.row_kinds[ri]
+    }
+
+    /// Number of matrix rows this backend was detected against.
+    pub fn n_rows(&self) -> usize {
+        self.row_kinds.len()
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn r(&self) -> usize {
+        self.r
+    }
+
+    /// The field order `q` (for canonical-input validation).
+    pub fn order(&self) -> u64 {
+        self.field.order()
+    }
+
+    /// Per-column multiply count of the dense engine's non-trivial rows
+    /// (`R` parity rows × `K` coefficients; unit rows are copies either
+    /// way).
+    pub fn dense_ops(&self) -> usize {
+        self.r * self.k
+    }
+
+    /// Per-column multiply count of the transform pipeline: two
+    /// transforms plus the scale/twist/fold diagonals.
+    pub fn ntt_ops(&self) -> usize {
+        let lg = |n: usize| n.trailing_zeros() as usize;
+        self.k * lg(self.k) + self.n2 * lg(self.n2) + 2 * self.k + 2 * self.n2
+    }
+
+    /// The cost-gate policy: prefer the transform only when it wins the
+    /// op count by [`NTT_DENSE_OP_RATIO`].
+    pub fn ntt_wins(&self) -> bool {
+        self.dense_ops() >= NTT_DENSE_OP_RATIO * self.ntt_ops()
+    }
+}
+
+/// Which engine serves a compiled plan's batched replays.
+#[derive(Clone, Debug)]
+pub enum EncodeBackend {
+    /// The packed dense gemm over the full [`OutputMatrix`].
+    Dense,
+    /// The `O(K log K)` transform pipeline (plus unit-row copies).
+    Ntt(NttBackend),
+}
+
+/// The tag of an [`EncodeBackend`] — what `plan_profile` records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Dense,
+    Ntt,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Dense => "dense",
+            BackendKind::Ntt => "ntt",
+        }
+    }
+}
+
+impl EncodeBackend {
+    pub fn kind(&self) -> BackendKind {
+        match self {
+            EncodeBackend::Dense => BackendKind::Dense,
+            EncodeBackend::Ntt(_) => BackendKind::Ntt,
+        }
+    }
+}
+
+/// The backend-selection pass: structural detection
+/// ([`NttBackend::detect`]) gated by the op-count crossover
+/// ([`NttBackend::ntt_wins`]). `shape = None` (no code attached to the
+/// plan — random matrices, ad-hoc collectives) always serves dense.
+/// `Err` means the detected shape failed its identity cross-check — a
+/// miscompile that must not be served at all.
+pub fn select_backend<F: Field>(
+    f: &F,
+    opt: &OptimizedPlan,
+    shape: Option<CodeShape<'_>>,
+    sink_rows: &[usize],
+) -> anyhow::Result<EncodeBackend> {
+    let Some(shape) = shape else {
+        return Ok(EncodeBackend::Dense);
+    };
+    match NttBackend::detect(f, &opt.matrix, &shape, sink_rows)? {
+        Some(b) if b.ntt_wins() => Ok(EncodeBackend::Ntt(b)),
+        _ => Ok(EncodeBackend::Dense),
     }
 }
 

@@ -40,7 +40,7 @@ fn scalar_lincomb<F: Field>(f: &F, init: &[u64], coeffs: &[u64], srcs: &[Vec<u64
 fn packed_lincomb(kern: &Kernels, init: &[u64], coeffs: &[u64], srcs: &[Vec<u64>]) -> Vec<u64> {
     let mut acc = kern.pack(init);
     let flat: Vec<u64> = srcs.iter().flatten().copied().collect();
-    kern.lincomb(&mut acc, coeffs, &kern.pack(&flat));
+    kern.lincomb(&mut acc, coeffs, &kern.pack(&flat)).unwrap();
     acc.to_u64()
 }
 
@@ -64,7 +64,7 @@ fn gf256_axpy_exhaustive_over_all_coefficients() {
             let mut scalar = acc0.clone();
             f.axpy_into(&mut scalar, c, &src);
             let mut packed = kern.pack(&acc0);
-            kern.axpy(&mut packed, c, &kern.pack(&src));
+            kern.axpy(&mut packed, c, &kern.pack(&src)).unwrap();
             assert_eq!(packed.to_u64(), scalar, "c={c} n={n}");
         }
     }
@@ -174,7 +174,7 @@ fn packed_gemm_matches_scalar_gemm_across_tile_seam() {
             gemm_into(&f, m, k, &a, &b, n, &mut scalar);
             let rows: Vec<&[u64]> = (0..m).map(|i| &a[i * k..(i + 1) * k]).collect();
             let mut packed = kern.zeros(m * n);
-            kern.gemm_rows(&rows, &kern.pack(&b), n, &mut packed, false);
+            kern.gemm_rows(&rows, &kern.pack(&b), n, &mut packed, false).unwrap();
             assert_eq!(packed.to_u64(), scalar, "{spec} m={m} k={k} n={n}");
         }
     }

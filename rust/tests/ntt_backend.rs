@@ -1,0 +1,206 @@
+//! Differential suite for the NTT encode backend: the transform
+//! pipeline must be **bit-identical** to the dense engine and to live
+//! stepping (outputs *and* report) across the GRS/Lagrange × K × B
+//! matrix, with non-two-adic fields and non-GRS codes falling back to
+//! the dense engine.
+
+use dce::codes::GrsCode;
+use dce::framework::{compile_plan, plan, AlgoRequest, CompiledPlan};
+use dce::gf::{Field, GfPrime};
+use dce::net::{
+    replay_batch_kernels, replay_batch_ntt, run, BackendKind, CodeShape, NttBackend, Packet,
+    Sim,
+};
+use dce::util::Rng;
+
+fn sink_rows(c: &CompiledPlan) -> Vec<usize> {
+    (0..c.layout.r)
+        .map(|r| c.opt.matrix.assignment()[&c.layout.sink(r)])
+        .collect()
+}
+
+fn shape(code: &GrsCode) -> CodeShape<'_> {
+    CodeShape {
+        alphas: &code.alphas,
+        betas: &code.betas,
+        u: &code.u,
+        v: &code.v,
+    }
+}
+
+fn random_jobs(f: &GfPrime, rng: &mut Rng, k: usize, w: usize, b: usize) -> Vec<Vec<Packet>> {
+    (0..b)
+        .map(|_| {
+            (0..k)
+                .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                .collect()
+        })
+        .collect()
+}
+
+/// The core differential check for one compiled shape: dense engine ≡
+/// backend dispatch ≡ (when the shape admits it) the forced NTT path,
+/// per job, outputs and report — plus job 0 against a live run.
+fn assert_differential(
+    f: &GfPrime,
+    code: &GrsCode,
+    compiled: &CompiledPlan,
+    request: AlgoRequest,
+    w: usize,
+    label: &str,
+) {
+    let k = code.k();
+    let forced = NttBackend::detect(f, &compiled.opt.matrix, &shape(code), &sink_rows(compiled))
+        .unwrap();
+    let mut rng = Rng::new((k * 31 + w) as u64);
+    for b in [1usize, 3, 32] {
+        let jobs = random_jobs(f, &mut rng, k, w, b);
+        let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
+        let dense = replay_batch_kernels(&compiled.opt, &compiled.kernels, &refs).unwrap();
+        let dispatched = compiled.replay_batch(&refs).unwrap();
+        assert_eq!(dense.len(), b);
+        for j in 0..b {
+            assert_eq!(
+                dispatched[j].outputs, dense[j].outputs,
+                "{label} B={b} job {j}: dispatched vs dense outputs"
+            );
+            assert_eq!(
+                dispatched[j].report, dense[j].report,
+                "{label} B={b} job {j}: dispatched vs dense report"
+            );
+        }
+        // Force the transform even below the cost crossover: detection
+        // is structural, so tiny K must still be bit-identical.
+        if let Some(backend) = &forced {
+            let ntt = replay_batch_ntt(&compiled.opt, backend, &refs).unwrap();
+            for j in 0..b {
+                assert_eq!(
+                    ntt[j].outputs, dense[j].outputs,
+                    "{label} B={b} job {j}: NTT vs dense outputs"
+                );
+                assert_eq!(
+                    ntt[j].report, dense[j].report,
+                    "{label} B={b} job {j}: NTT vs dense report"
+                );
+            }
+        }
+        // Live stepping on job 0 (once per shape): same outputs, same
+        // report.
+        if b == 1 {
+            let mut pl = plan(f, Some(code), None, jobs[0].clone(), 1, request).unwrap();
+            let live_report = run(&mut Sim::new(1), pl.job.as_mut()).unwrap();
+            assert_eq!(
+                dense[0].outputs,
+                pl.job.outputs(),
+                "{label}: dense vs live outputs"
+            );
+            assert_eq!(dense[0].report, live_report, "{label}: dense vs live report");
+        }
+    }
+}
+
+#[test]
+fn ntt_backend_bit_identical_across_grs_and_lagrange_shapes() {
+    let f = GfPrime::default_field();
+    // (K, R, payload width, expected compile-time backend): the policy
+    // serves dense below the op-count crossover, NTT above it.
+    for (k, r, w, expect) in [
+        (1usize, 1usize, 3usize, BackendKind::Dense),
+        (2, 3, 3, BackendKind::Dense),
+        (1024, 64, 1, BackendKind::Ntt),
+    ] {
+        let mut mrng = Rng::new((k + r) as u64);
+        let flavors: [(&str, Vec<u64>, Vec<u64>); 2] = [
+            ("lagrange", vec![1; k], vec![1; r]),
+            (
+                "grs",
+                (0..k).map(|_| mrng.below(f.order() - 1) + 1).collect(),
+                (0..r).map(|_| mrng.below(f.order() - 1) + 1).collect(),
+            ),
+        ];
+        for (flavor, u, v) in flavors {
+            let label = format!("{flavor} K={k} R={r}");
+            let code = GrsCode::ntt_friendly(&f, k, r, u, v).unwrap();
+            let compiled =
+                compile_plan(&f, Some(&code), None, 1, w, AlgoRequest::Direct, None).unwrap();
+            assert_eq!(compiled.backend.kind(), expect, "{label}: selected backend");
+            // The structural detection must succeed on every one of
+            // these shapes (the policy gate is what differs).
+            let det =
+                NttBackend::detect(&f, &compiled.opt.matrix, &shape(&code), &sink_rows(&compiled))
+                    .unwrap();
+            assert!(det.is_some(), "{label}: NTT shape must be detected");
+            // plan_profile records the decision and the op counts
+            // behind it.
+            let prof = compiled.profile(w as u64);
+            assert_eq!(prof.backend, expect, "{label}: profiled backend");
+            if expect == BackendKind::Ntt {
+                assert!(
+                    prof.backend_dense_ops
+                        >= dce::net::NTT_DENSE_OP_RATIO * prof.backend_ntt_ops,
+                    "{label}: {prof:?} must sit past the crossover"
+                );
+            }
+            assert_differential(&f, &code, &compiled, AlgoRequest::Direct, w, &label);
+        }
+    }
+}
+
+#[test]
+fn non_power_of_two_and_non_grs_shapes_fall_back_to_dense() {
+    let f = GfPrime::default_field();
+    // K = 255: plain sequential points — no root-of-unity geometry.
+    let code = GrsCode::plain(&f, (1..=255).collect(), (1000..1016).collect()).unwrap();
+    let compiled = compile_plan(&f, Some(&code), None, 1, 1, AlgoRequest::Direct, None).unwrap();
+    assert_eq!(compiled.backend.kind(), BackendKind::Dense);
+    let det = NttBackend::detect(&f, &compiled.opt.matrix, &shape(&code), &sink_rows(&compiled))
+        .unwrap();
+    assert!(det.is_none(), "K=255 must not detect as NTT-friendly");
+    assert_differential(&f, &code, &compiled, AlgoRequest::Direct, 1, "plain K=255");
+
+    // No code at all (random parity matrix): dense, trivially.
+    let parity = std::sync::Arc::new(dce::gf::Mat::random(&f, 8, 4, 7));
+    let compiled =
+        compile_plan(&f, None, Some(parity), 1, 2, AlgoRequest::Direct, None).unwrap();
+    assert_eq!(compiled.backend.kind(), BackendKind::Dense);
+}
+
+#[test]
+fn non_two_adic_fields_fall_back_to_dense() {
+    // GF(2^8): q−1 = 255 is odd — no two-adic root tower, so even a
+    // power-of-two K serves dense (and `ntt_friendly` refuses to build).
+    let f = dce::gf::Gf2e::new(8).unwrap();
+    assert!(GrsCode::ntt_friendly(&f, 8, 4, vec![1; 8], vec![1; 4]).is_err());
+    let code = GrsCode::plain(&f, (1..=8).collect(), (20..24).collect()).unwrap();
+    let compiled = compile_plan(&f, Some(&code), None, 1, 2, AlgoRequest::Direct, None).unwrap();
+    assert_eq!(compiled.backend.kind(), BackendKind::Dense);
+}
+
+#[test]
+fn rs_ntt_code_kind_serves_through_the_coordinator() {
+    use dce::coordinator::{EncodeJob, JobConfig, PlanCache};
+    // The `rs-ntt` config kind builds the NTT-friendly geometry with
+    // seeded non-unit multipliers; the cached batch path must verify
+    // against the parity oracle whichever backend serves it.
+    let cfg_text = "code = \"rs-ntt\"\nk = 16\nr = 4\nw = 3";
+    let cfg = JobConfig::parse(cfg_text).unwrap();
+    let job = EncodeJob::synthetic(cfg.clone()).unwrap();
+    let rep = job.run().unwrap();
+    assert_eq!(rep.verified, Some(true), "live rs-ntt run verifies");
+    let cache = PlanCache::new();
+    let f = job.field.clone();
+    let mut rng = Rng::new(5);
+    let jobs: Vec<Vec<Packet>> = (0..4)
+        .map(|_| {
+            (0..cfg.k)
+                .map(|_| (0..cfg.w).map(|_| rng.below(f.order())).collect())
+                .collect()
+        })
+        .collect();
+    let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
+    let batched = job.encode_batch_cached(&cache, &refs).unwrap();
+    for (x, y) in jobs.iter().zip(&batched) {
+        assert!(dce::coordinator::verify::native(&f, &job.parity, x, y));
+        assert_eq!(y, &job.encode_cached(&cache, x).unwrap());
+    }
+}

@@ -18,18 +18,21 @@ Gating rules
   the artifact of a real (non-smoke) bench run replaces it.
 * **Deterministic** fields gate unconditionally:
   - ``slots_after`` must not increase (optimizer regressions),
-  - ``recovery_exact`` and ``packed_equals_scalar`` must not flip away
-    from ``true``.
+  - ``recovery_exact``, ``packed_equals_scalar`` and
+    ``backend_equals_dense`` must not flip away from ``true``.
 * **Timing** fields gate only when *both* files were produced with
   ``smoke == false`` (a real multi-iteration run on comparable
   hardware). Smoke runs execute one iteration on shared runners — their
   timings are reported as advisory deltas, never failed on:
   - lower-is-better (fail when current > 1.30 x baseline):
     ``singles_us_per_job``, ``batch_us_per_job``, ``us_per_job``,
-    ``packed_us_per_job``;
+    ``packed_us_per_job``, ``dense_us_per_job``, ``ntt_us_per_job``;
   - higher-is-better (fail when current < baseline / 1.30):
     ``speedup``, ``recovered_per_s``, ``axpy_speedup``,
     ``lincomb_speedup``, ``gemm_speedup``.
+* ``crossover_k`` (the measured dense→NTT crossover of the K-sweep in
+  ``BENCH_ntt.json``) is **advisory**: a shift is printed as a notice,
+  never failed on — it moves with the hardware, not with regressions.
 
 Exit status: 0 when every gate passes, 1 otherwise.
 """
@@ -45,6 +48,8 @@ TIMING_LOWER_BETTER = {
     "batch_us_per_job",
     "us_per_job",
     "packed_us_per_job",
+    "dense_us_per_job",
+    "ntt_us_per_job",
 }
 TIMING_HIGHER_BETTER = {
     "speedup",
@@ -55,8 +60,11 @@ TIMING_HIGHER_BETTER = {
 }
 EXACT_LOWER_OR_EQUAL = {"slots_after"}
 # Booleans that may never flip away from true: exact erasure recovery,
-# packed-kernel/scalar bit-identity.
-EXACT_MUST_HOLD = {"recovery_exact", "packed_equals_scalar"}
+# packed-kernel/scalar bit-identity, NTT-backend/dense bit-identity.
+EXACT_MUST_HOLD = {"recovery_exact", "packed_equals_scalar", "backend_equals_dense"}
+# Numbers that move with the hardware, not with regressions: report
+# shifts as notices, never failures.
+ADVISORY_SHIFT = {"crossover_k"}
 # Keys that identify entries when aligning lists of objects.
 ALIGN_KEYS = ("name", "failed")
 
@@ -108,6 +116,10 @@ def compare_field(path, key, bv, cv, timing_gated):
     if key in EXACT_MUST_HOLD:
         if bv is True and cv is not True:
             failures.append(f"{path}: was {bv!r}, now {cv!r}")
+        return
+    if key in ADVISORY_SHIFT:
+        if bv != cv:
+            notices.append(f"advisory {path}: shifted {bv!r} -> {cv!r}")
         return
     if key in EXACT_LOWER_OR_EQUAL:
         if isinstance(bv, (int, float)) and isinstance(cv, (int, float)) and cv > bv:
