@@ -1,41 +1,62 @@
 //! Bench: **packed narrow-lane kernels vs the scalar `u64` field path**
 //! — the memory-bandwidth win of storing each wire symbol in the
-//! `⌈log2 q⌉`-sized lane the cost model already charges for.
+//! `⌈log2 q⌉`-sized lane the cost model already charges for — and, per
+//! executable **ISA tier** ([`IsaTier::available`]), the explicit-SIMD
+//! backends vs the scalar packed engine.
 //!
-//! Two sections:
+//! Three sections:
 //!
-//! * **micro** — axpy / lincomb / gemm per field, packed
+//! * **micro** — axpy / lincomb / gemm per field × tier, packed
 //!   (`gf::kernels`) vs scalar (`Field` trait over `u64`), equal inputs,
 //!   correctness asserted before any timing;
+//! * **tier gain** — packed gemm at the widest tier vs the *scalar
+//!   packed* tier (SIMD win on top of the narrow-lane win);
 //! * **batched replay** — the serving path end to end:
-//!   `replay_batch` (packed columnar arena) vs `replay_batch_scalar`
+//!   `replay_batch_kernels` per tier vs `replay_batch_scalar`
 //!   (the pre-packing `u64` engine) on a compiled universal plan at
-//!   `B = 32`.
+//!   `B = 32`, bit-identity asserted per tier before timing.
 //!
 //! Acceptance targets, asserted below (skipped under
 //! `DCE_BENCH_SMOKE=1`): **≥ 3×** per-job batched-replay throughput on
-//! `gf2e:8` (u8 lanes, 8× less traffic + nibble-split tables) and
-//! **≥ 1.5×** on the default prime 786433 (u32 lanes, 2× less traffic).
-//! Machine-readable results land in `BENCH_kernels.json` at the repo
-//! root for the CI bench-trend gate.
+//! `gf2e:8` and **≥ 1.5×** on the default prime 786433, at the widest
+//! tier; and on AVX2 hosts **≥ 2×** (`gf2e:8`) / **≥ 1.5×**
+//! (`prime:786433`) gemm over the scalar packed tier. Machine-readable
+//! results land in `BENCH_kernels.json` at the repo root for the CI
+//! bench-trend gate; entry names are `field@tier` so the trend script
+//! aligns runs per tier.
 
 use dce::framework::{compile_plan, AlgoRequest};
 use dce::gf::matrix::gemm_into;
-use dce::gf::{AnyField, Field, Kernels, Mat};
+use dce::gf::{AnyField, Field, IsaTier, Kernels, Mat};
 use dce::net::{exec, Packet};
 use dce::util::{bench, bench_iters, bench_smoke, Rng};
 use std::sync::Arc;
 
 struct MicroResult {
-    name: &'static str,
+    /// `field@tier` — unique per tier so bench-trend aligns by name.
+    name: String,
+    field: &'static str,
+    isa: &'static str,
     layout: &'static str,
     axpy_speedup: f64,
     lincomb_speedup: f64,
     gemm_speedup: f64,
+    /// Packed gemm median, µs — the cross-tier comparable number.
+    gemm_us: f64,
+}
+
+/// SIMD-tier gemm gain over the scalar *packed* tier (not the u64 path).
+struct TierGain {
+    field: &'static str,
+    isa: &'static str,
+    gemm_speedup_vs_scalar_tier: f64,
+    target: f64,
 }
 
 struct ReplayResult {
-    name: &'static str,
+    name: String,
+    field: &'static str,
+    isa: &'static str,
     layout: &'static str,
     b: usize,
     w: usize,
@@ -49,10 +70,12 @@ fn rand_vec(f: &AnyField, n: usize, rng: &mut Rng) -> Vec<u64> {
     (0..n).map(|_| rng.below(f.order())).collect()
 }
 
-fn micro(name: &'static str, iters: usize, rng: &mut Rng) -> MicroResult {
-    let f = AnyField::parse(name).unwrap();
-    let kern = Kernels::for_field(&f);
+fn micro(field: &'static str, isa: IsaTier, iters: usize, rng: &mut Rng) -> MicroResult {
+    let f = AnyField::parse(field).unwrap();
+    let kern = Kernels::for_field_with_isa(&f, isa);
+    let tier = kern.isa().name();
     let layout = kern.layout().name();
+    let tag = format!("{field}@{tier}");
     let n = 1 << 16;
     let (m, k) = (80usize, 64usize);
 
@@ -65,16 +88,16 @@ fn micro(name: &'static str, iters: usize, rng: &mut Rng) -> MicroResult {
         f.axpy_into(&mut s, c, &src);
         let mut p = kern.pack(&acc0);
         kern.axpy(&mut p, c, &kern.pack(&src)).unwrap();
-        assert_eq!(p.to_u64(), s, "{name}: packed axpy != scalar axpy");
+        assert_eq!(p.to_u64(), s, "{tag}: packed axpy != scalar axpy");
     }
     let mut acc_s = acc0.clone();
-    let axpy_scalar = bench(&format!("{name:<16} axpy scalar/u64"), iters, |_| {
+    let axpy_scalar = bench(&format!("{tag:<22} axpy scalar/u64"), iters, |_| {
         f.axpy_into(&mut acc_s, c, &src);
         acc_s[0]
     });
     let mut acc_p = kern.pack(&acc0);
     let src_p = kern.pack(&src);
-    let axpy_packed = bench(&format!("{name:<16} axpy packed/{layout}"), iters, |_| {
+    let axpy_packed = bench(&format!("{tag:<22} axpy packed/{layout}"), iters, |_| {
         kern.axpy(&mut acc_p, c, &src_p).unwrap();
         acc_p.get(0)
     });
@@ -93,16 +116,16 @@ fn micro(name: &'static str, iters: usize, rng: &mut Rng) -> MicroResult {
         f.lincomb_into(&mut s, &terms);
         let mut p = kern.zeros(n);
         kern.lincomb(&mut p, &coeffs, &arena_p).unwrap();
-        assert_eq!(p.to_u64(), s, "{name}: packed lincomb != scalar lincomb");
+        assert_eq!(p.to_u64(), s, "{tag}: packed lincomb != scalar lincomb");
     }
     let mut lin_s = vec![0u64; n];
-    let lincomb_scalar = bench(&format!("{name:<16} lincomb scalar/u64"), iters, |_| {
+    let lincomb_scalar = bench(&format!("{tag:<22} lincomb scalar/u64"), iters, |_| {
         lin_s.fill(0);
         f.lincomb_into(&mut lin_s, &terms);
         lin_s[0]
     });
     let mut lin_p = kern.zeros(n);
-    let lincomb_packed = bench(&format!("{name:<16} lincomb packed/{layout}"), iters, |_| {
+    let lincomb_packed = bench(&format!("{tag:<22} lincomb packed/{layout}"), iters, |_| {
         lin_p.fill_zero();
         kern.lincomb(&mut lin_p, &coeffs, &arena_p).unwrap();
         lin_p.get(0)
@@ -116,16 +139,16 @@ fn micro(name: &'static str, iters: usize, rng: &mut Rng) -> MicroResult {
         gemm_into(&f, m, k, &a, &arena, n, &mut s);
         let mut p = kern.zeros(m * n);
         kern.gemm_rows(&rows, &arena_p, n, &mut p, false).unwrap();
-        assert_eq!(p.to_u64(), s, "{name}: packed gemm != scalar gemm");
+        assert_eq!(p.to_u64(), s, "{tag}: packed gemm != scalar gemm");
     }
     let mut gemm_s = vec![0u64; m * n];
-    let gemm_scalar = bench(&format!("{name:<16} gemm scalar/u64"), iters, |_| {
+    let gemm_scalar = bench(&format!("{tag:<22} gemm scalar/u64"), iters, |_| {
         gemm_s.fill(0);
         gemm_into(&f, m, k, &a, &arena, n, &mut gemm_s);
         gemm_s[0]
     });
     let mut gemm_p = kern.zeros(m * n);
-    let gemm_packed = bench(&format!("{name:<16} gemm packed/{layout}"), iters, |_| {
+    let gemm_packed = bench(&format!("{tag:<22} gemm packed/{layout}"), iters, |_| {
         gemm_p.fill_zero();
         kern.gemm_rows(&rows, &arena_p, n, &mut gemm_p, false).unwrap();
         gemm_p.get(0)
@@ -142,44 +165,58 @@ fn micro(name: &'static str, iters: usize, rng: &mut Rng) -> MicroResult {
         println!("{st}");
     }
     MicroResult {
-        name,
+        name: tag,
+        field,
+        isa: tier,
         layout,
         axpy_speedup: axpy_scalar.median.as_secs_f64() / axpy_packed.median.as_secs_f64().max(1e-12),
         lincomb_speedup: lincomb_scalar.median.as_secs_f64()
             / lincomb_packed.median.as_secs_f64().max(1e-12),
         gemm_speedup: gemm_scalar.median.as_secs_f64() / gemm_packed.median.as_secs_f64().max(1e-12),
+        gemm_us: gemm_packed.median.as_secs_f64() * 1e6,
     }
 }
 
-fn batched_replay(name: &'static str, target: f64, iters: usize, rng: &mut Rng) -> ReplayResult {
-    let f = AnyField::parse(name).unwrap();
-    let kern = Kernels::for_field(&f);
-    let layout = kern.layout().name();
+fn batched_replay(
+    field: &'static str,
+    isa: IsaTier,
+    target: f64,
+    iters: usize,
+    rng: &mut Rng,
+) -> ReplayResult {
+    let f = AnyField::parse(field).unwrap();
     let (k, r, w, ports, b) = (64usize, 16usize, 256usize, 2usize, 32usize);
     let parity = Arc::new(Mat::random(&f, k, r, 0xC0DE));
     let compiled = compile_plan(&f, None, Some(parity), ports, w, AlgoRequest::Universal, None)
         .expect("compile universal plan");
     let opt = &compiled.opt;
+    let kern = compiled.kernels.with_isa(isa);
+    let tier = kern.isa().name();
+    let layout = kern.layout().name();
+    let tag = format!("{field}@{tier}");
 
     let jobs: Vec<Vec<Packet>> = (0..b)
         .map(|_| (0..k).map(|_| rand_vec(&f, w, rng)).collect())
         .collect();
     let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
 
-    // Correctness gate: packed ≡ scalar, bit for bit, before timing.
-    let packed = exec::replay_batch_kernels(opt, &compiled.kernels, &refs).unwrap();
+    // Correctness gate: this tier ≡ the u64 scalar engine, bit for bit
+    // (outputs and report), before any timing — unconditionally, smoke
+    // mode included.
+    let packed = exec::replay_batch_kernels(opt, &kern, &refs).unwrap();
     let scalar = exec::replay_batch_scalar(opt, &f, &refs).unwrap();
     for (j, (pj, sj)) in packed.iter().zip(&scalar).enumerate() {
-        assert_eq!(pj.outputs, sj.outputs, "{name} job {j}: packed != scalar");
+        assert_eq!(pj.outputs, sj.outputs, "{tag} job {j}: packed != scalar");
+        assert_eq!(pj.report, sj.report, "{tag} job {j}: packed report != scalar");
     }
 
-    let scalar_st = bench(&format!("{name:<16} replay_batch scalar/u64"), iters, |_| {
+    let scalar_st = bench(&format!("{tag:<22} replay_batch scalar/u64"), iters, |_| {
         exec::replay_batch_scalar(opt, &f, &refs).unwrap().len()
     });
     let packed_st = bench(
-        &format!("{name:<16} replay_batch packed/{layout}"),
+        &format!("{tag:<22} replay_batch packed/{layout}"),
         iters,
-        |_| exec::replay_batch_kernels(opt, &compiled.kernels, &refs).unwrap().len(),
+        |_| exec::replay_batch_kernels(opt, &kern, &refs).unwrap().len(),
     );
     println!("{scalar_st}");
     println!("{packed_st}");
@@ -187,11 +224,13 @@ fn batched_replay(name: &'static str, target: f64, iters: usize, rng: &mut Rng) 
     let packed_us = packed_st.median.as_secs_f64() * 1e6 / b as f64;
     let speedup = scalar_st.median.as_secs_f64() / packed_st.median.as_secs_f64().max(1e-12);
     println!(
-        "{name}: per-job scalar {scalar_us:.2}us  packed {packed_us:.2}us  \
-         speedup {speedup:.2}x (target >= {target}x)"
+        "{tag}: per-job scalar {scalar_us:.2}us  packed {packed_us:.2}us  \
+         speedup {speedup:.2}x (target >= {target}x at widest tier)"
     );
     ReplayResult {
-        name,
+        name: tag,
+        field,
+        isa: tier,
         layout,
         b,
         w,
@@ -205,31 +244,62 @@ fn batched_replay(name: &'static str, target: f64, iters: usize, rng: &mut Rng) 
 fn main() {
     let iters = bench_iters(20);
     let mut rng = Rng::new(0x5EED);
-    println!("## packed-symbol kernels vs scalar u64 ({iters} rounds)");
+    let tiers = IsaTier::available();
+    let widest = IsaTier::widest();
+    let tier_names: Vec<&str> = tiers.iter().map(|t| t.name()).collect();
+    println!("## packed-symbol kernels vs scalar u64 ({iters} rounds; tiers {tier_names:?})");
 
-    let micro_results: Vec<MicroResult> = ["gf2e:8", "gf2e:12", "prime:786433", "prime:2147483647"]
-        .into_iter()
-        .map(|name| micro(name, iters, &mut rng))
-        .collect();
+    let fields = ["gf2e:8", "gf2e:12", "prime:786433", "prime:2147483647"];
+    let mut micro_results: Vec<MicroResult> = Vec::new();
+    for &field in &fields {
+        for &tier in &tiers {
+            micro_results.push(micro(field, tier, iters, &mut rng));
+        }
+    }
     for m in &micro_results {
         println!(
-            "{:<18} [{:>3}] axpy {:>5.2}x  lincomb {:>5.2}x  gemm {:>5.2}x",
-            m.name, m.layout, m.axpy_speedup, m.lincomb_speedup, m.gemm_speedup
+            "{:<24} [{:>3}] axpy {:>5.2}x  lincomb {:>5.2}x  gemm {:>5.2}x  ({:>8.1}us gemm)",
+            m.name, m.layout, m.axpy_speedup, m.lincomb_speedup, m.gemm_speedup, m.gemm_us
         );
     }
 
-    println!("\n## batched replay, packed vs scalar (B=32)");
-    let replay_results: Vec<ReplayResult> = [("gf2e:8", 3.0), ("prime:786433", 1.5)]
+    // SIMD gain over the scalar packed tier, per hot field.
+    println!("\n## widest tier ({}) vs scalar packed tier, gemm", widest.name());
+    let gains: Vec<TierGain> = [("gf2e:8", 2.0f64), ("prime:786433", 1.5)]
         .into_iter()
-        .map(|(name, target)| batched_replay(name, target, iters, &mut rng))
+        .map(|(field, target)| {
+            let gemm_us = |isa: &str| {
+                micro_results
+                    .iter()
+                    .find(|m| m.field == field && m.isa == isa)
+                    .map(|m| m.gemm_us)
+                    .expect("micro result for every field × tier")
+            };
+            let gain = gemm_us("scalar") / gemm_us(widest.name()).max(1e-9);
+            println!("{field:<18} {gain:>5.2}x (target >= {target}x on avx2 hosts)");
+            TierGain {
+                field,
+                isa: widest.name(),
+                gemm_speedup_vs_scalar_tier: gain,
+                target,
+            }
+        })
         .collect();
 
-    write_json(&micro_results, &replay_results);
+    println!("\n## batched replay, packed vs scalar (B=32)");
+    let mut replay_results: Vec<ReplayResult> = Vec::new();
+    for (field, target) in [("gf2e:8", 3.0), ("prime:786433", 1.5)] {
+        for &tier in &tiers {
+            replay_results.push(batched_replay(field, tier, target, iters, &mut rng));
+        }
+    }
+
+    write_json(&tier_names, &micro_results, &gains, &replay_results);
 
     if bench_smoke() {
         println!("(smoke mode: timing assertions skipped)");
     } else {
-        for r in &replay_results {
+        for r in replay_results.iter().filter(|r| r.isa == widest.name()) {
             assert!(
                 r.speedup >= r.target,
                 "{}: packed batched replay must reach >= {}x over the scalar u64 \
@@ -240,21 +310,57 @@ fn main() {
                 r.speedup
             );
         }
+        if widest == IsaTier::Avx2 {
+            for g in &gains {
+                assert!(
+                    g.gemm_speedup_vs_scalar_tier >= g.target,
+                    "{}: avx2 gemm must reach >= {}x over the scalar packed tier, got {:.2}x",
+                    g.field,
+                    g.target,
+                    g.gemm_speedup_vs_scalar_tier
+                );
+            }
+        } else {
+            println!(
+                "(widest tier is {}, not avx2: tier-gain targets not asserted)",
+                widest.name()
+            );
+        }
     }
     println!("\nkernels bench complete");
 }
 
 /// Emit `BENCH_kernels.json` at the repo root (manifest dir's parent).
-fn write_json(micro: &[MicroResult], replay: &[ReplayResult]) {
+fn write_json(tiers: &[&str], micro: &[MicroResult], gains: &[TierGain], replay: &[ReplayResult]) {
     let micro_json: Vec<String> = micro
         .iter()
         .map(|m| {
             format!(
                 concat!(
-                    "{{\"name\":\"{}\",\"layout\":\"{}\",\"axpy_speedup\":{:.3},",
-                    "\"lincomb_speedup\":{:.3},\"gemm_speedup\":{:.3}}}"
+                    "{{\"name\":\"{}\",\"field\":\"{}\",\"isa\":\"{}\",\"layout\":\"{}\",",
+                    "\"axpy_speedup\":{:.3},\"lincomb_speedup\":{:.3},\"gemm_speedup\":{:.3},",
+                    "\"gemm_us\":{:.3}}}"
                 ),
-                m.name, m.layout, m.axpy_speedup, m.lincomb_speedup, m.gemm_speedup
+                m.name,
+                m.field,
+                m.isa,
+                m.layout,
+                m.axpy_speedup,
+                m.lincomb_speedup,
+                m.gemm_speedup,
+                m.gemm_us
+            )
+        })
+        .collect();
+    let gain_json: Vec<String> = gains
+        .iter()
+        .map(|g| {
+            format!(
+                concat!(
+                    "{{\"name\":\"{}@simd-gain\",\"field\":\"{}\",\"isa\":\"{}\",",
+                    "\"gemm_speedup_vs_scalar_tier\":{:.3},\"target\":{}}}"
+                ),
+                g.field, g.field, g.isa, g.gemm_speedup_vs_scalar_tier, g.target
             )
         })
         .collect();
@@ -263,22 +369,36 @@ fn write_json(micro: &[MicroResult], replay: &[ReplayResult]) {
         .map(|r| {
             format!(
                 concat!(
-                    "{{\"name\":\"{}\",\"layout\":\"{}\",\"batch\":{},\"w\":{},",
+                    "{{\"name\":\"{}\",\"field\":\"{}\",\"isa\":\"{}\",\"layout\":\"{}\",",
+                    "\"batch\":{},\"w\":{},",
                     "\"scalar_us_per_job\":{:.3},\"packed_us_per_job\":{:.3},",
                     "\"speedup\":{:.3},\"target\":{}}}"
                 ),
-                r.name, r.layout, r.b, r.w, r.scalar_us_per_job, r.packed_us_per_job, r.speedup,
+                r.name,
+                r.field,
+                r.isa,
+                r.layout,
+                r.b,
+                r.w,
+                r.scalar_us_per_job,
+                r.packed_us_per_job,
+                r.speedup,
                 r.target
             )
         })
         .collect();
+    let tiers_json: Vec<String> = tiers.iter().map(|t| format!("\"{t}\"")).collect();
     let json = format!(
         concat!(
             "{{\"bench\":\"kernels\",\"smoke\":{},\"packed_equals_scalar\":true,",
-            "\"micro\":[{}],\"replay\":[{}]}}"
+            "\"simd_equals_scalar\":true,\"isa_tier\":\"{}\",\"tiers\":[{}],",
+            "\"micro\":[{}],\"simd\":[{}],\"replay\":[{}]}}"
         ),
         bench_smoke(),
+        IsaTier::detect().name(),
+        tiers_json.join(","),
         micro_json.join(","),
+        gain_json.join(","),
         replay_json.join(",")
     );
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

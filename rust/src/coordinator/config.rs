@@ -100,6 +100,12 @@ pub struct JobConfig {
     pub verify: VerifyMode,
     pub seed: u64,
     pub artifacts_dir: PathBuf,
+    /// Optional kernel ISA-tier override
+    /// (`isa = "scalar" | "avx2" | "neon" | "native"`). `None` serves at
+    /// the process default ([`IsaTier::detect`](crate::gf::IsaTier):
+    /// `DCE_FORCE_ISA` when set, else the widest tier the host
+    /// supports); an unsupported explicit request degrades to scalar.
+    pub isa: Option<crate::gf::IsaRequest>,
 }
 
 impl Default for JobConfig {
@@ -117,6 +123,7 @@ impl Default for JobConfig {
             verify: VerifyMode::Native,
             seed: 42,
             artifacts_dir: "artifacts".into(),
+            isa: None,
         }
     }
 }
@@ -151,6 +158,7 @@ impl JobConfig {
                 "verify" => cfg.verify = v.parse()?,
                 "seed" => cfg.seed = v.parse()?,
                 "artifacts_dir" => cfg.artifacts_dir = v.into(),
+                "isa" => cfg.isa = Some(v.parse()?),
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
             Ok(())
@@ -215,6 +223,7 @@ mod tests {
             algorithm = "universal"
             verify = "off"
             seed = 7
+            isa = "scalar"
             "#,
         )
         .unwrap();
@@ -223,7 +232,23 @@ mod tests {
         assert_eq!(cfg.code, CodeKind::RsPlain);
         assert_eq!(cfg.algorithm, AlgoRequest::Universal);
         assert_eq!(cfg.verify, VerifyMode::Off);
+        assert_eq!(cfg.isa, Some(crate::gf::IsaRequest::Scalar));
         assert_eq!(cfg.cost_model().unwrap().q_bits, 17);
+    }
+
+    #[test]
+    fn isa_key_defaults_to_none_and_rejects_junk_tiers() {
+        assert_eq!(JobConfig::default().isa, None);
+        assert_eq!(JobConfig::parse("k = 4").unwrap().isa, None);
+        for (v, want) in [
+            ("native", crate::gf::IsaRequest::Native),
+            ("avx2", crate::gf::IsaRequest::Avx2),
+            ("neon", crate::gf::IsaRequest::Neon),
+        ] {
+            let cfg = JobConfig::parse(&format!("isa = \"{v}\"")).unwrap();
+            assert_eq!(cfg.isa, Some(want));
+        }
+        assert!(JobConfig::parse("isa = \"sse9\"").is_err());
     }
 
     #[test]

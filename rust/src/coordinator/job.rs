@@ -228,6 +228,7 @@ impl EncodeJob {
             seed: self.config.seed,
             parity_fp: super::plan_cache::parity_fingerprint(&self.parity),
             choice,
+            isa: self.config.isa,
         };
         let _ = self.plan_key_memo.set(key.clone());
         Ok(key)
@@ -237,7 +238,7 @@ impl EncodeJob {
     pub fn compiled(&self, cache: &PlanCache) -> anyhow::Result<Arc<CompiledPlan>> {
         let key = self.plan_key()?;
         cache.get_or_compile(&key, || {
-            crate::framework::compile_plan(
+            let compiled = crate::framework::compile_plan(
                 &self.field,
                 self.code.as_ref(),
                 Some(self.parity.clone()),
@@ -245,7 +246,14 @@ impl EncodeJob {
                 self.config.w,
                 self.config.algorithm,
                 Some(self.config.cost_model()?),
-            )
+            )?;
+            // Apply the job's explicit ISA request (clamped to what this
+            // host can execute); `None` keeps the process-default tier
+            // `compile_plan` already resolved.
+            Ok(match self.config.isa {
+                Some(req) => compiled.with_isa(crate::gf::IsaTier::resolve(req)),
+                None => compiled,
+            })
         })
     }
 

@@ -33,6 +33,12 @@ pub const RECOVERY_LATENCY: &str = "recovery_latency";
 /// [`LayoutMismatch`](crate::gf::kernels::LayoutMismatch), not a
 /// worker-killing panic).
 pub const KERNEL_LAYOUT_REJECTS: &str = "kernel_layout_rejects";
+/// Counter-name prefix: plans compiled per resolved kernel ISA tier.
+/// The full counter is `plans_compiled_isa_<tier>` with `<tier>` an
+/// [`IsaTier::name`](crate::gf::IsaTier::name) label (`scalar`, `avx2`,
+/// `neon`) — one bump per fresh compile, so the metrics summary shows
+/// which SIMD backend the serving path actually resolved to.
+pub const PLANS_COMPILED_ISA_PREFIX: &str = "plans_compiled_isa_";
 
 /// A set of named counters and latency recorders.
 #[derive(Debug, Default)]

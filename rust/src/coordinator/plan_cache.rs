@@ -51,6 +51,11 @@ pub struct PlanKey {
     pub parity_fp: u64,
     /// The *resolved* algorithm (post-`Auto`).
     pub choice: PlanChoice,
+    /// The job's explicit kernel ISA request, if any (`None` = process
+    /// default). Keyed on the *request*, not the resolved tier: two
+    /// configs asking for different tiers must not share a plan object,
+    /// since the tier is baked into the compiled plan's kernel vtable.
+    pub isa: Option<crate::gf::IsaRequest>,
 }
 
 /// Positional FNV-1a fingerprint of a parity matrix (shape + every
@@ -108,6 +113,12 @@ impl PlanCache {
         }
         self.metrics.plan_cache_miss();
         let fresh = Arc::new(compile()?);
+        let tier = format!(
+            "{}{}",
+            super::metrics::PLANS_COMPILED_ISA_PREFIX,
+            fresh.kernels.isa().name()
+        );
+        self.metrics.incr(&tier, 1);
         let mut guard = self.inner.lock().unwrap();
         let entry = guard.entry(key.clone()).or_insert(fresh);
         Ok(entry.clone())
@@ -149,6 +160,7 @@ mod tests {
             seed: 42,
             parity_fp: 7,
             choice: PlanChoice::Universal,
+            isa: None,
         }
     }
 
@@ -200,6 +212,15 @@ mod tests {
         assert_eq!(compiles, 2);
         assert_eq!(cache.len(), 2);
         assert_eq!(cache.stats(), (2, 2)); // 2 hits on the k=8 key
+        // Both fresh compiles bumped the resolved-tier counter; hits
+        // did not.
+        let plan = cache.get_or_compile(&key(8), || unreachable!()).unwrap();
+        let counter = format!(
+            "{}{}",
+            crate::coordinator::metrics::PLANS_COMPILED_ISA_PREFIX,
+            plan.kernels.isa().name()
+        );
+        assert_eq!(cache.metrics().counter(&counter), 2);
     }
 
     #[test]

@@ -460,13 +460,17 @@ fn serve_batch(
             Err(e) => {
                 // Group-level failure: every request in the width group
                 // carries the error (anyhow errors don't clone — each
-                // reply gets the formatted chain). A kernel layout
-                // mismatch — a plan paired with buffers packed for a
-                // different field — used to panic the batcher thread; it
-                // is now a typed rejection with its own counter.
-                if e.chain()
-                    .any(|c| c.downcast_ref::<crate::gf::kernels::LayoutMismatch>().is_some())
-                {
+                // reply gets the formatted chain). A kernel layout or
+                // arena-shape mismatch — a plan paired with buffers
+                // packed for a different field, or mis-sized arenas —
+                // used to panic the batcher thread; it is now a typed
+                // rejection ([`KernelError`]) with its own counter.
+                //
+                // [`KernelError`]: crate::gf::kernels::KernelError
+                if e.chain().any(|c| {
+                    c.downcast_ref::<crate::gf::kernels::LayoutMismatch>().is_some()
+                        || c.downcast_ref::<crate::gf::kernels::KernelError>().is_some()
+                }) {
                     metrics.incr(super::metrics::KERNEL_LAYOUT_REJECTS, idxs.len() as u64);
                 }
                 let msg = format!("{e:#}");

@@ -139,6 +139,12 @@ pub struct PlanProfile {
     /// detected, so the gate never ran.
     pub backend_dense_ops: usize,
     pub backend_ntt_ops: usize,
+    /// The ISA tier the plan's packed kernels dispatch to (`"scalar"`,
+    /// `"avx2"`, `"neon"`). A bare [`plan_profile`] reports scalar;
+    /// [`CompiledPlan::profile`](super::CompiledPlan::profile) reports
+    /// the tier the compiled vtable actually resolved
+    /// ([`Kernels::isa`](crate::gf::kernels::Kernels::isa)).
+    pub isa: &'static str,
 }
 
 /// Profile a plan at payload width `w`: its `(C1, C2)` statics plus the
@@ -154,6 +160,7 @@ pub fn plan_profile(plan: &crate::net::plan::Plan, w: u64) -> PlanProfile {
         backend: crate::net::opt::BackendKind::Dense,
         backend_dense_ops: 0,
         backend_ntt_ops: 0,
+        isa: "scalar",
     }
 }
 

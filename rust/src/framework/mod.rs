@@ -130,8 +130,9 @@ impl CompiledPlan {
     }
 
     /// The plan's [`PlanProfile`](costs::PlanProfile) at payload width
-    /// `w`: communication statics, optimizer statics, and the chosen
-    /// encode backend with the op counts behind the crossover decision.
+    /// `w`: communication statics, optimizer statics, the chosen encode
+    /// backend with the op counts behind the crossover decision, and
+    /// the ISA tier the plan's kernels dispatch to.
     pub fn profile(&self, w: u64) -> costs::PlanProfile {
         let mut prof = costs::plan_profile(&self.plan, w);
         prof.backend = self.backend.kind();
@@ -139,7 +140,19 @@ impl CompiledPlan {
             prof.backend_dense_ops = b.dense_ops();
             prof.backend_ntt_ops = b.ntt_ops();
         }
+        prof.isa = self.kernels.isa().name();
         prof
+    }
+
+    /// This plan re-pinned to an explicit kernel ISA tier — the
+    /// coordinator applies a job's `isa = "…"` config override here,
+    /// right after compile. The tier is clamped to host support
+    /// ([`IsaTier::clamp_supported`](crate::gf::simd::IsaTier)), so a
+    /// forced `avx2` on a non-AVX2 host degrades to scalar, never to an
+    /// illegal instruction.
+    pub fn with_isa(mut self, isa: crate::gf::simd::IsaTier) -> Self {
+        self.kernels = self.kernels.with_isa(isa);
+        self
     }
 
     /// Degraded batched replay through this compiled schedule: the

@@ -84,6 +84,25 @@ impl Gf2e {
     pub(crate) fn exp_at(&self, i: u32) -> u16 {
         self.t.exp[i as usize]
     }
+
+    /// SIMD-gather hook: the whole log table, one `u32` entry per field
+    /// element. `log[0]` is an unused-but-zero slot, so a vector gather
+    /// over a block of symbols that happens to contain zeros stays in
+    /// bounds (`0 + log c ≤ 2^w − 2`); the gathered garbage product is
+    /// masked off by the caller.
+    #[inline(always)]
+    pub(crate) fn log_table(&self) -> &[u32] {
+        &self.t.log
+    }
+
+    /// SIMD-gather hook: the doubled exp table (`len = 2(2^w − 1) + 2`).
+    /// The largest index any log-sum gather can form is `2(2^w − 2)`,
+    /// so even a 32-bit gather of this `u16` table's last reachable
+    /// entry reads inside the allocation — no padding lane needed.
+    #[inline(always)]
+    pub(crate) fn exp_table(&self) -> &[u16] {
+        &self.t.exp
+    }
 }
 
 impl Field for Gf2e {

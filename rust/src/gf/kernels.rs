@@ -18,14 +18,18 @@
 //!   `gemm_rows` over packed slices with *monomorphic* inner loops — no
 //!   per-element [`AnyField`] dispatch anywhere on the hot path.
 //!
-//! Kernel selection:
+//! Kernel selection (scalar column = the portable loops, always
+//! compiled; the [`IsaTier`](crate::gf::simd::IsaTier) resolved with the
+//! vtable upgrades the inner step to an explicit vector path from
+//! [`crate::gf::simd`] where one exists — same exact field values, see
+//! the bit-identity note below):
 //!
-//! | field | layout | inner loop |
-//! |---|---|---|
-//! | `GF(2^w)`, `w ≤ 8` | `u8` | two 16×256 nibble-split product tables (8 KB, L1-resident): `c·x = lo[c&15][x] ⊕ hi[c≫4][x]` — one XOR of two byte loads per element, autovectorization-friendly |
-//! | `GF(2^w)`, `8 < w ≤ 16` | `u16` | hoisted-log axpy (`log c` read once per row) over `u16` lanes |
-//! | `F_p` (`p < 2^31`) | from `bits()` | delayed reduction: raw `c·s` products accumulate in a `u64` scratch tile, one Barrett pass per [`Field::lazy_chunk`] terms, lanes only loaded/stored narrow |
-//! | anything else | `u64` | the [`Field`] trait's own fused kernels, behind one virtual call per row |
+//! | field | layout | scalar inner loop | vector inner loop |
+//! |---|---|---|---|
+//! | `GF(2^w)`, `w ≤ 8` | `u8` | two 16×256 nibble-split product tables (8 KB, L1-resident): `c·x = lo[c&15][x] ⊕ hi[c≫4][x]` — one XOR of two byte loads per element | AVX2 `vpshufb` / NEON `vqtbl1q_u8` over 16-entry operand-nibble tables: 32 (16) products per step |
+//! | `GF(2^w)`, `8 < w ≤ 16` | `u16` | hoisted-log axpy (`log c` read once per row) over `u16` lanes | AVX2 gathered log/exp lanes, 16 symbols per step |
+//! | `F_p` (`p < 2^31`) | from `bits()` | delayed reduction: raw `c·s` products accumulate in a `u64` scratch tile, one Barrett pass per [`Field::lazy_chunk`] terms, lanes only loaded/stored narrow | AVX2 `u64x4` fma tiles for the scratch accumulation ([`Lane::fma_wide`]); reductions stay scalar |
+//! | anything else | `u64` | the [`Field`] trait's own fused kernels, behind one virtual call per row | — (tier pinned to scalar) |
 //!
 //! **Bit-identity.** Every kernel computes the exact field value of the
 //! same linear combination, and canonical representatives are unique —
@@ -36,6 +40,7 @@
 //! through `replay_batch` for every A2A variant.
 
 use super::matrix::GEMM_TILE;
+use super::simd::IsaTier;
 use super::{AnyField, Field, Gf2e, GfPrime};
 use std::sync::Arc;
 
@@ -86,10 +91,24 @@ impl SymbolLayout {
 trait Lane: Copy + Send + Sync + 'static {
     fn to_u64(self) -> u64;
     fn from_u64(x: u64) -> Self;
+
+    /// `scratch[j] += c·src[j]` with lanes widened into the `u64`
+    /// delayed-reduction scratch — the inner step of [`prime_gemm_row`].
+    /// The default is the portable loop; the narrow lanes override it
+    /// with an explicit AVX2 tile behind the given ISA tier. Either way
+    /// the per-lane adds are the same exact integers in the same order,
+    /// so delayed-reduction results stay bit-identical across tiers.
+    #[inline(always)]
+    fn fma_wide(isa: IsaTier, scratch: &mut [u64], c: u64, src: &[Self]) {
+        let _ = isa;
+        for (s, &x) in scratch.iter_mut().zip(src) {
+            *s += c * x.to_u64();
+        }
+    }
 }
 
 macro_rules! impl_lane_narrow {
-    ($($t:ty),*) => {$(
+    ($($t:ty => $fma:ident),*) => {$(
         impl Lane for $t {
             #[inline(always)]
             fn to_u64(self) -> u64 {
@@ -100,10 +119,22 @@ macro_rules! impl_lane_narrow {
                 debug_assert!(x <= <$t>::MAX as u64, "non-canonical symbol {x}");
                 x as $t
             }
+            #[cfg(target_arch = "x86_64")]
+            fn fma_wide(isa: IsaTier, scratch: &mut [u64], c: u64, src: &[Self]) {
+                if isa == IsaTier::Avx2 && src.len() >= 4 {
+                    // SAFETY: the Avx2 tier is only constructed after
+                    // runtime detection (`IsaTier::clamp_supported`).
+                    unsafe { crate::gf::simd::x86::$fma(scratch, c, src) };
+                    return;
+                }
+                for (s, &x) in scratch.iter_mut().zip(src) {
+                    *s += c * x as u64;
+                }
+            }
         }
     )*};
 }
-impl_lane_narrow!(u8, u16, u32);
+impl_lane_narrow!(u8 => prime_fma_u8_avx2, u16 => prime_fma_u16_avx2, u32 => prime_fma_u32_avx2);
 
 impl Lane for u64 {
     #[inline(always)]
@@ -266,6 +297,16 @@ impl PackedBuf {
             PackedData::U64(v) => v.extend_from_slice(src),
         }
     }
+
+    /// Append `n` zero symbols — stride padding for tile-aligned rows.
+    pub fn extend_zeros(&mut self, n: usize) {
+        match &mut self.data {
+            PackedData::U8(v) => v.resize(v.len() + n, 0),
+            PackedData::U16(v) => v.resize(v.len() + n, 0),
+            PackedData::U32(v) => v.resize(v.len() + n, 0),
+            PackedData::U64(v) => v.resize(v.len() + n, 0),
+        }
+    }
 }
 
 /// Object-safe escape hatch for fields without a specialized kernel:
@@ -334,7 +375,24 @@ impl Gf2eNibble {
         )
     }
 
-    fn axpy(&self, acc: &mut [u8], c: u64, src: &[u8]) {
+    /// The 16-entry **operand-nibble** tables of one coefficient `c`:
+    /// `tlo[j] = c·j` and `thi[j] = c·(j≪4)`, folded out of the two
+    /// coefficient-nibble table rows (`c·x = lo[x] ⊕ hi[x]`, evaluated
+    /// at `x = j` and `x = j≪4`). These are the byte-shuffle operands of
+    /// the SIMD axpy: `c·s = tlo[s & 15] ⊕ thi[s ≫ 4]`. For `w < 8` the
+    /// out-of-field entries are zero and never indexed by valid lanes.
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    fn operand_tables(lo: &[u8], hi: &[u8]) -> ([u8; 16], [u8; 16]) {
+        let mut tlo = [0u8; 16];
+        let mut thi = [0u8; 16];
+        for j in 0..16 {
+            tlo[j] = lo[j] ^ hi[j];
+            thi[j] = lo[j << 4] ^ hi[j << 4];
+        }
+        (tlo, thi)
+    }
+
+    fn axpy(&self, isa: IsaTier, acc: &mut [u8], c: u64, src: &[u8]) {
         debug_assert_eq!(acc.len(), src.len());
         if c == 0 {
             return;
@@ -346,13 +404,29 @@ impl Gf2eNibble {
             return;
         }
         let (lo, hi) = self.tables(c as usize);
+        #[cfg(target_arch = "x86_64")]
+        if isa == IsaTier::Avx2 && acc.len() >= 32 {
+            let (tlo, thi) = Self::operand_tables(lo, hi);
+            // SAFETY: the Avx2 tier is only constructed after runtime
+            // detection (`IsaTier::clamp_supported`).
+            unsafe { crate::gf::simd::x86::gf256_axpy_avx2(acc, src, &tlo, &thi) };
+            return;
+        }
+        #[cfg(target_arch = "aarch64")]
+        if isa == IsaTier::Neon && acc.len() >= 16 {
+            let (tlo, thi) = Self::operand_tables(lo, hi);
+            // SAFETY: NEON is baseline on aarch64.
+            unsafe { crate::gf::simd::neon::gf256_axpy_neon(acc, src, &tlo, &thi) };
+            return;
+        }
+        let _ = isa;
         for (a, &s) in acc.iter_mut().zip(src) {
             *a ^= lo[s as usize] ^ hi[s as usize];
         }
     }
 
-    fn gemm_row(&self, coeffs: &[u64], b: &[u8], n: usize, out: &mut [u8]) {
-        gemm_row_tiled(coeffs, b, n, out, |o, c, s| self.axpy(o, c, s));
+    fn gemm_row(&self, isa: IsaTier, coeffs: &[u64], b: &[u8], n: usize, out: &mut [u8]) {
+        gemm_row_tiled(coeffs, b, n, out, |o, c, s| self.axpy(isa, o, c, s));
     }
 }
 
@@ -381,13 +455,25 @@ fn gemm_row_tiled<L>(
     }
 }
 
-/// `GF(2^w)`, `8 < w ≤ 16`: hoisted-log axpy over `u16` lanes.
-fn gf2e_wide_axpy(g: &Gf2e, acc: &mut [u16], c: u64, src: &[u16]) {
+/// `GF(2^w)`, `8 < w ≤ 16`: hoisted-log axpy over `u16` lanes. The AVX2
+/// tier gathers the log/exp lookups 16 symbols at a time; products are
+/// the same exact table entries either way.
+fn gf2e_wide_axpy(g: &Gf2e, isa: IsaTier, acc: &mut [u16], c: u64, src: &[u16]) {
     debug_assert_eq!(acc.len(), src.len());
     if c == 0 {
         return;
     }
     let log_c = g.log_of(c);
+    #[cfg(target_arch = "x86_64")]
+    if isa == IsaTier::Avx2 && acc.len() >= 16 {
+        // SAFETY: the Avx2 tier is only constructed after runtime
+        // detection; the table layout contract is the Gf2e one.
+        unsafe {
+            crate::gf::simd::x86::gf2e_wide_axpy_avx2(acc, src, g.log_table(), g.exp_table(), log_c)
+        };
+        return;
+    }
+    let _ = isa;
     for (a, &s) in acc.iter_mut().zip(src) {
         if s != 0 {
             *a ^= g.exp_at(log_c + g.log_of(s as u64));
@@ -395,8 +481,15 @@ fn gf2e_wide_axpy(g: &Gf2e, acc: &mut [u16], c: u64, src: &[u16]) {
     }
 }
 
-fn gf2e_wide_gemm_row(g: &Gf2e, coeffs: &[u64], b: &[u16], n: usize, out: &mut [u16]) {
-    gemm_row_tiled(coeffs, b, n, out, |o, c, s| gf2e_wide_axpy(g, o, c, s));
+fn gf2e_wide_gemm_row(
+    g: &Gf2e,
+    isa: IsaTier,
+    coeffs: &[u64],
+    b: &[u16],
+    n: usize,
+    out: &mut [u16],
+) {
+    gemm_row_tiled(coeffs, b, n, out, |o, c, s| gf2e_wide_axpy(g, isa, o, c, s));
 }
 
 /// Prime-field fused axpy over narrow lanes: `a + c·s < p²`, one Barrett
@@ -415,8 +508,17 @@ fn prime_axpy<L: Lane>(p: &GfPrime, acc: &mut [L], c: u64, src: &[L]) {
 /// products accumulate in a `u64` scratch tile, one `reduce_wide` pass
 /// per [`Field::lazy_chunk`] terms (the same overflow discipline as
 /// [`Field::lincomb_into`]: `acc < p` plus `lazy_chunk·(p−1)²` never
-/// wraps), lanes only touched narrow on load and final store.
-fn prime_gemm_row<L: Lane>(p: &GfPrime, coeffs: &[u64], b: &[L], n: usize, out: &mut [L]) {
+/// wraps), lanes only touched narrow on load and final store. The ISA
+/// tier upgrades only the fma accumulation ([`Lane::fma_wide`]); the
+/// reduction schedule is tier-independent, so results are bit-identical.
+fn prime_gemm_row<L: Lane>(
+    p: &GfPrime,
+    isa: IsaTier,
+    coeffs: &[u64],
+    b: &[L],
+    n: usize,
+    out: &mut [L],
+) {
     debug_assert_eq!(out.len(), n);
     debug_assert_eq!(b.len(), coeffs.len() * n);
     let nz: Vec<(u64, usize)> = coeffs
@@ -439,9 +541,7 @@ fn prime_gemm_row<L: Lane>(p: &GfPrime, coeffs: &[u64], b: &[L], n: usize, out: 
         }
         for group in nz.chunks(chunk) {
             for &(c, k) in group {
-                for (s, x) in sc.iter_mut().zip(b[k * n + j0..k * n + j1].iter()) {
-                    *s += c * x.to_u64();
-                }
+                L::fma_wide(isa, sc, c, &b[k * n + j0..k * n + j1]);
             }
             for s in sc.iter_mut() {
                 *s = p.reduce_wide(*s);
@@ -474,11 +574,14 @@ impl std::fmt::Debug for Impl {
 }
 
 /// The per-field kernel vtable (see module docs). Resolve once per plan
-/// with [`Kernels::for_field`]; every method then runs monomorphic
-/// narrow-lane loops with no per-element field dispatch.
+/// with [`Kernels::for_field`] (or a pinned tier with
+/// [`Kernels::for_field_with_isa`]); every method then runs monomorphic
+/// narrow-lane loops with no per-element field dispatch, vectorized at
+/// the resolved [`IsaTier`].
 #[derive(Clone, Debug)]
 pub struct Kernels {
     imp: Impl,
+    isa: IsaTier,
 }
 
 /// A packed buffer whose lane layout does not match the field the
@@ -510,6 +613,88 @@ impl std::fmt::Display for LayoutMismatch {
 
 impl std::error::Error for LayoutMismatch {}
 
+/// A packed operand whose lane *count* does not match what the call
+/// shape requires — the typed form of the arena-shape `assert_eq!`s
+/// that used to abort the batch worker. `what` names the violated
+/// contract in the kernel's own vocabulary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShapeMismatch {
+    /// Which shape contract was violated (e.g. `"axpy operand lanes"`).
+    pub what: &'static str,
+    /// The lane count the call shape requires.
+    pub expected: usize,
+    /// The lane count actually supplied.
+    pub got: usize,
+}
+
+impl std::fmt::Display for ShapeMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "packed {}: expected {} lanes, got {}",
+            self.what, self.expected, self.got
+        )
+    }
+}
+
+impl std::error::Error for ShapeMismatch {}
+
+/// Everything a packed kernel call can reject at its boundary — wrong
+/// lane layout or wrong lane count — as a recoverable error. The
+/// serving path (`replay_batch`, the coordinator's batch worker) counts
+/// these as rejected jobs instead of panicking; `source()` exposes the
+/// inner struct so existing `anyhow` chain downcasts to
+/// [`LayoutMismatch`] keep working.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelError {
+    Layout(LayoutMismatch),
+    Shape(ShapeMismatch),
+}
+
+impl std::fmt::Display for KernelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KernelError::Layout(e) => e.fmt(f),
+            KernelError::Shape(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for KernelError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            KernelError::Layout(e) => Some(e),
+            KernelError::Shape(e) => Some(e),
+        }
+    }
+}
+
+impl From<LayoutMismatch> for KernelError {
+    fn from(e: LayoutMismatch) -> Self {
+        KernelError::Layout(e)
+    }
+}
+
+impl From<ShapeMismatch> for KernelError {
+    fn from(e: ShapeMismatch) -> Self {
+        KernelError::Shape(e)
+    }
+}
+
+/// `Ok(())` when a call-shape contract holds, the typed error otherwise.
+fn check_shape(what: &'static str, expected: usize, got: usize) -> Result<(), KernelError> {
+    if expected == got {
+        Ok(())
+    } else {
+        Err(ShapeMismatch {
+            what,
+            expected,
+            got,
+        }
+        .into())
+    }
+}
+
 /// Run `body(i, row_i)` over the `n`-lane rows of `out`, rayon-parallel
 /// when `par` (and the `parallel` feature) is on.
 fn row_loop<T: Send>(out: &mut [T], n: usize, par: bool, body: impl Fn(usize, &mut [T]) + Sync + Send) {
@@ -527,43 +712,70 @@ fn row_loop<T: Send>(out: &mut [T], n: usize, par: bool, body: impl Fn(usize, &m
 
 impl Kernels {
     /// Resolve the kernel set for a field — once per plan, not per
-    /// element. Recognizes the crate's concrete fields (including
-    /// through [`AnyField`], which is what kills the per-element enum
-    /// dispatch on the coordinator's serving path); anything else gets
-    /// the `u64` scalar fallback driven through the `Field` trait.
+    /// element — at the process default ISA tier ([`IsaTier::detect`]:
+    /// the widest the host supports, or the `DCE_FORCE_ISA` override).
+    /// Recognizes the crate's concrete fields (including through
+    /// [`AnyField`], which is what kills the per-element enum dispatch
+    /// on the coordinator's serving path); anything else gets the `u64`
+    /// scalar fallback driven through the `Field` trait.
     pub fn for_field<F: Field>(f: &F) -> Kernels {
+        Self::for_field_with_isa(f, IsaTier::detect())
+    }
+
+    /// [`for_field`](Self::for_field) with an explicit ISA tier. The
+    /// tier is clamped to what this host can execute
+    /// ([`IsaTier::clamp_supported`]) and pinned to scalar for the `u64`
+    /// fallback (which has no vector path) — so the recorded
+    /// [`isa`](Self::isa) is always the tier actually dispatched to.
+    pub fn for_field_with_isa<F: Field>(f: &F, isa: IsaTier) -> Kernels {
         let any: &dyn std::any::Any = f;
-        if let Some(af) = any.downcast_ref::<AnyField>() {
-            return match af {
-                AnyField::Prime(p) => Kernels::prime(*p),
-                AnyField::Ext(g) => Kernels::gf2e(g.clone()),
-            };
-        }
-        if let Some(p) = any.downcast_ref::<GfPrime>() {
-            return Kernels::prime(*p);
-        }
-        if let Some(g) = any.downcast_ref::<Gf2e>() {
-            return Kernels::gf2e(g.clone());
-        }
-        Kernels {
-            imp: Impl::Scalar(Arc::new(f.clone())),
-        }
+        let imp = if let Some(af) = any.downcast_ref::<AnyField>() {
+            match af {
+                AnyField::Prime(p) => Self::prime_impl(*p),
+                AnyField::Ext(g) => Self::gf2e_impl(g.clone()),
+            }
+        } else if let Some(p) = any.downcast_ref::<GfPrime>() {
+            Self::prime_impl(*p)
+        } else if let Some(g) = any.downcast_ref::<Gf2e>() {
+            Self::gf2e_impl(g.clone())
+        } else {
+            Impl::Scalar(Arc::new(f.clone()))
+        };
+        Self::with_impl(imp, isa)
     }
 
-    fn prime(p: GfPrime) -> Kernels {
+    /// The same field's kernels re-pinned to `isa` (clamped the same
+    /// way as [`for_field_with_isa`](Self::for_field_with_isa)). Cheap:
+    /// the product tables live behind `Arc`s.
+    pub fn with_isa(&self, isa: IsaTier) -> Kernels {
+        Self::with_impl(self.imp.clone(), isa)
+    }
+
+    /// The ISA tier these kernels dispatch to.
+    pub fn isa(&self) -> IsaTier {
+        self.isa
+    }
+
+    fn with_impl(imp: Impl, isa: IsaTier) -> Kernels {
+        let isa = if matches!(imp, Impl::Scalar(_)) {
+            IsaTier::Scalar
+        } else {
+            isa.clamp_supported()
+        };
+        Kernels { imp, isa }
+    }
+
+    fn prime_impl(p: GfPrime) -> Impl {
         let layout = SymbolLayout::for_bits(p.bits());
-        Kernels {
-            imp: Impl::Prime(p, layout),
-        }
+        Impl::Prime(p, layout)
     }
 
-    fn gf2e(g: Gf2e) -> Kernels {
-        let imp = if g.width() <= 8 {
+    fn gf2e_impl(g: Gf2e) -> Impl {
+        if g.width() <= 8 {
             Impl::Gf2eNibble(Gf2eNibble::new(&g))
         } else {
             Impl::Gf2eWide(g)
-        };
-        Kernels { imp }
+        }
     }
 
     /// The field order `q` these kernels compute in — the canonical
@@ -610,18 +822,14 @@ impl Kernels {
     }
 
     /// `acc[i] += c·src[i]` over packed storage.
-    pub fn axpy(
-        &self,
-        acc: &mut PackedBuf,
-        c: u64,
-        src: &PackedBuf,
-    ) -> Result<(), LayoutMismatch> {
-        assert_eq!(acc.len(), src.len(), "packed axpy length mismatch");
+    pub fn axpy(&self, acc: &mut PackedBuf, c: u64, src: &PackedBuf) -> Result<(), KernelError> {
+        check_shape("axpy operand lanes", acc.len(), src.len())?;
+        let isa = self.isa;
         let bufs = [acc.layout(), src.layout()];
         match (&self.imp, &mut acc.data, &src.data) {
-            (Impl::Gf2eNibble(k), PackedData::U8(a), PackedData::U8(s)) => k.axpy(a, c, s),
+            (Impl::Gf2eNibble(k), PackedData::U8(a), PackedData::U8(s)) => k.axpy(isa, a, c, s),
             (Impl::Gf2eWide(g), PackedData::U16(a), PackedData::U16(s)) => {
-                gf2e_wide_axpy(g, a, c, s)
+                gf2e_wide_axpy(g, isa, a, c, s)
             }
             (Impl::Prime(p, _), PackedData::U8(a), PackedData::U8(s)) => prime_axpy(p, a, c, s),
             (Impl::Prime(p, _), PackedData::U16(a), PackedData::U16(s)) => prime_axpy(p, a, c, s),
@@ -629,7 +837,7 @@ impl Kernels {
             (Impl::Scalar(ops), PackedData::U64(a), PackedData::U64(s)) => {
                 ops.dyn_axpy_into(a, c, s)
             }
-            _ => return Err(self.mismatch(&bufs)),
+            _ => return Err(self.mismatch(&bufs).into()),
         }
         Ok(())
     }
@@ -642,30 +850,31 @@ impl Kernels {
         acc: &mut PackedBuf,
         coeffs: &[u64],
         srcs: &PackedBuf,
-    ) -> Result<(), LayoutMismatch> {
+    ) -> Result<(), KernelError> {
         let n = acc.len();
-        assert_eq!(srcs.len(), coeffs.len() * n, "packed lincomb arena shape");
+        check_shape("lincomb arena lanes", coeffs.len() * n, srcs.len())?;
+        let isa = self.isa;
         let bufs = [acc.layout(), srcs.layout()];
         match (&self.imp, &mut acc.data, &srcs.data) {
             (Impl::Gf2eNibble(k), PackedData::U8(a), PackedData::U8(s)) => {
-                k.gemm_row(coeffs, s, n, a)
+                k.gemm_row(isa, coeffs, s, n, a)
             }
             (Impl::Gf2eWide(g), PackedData::U16(a), PackedData::U16(s)) => {
-                gf2e_wide_gemm_row(g, coeffs, s, n, a)
+                gf2e_wide_gemm_row(g, isa, coeffs, s, n, a)
             }
             (Impl::Prime(p, _), PackedData::U8(a), PackedData::U8(s)) => {
-                prime_gemm_row(p, coeffs, s, n, a)
+                prime_gemm_row(p, isa, coeffs, s, n, a)
             }
             (Impl::Prime(p, _), PackedData::U16(a), PackedData::U16(s)) => {
-                prime_gemm_row(p, coeffs, s, n, a)
+                prime_gemm_row(p, isa, coeffs, s, n, a)
             }
             (Impl::Prime(p, _), PackedData::U32(a), PackedData::U32(s)) => {
-                prime_gemm_row(p, coeffs, s, n, a)
+                prime_gemm_row(p, isa, coeffs, s, n, a)
             }
             (Impl::Scalar(ops), PackedData::U64(a), PackedData::U64(s)) => {
                 ops.dyn_gemm_row(coeffs, s, n, a)
             }
-            _ => return Err(self.mismatch(&bufs)),
+            _ => return Err(self.mismatch(&bufs).into()),
         }
         Ok(())
     }
@@ -683,32 +892,33 @@ impl Kernels {
         n: usize,
         out: &mut PackedBuf,
         par: bool,
-    ) -> Result<(), LayoutMismatch> {
-        assert_eq!(out.len(), rows.len() * n, "packed gemm output shape");
+    ) -> Result<(), KernelError> {
+        check_shape("gemm output lanes", rows.len() * n, out.len())?;
         if n == 0 || rows.is_empty() {
             return Ok(());
         }
+        let isa = self.isa;
         let bufs = [out.layout(), b.layout()];
         match (&self.imp, &mut out.data, &b.data) {
             (Impl::Gf2eNibble(k), PackedData::U8(o), PackedData::U8(bs)) => {
-                row_loop(o, n, par, |i, row| k.gemm_row(rows[i], bs, n, row))
+                row_loop(o, n, par, |i, row| k.gemm_row(isa, rows[i], bs, n, row))
             }
             (Impl::Gf2eWide(g), PackedData::U16(o), PackedData::U16(bs)) => {
-                row_loop(o, n, par, |i, row| gf2e_wide_gemm_row(g, rows[i], bs, n, row))
+                row_loop(o, n, par, |i, row| gf2e_wide_gemm_row(g, isa, rows[i], bs, n, row))
             }
             (Impl::Prime(p, _), PackedData::U8(o), PackedData::U8(bs)) => {
-                row_loop(o, n, par, |i, row| prime_gemm_row(p, rows[i], bs, n, row))
+                row_loop(o, n, par, |i, row| prime_gemm_row(p, isa, rows[i], bs, n, row))
             }
             (Impl::Prime(p, _), PackedData::U16(o), PackedData::U16(bs)) => {
-                row_loop(o, n, par, |i, row| prime_gemm_row(p, rows[i], bs, n, row))
+                row_loop(o, n, par, |i, row| prime_gemm_row(p, isa, rows[i], bs, n, row))
             }
             (Impl::Prime(p, _), PackedData::U32(o), PackedData::U32(bs)) => {
-                row_loop(o, n, par, |i, row| prime_gemm_row(p, rows[i], bs, n, row))
+                row_loop(o, n, par, |i, row| prime_gemm_row(p, isa, rows[i], bs, n, row))
             }
             (Impl::Scalar(ops), PackedData::U64(o), PackedData::U64(bs)) => {
                 row_loop(o, n, par, |i, row| ops.dyn_gemm_row(rows[i], bs, n, row))
             }
-            _ => return Err(self.mismatch(&bufs)),
+            _ => return Err(self.mismatch(&bufs).into()),
         }
         Ok(())
     }
@@ -871,19 +1081,93 @@ mod tests {
         let bytes = Kernels::for_field(&Gf2e::new(8).unwrap()); // u8 lanes
         let mut acc = prime.zeros(4);
         let err = bytes.axpy(&mut acc, 3, &prime.zeros(4)).unwrap_err();
-        assert_eq!(err.expected, SymbolLayout::U8);
-        assert_eq!(err.got, SymbolLayout::U32);
+        let KernelError::Layout(lm) = err else {
+            panic!("expected a layout error, got {err:?}")
+        };
+        assert_eq!(lm.expected, SymbolLayout::U8);
+        assert_eq!(lm.got, SymbolLayout::U32);
         assert!(err.to_string().contains("does not match"), "{err}");
         let mut acc = prime.zeros(4);
         assert!(bytes.lincomb(&mut acc, &[1, 2], &prime.zeros(8)).is_err());
         let mut out = prime.zeros(4);
         let row: &[u64] = &[1, 2];
         assert!(bytes.gemm_rows(&[row], &prime.zeros(8), 4, &mut out, false).is_err());
-        // And through anyhow chains the concrete type stays reachable.
+        // And through anyhow chains the concrete type stays reachable
+        // (the coordinator's reject counter downcasts exactly this way).
         let any: anyhow::Error = err.into();
         assert!(any
             .chain()
             .any(|c| c.downcast_ref::<LayoutMismatch>().is_some()));
+    }
+
+    #[test]
+    fn shape_mismatch_is_a_typed_error_not_a_panic() {
+        // Wrong lane counts used to be assert_eq! panics in the
+        // dispatch; every entry must now reject with the typed error.
+        let kern = Kernels::for_field(&GfPrime::default_field());
+        let mut acc = kern.zeros(4);
+        let err = kern.axpy(&mut acc, 3, &kern.zeros(5)).unwrap_err();
+        let KernelError::Shape(sm) = err else {
+            panic!("expected a shape error, got {err:?}")
+        };
+        assert_eq!(sm.expected, 4);
+        assert_eq!(sm.got, 5);
+        assert!(err.to_string().contains("lanes"), "{err}");
+        let mut acc = kern.zeros(4);
+        assert!(kern.lincomb(&mut acc, &[1, 2], &kern.zeros(7)).is_err());
+        let row: &[u64] = &[1, 2];
+        let mut out = kern.zeros(5);
+        assert!(kern.gemm_rows(&[row], &kern.zeros(8), 4, &mut out, false).is_err());
+        let any: anyhow::Error = err.into();
+        assert!(any
+            .chain()
+            .any(|c| c.downcast_ref::<ShapeMismatch>().is_some()));
+    }
+
+    #[test]
+    fn isa_tier_is_clamped_and_reported_per_kernels() {
+        use crate::gf::simd::IsaTier;
+        let f = AnyField::parse("gf2e:8").unwrap();
+        // Whatever is requested, the resolved tier is executable here,
+        // and the kernels stay correct after clamping.
+        for req in [IsaTier::Scalar, IsaTier::Avx2, IsaTier::Neon] {
+            let kern = Kernels::for_field_with_isa(&f, req);
+            assert!(IsaTier::available().contains(&kern.isa()), "{req:?}");
+            let mut acc = kern.pack(&[1, 2, 3]);
+            kern.axpy(&mut acc, 7, &kern.pack(&[9, 8, 250])).unwrap();
+            let scalar = Kernels::for_field_with_isa(&f, IsaTier::Scalar);
+            let mut want = scalar.pack(&[1, 2, 3]);
+            scalar.axpy(&mut want, 7, &scalar.pack(&[9, 8, 250])).unwrap();
+            assert_eq!(acc.to_u64(), want.to_u64(), "{req:?}");
+        }
+        // with_isa re-pins an existing vtable the same way.
+        let kern = Kernels::for_field(&f).with_isa(IsaTier::Scalar);
+        assert_eq!(kern.isa(), IsaTier::Scalar);
+        // The u64 fallback has no vector path and says so.
+        #[derive(Clone, Debug)]
+        struct Mod5;
+        impl Field for Mod5 {
+            fn order(&self) -> u64 {
+                5
+            }
+            fn add(&self, a: u64, b: u64) -> u64 {
+                (a + b) % 5
+            }
+            fn sub(&self, a: u64, b: u64) -> u64 {
+                (a + 5 - b) % 5
+            }
+            fn mul(&self, a: u64, b: u64) -> u64 {
+                a * b % 5
+            }
+            fn inv(&self, a: u64) -> u64 {
+                self.pow(a, 3)
+            }
+            fn generator(&self) -> u64 {
+                2
+            }
+        }
+        let fallback = Kernels::for_field_with_isa(&Mod5, IsaTier::widest());
+        assert_eq!(fallback.isa(), IsaTier::Scalar);
     }
 
     #[test]

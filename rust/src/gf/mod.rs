@@ -10,6 +10,9 @@
 //! * [`kernels`] — packed-symbol storage ([`SymbolLayout`]/[`PackedBuf`])
 //!   and the per-field vectorized kernel vtable ([`Kernels`]) behind the
 //!   batched serving hot path,
+//! * [`simd`] — explicit AVX2/NEON backends for those kernels, selected
+//!   once per plan by runtime detection ([`IsaTier`]) with the scalar
+//!   loops as the portable fallback and bit-identity oracle,
 //! * dense [`matrix`] algebra, [`poly`]nomials and Lagrange interpolation,
 //! * structured matrices: [`vandermonde`], [`cauchy`] (eq. (24) of the
 //!   paper) and [`dft`] (§V-A).
@@ -26,6 +29,7 @@ pub mod matrix;
 pub mod ntt;
 pub mod poly;
 pub mod prime;
+pub mod simd;
 pub mod vandermonde;
 
 pub use cauchy::CauchyLike;
@@ -33,6 +37,7 @@ pub use gf2e::Gf2e;
 pub use kernels::{Kernels, PackedBuf, SymbolLayout};
 pub use matrix::Mat;
 pub use prime::GfPrime;
+pub use simd::{IsaRequest, IsaTier};
 
 /// A finite field `F_q` with elements canonically represented as `u64 < q`.
 ///

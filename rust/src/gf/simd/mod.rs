@@ -1,0 +1,242 @@
+//! Explicit-SIMD ISA tiers for the packed field kernels.
+//!
+//! [`Kernels`](crate::gf::kernels::Kernels) resolves one [`IsaTier`] per
+//! compiled plan and threads it into every packed inner loop; the tier
+//! decides whether a loop runs the portable scalar code (the PR 5
+//! autovectorized kernels — retained as the bit-identity oracle and the
+//! fallback on every host) or an explicit vector path from one of the
+//! per-arch submodules:
+//!
+//! * [`x86`] (x86_64, AVX2 at runtime): `GF(2^8)` products as two
+//!   `_mm256_shuffle_epi8` nibble-table lookups, `GF(2^w ≤ 16)` as
+//!   gathered hoisted-log lanes, prime-field delayed reduction as
+//!   `u64x4` fma tiles;
+//! * [`neon`] (aarch64, baseline): `GF(2^8)` via `vqtbl1q_u8`.
+//!
+//! **Dispatch hierarchy.** `scalar` runs everywhere. The widest vector
+//! tier is detected once per process ([`IsaTier::widest`]); any other
+//! vector tier *requested* (config `isa = "…"`, `DCE_FORCE_ISA`)
+//! degrades to scalar via [`IsaTier::clamp_supported`] — a tier value
+//! can therefore never name instructions the host cannot execute, which
+//! is the safety argument for every `unsafe` call into the submodules.
+//!
+//! GFNI is deliberately **not** a tier: the `_mm*_gf2p8*` intrinsics
+//! both post-date this crate's MSRV and hard-wire the AES polynomial
+//! `0x11B`, while this crate's `GF(2^8)` is built on `0x11D` — the
+//! nibble-shuffle path is the portable-polynomial AVX2 optimum.
+//! See `DESIGN.md §9`.
+
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86;
+
+/// An instruction-set tier the packed kernels can dispatch to. Ordered
+/// by width: `Scalar` is the portable fallback, the vector tiers are
+/// only ever constructed on hosts that can execute them (see
+/// [`clamp_supported`](IsaTier::clamp_supported)).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum IsaTier {
+    /// Portable scalar/autovectorized loops — every host, and the
+    /// bit-identity oracle for the vector tiers.
+    Scalar,
+    /// 256-bit AVX2 paths (x86_64, runtime-detected).
+    Avx2,
+    /// 128-bit NEON paths (aarch64 baseline).
+    Neon,
+}
+
+impl IsaTier {
+    /// Lowercase tier name (metrics labels, `PlanProfile`, bench JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            IsaTier::Scalar => "scalar",
+            IsaTier::Avx2 => "avx2",
+            IsaTier::Neon => "neon",
+        }
+    }
+
+    /// The widest tier this host can execute: runtime feature detection
+    /// on x86_64, the baseline guarantee on aarch64, scalar elsewhere.
+    pub fn widest() -> IsaTier {
+        widest_arch()
+    }
+
+    /// The process-wide default tier, cached after first use:
+    /// `DCE_FORCE_ISA` when set and non-empty (an unrecognized value
+    /// falls back to scalar with a warning — safe, never UB), otherwise
+    /// [`widest`](IsaTier::widest).
+    pub fn detect() -> IsaTier {
+        static DETECTED: OnceLock<IsaTier> = OnceLock::new();
+        *DETECTED.get_or_init(|| match std::env::var("DCE_FORCE_ISA") {
+            Ok(v) if !v.is_empty() => match v.parse::<IsaRequest>() {
+                Ok(req) => IsaTier::resolve(req),
+                Err(_) => {
+                    eprintln!(
+                        "DCE_FORCE_ISA={v:?} is not a recognized tier \
+                         (scalar|avx2|neon|native); using scalar kernels"
+                    );
+                    IsaTier::Scalar
+                }
+            },
+            _ => IsaTier::widest(),
+        })
+    }
+
+    /// Clamp to a tier whose instructions this host can execute: scalar
+    /// and the detected widest tier pass through, anything else
+    /// degrades to scalar. Every constructor of a [`Kernels`] tier runs
+    /// through this, so a hand-built `Avx2` on a non-AVX2 host serves
+    /// scalar kernels instead of reaching an illegal instruction.
+    pub fn clamp_supported(self) -> IsaTier {
+        if self == IsaTier::Scalar || self == Self::widest() {
+            self
+        } else {
+            IsaTier::Scalar
+        }
+    }
+
+    /// Resolve a requested tier against this host: `native` means the
+    /// widest supported tier; explicit tiers are honored when supported
+    /// and degrade to scalar otherwise.
+    pub fn resolve(req: IsaRequest) -> IsaTier {
+        match req {
+            IsaRequest::Scalar => IsaTier::Scalar,
+            IsaRequest::Native => IsaTier::widest(),
+            IsaRequest::Avx2 => IsaTier::Avx2.clamp_supported(),
+            IsaRequest::Neon => IsaTier::Neon.clamp_supported(),
+        }
+    }
+
+    /// Every tier executable on this host: scalar, plus the widest
+    /// vector tier when there is one. Test suites and benches sweep
+    /// this to pin vector ≡ scalar bit-identity per tier.
+    pub fn available() -> Vec<IsaTier> {
+        let mut tiers = vec![IsaTier::Scalar];
+        if Self::widest() != IsaTier::Scalar {
+            tiers.push(Self::widest());
+        }
+        tiers
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn widest_arch() -> IsaTier {
+    if is_x86_feature_detected!("avx2") {
+        IsaTier::Avx2
+    } else {
+        IsaTier::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn widest_arch() -> IsaTier {
+    IsaTier::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn widest_arch() -> IsaTier {
+    IsaTier::Scalar
+}
+
+/// A *requested* tier, as written in a job config (`isa = "…"`) or
+/// `DCE_FORCE_ISA` — kept distinct from [`IsaTier`] because `native`
+/// names a policy ("widest this host has"), not an instruction set, and
+/// because requests are resolved per host via [`IsaTier::resolve`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum IsaRequest {
+    Scalar,
+    Avx2,
+    Neon,
+    /// The widest tier the serving host supports.
+    Native,
+}
+
+impl std::str::FromStr for IsaRequest {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "scalar" => IsaRequest::Scalar,
+            "avx2" => IsaRequest::Avx2,
+            "neon" => IsaRequest::Neon,
+            "native" => IsaRequest::Native,
+            other => anyhow::bail!("unknown ISA tier {other:?} (expected scalar|avx2|neon|native)"),
+        })
+    }
+}
+
+impl std::fmt::Display for IsaRequest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            IsaRequest::Scalar => "scalar",
+            IsaRequest::Avx2 => "avx2",
+            IsaRequest::Neon => "neon",
+            IsaRequest::Native => "native",
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_parse_roundtrip_and_rejects_junk() {
+        for (s, want) in [
+            ("scalar", IsaRequest::Scalar),
+            ("avx2", IsaRequest::Avx2),
+            ("neon", IsaRequest::Neon),
+            ("native", IsaRequest::Native),
+        ] {
+            let req: IsaRequest = s.parse().unwrap();
+            assert_eq!(req, want);
+            assert_eq!(req.to_string(), s);
+        }
+        assert!("sse9".parse::<IsaRequest>().is_err());
+        assert!("".parse::<IsaRequest>().is_err());
+    }
+
+    #[test]
+    fn clamp_only_ever_downgrades_to_executable_tiers() {
+        let widest = IsaTier::widest();
+        assert_eq!(IsaTier::Scalar.clamp_supported(), IsaTier::Scalar);
+        assert_eq!(widest.clamp_supported(), widest);
+        for tier in [IsaTier::Avx2, IsaTier::Neon] {
+            let clamped = tier.clamp_supported();
+            assert!(
+                clamped == tier && tier == widest || clamped == IsaTier::Scalar,
+                "{tier:?} clamped to {clamped:?} with widest {widest:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn resolve_maps_native_to_widest_and_respects_support() {
+        assert_eq!(IsaTier::resolve(IsaRequest::Scalar), IsaTier::Scalar);
+        assert_eq!(IsaTier::resolve(IsaRequest::Native), IsaTier::widest());
+        for req in [IsaRequest::Avx2, IsaRequest::Neon] {
+            let tier = IsaTier::resolve(req);
+            assert!(IsaTier::available().contains(&tier), "{req:?} -> {tier:?}");
+        }
+    }
+
+    #[test]
+    fn available_lists_scalar_first_and_detect_stays_inside_it() {
+        let tiers = IsaTier::available();
+        assert_eq!(tiers[0], IsaTier::Scalar);
+        assert!(tiers.contains(&IsaTier::widest()));
+        assert!(tiers.len() <= 2);
+        // Whatever DCE_FORCE_ISA says (CI's forced-tier matrix sets it
+        // for whole test runs), the cached default is executable here.
+        assert!(tiers.contains(&IsaTier::detect()));
+    }
+
+    #[test]
+    fn tier_names_are_stable_labels() {
+        assert_eq!(IsaTier::Scalar.name(), "scalar");
+        assert_eq!(IsaTier::Avx2.name(), "avx2");
+        assert_eq!(IsaTier::Neon.name(), "neon");
+    }
+}

@@ -1,0 +1,50 @@
+//! NEON kernels for the packed field inner loops (aarch64).
+//!
+//! NEON is baseline on aarch64, so no runtime detection is needed; the
+//! functions are still `unsafe` + `#[target_feature]` for symmetry with
+//! the AVX2 module and to keep the call-site contract identical. Only
+//! the GF(2^8) nibble-shuffle path is accelerated here — `vqtbl1q_u8`
+//! is the exact NEON analogue of `vpshufb`. The wide-gf2e gather and
+//! prime fma loops stay on the portable scalar code on this arch (NEON
+//! has no gather, and LLVM already autovectorizes the u64 fma scratch
+//! loop well on aarch64); see `DESIGN.md §9`.
+
+#[cfg(target_arch = "aarch64")]
+use std::arch::aarch64::*;
+
+/// `acc[i] ^= c·src[i]` over GF(2^w ≤ 8), 16 lanes per step, with `c`
+/// pre-expanded into its operand-nibble tables (`tlo[j] = c·j`,
+/// `thi[j] = c·(j≪4)`): the product of a symbol `s` is
+/// `tlo[s & 15] ⊕ thi[s ≫ 4]`, two `vqtbl1q_u8` lookups and one XOR.
+///
+/// # Safety
+/// NEON must be available (baseline on aarch64). `acc` and `src` must
+/// have equal lengths (debug-asserted).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn gf256_axpy_neon(
+    acc: &mut [u8],
+    src: &[u8],
+    tlo: &[u8; 16],
+    thi: &[u8; 16],
+) {
+    debug_assert_eq!(acc.len(), src.len());
+    let n = acc.len();
+    let vlo = vld1q_u8(tlo.as_ptr());
+    let vhi = vld1q_u8(thi.as_ptr());
+    let nib = vdupq_n_u8(0x0f);
+    let mut i = 0;
+    while i + 16 <= n {
+        let s = vld1q_u8(src.as_ptr().add(i));
+        let lo_idx = vandq_u8(s, nib);
+        let hi_idx = vshrq_n_u8::<4>(s);
+        let prod = veorq_u8(vqtbl1q_u8(vlo, lo_idx), vqtbl1q_u8(vhi, hi_idx));
+        let a = vld1q_u8(acc.as_ptr().add(i));
+        vst1q_u8(acc.as_mut_ptr().add(i), veorq_u8(a, prod));
+        i += 16;
+    }
+    while i < n {
+        let s = src[i];
+        acc[i] ^= tlo[(s & 0x0f) as usize] ^ thi[(s >> 4) as usize];
+        i += 1;
+    }
+}

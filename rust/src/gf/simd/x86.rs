@@ -1,0 +1,211 @@
+//! AVX2 kernels for the packed field inner loops (x86_64).
+//!
+//! Every function here is `#[target_feature(enable = "avx2")]` and
+//! therefore `unsafe` to call: the caller must have proved AVX2 is
+//! available, which in this crate always means the call is guarded by
+//! an [`IsaTier::Avx2`](super::IsaTier) value — constructible only
+//! after runtime detection (`IsaTier::clamp_supported`). All loads and
+//! stores are unaligned (`loadu`/`storeu`); the columnar arena's
+//! tile-padded stride (`PackedPacketBuf::pack_columnar`) merely
+//! guarantees whole rows are a multiple of one 32-byte tile so the
+//! vector loop covers full rows, with the in-function scalar tails
+//! handling ragged lengths from other call sites.
+//!
+//! Bit-identity with the scalar kernels is by construction, not by
+//! rounding luck: GF(2) tiers XOR exact table products, and the prime
+//! fma tiles do the same exact `u64` adds in the same per-lane order as
+//! the scalar delayed-reduction loop.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// `acc[i] ^= c·src[i]` over GF(2^w ≤ 8), 32 lanes per step, with `c`
+/// pre-expanded into its two operand-nibble shuffle tables
+/// (`tlo[j] = c·j`, `thi[j] = c·(j≪4)`, see
+/// `Gf2eNibble::operand_tables`): the product of a symbol `s` is
+/// `tlo[s & 15] ⊕ thi[s ≫ 4]`, two `vpshufb`s and one XOR.
+///
+/// # Safety
+/// Caller must guarantee the CPU supports AVX2. `acc` and `src` must
+/// have equal lengths (debug-asserted).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gf256_axpy_avx2(
+    acc: &mut [u8],
+    src: &[u8],
+    tlo: &[u8; 16],
+    thi: &[u8; 16],
+) {
+    debug_assert_eq!(acc.len(), src.len());
+    let n = acc.len();
+    let vlo = _mm256_broadcastsi128_si256(_mm_loadu_si128(tlo.as_ptr() as *const __m128i));
+    let vhi = _mm256_broadcastsi128_si256(_mm_loadu_si128(thi.as_ptr() as *const __m128i));
+    let nib = _mm256_set1_epi8(0x0f);
+    let mut i = 0;
+    while i + 32 <= n {
+        let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+        let lo_idx = _mm256_and_si256(s, nib);
+        let hi_idx = _mm256_and_si256(_mm256_srli_epi16::<4>(s), nib);
+        let prod = _mm256_xor_si256(
+            _mm256_shuffle_epi8(vlo, lo_idx),
+            _mm256_shuffle_epi8(vhi, hi_idx),
+        );
+        let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+        _mm256_storeu_si256(
+            acc.as_mut_ptr().add(i) as *mut __m256i,
+            _mm256_xor_si256(a, prod),
+        );
+        i += 32;
+    }
+    while i < n {
+        let s = src[i];
+        acc[i] ^= tlo[(s & 0x0f) as usize] ^ thi[(s >> 4) as usize];
+        i += 1;
+    }
+}
+
+/// `acc[i] ^= c·src[i]` over GF(2^w ≤ 16) via gathered hoisted-log
+/// lanes: 16 symbols per step are widened to two 8×u32 halves, their
+/// logs gathered from `log`, biased by `log_c`, the products gathered
+/// back from the doubled `exp` table, re-narrowed and XORed in. Zero
+/// lanes are masked out after the gathers (`log[0] = 0` keeps their
+/// gather indices in bounds; the mask discards the bogus product).
+///
+/// # Safety
+/// Caller must guarantee the CPU supports AVX2. `acc`/`src` must have
+/// equal lengths; `log` must have one entry per field element, `exp`
+/// must be the doubled table (length ≥ 2·(order−1)), and `log_c` must
+/// be the log of a non-zero coefficient — exactly the `Gf2e` table
+/// layout (`log_table`/`exp_table`), whose bounds proof lives with the
+/// tables.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gf2e_wide_axpy_avx2(
+    acc: &mut [u16],
+    src: &[u16],
+    log: &[u32],
+    exp: &[u16],
+    log_c: u32,
+) {
+    debug_assert_eq!(acc.len(), src.len());
+    let n = acc.len();
+    let zero = _mm256_setzero_si256();
+    let vlogc = _mm256_set1_epi32(log_c as i32);
+    let mask16 = _mm256_set1_epi32(0xffff);
+    let log_ptr = log.as_ptr() as *const i32;
+    let exp_ptr = exp.as_ptr() as *const i32;
+    let mut i = 0;
+    while i + 16 <= n {
+        let s = _mm256_loadu_si256(src.as_ptr().add(i) as *const __m256i);
+        let zmask = _mm256_cmpeq_epi16(s, zero);
+        let s_lo = _mm256_cvtepu16_epi32(_mm256_castsi256_si128(s));
+        let s_hi = _mm256_cvtepu16_epi32(_mm256_extracti128_si256::<1>(s));
+        let i_lo = _mm256_add_epi32(_mm256_i32gather_epi32::<4>(log_ptr, s_lo), vlogc);
+        let i_hi = _mm256_add_epi32(_mm256_i32gather_epi32::<4>(log_ptr, s_hi), vlogc);
+        // The exp table is u16; gather 32-bit and mask the upper half.
+        let e_lo = _mm256_and_si256(_mm256_i32gather_epi32::<2>(exp_ptr, i_lo), mask16);
+        let e_hi = _mm256_and_si256(_mm256_i32gather_epi32::<2>(exp_ptr, i_hi), mask16);
+        // packus interleaves the two 128-bit lanes; permute restores
+        // element order. Saturation never triggers (values ≤ 0xffff).
+        let packed = _mm256_permute4x64_epi64::<0b1101_1000>(_mm256_packus_epi32(e_lo, e_hi));
+        let prod = _mm256_andnot_si256(zmask, packed);
+        let a = _mm256_loadu_si256(acc.as_ptr().add(i) as *const __m256i);
+        _mm256_storeu_si256(
+            acc.as_mut_ptr().add(i) as *mut __m256i,
+            _mm256_xor_si256(a, prod),
+        );
+        i += 16;
+    }
+    while i < n {
+        let s = src[i];
+        if s != 0 {
+            acc[i] ^= exp[(log_c + log[s as usize]) as usize];
+        }
+        i += 1;
+    }
+}
+
+/// `scratch[j] += c·src[j]` with u32 lanes widened into the u64
+/// delayed-reduction scratch, 4 lanes per step. `_mm256_mul_epu32`
+/// multiplies the low 32 bits of each 64-bit lane — exact here because
+/// `c < 2^31` (prime moduli fit i32) and `src` lanes are ≤ 32 bits, so
+/// products stay below 2^63 and the adds below the scalar loop's own
+/// overflow headroom (`Field::lazy_chunk` bounds the run length).
+///
+/// # Safety
+/// Caller must guarantee the CPU supports AVX2; `scratch`/`src` must
+/// have equal lengths and `c < 2^32`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn prime_fma_u32_avx2(scratch: &mut [u64], c: u64, src: &[u32]) {
+    debug_assert_eq!(scratch.len(), src.len());
+    let n = scratch.len();
+    let vc = _mm256_set1_epi64x(c as i64);
+    let mut i = 0;
+    while i + 4 <= n {
+        let x = _mm256_cvtepu32_epi64(_mm_loadu_si128(src.as_ptr().add(i) as *const __m128i));
+        let a = _mm256_loadu_si256(scratch.as_ptr().add(i) as *const __m256i);
+        let prod = _mm256_mul_epu32(vc, x);
+        _mm256_storeu_si256(
+            scratch.as_mut_ptr().add(i) as *mut __m256i,
+            _mm256_add_epi64(a, prod),
+        );
+        i += 4;
+    }
+    while i < n {
+        scratch[i] += c * src[i] as u64;
+        i += 1;
+    }
+}
+
+/// `scratch[j] += c·src[j]` for u16 lanes — see [`prime_fma_u32_avx2`].
+///
+/// # Safety
+/// Caller must guarantee the CPU supports AVX2; `scratch`/`src` must
+/// have equal lengths and `c < 2^32`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn prime_fma_u16_avx2(scratch: &mut [u64], c: u64, src: &[u16]) {
+    debug_assert_eq!(scratch.len(), src.len());
+    let n = scratch.len();
+    let vc = _mm256_set1_epi64x(c as i64);
+    let mut i = 0;
+    while i + 4 <= n {
+        let x = _mm256_cvtepu16_epi64(_mm_loadl_epi64(src.as_ptr().add(i) as *const __m128i));
+        let a = _mm256_loadu_si256(scratch.as_ptr().add(i) as *const __m256i);
+        let prod = _mm256_mul_epu32(vc, x);
+        _mm256_storeu_si256(
+            scratch.as_mut_ptr().add(i) as *mut __m256i,
+            _mm256_add_epi64(a, prod),
+        );
+        i += 4;
+    }
+    while i < n {
+        scratch[i] += c * src[i] as u64;
+        i += 1;
+    }
+}
+
+/// `scratch[j] += c·src[j]` for u8 lanes — see [`prime_fma_u32_avx2`].
+///
+/// # Safety
+/// Caller must guarantee the CPU supports AVX2; `scratch`/`src` must
+/// have equal lengths and `c < 2^32`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn prime_fma_u8_avx2(scratch: &mut [u64], c: u64, src: &[u8]) {
+    debug_assert_eq!(scratch.len(), src.len());
+    let n = scratch.len();
+    let vc = _mm256_set1_epi64x(c as i64);
+    let mut i = 0;
+    while i + 4 <= n {
+        let quad = (src.as_ptr().add(i) as *const u32).read_unaligned();
+        let x = _mm256_cvtepu8_epi64(_mm_cvtsi32_si128(quad as i32));
+        let a = _mm256_loadu_si256(scratch.as_ptr().add(i) as *const __m256i);
+        let prod = _mm256_mul_epu32(vc, x);
+        _mm256_storeu_si256(
+            scratch.as_mut_ptr().add(i) as *mut __m256i,
+            _mm256_add_epi64(a, prod),
+        );
+        i += 4;
+    }
+    while i < n {
+        scratch[i] += c * src[i] as u64;
+        i += 1;
+    }
+}

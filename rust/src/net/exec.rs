@@ -278,25 +278,29 @@ pub fn replay_batch_kernels(
     let wb = w * b;
     let layout = kernels.layout();
 
-    // Pack once: strided columnar arena, K rows of W·B narrow lanes.
+    // Pack once: strided columnar arena, K rows of W·B narrow lanes,
+    // each row zero-padded to a whole SIMD tile (the arena alignment
+    // contract — vector gemm loops then cover whole rows tail-free).
     let arena = PackedPacketBuf::pack_columnar(layout, jobs, w);
+    let stride = arena.stride();
 
     // Evaluate every distinct output row once across the whole batch.
     let n_rows = opt.matrix.n_rows();
-    let mut out = PackedPacketBuf::zeros(layout, wb, n_rows);
+    let mut out = PackedPacketBuf::zeros_columnar(layout, wb, n_rows);
+    debug_assert_eq!(out.stride(), stride, "arena/output stride drift");
     if wb > 0 {
         let rows: Vec<&[u64]> = (0..n_rows).map(|i| opt.matrix.row(i)).collect();
         kernels.gemm_rows(
             &rows,
             arena.buf(),
-            wb,
+            stride,
             out.buf_mut(),
             crate::net::parallel_enabled(),
         )?;
     }
 
     // Unpack: slice each job's columns back out per processor,
-    // canonical u64 at the API boundary.
+    // canonical u64 at the API boundary (pad lanes never leave).
     let report = opt.report(w);
     Ok((0..b)
         .map(|j| {
@@ -304,7 +308,7 @@ pub fn replay_batch_kernels(
                 .matrix
                 .assignment()
                 .iter()
-                .map(|(&pid, &ri)| (pid, out.unpack_range(ri * wb + j * w, w)))
+                .map(|(&pid, &ri)| (pid, out.unpack_range(ri * stride + j * w, w)))
                 .collect();
             Replay {
                 outputs,
@@ -511,16 +515,17 @@ pub fn replay_degraded_batch_kernels(
     let layout = kernels.layout();
 
     let arena = PackedPacketBuf::pack_columnar(layout, jobs, w);
+    let stride = arena.stride();
 
     // Evaluate only the rows some surviving processor needs.
     let live_rows = opt.matrix.rows_where(|pid| fault.survives(pid));
-    let mut out = PackedPacketBuf::zeros(layout, wb, live_rows.len());
+    let mut out = PackedPacketBuf::zeros_columnar(layout, wb, live_rows.len());
     if wb > 0 && !live_rows.is_empty() {
         let rows: Vec<&[u64]> = live_rows.iter().map(|&ri| opt.matrix.row(ri)).collect();
         kernels.gemm_rows(
             &rows,
             arena.buf(),
-            wb,
+            stride,
             out.buf_mut(),
             crate::net::parallel_enabled(),
         )?;
@@ -542,7 +547,7 @@ pub fn replay_degraded_batch_kernels(
         .map(|j| {
             survivors
                 .iter()
-                .map(|&(pid, p)| (pid, out.unpack_range(p * wb + j * w, w)))
+                .map(|&(pid, p)| (pid, out.unpack_range(p * stride + j * w, w)))
                 .collect()
         })
         .collect();

@@ -183,6 +183,14 @@ impl PacketBuf {
 pub struct PackedPacketBuf {
     width: usize,
     count: usize,
+    /// Lane distance between consecutive packets, `≥ width`. The
+    /// columnar constructors round each packet row up to a whole
+    /// 32-byte SIMD tile of the layout's lanes (the arena alignment
+    /// contract of `DESIGN.md §9`), so the vector gemm loops cover
+    /// whole rows with no per-row ragged tail; the pad lanes are zero
+    /// and stay zero (XOR/accumulate of zeros). Plain row-major
+    /// buffers keep `stride == width`.
+    stride: usize,
     buf: PackedBuf,
 }
 
@@ -192,6 +200,7 @@ impl PackedPacketBuf {
         PackedPacketBuf {
             width,
             count,
+            stride: width,
             buf: PackedBuf::zeros(layout, width * count),
         }
     }
@@ -201,30 +210,58 @@ impl PackedPacketBuf {
         PackedPacketBuf {
             width: src.width(),
             count: src.count(),
+            stride: src.width(),
             buf: PackedBuf::pack(layout, src.data()),
         }
     }
 
+    /// `width` rounded up to a whole 32-byte SIMD tile of `layout`
+    /// lanes — the stride of the columnar constructors.
+    fn tile_stride(layout: SymbolLayout, width: usize) -> usize {
+        let lanes = 32 / layout.bytes();
+        width.div_ceil(lanes) * lanes
+    }
+
     /// Pack `B` same-shape jobs into the strided **columnar arena** of
     /// the batched replay engine: `K` packets of width `W·B`, with job
-    /// `j`'s packet `k` at columns `[j·W, (j+1)·W)`. Built append-only
-    /// in storage order — no zero-fill pass over lanes that are about
-    /// to be overwritten. Callers guarantee the jobs are rectangular
-    /// (`K` rows each, common width `w`), as `exec::check_batch` does.
+    /// `j`'s packet `k` at columns `[j·W, (j+1)·W)` and each packet row
+    /// zero-padded to the tile-aligned [`stride`](Self::stride). Built
+    /// append-only in storage order — no zero-fill pass over lanes that
+    /// are about to be overwritten. Callers guarantee the jobs are
+    /// rectangular (`K` rows each, common width `w`), as
+    /// `exec::check_batch` does.
     pub fn pack_columnar(layout: SymbolLayout, jobs: &[&[Packet]], w: usize) -> Self {
         let b = jobs.len();
         let k = jobs.first().map_or(0, |job| job.len());
-        let mut buf = PackedBuf::with_capacity(layout, k * w * b);
+        let width = w * b;
+        let stride = Self::tile_stride(layout, width);
+        let mut buf = PackedBuf::with_capacity(layout, k * stride);
         for ki in 0..k {
             for job in jobs {
                 debug_assert_eq!(job[ki].len(), w, "ragged job in columnar pack");
                 buf.extend_from_u64(&job[ki]);
             }
+            buf.extend_zeros(stride - width);
         }
         PackedPacketBuf {
-            width: w * b,
+            width,
             count: k,
+            stride,
             buf,
+        }
+    }
+
+    /// `count` all-zero packets of width `width` with the same
+    /// tile-aligned stride as [`pack_columnar`](Self::pack_columnar) —
+    /// the matching output-arena constructor, so a gemm over a columnar
+    /// arena writes rows of identical shape.
+    pub fn zeros_columnar(layout: SymbolLayout, width: usize, count: usize) -> Self {
+        let stride = Self::tile_stride(layout, width);
+        PackedPacketBuf {
+            width,
+            count,
+            stride,
+            buf: PackedBuf::zeros(layout, stride * count),
         }
     }
 
@@ -238,11 +275,19 @@ impl PackedPacketBuf {
         self.count
     }
 
+    /// Lane distance between consecutive packets (`≥ width`; equal for
+    /// non-columnar buffers). Kernel callers use this as the gemm row
+    /// length so vector loops run over whole tile-aligned rows.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
     pub fn is_empty(&self) -> bool {
         self.count == 0
     }
 
-    /// Total size in field elements — the unit of `C2`.
+    /// Total size in field elements — the unit of `C2`. Stride padding
+    /// is storage, not payload, so it never counts here.
     pub fn elems(&self) -> u64 {
         (self.width * self.count) as u64
     }
@@ -259,7 +304,7 @@ impl PackedPacketBuf {
     /// Overwrite packet `i` from canonical `u64` elements.
     pub fn set_pkt(&mut self, i: usize, pkt: &[u64]) {
         debug_assert_eq!(pkt.len(), self.width, "packet width mismatch");
-        self.buf.copy_from_u64(i * self.width, pkt);
+        self.buf.copy_from_u64(i * self.stride, pkt);
     }
 
     /// Write canonical elements at a raw element offset — strided
@@ -268,9 +313,9 @@ impl PackedPacketBuf {
         self.buf.copy_from_u64(at, src);
     }
 
-    /// Packet `i`, unpacked to canonical `u64`s.
+    /// Packet `i`, unpacked to canonical `u64`s (pad lanes excluded).
     pub fn pkt(&self, i: usize) -> Packet {
-        self.buf.unpack_range(i * self.width, self.width)
+        self.buf.unpack_range(i * self.stride, self.width)
     }
 
     /// `len` elements from raw element offset `at`, unpacked.
@@ -288,9 +333,14 @@ impl PackedPacketBuf {
         &mut self.buf
     }
 
-    /// Unpack the whole buffer into a fresh [`PacketBuf`].
+    /// Unpack the whole buffer into a fresh [`PacketBuf`] — per packet,
+    /// so stride padding never leaks into the canonical view.
     pub fn to_packet_buf(&self) -> PacketBuf {
-        PacketBuf::from_flat(self.width, self.buf.to_u64())
+        let mut out = PacketBuf::with_capacity(self.width, self.count);
+        for i in 0..self.count {
+            out.push(&self.pkt(i));
+        }
+        out
     }
 }
 
@@ -405,6 +455,43 @@ mod tests {
         assert_eq!(z.pkt(0), vec![9, 0]);
         assert_eq!(z.pkt(1), vec![7, 65535]);
         assert_eq!(z.unpack_range(1, 2), vec![0, 7]);
+    }
+
+    #[test]
+    fn columnar_arena_is_tile_strided_with_zero_padding() {
+        // Two jobs of K = 2 packets, w = 3 → width 6, but u8 rows round
+        // up to a whole 32-byte tile.
+        let jobs_a = vec![vec![1u64, 2, 3], vec![4, 5, 6]];
+        let jobs_b = vec![vec![7u64, 8, 9], vec![10, 11, 12]];
+        let jobs: Vec<&[Packet]> = vec![&jobs_a, &jobs_b];
+        let arena = PackedPacketBuf::pack_columnar(SymbolLayout::U8, &jobs, 3);
+        assert_eq!(arena.width(), 6);
+        assert_eq!(arena.count(), 2);
+        assert_eq!(arena.stride(), 32);
+        assert_eq!(arena.buf().len(), 64, "2 rows × 32-lane stride");
+        assert_eq!(arena.elems(), 12, "padding is storage, not payload");
+        // Logical packets exclude the padding; pad lanes are zero.
+        assert_eq!(arena.pkt(0), vec![1, 2, 3, 7, 8, 9]);
+        assert_eq!(arena.pkt(1), vec![4, 5, 6, 10, 11, 12]);
+        assert_eq!(arena.unpack_range(6, 26), vec![0; 26]);
+        // The canonical view is padding-free too.
+        let unpacked = arena.to_packet_buf();
+        assert_eq!(unpacked.pkt(0), &[1, 2, 3, 7, 8, 9]);
+        assert_eq!(unpacked.elems(), 12);
+        // The output-arena constructor agrees on shape, and wider lanes
+        // round to fewer pad lanes (u32: 8 lanes per tile).
+        let out = PackedPacketBuf::zeros_columnar(SymbolLayout::U8, 6, 5);
+        assert_eq!(out.stride(), arena.stride());
+        assert_eq!(out.count(), 5);
+        let wide = PackedPacketBuf::zeros_columnar(SymbolLayout::U32, 9, 1);
+        assert_eq!(wide.stride(), 16);
+        // Degenerate: a width-0 arena has stride 0 and no storage.
+        let empty = PackedPacketBuf::zeros_columnar(SymbolLayout::U8, 0, 4);
+        assert_eq!(empty.stride(), 0);
+        assert_eq!(empty.buf().len(), 0);
+        // An exact multiple of the tile needs no padding at all.
+        let exact = PackedPacketBuf::zeros_columnar(SymbolLayout::U16, 32, 2);
+        assert_eq!(exact.stride(), 32);
     }
 
     #[test]

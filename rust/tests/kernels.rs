@@ -10,15 +10,33 @@
 //!   lengths straddling the gemm column tile;
 //! * end-to-end: `replay_batch` (packed) ≡ `replay_batch_scalar` ≡
 //!   per-job `replay` through a compiled plan, both field families.
+//!
+//! Every sweep runs once per **executable ISA tier**
+//! ([`IsaTier::available`]) so the explicit-SIMD backends are pinned to
+//! the scalar packed engine on whatever host runs the suite; CI's
+//! forced-tier matrix (`DCE_FORCE_ISA`) re-runs the whole suite per
+//! tier on top.
 
 use dce::gf::matrix::{gemm_into, GEMM_TILE};
-use dce::gf::{AnyField, Field, Gf2e, GfPrime, Kernels, SymbolLayout};
+use dce::gf::{AnyField, Field, Gf2e, GfPrime, IsaTier, Kernels, SymbolLayout};
 use dce::net::{exec, plan, Packet};
 use dce::util::Rng;
 
 /// Unaligned lengths: primes/odd sizes around cache-line and vector
-/// register widths, so no kernel gets to rely on alignment.
-const LENGTHS: [usize; 7] = [1, 3, 7, 15, 33, 100, 257];
+/// register widths — including one-below (31) and far-above (512) the
+/// 32-lane AVX2 step — so no kernel gets to rely on alignment and every
+/// SIMD main loop exercises both its vector body and its scalar tail.
+const LENGTHS: [usize; 9] = [1, 3, 7, 15, 31, 33, 100, 257, 512];
+
+/// The tiers this host can execute, scalar first. Tiers are selected
+/// through the API (`Kernels::for_field_with_isa`), **not** the
+/// `DCE_FORCE_ISA` env var: the test harness runs tests on parallel
+/// threads and the env override is latched process-wide on first
+/// detection, so per-test env mutation would race. CI exercises the env
+/// path via its forced-tier matrix instead.
+fn tiers() -> Vec<IsaTier> {
+    IsaTier::available()
+}
 
 fn rand_vec<F: Field>(f: &F, n: usize, rng: &mut Rng) -> Vec<u64> {
     (0..n).map(|_| rng.below(f.order())).collect()
@@ -47,25 +65,28 @@ fn packed_lincomb(kern: &Kernels, init: &[u64], coeffs: &[u64], srcs: &[Vec<u64>
 #[test]
 fn gf256_axpy_exhaustive_over_all_coefficients() {
     let f = Gf2e::new(8).unwrap();
-    let kern = Kernels::for_field(&f);
-    assert_eq!(kern.layout(), SymbolLayout::U8);
-    let mut rng = Rng::new(0x256);
-    for n in LENGTHS {
-        // Sources seeded with zeros interleaved — the zero-symbol skip
-        // of the log path has no analogue in the table path, and both
-        // must still agree.
-        let mut src = rand_vec(&f, n, &mut rng);
-        if n > 2 {
-            src[n / 2] = 0;
-            src[n - 1] = 0;
-        }
-        let acc0 = rand_vec(&f, n, &mut rng);
-        for c in 0..256u64 {
-            let mut scalar = acc0.clone();
-            f.axpy_into(&mut scalar, c, &src);
-            let mut packed = kern.pack(&acc0);
-            kern.axpy(&mut packed, c, &kern.pack(&src)).unwrap();
-            assert_eq!(packed.to_u64(), scalar, "c={c} n={n}");
+    for tier in tiers() {
+        let kern = Kernels::for_field_with_isa(&f, tier);
+        assert_eq!(kern.layout(), SymbolLayout::U8);
+        assert_eq!(kern.isa(), tier);
+        let mut rng = Rng::new(0x256);
+        for n in LENGTHS {
+            // Sources seeded with zeros interleaved — the zero-symbol
+            // skip of the log path has no analogue in the table path,
+            // and both must still agree.
+            let mut src = rand_vec(&f, n, &mut rng);
+            if n > 2 {
+                src[n / 2] = 0;
+                src[n - 1] = 0;
+            }
+            let acc0 = rand_vec(&f, n, &mut rng);
+            for c in 0..256u64 {
+                let mut scalar = acc0.clone();
+                f.axpy_into(&mut scalar, c, &src);
+                let mut packed = kern.pack(&acc0);
+                kern.axpy(&mut packed, c, &kern.pack(&src)).unwrap();
+                assert_eq!(packed.to_u64(), scalar, "{tier:?} c={c} n={n}");
+            }
         }
     }
 }
@@ -75,18 +96,20 @@ fn gf256_lincomb_exhaustive_coefficient_sweep() {
     // Every coefficient appears in some lincomb: 32 lincombs of 8 terms
     // cover 0..256 exactly, on an unaligned length.
     let f = Gf2e::new(8).unwrap();
-    let kern = Kernels::for_field(&f);
-    let mut rng = Rng::new(0x257);
-    let n = 37;
-    for block in 0..32u64 {
-        let coeffs: Vec<u64> = (0..8).map(|i| block * 8 + i).collect();
-        let srcs: Vec<Vec<u64>> = (0..8).map(|_| rand_vec(&f, n, &mut rng)).collect();
-        let init = rand_vec(&f, n, &mut rng);
-        assert_eq!(
-            packed_lincomb(&kern, &init, &coeffs, &srcs),
-            scalar_lincomb(&f, &init, &coeffs, &srcs),
-            "coefficient block {block}"
-        );
+    for tier in tiers() {
+        let kern = Kernels::for_field_with_isa(&f, tier);
+        let mut rng = Rng::new(0x257);
+        let n = 37;
+        for block in 0..32u64 {
+            let coeffs: Vec<u64> = (0..8).map(|i| block * 8 + i).collect();
+            let srcs: Vec<Vec<u64>> = (0..8).map(|_| rand_vec(&f, n, &mut rng)).collect();
+            let init = rand_vec(&f, n, &mut rng);
+            assert_eq!(
+                packed_lincomb(&kern, &init, &coeffs, &srcs),
+                scalar_lincomb(&f, &init, &coeffs, &srcs),
+                "{tier:?} coefficient block {block}"
+            );
+        }
     }
 }
 
@@ -95,22 +118,27 @@ fn gf2e_every_width_seeded_sweep() {
     let mut rng = Rng::new(0x2E);
     for w in 1..=16u32 {
         let f = Gf2e::new(w).unwrap();
-        let kern = Kernels::for_field(&f);
-        assert_eq!(
-            kern.layout(),
-            if w <= 8 { SymbolLayout::U8 } else { SymbolLayout::U16 },
-            "w={w}"
-        );
-        for n in [1usize, 9, 64] {
-            let n_terms = 5;
-            let coeffs = rand_vec(&f, n_terms, &mut rng);
-            let srcs: Vec<Vec<u64>> = (0..n_terms).map(|_| rand_vec(&f, n, &mut rng)).collect();
-            let init = rand_vec(&f, n, &mut rng);
+        for tier in tiers() {
+            let kern = Kernels::for_field_with_isa(&f, tier);
             assert_eq!(
-                packed_lincomb(&kern, &init, &coeffs, &srcs),
-                scalar_lincomb(&f, &init, &coeffs, &srcs),
-                "w={w} n={n}"
+                kern.layout(),
+                if w <= 8 { SymbolLayout::U8 } else { SymbolLayout::U16 },
+                "w={w}"
             );
+            // 35 straddles both the 16-lane wide-gather step and the
+            // 32-lane nibble step, leaving a ragged scalar tail.
+            for n in [1usize, 9, 35, 64] {
+                let n_terms = 5;
+                let coeffs = rand_vec(&f, n_terms, &mut rng);
+                let srcs: Vec<Vec<u64>> =
+                    (0..n_terms).map(|_| rand_vec(&f, n, &mut rng)).collect();
+                let init = rand_vec(&f, n, &mut rng);
+                assert_eq!(
+                    packed_lincomb(&kern, &init, &coeffs, &srcs),
+                    scalar_lincomb(&f, &init, &coeffs, &srcs),
+                    "{tier:?} w={w} n={n}"
+                );
+            }
         }
     }
 }
@@ -123,40 +151,44 @@ fn prime_fields_across_lazy_chunk_boundaries() {
     let mut rng = Rng::new(0x31);
     for p in [786433u64, 2147483647, 65537, 257, 251] {
         let f = GfPrime::new(p).unwrap();
-        let kern = Kernels::for_field(&f);
-        assert_eq!(kern.layout(), SymbolLayout::for_bits(f.bits()), "p={p}");
-        let chunk = f.lazy_chunk();
-        let mut term_counts = vec![1usize, 2, 3, 4, 5, 8, 9, 17, 100];
-        for d in [-1i64, 0, 1] {
-            let t = chunk as i64 + d;
-            if (1..=256).contains(&t) {
-                term_counts.push(t as usize);
+        for tier in tiers() {
+            let kern = Kernels::for_field_with_isa(&f, tier);
+            assert_eq!(kern.layout(), SymbolLayout::for_bits(f.bits()), "p={p}");
+            let chunk = f.lazy_chunk();
+            let mut term_counts = vec![1usize, 2, 3, 4, 5, 8, 9, 17, 100];
+            for d in [-1i64, 0, 1] {
+                let t = chunk as i64 + d;
+                if (1..=256).contains(&t) {
+                    term_counts.push(t as usize);
+                }
             }
-        }
-        for &n_terms in &term_counts {
-            for n in [1usize, 5, 37] {
-                let coeffs = rand_vec(&f, n_terms, &mut rng);
-                let srcs: Vec<Vec<u64>> =
-                    (0..n_terms).map(|_| rand_vec(&f, n, &mut rng)).collect();
-                let init = rand_vec(&f, n, &mut rng);
-                assert_eq!(
-                    packed_lincomb(&kern, &init, &coeffs, &srcs),
-                    scalar_lincomb(&f, &init, &coeffs, &srcs),
-                    "p={p} terms={n_terms} n={n}"
-                );
+            for &n_terms in &term_counts {
+                // 5 leaves a pure scalar tail on the 4-wide fma lanes;
+                // 37 exercises vector body + tail.
+                for n in [1usize, 5, 37] {
+                    let coeffs = rand_vec(&f, n_terms, &mut rng);
+                    let srcs: Vec<Vec<u64>> =
+                        (0..n_terms).map(|_| rand_vec(&f, n, &mut rng)).collect();
+                    let init = rand_vec(&f, n, &mut rng);
+                    assert_eq!(
+                        packed_lincomb(&kern, &init, &coeffs, &srcs),
+                        scalar_lincomb(&f, &init, &coeffs, &srcs),
+                        "{tier:?} p={p} terms={n_terms} n={n}"
+                    );
+                }
             }
+            // Worst-case coefficients/symbols (p−1 everywhere) right at
+            // the chunk boundary — the overflow-headroom edge.
+            let n_terms = chunk.min(64);
+            let coeffs = vec![p - 1; n_terms];
+            let srcs: Vec<Vec<u64>> = (0..n_terms).map(|_| vec![p - 1; 8]).collect();
+            let init = vec![p - 1; 8];
+            assert_eq!(
+                packed_lincomb(&kern, &init, &coeffs, &srcs),
+                scalar_lincomb(&f, &init, &coeffs, &srcs),
+                "{tier:?} p={p} worst-case chunk"
+            );
         }
-        // Worst-case coefficients/symbols (p−1 everywhere) right at the
-        // chunk boundary — the overflow-headroom edge.
-        let n_terms = chunk.min(64);
-        let coeffs = vec![p - 1; n_terms];
-        let srcs: Vec<Vec<u64>> = (0..n_terms).map(|_| vec![p - 1; 8]).collect();
-        let init = vec![p - 1; 8];
-        assert_eq!(
-            packed_lincomb(&kern, &init, &coeffs, &srcs),
-            scalar_lincomb(&f, &init, &coeffs, &srcs),
-            "p={p} worst-case chunk"
-        );
     }
 }
 
@@ -165,17 +197,20 @@ fn packed_gemm_matches_scalar_gemm_across_tile_seam() {
     let mut rng = Rng::new(0x93);
     for spec in ["gf2e:8", "gf2e:12", "786433", "2147483647"] {
         let f = AnyField::parse(spec).unwrap();
-        let kern = Kernels::for_field(&f);
-        for (m, k, n) in [(3usize, 5usize, 33usize), (4, 7, GEMM_TILE + 29)] {
-            let mut a: Vec<u64> = rand_vec(&f, m * k, &mut rng);
-            a[1] = 0; // zero-coefficient skip must not change results
-            let b: Vec<u64> = rand_vec(&f, k * n, &mut rng);
-            let mut scalar = vec![0u64; m * n];
-            gemm_into(&f, m, k, &a, &b, n, &mut scalar);
-            let rows: Vec<&[u64]> = (0..m).map(|i| &a[i * k..(i + 1) * k]).collect();
-            let mut packed = kern.zeros(m * n);
-            kern.gemm_rows(&rows, &kern.pack(&b), n, &mut packed, false).unwrap();
-            assert_eq!(packed.to_u64(), scalar, "{spec} m={m} k={k} n={n}");
+        for tier in tiers() {
+            let kern = Kernels::for_field_with_isa(&f, tier);
+            for (m, k, n) in [(3usize, 5usize, 33usize), (4, 7, GEMM_TILE + 29)] {
+                let mut a: Vec<u64> = rand_vec(&f, m * k, &mut rng);
+                a[1] = 0; // zero-coefficient skip must not change results
+                let b: Vec<u64> = rand_vec(&f, k * n, &mut rng);
+                let mut scalar = vec![0u64; m * n];
+                gemm_into(&f, m, k, &a, &b, n, &mut scalar);
+                let rows: Vec<&[u64]> = (0..m).map(|i| &a[i * k..(i + 1) * k]).collect();
+                let mut packed = kern.zeros(m * n);
+                kern.gemm_rows(&rows, &kern.pack(&b), n, &mut packed, false)
+                    .unwrap();
+                assert_eq!(packed.to_u64(), scalar, "{tier:?} {spec} m={m} k={k} n={n}");
+            }
         }
     }
 }
@@ -203,21 +238,32 @@ fn packed_replay_batch_equals_scalar_and_raw_replay() {
         })
         .unwrap();
         let opt = dce::net::optimize(&compiled);
-        let kern = Kernels::for_field(&f);
         for (b, w) in [(1usize, 3usize), (5, 1), (32, 4)] {
             let jobs: Vec<Vec<Packet>> = (0..b)
                 .map(|_| (0..k).map(|_| rand_vec(&f, w, &mut rng)).collect())
                 .collect();
             let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
             let packed = exec::replay_batch(&opt, &f, &refs).unwrap();
-            let pre = exec::replay_batch_kernels(&opt, &kern, &refs).unwrap();
             let scalar = exec::replay_batch_scalar(&opt, &f, &refs).unwrap();
             for j in 0..b {
                 let raw = exec::replay(&compiled, &f, &jobs[j]).unwrap();
                 assert_eq!(packed[j].outputs, raw.outputs, "{spec} B={b} job {j}");
                 assert_eq!(scalar[j].outputs, raw.outputs, "{spec} B={b} job {j} scalar");
-                assert_eq!(pre[j].outputs, raw.outputs, "{spec} B={b} job {j} kernels");
                 assert_eq!(packed[j].report, raw.report, "{spec} B={b} job {j} report");
+            }
+            for tier in tiers() {
+                let kern = Kernels::for_field_with_isa(&f, tier);
+                let pre = exec::replay_batch_kernels(&opt, &kern, &refs).unwrap();
+                for j in 0..b {
+                    assert_eq!(
+                        pre[j].outputs, scalar[j].outputs,
+                        "{tier:?} {spec} B={b} job {j} kernels"
+                    );
+                    assert_eq!(
+                        pre[j].report, scalar[j].report,
+                        "{tier:?} {spec} B={b} job {j} kernels report"
+                    );
+                }
             }
         }
     }

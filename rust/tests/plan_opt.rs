@@ -13,7 +13,7 @@
 use dce::codes::{structured::disjoint_family, StructuredPoints};
 use dce::collectives::{CauchyA2A, DftA2A, DrawLoose, PrepareShoot};
 use dce::framework::{A2aAlgo, SystematicEncode};
-use dce::gf::{Field, Gf2e, GfPrime, Mat};
+use dce::gf::{Field, Gf2e, GfPrime, IsaTier, Kernels, Mat};
 use dce::net::{exec, opt, plan, run, Collective, Packet, Sim};
 use dce::util::{ipow, Rng};
 use std::sync::Arc;
@@ -86,6 +86,124 @@ where
             }
         }
     }
+}
+
+/// Forced-tier conformance: compile + optimize once, take the u64
+/// scalar engine as reference, then replay the same batch through
+/// `replay_batch_kernels` under every *requested* ISA tier — scalar,
+/// AVX2 and NEON. `Kernels` clamps a request the host cannot execute
+/// down to scalar, so the sweep is safe everywhere while still pinning
+/// the real SIMD backends wherever they exist. Outputs **and** report
+/// must be bit-identical per tier.
+fn assert_tiers_match<F, B>(tag: &str, f: &F, ports: usize, k: usize, build: B)
+where
+    F: Field,
+    B: Fn(Vec<Packet>) -> Box<dyn Collective>,
+{
+    let compiled = plan::compile(ports, k, |basis| Ok(build(basis))).unwrap();
+    let optimized = opt::optimize(&compiled);
+    let mut rng = Rng::new(0x15A);
+    let (b, w) = (4usize, 3usize);
+    let jobs: Vec<Vec<Packet>> = (0..b).map(|_| rand_inputs(f, k, w, &mut rng)).collect();
+    let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
+    let scalar = exec::replay_batch_scalar(&optimized, f, &refs).unwrap();
+    for req in [IsaTier::Scalar, IsaTier::Avx2, IsaTier::Neon] {
+        let kern = Kernels::for_field_with_isa(f, req);
+        assert!(
+            IsaTier::available().contains(&kern.isa()),
+            "{tag}: request {req:?} resolved to non-executable {:?}",
+            kern.isa()
+        );
+        let tiered = exec::replay_batch_kernels(&optimized, &kern, &refs).unwrap();
+        for (j, (tj, sj)) in tiered.iter().zip(&scalar).enumerate() {
+            assert_eq!(tj.outputs, sj.outputs, "{tag} {req:?} job {j}: outputs");
+            assert_eq!(tj.report, sj.report, "{tag} {req:?} job {j}: report");
+        }
+    }
+}
+
+#[test]
+fn forced_isa_tiers_replay_bit_identical_for_every_a2a_variant() {
+    // Tentpole acceptance: all four A2A variants, both field families,
+    // bit-identical across every requested kernel ISA tier.
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xB08);
+
+    let k = 6usize;
+    let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+    assert_tiers_match("ps/prime", &f, 2, k, move |ins| {
+        Box::new(PrepareShoot::new(f, (0..k).collect(), 2, c.clone(), ins))
+    });
+    assert_tiers_match("dft/prime", &f, 1, 4, move |ins| {
+        Box::new(DftA2A::new(f, (0..4).collect(), 1, 2, 2, ins, false).unwrap())
+    });
+    let n = 8usize;
+    let hmax = StructuredPoints::max_h(&f, n as u64, 2);
+    let m = n / ipow(2, hmax) as usize;
+    let sp = StructuredPoints::new(&f, n, 2, (0..m as u64).collect()).unwrap();
+    assert_tiers_match("dl/prime", &f, 1, n, move |ins| {
+        Box::new(DrawLoose::new(f, (0..n).collect(), 1, &sp, ins, false).unwrap())
+    });
+    let fam = disjoint_family(&f, n, 2, 2).unwrap();
+    let pre: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+    let post: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+    assert_tiers_match("cauchy/prime", &f, 1, n, move |ins| {
+        Box::new(
+            CauchyA2A::new(
+                f,
+                (0..n).collect(),
+                1,
+                &fam[0],
+                &fam[1],
+                pre.clone(),
+                post.clone(),
+                ins,
+            )
+            .unwrap(),
+        )
+    });
+
+    let f = Gf2e::new(8).unwrap();
+    let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+    let ff = f.clone();
+    assert_tiers_match("ps/gf2e", &f, 2, k, move |ins| {
+        Box::new(PrepareShoot::new(
+            ff.clone(),
+            (0..k).collect(),
+            2,
+            c.clone(),
+            ins,
+        ))
+    });
+    let ff = f.clone();
+    assert_tiers_match("dft/gf2e", &f, 1, 3, move |ins| {
+        Box::new(DftA2A::new(ff.clone(), (0..3).collect(), 1, 3, 1, ins, false).unwrap())
+    });
+    let n = 6usize;
+    let sp = StructuredPoints::new(&f, n, 3, vec![0, 1]).unwrap();
+    let ff = f.clone();
+    assert_tiers_match("dl/gf2e", &f, 1, n, move |ins| {
+        Box::new(DrawLoose::new(ff.clone(), (0..n).collect(), 1, &sp, ins, false).unwrap())
+    });
+    let fam = disjoint_family(&f, n, 3, 2).unwrap();
+    let pre: Vec<u64> = (0..n).map(|_| rng.range(1, 256)).collect();
+    let post: Vec<u64> = (0..n).map(|_| rng.range(1, 256)).collect();
+    let ff = f.clone();
+    assert_tiers_match("cauchy/gf2e", &f, 1, n, move |ins| {
+        Box::new(
+            CauchyA2A::new(
+                ff.clone(),
+                (0..n).collect(),
+                1,
+                &fam[0],
+                &fam[1],
+                pre.clone(),
+                post.clone(),
+                ins,
+            )
+            .unwrap(),
+        )
+    });
 }
 
 #[test]

@@ -18,18 +18,24 @@ Gating rules
   the artifact of a real (non-smoke) bench run replaces it.
 * **Deterministic** fields gate unconditionally:
   - ``slots_after`` must not increase (optimizer regressions),
-  - ``recovery_exact``, ``packed_equals_scalar`` and
-    ``backend_equals_dense`` must not flip away from ``true``.
+  - ``recovery_exact``, ``packed_equals_scalar``,
+    ``simd_equals_scalar`` and ``backend_equals_dense`` must not flip
+    away from ``true``.
 * **Timing** fields gate only when *both* files were produced with
   ``smoke == false`` (a real multi-iteration run on comparable
   hardware). Smoke runs execute one iteration on shared runners — their
   timings are reported as advisory deltas, never failed on:
   - lower-is-better (fail when current > 1.30 x baseline):
     ``singles_us_per_job``, ``batch_us_per_job``, ``us_per_job``,
-    ``packed_us_per_job``, ``dense_us_per_job``, ``ntt_us_per_job``;
+    ``packed_us_per_job``, ``dense_us_per_job``, ``ntt_us_per_job``,
+    ``gemm_us``;
   - higher-is-better (fail when current < baseline / 1.30):
     ``speedup``, ``recovered_per_s``, ``axpy_speedup``,
-    ``lincomb_speedup``, ``gemm_speedup``.
+    ``lincomb_speedup``, ``gemm_speedup``,
+    ``gemm_speedup_vs_scalar_tier``.
+* Seed and smoke baselines are **loudly flagged**: a ``WARN`` line (and
+  a GitHub ``::warning::`` annotation when running under Actions) makes
+  an ungated comparison impossible to mistake for a passing gate.
 * ``crossover_k`` (the measured dense→NTT crossover of the K-sweep in
   ``BENCH_ntt.json``) is **advisory**: a shift is printed as a notice,
   never failed on — it moves with the hardware, not with regressions.
@@ -50,6 +56,7 @@ TIMING_LOWER_BETTER = {
     "packed_us_per_job",
     "dense_us_per_job",
     "ntt_us_per_job",
+    "gemm_us",
 }
 TIMING_HIGHER_BETTER = {
     "speedup",
@@ -57,11 +64,18 @@ TIMING_HIGHER_BETTER = {
     "axpy_speedup",
     "lincomb_speedup",
     "gemm_speedup",
+    "gemm_speedup_vs_scalar_tier",
 }
 EXACT_LOWER_OR_EQUAL = {"slots_after"}
 # Booleans that may never flip away from true: exact erasure recovery,
-# packed-kernel/scalar bit-identity, NTT-backend/dense bit-identity.
-EXACT_MUST_HOLD = {"recovery_exact", "packed_equals_scalar", "backend_equals_dense"}
+# packed-kernel/scalar bit-identity, SIMD-tier/scalar-tier bit-identity,
+# NTT-backend/dense bit-identity.
+EXACT_MUST_HOLD = {
+    "recovery_exact",
+    "packed_equals_scalar",
+    "simd_equals_scalar",
+    "backend_equals_dense",
+}
 # Numbers that move with the hardware, not with regressions: report
 # shifts as notices, never failures.
 ADVISORY_SHIFT = {"crossover_k"}
@@ -70,6 +84,16 @@ ALIGN_KEYS = ("name", "failed")
 
 failures = []
 notices = []
+warnings = []
+
+
+def warn(name, title, detail):
+    """A loud, ungated-run warning: WARN line + GitHub annotation."""
+    warnings.append(f"{name}: {detail}")
+    if os.environ.get("GITHUB_ACTIONS") == "true":
+        # Surfaces in the Actions run summary and on the PR checks tab,
+        # so an ungated comparison is visible without opening the log.
+        print(f"::warning title={title}::{name}: {detail}")
 
 
 def align(base_list, cur_list):
@@ -164,17 +188,22 @@ def check_file(name, baseline_dir, current_dir):
         )
         return
     if base.get("seed_baseline"):
-        notices.append(
-            f"{name}: seed baseline (never measured) — structure checked only; "
-            f"commit a fresh non-smoke run of this bench to start gating numbers"
+        warn(
+            name,
+            "seed bench baseline — numbers NOT gated",
+            "seed baseline (never measured): structure checked only, every "
+            "number is ungated; commit a fresh non-smoke run of this bench "
+            "to start gating (CI's bench-refresh job does this on main)",
         )
         return
     timing_gated = base.get("smoke") is False and cur.get("smoke") is False
     if not timing_gated:
-        notices.append(
-            f"{name}: smoke-mode timings (base smoke={base.get('smoke')}, "
-            f"current smoke={cur.get('smoke')}) — timing deltas advisory, "
-            f"deterministic fields still gated"
+        warn(
+            name,
+            "smoke bench baseline — timings NOT gated",
+            f"smoke-mode timings (base smoke={base.get('smoke')}, "
+            f"current smoke={cur.get('smoke')}): timing deltas advisory "
+            f"only, deterministic fields still gated",
         )
     compare(name, base, cur, timing_gated)
 
@@ -187,6 +216,8 @@ def main():
     args = ap.parse_args()
     for name in args.files:
         check_file(name, args.baseline_dir, args.current_dir)
+    for w in warnings:
+        print(f"WARN  {w}")
     for n in notices:
         print(f"NOTE  {n}")
     for f in failures:
@@ -194,6 +225,12 @@ def main():
     if failures:
         print(f"\nbench-trend: {len(failures)} regression(s) against committed baselines")
         return 1
+    if warnings:
+        print(
+            f"\nbench-trend: OK with {len(warnings)} WARNING(s) — some numbers "
+            f"were NOT gated ({len(args.files)} result file(s) checked)"
+        )
+        return 0
     print(f"\nbench-trend: OK ({len(args.files)} result file(s) checked)")
     return 0
 
