@@ -1,0 +1,390 @@
+//! Bench: **high-concurrency serving tier** — the sharded-cache
+//! event-driven dispatcher ([`EncodeService`]) vs a faithful
+//! reimplementation of the pre-sharding service (one shared
+//! `sync_channel` behind a mutex, 50 ms poll loops, the queue lock held
+//! across the batch-collect window, mixed-width batches split into one
+//! columnar pass per width at serve time).
+//!
+//! Scenario: 64 closed-loop clients per shape, 4 shapes (two fields,
+//! three code families), every client cycling small mixed-width
+//! payloads — the regime where per-pass fixed costs dominate and the
+//! dispatcher's per-width queues turn each batch into a single
+//! columnar pass while the legacy engine splits every batch four ways.
+//!
+//! Asserted unconditionally (smoke included): every response is
+//! **bit-identical** to the direct `encode_cached` oracle, and a
+//! graceful shutdown answers all queued requests (zero drops).
+//! Asserted non-smoke: ≥ 2× aggregate throughput over the legacy
+//! engine. Results land in `BENCH_serve.json` at the repo root for the
+//! CI `bench-trend` job.
+
+use dce::coordinator::config::CodeKind;
+use dce::coordinator::{BatchPolicy, EncodeJob, EncodeService, JobConfig, PlanCache};
+use dce::gf::Field;
+use dce::util::{bench_smoke, Rng};
+use std::collections::BTreeMap;
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Request payload widths every client cycles through — small on
+/// purpose: the many-small-requests regime the serving tier targets.
+const WIDTHS: [usize; 4] = [2, 3, 4, 5];
+const N_WORKERS: usize = 4;
+const QUEUE_DEPTH: usize = 256;
+
+fn policy() -> BatchPolicy {
+    BatchPolicy {
+        max_batch: 16,
+        max_delay: Duration::from_micros(200),
+    }
+}
+
+fn shapes() -> Vec<(String, JobConfig)> {
+    let base = JobConfig::default();
+    vec![
+        (
+            "prime:786433 k64 r16 rs-structured".into(),
+            JobConfig {
+                k: 64,
+                r: 16,
+                code: CodeKind::RsStructured,
+                ..base.clone()
+            },
+        ),
+        (
+            "prime:786433 k32 r8 lagrange".into(),
+            JobConfig {
+                k: 32,
+                r: 8,
+                code: CodeKind::Lagrange,
+                ..base.clone()
+            },
+        ),
+        (
+            "gf2e:8 k24 r8 rs-structured".into(),
+            JobConfig {
+                field: "gf2e:8".into(),
+                k: 24,
+                r: 8,
+                code: CodeKind::RsStructured,
+                ..base.clone()
+            },
+        ),
+        (
+            "prime:65537 k16 r4 rs-plain".into(),
+            JobConfig {
+                field: "prime:65537".into(),
+                k: 16,
+                r: 4,
+                code: CodeKind::RsPlain,
+                ..base
+            },
+        ),
+    ]
+}
+
+/// One client's request pool: `(payload, oracle parity)` pairs,
+/// precomputed outside every timed region.
+type Pool = Vec<(Vec<Vec<u64>>, Vec<Vec<u64>>)>;
+
+fn build_pools(cfg: &JobConfig, job: &EncodeJob, clients: usize, seed: u64) -> Vec<Pool> {
+    let f = cfg.any_field().unwrap();
+    let oracle_cache = PlanCache::new();
+    (0..clients)
+        .map(|c| {
+            let mut rng = Rng::new(seed ^ (c as u64).wrapping_mul(0x9E37_79B9));
+            WIDTHS
+                .iter()
+                .map(|&w| {
+                    let x: Vec<Vec<u64>> = (0..cfg.k)
+                        .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                        .collect();
+                    let y = job.encode_cached(&oracle_cache, &x).unwrap();
+                    (x, y)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Run `clients` closed-loop clients, each issuing `reqs` requests via
+/// `roundtrip` (submit + await). Returns (wall seconds, all request
+/// latencies in µs, every response matched its oracle).
+fn run_clients<F>(clients: usize, reqs: usize, pools: &[Pool], roundtrip: F) -> (f64, Vec<u64>, bool)
+where
+    F: Fn(u64, &[Vec<u64>]) -> Vec<Vec<u64>> + Sync,
+{
+    let t0 = Instant::now();
+    let per_client: Vec<(Vec<u64>, bool)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let pool = &pools[c];
+                let rt = &roundtrip;
+                s.spawn(move || {
+                    let mut lat = Vec::with_capacity(reqs);
+                    let mut ok = true;
+                    for r in 0..reqs {
+                        let (x, want) = &pool[r % pool.len()];
+                        let q0 = Instant::now();
+                        let y = rt(c as u64, x);
+                        lat.push(q0.elapsed().as_micros() as u64);
+                        ok &= &y == want;
+                    }
+                    (lat, ok)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let mut lat = Vec::with_capacity(clients * reqs);
+    let mut ok = true;
+    for (l, o) in per_client {
+        lat.extend(l);
+        ok &= o;
+    }
+    (secs, lat, ok)
+}
+
+// ---------------------------------------------------------------------------
+// The legacy engine: a faithful compact reimplementation of the
+// pre-sharding service, kept as the bench baseline. One bounded
+// channel; every worker locks the receiver, polls with a 50 ms
+// timeout, holds the lock for the whole batch-collect window, then
+// serves the (possibly mixed-width) batch as one columnar pass per
+// width group.
+// ---------------------------------------------------------------------------
+
+struct LegacyRequest {
+    x: Vec<Vec<u64>>,
+    reply: mpsc::Sender<Vec<Vec<u64>>>,
+}
+
+struct LegacyService {
+    tx: Option<mpsc::SyncSender<LegacyRequest>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl LegacyService {
+    fn start(cfg: &JobConfig, n_workers: usize, queue_depth: usize, pol: BatchPolicy) -> Self {
+        let job = Arc::new(EncodeJob::synthetic(cfg.clone()).unwrap());
+        let cache = Arc::new(PlanCache::new());
+        let (tx, rx) = mpsc::sync_channel::<LegacyRequest>(queue_depth);
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..n_workers)
+            .map(|_| {
+                let rx = rx.clone();
+                let job = job.clone();
+                let cache = cache.clone();
+                std::thread::spawn(move || loop {
+                    let guard = rx.lock().unwrap();
+                    let first = match guard.recv_timeout(Duration::from_millis(50)) {
+                        Ok(r) => r,
+                        Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    };
+                    let mut batch = vec![first];
+                    let t0 = Instant::now();
+                    while batch.len() < pol.max_batch {
+                        let left = pol.max_delay.saturating_sub(t0.elapsed());
+                        if left.is_zero() {
+                            break;
+                        }
+                        match guard.recv_timeout(left) {
+                            Ok(r) => batch.push(r),
+                            Err(_) => break,
+                        }
+                    }
+                    drop(guard);
+                    // Mixed widths split into one pass per group here —
+                    // the structural cost the dispatcher removed.
+                    let mut by_width: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+                    for (i, r) in batch.iter().enumerate() {
+                        by_width.entry(r.x[0].len()).or_default().push(i);
+                    }
+                    for idxs in by_width.values() {
+                        let jobs: Vec<&[Vec<u64>]> =
+                            idxs.iter().map(|&i| batch[i].x.as_slice()).collect();
+                        let ys = job.encode_batch_cached(&cache, &jobs).unwrap();
+                        for (&i, y) in idxs.iter().zip(ys) {
+                            let _ = batch[i].reply.send(y);
+                        }
+                    }
+                })
+            })
+            .collect();
+        LegacyService {
+            tx: Some(tx),
+            workers,
+        }
+    }
+
+    fn submit(&self, x: Vec<Vec<u64>>) -> mpsc::Receiver<Vec<Vec<u64>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("legacy service running")
+            .send(LegacyRequest { x, reply })
+            .expect("legacy queue alive");
+        rx
+    }
+
+    fn shutdown(mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Graceful-shutdown drain check on the sharded engine: queue `n`
+/// requests into a wide-open batch window, shut down, count replies.
+fn shutdown_drain_check(cfg: &JobConfig, n: usize) -> bool {
+    let svc = EncodeService::start_replay_with(
+        cfg,
+        N_WORKERS,
+        n,
+        BatchPolicy {
+            max_batch: 16,
+            max_delay: Duration::from_secs(10),
+        },
+    )
+    .unwrap();
+    let f = cfg.any_field().unwrap();
+    let mut rng = Rng::new(0xD1A1);
+    let pending: Vec<_> = (0..n)
+        .map(|_| {
+            let x: Vec<Vec<u64>> = (0..cfg.k)
+                .map(|_| (0..3).map(|_| rng.below(f.order())).collect())
+                .collect();
+            svc.submit(x).unwrap()
+        })
+        .collect();
+    svc.shutdown();
+    pending
+        .into_iter()
+        .all(|rx| matches!(rx.recv(), Ok(resp) if resp.y.is_ok()))
+}
+
+fn pct(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+fn main() {
+    let smoke = bench_smoke();
+    let clients = if smoke { 8 } else { 64 };
+    let reqs = if smoke { 4 } else { 100 };
+    println!(
+        "## serving tier: sharded dispatcher vs legacy single-queue \
+         ({clients} clients × {reqs} reqs × {} shapes{})",
+        shapes().len(),
+        if smoke { ", SMOKE" } else { "" }
+    );
+
+    let mut new_secs = 0.0f64;
+    let mut legacy_secs = 0.0f64;
+    let mut total_reqs = 0u64;
+    let mut all_lat: Vec<u64> = Vec::new();
+    let mut all_match = true;
+    let mut shape_names = Vec::new();
+    for (si, (name, cfg)) in shapes().into_iter().enumerate() {
+        let job = EncodeJob::synthetic(cfg.clone()).unwrap();
+        let pools = build_pools(&cfg, &job, clients, 0x5EED + si as u64);
+
+        let legacy = LegacyService::start(&cfg, N_WORKERS, QUEUE_DEPTH, policy());
+        let (lsecs, _llat, lok) = run_clients(clients, reqs, &pools, |_tenant, x| {
+            legacy.submit(x.to_vec()).recv().expect("legacy reply")
+        });
+        legacy.shutdown();
+
+        let mut cfg_srv = cfg.clone();
+        cfg_srv.serve.max_batch = policy().max_batch;
+        cfg_srv.serve.max_delay_us = policy().max_delay.as_micros() as u64;
+        cfg_srv.serve.queue_depth = QUEUE_DEPTH;
+        let svc = EncodeService::start_replay(&cfg_srv, N_WORKERS, QUEUE_DEPTH).unwrap();
+        let (nsecs, nlat, nok) = run_clients(clients, reqs, &pools, |tenant, x| {
+            svc.submit_tenant(tenant, x.to_vec())
+                .expect("admitted")
+                .recv()
+                .expect("served")
+                .y
+                .expect("encoded")
+        });
+        svc.shutdown();
+
+        assert!(lok, "{name}: legacy responses must match the oracle");
+        assert!(nok, "{name}: sharded responses must match the oracle");
+        all_match &= lok & nok;
+        let n = (clients * reqs) as f64;
+        println!(
+            "{name}: legacy {:>9.0} req/s | sharded {:>9.0} req/s | {:.2}x",
+            n / lsecs,
+            n / nsecs,
+            lsecs / nsecs
+        );
+        new_secs += nsecs;
+        legacy_secs += lsecs;
+        total_reqs += clients as u64 * reqs as u64;
+        all_lat.extend(nlat);
+        shape_names.push(name);
+    }
+
+    let drained = shutdown_drain_check(&shapes()[0].1, if smoke { 16 } else { 64 });
+    assert!(drained, "graceful shutdown must answer every queued request");
+
+    all_lat.sort_unstable();
+    let (p50, p99, p999) = (pct(&all_lat, 0.50), pct(&all_lat, 0.99), pct(&all_lat, 0.999));
+    let max_us = all_lat.last().copied().unwrap_or(0);
+    let sharded_tput = total_reqs as f64 / new_secs;
+    let legacy_tput = total_reqs as f64 / legacy_secs;
+    let speedup = legacy_secs / new_secs;
+    println!(
+        "aggregate: legacy {legacy_tput:>9.0} req/s | sharded {sharded_tput:>9.0} req/s | \
+         {speedup:.2}x | p50 {p50}us p99 {p99}us p999 {p999}us"
+    );
+    if !smoke {
+        assert!(
+            speedup >= 2.0,
+            "sharded serving tier must be >=2x the single-queue engine, got {speedup:.2}x"
+        );
+    } else {
+        println!("smoke run: timing assertions skipped");
+    }
+
+    let shape_json: Vec<String> = shape_names.iter().map(|s| format!("{s:?}")).collect();
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"serve\",\"smoke\":{},\"clients\":{},\"requests\":{},",
+            "\"shapes\":[{}],\"responses_match_direct\":{},\"shutdown_drained\":{},",
+            "\"sharded_throughput_req_per_s\":{:.1},\"single_queue_throughput_req_per_s\":{:.1},",
+            "\"speedup_vs_single_queue\":{:.3},",
+            "\"p50_us\":{},\"p99_us\":{},\"p999_us\":{},\"max_us\":{}}}"
+        ),
+        smoke,
+        clients,
+        total_reqs,
+        shape_json.join(","),
+        all_match,
+        drained,
+        sharded_tput,
+        legacy_tput,
+        speedup,
+        p50,
+        p99,
+        p999,
+        max_us
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("manifest dir has a parent")
+        .join("BENCH_serve.json");
+    std::fs::write(&path, format!("{json}\n"))
+        .unwrap_or_else(|e| panic!("could not write {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+    println!("\nserve bench complete");
+}

@@ -1,0 +1,432 @@
+//! Load generator for the high-concurrency serving tier.
+//!
+//! Drives the event-driven dispatcher ([`EncodeService`]) — or its
+//! TCP-framed front end ([`WireServer`]) — with many concurrent
+//! clients over mixed request widths, and reports client-observed
+//! latency percentiles (p50/p99/p999) plus aggregate throughput.
+//!
+//! Two load models:
+//!
+//! * **closed** (default): each client keeps exactly one request in
+//!   flight — submit, wait, repeat. Measures the service's best-case
+//!   round-trip latency under N-way concurrency.
+//! * **open**: each client fires at a fixed tick so the *offered* rate
+//!   is `--rate` requests/s across all clients, using the non-blocking
+//!   admission path; typed [`ServeRejection::Overloaded`] refusals are
+//!   counted (load shedding), not retried. Measures behavior at and
+//!   past saturation.
+//!
+//! One response per client is cross-checked bit-for-bit against the
+//! direct `encode_cached` path, so a run doubles as an end-to-end
+//! correctness probe.
+//!
+//! ```bash
+//! cargo run --release --example loadgen                        # 64 closed-loop clients
+//! cargo run --release --example loadgen -- --mode open --rate 2000
+//! cargo run --release --example loadgen -- --wire              # framed TCP front end
+//! cargo run --release --example loadgen -- --faults 2          # degraded (repair) path
+//! cargo run --release --example loadgen -- --json loadgen.json
+//! ```
+
+use anyhow::{bail, Context, Result};
+use dce::coordinator::{
+    EncodeJob, EncodeResponse, EncodeService, JobConfig, PlanCache, ServeRejection, WireClient,
+    WireServer,
+};
+use dce::gf::Field;
+use dce::net::FaultSpec;
+use dce::util::Rng;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Request widths cycled per client/request — mixed on purpose, so the
+/// dispatcher's per-width queues and the plan cache both see a spread.
+const WIDTHS: [usize; 6] = [2, 3, 4, 6, 8, 16];
+
+struct Opts {
+    clients: usize,
+    requests: usize,
+    open_loop: bool,
+    rate: f64,
+    wire: bool,
+    faults: usize,
+    workers: usize,
+    json: Option<String>,
+}
+
+impl Opts {
+    fn parse() -> Result<Opts> {
+        let mut o = Opts {
+            clients: 64,
+            requests: 50,
+            open_loop: false,
+            rate: 2000.0,
+            wire: false,
+            faults: 0,
+            workers: 4,
+            json: None,
+        };
+        let mut args = std::env::args().skip(1);
+        while let Some(flag) = args.next() {
+            let mut val = |name: &str| -> Result<String> {
+                args.next().with_context(|| format!("{name} needs a value"))
+            };
+            match flag.as_str() {
+                "--clients" => o.clients = val("--clients")?.parse()?,
+                "--requests" => o.requests = val("--requests")?.parse()?,
+                "--mode" => {
+                    o.open_loop = match val("--mode")?.as_str() {
+                        "closed" => false,
+                        "open" => true,
+                        other => bail!("--mode must be closed|open, got {other:?}"),
+                    }
+                }
+                "--rate" => o.rate = val("--rate")?.parse()?,
+                "--wire" => o.wire = true,
+                "--faults" => o.faults = val("--faults")?.parse()?,
+                "--workers" => o.workers = val("--workers")?.parse()?,
+                "--json" => o.json = Some(val("--json")?),
+                "--help" | "-h" => {
+                    println!(
+                        "loadgen: --clients N --requests N --mode closed|open --rate RPS \
+                         --wire --faults N --workers N --json PATH"
+                    );
+                    std::process::exit(0);
+                }
+                other => bail!("unknown flag {other:?} (try --help)"),
+            }
+        }
+        anyhow::ensure!(o.clients >= 1 && o.requests >= 1 && o.workers >= 1);
+        anyhow::ensure!(o.rate > 0.0, "--rate must be positive");
+        Ok(o)
+    }
+}
+
+/// What one client brings back from its run.
+#[derive(Default)]
+struct ClientResult {
+    /// Client-observed submit→response latencies, µs.
+    lats: Vec<u64>,
+    /// Typed `Overloaded` refusals (open loop only).
+    rejects: u64,
+    /// Responses that came back `Err`.
+    failures: u64,
+    /// Did the spot-checked response match the direct encode path?
+    match_direct: bool,
+}
+
+fn pct(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+/// Per-client request pool, generated outside the timed region.
+fn build_pool(cfg: &JobConfig, client: usize, requests: usize) -> Vec<Vec<Vec<u64>>> {
+    let f = cfg.any_field().expect("field parses");
+    let mut rng = Rng::new(cfg.seed ^ (client as u64 + 1).wrapping_mul(0x9E37_79B9));
+    (0..requests)
+        .map(|i| {
+            let w = WIDTHS[(client + i) % WIDTHS.len()];
+            (0..cfg.k)
+                .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                .collect()
+        })
+        .collect()
+}
+
+/// Bit-for-bit spot check of one (payload, response) pair against the
+/// direct single-job replay path.
+fn matches_direct(oracle: &(EncodeJob, PlanCache), x: &[Vec<u64>], y: &[Vec<u64>]) -> bool {
+    match oracle.0.encode_cached(&oracle.1, x) {
+        Ok(expect) => expect == y,
+        Err(_) => false,
+    }
+}
+
+/// Closed loop: one request in flight, submit→recv round trips.
+fn run_closed(
+    svc: &EncodeService,
+    tenant: u64,
+    pool: &[Vec<Vec<u64>>],
+    oracle: &(EncodeJob, PlanCache),
+) -> Result<ClientResult> {
+    let mut out = ClientResult {
+        match_direct: true,
+        ..ClientResult::default()
+    };
+    for (i, x) in pool.iter().enumerate() {
+        let t0 = Instant::now();
+        let rx = svc.submit_tenant(tenant, x.clone())?;
+        let resp = rx.recv().context("service dropped a reply")?;
+        out.lats.push(t0.elapsed().as_micros() as u64);
+        match resp.y {
+            Ok(y) => {
+                if i == 0 && !matches_direct(oracle, x, &y) {
+                    out.match_direct = false;
+                }
+            }
+            Err(_) => out.failures += 1,
+        }
+    }
+    Ok(out)
+}
+
+/// Open loop: fire at a fixed per-client tick via the non-blocking
+/// admission path; a drainer thread collects responses so a slow
+/// service never stalls the offered load.
+fn run_open(
+    svc: &EncodeService,
+    tenant: u64,
+    pool: &[Vec<Vec<u64>>],
+    interval: Duration,
+    oracle: &(EncodeJob, PlanCache),
+) -> Result<ClientResult> {
+    type Pending = (Instant, usize, mpsc::Receiver<EncodeResponse>);
+    let (tx, rx) = mpsc::channel::<Pending>();
+    let drainer = std::thread::spawn(move || {
+        let mut lats = Vec::new();
+        let mut failures = 0u64;
+        let mut first_ok: Option<(usize, Vec<Vec<u64>>)> = None;
+        for (t0, idx, reply) in rx {
+            match reply.recv() {
+                Ok(resp) => {
+                    lats.push(t0.elapsed().as_micros() as u64);
+                    match resp.y {
+                        Ok(y) => {
+                            if first_ok.is_none() {
+                                first_ok = Some((idx, y));
+                            }
+                        }
+                        Err(_) => failures += 1,
+                    }
+                }
+                Err(_) => failures += 1,
+            }
+        }
+        (lats, failures, first_ok)
+    });
+
+    let mut rejects = 0u64;
+    let mut next = Instant::now();
+    'send: for (i, x) in pool.iter().enumerate() {
+        let now = Instant::now();
+        if now < next {
+            std::thread::sleep(next - now);
+        }
+        next += interval;
+        let t0 = Instant::now();
+        match svc.try_submit_tenant(tenant, x.clone()) {
+            Ok(reply) => tx.send((t0, i, reply)).expect("drainer alive"),
+            Err(e) => match e.downcast_ref::<ServeRejection>() {
+                Some(ServeRejection::Overloaded { .. }) => rejects += 1,
+                Some(ServeRejection::ServiceStopped) => break 'send,
+                None => return Err(e),
+            },
+        }
+    }
+    drop(tx);
+    let (lats, failures, first_ok) = drainer.join().expect("drainer panicked");
+    let match_direct = match first_ok {
+        Some((idx, y)) => matches_direct(oracle, &pool[idx], &y),
+        // Every request shed: nothing to check, nothing wrong.
+        None => true,
+    };
+    Ok(ClientResult {
+        lats,
+        rejects,
+        failures,
+        match_direct,
+    })
+}
+
+/// Closed loop over the framed TCP front end: one connection per
+/// client, strict send→recv pipelining of depth 1.
+fn run_wire(
+    addr: std::net::SocketAddr,
+    layout: dce::gf::SymbolLayout,
+    tenant: u64,
+    pool: &[Vec<Vec<u64>>],
+    oracle: &(EncodeJob, PlanCache),
+) -> Result<ClientResult> {
+    let mut cli = WireClient::connect(addr, layout)?;
+    let mut out = ClientResult {
+        match_direct: true,
+        ..ClientResult::default()
+    };
+    for (i, x) in pool.iter().enumerate() {
+        let t0 = Instant::now();
+        cli.send(tenant, i as u64, x)?;
+        let (req_id, y) = cli.recv()?;
+        out.lats.push(t0.elapsed().as_micros() as u64);
+        anyhow::ensure!(req_id == i as u64, "response out of order at depth 1");
+        match y {
+            Ok(y) => {
+                if i == 0 && !matches_direct(oracle, x, &y) {
+                    out.match_direct = false;
+                }
+            }
+            Err(_) => out.failures += 1,
+        }
+    }
+    Ok(out)
+}
+
+fn main() -> Result<()> {
+    let opts = Opts::parse()?;
+    if opts.wire && opts.faults > 0 {
+        bail!("--wire serves the healthy replay path; --faults needs the threaded mode");
+    }
+    if opts.wire && opts.open_loop {
+        bail!("--wire is closed-loop (depth-1 pipelining per connection); drop --mode open");
+    }
+
+    let mut cfg = JobConfig {
+        k: 32,
+        r: 8,
+        ..JobConfig::default()
+    };
+    cfg.serve.max_batch = 16;
+    cfg.serve.max_delay_us = 200;
+    cfg.serve.queue_depth = (opts.clients * 4).max(64);
+    cfg.serve.tenant_quota = cfg.serve.queue_depth;
+    anyhow::ensure!(
+        opts.faults <= cfg.r,
+        "--faults {} exceeds R = {} (unrecoverable)",
+        opts.faults,
+        cfg.r
+    );
+
+    let oracle = (EncodeJob::synthetic(cfg.clone())?, PlanCache::new());
+    let pools: Vec<_> = (0..opts.clients)
+        .map(|c| build_pool(&cfg, c, opts.requests))
+        .collect();
+
+    let mode = if opts.open_loop { "open" } else { "closed" };
+    let front = if opts.wire { "wire" } else { "threaded" };
+    println!(
+        "== loadgen: {} clients x {} requests, {mode} loop, {front} front end, \
+         {} workers, K={} R={} widths {:?} ==",
+        opts.clients, opts.requests, opts.workers, cfg.k, cfg.r, WIDTHS
+    );
+
+    let interval = Duration::from_secs_f64(opts.clients as f64 / opts.rate);
+    let (results, wall, metrics_json) = if opts.wire {
+        let server = WireServer::start(&cfg, "127.0.0.1:0", opts.workers)?;
+        let addr = server.local_addr();
+        let layout = dce::coordinator::wire_layout(&cfg)?;
+        let t0 = Instant::now();
+        let results: Vec<Result<ClientResult>> = std::thread::scope(|s| {
+            let handles: Vec<_> = pools
+                .iter()
+                .enumerate()
+                .map(|(c, pool)| {
+                    let oracle = &oracle;
+                    s.spawn(move || run_wire(addr, layout, c as u64, pool, oracle))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wall = t0.elapsed();
+        let mj = server.metrics().to_json();
+        server.shutdown();
+        (results, wall, mj)
+    } else {
+        let svc = if opts.faults > 0 {
+            // Crash `faults` sink processes post-run (storage loss):
+            // every response must still carry all R rows, repaired from
+            // the surviving coordinates.
+            let spec = (0..opts.faults).fold(FaultSpec::new(), |s, i| s.crash_after(cfg.k + i));
+            EncodeService::start_degraded(&cfg, opts.workers, cfg.serve.queue_depth, spec)?
+        } else {
+            EncodeService::start_replay(&cfg, opts.workers, cfg.serve.queue_depth)?
+        };
+        let open_loop = opts.open_loop;
+        let t0 = Instant::now();
+        let results: Vec<Result<ClientResult>> = std::thread::scope(|s| {
+            let handles: Vec<_> = pools
+                .iter()
+                .enumerate()
+                .map(|(c, pool)| {
+                    let (svc, oracle) = (&svc, &oracle);
+                    s.spawn(move || {
+                        if open_loop {
+                            run_open(svc, c as u64, pool, interval, oracle)
+                        } else {
+                            run_closed(svc, c as u64, pool, oracle)
+                        }
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wall = t0.elapsed();
+        let mj = svc.metrics.to_json();
+        svc.shutdown();
+        (results, wall, mj)
+    };
+
+    let mut lats: Vec<u64> = Vec::new();
+    let (mut rejects, mut failures) = (0u64, 0u64);
+    let mut match_direct = true;
+    for r in results {
+        let r = r?;
+        lats.extend(r.lats);
+        rejects += r.rejects;
+        failures += r.failures;
+        match_direct &= r.match_direct;
+    }
+    lats.sort_unstable();
+    let completed = lats.len();
+    let offered = opts.clients * opts.requests;
+    let throughput = completed as f64 / wall.as_secs_f64();
+    let (p50, p99, p999) = (pct(&lats, 0.50), pct(&lats, 0.99), pct(&lats, 0.999));
+    let max = lats.last().copied().unwrap_or(0);
+
+    println!(
+        "completed {completed}/{offered} in {wall:?} — {throughput:.1} req/s \
+         ({rejects} shed, {failures} failed)"
+    );
+    println!("latency µs: p50={p50} p99={p99} p999={p999} max={max}");
+    println!(
+        "responses match direct encode path: {}",
+        if match_direct { "yes" } else { "NO" }
+    );
+    println!("metrics: {metrics_json}");
+    anyhow::ensure!(match_direct, "served bytes diverged from the direct path");
+    anyhow::ensure!(failures == 0, "{failures} requests failed");
+
+    if let Some(path) = &opts.json {
+        let report = format!(
+            concat!(
+                "{{\"bench\": \"loadgen\", \"mode\": \"{mode}\", \"front\": \"{front}\", ",
+                "\"clients\": {clients}, \"requests_per_client\": {rpc}, ",
+                "\"completed\": {completed}, \"rejected\": {rejects}, ",
+                "\"failures\": {failures}, \"faults\": {faults}, ",
+                "\"responses_match_direct\": {md}, ",
+                "\"throughput_req_per_s\": {thr:.1}, ",
+                "\"p50_us\": {p50}, \"p99_us\": {p99}, \"p999_us\": {p999}, ",
+                "\"max_us\": {max}}}\n"
+            ),
+            mode = mode,
+            front = front,
+            clients = opts.clients,
+            rpc = opts.requests,
+            completed = completed,
+            rejects = rejects,
+            failures = failures,
+            faults = opts.faults,
+            md = match_direct,
+            thr = throughput,
+            p50 = p50,
+            p99 = p99,
+            p999 = p999,
+            max = max,
+        );
+        std::fs::write(path, report).with_context(|| format!("writing {path}"))?;
+        println!("report written to {path}");
+    }
+    Ok(())
+}

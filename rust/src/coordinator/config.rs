@@ -84,6 +84,60 @@ impl std::str::FromStr for VerifyMode {
     }
 }
 
+/// Serving-tier knobs: micro-batching, admission control and plan-cache
+/// sizing for [`EncodeService`](super::service::EncodeService) and the
+/// wire front end. All keys are optional in the config text
+/// (`max_batch`, `max_delay_us`, `tenant_quota`, `queue_depth`,
+/// `plan_cache_capacity`, `plan_cache_shards`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeOptions {
+    /// Largest number of requests served in one columnar pass.
+    pub max_batch: usize,
+    /// Longest a queued request waits for co-batched company (µs) —
+    /// the admission deadline added to every request.
+    pub max_delay_us: u64,
+    /// Per-tenant in-flight request bound (admission control).
+    pub tenant_quota: usize,
+    /// Global dispatcher queue bound (admission control).
+    pub queue_depth: usize,
+    /// Total compiled plans the cache holds before LRU eviction.
+    pub plan_cache_capacity: usize,
+    /// Plan-cache shard count (rounded up to a power of two).
+    pub plan_cache_shards: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_batch: 32,
+            max_delay_us: 500,
+            tenant_quota: 256,
+            queue_depth: 1024,
+            plan_cache_capacity: 256,
+            plan_cache_shards: 16,
+        }
+    }
+}
+
+impl ServeOptions {
+    /// The micro-batching policy these options describe.
+    pub fn policy(&self) -> super::service::BatchPolicy {
+        super::service::BatchPolicy {
+            max_batch: self.max_batch,
+            max_delay: std::time::Duration::from_micros(self.max_delay_us),
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.max_batch >= 1, "need max_batch ≥ 1");
+        anyhow::ensure!(self.tenant_quota >= 1, "need tenant_quota ≥ 1");
+        anyhow::ensure!(self.queue_depth >= 1, "need queue_depth ≥ 1");
+        anyhow::ensure!(self.plan_cache_capacity >= 1, "need plan_cache_capacity ≥ 1");
+        anyhow::ensure!(self.plan_cache_shards >= 1, "need plan_cache_shards ≥ 1");
+        Ok(())
+    }
+}
+
 /// Full description of one decentralized-encoding job.
 #[derive(Clone, Debug)]
 pub struct JobConfig {
@@ -106,6 +160,8 @@ pub struct JobConfig {
     /// `DCE_FORCE_ISA` when set, else the widest tier the host
     /// supports); an unsupported explicit request degrades to scalar.
     pub isa: Option<crate::gf::IsaRequest>,
+    /// Serving-tier knobs (batching, admission, plan-cache sizing).
+    pub serve: ServeOptions,
 }
 
 impl Default for JobConfig {
@@ -124,6 +180,7 @@ impl Default for JobConfig {
             seed: 42,
             artifacts_dir: "artifacts".into(),
             isa: None,
+            serve: ServeOptions::default(),
         }
     }
 }
@@ -159,6 +216,12 @@ impl JobConfig {
                 "seed" => cfg.seed = v.parse()?,
                 "artifacts_dir" => cfg.artifacts_dir = v.into(),
                 "isa" => cfg.isa = Some(v.parse()?),
+                "max_batch" => cfg.serve.max_batch = v.parse()?,
+                "max_delay_us" => cfg.serve.max_delay_us = v.parse()?,
+                "tenant_quota" => cfg.serve.tenant_quota = v.parse()?,
+                "queue_depth" => cfg.serve.queue_depth = v.parse()?,
+                "plan_cache_capacity" => cfg.serve.plan_cache_capacity = v.parse()?,
+                "plan_cache_shards" => cfg.serve.plan_cache_shards = v.parse()?,
                 other => anyhow::bail!("unknown config key {other:?}"),
             }
             Ok(())
@@ -188,6 +251,7 @@ impl JobConfig {
             (self.k + self.r) as u64 <= f.order(),
             "N = K+R must be at most q for GRS codes"
         );
+        self.serve.validate()?;
         Ok(())
     }
 
@@ -254,6 +318,29 @@ mod tests {
     #[test]
     fn defaults_are_valid() {
         JobConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn serve_options_parse_and_validate() {
+        let cfg = JobConfig::parse(
+            "max_batch = 8\nmax_delay_us = 0\ntenant_quota = 4\n\
+             queue_depth = 64\nplan_cache_capacity = 32\nplan_cache_shards = 4",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.max_batch, 8);
+        assert_eq!(cfg.serve.max_delay_us, 0);
+        assert_eq!(cfg.serve.tenant_quota, 4);
+        assert_eq!(cfg.serve.queue_depth, 64);
+        assert_eq!(cfg.serve.plan_cache_capacity, 32);
+        assert_eq!(cfg.serve.plan_cache_shards, 4);
+        assert_eq!(
+            cfg.serve.policy().max_delay,
+            std::time::Duration::ZERO,
+            "max_delay_us = 0 → fire immediately"
+        );
+        assert_eq!(JobConfig::parse("k = 4").unwrap().serve, ServeOptions::default());
+        assert!(JobConfig::parse("max_batch = 0").is_err());
+        assert!(JobConfig::parse("queue_depth = 0").is_err());
     }
 
     #[test]

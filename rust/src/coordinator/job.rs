@@ -257,6 +257,18 @@ impl EncodeJob {
         })
     }
 
+    /// Warm `cache` with this shape's compiled plan. Returns `true`
+    /// when the plan was compiled fresh, `false` when the shape was
+    /// already cached — the [`PlanCache::warmup`] building block.
+    pub fn warm(&self, cache: &PlanCache) -> anyhow::Result<bool> {
+        let key = self.plan_key()?;
+        if cache.contains(&key) {
+            return Ok(false);
+        }
+        self.compiled(cache)?;
+        Ok(true)
+    }
+
     /// Replay-encode arbitrary payload rows (any width) through the
     /// shape's cached *optimized* plan — the serving-path hot loop: no
     /// planning, no round stepping, no routing; just the flattened

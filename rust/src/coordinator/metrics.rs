@@ -1,5 +1,16 @@
 //! Lightweight metrics registry (no external deps): monotonic counters
-//! and duration histograms, JSON-dumpable, shared across service threads.
+//! and fixed-bucket latency histograms, JSON-dumpable, shared across
+//! service threads.
+//!
+//! Latencies are recorded into [`LatencyHistogram`] — a power-of-two
+//! bucketed histogram (bucket `i ≥ 1` covers `[2^(i-1), 2^i - 1]` µs)
+//! with O(1) record and O(buckets) quantile estimation. Unlike the old
+//! unbounded `Vec<u64>` store, memory per series is constant no matter
+//! how many requests the service has served, and p50/p99/p999 stay
+//! available at any point of a long run. A quantile estimate is the
+//! upper bound of its bucket (≤ 2× the true value), clamped to the
+//! exact maximum ever observed — so a series with one sample reports
+//! that sample exactly.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -9,6 +20,34 @@ use std::time::Duration;
 pub const PLAN_CACHE_HITS: &str = "plan_cache_hits";
 /// Counter name: plan-cache lookups that had to compile.
 pub const PLAN_CACHE_MISSES: &str = "plan_cache_misses";
+/// Counter name: compiled plans evicted by the cache's LRU capacity
+/// bound.
+pub const PLAN_CACHE_EVICTIONS: &str = "plan_cache_evictions";
+/// Counter name: lookups that waited on another thread's in-flight
+/// compile of the same key (single-flight) instead of compiling
+/// redundantly.
+pub const PLAN_CACHE_WAITS: &str = "plan_cache_single_flight_waits";
+/// Counter name: shard-lock acquisitions that found the lock held
+/// (`try_lock` failed and the caller had to block) — the cache's
+/// contention signal. With enough shards this stays near zero.
+pub const PLAN_CACHE_CONTENTION: &str = "plan_cache_shard_contention";
+/// Counter name: requests refused admission (global queue full or
+/// per-tenant in-flight quota exhausted) with a typed `Overloaded`
+/// rejection.
+pub const ADMISSION_REJECTS: &str = "admission_rejects";
+/// Counter name: blocking submits that had to wait for queue space or
+/// tenant quota (the backpressure path, as opposed to the rejecting
+/// `try_submit` path).
+pub const ADMISSION_WAITS: &str = "admission_waits";
+/// Counter name: high-water mark of requests queued in the dispatcher.
+pub const QUEUE_DEPTH_MAX: &str = "queue_depth_max";
+/// Counter name: requests answered with a typed `ServiceStopped`
+/// rejection (submitted after shutdown began, or stranded when every
+/// worker died).
+pub const STOPPED_REJECTS: &str = "stopped_rejects";
+/// Latency-series name: time a request spent queued in the dispatcher
+/// before its batch started serving (admission → batch start).
+pub const QUEUE_WAIT: &str = "queue_wait";
 /// Counter name: micro-batches served by the replay service.
 pub const BATCHES: &str = "batches";
 /// Counter name: requests served *inside* micro-batches
@@ -39,8 +78,112 @@ pub const KERNEL_LAYOUT_REJECTS: &str = "kernel_layout_rejects";
 /// `neon`) — one bump per fresh compile, so the metrics summary shows
 /// which SIMD backend the serving path actually resolved to.
 pub const PLANS_COMPILED_ISA_PREFIX: &str = "plans_compiled_isa_";
+/// Counter name: wire connections accepted by the framed front end.
+pub const WIRE_CONNECTIONS: &str = "wire_connections";
+/// Counter name: request frames decoded by the framed front end.
+pub const WIRE_REQUESTS: &str = "wire_requests";
+/// Counter name: error frames written by the framed front end
+/// (admission rejections and per-request failures).
+pub const WIRE_ERRORS: &str = "wire_errors";
 
-/// A set of named counters and latency recorders.
+/// Power-of-two bucket count: bucket 0 holds zeros, bucket `i ≥ 1`
+/// holds `[2^(i-1), 2^i - 1]`, bucket 64 holds values with bit 63 set.
+pub const HISTOGRAM_BUCKETS: usize = 65;
+
+/// A fixed-size power-of-two latency histogram (µs granularity).
+///
+/// `record` is O(1); `quantile` walks the 65 buckets. Estimates are
+/// bucket upper bounds (≤ 2× true), clamped to the exact observed
+/// maximum.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: [u64; HISTOGRAM_BUCKETS],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: [0; HISTOGRAM_BUCKETS],
+            count: 0,
+            sum_us: 0,
+            max_us: 0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The bucket index holding `v`: 0 for 0, else `floor(log2 v) + 1`.
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i` (`u64::MAX` for the last).
+    pub fn bucket_upper_bound(i: usize) -> u64 {
+        if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.buckets[Self::bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.sum_us / self.count
+        }
+    }
+
+    /// Estimated `q`-quantile in µs (`q` in `[0, 1]`): the upper bound
+    /// of the bucket holding the rank-`⌈q·count⌉` sample, clamped to
+    /// the exact maximum. 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return Self::bucket_upper_bound(i).min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+}
+
+/// A set of named counters and latency histograms.
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
@@ -49,7 +192,7 @@ pub struct Metrics {
 #[derive(Debug, Default)]
 struct Inner {
     counters: BTreeMap<String, u64>,
-    latencies: BTreeMap<String, Vec<u64>>, // µs
+    latencies: BTreeMap<String, LatencyHistogram>,
 }
 
 impl Metrics {
@@ -63,11 +206,16 @@ impl Metrics {
     }
 
     pub fn observe(&self, name: &str, d: Duration) {
+        self.observe_us(name, d.as_micros() as u64);
+    }
+
+    /// Record a latency sample already expressed in µs.
+    pub fn observe_us(&self, name: &str, us: u64) {
         let mut g = self.inner.lock().unwrap();
         g.latencies
             .entry(name.to_string())
             .or_default()
-            .push(d.as_micros() as u64);
+            .record_us(us);
     }
 
     /// Raise `name` to `max(current, v)` — for high-water marks.
@@ -123,17 +271,26 @@ impl Metrics {
             .unwrap_or(0)
     }
 
-    /// (count, p50, p99, max) in µs for a latency series.
+    /// (count, p50, p99, max) in µs for a latency series. Percentiles
+    /// are histogram-bucket estimates (≤ 2× true, clamped to max).
     pub fn latency_summary(&self, name: &str) -> Option<(usize, u64, u64, u64)> {
         let g = self.inner.lock().unwrap();
-        let v = g.latencies.get(name)?;
-        if v.is_empty() {
+        let h = g.latencies.get(name)?;
+        if h.count() == 0 {
             return None;
         }
-        let mut s = v.clone();
-        s.sort_unstable();
-        let pct = |q: f64| s[((s.len() - 1) as f64 * q) as usize];
-        Some((s.len(), pct(0.5), pct(0.99), *s.last().unwrap()))
+        Some((
+            h.count() as usize,
+            h.quantile(0.5),
+            h.quantile(0.99),
+            h.max_us(),
+        ))
+    }
+
+    /// A snapshot of one latency histogram (for quantiles beyond the
+    /// summary tuple, e.g. p999).
+    pub fn latency_histogram(&self, name: &str) -> Option<LatencyHistogram> {
+        self.inner.lock().unwrap().latencies.get(name).cloned()
     }
 
     /// JSON dump of all counters and latency summaries.
@@ -143,19 +300,17 @@ impl Metrics {
         for (k, v) in &g.counters {
             parts.push(format!("\"{k}\":{v}"));
         }
-        for (k, v) in &g.latencies {
-            if v.is_empty() {
+        for (k, h) in &g.latencies {
+            if h.count() == 0 {
                 continue;
             }
-            let mut s = v.clone();
-            s.sort_unstable();
-            let pct = |q: f64| s[((s.len() - 1) as f64 * q) as usize];
             parts.push(format!(
-                "\"{k}\":{{\"count\":{},\"p50_us\":{},\"p99_us\":{},\"max_us\":{}}}",
-                s.len(),
-                pct(0.5),
-                pct(0.99),
-                s.last().unwrap()
+                "\"{k}\":{{\"count\":{},\"p50_us\":{},\"p99_us\":{},\"p999_us\":{},\"max_us\":{}}}",
+                h.count(),
+                h.quantile(0.5),
+                h.quantile(0.99),
+                h.quantile(0.999),
+                h.max_us()
             ));
         }
         format!("{{{}}}", parts.join(","))
@@ -207,5 +362,64 @@ mod tests {
         let j = m.to_json();
         assert!(j.contains("\"plan_cache_hits\":2"), "{j}");
         assert!(j.contains("\"plan_cache_misses\":1"), "{j}");
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries_are_powers_of_two() {
+        // Bucket 0 is exactly {0}; bucket i ≥ 1 is [2^(i-1), 2^i - 1].
+        assert_eq!(LatencyHistogram::bucket_index(0), 0);
+        for i in 0..63usize {
+            let lo = 1u64 << i;
+            assert_eq!(LatencyHistogram::bucket_index(lo), i + 1, "lower edge 2^{i}");
+            assert_eq!(
+                LatencyHistogram::bucket_index(lo + (lo - 1)),
+                i + 1,
+                "upper edge 2^{}-1",
+                i + 1
+            );
+            if i >= 1 {
+                assert_eq!(LatencyHistogram::bucket_index(lo - 1), i, "below 2^{i}");
+            }
+        }
+        assert_eq!(LatencyHistogram::bucket_index(u64::MAX), 64);
+        assert_eq!(LatencyHistogram::bucket_upper_bound(0), 0);
+        assert_eq!(LatencyHistogram::bucket_upper_bound(3), 7);
+        assert_eq!(LatencyHistogram::bucket_upper_bound(64), u64::MAX);
+    }
+
+    #[test]
+    fn histogram_quantiles_estimate_within_bucket_bounds() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), 0, "empty histogram");
+        h.record_us(5);
+        // Single sample: the bucket bound (7) clamps to the exact max.
+        assert_eq!(h.quantile(0.5), 5);
+        assert_eq!(h.quantile(0.99), 5);
+        for _ in 0..99 {
+            h.record_us(100); // bucket [64, 127]
+        }
+        h.record_us(10_000); // bucket [8192, 16383]
+        let p50 = h.quantile(0.5);
+        assert!((100..=127).contains(&p50), "p50={p50}");
+        // 101 samples: rank(p99) = ceil(0.99*101) = 100 → still the
+        // 100µs bucket; rank(p999) = 101 → the outlier, clamped exact.
+        assert!((100..=127).contains(&h.quantile(0.99)), "{}", h.quantile(0.99));
+        assert_eq!(h.quantile(0.999), 10_000);
+        assert_eq!(h.max_us(), 10_000);
+        assert_eq!(h.count(), 101);
+        // The estimate never undershoots its bucket's true members:
+        // upper-bound semantics mean p50 ≥ the true median here.
+        assert!(p50 >= 100);
+    }
+
+    #[test]
+    fn histogram_memory_is_constant_and_mean_tracks_sum() {
+        let mut h = LatencyHistogram::new();
+        for i in 0..10_000u64 {
+            h.record_us(i % 1000);
+        }
+        assert_eq!(h.count(), 10_000);
+        assert!(h.mean_us() < 1000);
+        assert_eq!(std::mem::size_of_val(&h), std::mem::size_of::<LatencyHistogram>());
     }
 }

@@ -8,23 +8,34 @@
 //! (native matrix math or the PJRT artifact), and emits a
 //! [`job::JobReport`] with the paper's cost metrics.
 //!
-//! [`service::EncodeService`] is the long-running form: worker threads
-//! consume encode requests from a queue and run the bulk-encode hot path
+//! [`service::EncodeService`] is the long-running form: an
+//! event-driven dispatcher (per-width queues, condvar wakeups, no
+//! polling) feeds worker threads that run the bulk-encode hot path
 //! through the AOT-compiled kernel (`runtime::GfEncoder`) or — the
 //! artifact-free replay engine — through the shape's cached optimized
 //! plan, micro-batching queued requests into one columnar
-//! `replay_batch` pass per width (`service::BatchPolicy`). The
+//! `replay_batch` pass per width under a deadline/occupancy
+//! [`service::BatchPolicy`], with per-tenant admission control
+//! ([`service::ServeRejection`]) and drain-and-respond shutdown. The
 //! "request path never touches Python" property in action.
+//!
+//! [`server::WireServer`] puts that dispatcher on a TCP socket: framed
+//! requests packed at the field's symbol lane, multi-tenant admission,
+//! out-of-order pipelined responses (see `net::payload`'s frame codec).
 
 pub mod config;
 pub mod job;
 pub mod metrics;
 pub mod plan_cache;
+pub mod server;
 pub mod service;
 pub mod verify;
 
-pub use config::JobConfig;
+pub use config::{JobConfig, ServeOptions};
 pub use job::{DegradedJobReport, EncodeJob, JobReport, RecoveryStats};
 pub use metrics::Metrics;
 pub use plan_cache::{PlanCache, PlanKey};
-pub use service::{BatchPolicy, EncodeRequest, EncodeResponse, EncodeService};
+pub use server::{wire_layout, WireClient, WireServer};
+pub use service::{
+    BatchPolicy, EncodeRequest, EncodeResponse, EncodeService, ServeRejection,
+};

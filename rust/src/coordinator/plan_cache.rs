@@ -20,15 +20,37 @@
 //! every `W` of the same shape. That is the cache's big win: a service
 //! seeing mixed-width traffic on one code shape compiles exactly once.
 //!
-//! Hit/miss counters are recorded on the attached
-//! [`Metrics`](super::metrics::Metrics) registry (`plan_cache_hits` /
-//! `plan_cache_misses`), so they appear in the service metrics summary.
+//! # Concurrency
+//!
+//! The map is **sharded**: a key hashes to one of `shards` (a power of
+//! two) independently locked sub-maps, so concurrent lookups of
+//! different shapes never contend on one global lock. Each shard bounds
+//! its population to `⌈capacity / shards⌉` entries with **LRU
+//! eviction** (a monotone per-shard tick stamps every touch; eviction
+//! removes the smallest stamp and bumps `plan_cache_evictions`).
+//!
+//! Misses are **single-flight**: the first thread to miss a key
+//! registers an in-flight marker and compiles *outside* the shard lock;
+//! concurrent requests for the same key wait on that compile
+//! (`plan_cache_single_flight_waits`) and then read the inserted entry,
+//! instead of burning cores on redundant compiles of an identical plan.
+//! A failed compile wakes the waiters and leaves nothing cached — the
+//! next caller (possibly a just-woken waiter) retries, preserving the
+//! "failed compile is not cached" contract.
+//!
+//! Hit/miss/eviction/wait/contention counters land on the attached
+//! [`Metrics`](super::metrics::Metrics) registry (`plan_cache_hits`,
+//! `plan_cache_misses`, `plan_cache_evictions`,
+//! `plan_cache_single_flight_waits`, `plan_cache_shard_contention`), so
+//! they appear in the service metrics summary.
 
-use super::metrics::Metrics;
+use super::metrics::{self, Metrics};
 use crate::framework::{CompiledPlan, PlanChoice};
 use anyhow::Result;
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, TryLockError};
 
 /// Everything a compiled plan's bits depend on (see module docs).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -75,9 +97,56 @@ pub fn parity_fingerprint(a: &crate::gf::Mat) -> u64 {
     h
 }
 
-/// A concurrent shape → compiled-plan map with hit/miss accounting.
+/// Default total capacity (compiled plans across all shards).
+pub const DEFAULT_CAPACITY: usize = 256;
+/// Default shard count (rounded up to a power of two).
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// One in-flight compile: waiters block on the condvar until the
+/// leader flips `done`.
+struct Flight {
+    done: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Self {
+        Flight {
+            done: Mutex::new(false),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn finish(&self) {
+        *self.done.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) {
+        let mut g = self.done.lock().unwrap();
+        while !*g {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+}
+
+struct Entry {
+    plan: Arc<CompiledPlan>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<PlanKey, Entry>,
+    inflight: HashMap<PlanKey, Arc<Flight>>,
+    tick: u64,
+}
+
+/// A sharded, capacity-bounded (LRU), single-flight shape →
+/// compiled-plan map with hit/miss accounting. See module docs.
 pub struct PlanCache {
-    inner: Mutex<HashMap<PlanKey, Arc<CompiledPlan>>>,
+    shards: Vec<Mutex<Shard>>,
+    per_shard_cap: usize,
     metrics: Arc<Metrics>,
 }
 
@@ -87,10 +156,22 @@ impl PlanCache {
     }
 
     /// Share a metrics registry (e.g. the service's) so cache counters
-    /// land in the same summary.
+    /// land in the same summary. Default capacity and shard count.
     pub fn with_metrics(metrics: Arc<Metrics>) -> Self {
+        Self::with_config(DEFAULT_CAPACITY, DEFAULT_SHARDS, metrics)
+    }
+
+    /// Full-control constructor: `capacity` total compiled plans
+    /// (divided evenly over the shards — each shard holds at most
+    /// `⌈capacity / shards⌉`, so a skewed key distribution may evict
+    /// before the global total is reached) across `shards` sub-maps
+    /// (rounded up to a power of two, at least 1).
+    pub fn with_config(capacity: usize, shards: usize, metrics: Arc<Metrics>) -> Self {
+        let n = shards.max(1).next_power_of_two();
+        let per_shard_cap = capacity.max(1).div_ceil(n).max(1);
         PlanCache {
-            inner: Mutex::new(HashMap::new()),
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            per_shard_cap,
             metrics,
         }
     }
@@ -99,34 +180,161 @@ impl PlanCache {
         &self.metrics
     }
 
+    /// Number of shards (always a power of two).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total capacity bound (per-shard quota × shards).
+    pub fn capacity(&self) -> usize {
+        self.per_shard_cap * self.shards.len()
+    }
+
+    fn shard_index(&self, key: &PlanKey) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) & (self.shards.len() - 1)
+    }
+
+    /// Lock one shard, counting the times the lock was already held
+    /// (`plan_cache_shard_contention`) — the signal that the shard
+    /// count is too low for the offered concurrency.
+    fn lock_shard(&self, idx: usize) -> MutexGuard<'_, Shard> {
+        match self.shards[idx].try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                self.metrics.incr(metrics::PLAN_CACHE_CONTENTION, 1);
+                self.shards[idx].lock().unwrap()
+            }
+            Err(TryLockError::Poisoned(e)) => panic!("poisoned plan-cache shard: {e}"),
+        }
+    }
+
     /// Fetch the plan for `key`, compiling it with `compile` on a miss.
-    /// Concurrent misses may compile redundantly; the first insert wins
-    /// so every caller replays the same plan object.
+    /// Concurrent misses on the same key are single-flight: one caller
+    /// compiles, the rest wait and share the inserted plan object. A
+    /// failed compile is not cached; its waiters retry (the first
+    /// becomes the new leader).
     pub fn get_or_compile(
         &self,
         key: &PlanKey,
         compile: impl FnOnce() -> Result<CompiledPlan>,
     ) -> Result<Arc<CompiledPlan>> {
-        if let Some(hit) = self.inner.lock().unwrap().get(key).cloned() {
-            self.metrics.plan_cache_hit();
-            return Ok(hit);
+        let idx = self.shard_index(key);
+        let mut compile = Some(compile);
+        loop {
+            let flight = {
+                let mut shard = self.lock_shard(idx);
+                shard.tick += 1;
+                let tick = shard.tick;
+                if let Some(entry) = shard.map.get_mut(key) {
+                    entry.last_used = tick;
+                    let plan = entry.plan.clone();
+                    drop(shard);
+                    self.metrics.plan_cache_hit();
+                    return Ok(plan);
+                }
+                match shard.inflight.get(key) {
+                    Some(f) => {
+                        let f = f.clone();
+                        drop(shard);
+                        self.metrics.incr(metrics::PLAN_CACHE_WAITS, 1);
+                        f
+                    }
+                    None => {
+                        // This caller leads the compile for everyone.
+                        let f = Arc::new(Flight::new());
+                        shard.inflight.insert(key.clone(), f.clone());
+                        drop(shard);
+                        self.metrics.plan_cache_miss();
+                        let outcome = (compile.take().expect("one compile per caller"))();
+                        return self.finish_flight(idx, key, f, outcome);
+                    }
+                }
+            };
+            flight.wait();
+            // Re-lookup: normally a hit on the leader's insert; if the
+            // leader's compile failed, this caller becomes the leader.
         }
-        self.metrics.plan_cache_miss();
-        let fresh = Arc::new(compile()?);
-        let tier = format!(
-            "{}{}",
-            super::metrics::PLANS_COMPILED_ISA_PREFIX,
-            fresh.kernels.isa().name()
-        );
-        self.metrics.incr(&tier, 1);
-        let mut guard = self.inner.lock().unwrap();
-        let entry = guard.entry(key.clone()).or_insert(fresh);
-        Ok(entry.clone())
+    }
+
+    /// Leader epilogue: publish the compiled plan (or nothing, on
+    /// failure), retire the in-flight marker, wake the waiters.
+    fn finish_flight(
+        &self,
+        idx: usize,
+        key: &PlanKey,
+        flight: Arc<Flight>,
+        outcome: Result<CompiledPlan>,
+    ) -> Result<Arc<CompiledPlan>> {
+        let published = match outcome {
+            Ok(plan) => {
+                let fresh = Arc::new(plan);
+                let tier = format!(
+                    "{}{}",
+                    metrics::PLANS_COMPILED_ISA_PREFIX,
+                    fresh.kernels.isa().name()
+                );
+                self.metrics.incr(&tier, 1);
+                Ok(fresh)
+            }
+            Err(e) => Err(e),
+        };
+        let mut shard = self.lock_shard(idx);
+        shard.inflight.remove(key);
+        if let Ok(fresh) = &published {
+            shard.tick += 1;
+            let tick = shard.tick;
+            shard.map.insert(
+                key.clone(),
+                Entry {
+                    plan: fresh.clone(),
+                    last_used: tick,
+                },
+            );
+            while shard.map.len() > self.per_shard_cap {
+                // O(n) min-scan: plan populations are tiny (hundreds at
+                // most), so a scan beats maintaining an intrusive list.
+                let lru = shard
+                    .map
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_used)
+                    .map(|(k, _)| k.clone())
+                    .expect("non-empty over-capacity shard");
+                shard.map.remove(&lru);
+                self.metrics.incr(metrics::PLAN_CACHE_EVICTIONS, 1);
+            }
+        }
+        drop(shard);
+        flight.finish();
+        published
+    }
+
+    /// Whether `key` currently holds a compiled plan (no LRU touch, no
+    /// hit/miss accounting).
+    pub fn contains(&self, key: &PlanKey) -> bool {
+        self.lock_shard(self.shard_index(key)).map.contains_key(key)
+    }
+
+    /// Pre-compile the plan for every config **before** traffic
+    /// arrives, so the first real request of each shape is a cache hit
+    /// instead of paying a compile. Returns the number of plans
+    /// compiled fresh (duplicate shapes in `cfgs`, and shapes already
+    /// cached, cost nothing).
+    pub fn warmup(&self, cfgs: &[super::JobConfig]) -> Result<usize> {
+        let mut fresh = 0;
+        for cfg in cfgs {
+            let job = super::EncodeJob::synthetic(cfg.clone())?;
+            if job.warm(self)? {
+                fresh += 1;
+            }
+        }
+        Ok(fresh)
     }
 
     /// Number of distinct compiled shapes held.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -149,6 +357,9 @@ impl Default for PlanCache {
 mod tests {
     use super::*;
     use crate::coordinator::config::CodeKind;
+    use crate::coordinator::JobConfig;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
 
     fn key(k: usize) -> PlanKey {
         PlanKey {
@@ -233,5 +444,120 @@ mod tests {
         cache.get_or_compile(&key(8), || Ok(dummy_plan(8))).unwrap();
         assert_eq!(cache.len(), 1);
         assert_eq!(cache.stats(), (0, 2));
+    }
+
+    #[test]
+    fn lru_evicts_the_least_recently_used_shape() {
+        // One shard, capacity 2 — eviction order is deterministic.
+        let cache = PlanCache::with_config(2, 1, Arc::new(Metrics::new()));
+        assert_eq!(cache.shard_count(), 1);
+        assert_eq!(cache.capacity(), 2);
+        cache.get_or_compile(&key(8), || Ok(dummy_plan(8))).unwrap();
+        cache.get_or_compile(&key(12), || Ok(dummy_plan(12))).unwrap();
+        // Touch k=8 so k=12 becomes the LRU entry.
+        cache.get_or_compile(&key(8), || unreachable!()).unwrap();
+        cache.get_or_compile(&key(16), || Ok(dummy_plan(16))).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(
+            cache.metrics().counter(metrics::PLAN_CACHE_EVICTIONS),
+            1
+        );
+        // k=8 survived (recently used) …
+        assert!(cache.contains(&key(8)));
+        // … and k=12 was evicted: asking again recompiles.
+        let recompiled = AtomicUsize::new(0);
+        cache
+            .get_or_compile(&key(12), || {
+                recompiled.fetch_add(1, Ordering::Relaxed);
+                Ok(dummy_plan(12))
+            })
+            .unwrap();
+        assert_eq!(recompiled.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn single_flight_compiles_once_under_concurrency() {
+        let cache = PlanCache::new();
+        let compiles = AtomicUsize::new(0);
+        let n = 8;
+        let barrier = Barrier::new(n);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for _ in 0..n {
+                handles.push(s.spawn(|| {
+                    barrier.wait();
+                    cache
+                        .get_or_compile(&key(8), || {
+                            compiles.fetch_add(1, Ordering::Relaxed);
+                            // Hold the flight open long enough for the
+                            // other threads to arrive and park on it.
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                            Ok(dummy_plan(8))
+                        })
+                        .unwrap()
+                }));
+            }
+            let plans: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            // Everyone shares the single compiled object.
+            for p in &plans[1..] {
+                assert!(Arc::ptr_eq(&plans[0], p));
+            }
+        });
+        assert_eq!(compiles.load(Ordering::Relaxed), 1, "single-flight");
+        let (hits, misses) = cache.stats();
+        assert_eq!(misses, 1);
+        assert_eq!(hits, (n - 1) as u64, "waiters resolve to hits");
+        assert!(cache.metrics().counter(metrics::PLAN_CACHE_WAITS) >= 1);
+    }
+
+    #[test]
+    fn failed_leader_hands_the_flight_to_a_waiter() {
+        let cache = PlanCache::new();
+        let barrier = Barrier::new(2);
+        std::thread::scope(|s| {
+            let leader = s.spawn(|| {
+                cache.get_or_compile(&key(8), || {
+                    barrier.wait(); // waiter is about to call in
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    anyhow::bail!("leader compile failed")
+                })
+            });
+            let waiter = s.spawn(|| {
+                barrier.wait();
+                // Lands while the leader's flight is (very likely) still
+                // open; either way the retry loop must end with a plan.
+                cache.get_or_compile(&key(8), || Ok(dummy_plan(8)))
+            });
+            assert!(leader.join().unwrap().is_err(), "leader sees its own failure");
+            assert!(waiter.join().unwrap().is_ok(), "waiter recovers the flight");
+        });
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn warmup_precompiles_each_distinct_shape_once() {
+        let cache = PlanCache::new();
+        let a = JobConfig {
+            k: 8,
+            r: 4,
+            ..JobConfig::default()
+        };
+        let b = JobConfig {
+            k: 6,
+            r: 3,
+            ..JobConfig::default()
+        };
+        // Duplicate shapes cost nothing.
+        let fresh = cache.warmup(&[a.clone(), b.clone(), a.clone()]).unwrap();
+        assert_eq!(fresh, 2);
+        assert_eq!(cache.len(), 2);
+        // A warmed cache serves the shape without recompiling.
+        let job = crate::coordinator::EncodeJob::synthetic(a).unwrap();
+        let (_, misses_before) = cache.stats();
+        job.compiled(&cache).unwrap();
+        let (_, misses_after) = cache.stats();
+        assert_eq!(misses_before, misses_after, "warmed shape is a hit");
+        // Warming again is a no-op.
+        assert_eq!(cache.warmup(&[b]).unwrap(), 0);
     }
 }

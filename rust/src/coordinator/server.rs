@@ -1,0 +1,606 @@
+//! The multi-tenant wire front end: framed encode requests over TCP,
+//! served by the event-driven dispatcher ([`EncodeService`]).
+//!
+//! The wire format is the sans-IO frame codec in
+//! [`net::payload`](crate::net::payload): a 40-byte header plus a
+//! payload packed at the **field's symbol lane** — a GF(2^8) request
+//! ships one byte per element, a `prime:786433` request four — so the
+//! wire sees the same narrow-lane zero-copy-friendly representation the
+//! kernels stream. Requests carry `(tenant, req_id)`; responses echo
+//! `req_id` and may arrive **out of request order** (batches complete
+//! per width group), which is what lets one connection pipeline freely.
+//!
+//! Per-request failures — malformed payloads, admission rejections
+//! ([`ServeRejection`](super::service::ServeRejection)) — come back as
+//! `Error` frames on the same connection, which stays up. Only an
+//! unparseable frame (bad magic, impossible header) drops the
+//! connection, since there is no way to resync the byte stream.
+//!
+//! The default front end runs on std threads: one acceptor, one reader
+//! plus one writer per connection, all interruptible via a stop flag
+//! and socket read timeouts. A `tokio` build of the same front end —
+//! sharing this codec and dispatcher — is gated behind the bare
+//! `tokio` cargo feature exactly like the `pjrt` stub pair: the
+//! offline container has no tokio crate, so the feature only compiles
+//! where the dependency is added (see `Cargo.toml` and the CI matrix).
+
+use super::config::JobConfig;
+use super::metrics::{self, Metrics};
+use super::service::{EncodeResponse, EncodeService};
+use crate::gf::kernels::{Kernels, SymbolLayout};
+use crate::net::payload::{
+    decode_rows_frame, encode_error_frame, encode_rows_frame, frame_error_message, FrameHeader,
+    FrameKind, FRAME_HEADER_LEN,
+};
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// How often blocked socket reads wake up to check the stop flag.
+const POLL_TIMEOUT: Duration = Duration::from_millis(100);
+
+/// The symbol lane this config's field uses on the wire — the same
+/// layout-selection rule as the compiled kernels.
+pub fn wire_layout(cfg: &JobConfig) -> Result<SymbolLayout> {
+    Ok(Kernels::for_field(&cfg.any_field()?).layout())
+}
+
+fn read_exact_interruptible(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+) -> Result<ReadOutcome> {
+    let mut off = 0;
+    while off < buf.len() {
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => {
+                // Clean EOF only between frames; inside one it's a cut.
+                return Ok(if off == 0 {
+                    ReadOutcome::Eof
+                } else {
+                    ReadOutcome::Cut
+                });
+            }
+            Ok(n) => off += n,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(ReadOutcome::Stopped);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+enum ReadOutcome {
+    Full,
+    Eof,
+    Cut,
+    Stopped,
+}
+
+/// A running TCP front end over one [`EncodeService`].
+pub struct WireServer {
+    svc: Option<EncodeService>,
+    metrics: Arc<Metrics>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    writers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl WireServer {
+    /// Bind `addr` (use `127.0.0.1:0` for an ephemeral port) and serve
+    /// the shape described by `cfg` with `n_workers` encode workers and
+    /// the batching/admission knobs from `cfg.serve`.
+    pub fn start(cfg: &JobConfig, addr: &str, n_workers: usize) -> Result<WireServer> {
+        let layout = wire_layout(cfg)?;
+        let svc = EncodeService::start_replay(cfg, n_workers, cfg.serve.queue_depth)?;
+        let metrics = svc.metrics.clone();
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let writers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let server = WireServer {
+            svc: Some(svc),
+            metrics: metrics.clone(),
+            addr: local,
+            stop: stop.clone(),
+            acceptor: None,
+            conns: conns.clone(),
+            writers: writers.clone(),
+        };
+        // The acceptor owns the listener; shutdown unblocks it with a
+        // wake-up connection after raising the stop flag. Connections
+        // submit through a cloneable handle that shares the dispatcher,
+        // so the service stays owned here for the graceful shutdown.
+        let submit: Arc<SubmitFn> =
+            Arc::new(server.svc.as_ref().expect("service just built").submit_handle());
+        let acceptor = std::thread::Builder::new()
+            .name("wire-acceptor".into())
+            .spawn(move || {
+                for incoming in listener.incoming() {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let stream = match incoming {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    };
+                    metrics.incr(metrics::WIRE_CONNECTIONS, 1);
+                    let stop = stop.clone();
+                    let metrics = metrics.clone();
+                    let svc = submit.clone();
+                    let writers = writers.clone();
+                    let conn = std::thread::Builder::new()
+                        .name("wire-conn".into())
+                        .spawn(move || {
+                            serve_connection(stream, layout, &svc, &metrics, &stop, &writers);
+                        });
+                    if let Ok(h) = conn {
+                        conns.lock().unwrap().push(h);
+                    }
+                }
+            })
+            .context("spawning acceptor")?;
+        let mut server = server;
+        server.acceptor = Some(acceptor);
+        Ok(server)
+    }
+
+    /// The bound address (resolves the ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The service metrics (wire counters included).
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Stop accepting, drain every queued request to its connection,
+    /// and join all threads. Graceful: in-flight requests get real
+    /// responses before their writers exit.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Unblock the acceptor's `incoming()`.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        // Readers notice the stop flag on their next poll tick and drop
+        // their reply senders.
+        for h in self.conns.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+        // Drain the dispatcher: every queued request is served and its
+        // reply lands in some connection's channel...
+        if let Some(svc) = self.svc.take() {
+            svc.shutdown();
+        }
+        // ...whose writer flushes it before seeing the disconnect.
+        for h in self.writers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The type-erased submit path connection threads hold — produced by
+/// [`EncodeService::submit_handle`], shares the dispatcher only.
+type SubmitFn =
+    dyn Fn(u64, u64, Vec<Vec<u64>>, mpsc::Sender<EncodeResponse>) -> Result<()> + Send + Sync;
+
+/// One connection: this thread reads Request frames and submits them;
+/// a paired writer thread streams completion-order responses back.
+fn serve_connection(
+    stream: TcpStream,
+    layout: SymbolLayout,
+    svc: &SubmitFn,
+    metrics: &Arc<Metrics>,
+    stop: &Arc<AtomicBool>,
+    writers: &Mutex<Vec<JoinHandle<()>>>,
+) {
+    let _ = stream.set_read_timeout(Some(POLL_TIMEOUT));
+    let _ = stream.set_nodelay(true);
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let (reply_tx, reply_rx) = mpsc::channel::<EncodeResponse>();
+    let writer = {
+        let metrics = metrics.clone();
+        std::thread::Builder::new()
+            .name("wire-writer".into())
+            .spawn(move || write_responses(write_half, layout, reply_rx, &metrics))
+    };
+    match writer {
+        Ok(h) => writers.lock().unwrap().push(h),
+        Err(_) => return,
+    }
+    let mut stream = stream;
+    let mut head = [0u8; FRAME_HEADER_LEN];
+    loop {
+        match read_exact_interruptible(&mut stream, &mut head, stop) {
+            Ok(ReadOutcome::Full) => {}
+            Ok(_) => break, // EOF / cut / stopping — reader done.
+            Err(_) => break,
+        }
+        let header = match FrameHeader::parse(&head) {
+            Ok(h) if h.kind == FrameKind::Request => h,
+            // Unparseable or non-request frame: the stream cannot be
+            // resynced — drop the connection.
+            _ => {
+                metrics.incr(metrics::WIRE_ERRORS, 1);
+                break;
+            }
+        };
+        let mut payload = vec![0u8; header.payload_len as usize];
+        match read_exact_interruptible(&mut stream, &mut payload, stop) {
+            Ok(ReadOutcome::Full) => {}
+            _ => break,
+        }
+        metrics.incr(metrics::WIRE_REQUESTS, 1);
+        let rows = match decode_rows_frame(&header, &payload) {
+            Ok(rows) => rows,
+            Err(e) => {
+                // Shape-consistent header but undecodable payload: the
+                // framing is intact, so the connection survives.
+                metrics.incr(metrics::WIRE_ERRORS, 1);
+                let _ = reply_tx.send(EncodeResponse {
+                    req_id: header.req_id,
+                    y: Err(e),
+                    wall: Duration::ZERO,
+                });
+                continue;
+            }
+        };
+        if let Err(e) = svc(header.tenant, header.req_id, rows, reply_tx.clone()) {
+            // Validation or admission refusal (Overloaded /
+            // ServiceStopped): a per-request Error frame, not a
+            // connection drop.
+            metrics.incr(metrics::WIRE_ERRORS, 1);
+            let _ = reply_tx.send(EncodeResponse {
+                req_id: header.req_id,
+                y: Err(e),
+                wall: Duration::ZERO,
+            });
+        }
+    }
+    // Dropping reply_tx lets the writer exit once every in-flight
+    // request of this connection has been answered.
+}
+
+/// The per-connection writer: responses (any order) → frames.
+fn write_responses(
+    mut stream: TcpStream,
+    layout: SymbolLayout,
+    replies: mpsc::Receiver<EncodeResponse>,
+    metrics: &Metrics,
+) {
+    let mut wire = Vec::new();
+    // Blocks until every sender (reader + queued requests) is gone —
+    // which is exactly "all of this connection's requests answered".
+    while let Ok(resp) = replies.recv() {
+        wire.clear();
+        match resp.y {
+            Ok(rows) => {
+                if encode_rows_frame(&mut wire, FrameKind::Response, layout, 0, resp.req_id, &rows)
+                    .is_err()
+                {
+                    wire.clear();
+                    encode_error_frame(&mut wire, 0, resp.req_id, "response framing failed");
+                    metrics.incr(metrics::WIRE_ERRORS, 1);
+                }
+            }
+            Err(e) => {
+                encode_error_frame(&mut wire, 0, resp.req_id, &format!("{e:#}"));
+                metrics.incr(metrics::WIRE_ERRORS, 1);
+            }
+        }
+        if stream.write_all(&wire).is_err() {
+            break; // peer gone; drain remaining replies to /dev/null
+        }
+    }
+    let _ = stream.flush();
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+}
+
+/// A minimal blocking client for the wire protocol — the counterpart
+/// the load generator and the integration tests drive.
+pub struct WireClient {
+    stream: TcpStream,
+    layout: SymbolLayout,
+}
+
+impl WireClient {
+    /// Connect to a [`WireServer`]; `layout` must be the server field's
+    /// wire lane ([`wire_layout`]).
+    pub fn connect(addr: SocketAddr, layout: SymbolLayout) -> Result<WireClient> {
+        let stream = TcpStream::connect(addr).context("connecting to wire server")?;
+        let _ = stream.set_nodelay(true);
+        Ok(WireClient { stream, layout })
+    }
+
+    /// Send one encode request (does not wait for the response — the
+    /// connection pipelines; match responses by `req_id`).
+    pub fn send(&mut self, tenant: u64, req_id: u64, rows: &[Vec<u64>]) -> Result<()> {
+        let mut wire = Vec::new();
+        encode_rows_frame(&mut wire, FrameKind::Request, self.layout, tenant, req_id, rows)?;
+        self.stream.write_all(&wire)?;
+        Ok(())
+    }
+
+    /// Receive the next response frame: `(req_id, parity rows or the
+    /// server's error message)`. Blocks; `Err` means the connection
+    /// itself died.
+    pub fn recv(&mut self) -> Result<(u64, Result<Vec<Vec<u64>>>)> {
+        let mut head = [0u8; FRAME_HEADER_LEN];
+        self.stream.read_exact(&mut head).context("reading frame header")?;
+        let header = FrameHeader::parse(&head)?;
+        let mut payload = vec![0u8; header.payload_len as usize];
+        self.stream.read_exact(&mut payload).context("reading frame payload")?;
+        match header.kind {
+            FrameKind::Response => Ok((header.req_id, Ok(decode_rows_frame(&header, &payload)?))),
+            FrameKind::Error => Ok((
+                header.req_id,
+                Err(anyhow::anyhow!("{}", frame_error_message(&header, &payload))),
+            )),
+            FrameKind::Request => anyhow::bail!("unexpected request frame from server"),
+        }
+    }
+
+    /// Half-close: tell the server no more requests are coming, while
+    /// keeping the read side open for pending responses.
+    pub fn close_send(&mut self) -> Result<()> {
+        self.stream.shutdown(std::net::Shutdown::Write)?;
+        Ok(())
+    }
+}
+
+/// The async (tokio) build of the same front end, gated exactly like
+/// the `pjrt` feature: the bare `tokio` cargo feature names no
+/// dependency the offline container would need, and turning it on
+/// requires adding the `tokio` crate to `Cargo.toml` (the CI `tokio`
+/// job does this). It shares the sans-IO frame codec and the
+/// [`EncodeService`] dispatcher — tasks replace threads, nothing else
+/// changes.
+#[cfg(feature = "tokio")]
+pub mod nonblocking {
+    use super::*;
+    use tokio::io::{AsyncReadExt, AsyncWriteExt};
+
+    /// Serve `listener` until `shutdown` resolves. One task per
+    /// connection reads frames and submits into the shared dispatcher;
+    /// a writer task per connection streams completion-order replies.
+    pub async fn serve(
+        listener: tokio::net::TcpListener,
+        svc: std::sync::Arc<EncodeService>,
+        layout: SymbolLayout,
+        mut shutdown: tokio::sync::watch::Receiver<bool>,
+    ) -> Result<()> {
+        let metrics = svc.metrics.clone();
+        loop {
+            let (stream, _peer) = tokio::select! {
+                accepted = listener.accept() => accepted?,
+                _ = shutdown.changed() => return Ok(()),
+            };
+            metrics.incr(metrics::WIRE_CONNECTIONS, 1);
+            let svc = svc.clone();
+            let metrics = metrics.clone();
+            tokio::spawn(async move {
+                let _ = serve_conn_async(stream, svc, layout, metrics).await;
+            });
+        }
+    }
+
+    async fn serve_conn_async(
+        stream: tokio::net::TcpStream,
+        svc: std::sync::Arc<EncodeService>,
+        layout: SymbolLayout,
+        metrics: std::sync::Arc<Metrics>,
+    ) -> Result<()> {
+        let _ = stream.set_nodelay(true);
+        let (mut rd, mut wr) = stream.into_split();
+        // Bridge the dispatcher's std-mpsc replies onto an async
+        // channel via a blocking forwarder task.
+        let (reply_tx, reply_rx) = mpsc::channel::<EncodeResponse>();
+        let (async_tx, mut async_rx) = tokio::sync::mpsc::unbounded_channel();
+        let forwarder = tokio::task::spawn_blocking(move || {
+            while let Ok(resp) = reply_rx.recv() {
+                if async_tx.send(resp).is_err() {
+                    break;
+                }
+            }
+        });
+        let writer_metrics = metrics.clone();
+        let writer = tokio::spawn(async move {
+            let mut wire = Vec::new();
+            while let Some(resp) = async_rx.recv().await {
+                wire.clear();
+                match resp.y {
+                    Ok(rows) => {
+                        if encode_rows_frame(
+                            &mut wire,
+                            FrameKind::Response,
+                            layout,
+                            0,
+                            resp.req_id,
+                            &rows,
+                        )
+                        .is_err()
+                        {
+                            wire.clear();
+                            encode_error_frame(&mut wire, 0, resp.req_id, "response framing failed");
+                            writer_metrics.incr(metrics::WIRE_ERRORS, 1);
+                        }
+                    }
+                    Err(e) => {
+                        encode_error_frame(&mut wire, 0, resp.req_id, &format!("{e:#}"));
+                        writer_metrics.incr(metrics::WIRE_ERRORS, 1);
+                    }
+                }
+                if wr.write_all(&wire).await.is_err() {
+                    break;
+                }
+            }
+            let _ = wr.shutdown().await;
+        });
+        let mut head = [0u8; FRAME_HEADER_LEN];
+        loop {
+            match rd.read_exact(&mut head).await {
+                Ok(_) => {}
+                Err(_) => break,
+            }
+            let header = match FrameHeader::parse(&head) {
+                Ok(h) if h.kind == FrameKind::Request => h,
+                _ => {
+                    metrics.incr(metrics::WIRE_ERRORS, 1);
+                    break;
+                }
+            };
+            let mut payload = vec![0u8; header.payload_len as usize];
+            if rd.read_exact(&mut payload).await.is_err() {
+                break;
+            }
+            metrics.incr(metrics::WIRE_REQUESTS, 1);
+            let submitted = decode_rows_frame(&header, &payload)
+                .and_then(|rows| svc.submit_with(header.tenant, header.req_id, rows, reply_tx.clone()));
+            if let Err(e) = submitted {
+                metrics.incr(metrics::WIRE_ERRORS, 1);
+                let _ = reply_tx.send(EncodeResponse {
+                    req_id: header.req_id,
+                    y: Err(e),
+                    wall: Duration::ZERO,
+                });
+            }
+        }
+        drop(reply_tx);
+        let _ = forwarder.await;
+        let _ = writer.await;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::verify;
+    use crate::coordinator::EncodeJob;
+
+    fn test_cfg() -> JobConfig {
+        JobConfig {
+            k: 6,
+            r: 3,
+            w: 4,
+            ..JobConfig::default()
+        }
+    }
+
+    #[test]
+    fn wire_round_trip_matches_the_direct_encode_path() {
+        let cfg = test_cfg();
+        let f = cfg.any_field().unwrap();
+        let oracle = EncodeJob::synthetic(cfg.clone()).unwrap();
+        let server = WireServer::start(&cfg, "127.0.0.1:0", 2).unwrap();
+        let layout = wire_layout(&cfg).unwrap();
+        let mut client = WireClient::connect(server.local_addr(), layout).unwrap();
+        let mut rng = crate::util::Rng::new(21);
+        // Pipeline several mixed-width requests, then collect by id.
+        let mut sent: std::collections::HashMap<u64, Vec<Vec<u64>>> = Default::default();
+        for (i, w) in [3usize, 8, 3, 5].into_iter().enumerate() {
+            let x: Vec<Vec<u64>> = (0..cfg.k)
+                .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+                .collect();
+            client.send(7, i as u64, &x).unwrap();
+            sent.insert(i as u64, x);
+        }
+        for _ in 0..sent.len() {
+            let (id, y) = client.recv().unwrap();
+            let y = y.expect("server answered with parity rows");
+            let x = sent.remove(&id).expect("response id matches a request");
+            assert_eq!(y.len(), cfg.r);
+            assert!(verify::native(&f, &oracle.parity, &x, &y));
+        }
+        assert_eq!(server.metrics().counter(metrics::WIRE_REQUESTS), 4);
+        assert_eq!(server.metrics().counter(metrics::WIRE_CONNECTIONS), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_get_error_frames_and_garbage_drops_the_connection() {
+        let cfg = test_cfg();
+        let server = WireServer::start(&cfg, "127.0.0.1:0", 1).unwrap();
+        let layout = wire_layout(&cfg).unwrap();
+        // Wrong row count: a per-request Error frame, connection lives.
+        let mut client = WireClient::connect(server.local_addr(), layout).unwrap();
+        client.send(0, 5, &[vec![1, 2], vec![3, 4]]).unwrap();
+        let (id, y) = client.recv().unwrap();
+        assert_eq!(id, 5);
+        let msg = y.unwrap_err().to_string();
+        assert!(msg.contains("K ="), "names the shape problem: {msg}");
+        // The same connection still serves a good request.
+        let x: Vec<Vec<u64>> = (0..cfg.k).map(|i| vec![i as u64 + 1, 2]).collect();
+        client.send(0, 6, &x).unwrap();
+        let (id, y) = client.recv().unwrap();
+        assert_eq!(id, 6);
+        assert_eq!(y.unwrap().len(), cfg.r);
+        // Garbage bytes: the stream cannot be resynced — the server
+        // closes the connection (read returns EOF / reset).
+        let mut raw = TcpStream::connect(server.local_addr()).unwrap();
+        raw.write_all(b"this is not a DCE1 frame header....!!....").unwrap();
+        let _ = raw.flush();
+        let mut buf = [0u8; 16];
+        let closed = matches!(raw.read(&mut buf), Ok(0) | Err(_));
+        assert!(closed, "server must drop an unparseable connection");
+        assert!(server.metrics().counter(metrics::WIRE_ERRORS) >= 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pipelined_responses_before_closing() {
+        let mut cfg = test_cfg();
+        // A wide-open batch window: requests sit queued until the
+        // server's graceful shutdown drains them.
+        cfg.serve.max_batch = 64;
+        cfg.serve.max_delay_us = 5_000_000;
+        let f = cfg.any_field().unwrap();
+        let server = WireServer::start(&cfg, "127.0.0.1:0", 1).unwrap();
+        let layout = wire_layout(&cfg).unwrap();
+        let mut client = WireClient::connect(server.local_addr(), layout).unwrap();
+        let n = 10u64;
+        let mut rng = crate::util::Rng::new(3);
+        for i in 0..n {
+            let x: Vec<Vec<u64>> = (0..cfg.k)
+                .map(|_| (0..4).map(|_| rng.below(f.order())).collect())
+                .collect();
+            client.send(1, i, &x).unwrap();
+        }
+        // Wait until the dispatcher has admitted all of them, then shut
+        // down: every one must still produce a Response frame.
+        while server.metrics().counter(metrics::WIRE_REQUESTS) < n {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let handle = std::thread::spawn(move || {
+            let mut got = std::collections::HashSet::new();
+            for _ in 0..n {
+                let (id, y) = client.recv().expect("response before close");
+                assert!(y.is_ok());
+                got.insert(id);
+            }
+            assert_eq!(got.len(), n as usize, "each request answered once");
+        });
+        server.shutdown();
+        handle.join().unwrap();
+    }
+}

@@ -1,72 +1,122 @@
 //! The batch-encode service — the serving-path face of the system.
 //!
-//! Worker threads consume [`EncodeRequest`]s (K payload rows of arbitrary
-//! width) from a bounded queue and reply on a per-request channel.
-//! Bounded-queue submission gives natural backpressure; metrics record
-//! throughput and latency percentiles. Two engines:
+//! Requests enter an **event-driven dispatcher**: per-width FIFO queues
+//! under one mutex, with condvar wakeups — no polling, no sleep quanta.
+//! An idle service answers a submit in microseconds. Worker threads
+//! take **single-width batches** from the dispatcher and serve each in
+//! one columnar pass:
 //!
 //! * [`EncodeService::start`] — the PJRT path: chunk rows to the AOT
 //!   artifact's width `W` and run the compiled GF(p) kernel
-//!   (`runtime::GfEncoder`).
+//!   (`runtime::GfEncoder`), request-at-a-time.
 //! * [`EncodeService::start_replay`] — the plan-replay path: compile the
 //!   shape's decentralized schedule **once** into a
 //!   [`CompiledPlan`](crate::framework::CompiledPlan) (first request =
-//!   one cache miss) and replay its optimized form for every request —
-//!   no per-request planning or round stepping, any payload width, no
-//!   artifacts needed. Workers **micro-batch**: having taken one
-//!   request, a worker keeps draining the queue until it holds
-//!   [`BatchPolicy::max_batch`] requests or [`BatchPolicy::max_delay`]
-//!   has elapsed, then serves the whole batch in one columnar
-//!   [`replay_batch`](crate::net::exec::replay_batch) pass per payload
-//!   width. Cache hit/miss, batch-size/occupancy and throughput
-//!   counters all land in the service metrics summary.
+//!   one cache miss on the sharded [`PlanCache`]) and replay its
+//!   optimized form for every request.
+//!
+//! **Adaptive batching** ([`BatchPolicy`]): every admitted request
+//! carries a deadline (`admitted + max_delay`). A width group fires as
+//! a batch when it reaches `max_batch` requests (occupancy) *or* when
+//! its oldest request's slack is spent (deadline) — so a loaded service
+//! serves full columnar batches while a lightly-loaded one never holds
+//! a request longer than `max_delay`. Because queues are per width,
+//! co-batching across widths is structurally impossible.
+//!
+//! **Admission control**: every request belongs to a `tenant` (plain
+//! [`EncodeService::submit`] uses tenant 0). The dispatcher bounds the
+//! global queue (`queue_depth`) and each tenant's in-flight requests
+//! (`tenant_quota`). The blocking [`submit`](EncodeService::submit)
+//! path waits for room (backpressure); the non-blocking
+//! [`try_submit_tenant`](EncodeService::try_submit_tenant) /
+//! [`submit_with`](EncodeService::submit_with) paths — what the wire
+//! front end uses — refuse with a typed
+//! [`ServeRejection::Overloaded`] instead (load shedding), counted in
+//! `admission_rejects`.
+//!
+//! **Shutdown drains**: [`EncodeService::shutdown`] marks the
+//! dispatcher stopping and wakes everyone; workers serve every queued
+//! request (deadlines ignored) before exiting, so each gets a real
+//! response. Requests submitted after stop — and requests stranded by
+//! the death of the last worker — get a typed
+//! [`ServeRejection::ServiceStopped`] reply instead of being silently
+//! dropped.
 //!
 //! Malformed payloads (wrong row count, ragged or empty widths) are
 //! rejected with a proper `Err` — at [`EncodeService::submit`] before
 //! they ever enqueue, and again per request inside the batch worker, so
 //! one bad request can neither poison a batch nor kill a worker.
 //!
-//! (The offline build has no tokio; std threads + mpsc channels provide
-//! the same architecture — see DESIGN.md §1.)
+//! (The offline build has no tokio; std threads + condvars provide the
+//! same architecture — see DESIGN.md §10.)
 
 use super::job::EncodeJob;
-use super::metrics::Metrics;
+use super::metrics::{self, Metrics};
 use super::plan_cache::PlanCache;
 use crate::gf::{Field, Mat};
 use crate::runtime::Runtime;
 use anyhow::{Context, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// A batch of payloads to encode: `x[k]` is source `k`'s row (all rows
-/// the same width, any width — the service chunks internally).
+/// the same width, any width — the service groups by width internally).
 pub struct EncodeRequest {
+    /// Admission-control principal (plain `submit` uses tenant 0).
+    pub tenant: u64,
+    /// Caller-chosen correlation id, echoed on the response — lets many
+    /// requests share one reply channel (the wire front end does).
+    pub req_id: u64,
     pub x: Vec<Vec<u64>>,
     /// Reply channel.
     pub reply: mpsc::Sender<EncodeResponse>,
+    /// When the dispatcher admitted the request (set on admission).
+    pub(crate) admitted: Instant,
+    /// `admitted + max_delay` — the batch must fire by here.
+    pub(crate) deadline: Instant,
+}
+
+impl EncodeRequest {
+    /// Build a request; the dispatcher stamps `admitted`/`deadline` on
+    /// admission.
+    pub fn new(tenant: u64, req_id: u64, x: Vec<Vec<u64>>, reply: mpsc::Sender<EncodeResponse>) -> Self {
+        let now = Instant::now();
+        EncodeRequest {
+            tenant,
+            req_id,
+            x,
+            reply,
+            admitted: now,
+            deadline: now,
+        }
+    }
 }
 
 /// Parity rows `y[r]`, one per sink, same width as the request.
 #[derive(Debug)]
 pub struct EncodeResponse {
+    /// Echo of [`EncodeRequest::req_id`].
+    pub req_id: u64,
     pub y: Result<Vec<Vec<u64>>>,
     pub wall: std::time::Duration,
 }
 
-/// Micro-batching policy for the replay service: a worker that has
-/// taken one request keeps draining the queue until it holds
-/// `max_batch` requests or `max_delay` has passed since the first take,
-/// then serves everything it collected in one columnar pass per payload
-/// width. `max_batch = 1` degenerates to request-at-a-time serving.
+/// Adaptive micro-batching policy: a width group is served as one
+/// columnar batch when it holds `max_batch` requests (occupancy-driven,
+/// fires early under load) or when its oldest request has been queued
+/// for `max_delay` (deadline-driven — every request carries an
+/// admission deadline and its batch fires when the oldest one's slack
+/// is spent). `max_batch = 1` or `max_delay = 0` degenerate to
+/// request-at-a-time serving.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     /// Largest number of requests served in one `replay_batch` call.
     pub max_batch: usize,
-    /// Longest a taken request waits for co-batched company.
+    /// Longest an admitted request waits for co-batched company.
     pub max_delay: Duration,
 }
 
@@ -79,13 +129,309 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Typed admission-control refusal. Carried as the error of
+/// [`EncodeService::try_submit_tenant`] / [`EncodeService::submit_with`]
+/// (downcast with `err.downcast_ref::<ServeRejection>()`) and as the
+/// reply to requests stranded by shutdown.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeRejection {
+    /// The global queue or the tenant's in-flight quota is full —
+    /// back off and retry.
+    Overloaded {
+        tenant: u64,
+        /// Requests currently counted against the breached limit.
+        in_flight: usize,
+        /// The breached limit (queue depth or tenant quota).
+        limit: usize,
+        /// `true` when the *global* queue bound rejected, `false` when
+        /// the per-tenant quota did.
+        global: bool,
+    },
+    /// The service is shutting down (or every worker died); the
+    /// request was not served.
+    ServiceStopped,
+}
+
+impl std::fmt::Display for ServeRejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeRejection::Overloaded {
+                tenant,
+                in_flight,
+                limit,
+                global: true,
+            } => write!(
+                f,
+                "overloaded: queue full ({in_flight}/{limit}) rejecting tenant {tenant}"
+            ),
+            ServeRejection::Overloaded {
+                tenant,
+                in_flight,
+                limit,
+                global: false,
+            } => write!(
+                f,
+                "overloaded: tenant {tenant} quota exhausted ({in_flight}/{limit} in flight)"
+            ),
+            ServeRejection::ServiceStopped => write!(f, "service stopped"),
+        }
+    }
+}
+
+impl std::error::Error for ServeRejection {}
+
+/// Mutable dispatcher state, guarded by [`Dispatcher::state`].
+struct QueueState {
+    /// Per-width FIFO queues — batches never mix widths.
+    groups: BTreeMap<usize, VecDeque<EncodeRequest>>,
+    /// Total requests across all groups.
+    queued: usize,
+    /// Per-tenant in-flight counts (queued + currently serving).
+    in_flight: HashMap<u64, usize>,
+    /// Shutdown begun: serve the backlog, admit nothing new.
+    stopping: bool,
+    /// Worker threads still able to serve. When the last one exits
+    /// with requests still queued, the tail is reject-drained.
+    workers_alive: usize,
+}
+
+/// The event-driven heart of the service: per-width queues, condvar
+/// wakeups, deadline/occupancy batch firing, tenant admission control.
+struct Dispatcher {
+    state: Mutex<QueueState>,
+    /// Wakes workers (new request, shutdown).
+    ready: Condvar,
+    /// Wakes blocking submitters (queue space / quota freed, shutdown).
+    space: Condvar,
+    policy: BatchPolicy,
+    queue_depth: usize,
+    tenant_quota: usize,
+    k: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl Dispatcher {
+    fn new(
+        policy: BatchPolicy,
+        queue_depth: usize,
+        tenant_quota: usize,
+        k: usize,
+        n_workers: usize,
+        metrics: Arc<Metrics>,
+    ) -> Self {
+        Dispatcher {
+            state: Mutex::new(QueueState {
+                groups: BTreeMap::new(),
+                queued: 0,
+                in_flight: HashMap::new(),
+                stopping: false,
+                workers_alive: n_workers,
+            }),
+            ready: Condvar::new(),
+            space: Condvar::new(),
+            policy,
+            queue_depth,
+            tenant_quota,
+            k,
+            metrics,
+        }
+    }
+
+    /// Admit one request into its width queue. `block = true` waits for
+    /// queue space / tenant quota (backpressure); `block = false`
+    /// refuses with [`ServeRejection::Overloaded`] (load shedding).
+    /// Either way a stopping service refuses with `ServiceStopped`.
+    fn admit(
+        &self,
+        mut req: EncodeRequest,
+        block: bool,
+    ) -> std::result::Result<(), ServeRejection> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if s.stopping || s.workers_alive == 0 {
+                self.metrics.incr(metrics::STOPPED_REJECTS, 1);
+                return Err(ServeRejection::ServiceStopped);
+            }
+            if s.queued >= self.queue_depth {
+                if !block {
+                    self.metrics.incr(metrics::ADMISSION_REJECTS, 1);
+                    return Err(ServeRejection::Overloaded {
+                        tenant: req.tenant,
+                        in_flight: s.queued,
+                        limit: self.queue_depth,
+                        global: true,
+                    });
+                }
+            } else {
+                let used = s.in_flight.get(&req.tenant).copied().unwrap_or(0);
+                if used < self.tenant_quota {
+                    break;
+                }
+                if !block {
+                    self.metrics.incr(metrics::ADMISSION_REJECTS, 1);
+                    return Err(ServeRejection::Overloaded {
+                        tenant: req.tenant,
+                        in_flight: used,
+                        limit: self.tenant_quota,
+                        global: false,
+                    });
+                }
+            }
+            self.metrics.incr(metrics::ADMISSION_WAITS, 1);
+            s = self.space.wait(s).unwrap();
+        }
+        *s.in_flight.entry(req.tenant).or_insert(0) += 1;
+        req.admitted = Instant::now();
+        req.deadline = req.admitted + self.policy.max_delay;
+        let width = req.x.first().map_or(0, |r| r.len());
+        s.groups.entry(width).or_default().push_back(req);
+        s.queued += 1;
+        self.metrics.incr_to_max(metrics::QUEUE_DEPTH_MAX, s.queued as u64);
+        drop(s);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until a batch is ready and take it, or return `None` when
+    /// the service is stopping and the backlog is fully drained. A
+    /// group is ready when it holds `max_batch` requests, when its
+    /// oldest request's deadline has passed, or — while stopping —
+    /// unconditionally (the drain ignores deadlines). Among ready
+    /// groups the one with the oldest head deadline fires first.
+    fn next_batch(&self) -> Option<Vec<EncodeRequest>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let mut pick: Option<usize> = None;
+            let mut pick_deadline = None;
+            let mut earliest: Option<Instant> = None;
+            for (&w, q) in &s.groups {
+                let head = match q.front() {
+                    Some(h) => h,
+                    None => continue,
+                };
+                if s.stopping || q.len() >= self.policy.max_batch || head.deadline <= now {
+                    if pick_deadline.map_or(true, |d| head.deadline < d) {
+                        pick = Some(w);
+                        pick_deadline = Some(head.deadline);
+                    }
+                } else {
+                    earliest = Some(match earliest {
+                        Some(e) if e < head.deadline => e,
+                        _ => head.deadline,
+                    });
+                }
+            }
+            if let Some(w) = pick {
+                let q = s.groups.get_mut(&w).expect("picked group exists");
+                let n = q.len().min(self.policy.max_batch);
+                let batch: Vec<EncodeRequest> = q.drain(..n).collect();
+                if q.is_empty() {
+                    s.groups.remove(&w);
+                }
+                s.queued -= n;
+                let more_ready = s.stopping && s.queued > 0
+                    || s.groups.values().any(|q| {
+                        q.len() >= self.policy.max_batch
+                            || q.front().is_some_and(|h| h.deadline <= now)
+                    });
+                drop(s);
+                // Queue space freed — wake blocked submitters; and if
+                // another group is already ready, wake a second worker.
+                self.space.notify_all();
+                if more_ready {
+                    self.ready.notify_one();
+                }
+                return Some(batch);
+            }
+            if s.stopping {
+                // Backlog drained (every group either empty or gone).
+                debug_assert_eq!(s.queued, 0);
+                return None;
+            }
+            s = match earliest {
+                Some(dl) => {
+                    let wait = dl.saturating_duration_since(now);
+                    if wait.is_zero() {
+                        continue; // became due while scanning
+                    }
+                    self.ready.wait_timeout(s, wait).unwrap().0
+                }
+                None => self.ready.wait(s).unwrap(),
+            };
+        }
+    }
+
+    /// Retire served requests from their tenants' in-flight counts
+    /// (called after the replies went out) and wake blocked submitters.
+    fn release(&self, counts: &[(u64, usize)]) {
+        let mut s = self.state.lock().unwrap();
+        for &(tenant, n) in counts {
+            if let Some(c) = s.in_flight.get_mut(&tenant) {
+                *c = c.saturating_sub(n);
+                if *c == 0 {
+                    s.in_flight.remove(&tenant);
+                }
+            }
+        }
+        drop(s);
+        self.space.notify_all();
+    }
+
+    /// Begin shutdown: stop admitting, wake everyone so workers drain
+    /// the backlog and blocked submitters see `ServiceStopped`.
+    fn begin_stop(&self) {
+        self.state.lock().unwrap().stopping = true;
+        self.ready.notify_all();
+        self.space.notify_all();
+    }
+}
+
+/// Decrements `workers_alive` when a worker exits — however it exits.
+/// The *last* worker to go reject-drains any still-queued requests with
+/// a typed `ServiceStopped` reply (nothing can serve them anymore), so
+/// no request is ever silently dropped, even if workers die abnormally.
+struct WorkerExit {
+    dispatcher: Arc<Dispatcher>,
+}
+
+impl Drop for WorkerExit {
+    fn drop(&mut self) {
+        let d = &self.dispatcher;
+        let mut s = d.state.lock().unwrap();
+        s.workers_alive = s.workers_alive.saturating_sub(1);
+        if s.workers_alive > 0 {
+            return;
+        }
+        s.stopping = true; // future submits → ServiceStopped
+        let groups = std::mem::take(&mut s.groups);
+        s.queued = 0;
+        s.in_flight.clear();
+        drop(s);
+        d.ready.notify_all();
+        d.space.notify_all();
+        for (_w, q) in groups {
+            for req in q {
+                d.metrics.incr(metrics::STOPPED_REJECTS, 1);
+                d.metrics.incr("requests", 1);
+                d.metrics.incr("failures", 1);
+                let _ = req.reply.send(EncodeResponse {
+                    req_id: req.req_id,
+                    y: Err(ServeRejection::ServiceStopped.into()),
+                    wall: Duration::ZERO,
+                });
+            }
+        }
+    }
+}
+
 /// A running encode service over a fixed code (parity matrix).
 pub struct EncodeService {
-    tx: Option<mpsc::SyncSender<EncodeRequest>>,
+    dispatcher: Arc<Dispatcher>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
-    stop: Arc<AtomicBool>,
     k: usize,
+    next_id: AtomicU64,
 }
 
 impl EncodeService {
@@ -99,24 +445,38 @@ impl EncodeService {
         n_workers: usize,
         queue_depth: usize,
     ) -> Result<Self> {
+        anyhow::ensure!(n_workers >= 1, "need at least one worker");
         let (k, r) = (parity.rows, parity.cols);
         let a_flat: Arc<Vec<u64>> =
             Arc::new((0..k).flat_map(|i| parity.row(i).to_vec()).collect());
-        let (tx, rx) = mpsc::sync_channel::<EncodeRequest>(queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
-        let stop = Arc::new(AtomicBool::new(false));
+        // The PJRT engine chunks each request independently — serve
+        // request-at-a-time (max_batch 1, no added delay).
+        let policy = BatchPolicy {
+            max_batch: 1,
+            max_delay: Duration::ZERO,
+        };
+        let dispatcher = Arc::new(Dispatcher::new(
+            policy,
+            queue_depth,
+            queue_depth.max(1),
+            k,
+            n_workers,
+            metrics.clone(),
+        ));
         let q = f.order();
         let mut workers = Vec::new();
         for wid in 0..n_workers {
-            let rx = rx.clone();
+            let dispatcher = dispatcher.clone();
             let metrics = metrics.clone();
-            let stop = stop.clone();
             let a_flat = a_flat.clone();
             let dir = artifacts_dir.to_path_buf();
             let handle = std::thread::Builder::new()
                 .name(format!("encode-worker-{wid}"))
                 .spawn(move || {
+                    let _guard = WorkerExit {
+                        dispatcher: dispatcher.clone(),
+                    };
                     // Per-worker PJRT session + compiled executable: the
                     // request path never leaves rust.
                     let rt = match Runtime::cpu() {
@@ -135,35 +495,37 @@ impl EncodeService {
                             return;
                         }
                     };
-                    worker_loop(&rx, &metrics, &stop, |x| {
-                        encode_chunked(&enc, &a_flat, x, k, r, chunk_w)
+                    batch_worker(&dispatcher, &metrics, |jobs| {
+                        jobs.iter()
+                            .map(|x| encode_chunked(&enc, &a_flat, x, k, r, chunk_w))
+                            .collect()
                     });
                 })
                 .context("spawning worker")?;
             workers.push(handle);
         }
         Ok(EncodeService {
-            tx: Some(tx),
+            dispatcher,
             workers,
             metrics,
-            stop,
             k,
+            next_id: AtomicU64::new(1),
         })
     }
 
     /// Start a plan-replay service for the shape described by `cfg` with
-    /// the default [`BatchPolicy`]: no PJRT artifacts required. Workers
-    /// share one [`PlanCache`] wired to the service metrics; the first
-    /// batch compiles the plan (one `plan_cache_misses`), every later
-    /// batch replays it. Requests may have any payload width — the
-    /// compiled plan is width-independent (each micro-batch is served
-    /// with one columnar pass per width it contains).
+    /// the batching policy from `cfg.serve`: no PJRT artifacts required.
+    /// Workers share one sharded [`PlanCache`] wired to the service
+    /// metrics; the first batch compiles the plan (one
+    /// `plan_cache_misses`), every later batch replays it. Requests may
+    /// have any payload width — the compiled plan is width-independent
+    /// (each batch is one width group, served in one columnar pass).
     pub fn start_replay(
         cfg: &super::JobConfig,
         n_workers: usize,
         queue_depth: usize,
     ) -> Result<Self> {
-        Self::start_replay_with(cfg, n_workers, queue_depth, BatchPolicy::default())
+        Self::start_replay_with(cfg, n_workers, queue_depth, cfg.serve.policy())
     }
 
     /// Start a **degraded** replay service: every request is served
@@ -183,11 +545,11 @@ impl EncodeService {
         queue_depth: usize,
         faults: crate::net::FaultSpec,
     ) -> Result<Self> {
-        Self::start_replay_inner(cfg, n_workers, queue_depth, BatchPolicy::default(), Some(faults))
+        Self::start_replay_inner(cfg, n_workers, queue_depth, cfg.serve.policy(), Some(faults))
     }
 
     /// [`start_replay`](EncodeService::start_replay) with an explicit
-    /// micro-batching policy.
+    /// micro-batching policy (overrides `cfg.serve`).
     pub fn start_replay_with(
         cfg: &super::JobConfig,
         n_workers: usize,
@@ -207,74 +569,147 @@ impl EncodeService {
         faults: Option<crate::net::FaultSpec>,
     ) -> Result<Self> {
         anyhow::ensure!(policy.max_batch >= 1, "batch policy needs max_batch >= 1");
+        anyhow::ensure!(n_workers >= 1, "need at least one worker");
         // Build the (field, code, parity) triple once; the synthetic
         // inputs are ignored — requests carry their own payloads.
         let job = Arc::new(EncodeJob::synthetic(cfg.clone())?);
         let faults = Arc::new(faults);
         let k = cfg.k;
-        let (tx, rx) = mpsc::sync_channel::<EncodeRequest>(queue_depth);
-        let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
-        let cache = Arc::new(PlanCache::with_metrics(metrics.clone()));
-        let stop = Arc::new(AtomicBool::new(false));
+        let cache = Arc::new(PlanCache::with_config(
+            cfg.serve.plan_cache_capacity,
+            cfg.serve.plan_cache_shards,
+            metrics.clone(),
+        ));
+        let dispatcher = Arc::new(Dispatcher::new(
+            policy,
+            queue_depth,
+            cfg.serve.tenant_quota,
+            k,
+            n_workers,
+            metrics.clone(),
+        ));
         let mut workers = Vec::new();
         for wid in 0..n_workers {
-            let rx = rx.clone();
+            let dispatcher = dispatcher.clone();
             let metrics = metrics.clone();
-            let stop = stop.clone();
             let job = job.clone();
             let cache = cache.clone();
             let faults = faults.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("replay-worker-{wid}"))
                 .spawn(move || {
+                    let _guard = WorkerExit {
+                        dispatcher: dispatcher.clone(),
+                    };
                     let metrics_for_recovery = metrics.clone();
-                    batch_worker_loop(&rx, &metrics, &stop, k, policy, move |jobs| {
-                        match &*faults {
-                            None => job.encode_batch_cached(&cache, jobs),
-                            Some(spec) => {
-                                let (ys, stats) =
-                                    job.encode_degraded_batch_cached(&cache, jobs, spec)?;
-                                let m = &metrics_for_recovery;
-                                let injected = stats.faults_injected * jobs.len() as u64;
-                                m.incr(super::metrics::FAULTS_INJECTED, injected);
-                                m.incr(super::metrics::OUTPUTS_RECOVERED, stats.outputs_recovered);
-                                m.observe(super::metrics::RECOVERY_LATENCY, stats.recovery_wall);
-                                Ok(ys)
-                            }
+                    batch_worker(&dispatcher, &metrics, move |jobs| match &*faults {
+                        None => job.encode_batch_cached(&cache, jobs),
+                        Some(spec) => {
+                            let (ys, stats) =
+                                job.encode_degraded_batch_cached(&cache, jobs, spec)?;
+                            let m = &metrics_for_recovery;
+                            let injected = stats.faults_injected * jobs.len() as u64;
+                            m.incr(metrics::FAULTS_INJECTED, injected);
+                            m.incr(metrics::OUTPUTS_RECOVERED, stats.outputs_recovered);
+                            m.observe(metrics::RECOVERY_LATENCY, stats.recovery_wall);
+                            Ok(ys)
                         }
-                    })
+                    });
                 })
                 .context("spawning replay worker")?;
             workers.push(handle);
         }
         Ok(EncodeService {
-            tx: Some(tx),
+            dispatcher,
             workers,
             metrics,
-            stop,
             k,
+            next_id: AtomicU64::new(1),
         })
     }
 
-    /// Submit a batch (blocks when the queue is full — backpressure).
-    /// Malformed payloads — wrong row count, ragged or empty widths —
-    /// are rejected here with an `Err` before they enqueue.
+    /// Submit a batch as tenant 0 (blocks for queue space when full —
+    /// backpressure). Malformed payloads — wrong row count, ragged or
+    /// empty widths — are rejected here with an `Err` before they
+    /// enqueue.
     pub fn submit(&self, x: Vec<Vec<u64>>) -> Result<mpsc::Receiver<EncodeResponse>> {
-        validate_payload(self.k, &x)?;
-        self.enqueue(x)
+        self.submit_tenant(0, x)
     }
 
-    /// The shared enqueue path: build the reply channel and send the
-    /// request into the bounded queue.
-    fn enqueue(&self, x: Vec<Vec<u64>>) -> Result<mpsc::Receiver<EncodeResponse>> {
+    /// [`submit`](EncodeService::submit) under an explicit tenant id
+    /// (blocks while the tenant's quota or the global queue is full).
+    pub fn submit_tenant(
+        &self,
+        tenant: u64,
+        x: Vec<Vec<u64>>,
+    ) -> Result<mpsc::Receiver<EncodeResponse>> {
+        validate_payload(self.k, &x)?;
+        self.enqueue(tenant, x, true)
+    }
+
+    /// Non-blocking submit: refuses with a typed
+    /// [`ServeRejection::Overloaded`] (downcastable from the returned
+    /// error) instead of waiting — the load-shedding path.
+    pub fn try_submit_tenant(
+        &self,
+        tenant: u64,
+        x: Vec<Vec<u64>>,
+    ) -> Result<mpsc::Receiver<EncodeResponse>> {
+        validate_payload(self.k, &x)?;
+        self.enqueue(tenant, x, false)
+    }
+
+    /// Non-blocking submit onto a **shared** reply channel: the
+    /// response echoes `req_id`, so one channel can serve a whole
+    /// connection's pipeline (the wire front end's path). Admission
+    /// refusals come back as typed [`ServeRejection`] errors.
+    pub fn submit_with(
+        &self,
+        tenant: u64,
+        req_id: u64,
+        x: Vec<Vec<u64>>,
+        reply: mpsc::Sender<EncodeResponse>,
+    ) -> Result<()> {
+        validate_payload(self.k, &x)?;
+        self.dispatcher
+            .admit(EncodeRequest::new(tenant, req_id, x, reply), false)
+            .map_err(anyhow::Error::from)
+    }
+
+    /// A cheap, cloneable, `'static` submit handle for front ends: it
+    /// shares the dispatcher (not the service), and validates + admits
+    /// exactly like [`submit_with`](EncodeService::submit_with). The
+    /// wire server's connection threads hold one of these while the
+    /// service itself stays owned by the server for shutdown.
+    pub fn submit_handle(
+        &self,
+    ) -> impl Fn(u64, u64, Vec<Vec<u64>>, mpsc::Sender<EncodeResponse>) -> Result<()>
+           + Clone
+           + Send
+           + Sync
+           + 'static {
+        let dispatcher = self.dispatcher.clone();
+        let k = self.k;
+        move |tenant, req_id, x, reply| {
+            validate_payload(k, &x)?;
+            dispatcher
+                .admit(EncodeRequest::new(tenant, req_id, x, reply), false)
+                .map_err(anyhow::Error::from)
+        }
+    }
+
+    /// The shared enqueue path: build the reply channel and admit.
+    fn enqueue(
+        &self,
+        tenant: u64,
+        x: Vec<Vec<u64>>,
+        block: bool,
+    ) -> Result<mpsc::Receiver<EncodeResponse>> {
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .context("service stopped")?
-            .send(EncodeRequest { x, reply })
-            .ok()
-            .context("service stopped")?;
+        let req_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.dispatcher
+            .admit(EncodeRequest::new(tenant, req_id, x, reply), block)?;
         Ok(rx)
     }
 
@@ -282,51 +717,42 @@ impl EncodeService {
     /// exercise the worker's own shape checks.
     #[cfg(test)]
     fn submit_unchecked(&self, x: Vec<Vec<u64>>) -> Result<mpsc::Receiver<EncodeResponse>> {
-        self.enqueue(x)
+        let (reply, rx) = mpsc::channel();
+        let req_id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.dispatcher
+            .admit(EncodeRequest::new(0, req_id, x, reply), true)?;
+        Ok(rx)
     }
 
-    /// Drain and stop all workers.
+    /// Graceful shutdown: stop admitting, serve every queued request
+    /// (drain-and-respond), join the workers. No queued request is
+    /// dropped — each gets its response before the workers exit.
     pub fn shutdown(mut self) {
-        self.tx.take(); // close the queue
-        self.stop.store(true, Ordering::Relaxed);
+        self.dispatcher.begin_stop();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
-/// The worker protocol shared by both engines: poll the stop flag, drain
-/// the bounded queue (50ms poll so shutdown is prompt), time each
-/// request, record the `requests`/`failures`/`encode_latency` metrics,
-/// reply on the per-request channel. `encode` is the only per-engine
-/// part.
-fn worker_loop(
-    rx: &Mutex<mpsc::Receiver<EncodeRequest>>,
+/// The worker loop shared by both engines: take ready single-width
+/// batches from the dispatcher until shutdown drains the queue, serve
+/// each, then retire the batch's tenants' in-flight counts.
+fn batch_worker(
+    dispatcher: &Arc<Dispatcher>,
     metrics: &Metrics,
-    stop: &AtomicBool,
-    encode: impl Fn(&[Vec<u64>]) -> Result<Vec<Vec<u64>>>,
+    encode_batch: impl Fn(&[&[Vec<u64>]]) -> Result<Vec<Vec<Vec<u64>>>>,
 ) {
-    loop {
-        if stop.load(Ordering::Relaxed) {
-            break;
-        }
-        let req = {
-            let guard = rx.lock().unwrap();
-            match guard.recv_timeout(std::time::Duration::from_millis(50)) {
-                Ok(req) => req,
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+    while let Some(batch) = dispatcher.next_batch() {
+        let mut tenants: Vec<(u64, usize)> = Vec::new();
+        for req in &batch {
+            match tenants.iter_mut().find(|(t, _)| *t == req.tenant) {
+                Some((_, n)) => *n += 1,
+                None => tenants.push((req.tenant, 1)),
             }
-        };
-        let t0 = Instant::now();
-        let y = encode(&req.x);
-        let wall = t0.elapsed();
-        metrics.incr("requests", 1);
-        if y.is_err() {
-            metrics.incr("failures", 1);
         }
-        metrics.observe("encode_latency", wall);
-        let _ = req.reply.send(EncodeResponse { y, wall });
+        serve_batch(batch, metrics, dispatcher.k, &encode_batch);
+        dispatcher.release(&tenants);
     }
 }
 
@@ -344,67 +770,15 @@ fn validate_payload(k: usize, x: &[Vec<u64>]) -> Result<()> {
     Ok(())
 }
 
-/// The micro-batching worker protocol of the replay engine: take one
-/// request (50ms poll so shutdown stays prompt), then keep draining the
-/// queue until the batch holds `policy.max_batch` requests or
-/// `policy.max_delay` has elapsed, and serve the whole batch. The queue
-/// lock is held only while collecting — the encode itself runs
-/// lock-free so other workers can collect their own batches meanwhile.
-fn batch_worker_loop(
-    rx: &Mutex<mpsc::Receiver<EncodeRequest>>,
-    metrics: &Metrics,
-    stop: &AtomicBool,
-    k: usize,
-    policy: BatchPolicy,
-    encode_batch: impl Fn(&[&[Vec<u64>]]) -> Result<Vec<Vec<Vec<u64>>>>,
-) {
-    loop {
-        if stop.load(Ordering::Relaxed) {
-            break;
-        }
-        let mut batch: Vec<EncodeRequest> = Vec::with_capacity(policy.max_batch);
-        let disconnected = {
-            let guard = rx.lock().unwrap();
-            match guard.recv_timeout(Duration::from_millis(50)) {
-                Ok(req) => batch.push(req),
-                Err(mpsc::RecvTimeoutError::Timeout) => continue,
-                Err(mpsc::RecvTimeoutError::Disconnected) => break,
-            }
-            let deadline = Instant::now() + policy.max_delay;
-            let mut disconnected = false;
-            while batch.len() < policy.max_batch {
-                let left = deadline.saturating_duration_since(Instant::now());
-                if left.is_zero() {
-                    break;
-                }
-                match guard.recv_timeout(left) {
-                    Ok(req) => batch.push(req),
-                    Err(mpsc::RecvTimeoutError::Timeout) => break,
-                    Err(mpsc::RecvTimeoutError::Disconnected) => {
-                        disconnected = true;
-                        break;
-                    }
-                }
-            }
-            disconnected
-        };
-        serve_batch(batch, metrics, k, &encode_batch);
-        if disconnected {
-            // The queue closed while collecting: the batch just served
-            // was the drain's tail — nothing more will arrive.
-            break;
-        }
-    }
-}
-
 /// Serve one collected micro-batch: shape-validate each request (bad
 /// ones get their own `Err` reply and never poison the batch), group
-/// the valid ones by payload width, run one columnar `encode_batch`
-/// pass per width, and reply per request **as its width group
-/// finishes** — a request's `wall` / `encode_latency` is the serve time
-/// of its own group, not of the whole batch (queueing delay inside the
-/// collection window is not included; `batch_latency` covers the full
-/// serve). Records the batch-size/occupancy/throughput counters.
+/// the valid ones by payload width (the dispatcher already delivers
+/// single-width batches; the grouping also guards direct callers), run
+/// one columnar `encode_batch` pass per width, and reply per request
+/// **as its width group finishes** — a request's `wall` /
+/// `encode_latency` is the serve time of its own group; `queue_wait`
+/// records admission → serve start; `batch_latency` covers the full
+/// serve. Records the batch-size/occupancy/throughput counters.
 fn serve_batch(
     batch: Vec<EncodeRequest>,
     metrics: &Metrics,
@@ -414,10 +788,15 @@ fn serve_batch(
     let batch_t0 = Instant::now();
     let mut valid: Vec<Option<EncodeRequest>> = Vec::with_capacity(batch.len());
     for req in batch {
+        metrics.observe(
+            metrics::QUEUE_WAIT,
+            batch_t0.saturating_duration_since(req.admitted),
+        );
         if let Err(e) = validate_payload(k, &req.x) {
             metrics.incr("requests", 1);
             metrics.incr("failures", 1);
             let _ = req.reply.send(EncodeResponse {
+                req_id: req.req_id,
                 y: Err(e),
                 wall: batch_t0.elapsed(),
             });
@@ -430,8 +809,8 @@ fn serve_batch(
     }
     metrics.record_batch(valid.len() as u64);
 
-    // One columnar pass per payload width (mixed-width batches split
-    // into width groups; single-width traffic gets exactly one pass).
+    // One columnar pass per payload width (the dispatcher's per-width
+    // queues make this a single group on the service path).
     let mut by_width: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
     for (i, req) in valid.iter().enumerate() {
         let req = req.as_ref().expect("request present before serving");
@@ -454,7 +833,11 @@ fn serve_batch(
                     metrics.incr("requests", 1);
                     elems += y.iter().map(|r| r.len() as u64).sum::<u64>();
                     metrics.observe("encode_latency", wall);
-                    let _ = req.reply.send(EncodeResponse { y: Ok(y), wall });
+                    let _ = req.reply.send(EncodeResponse {
+                        req_id: req.req_id,
+                        y: Ok(y),
+                        wall,
+                    });
                 }
             }
             Err(e) => {
@@ -471,7 +854,7 @@ fn serve_batch(
                     c.downcast_ref::<crate::gf::kernels::LayoutMismatch>().is_some()
                         || c.downcast_ref::<crate::gf::kernels::KernelError>().is_some()
                 }) {
-                    metrics.incr(super::metrics::KERNEL_LAYOUT_REJECTS, idxs.len() as u64);
+                    metrics.incr(metrics::KERNEL_LAYOUT_REJECTS, idxs.len() as u64);
                 }
                 let msg = format!("{e:#}");
                 for &slot in idxs {
@@ -480,6 +863,7 @@ fn serve_batch(
                     metrics.incr("failures", 1);
                     metrics.observe("encode_latency", wall);
                     let _ = req.reply.send(EncodeResponse {
+                        req_id: req.req_id,
                         y: Err(anyhow::anyhow!(msg.clone())),
                         wall,
                     });
@@ -487,7 +871,7 @@ fn serve_batch(
             }
         }
     }
-    metrics.incr(super::metrics::ENCODED_ELEMS, elems);
+    metrics.incr(metrics::ENCODED_ELEMS, elems);
     metrics.observe("batch_latency", batch_t0.elapsed());
 }
 
@@ -561,6 +945,9 @@ mod tests {
         assert_eq!(svc.metrics.counter("requests"), 4);
         // Four single-request micro-batches.
         assert_eq!(svc.metrics.batch_stats(), (4, 4, 1));
+        // The dispatcher records queueing delay for every request.
+        let (n, _, _, _) = svc.metrics.latency_summary(metrics::QUEUE_WAIT).unwrap();
+        assert_eq!(n, 4);
         svc.shutdown();
     }
 
@@ -612,12 +999,9 @@ mod tests {
         // buffers — what used to be a batcher-killing panic): the
         // request must get a proper Err reply and the dedicated counter
         // must move alongside the generic failure count.
-        let metrics = Metrics::new();
+        let m = Metrics::new();
         let (tx, reply_rx) = mpsc::channel();
-        let req = EncodeRequest {
-            x: vec![vec![1u64]; 4],
-            reply: tx,
-        };
+        let req = EncodeRequest::new(0, 9, vec![vec![1u64]; 4], tx);
         let encode = |_jobs: &[&[Vec<u64>]]| -> Result<Vec<Vec<Vec<u64>>>> {
             let prime = Kernels::for_field(&crate::gf::GfPrime::default_field());
             let wrong = Kernels::for_field(&crate::gf::Gf2e::new(8).unwrap());
@@ -627,19 +1011,17 @@ mod tests {
             prime.gemm_rows(&[row], &b, 4, &mut out, false)?;
             unreachable!("mismatched layouts must error");
         };
-        serve_batch(vec![req], &metrics, 4, &encode);
+        serve_batch(vec![req], &m, 4, &encode);
         let resp = reply_rx.recv().expect("a reply, not a panic");
+        assert_eq!(resp.req_id, 9, "response echoes the request id");
         let err = resp.y.unwrap_err();
         assert!(err.to_string().contains("does not match"), "{err}");
-        assert_eq!(metrics.counter("failures"), 1);
-        assert_eq!(
-            metrics.counter(crate::coordinator::metrics::KERNEL_LAYOUT_REJECTS),
-            1
-        );
+        assert_eq!(m.counter("failures"), 1);
+        assert_eq!(m.counter(metrics::KERNEL_LAYOUT_REJECTS), 1);
     }
 
     #[test]
-    fn one_mixed_width_batch_splits_into_width_groups_without_crossing_replies() {
+    fn mixed_width_requests_never_co_batch_and_shutdown_drains_them() {
         let cfg = JobConfig {
             k: 5,
             r: 3,
@@ -648,9 +1030,10 @@ mod tests {
         };
         let f = cfg.any_field().unwrap();
         let oracle_job = EncodeJob::synthetic(cfg.clone()).unwrap();
-        // Widths deliberately interleaved: the reply-index remapping
-        // across the three width groups must route every group's rows
-        // back to the right request.
+        // Widths deliberately interleaved; the batch window is wide
+        // open (5s deadline, occupancy 6 never reached per width), so
+        // nothing fires until shutdown drains — which must serve every
+        // queued request, one single-width batch per group.
         let widths = [3usize, 7, 3, 1, 7, 3];
         let svc = EncodeService::start_replay_with(
             &cfg,
@@ -658,10 +1041,11 @@ mod tests {
             16,
             BatchPolicy {
                 max_batch: widths.len(),
-                max_delay: std::time::Duration::from_secs(5),
+                max_delay: Duration::from_secs(5),
             },
         )
         .unwrap();
+        let metrics = svc.metrics.clone();
         let mut rng = crate::util::Rng::new(47);
         let mut pending = Vec::new();
         for &w in &widths {
@@ -670,21 +1054,26 @@ mod tests {
                 .collect();
             pending.push((x.clone(), svc.submit(x).unwrap()));
         }
+        let t0 = Instant::now();
+        svc.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "drain ignores the 5s batch deadline"
+        );
         for (x, rx) in pending {
-            let y = rx.recv().unwrap().y.expect("mixed-width batch ok");
+            let y = rx.recv().unwrap().y.expect("drained request served, not dropped");
             assert_eq!(y.len(), cfg.r);
             // Random payloads per request: a crossed reply (another
             // request's rows, or another width group's) fails the
             // parity verification against this request's own x.
             assert!(verify::native(&f, &oracle_job.parity, &x, &y));
         }
-        // One batch of six requests, served as three width groups:
-        // one plan compile, then a cache hit per further group.
-        assert_eq!(svc.metrics.batch_stats(), (1, widths.len() as u64, widths.len() as u64));
-        assert_eq!(svc.metrics.plan_cache(), (2, 1));
-        assert_eq!(svc.metrics.counter("requests"), widths.len() as u64);
-        assert_eq!(svc.metrics.counter("failures"), 0);
-        svc.shutdown();
+        // Three width groups → three single-width batches (widths are
+        // never co-batched), the largest holding the three w=3 requests.
+        assert_eq!(metrics.batch_stats(), (3, widths.len() as u64, 3));
+        assert_eq!(metrics.plan_cache(), (2, 1));
+        assert_eq!(metrics.counter("requests"), widths.len() as u64);
+        assert_eq!(metrics.counter("failures"), 0);
     }
 
     #[test]
@@ -717,18 +1106,15 @@ mod tests {
             assert!(verify::native(&f, &oracle_job.parity, &x, &y));
         }
         assert_eq!(
-            svc.metrics.counter(super::super::metrics::FAULTS_INJECTED),
+            svc.metrics.counter(metrics::FAULTS_INJECTED),
             n_faults * n_req as u64
         );
         assert_eq!(
-            svc.metrics.counter(super::super::metrics::OUTPUTS_RECOVERED),
+            svc.metrics.counter(metrics::OUTPUTS_RECOVERED),
             2 * n_req as u64,
             "two sinks repaired per request"
         );
-        assert!(svc
-            .metrics
-            .latency_summary(super::super::metrics::RECOVERY_LATENCY)
-            .is_some());
+        assert!(svc.metrics.latency_summary(metrics::RECOVERY_LATENCY).is_some());
         svc.shutdown();
     }
 
@@ -743,15 +1129,15 @@ mod tests {
         let f = cfg.any_field().unwrap();
         let oracle_job = EncodeJob::synthetic(cfg.clone()).unwrap();
         let n_req = 8usize;
-        // One worker, a batch window big enough that all requests (sent
-        // back-to-back below) coalesce into exactly one micro-batch.
+        // One worker, deadline far away: the batch fires on occupancy,
+        // exactly when the n_req-th request lands.
         let svc = EncodeService::start_replay_with(
             &cfg,
             1,
             16,
             BatchPolicy {
                 max_batch: n_req,
-                max_delay: std::time::Duration::from_secs(5),
+                max_delay: Duration::from_secs(5),
             },
         )
         .unwrap();
@@ -774,9 +1160,201 @@ mod tests {
         // One compile for the whole batch; throughput counter adds up.
         assert_eq!(svc.metrics.plan_cache(), (0, 1));
         assert_eq!(
-            svc.metrics.counter(super::super::metrics::ENCODED_ELEMS),
+            svc.metrics.counter(metrics::ENCODED_ELEMS),
             (n_req * cfg.r * cfg.w) as u64
         );
         svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_and_responds_to_every_queued_request() {
+        let cfg = JobConfig {
+            k: 4,
+            r: 2,
+            w: 4,
+            ..JobConfig::default()
+        };
+        let f = cfg.any_field().unwrap();
+        // A 10s batch window: nothing would fire for seconds — except
+        // that shutdown must drain immediately. The old stop-flag race
+        // could drop the queued tail on the floor; every one of the N
+        // requests must now get a real response.
+        let n = 32usize;
+        let svc = EncodeService::start_replay_with(
+            &cfg,
+            2,
+            n,
+            BatchPolicy {
+                max_batch: 4,
+                max_delay: Duration::from_secs(10),
+            },
+        )
+        .unwrap();
+        let mut rng = crate::util::Rng::new(5);
+        let mut pending = Vec::new();
+        for _ in 0..n {
+            let x: Vec<Vec<u64>> = (0..cfg.k)
+                .map(|_| (0..3).map(|_| rng.below(f.order())).collect())
+                .collect();
+            pending.push(svc.submit(x).unwrap());
+        }
+        let metrics = svc.metrics.clone();
+        let t0 = Instant::now();
+        svc.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "drain must not wait out the 10s window"
+        );
+        let mut served = 0;
+        for rx in pending {
+            let resp = rx.recv().expect("every queued request gets a reply");
+            assert!(resp.y.is_ok(), "drained request served: {:?}", resp.y.err());
+            served += 1;
+        }
+        assert_eq!(served, n);
+        assert_eq!(metrics.counter("requests"), n as u64);
+        assert_eq!(metrics.counter(metrics::STOPPED_REJECTS), 0);
+    }
+
+    #[test]
+    fn idle_submit_to_response_has_no_poll_floor() {
+        // Regression test for the 50ms poll loops: with max_delay = 0
+        // the dispatcher wakes a worker per submit, so a round trip on
+        // an idle service is microseconds. 20 sequential round trips at
+        // the old 50ms floor would need ≥ 1s; the bound below is
+        // generous for CI noise while still pinning the event-driven
+        // wakeup.
+        let cfg = JobConfig {
+            k: 4,
+            r: 2,
+            w: 4,
+            ..JobConfig::default()
+        };
+        let f = cfg.any_field().unwrap();
+        let svc = EncodeService::start_replay_with(
+            &cfg,
+            1,
+            8,
+            BatchPolicy {
+                max_batch: 1,
+                max_delay: Duration::ZERO,
+            },
+        )
+        .unwrap();
+        // Warm the plan cache so timed round trips replay, not compile.
+        let warm: Vec<Vec<u64>> = (0..cfg.k).map(|_| vec![1, 2]).collect();
+        svc.submit(warm).unwrap().recv().unwrap().y.unwrap();
+        let mut rng = crate::util::Rng::new(13);
+        let t0 = Instant::now();
+        let n = 20;
+        for _ in 0..n {
+            let x: Vec<Vec<u64>> = (0..cfg.k)
+                .map(|_| (0..2).map(|_| rng.below(f.order())).collect())
+                .collect();
+            svc.submit(x).unwrap().recv().unwrap().y.unwrap();
+        }
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(50 * n as u64 / 2),
+            "{n} idle round trips took {elapsed:?} — poll-floor regression"
+        );
+        let t1 = Instant::now();
+        svc.shutdown();
+        assert!(t1.elapsed() < Duration::from_secs(2), "prompt shutdown");
+    }
+
+    #[test]
+    fn tenant_quota_rejects_typed_and_releases_after_serving() {
+        let mut cfg = JobConfig {
+            k: 4,
+            r: 2,
+            w: 4,
+            ..JobConfig::default()
+        };
+        cfg.serve.tenant_quota = 2;
+        // Deadline far away: submitted requests stay queued, holding
+        // their tenant's quota, so the third submit rejects
+        // deterministically.
+        let svc = EncodeService::start_replay_with(
+            &cfg,
+            1,
+            16,
+            BatchPolicy {
+                max_batch: 16,
+                max_delay: Duration::from_secs(10),
+            },
+        )
+        .unwrap();
+        let x: Vec<Vec<u64>> = (0..cfg.k).map(|_| vec![1, 2, 3]).collect();
+        let a = svc.try_submit_tenant(7, x.clone()).unwrap();
+        let b = svc.try_submit_tenant(7, x.clone()).unwrap();
+        let err = svc.try_submit_tenant(7, x.clone()).unwrap_err();
+        match err.downcast_ref::<ServeRejection>() {
+            Some(ServeRejection::Overloaded {
+                tenant: 7,
+                in_flight: 2,
+                limit: 2,
+                global: false,
+            }) => {}
+            other => panic!("expected a typed tenant-quota rejection, got {other:?}"),
+        }
+        // A different tenant is unaffected.
+        let c = svc.try_submit_tenant(8, x.clone()).unwrap();
+        assert_eq!(svc.metrics.counter(metrics::ADMISSION_REJECTS), 1);
+        let metrics = svc.metrics.clone();
+        svc.shutdown(); // drains the three admitted requests
+        for rx in [a, b, c] {
+            assert!(rx.recv().unwrap().y.is_ok());
+        }
+        assert_eq!(metrics.counter("requests"), 3);
+    }
+
+    #[test]
+    fn global_queue_bound_rejects_typed() {
+        let cfg = JobConfig {
+            k: 4,
+            r: 2,
+            w: 4,
+            ..JobConfig::default()
+        };
+        let svc = EncodeService::start_replay_with(
+            &cfg,
+            1,
+            2, // queue_depth
+            BatchPolicy {
+                max_batch: 16,
+                max_delay: Duration::from_secs(10),
+            },
+        )
+        .unwrap();
+        let x: Vec<Vec<u64>> = (0..cfg.k).map(|_| vec![1, 2]).collect();
+        let a = svc.try_submit_tenant(1, x.clone()).unwrap();
+        let b = svc.try_submit_tenant(2, x.clone()).unwrap();
+        let err = svc.try_submit_tenant(3, x.clone()).unwrap_err();
+        match err.downcast_ref::<ServeRejection>() {
+            Some(ServeRejection::Overloaded { global: true, limit: 2, .. }) => {}
+            other => panic!("expected a typed queue-full rejection, got {other:?}"),
+        }
+        let metrics = svc.metrics.clone();
+        svc.shutdown();
+        for rx in [a, b] {
+            assert!(rx.recv().unwrap().y.is_ok());
+        }
+        assert_eq!(metrics.counter(metrics::ADMISSION_REJECTS), 1);
+        assert_eq!(metrics.counter(metrics::QUEUE_DEPTH_MAX), 2);
+    }
+
+    #[test]
+    fn stopping_dispatcher_refuses_with_service_stopped() {
+        let m = Arc::new(Metrics::new());
+        let d = Dispatcher::new(BatchPolicy::default(), 8, 8, 4, 1, m.clone());
+        d.begin_stop();
+        let (tx, _rx) = mpsc::channel();
+        let err = d
+            .admit(EncodeRequest::new(0, 1, vec![vec![1]; 4], tx), true)
+            .unwrap_err();
+        assert_eq!(err, ServeRejection::ServiceStopped);
+        assert_eq!(m.counter(metrics::STOPPED_REJECTS), 1);
+        assert_eq!(err.to_string(), "service stopped");
     }
 }

@@ -43,7 +43,9 @@ pub use opt::{
     OptimizedPlan, OutputMatrix, RowKind, NTT_DENSE_OP_RATIO,
 };
 pub use payload::{
-    lincomb, pkt_add, pkt_add_scaled, pkt_scale, pkt_zero, Packet, PackedPacketBuf, PacketBuf,
+    decode_rows_frame, encode_error_frame, encode_rows_frame, frame_error_message, lincomb,
+    pkt_add, pkt_add_scaled, pkt_scale, pkt_zero, FrameHeader, FrameKind, Packet,
+    PackedPacketBuf, PacketBuf, FRAME_HEADER_LEN, FRAME_MAGIC,
 };
 pub use plan::{compile, ComputeOp, Plan, PlanRecorder, RoundPlan, SendOp, SlotId};
 pub use sim::{run, run_degraded, Collective, DegradedRun, Msg, Outputs, ProcId, Sim, SimReport};

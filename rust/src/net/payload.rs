@@ -378,6 +378,260 @@ pub fn lincomb<F: Field>(f: &F, terms: &[(u64, &[u64])], w: usize) -> Packet {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Wire frames — the sans-IO codec of the serving front end.
+//
+// One frame = a fixed 40-byte little-endian header + payload. Request and
+// Response payloads carry `rows × width` field elements packed at the
+// field's symbol lane (the same `u8`/`u16`/`u32`/`u64` narrow-lane storage
+// the kernels stream — see [`SymbolLayout`]), so a GF(2^8) request ships
+// one byte per element, not eight. Error payloads carry a UTF-8 message.
+// The codec owns bytes only; sockets live in `coordinator::server`.
+// ---------------------------------------------------------------------------
+
+/// Fixed size of every frame header on the wire.
+pub const FRAME_HEADER_LEN: usize = 40;
+
+/// `b"DCE1"` — the frame magic (Decentralized Coding Engine, wire v1).
+pub const FRAME_MAGIC: [u8; 4] = *b"DCE1";
+
+/// Hard caps a well-formed peer never hits; parsing rejects beyond them
+/// so a corrupt or hostile header can't provoke a huge allocation.
+const MAX_FRAME_DIM: u32 = 1 << 24;
+const MAX_FRAME_PAYLOAD: u32 = 1 << 30;
+
+/// What a frame carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FrameKind {
+    /// Client → server: `K` payload rows to encode.
+    Request = 2,
+    /// Server → client: the `R` parity rows.
+    Response = 3,
+    /// Server → client: a per-request failure (UTF-8 message payload);
+    /// the connection survives.
+    Error = 4,
+}
+
+impl FrameKind {
+    fn from_u8(v: u8) -> anyhow::Result<FrameKind> {
+        match v {
+            2 => Ok(FrameKind::Request),
+            3 => Ok(FrameKind::Response),
+            4 => Ok(FrameKind::Error),
+            other => anyhow::bail!("unknown frame kind {other}"),
+        }
+    }
+}
+
+fn layout_from_lane(bytes: u8) -> anyhow::Result<SymbolLayout> {
+    Ok(match bytes {
+        1 => SymbolLayout::U8,
+        2 => SymbolLayout::U16,
+        4 => SymbolLayout::U32,
+        8 => SymbolLayout::U64,
+        other => anyhow::bail!("invalid symbol lane width {other} bytes"),
+    })
+}
+
+/// The decoded fixed-size prefix of one wire frame.
+///
+/// Layout (little-endian): magic `"DCE1"` (4) · kind (1) · lane bytes
+/// (1) · reserved (2) · tenant (8) · req_id (8) · rows (4) · width (4)
+/// · payload_len (4) · pad (4) = 40 bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    /// Symbol lane of the packed payload (meaningful for
+    /// Request/Response; Error frames use `U8`).
+    pub layout: SymbolLayout,
+    /// Admission-control principal of the request.
+    pub tenant: u64,
+    /// Correlation id: responses echo their request's id, so one
+    /// connection can pipeline without ordering guarantees.
+    pub req_id: u64,
+    /// Payload rows (K for requests, R for responses, 0 for errors).
+    pub rows: u32,
+    /// Field elements per row (0 for errors).
+    pub width: u32,
+    /// Payload bytes following the header.
+    pub payload_len: u32,
+}
+
+impl FrameHeader {
+    /// Append the 40-byte wire form to `out`.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&FRAME_MAGIC);
+        out.push(self.kind as u8);
+        out.push(self.layout.bytes() as u8);
+        out.extend_from_slice(&[0u8; 2]); // reserved
+        out.extend_from_slice(&self.tenant.to_le_bytes());
+        out.extend_from_slice(&self.req_id.to_le_bytes());
+        out.extend_from_slice(&self.rows.to_le_bytes());
+        out.extend_from_slice(&self.width.to_le_bytes());
+        out.extend_from_slice(&self.payload_len.to_le_bytes());
+        out.extend_from_slice(&[0u8; 4]); // pad to 40
+    }
+
+    /// Parse and validate one header. Rejects bad magic, unknown kinds,
+    /// invalid lanes, oversized dimensions, and any Request/Response
+    /// whose `payload_len` disagrees with `rows · width · lane`.
+    pub fn parse(buf: &[u8; FRAME_HEADER_LEN]) -> anyhow::Result<FrameHeader> {
+        anyhow::ensure!(buf[0..4] == FRAME_MAGIC, "bad frame magic");
+        let kind = FrameKind::from_u8(buf[4])?;
+        let layout = layout_from_lane(buf[5])?;
+        let le8 = |o: usize| u64::from_le_bytes(buf[o..o + 8].try_into().expect("8 bytes"));
+        let le4 = |o: usize| u32::from_le_bytes(buf[o..o + 4].try_into().expect("4 bytes"));
+        let h = FrameHeader {
+            kind,
+            layout,
+            tenant: le8(8),
+            req_id: le8(16),
+            rows: le4(24),
+            width: le4(28),
+            payload_len: le4(32),
+        };
+        anyhow::ensure!(h.rows <= MAX_FRAME_DIM, "frame rows {} too large", h.rows);
+        anyhow::ensure!(h.width <= MAX_FRAME_DIM, "frame width {} too large", h.width);
+        anyhow::ensure!(
+            h.payload_len <= MAX_FRAME_PAYLOAD,
+            "frame payload {} too large",
+            h.payload_len
+        );
+        match h.kind {
+            FrameKind::Request | FrameKind::Response => {
+                let expect = (h.rows as u64)
+                    .checked_mul(h.width as u64)
+                    .and_then(|e| e.checked_mul(h.layout.bytes() as u64))
+                    .filter(|&e| e <= MAX_FRAME_PAYLOAD as u64);
+                anyhow::ensure!(
+                    expect == Some(h.payload_len as u64),
+                    "frame payload length {} does not match {}×{} rows at {} bytes/symbol",
+                    h.payload_len,
+                    h.rows,
+                    h.width,
+                    h.layout.bytes()
+                );
+            }
+            FrameKind::Error => {}
+        }
+        Ok(h)
+    }
+}
+
+/// Encode `rows` of canonical field elements as one Request/Response
+/// frame, packing each element into the layout's lane (LE). Errors if a
+/// value overflows the lane, rows are ragged, or dimensions exceed the
+/// frame caps.
+pub fn encode_rows_frame(
+    out: &mut Vec<u8>,
+    kind: FrameKind,
+    layout: SymbolLayout,
+    tenant: u64,
+    req_id: u64,
+    rows: &[Vec<u64>],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(kind != FrameKind::Error, "error frames carry a message");
+    let width = rows.first().map_or(0, |r| r.len());
+    anyhow::ensure!(
+        rows.iter().all(|r| r.len() == width),
+        "ragged frame rows"
+    );
+    anyhow::ensure!(
+        rows.len() as u64 <= MAX_FRAME_DIM as u64 && width as u64 <= MAX_FRAME_DIM as u64,
+        "frame dimensions too large"
+    );
+    let lane = layout.bytes();
+    let payload_len = rows.len() * width * lane;
+    anyhow::ensure!(
+        payload_len as u64 <= MAX_FRAME_PAYLOAD as u64,
+        "frame payload too large"
+    );
+    let h = FrameHeader {
+        kind,
+        layout,
+        tenant,
+        req_id,
+        rows: rows.len() as u32,
+        width: width as u32,
+        payload_len: payload_len as u32,
+    };
+    out.reserve(FRAME_HEADER_LEN + payload_len);
+    h.encode_into(out);
+    let limit = match layout {
+        SymbolLayout::U64 => u64::MAX,
+        _ => (1u64 << (8 * lane)) - 1,
+    };
+    for row in rows {
+        for &v in row {
+            anyhow::ensure!(
+                v <= limit,
+                "value {v} overflows the {}-byte symbol lane",
+                lane
+            );
+            out.extend_from_slice(&v.to_le_bytes()[..lane]);
+        }
+    }
+    Ok(())
+}
+
+/// Encode one Error frame carrying a UTF-8 message.
+pub fn encode_error_frame(out: &mut Vec<u8>, tenant: u64, req_id: u64, msg: &str) {
+    let bytes = msg.as_bytes();
+    let take = bytes.len().min(MAX_FRAME_PAYLOAD as usize);
+    let h = FrameHeader {
+        kind: FrameKind::Error,
+        layout: SymbolLayout::U8,
+        tenant,
+        req_id,
+        rows: 0,
+        width: 0,
+        payload_len: take as u32,
+    };
+    out.reserve(FRAME_HEADER_LEN + take);
+    h.encode_into(out);
+    out.extend_from_slice(&bytes[..take]);
+}
+
+/// Unpack a Request/Response payload back into canonical `u64` rows.
+/// `payload.len()` must equal `header.payload_len` (the caller read
+/// exactly that many bytes).
+pub fn decode_rows_frame(header: &FrameHeader, payload: &[u8]) -> anyhow::Result<Vec<Vec<u64>>> {
+    anyhow::ensure!(
+        header.kind != FrameKind::Error,
+        "error frames carry a message, not rows"
+    );
+    anyhow::ensure!(
+        payload.len() == header.payload_len as usize,
+        "frame payload is {} bytes, header promised {}",
+        payload.len(),
+        header.payload_len
+    );
+    let (rows, width, lane) = (
+        header.rows as usize,
+        header.width as usize,
+        header.layout.bytes(),
+    );
+    let mut out = Vec::with_capacity(rows);
+    let mut off = 0;
+    for _ in 0..rows {
+        let mut row = Vec::with_capacity(width);
+        for _ in 0..width {
+            let mut le = [0u8; 8];
+            le[..lane].copy_from_slice(&payload[off..off + lane]);
+            row.push(u64::from_le_bytes(le));
+            off += lane;
+        }
+        out.push(row);
+    }
+    Ok(out)
+}
+
+/// Read an Error frame's UTF-8 message (lossy on invalid bytes).
+pub fn frame_error_message(header: &FrameHeader, payload: &[u8]) -> String {
+    debug_assert_eq!(header.kind, FrameKind::Error);
+    String::from_utf8_lossy(payload).into_owned()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -518,5 +772,94 @@ mod tests {
         for i in 0..3 {
             assert_eq!(buf.pkt(i), &per[i][..]);
         }
+    }
+
+    #[test]
+    fn wire_frame_roundtrips_in_every_lane() {
+        for (layout, max) in [
+            (SymbolLayout::U8, 255u64),
+            (SymbolLayout::U16, 65_535),
+            (SymbolLayout::U32, u32::MAX as u64),
+            (SymbolLayout::U64, u64::MAX),
+        ] {
+            let rows = vec![vec![0u64, 1, max], vec![max - 1, 2, 3]];
+            let mut wire = Vec::new();
+            encode_rows_frame(&mut wire, FrameKind::Request, layout, 9, 42, &rows).unwrap();
+            assert_eq!(wire.len(), FRAME_HEADER_LEN + 2 * 3 * layout.bytes());
+            let head: [u8; FRAME_HEADER_LEN] = wire[..FRAME_HEADER_LEN].try_into().unwrap();
+            let h = FrameHeader::parse(&head).unwrap();
+            assert_eq!(h.kind, FrameKind::Request);
+            assert_eq!(h.layout, layout);
+            assert_eq!((h.tenant, h.req_id), (9, 42));
+            assert_eq!((h.rows, h.width), (2, 3));
+            assert_eq!(decode_rows_frame(&h, &wire[FRAME_HEADER_LEN..]).unwrap(), rows);
+        }
+    }
+
+    #[test]
+    fn wire_frame_rejects_corruption_and_lane_overflow() {
+        let rows = vec![vec![1u64, 2]];
+        // A value too wide for the lane is an encode-time error.
+        assert!(encode_rows_frame(
+            &mut Vec::new(),
+            FrameKind::Request,
+            SymbolLayout::U8,
+            0,
+            0,
+            &[vec![256u64]],
+        )
+        .is_err());
+        // Ragged rows are an encode-time error.
+        assert!(encode_rows_frame(
+            &mut Vec::new(),
+            FrameKind::Response,
+            SymbolLayout::U16,
+            0,
+            0,
+            &[vec![1], vec![1, 2]],
+        )
+        .is_err());
+        let mut wire = Vec::new();
+        encode_rows_frame(&mut wire, FrameKind::Request, SymbolLayout::U16, 1, 2, &rows).unwrap();
+        let head = |w: &[u8]| -> [u8; FRAME_HEADER_LEN] { w[..FRAME_HEADER_LEN].try_into().unwrap() };
+        // Bad magic.
+        let mut bad = wire.clone();
+        bad[0] = b'X';
+        assert!(FrameHeader::parse(&head(&bad)).is_err());
+        // Unknown kind.
+        let mut bad = wire.clone();
+        bad[4] = 77;
+        assert!(FrameHeader::parse(&head(&bad)).is_err());
+        // Invalid lane width.
+        let mut bad = wire.clone();
+        bad[5] = 3;
+        assert!(FrameHeader::parse(&head(&bad)).is_err());
+        // Payload length disagreeing with rows × width × lane.
+        let mut bad = wire.clone();
+        bad[32] = bad[32].wrapping_add(1);
+        assert!(FrameHeader::parse(&head(&bad)).is_err());
+        // Oversized dimensions are rejected before any allocation.
+        let mut bad = wire.clone();
+        bad[24..28].copy_from_slice(&(MAX_FRAME_DIM + 1).to_le_bytes());
+        assert!(FrameHeader::parse(&head(&bad)).is_err());
+        // Short payload at decode time.
+        let h = FrameHeader::parse(&head(&wire)).unwrap();
+        assert!(decode_rows_frame(&h, &wire[FRAME_HEADER_LEN..wire.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn wire_error_frames_carry_utf8_messages() {
+        let mut wire = Vec::new();
+        encode_error_frame(&mut wire, 3, 7, "tenant 3 quota exhausted");
+        let head: [u8; FRAME_HEADER_LEN] = wire[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = FrameHeader::parse(&head).unwrap();
+        assert_eq!(h.kind, FrameKind::Error);
+        assert_eq!((h.tenant, h.req_id), (3, 7));
+        assert_eq!((h.rows, h.width), (0, 0));
+        assert_eq!(
+            frame_error_message(&h, &wire[FRAME_HEADER_LEN..]),
+            "tenant 3 quota exhausted"
+        );
+        assert!(decode_rows_frame(&h, &wire[FRAME_HEADER_LEN..]).is_err());
     }
 }

@@ -19,7 +19,8 @@ Gating rules
 * **Deterministic** fields gate unconditionally:
   - ``slots_after`` must not increase (optimizer regressions),
   - ``recovery_exact``, ``packed_equals_scalar``,
-    ``simd_equals_scalar`` and ``backend_equals_dense`` must not flip
+    ``simd_equals_scalar``, ``backend_equals_dense``,
+    ``responses_match_direct`` and ``shutdown_drained`` must not flip
     away from ``true``.
 * **Timing** fields gate only when *both* files were produced with
   ``smoke == false`` (a real multi-iteration run on comparable
@@ -28,11 +29,12 @@ Gating rules
   - lower-is-better (fail when current > 1.30 x baseline):
     ``singles_us_per_job``, ``batch_us_per_job``, ``us_per_job``,
     ``packed_us_per_job``, ``dense_us_per_job``, ``ntt_us_per_job``,
-    ``gemm_us``;
+    ``gemm_us``, ``p50_us``, ``p99_us``, ``p999_us``;
   - higher-is-better (fail when current < baseline / 1.30):
     ``speedup``, ``recovered_per_s``, ``axpy_speedup``,
     ``lincomb_speedup``, ``gemm_speedup``,
-    ``gemm_speedup_vs_scalar_tier``.
+    ``gemm_speedup_vs_scalar_tier``, ``speedup_vs_single_queue``,
+    ``sharded_throughput_req_per_s``.
 * Seed and smoke baselines are **loudly flagged**: a ``WARN`` line (and
   a GitHub ``::warning::`` annotation when running under Actions) makes
   an ungated comparison impossible to mistake for a passing gate.
@@ -57,6 +59,9 @@ TIMING_LOWER_BETTER = {
     "dense_us_per_job",
     "ntt_us_per_job",
     "gemm_us",
+    "p50_us",
+    "p99_us",
+    "p999_us",
 }
 TIMING_HIGHER_BETTER = {
     "speedup",
@@ -65,16 +70,21 @@ TIMING_HIGHER_BETTER = {
     "lincomb_speedup",
     "gemm_speedup",
     "gemm_speedup_vs_scalar_tier",
+    "speedup_vs_single_queue",
+    "sharded_throughput_req_per_s",
 }
 EXACT_LOWER_OR_EQUAL = {"slots_after"}
 # Booleans that may never flip away from true: exact erasure recovery,
 # packed-kernel/scalar bit-identity, SIMD-tier/scalar-tier bit-identity,
-# NTT-backend/dense bit-identity.
+# NTT-backend/dense bit-identity, serving-tier/direct-path bit-identity,
+# and the zero-drop graceful-shutdown guarantee.
 EXACT_MUST_HOLD = {
     "recovery_exact",
     "packed_equals_scalar",
     "simd_equals_scalar",
     "backend_equals_dense",
+    "responses_match_direct",
+    "shutdown_drained",
 }
 # Numbers that move with the hardware, not with regressions: report
 # shifts as notices, never failures.
