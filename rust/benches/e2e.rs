@@ -5,7 +5,7 @@
 //! The PJRT sections need `make artifacts`; they are skipped otherwise.
 
 use dce::coordinator::config::CodeKind;
-use dce::coordinator::{EncodeJob, EncodeService, JobConfig};
+use dce::coordinator::{EncodeJob, EncodeService, ExecOptions, JobConfig};
 use dce::framework::AlgoRequest;
 use dce::gf::{Field, GfPrime};
 use dce::util::{bench, Rng};
@@ -35,9 +35,9 @@ fn main() {
             ..JobConfig::default()
         };
         let job = EncodeJob::synthetic(cfg).unwrap();
-        let rep = job.run().unwrap();
+        let rep = job.run(&ExecOptions::new()).unwrap();
         assert_eq!(rep.verified, Some(true));
-        let stats = bench(&format!("{algo:?}"), 5, |_| job.run().unwrap());
+        let stats = bench(&format!("{algo:?}"), 5, |_| job.run(&ExecOptions::new()).unwrap());
         println!(
             "{:<12} {:>4} {:>4} | {:>5} {:>8} | {:>12?}",
             format!("{}", rep.choice),

@@ -13,7 +13,7 @@
 //! repo root for the CI `bench-trend` job (smoke runs gate structure
 //! only; commit a non-smoke run to track the perf trajectory).
 
-use dce::coordinator::{EncodeJob, JobConfig, PlanCache};
+use dce::coordinator::{EncodeJob, ExecOptions, JobConfig, PlanCache};
 use dce::gf::Field;
 use dce::net::{FaultSpec, POST_RUN};
 use dce::util::{bench, bench_iters, bench_smoke, Rng};
@@ -51,7 +51,7 @@ fn main() {
         })
         .collect();
     let refs: Vec<&[Vec<u64>]> = jobs.iter().map(|x| x.as_slice()).collect();
-    let healthy = job.encode_batch_cached(&cache, &refs).unwrap();
+    let healthy = job.encode(&cache, &refs, &ExecOptions::cached(&cache)).unwrap().coded;
 
     println!("## erasure recovery (K={k} R={r} W={w} p={ports}, B={b}, {iters} rounds)");
     let procs: Vec<usize> = (0..n).collect();
@@ -60,9 +60,10 @@ fn main() {
         let faults = FaultSpec::random_crashes(0xFA + failed as u64, &procs, failed, POST_RUN);
         // Correctness gate first — at every failure count up to R, the
         // repaired batch is bit-identical to the healthy one.
-        let (coded, stats) = job
-            .encode_degraded_batch_cached(&cache, &refs, &faults)
+        let out = job
+            .encode(&cache, &refs, &ExecOptions::cached(&cache).faults(&faults))
             .expect("≤ R crashes are always recoverable");
+        let (coded, stats) = (out.coded, out.recovery.expect("degraded batch reports stats"));
         assert_eq!(coded, healthy, "failed={failed}: repaired ≡ healthy");
         assert_eq!(
             stats.outputs_recovered,
@@ -71,9 +72,9 @@ fn main() {
         );
 
         let st = bench(&format!("degraded batch serve, {failed:>2} failed"), iters, |_| {
-            job.encode_degraded_batch_cached(&cache, &refs, &faults)
+            job.encode(&cache, &refs, &ExecOptions::cached(&cache).faults(&faults))
                 .unwrap()
-                .0
+                .coded
                 .len()
         });
         println!("{st}");

@@ -1,0 +1,151 @@
+//! Bench: **peer-to-peer execution vs centralized replay** — what the
+//! "no central processor" model costs (or saves) on real substrates.
+//!
+//! For each shape, the same cached Plan runs through the replay engine
+//! (one thread walks the schedule) and through the peer engine over all
+//! three transports (N threads, each holding only its own shard,
+//! exchanging packets through channels / shared-memory rings / framed
+//! TCP sockets). Correctness is asserted inline, every iteration:
+//!
+//! * peer coded outputs are **bit-identical** to replay, and
+//! * the **measured** traffic — barriers crossed, messages, bandwidth —
+//!   equals `costs::plan_statics` exactly (`peer_equals_replay` /
+//!   `peer_matches_statics` in the JSON are hard trend gates).
+//!
+//! Results land in `BENCH_peer.json` at the repo root.
+
+use dce::coordinator::config::VerifyMode;
+use dce::coordinator::{EncodeJob, Engine, ExecOptions, JobConfig, PlanCache};
+use dce::framework::{costs, AlgoRequest};
+use dce::net::transport::TransportKind;
+use dce::util::{bench_iters, bench_smoke};
+use std::time::Instant;
+
+struct EngineRow {
+    label: String,
+    median_us: u64,
+}
+
+fn median_us(samples: &mut Vec<u64>) -> u64 {
+    samples.sort_unstable();
+    samples[samples.len() / 2]
+}
+
+fn main() {
+    let iters = bench_iters(12);
+    let smoke = bench_smoke();
+    let shapes = [
+        ("K16_R4_W64", 16usize, 4usize, 64usize),
+        ("K32_R8_W32", 32, 8, 32),
+        ("K64_R16_W16", 64, 16, 16),
+    ];
+
+    let mut rows: Vec<(String, Vec<EngineRow>)> = Vec::new();
+    let mut equals_replay = true;
+    let mut matches_statics = true;
+
+    for (name, k, r, w) in shapes {
+        let cfg = JobConfig {
+            k,
+            r,
+            w,
+            ports: 2,
+            algorithm: AlgoRequest::Universal,
+            verify: VerifyMode::Off,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg).unwrap();
+        let cache = PlanCache::new();
+        let compiled = job.compiled(&cache).unwrap();
+        let statics = costs::plan_statics(&compiled.plan, w as u64);
+        println!("## {name}: statics C1={} C2={}", statics.0, statics.1);
+
+        let replay_opts = ExecOptions::cached(&cache);
+        let baseline = job.run(&replay_opts).unwrap();
+        assert_eq!((baseline.sim.c1, baseline.sim.c2), statics, "{name}: replay vs statics");
+
+        let mut engine_rows = Vec::new();
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let rep = job.run(&replay_opts).unwrap();
+            samples.push(t0.elapsed().as_micros() as u64);
+            assert_eq!(rep.sim, baseline.sim);
+        }
+        let replay_us = median_us(&mut samples);
+        println!("  replay           : {replay_us:>8} us/run (median of {iters})");
+        engine_rows.push(EngineRow {
+            label: "replay".into(),
+            median_us: replay_us,
+        });
+
+        // Replay's coded bits are the oracle the peer engines must hit.
+        let oracle = job.encode(&cache, &[&job.inputs], &replay_opts).unwrap();
+
+        for kind in TransportKind::ALL {
+            let opts = ExecOptions::cached(&cache).engine(Engine::Peer(kind));
+            let mut samples = Vec::with_capacity(iters);
+            let mut last_sim = None;
+            for _ in 0..iters {
+                let t0 = Instant::now();
+                let rep = job.run(&opts).unwrap();
+                samples.push(t0.elapsed().as_micros() as u64);
+                last_sim = Some(rep.sim);
+            }
+            let us = median_us(&mut samples);
+            let sim = last_sim.expect("at least one iteration");
+            if (sim.c1, sim.c2) != statics || sim != baseline.sim {
+                matches_statics = false;
+            }
+            let peer_coded = job.encode(&cache, &[&job.inputs], &opts).unwrap();
+            if peer_coded.coded != oracle.coded {
+                equals_replay = false;
+            }
+            println!(
+                "  peer over {kind:<7}: {us:>8} us/run ({:.2}x replay, measured C1={} C2={})",
+                us as f64 / replay_us.max(1) as f64,
+                sim.c1,
+                sim.c2
+            );
+            engine_rows.push(EngineRow {
+                label: format!("peer-{kind}"),
+                median_us: us,
+            });
+        }
+        rows.push((name.to_string(), engine_rows));
+    }
+
+    assert!(equals_replay, "peer coded outputs must be bit-identical to replay");
+    assert!(matches_statics, "peer measured traffic must equal plan statics");
+
+    let shape_json: Vec<String> = rows
+        .iter()
+        .map(|(name, engines)| {
+            let engine_json: Vec<String> = engines
+                .iter()
+                .map(|e| format!("{{\"engine\":\"{}\",\"median_us\":{}}}", e.label, e.median_us))
+                .collect();
+            format!("{{\"shape\":\"{name}\",\"engines\":[{}]}}", engine_json.join(","))
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"peer\",\"smoke\":{},\"iters\":{},",
+            "\"peer_equals_replay\":{},\"peer_matches_statics\":{},",
+            "\"shapes\":[{}]}}"
+        ),
+        smoke,
+        iters,
+        equals_replay,
+        matches_statics,
+        shape_json.join(",")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("manifest dir has a parent")
+        .join("BENCH_peer.json");
+    std::fs::write(&path, format!("{json}\n"))
+        .unwrap_or_else(|e| panic!("could not write {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+    println!("\npeer bench complete");
+}

@@ -10,7 +10,7 @@
 //! can't let this target rot).
 
 use dce::coordinator::config::VerifyMode;
-use dce::coordinator::{EncodeJob, JobConfig, PlanCache};
+use dce::coordinator::{EncodeJob, ExecOptions, JobConfig, PlanCache};
 use dce::framework::AlgoRequest;
 use dce::gf::Field;
 use dce::net::{run, Packet, Sim};
@@ -70,7 +70,7 @@ fn main() {
     let t0 = Instant::now();
     let mut cached_out: Vec<Vec<Packet>> = Vec::with_capacity(requests);
     for x in &payloads {
-        cached_out.push(job.encode_cached(&cache, x).unwrap());
+        cached_out.push(job.encode(&cache, &[x], &ExecOptions::cached(&cache)).unwrap().coded.remove(0));
     }
     let cached_total = t0.elapsed();
 
@@ -102,7 +102,7 @@ fn main() {
             .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
             .collect();
         let t0 = Instant::now();
-        let y = job.encode_cached(&cache, &x).unwrap();
+        let y = job.encode(&cache, &[&x], &ExecOptions::cached(&cache)).unwrap().coded.remove(0);
         let dt = t0.elapsed();
         assert_eq!(y.len(), cfg.r);
         println!("replay W={w:<4} (same plan, no recompile): {dt:?}");

@@ -12,14 +12,14 @@
 //! columnar pass while the legacy engine splits every batch four ways.
 //!
 //! Asserted unconditionally (smoke included): every response is
-//! **bit-identical** to the direct `encode_cached` oracle, and a
+//! **bit-identical** to the direct `encode` oracle, and a
 //! graceful shutdown answers all queued requests (zero drops).
 //! Asserted non-smoke: ≥ 2× aggregate throughput over the legacy
 //! engine. Results land in `BENCH_serve.json` at the repo root for the
 //! CI `bench-trend` job.
 
 use dce::coordinator::config::CodeKind;
-use dce::coordinator::{BatchPolicy, EncodeJob, EncodeService, JobConfig, PlanCache};
+use dce::coordinator::{BatchPolicy, EncodeJob, EncodeService, ExecOptions, JobConfig, PlanCache};
 use dce::gf::Field;
 use dce::util::{bench_smoke, Rng};
 use std::collections::BTreeMap;
@@ -100,7 +100,7 @@ fn build_pools(cfg: &JobConfig, job: &EncodeJob, clients: usize, seed: u64) -> V
                     let x: Vec<Vec<u64>> = (0..cfg.k)
                         .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
                         .collect();
-                    let y = job.encode_cached(&oracle_cache, &x).unwrap();
+                    let y = job.encode(&oracle_cache, &[&x], &ExecOptions::cached(&oracle_cache)).unwrap().coded.remove(0);
                     (x, y)
                 })
                 .collect()
@@ -206,7 +206,7 @@ impl LegacyService {
                     for idxs in by_width.values() {
                         let jobs: Vec<&[Vec<u64>]> =
                             idxs.iter().map(|&i| batch[i].x.as_slice()).collect();
-                        let ys = job.encode_batch_cached(&cache, &jobs).unwrap();
+                        let ys = job.encode(&cache, &jobs, &ExecOptions::cached(&cache)).unwrap().coded;
                         for (&i, y) in idxs.iter().zip(ys) {
                             let _ = batch[i].reply.send(y);
                         }

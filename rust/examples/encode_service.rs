@@ -19,12 +19,7 @@
 //! make artifacts && cargo run --release --example encode_service  # PJRT
 //! ```
 
-use dce::codes::GrsCode;
-use dce::coordinator::{EncodeService, JobConfig};
-use dce::framework::SystematicEncode;
-use dce::gf::{Field, GfPrime};
-use dce::net::{run, Packet, Sim};
-use dce::util::Rng;
+use dce::prelude::*;
 use std::path::Path;
 use std::time::Instant;
 

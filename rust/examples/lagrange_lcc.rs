@@ -11,11 +11,7 @@
 //! cargo run --release --example lagrange_lcc
 //! ```
 
-use dce::codes::LagrangeCode;
-use dce::framework::NonSystematicEncode;
-use dce::gf::{Field, GfPrime};
-use dce::net::{run, Packet, Sim};
-use dce::util::Rng;
+use dce::prelude::*;
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {

@@ -17,25 +17,20 @@
 //!   past saturation.
 //!
 //! One response per client is cross-checked bit-for-bit against the
-//! direct `encode_cached` path, so a run doubles as an end-to-end
+//! direct single-job replay path, so a run doubles as an end-to-end
 //! correctness probe.
 //!
 //! ```bash
 //! cargo run --release --example loadgen                        # 64 closed-loop clients
 //! cargo run --release --example loadgen -- --mode open --rate 2000
 //! cargo run --release --example loadgen -- --wire              # framed TCP front end
+//! cargo run --release --example loadgen -- --peer shmem        # peer-engine collectives
 //! cargo run --release --example loadgen -- --faults 2          # degraded (repair) path
 //! cargo run --release --example loadgen -- --json loadgen.json
 //! ```
 
 use anyhow::{bail, Context, Result};
-use dce::coordinator::{
-    EncodeJob, EncodeResponse, EncodeService, JobConfig, PlanCache, ServeRejection, WireClient,
-    WireServer,
-};
-use dce::gf::Field;
-use dce::net::FaultSpec;
-use dce::util::Rng;
+use dce::prelude::*;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -49,6 +44,7 @@ struct Opts {
     open_loop: bool,
     rate: f64,
     wire: bool,
+    peer: Option<TransportKind>,
     faults: usize,
     workers: usize,
     json: Option<String>,
@@ -62,6 +58,7 @@ impl Opts {
             open_loop: false,
             rate: 2000.0,
             wire: false,
+            peer: None,
             faults: 0,
             workers: 4,
             json: None,
@@ -83,13 +80,14 @@ impl Opts {
                 }
                 "--rate" => o.rate = val("--rate")?.parse()?,
                 "--wire" => o.wire = true,
+                "--peer" => o.peer = Some(val("--peer")?.parse()?),
                 "--faults" => o.faults = val("--faults")?.parse()?,
                 "--workers" => o.workers = val("--workers")?.parse()?,
                 "--json" => o.json = Some(val("--json")?),
                 "--help" | "-h" => {
                     println!(
                         "loadgen: --clients N --requests N --mode closed|open --rate RPS \
-                         --wire --faults N --workers N --json PATH"
+                         --wire --peer channel|shmem|tcp --faults N --workers N --json PATH"
                     );
                     std::process::exit(0);
                 }
@@ -140,8 +138,11 @@ fn build_pool(cfg: &JobConfig, client: usize, requests: usize) -> Vec<Vec<Vec<u6
 /// Bit-for-bit spot check of one (payload, response) pair against the
 /// direct single-job replay path.
 fn matches_direct(oracle: &(EncodeJob, PlanCache), x: &[Vec<u64>], y: &[Vec<u64>]) -> bool {
-    match oracle.0.encode_cached(&oracle.1, x) {
-        Ok(expect) => expect == y,
+    match oracle
+        .0
+        .encode(&oracle.1, &[x], &ExecOptions::cached(&oracle.1))
+    {
+        Ok(out) => out.coded[0] == y,
         Err(_) => false,
     }
 }
@@ -242,11 +243,41 @@ fn run_open(
     })
 }
 
+/// Closed loop through the peer engine: every request executes the
+/// full peer-to-peer collective (thread ranks over a real transport) —
+/// loadgen's stress mode for `net::peer` + the transports.
+fn run_peer_loop(
+    job: &EncodeJob,
+    cache: &PlanCache,
+    kind: TransportKind,
+    pool: &[Vec<Vec<u64>>],
+    oracle: &(EncodeJob, PlanCache),
+) -> Result<ClientResult> {
+    let opts = ExecOptions::cached(cache).engine(Engine::Peer(kind));
+    let mut out = ClientResult {
+        match_direct: true,
+        ..ClientResult::default()
+    };
+    for (i, x) in pool.iter().enumerate() {
+        let t0 = Instant::now();
+        match job.encode(cache, &[x.as_slice()], &opts) {
+            Ok(res) => {
+                out.lats.push(t0.elapsed().as_micros() as u64);
+                if i == 0 && !matches_direct(oracle, x, &res.coded[0]) {
+                    out.match_direct = false;
+                }
+            }
+            Err(_) => out.failures += 1,
+        }
+    }
+    Ok(out)
+}
+
 /// Closed loop over the framed TCP front end: one connection per
 /// client, strict send→recv pipelining of depth 1.
 fn run_wire(
     addr: std::net::SocketAddr,
-    layout: dce::gf::SymbolLayout,
+    layout: SymbolLayout,
     tenant: u64,
     pool: &[Vec<Vec<u64>>],
     oracle: &(EncodeJob, PlanCache),
@@ -282,6 +313,9 @@ fn main() -> Result<()> {
     if opts.wire && opts.open_loop {
         bail!("--wire is closed-loop (depth-1 pipelining per connection); drop --mode open");
     }
+    if opts.peer.is_some() && (opts.wire || opts.open_loop || opts.faults > 0) {
+        bail!("--peer is a closed-loop healthy mode; drop --wire/--mode open/--faults");
+    }
 
     let mut cfg = JobConfig {
         k: 32,
@@ -305,7 +339,13 @@ fn main() -> Result<()> {
         .collect();
 
     let mode = if opts.open_loop { "open" } else { "closed" };
-    let front = if opts.wire { "wire" } else { "threaded" };
+    let front = if opts.wire {
+        "wire".to_string()
+    } else if let Some(kind) = opts.peer {
+        format!("peer-{kind}")
+    } else {
+        "threaded".to_string()
+    };
     println!(
         "== loadgen: {} clients x {} requests, {mode} loop, {front} front end, \
          {} workers, K={} R={} widths {:?} ==",
@@ -316,7 +356,7 @@ fn main() -> Result<()> {
     let (results, wall, metrics_json) = if opts.wire {
         let server = WireServer::start(&cfg, "127.0.0.1:0", opts.workers)?;
         let addr = server.local_addr();
-        let layout = dce::coordinator::wire_layout(&cfg)?;
+        let layout = wire_layout(&cfg)?;
         let t0 = Instant::now();
         let results: Vec<Result<ClientResult>> = std::thread::scope(|s| {
             let handles: Vec<_> = pools
@@ -333,6 +373,24 @@ fn main() -> Result<()> {
         let mj = server.metrics().to_json();
         server.shutdown();
         (results, wall, mj)
+    } else if let Some(kind) = opts.peer {
+        // No service in between: each client drives full peer
+        // collectives through a shared plan cache.
+        let job = EncodeJob::synthetic(cfg.clone())?;
+        let cache = PlanCache::new();
+        let t0 = Instant::now();
+        let results: Vec<Result<ClientResult>> = std::thread::scope(|s| {
+            let handles: Vec<_> = pools
+                .iter()
+                .map(|pool| {
+                    let (job, cache, oracle) = (&job, &cache, &oracle);
+                    s.spawn(move || run_peer_loop(job, cache, kind, pool, oracle))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let wall = t0.elapsed();
+        (results, wall, "{}".to_string())
     } else {
         let svc = if opts.faults > 0 {
             // Crash `faults` sink processes post-run (storage loss):

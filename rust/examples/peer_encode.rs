@@ -1,0 +1,242 @@
+//! Peer-to-peer encode across **real processes** over TCP.
+//!
+//! The parent re-execs itself once per participant (`--rank i`); each
+//! child holds only its own [`PlanShard`] — its inputs, its slice of
+//! the schedule — and executes the collective against a
+//! [`TcpTransport`] mesh on loopback. No process ever sees the full
+//! state: the paper's "no central processor" model, made literal with
+//! process isolation instead of threads.
+//!
+//! Rendezvous is pipe-based: every child binds `127.0.0.1:0`, prints
+//! `ADDR <proc> <addr>` on stdout, and the parent relays the complete
+//! address table to every child's stdin. Children then form the mesh
+//! (dial down, accept up), run their rounds, and report `OUT` /
+//! `STATS` lines. The parent cross-checks both against an in-process
+//! peer run of the same plan:
+//!
+//! * every rank's output packet must be **bit-identical**, and
+//! * the merged **measured** traffic (rounds, per-round maxima,
+//!   messages, bandwidth) must agree exactly — two independent
+//!   executions of one schedule can't disagree on what they shipped.
+//!
+//! ```bash
+//! cargo run --release --example peer_encode
+//! cargo run --release --example peer_encode -- --k 16 --r 4 --w 32
+//! ```
+
+use anyhow::{Context, Result};
+use dce::prelude::*;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::process::{Command, Stdio};
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(20);
+
+/// One shared config for parent and children — must be identical so
+/// every process derives the same plan and the same synthetic inputs.
+fn config(args: &[String]) -> Result<JobConfig> {
+    let mut cfg = JobConfig {
+        k: 8,
+        r: 4,
+        w: 16,
+        ..JobConfig::default()
+    };
+    let mut it = args.iter();
+    while let Some(flag) = it.next() {
+        let mut val = || -> Result<&String> {
+            it.next().with_context(|| format!("{flag} needs a value"))
+        };
+        match flag.as_str() {
+            "--k" => cfg.k = val()?.parse()?,
+            "--r" => cfg.r = val()?.parse()?,
+            "--w" => cfg.w = val()?.parse()?,
+            "--field" => cfg.field = val()?.clone(),
+            "--algorithm" => cfg.algorithm = val()?.parse()?,
+            other => anyhow::bail!("unknown flag {other:?}"),
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Everything a process needs to know about the collective, derived
+/// deterministically from the config (so parent and children agree
+/// without shipping the plan over a pipe).
+fn sharded(cfg: &JobConfig) -> Result<(EncodeJob, ShardedPlan)> {
+    let job = EncodeJob::synthetic(cfg.clone())?;
+    let cache = PlanCache::new();
+    let compiled = job.compiled(&cache)?;
+    let owners: Vec<ProcId> = (0..compiled.plan.n_inputs).collect();
+    let plan_shards = ShardedPlan::new(&compiled.plan, &job.field, &owners)?;
+    Ok((job, plan_shards))
+}
+
+/// Child: bind, rendezvous over stdin/stdout, execute one shard.
+fn child(rank_ix: usize, cfg_args: &[String]) -> Result<()> {
+    let cfg = config(cfg_args)?;
+    let (job, sharded) = sharded(&cfg)?;
+    let shard = &sharded.shards[rank_ix];
+    let proc = sharded.procs[rank_ix];
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    println!("ADDR {} {}", proc, listener.local_addr()?);
+    std::io::stdout().flush()?;
+
+    // The parent relays every participant's line back to us.
+    let stdin = std::io::stdin();
+    let mut addrs: Vec<(ProcId, SocketAddr)> = Vec::new();
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let mut parts = line.split_whitespace();
+        match (parts.next(), parts.next()) {
+            (Some(p), Some(a)) => addrs.push((p.parse()?, a.parse()?)),
+            _ => anyhow::bail!("malformed address line {line:?}"),
+        }
+        if addrs.len() == sharded.procs.len() {
+            break;
+        }
+    }
+
+    let mut transport = TcpTransport::connect(proc, listener, &addrs, TIMEOUT)?;
+    let my_inputs: Vec<Packet> = shard.owned.iter().map(|&k| job.inputs[k].clone()).collect();
+    let (out, stats) = execute_shard(shard, &job.field, cfg.w, &my_inputs, &mut transport)?;
+
+    if let Some(pkt) = out {
+        let words: Vec<String> = pkt.iter().map(|v| v.to_string()).collect();
+        println!("OUT {} {}", proc, words.join(","));
+    }
+    let permax: Vec<String> = stats.per_round_sent_max.iter().map(|v| v.to_string()).collect();
+    println!(
+        "STATS {} rounds={} messages={} elems={} permax={}",
+        proc,
+        stats.rounds,
+        stats.messages,
+        stats.elems,
+        permax.join(",")
+    );
+    Ok(())
+}
+
+fn parent(cfg_args: &[String]) -> Result<()> {
+    let cfg = config(cfg_args)?;
+    let (job, sharded) = sharded(&cfg)?;
+    let n = sharded.procs.len();
+    println!(
+        "== peer_encode: {} processes over TCP, K={} R={} W={} ==",
+        n, cfg.k, cfg.r, cfg.w
+    );
+
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::with_capacity(n);
+    for rank_ix in 0..n {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("--rank").arg(rank_ix.to_string()).args(cfg_args);
+        cmd.stdin(Stdio::piped()).stdout(Stdio::piped());
+        let mut ch = cmd.spawn().with_context(|| format!("spawning rank {rank_ix}"))?;
+        let stdout = BufReader::new(ch.stdout.take().expect("piped stdout"));
+        children.push((ch, stdout));
+    }
+
+    // Collect every child's ADDR line, then relay the full table.
+    let mut addr_lines = Vec::with_capacity(n);
+    for (_, stdout) in children.iter_mut() {
+        let mut line = String::new();
+        stdout.read_line(&mut line)?;
+        let rest = line
+            .trim()
+            .strip_prefix("ADDR ")
+            .with_context(|| format!("expected ADDR line, got {line:?}"))?;
+        addr_lines.push(rest.to_string());
+    }
+    for (ch, _) in children.iter_mut() {
+        let stdin = ch.stdin.as_mut().expect("piped stdin");
+        for l in &addr_lines {
+            writeln!(stdin, "{l}")?;
+        }
+        stdin.flush()?;
+    }
+
+    // Drain OUT/STATS lines and wait for clean exits.
+    let mut outputs: std::collections::BTreeMap<ProcId, Packet> = Default::default();
+    let mut stats: Vec<PeerStats> = Vec::new();
+    for (ch, stdout) in children.iter_mut() {
+        for line in stdout.lines() {
+            let line = line?;
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("OUT") => {
+                    let proc: ProcId = parts.next().context("OUT proc")?.parse()?;
+                    let pkt: Packet = parts
+                        .next()
+                        .context("OUT payload")?
+                        .split(',')
+                        .map(|v| v.parse::<u64>().map_err(Into::into))
+                        .collect::<Result<_>>()?;
+                    outputs.insert(proc, pkt);
+                }
+                Some("STATS") => {
+                    let _proc: ProcId = parts.next().context("STATS proc")?.parse()?;
+                    let mut st = PeerStats::default();
+                    for kv in parts {
+                        let (k, v) = kv.split_once('=').context("STATS key=value")?;
+                        match k {
+                            "rounds" => st.rounds = v.parse()?,
+                            "messages" => st.messages = v.parse()?,
+                            "elems" => st.elems = v.parse()?,
+                            "permax" if !v.is_empty() => {
+                                st.per_round_sent_max = v
+                                    .split(',')
+                                    .map(|x| x.parse::<u64>().map_err(Into::into))
+                                    .collect::<Result<_>>()?
+                            }
+                            _ => {}
+                        }
+                    }
+                    stats.push(st);
+                }
+                _ => println!("  [child] {line}"),
+            }
+        }
+        let status = ch.wait()?;
+        anyhow::ensure!(status.success(), "a child rank failed: {status}");
+    }
+
+    // Oracle: the same sharded plan, in-process over channel transport.
+    let oracle = spawn_local(
+        &sharded,
+        &job.field,
+        &job.inputs,
+        TransportKind::Channel,
+        TIMEOUT,
+    )?;
+    let measured = merge_stats(sharded.n_rounds, &stats);
+    println!(
+        "measured: C1={} C2={} messages={} bandwidth={}",
+        measured.c1, measured.c2, measured.messages, measured.bandwidth
+    );
+    anyhow::ensure!(
+        outputs == oracle.outputs,
+        "multi-process outputs diverge from in-process peer run"
+    );
+    anyhow::ensure!(
+        measured == oracle.measured,
+        "multi-process measured traffic diverges: {measured:?} vs {:?}",
+        oracle.measured
+    );
+    println!("processes agree with the in-process peer oracle: OK");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) == Some("--rank") {
+        let rank_ix: usize = args
+            .get(1)
+            .context("--rank needs a value")?
+            .parse()?;
+        child(rank_ix, &args[2..])
+    } else {
+        parent(&args)
+    }
+}

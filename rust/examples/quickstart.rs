@@ -5,7 +5,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use dce::coordinator::{EncodeJob, JobConfig};
+use dce::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     // A [N=20, K=16] systematic RS code over GF(786433), encoded by 16
@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("== planning & running the decentralized encode ==");
     let job = EncodeJob::synthetic(cfg)?;
-    let report = job.run()?;
+    let report = job.run(&ExecOptions::new())?;
     println!("{report}\n");
 
     // What the numbers mean, in the paper's terms:
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     // Compare against the universal algorithm on the same code.
     let mut cfg_u = job.config.clone();
     cfg_u.algorithm = "universal".parse()?;
-    let report_u = EncodeJob::synthetic(cfg_u)?.run()?;
+    let report_u = EncodeJob::synthetic(cfg_u)?.run(&ExecOptions::new())?;
     println!(
         "\nuniversal on the same code: C1={} C2={} (specific: C1={} C2={})",
         report_u.sim.c1, report_u.sim.c2, report.sim.c1, report.sim.c2

@@ -13,11 +13,7 @@
 //! cargo run --release --example sensor_network
 //! ```
 
-use dce::codes::GrsCode;
-use dce::framework::{A2aAlgo, SystematicEncode};
-use dce::gf::{Field, GfPrime};
-use dce::net::{run, Packet, Sim};
-use dce::util::Rng;
+use dce::prelude::*;
 use std::sync::Arc;
 
 fn main() -> anyhow::Result<()> {

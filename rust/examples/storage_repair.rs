@@ -15,11 +15,7 @@
 //! cargo run --release --example storage_repair
 //! ```
 
-use dce::codes::GrsCode;
-use dce::collectives::TreeReduce;
-use dce::gf::{Field, GfPrime, Mat};
-use dce::net::{pkt_scale, run, Packet, ProcId, Sim};
-use dce::util::Rng;
+use dce::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let f = GfPrime::default_field();
@@ -96,7 +92,6 @@ fn code_col(g: &Mat, j: usize) -> Vec<u64> {
     (0..g.rows).map(|i| g[(i, j)]).collect()
 }
 
-fn reduce_output<F: dce::gf::Field>(red: &TreeReduce<F>, root: ProcId) -> Packet {
-    use dce::net::Collective;
+fn reduce_output<F: Field>(red: &TreeReduce<F>, root: ProcId) -> Packet {
     red.outputs()[&root].clone()
 }

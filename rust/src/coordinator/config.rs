@@ -160,6 +160,11 @@ pub struct JobConfig {
     /// `DCE_FORCE_ISA` when set, else the widest tier the host
     /// supports); an unsupported explicit request degrades to scalar.
     pub isa: Option<crate::gf::IsaRequest>,
+    /// Default execution engine
+    /// (`engine = "live" | "replay" | "peer-channel" | "peer-shmem" |
+    /// "peer-tcp"`) — what [`ExecOptions`](super::ExecOptions) callers
+    /// start from when the config drives execution (CLI, loadgen).
+    pub engine: super::job::Engine,
     /// Serving-tier knobs (batching, admission, plan-cache sizing).
     pub serve: ServeOptions,
 }
@@ -180,6 +185,7 @@ impl Default for JobConfig {
             seed: 42,
             artifacts_dir: "artifacts".into(),
             isa: None,
+            engine: super::job::Engine::default(),
             serve: ServeOptions::default(),
         }
     }
@@ -216,6 +222,7 @@ impl JobConfig {
                 "seed" => cfg.seed = v.parse()?,
                 "artifacts_dir" => cfg.artifacts_dir = v.into(),
                 "isa" => cfg.isa = Some(v.parse()?),
+                "engine" => cfg.engine = v.parse()?,
                 "max_batch" => cfg.serve.max_batch = v.parse()?,
                 "max_delay_us" => cfg.serve.max_delay_us = v.parse()?,
                 "tenant_quota" => cfg.serve.tenant_quota = v.parse()?,
@@ -318,6 +325,24 @@ mod tests {
     #[test]
     fn defaults_are_valid() {
         JobConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn engine_key_parses_every_variant() {
+        use super::super::job::Engine;
+        use crate::net::transport::TransportKind;
+        assert_eq!(JobConfig::parse("k = 4").unwrap().engine, Engine::Live);
+        for (v, want) in [
+            ("live", Engine::Live),
+            ("replay", Engine::Replay),
+            ("peer-channel", Engine::Peer(TransportKind::Channel)),
+            ("peer-shmem", Engine::Peer(TransportKind::SharedMem)),
+            ("peer-tcp", Engine::Peer(TransportKind::Tcp)),
+        ] {
+            let cfg = JobConfig::parse(&format!("engine = \"{v}\"")).unwrap();
+            assert_eq!(cfg.engine, want);
+        }
+        assert!(JobConfig::parse("engine = \"smoke-signal\"").is_err());
     }
 
     #[test]

@@ -1,36 +1,153 @@
-//! One decentralized-encoding job: plan → simulate → verify → report.
+//! One decentralized-encoding job: plan → execute → verify → report.
 //!
-//! Two execution paths share the verification and reporting logic:
-//!
-//! * [`EncodeJob::run`] — live: build the collective, step it on the
-//!   round engine, measure `C1`/`C2`.
-//! * [`EncodeJob::run_cached`] — replay: fetch (or compile) the shape's
-//!   [`CompiledPlan`](crate::framework::CompiledPlan) from a
-//!   [`PlanCache`] and replay it — bit-identical outputs and the exact
-//!   same report, with zero control-flow rederivation per request.
+//! Execution is configured, not multiplied: [`EncodeJob::run`] takes an
+//! [`ExecOptions`] naming the engine ([`Engine::Live`] round stepping,
+//! [`Engine::Replay`] through the plan cache, or [`Engine::Peer`] over
+//! a real transport mesh), an optional [`FaultSpec`], an optional
+//! [`PlanCache`] and an optional ISA override — every combination runs
+//! through the same verification and reporting tail and returns the
+//! same [`JobReport`]. The batched serving path is
+//! [`EncodeJob::encode`] with the same options. The pre-0.4 entry-point
+//! family (`run_cached`, `encode_cached`, `run_degraded`, …) survives
+//! one release as `#[deprecated]` shims over these two.
 
 use super::config::{CodeKind, JobConfig, VerifyMode};
 use super::plan_cache::{PlanCache, PlanKey};
 use super::verify;
 use crate::codes::structured::independent_positions;
 use crate::codes::{GrsCode, Recovery, StructuredPoints};
+use crate::error::{Error, RecoveryShortfall};
 use crate::framework::{systematic::Layout, CompiledPlan, PlanChoice, PlannedJob};
-use crate::gf::{AnyField, Field, Mat};
+use crate::gf::{AnyField, Field, IsaRequest, IsaTier, Mat};
+use crate::net::peer::{spawn_local, ShardedPlan};
+use crate::net::transport::TransportKind;
 use crate::net::{run, DegradedReport, FaultSpec, Outputs, Packet, ProcId, Sim, SimReport};
 use crate::util::{ipow, Rng};
 use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
+
+/// Which execution engine carries the job.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Engine {
+    /// Build the collective and step it live on the round simulator.
+    #[default]
+    Live,
+    /// Replay the shape's compiled plan (cache-served hot path) —
+    /// bit-identical outputs and the exact same report as `Live`.
+    Replay,
+    /// Peer-to-peer execution: shard the plan, run every rank against a
+    /// real [`Transport`](crate::net::transport::Transport) mesh of the
+    /// given kind, and report *measured* traffic.
+    Peer(TransportKind),
+}
+
+impl std::str::FromStr for Engine {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Engine> {
+        Ok(match s {
+            "live" => Engine::Live,
+            "replay" | "cached" => Engine::Replay,
+            "peer" | "peer-channel" => Engine::Peer(TransportKind::Channel),
+            "peer-shmem" => Engine::Peer(TransportKind::SharedMem),
+            "peer-tcp" => Engine::Peer(TransportKind::Tcp),
+            other => anyhow::bail!(
+                "unknown engine {other:?} (live|replay|peer-channel|peer-shmem|peer-tcp)"
+            ),
+        })
+    }
+}
+
+impl std::fmt::Display for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Engine::Live => f.write_str("live"),
+            Engine::Replay => f.write_str("replay"),
+            Engine::Peer(k) => write!(f, "peer-{k}"),
+        }
+    }
+}
+
+/// How to execute a job: engine, optional plan cache, optional fault
+/// injection, optional ISA override. `Default` is a live, healthy,
+/// uncached run at the config's ISA.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecOptions<'a> {
+    /// Compiled-plan cache for the `Replay`/`Peer` engines (and for
+    /// [`EncodeJob::run`]'s compile step). `None` compiles privately.
+    pub cache: Option<&'a PlanCache>,
+    /// Fault injection: a degraded run with survivor repair. Not
+    /// supported on the `Peer` engine.
+    pub faults: Option<&'a FaultSpec>,
+    /// Per-call ISA override; `None` keeps the config's request.
+    pub isa: Option<IsaRequest>,
+    /// The execution engine.
+    pub engine: Engine,
+}
+
+impl<'a> ExecOptions<'a> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Replay through `cache` — the serving-path default.
+    pub fn cached(cache: &'a PlanCache) -> Self {
+        ExecOptions {
+            cache: Some(cache),
+            engine: Engine::Replay,
+            ..Default::default()
+        }
+    }
+
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    pub fn faults(mut self, faults: &'a FaultSpec) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
+    pub fn isa(mut self, isa: IsaRequest) -> Self {
+        self.isa = Some(isa);
+        self
+    }
+}
+
+/// What a degraded run did beyond encoding: the failure pattern's
+/// analysis and the repaired coded rows.
+#[derive(Clone, Debug)]
+pub struct DegradedInfo {
+    /// Fault directives in the spec (crashes + links + erasures).
+    pub faults_injected: u64,
+    pub crashed: Vec<ProcId>,
+    /// Sink indices whose outputs survived untainted.
+    pub surviving_sinks: Vec<usize>,
+    /// Sink indices reconstructed from survivors.
+    pub lost_sinks: Vec<usize>,
+    pub outputs_recovered: usize,
+    /// Wall time of the recovery pass (operator build + lincombs).
+    pub recovery_wall: Duration,
+    /// All `R` coded rows in sink order — surviving sinks verbatim,
+    /// lost sinks reconstructed; bit-identical to a healthy run's.
+    pub coded: Vec<Packet>,
+}
 
 /// The outcome of one job, with every paper metric.
 #[derive(Clone, Debug)]
 pub struct JobReport {
     pub choice: PlanChoice,
     pub layout: Layout,
+    /// For `Peer` runs this is **measured** traffic (barriers crossed,
+    /// messages shipped); for `Live`/`Replay` it is the simulator's
+    /// exact accounting — conformance tests pin them equal.
     pub sim: SimReport,
     /// `C = α·C1 + β⌈log2 q⌉·C2`.
     pub cost: f64,
     pub verified: Option<bool>,
     pub wall: std::time::Duration,
+    /// Present iff the run was fault-injected.
+    pub degraded: Option<DegradedInfo>,
 }
 
 impl JobReport {
@@ -70,6 +187,15 @@ impl std::fmt::Display for JobReport {
             self.sim.c1, self.sim.c2, self.sim.messages, self.sim.bandwidth
         )?;
         writeln!(f, "C  = {:.3} (model cost)", self.cost)?;
+        if let Some(d) = &self.degraded {
+            writeln!(
+                f,
+                "degraded: {} crashed, {} sinks repaired in {:?}",
+                d.crashed.len(),
+                d.lost_sinks.len(),
+                d.recovery_wall
+            )?;
+        }
         match self.verified {
             Some(true) => writeln!(f, "verification: OK")?,
             Some(false) => writeln!(f, "verification: FAILED")?,
@@ -77,6 +203,16 @@ impl std::fmt::Display for JobReport {
         }
         write!(f, "wall: {:?}", self.wall)
     }
+}
+
+/// What [`EncodeJob::encode`] returns: the `R` coded rows per job, plus
+/// recovery accounting when the batch ran degraded.
+#[derive(Clone, Debug)]
+pub struct EncodeOutcome {
+    /// Per job in batch order, the `R` coded rows in sink order.
+    pub coded: Vec<Vec<Packet>>,
+    /// Present iff the batch ran under fault injection.
+    pub recovery: Option<RecoveryStats>,
 }
 
 /// A planned job with its data, ready to execute.
@@ -90,7 +226,14 @@ pub struct EncodeJob {
     /// derives the key once per job, not per request. Mutating `config`
     /// or `parity` after the first cached call is not supported.
     plan_key_memo: OnceLock<PlanKey>,
+    /// Memoised per-processor shards of the compiled plan (the `Peer`
+    /// engine's analogue of the plan cache — shard once, run many).
+    shard_memo: OnceLock<Arc<ShardedPlan>>,
 }
+
+/// Recv/barrier bound for in-process peer meshes: generous enough for
+/// CI loadspikes, finite so a lost rank is an error, not a hang.
+pub const PEER_TIMEOUT: Duration = Duration::from_secs(30);
 
 impl EncodeJob {
     /// Build a job with synthetic (seeded) payload data.
@@ -140,6 +283,7 @@ impl EncodeJob {
             parity,
             inputs,
             plan_key_memo: OnceLock::new(),
+            shard_memo: OnceLock::new(),
         })
     }
 
@@ -171,8 +315,90 @@ impl EncodeJob {
         })
     }
 
-    /// Plan, simulate (live stepping), verify.
-    pub fn run(&self) -> anyhow::Result<JobReport> {
+    /// **The** execution entry point: run this job per `opts` — engine
+    /// × optional faults × optional cache × optional ISA override — and
+    /// report. Every path produces bit-identical coded packets and (for
+    /// `Live`/`Replay`) the identical `C1`/`C2` report; the `Peer`
+    /// engine reports what its ranks *measured*, which conformance
+    /// tests pin equal to the plan statics.
+    pub fn run(&self, opts: &ExecOptions) -> Result<JobReport, Error> {
+        self.run_impl(opts).map_err(Error::classify)
+    }
+
+    fn run_impl(&self, opts: &ExecOptions) -> anyhow::Result<JobReport> {
+        match (opts.engine, opts.faults) {
+            (Engine::Live, None) => self.run_live(),
+            (Engine::Live, Some(faults)) => self.run_live_degraded(faults),
+            (Engine::Replay, None) => {
+                self.with_cache(opts, |job, cache| job.run_replay(cache, opts.isa))
+            }
+            (Engine::Replay, Some(faults)) => self.with_cache(opts, |job, cache| {
+                job.run_replay_degraded(cache, faults, opts.isa)
+            }),
+            (Engine::Peer(kind), None) => {
+                self.with_cache(opts, |job, cache| job.run_peer(cache, kind, opts.isa))
+            }
+            (Engine::Peer(_), Some(_)) => anyhow::bail!(
+                "fault injection is not supported on the peer engine (use live or replay)"
+            ),
+        }
+    }
+
+    /// Batched execution entry point: encode `B` same-width payload
+    /// sets per `opts`. `Live` is served through the replay engine —
+    /// the data path is bit-identical by construction, and stepping the
+    /// round simulator per request would only re-measure what the plan
+    /// statics already pin.
+    pub fn encode(
+        &self,
+        cache: &PlanCache,
+        batch: &[&[Packet]],
+        opts: &ExecOptions,
+    ) -> Result<EncodeOutcome, Error> {
+        self.encode_impl(cache, batch, opts).map_err(Error::classify)
+    }
+
+    fn encode_impl(
+        &self,
+        cache: &PlanCache,
+        batch: &[&[Packet]],
+        opts: &ExecOptions,
+    ) -> anyhow::Result<EncodeOutcome> {
+        match (opts.engine, opts.faults) {
+            (Engine::Peer(_), Some(_)) => anyhow::bail!(
+                "fault injection is not supported on the peer engine (use live or replay)"
+            ),
+            (_, Some(faults)) => {
+                let (coded, stats) =
+                    self.encode_degraded_impl(cache, batch, faults, opts.isa)?;
+                Ok(EncodeOutcome {
+                    coded,
+                    recovery: Some(stats),
+                })
+            }
+            (Engine::Peer(kind), None) => self.encode_peer(cache, batch, kind, opts.isa),
+            (Engine::Live | Engine::Replay, None) => Ok(EncodeOutcome {
+                coded: self.encode_batch_impl(cache, batch, opts.isa)?,
+                recovery: None,
+            }),
+        }
+    }
+
+    /// Run `f` with the caller's cache, or a private one-shot cache
+    /// when `opts` brought none (single compile, then dropped).
+    fn with_cache<T>(
+        &self,
+        opts: &ExecOptions,
+        f: impl FnOnce(&Self, &PlanCache) -> anyhow::Result<T>,
+    ) -> anyhow::Result<T> {
+        match opts.cache {
+            Some(cache) => f(self, cache),
+            None => f(self, &PlanCache::new()),
+        }
+    }
+
+    /// Live engine, healthy: build the collective, step it, measure.
+    fn run_live(&self) -> anyhow::Result<JobReport> {
         let t0 = Instant::now();
         let mut pl: PlannedJob = crate::framework::plan_with_model(
             &self.field,
@@ -198,7 +424,123 @@ impl EncodeJob {
             cost,
             verified,
             wall: t0.elapsed(),
+            degraded: None,
         })
+    }
+
+    /// Live engine under fault injection.
+    fn run_live_degraded(&self, faults: &FaultSpec) -> anyhow::Result<JobReport> {
+        let t0 = Instant::now();
+        let mut pl: PlannedJob = crate::framework::plan_with_model(
+            &self.field,
+            self.code.as_ref(),
+            Some(self.parity.clone()),
+            self.inputs.clone(),
+            self.config.ports,
+            self.config.algorithm,
+            Some(self.config.cost_model()?),
+        )?;
+        let mut sim = Sim::new(self.config.ports);
+        let deg = crate::net::run_degraded(&mut sim, pl.job.as_mut(), faults)?;
+        self.finish_degraded(pl.choice, pl.layout, deg.fault, &deg.outputs, faults, t0)
+    }
+
+    /// Replay engine, healthy: compile-or-fetch, replay, verify.
+    fn run_replay(&self, cache: &PlanCache, isa: Option<IsaRequest>) -> anyhow::Result<JobReport> {
+        let t0 = Instant::now();
+        let compiled = self.compiled_with(cache, isa)?;
+        let mut replay = crate::net::exec::replay_opt(&compiled.opt, &self.field, &self.inputs)?;
+        let coded = take_sinks(&compiled.layout, &mut replay.outputs)?;
+        let verified = self.verify_coded(&coded)?;
+        let cost = replay.report.cost(&self.config.cost_model()?);
+        Ok(JobReport {
+            choice: compiled.choice,
+            layout: compiled.layout,
+            sim: replay.report,
+            cost,
+            verified,
+            wall: t0.elapsed(),
+            degraded: None,
+        })
+    }
+
+    /// Replay engine under fault injection: taint-analyze the plan,
+    /// evaluate surviving rows, repair the rest.
+    fn run_replay_degraded(
+        &self,
+        cache: &PlanCache,
+        faults: &FaultSpec,
+        isa: Option<IsaRequest>,
+    ) -> anyhow::Result<JobReport> {
+        let t0 = Instant::now();
+        let compiled = self.compiled_with(cache, isa)?;
+        let jobs = [self.inputs.as_slice()];
+        let (fault, mut outs) = compiled.replay_degraded_batch(&jobs, faults)?;
+        let outputs = outs.pop().expect("one job in, one out");
+        self.finish_degraded(compiled.choice, compiled.layout, fault, &outputs, faults, t0)
+    }
+
+    /// Peer engine: shard the compiled plan, run every rank as a thread
+    /// over a fresh transport mesh, report **measured** traffic.
+    fn run_peer(
+        &self,
+        cache: &PlanCache,
+        kind: TransportKind,
+        isa: Option<IsaRequest>,
+    ) -> anyhow::Result<JobReport> {
+        let t0 = Instant::now();
+        let compiled = self.compiled_with(cache, isa)?;
+        let sharded = self.sharded(&compiled)?;
+        let run = spawn_local(&sharded, &self.field, &self.inputs, kind, PEER_TIMEOUT)?;
+        let mut outputs = run.outputs;
+        let coded = take_sinks(&compiled.layout, &mut outputs)?;
+        let verified = self.verify_coded(&coded)?;
+        let cost = run.measured.cost(&self.config.cost_model()?);
+        Ok(JobReport {
+            choice: compiled.choice,
+            layout: compiled.layout,
+            sim: run.measured,
+            cost,
+            verified,
+            wall: t0.elapsed(),
+            degraded: None,
+        })
+    }
+
+    /// Peer engine, batched: each job runs the full peer collective.
+    fn encode_peer(
+        &self,
+        cache: &PlanCache,
+        batch: &[&[Packet]],
+        kind: TransportKind,
+        isa: Option<IsaRequest>,
+    ) -> anyhow::Result<EncodeOutcome> {
+        let compiled = self.compiled_with(cache, isa)?;
+        let sharded = self.sharded(&compiled)?;
+        let coded = batch
+            .iter()
+            .map(|x| {
+                self.check_canonical(x)?;
+                let run = spawn_local(&sharded, &self.field, x, kind, PEER_TIMEOUT)?;
+                let mut outputs = run.outputs;
+                take_sinks(&compiled.layout, &mut outputs)
+            })
+            .collect::<anyhow::Result<_>>()?;
+        Ok(EncodeOutcome {
+            coded,
+            recovery: None,
+        })
+    }
+
+    /// The memoised per-processor shards of this job's compiled plan.
+    fn sharded(&self, compiled: &CompiledPlan) -> anyhow::Result<Arc<ShardedPlan>> {
+        if let Some(s) = self.shard_memo.get() {
+            return Ok(s.clone());
+        }
+        let owners: Vec<ProcId> = (0..compiled.plan.n_inputs).collect();
+        let sharded = Arc::new(ShardedPlan::new(&compiled.plan, &self.field, &owners)?);
+        let _ = self.shard_memo.set(sharded.clone());
+        Ok(sharded)
     }
 
     /// The cache key of this job's compiled plan: the shape, a
@@ -257,6 +599,24 @@ impl EncodeJob {
         })
     }
 
+    /// [`compiled`](EncodeJob::compiled) plus a per-call ISA override:
+    /// a request differing from the config's re-targets a clone of the
+    /// cached plan instead of poisoning the cache (whose key embeds the
+    /// config's ISA).
+    fn compiled_with(
+        &self,
+        cache: &PlanCache,
+        isa: Option<IsaRequest>,
+    ) -> anyhow::Result<Arc<CompiledPlan>> {
+        let compiled = self.compiled(cache)?;
+        match isa {
+            Some(req) if self.config.isa != Some(req) => {
+                Ok(Arc::new((*compiled).clone().with_isa(IsaTier::resolve(req))))
+            }
+            _ => Ok(compiled),
+        }
+    }
+
     /// Warm `cache` with this shape's compiled plan. Returns `true`
     /// when the plan was compiled fresh, `false` when the shape was
     /// already cached — the [`PlanCache::warmup`] building block.
@@ -269,49 +629,46 @@ impl EncodeJob {
         Ok(true)
     }
 
-    /// Replay-encode arbitrary payload rows (any width) through the
-    /// shape's cached *optimized* plan — the serving-path hot loop: no
-    /// planning, no round stepping, no routing; just the flattened
-    /// output rows (`net::exec::replay_opt`), bit-identical to raw-plan
-    /// replay and to live stepping.
-    pub fn encode_cached(&self, cache: &PlanCache, x: &[Packet]) -> anyhow::Result<Vec<Packet>> {
+    /// Non-canonical elements must be a proper Err on every encode path
+    /// (the batched engines validate before packing; the scalar
+    /// GF(2^w) kernels would panic on a table lookup instead — killing
+    /// a service worker).
+    fn check_canonical(&self, x: &[Packet]) -> anyhow::Result<()> {
         anyhow::ensure!(x.len() == self.config.k, "need K = {} rows", self.config.k);
-        // Non-canonical elements must be a proper Err on the single-job
-        // path too (the batched engines validate before packing; the
-        // scalar GF(2^w) kernels would panic on a table lookup instead
-        // — killing a service worker).
         let q = self.field.order();
         for row in x {
             if let Some(&v) = row.iter().find(|&&v| v >= q) {
                 anyhow::bail!("payload element {v} is not canonical (field order {q})");
             }
         }
-        let compiled = self.compiled(cache)?;
+        Ok(())
+    }
+
+    /// Single-job replay through the cached *optimized* plan.
+    fn encode_one_impl(
+        &self,
+        cache: &PlanCache,
+        x: &[Packet],
+        isa: Option<IsaRequest>,
+    ) -> anyhow::Result<Vec<Packet>> {
+        self.check_canonical(x)?;
+        let compiled = self.compiled_with(cache, isa)?;
         let mut replay = crate::net::exec::replay_opt(&compiled.opt, &self.field, x)?;
         take_sinks(&compiled.layout, &mut replay.outputs)
     }
 
-    /// Batch-encode `B` same-width payload sets in **one columnar pass**
-    /// over the shape's cached optimized plan — the micro-batching
-    /// service path. The pass runs over packed narrow-lane storage: the
-    /// symbol layout was selected from the field's `⌈log2 q⌉` when the
-    /// plan compiled (`CompiledPlan::kernels`), so per job shape the
-    /// batch streams `u8`/`u16`/`u32` lanes with zero per-element field
-    /// dispatch (`net::exec::replay_batch_kernels`). Returns the `R`
-    /// coded rows per job, in job order, bit-identical to
-    /// [`encode_cached`](EncodeJob::encode_cached) per job.
-    pub fn encode_batch_cached(
+    /// Batched columnar replay (the micro-batching service path); a
+    /// batch of one skips the arena pack/unpack entirely.
+    fn encode_batch_impl(
         &self,
         cache: &PlanCache,
         jobs: &[&[Packet]],
+        isa: Option<IsaRequest>,
     ) -> anyhow::Result<Vec<Vec<Packet>>> {
-        // A batch of one skips the arena pack/unpack entirely — the
-        // common low-load case when the micro-batch window expires with
-        // a single request.
         if let [x] = jobs {
-            return Ok(vec![self.encode_cached(cache, x)?]);
+            return Ok(vec![self.encode_one_impl(cache, x, isa)?]);
         }
-        let compiled = self.compiled(cache)?;
+        let compiled = self.compiled_with(cache, isa)?;
         let replays = compiled.replay_batch(jobs)?;
         replays
             .into_iter()
@@ -319,81 +676,16 @@ impl EncodeJob {
             .collect()
     }
 
-    /// Plan-cache execution path: compile-or-fetch, replay, verify.
-    /// Produces bit-identical coded packets and the exact `C1`/`C2`
-    /// report of [`run`](EncodeJob::run), without re-deriving any
-    /// control flow when the cache hits.
-    pub fn run_cached(&self, cache: &PlanCache) -> anyhow::Result<JobReport> {
-        let t0 = Instant::now();
-        let compiled = self.compiled(cache)?;
-        let mut replay = crate::net::exec::replay_opt(&compiled.opt, &self.field, &self.inputs)?;
-        let coded = take_sinks(&compiled.layout, &mut replay.outputs)?;
-        let verified = self.verify_coded(&coded)?;
-        let cost = replay.report.cost(&self.config.cost_model()?);
-        Ok(JobReport {
-            choice: compiled.choice,
-            layout: compiled.layout,
-            sim: replay.report,
-            cost,
-            verified,
-            wall: t0.elapsed(),
-        })
-    }
-
-    /// Live fault-injected execution: step the planned collective under
-    /// `faults` (`net::run_degraded`), then **repair** — reconstruct
-    /// every lost sink output from any `K` surviving coordinates
-    /// (`codes::recovery`) instead of re-encoding. The returned `coded`
-    /// rows are bit-identical to a healthy run whenever at most `R`
-    /// coordinates are lost; an unrecoverable pattern (fewer than `K`
-    /// survivors) is a proper error naming the shortfall.
-    pub fn run_degraded(&self, faults: &FaultSpec) -> anyhow::Result<DegradedJobReport> {
-        let t0 = Instant::now();
-        let mut pl: PlannedJob = crate::framework::plan_with_model(
-            &self.field,
-            self.code.as_ref(),
-            Some(self.parity.clone()),
-            self.inputs.clone(),
-            self.config.ports,
-            self.config.algorithm,
-            Some(self.config.cost_model()?),
-        )?;
-        let mut sim = Sim::new(self.config.ports);
-        let deg = crate::net::run_degraded(&mut sim, pl.job.as_mut(), faults)?;
-        self.finish_degraded(pl.choice, pl.layout, deg.fault, &deg.outputs, faults, t0)
-    }
-
-    /// The replay-path twin of [`run_degraded`](EncodeJob::run_degraded):
-    /// fetch the shape's compiled plan, analyze the failure pattern on
-    /// the plan's schedule, evaluate only the surviving output rows
-    /// through the batched columnar engine, and repair the rest.
-    /// Bit-identical coded rows and failure analysis to the live path.
-    pub fn run_degraded_cached(
-        &self,
-        cache: &PlanCache,
-        faults: &FaultSpec,
-    ) -> anyhow::Result<DegradedJobReport> {
-        let t0 = Instant::now();
-        let compiled = self.compiled(cache)?;
-        let jobs = [self.inputs.as_slice()];
-        let (fault, mut outs) = compiled.replay_degraded_batch(&jobs, faults)?;
-        let outputs = outs.pop().expect("one job in, one out");
-        self.finish_degraded(compiled.choice, compiled.layout, fault, &outputs, faults, t0)
-    }
-
-    /// Batch-serve `B` same-width jobs under one failure pattern: one
-    /// taint analysis, one columnar pass over the surviving rows, one
-    /// recovery operator applied per job — the degraded serving path of
-    /// [`EncodeService::start_degraded`](super::EncodeService::start_degraded).
-    /// Every job's `R` rows come back complete and bit-identical to
-    /// healthy [`encode_batch_cached`](EncodeJob::encode_batch_cached).
-    pub fn encode_degraded_batch_cached(
+    /// Degraded batch: one taint analysis, one columnar pass over the
+    /// surviving rows, one recovery operator applied per job.
+    fn encode_degraded_impl(
         &self,
         cache: &PlanCache,
         jobs: &[&[Packet]],
         faults: &FaultSpec,
+        isa: Option<IsaRequest>,
     ) -> anyhow::Result<(Vec<Vec<Packet>>, RecoveryStats)> {
-        let compiled = self.compiled(cache)?;
+        let compiled = self.compiled_with(cache, isa)?;
         let (fault, outs) = compiled.replay_degraded_batch(jobs, faults)?;
         let rt0 = Instant::now();
         let repair = self.plan_repair(&compiled.layout, &fault)?;
@@ -421,25 +713,29 @@ impl EncodeJob {
         outputs: &Outputs,
         faults: &FaultSpec,
         t0: Instant,
-    ) -> anyhow::Result<DegradedJobReport> {
+    ) -> anyhow::Result<JobReport> {
         let rt0 = Instant::now();
         let repair = self.plan_repair(&layout, &fault)?;
         let coded = self.apply_repair(&repair, &layout, &self.inputs, outputs)?;
         let recovery_wall = rt0.elapsed();
         let verified = self.verify_coded(&coded)?;
-        Ok(DegradedJobReport {
+        let cost = fault.delivered.cost(&self.config.cost_model()?);
+        Ok(JobReport {
             choice,
             layout,
             sim: fault.delivered,
-            faults_injected: faults.injected(),
-            crashed: fault.crashed.iter().copied().collect(),
-            outputs_recovered: repair.lost_sinks.len(),
-            surviving_sinks: repair.surviving_sinks,
-            lost_sinks: repair.lost_sinks,
-            recovery_wall,
+            cost,
             verified,
             wall: t0.elapsed(),
-            coded,
+            degraded: Some(DegradedInfo {
+                faults_injected: faults.injected(),
+                crashed: fault.crashed.iter().copied().collect(),
+                outputs_recovered: repair.lost_sinks.len(),
+                surviving_sinks: repair.surviving_sinks,
+                lost_sinks: repair.lost_sinks,
+                recovery_wall,
+                coded,
+            }),
         })
     }
 
@@ -469,15 +765,15 @@ impl EncodeJob {
         // dependent coordinates so a full-rank survivor set is never
         // spuriously rejected.
         let positions = independent_positions(&self.field, &self.parity, &candidates);
-        anyhow::ensure!(
-            positions.len() == k,
-            "unrecoverable failure pattern: only {} independent coordinates among the \
-             {} survivors, K = {k} needed ({} crashed, {} tainted)",
-            positions.len(),
-            candidates.len(),
-            fault.crashed.len(),
-            fault.tainted.len()
-        );
+        if positions.len() != k {
+            return Err(anyhow::Error::new(RecoveryShortfall {
+                independent: positions.len(),
+                survivors: candidates.len(),
+                k,
+                crashed: fault.crashed.len(),
+                tainted: fault.tainted.len(),
+            }));
+        }
         let op = Recovery::plan(
             &self.field,
             self.code.as_ref(),
@@ -535,12 +831,89 @@ impl EncodeJob {
             .map(|p| p.expect("every sink surviving or repaired"))
             .collect())
     }
+
+    // ------------------------------------------------------------------
+    // Pre-0.4 entry points — thin shims over `run`/`encode`, kept one
+    // release. Nothing in-tree calls them (pinned by clippy's
+    // `deprecated` lint passing with them in place).
+    // ------------------------------------------------------------------
+
+    /// Deprecated alias for `run(&ExecOptions::cached(cache))`.
+    #[deprecated(since = "0.4.0", note = "use `run(&ExecOptions::cached(cache))`")]
+    pub fn run_cached(&self, cache: &PlanCache) -> anyhow::Result<JobReport> {
+        self.run(&ExecOptions::cached(cache))
+            .map_err(Error::into_inner)
+    }
+
+    /// Deprecated alias for `encode` with a one-job batch.
+    #[deprecated(since = "0.4.0", note = "use `encode(cache, &[x], &ExecOptions::cached(cache))`")]
+    pub fn encode_cached(&self, cache: &PlanCache, x: &[Packet]) -> anyhow::Result<Vec<Packet>> {
+        let mut out = self
+            .encode(cache, &[x], &ExecOptions::cached(cache))
+            .map_err(Error::into_inner)?;
+        Ok(out.coded.pop().expect("one job in, one out"))
+    }
+
+    /// Deprecated alias for `encode`.
+    #[deprecated(since = "0.4.0", note = "use `encode(cache, jobs, &ExecOptions::cached(cache))`")]
+    pub fn encode_batch_cached(
+        &self,
+        cache: &PlanCache,
+        jobs: &[&[Packet]],
+    ) -> anyhow::Result<Vec<Vec<Packet>>> {
+        Ok(self
+            .encode(cache, jobs, &ExecOptions::cached(cache))
+            .map_err(Error::into_inner)?
+            .coded)
+    }
+
+    /// Deprecated alias for `run` with live engine + faults.
+    #[deprecated(since = "0.4.0", note = "use `run(&ExecOptions::new().faults(spec))`")]
+    pub fn run_degraded(&self, faults: &FaultSpec) -> anyhow::Result<DegradedJobReport> {
+        let rep = self
+            .run(&ExecOptions::new().faults(faults))
+            .map_err(Error::into_inner)?;
+        DegradedJobReport::from_report(rep)
+    }
+
+    /// Deprecated alias for `run` with replay engine + faults.
+    #[deprecated(
+        since = "0.4.0",
+        note = "use `run(&ExecOptions::cached(cache).faults(spec))`"
+    )]
+    pub fn run_degraded_cached(
+        &self,
+        cache: &PlanCache,
+        faults: &FaultSpec,
+    ) -> anyhow::Result<DegradedJobReport> {
+        let rep = self
+            .run(&ExecOptions::cached(cache).faults(faults))
+            .map_err(Error::into_inner)?;
+        DegradedJobReport::from_report(rep)
+    }
+
+    /// Deprecated alias for `encode` with faults.
+    #[deprecated(
+        since = "0.4.0",
+        note = "use `encode(cache, jobs, &ExecOptions::cached(cache).faults(spec))`"
+    )]
+    pub fn encode_degraded_batch_cached(
+        &self,
+        cache: &PlanCache,
+        jobs: &[&[Packet]],
+        faults: &FaultSpec,
+    ) -> anyhow::Result<(Vec<Vec<Packet>>, RecoveryStats)> {
+        let out = self
+            .encode(cache, jobs, &ExecOptions::cached(cache).faults(faults))
+            .map_err(Error::into_inner)?;
+        let stats = out.recovery.expect("degraded batch carries recovery stats");
+        Ok((out.coded, stats))
+    }
 }
 
-/// The outcome of one degraded job: delivered-traffic metrics, the
-/// failure analysis, and the **full** `R` coded rows — surviving sinks
-/// verbatim, lost sinks reconstructed from survivors — bit-identical to
-/// a healthy run's.
+/// The outcome of one degraded job in the pre-0.4 shape — returned by
+/// the deprecated `run_degraded*` shims; new code reads
+/// [`JobReport::degraded`] instead.
 #[derive(Clone, Debug)]
 pub struct DegradedJobReport {
     pub choice: PlanChoice,
@@ -562,6 +935,28 @@ pub struct DegradedJobReport {
     pub wall: Duration,
     /// All `R` coded rows in sink order.
     pub coded: Vec<Packet>,
+}
+
+impl DegradedJobReport {
+    fn from_report(rep: JobReport) -> anyhow::Result<DegradedJobReport> {
+        let d = rep
+            .degraded
+            .ok_or_else(|| anyhow::anyhow!("run was not degraded"))?;
+        Ok(DegradedJobReport {
+            choice: rep.choice,
+            layout: rep.layout,
+            sim: rep.sim,
+            faults_injected: d.faults_injected,
+            crashed: d.crashed,
+            surviving_sinks: d.surviving_sinks,
+            lost_sinks: d.lost_sinks,
+            outputs_recovered: d.outputs_recovered,
+            recovery_wall: d.recovery_wall,
+            verified: rep.verified,
+            wall: rep.wall,
+            coded: d.coded,
+        })
+    }
 }
 
 /// Aggregate stats of one degraded batch serve (the service metrics
@@ -641,7 +1036,7 @@ mod tests {
             ..JobConfig::default()
         };
         let job = EncodeJob::synthetic(cfg).unwrap();
-        let rep = job.run().unwrap();
+        let rep = job.run(&ExecOptions::new()).unwrap();
         assert_eq!(rep.verified, Some(true));
         // Auto is cost-aware: for this small code the universal path wins
         // (Remark 8); forcing the specific path still verifies.
@@ -649,9 +1044,27 @@ mod tests {
         assert!(rep.sim.c1 > 0);
         let mut cfg2 = job.config.clone();
         cfg2.algorithm = crate::framework::AlgoRequest::RsSpecific;
-        let rep2 = EncodeJob::synthetic(cfg2).unwrap().run().unwrap();
+        let rep2 = EncodeJob::synthetic(cfg2)
+            .unwrap()
+            .run(&ExecOptions::new())
+            .unwrap();
         assert_eq!(rep2.verified, Some(true));
         assert_eq!(rep2.choice, PlanChoice::RsSpecific);
+    }
+
+    #[test]
+    fn engine_parses_and_displays() {
+        for (s, e) in [
+            ("live", Engine::Live),
+            ("replay", Engine::Replay),
+            ("peer-channel", Engine::Peer(TransportKind::Channel)),
+            ("peer-shmem", Engine::Peer(TransportKind::SharedMem)),
+            ("peer-tcp", Engine::Peer(TransportKind::Tcp)),
+        ] {
+            assert_eq!(s.parse::<Engine>().unwrap(), e);
+            assert_eq!(e.to_string().parse::<Engine>().unwrap(), e);
+        }
+        assert!("carrier-pigeon".parse::<Engine>().is_err());
     }
 
     #[test]
@@ -663,7 +1076,10 @@ mod tests {
             verify: crate::coordinator::config::VerifyMode::Freivalds,
             ..JobConfig::default()
         };
-        let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+        let rep = EncodeJob::synthetic(cfg)
+            .unwrap()
+            .run(&ExecOptions::new())
+            .unwrap();
         assert_eq!(rep.verified, Some(true));
     }
 
@@ -678,13 +1094,13 @@ mod tests {
             ..JobConfig::default()
         };
         let job = EncodeJob::synthetic(cfg).unwrap();
-        let rep = job.run().unwrap();
+        let rep = job.run(&ExecOptions::new()).unwrap();
         assert_eq!(rep.verified, Some(true));
         assert_eq!(rep.choice, PlanChoice::Universal);
     }
 
     #[test]
-    fn run_cached_matches_live_run_for_every_algorithm() {
+    fn replay_engine_matches_live_run_for_every_algorithm() {
         let cache = crate::coordinator::PlanCache::new();
         for algo in [
             AlgoRequest::Auto,
@@ -701,8 +1117,8 @@ mod tests {
                 ..JobConfig::default()
             };
             let job = EncodeJob::synthetic(cfg).unwrap();
-            let live = job.run().unwrap();
-            let cached = job.run_cached(&cache).unwrap();
+            let live = job.run(&ExecOptions::new()).unwrap();
+            let cached = job.run(&ExecOptions::cached(&cache)).unwrap();
             assert_eq!(cached.verified, Some(true), "{algo:?}");
             assert_eq!(cached.choice, live.choice, "{algo:?}");
             // Identical (C1, C2) and full report — statics, not re-runs.
@@ -716,6 +1132,47 @@ mod tests {
     }
 
     #[test]
+    fn peer_engine_matches_replay_bit_for_bit() {
+        let cache = crate::coordinator::PlanCache::new();
+        let cfg = JobConfig {
+            k: 8,
+            r: 4,
+            w: 3,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg).unwrap();
+        let replayed = job.run(&ExecOptions::cached(&cache)).unwrap();
+        let peer = job
+            .run(&ExecOptions::cached(&cache).engine(Engine::Peer(TransportKind::Channel)))
+            .unwrap();
+        assert_eq!(peer.verified, Some(true));
+        // Measured traffic equals the simulator's static accounting.
+        assert_eq!(peer.sim, replayed.sim);
+        assert_eq!(peer.choice, replayed.choice);
+    }
+
+    #[test]
+    fn peer_engine_rejects_fault_injection() {
+        let cfg = JobConfig {
+            k: 4,
+            r: 2,
+            w: 1,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg).unwrap();
+        let faults = crate::net::FaultSpec::new().crash_after(0);
+        let err = job
+            .run(
+                &ExecOptions::new()
+                    .engine(Engine::Peer(TransportKind::Channel))
+                    .faults(&faults),
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::Compile(_)));
+        assert!(format!("{:#}", err.inner()).contains("not supported"));
+    }
+
+    #[test]
     fn one_cached_plan_serves_every_width() {
         let cache = crate::coordinator::PlanCache::new();
         let cfg = JobConfig {
@@ -725,15 +1182,16 @@ mod tests {
             ..JobConfig::default()
         };
         let job = EncodeJob::synthetic(cfg.clone()).unwrap();
-        job.run_cached(&cache).unwrap();
+        job.run(&ExecOptions::cached(&cache)).unwrap();
         let f = job.field.clone();
         use crate::gf::Field;
         let mut rng = crate::util::Rng::new(3);
+        let opts = ExecOptions::cached(&cache);
         for w in [1usize, 5, 17] {
             let x: Vec<Packet> = (0..cfg.k)
                 .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
                 .collect();
-            let y = job.encode_cached(&cache, &x).unwrap();
+            let y = job.encode(&cache, &[&x], &opts).unwrap().coded.remove(0);
             assert!(crate::coordinator::verify::native(&f, &job.parity, &x, &y), "w={w}");
         }
         // One shape, one compile — widths share the plan.
@@ -762,10 +1220,16 @@ mod tests {
             })
             .collect();
         let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
-        let batched = job.encode_batch_cached(&cache, &refs).unwrap();
+        let opts = ExecOptions::cached(&cache);
+        let batched = job.encode(&cache, &refs, &opts).unwrap().coded;
         assert_eq!(batched.len(), jobs.len());
         for (x, y) in jobs.iter().zip(&batched) {
-            assert_eq!(y, &job.encode_cached(&cache, x).unwrap());
+            let single = job
+                .encode(&cache, &[x.as_slice()], &opts)
+                .unwrap()
+                .coded
+                .remove(0);
+            assert_eq!(y, &single);
             assert!(verify::native(&f, &job.parity, x, y));
         }
         // One shape: the whole batch plus the singles hit one compile.
@@ -782,23 +1246,32 @@ mod tests {
             ..JobConfig::default()
         };
         let job = EncodeJob::synthetic(cfg).unwrap();
-        let healthy = job.encode_cached(&cache, &job.inputs).unwrap();
+        let opts = ExecOptions::cached(&cache);
+        let healthy = job
+            .encode(&cache, &[job.inputs.as_slice()], &opts)
+            .unwrap()
+            .coded
+            .remove(0);
         // Lose two sinks and one source after the run completed.
         let faults = crate::net::FaultSpec::new()
             .crash_after(16)
             .crash_after(18)
             .crash_after(3);
-        let live = job.run_degraded(&faults).unwrap();
-        assert_eq!(live.coded, healthy, "live repair ≡ healthy");
+        let live = job.run(&ExecOptions::new().faults(&faults)).unwrap();
+        let live_d = live.degraded.as_ref().expect("degraded info");
+        assert_eq!(live_d.coded, healthy, "live repair ≡ healthy");
         assert_eq!(live.verified, Some(true));
-        assert_eq!(live.lost_sinks, vec![0, 2]);
-        assert_eq!(live.surviving_sinks, vec![1, 3]);
-        assert_eq!(live.outputs_recovered, 2);
-        assert_eq!(live.faults_injected, 3);
-        let cached = job.run_degraded_cached(&cache, &faults).unwrap();
-        assert_eq!(cached.coded, healthy, "cached repair ≡ healthy");
+        assert_eq!(live_d.lost_sinks, vec![0, 2]);
+        assert_eq!(live_d.surviving_sinks, vec![1, 3]);
+        assert_eq!(live_d.outputs_recovered, 2);
+        assert_eq!(live_d.faults_injected, 3);
+        let cached = job
+            .run(&ExecOptions::cached(&cache).faults(&faults))
+            .unwrap();
+        let cached_d = cached.degraded.as_ref().expect("degraded info");
+        assert_eq!(cached_d.coded, healthy, "cached repair ≡ healthy");
         assert_eq!(cached.sim, live.sim, "delivered stats agree live vs replay");
-        assert_eq!(cached.lost_sinks, live.lost_sinks);
+        assert_eq!(cached_d.lost_sinks, live_d.lost_sinks);
     }
 
     #[test]
@@ -823,13 +1296,15 @@ mod tests {
             })
             .collect();
         let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
-        let healthy = job.encode_batch_cached(&cache, &refs).unwrap();
+        let opts = ExecOptions::cached(&cache);
+        let healthy = job.encode(&cache, &refs, &opts).unwrap().coded;
         let procs: Vec<usize> = (0..cfg.k + cfg.r).collect();
         let faults = crate::net::FaultSpec::random_crashes(7, &procs, cfg.r, POST_RUN);
-        let (coded, stats) = job
-            .encode_degraded_batch_cached(&cache, &refs, &faults)
+        let out = job
+            .encode(&cache, &refs, &opts.faults(&faults))
             .unwrap();
-        assert_eq!(coded, healthy, "degraded batch ≡ healthy batch");
+        assert_eq!(out.coded, healthy, "degraded batch ≡ healthy batch");
+        let stats = out.recovery.expect("recovery stats");
         assert_eq!(stats.faults_injected, cfg.r as u64);
         assert_eq!(
             stats.outputs_recovered,
@@ -838,10 +1313,8 @@ mod tests {
     }
 
     #[test]
-    fn unrecoverable_pattern_is_a_proper_error() {
-        // Crash R+1 = 5 processors post-run: fewer than K coordinates
-        // survive only if sinks+sources lost exceed R... here K=4, R=2,
-        // N=6; crashing 3 leaves 3 < K=4 coordinates.
+    fn unrecoverable_pattern_is_a_typed_error() {
+        // Crash 3 of N=6 post-run: K=4 > 3 surviving coordinates.
         let cfg = JobConfig {
             k: 4,
             r: 2,
@@ -853,8 +1326,14 @@ mod tests {
             .crash_after(0)
             .crash_after(1)
             .crash_after(4);
-        let err = job.run_degraded(&faults).unwrap_err();
+        let err = job.run(&ExecOptions::new().faults(&faults)).unwrap_err();
+        assert!(matches!(err, Error::Unrecoverable(_)), "{err}");
         assert!(err.to_string().contains("unrecoverable"), "{err}");
+        // The typed marker is reachable through the chain.
+        assert!(err
+            .inner()
+            .chain()
+            .any(|c| c.downcast_ref::<RecoveryShortfall>().is_some()));
     }
 
     #[test]
@@ -872,7 +1351,7 @@ mod tests {
         let job = EncodeJob::synthetic(cfg).unwrap();
         let code = job.code.as_ref().unwrap();
         assert!(code.alpha_designs.iter().all(|d| d.p_base == 3 && d.h >= 1));
-        let rep = job.run().unwrap();
+        let rep = job.run(&ExecOptions::new()).unwrap();
         assert_eq!(rep.verified, Some(true));
         assert_eq!(rep.choice, PlanChoice::RsSpecific);
     }
@@ -885,7 +1364,10 @@ mod tests {
             w: 2,
             ..JobConfig::default()
         };
-        let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+        let rep = EncodeJob::synthetic(cfg)
+            .unwrap()
+            .run(&ExecOptions::new())
+            .unwrap();
         let j = rep.to_json();
         assert!(j.starts_with('{') && j.ends_with('}'));
         assert!(j.contains("\"c1\":"));

@@ -32,7 +32,10 @@ pub mod service;
 pub mod verify;
 
 pub use config::{JobConfig, ServeOptions};
-pub use job::{DegradedJobReport, EncodeJob, JobReport, RecoveryStats};
+pub use job::{
+    DegradedInfo, DegradedJobReport, EncodeJob, EncodeOutcome, Engine, ExecOptions, JobReport,
+    RecoveryStats,
+};
 pub use metrics::Metrics;
 pub use plan_cache::{PlanCache, PlanKey};
 pub use server::{wire_layout, WireClient, WireServer};

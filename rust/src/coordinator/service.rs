@@ -603,18 +603,23 @@ impl EncodeService {
                         dispatcher: dispatcher.clone(),
                     };
                     let metrics_for_recovery = metrics.clone();
-                    batch_worker(&dispatcher, &metrics, move |jobs| match &*faults {
-                        None => job.encode_batch_cached(&cache, jobs),
-                        Some(spec) => {
-                            let (ys, stats) =
-                                job.encode_degraded_batch_cached(&cache, jobs, spec)?;
+                    batch_worker(&dispatcher, &metrics, move |jobs| {
+                        let base = super::job::ExecOptions::cached(&cache);
+                        let opts = match &*faults {
+                            None => base,
+                            Some(spec) => base.faults(spec),
+                        };
+                        let out = job
+                            .encode(&cache, jobs, &opts)
+                            .map_err(crate::error::Error::into_inner)?;
+                        if let Some(stats) = out.recovery {
                             let m = &metrics_for_recovery;
                             let injected = stats.faults_injected * jobs.len() as u64;
                             m.incr(metrics::FAULTS_INJECTED, injected);
                             m.incr(metrics::OUTPUTS_RECOVERED, stats.outputs_recovered);
                             m.observe(metrics::RECOVERY_LATENCY, stats.recovery_wall);
-                            Ok(ys)
                         }
+                        Ok(out.coded)
                     });
                 })
                 .context("spawning replay worker")?;

@@ -1,0 +1,206 @@
+//! The crate's unified error surface.
+//!
+//! Fallible public entry points ([`EncodeJob::run`],
+//! [`EncodeJob::encode`](crate::coordinator::EncodeJob::encode)) return
+//! [`Error`] — one enum over the failure domains the engine actually
+//! has, replacing the mixed `anyhow::Error` / `KernelError` /
+//! `ServeRejection` vocabulary the coordinator grew historically:
+//!
+//! * [`Error::Compile`] — planning, code construction, plan compilation
+//!   or optimisation failed; also the catch-all for malformed requests.
+//! * [`Error::Kernel`] — the execution kernels rejected the payload
+//!   (layout/shape mismatch, non-canonical elements).
+//! * [`Error::Transport`] — a peer-execution substrate failure
+//!   ([`TransportError`](crate::net::transport::TransportError) in the
+//!   chain).
+//! * [`Error::Rejected`] — admission control turned the request away
+//!   ([`ServeRejection`](crate::coordinator::ServeRejection)); retryable.
+//! * [`Error::Unrecoverable`] — a degraded run whose failure pattern
+//!   left fewer than `K` independent survivor coordinates
+//!   ([`RecoveryShortfall`] in the chain); the data is gone.
+//!
+//! Every variant keeps its full underlying cause chain via
+//! [`std::error::Error::source`], so `anyhow`-style chain walks (and
+//! the serving tier's metric classification, pinned by test) see
+//! through the wrapper unchanged.
+//!
+//! [`EncodeJob::run`]: crate::coordinator::EncodeJob::run
+
+use std::fmt;
+
+/// The unified top-level error of the crate. See the module docs for
+/// the variant taxonomy.
+#[derive(Debug)]
+pub enum Error {
+    /// Planning / code construction / plan compilation failed.
+    Compile(anyhow::Error),
+    /// The execution kernels rejected the payload.
+    Kernel(anyhow::Error),
+    /// A peer transport failed (timeout, closed peer, bad frame…).
+    Transport(anyhow::Error),
+    /// Admission control rejected the request (overload, shutdown) —
+    /// back off and retry.
+    Rejected(anyhow::Error),
+    /// The failure pattern is beyond the code's erasure tolerance.
+    Unrecoverable(anyhow::Error),
+}
+
+impl Error {
+    /// Classify an `anyhow` error by walking its cause chain for the
+    /// typed markers each domain emits; anything unrecognized lands in
+    /// [`Error::Compile`] (construction is the only untyped domain).
+    pub fn classify(e: anyhow::Error) -> Error {
+        let chain_has = |pred: &dyn Fn(&(dyn std::error::Error + 'static)) -> bool| {
+            e.chain().any(pred)
+        };
+        if chain_has(&|c| c.downcast_ref::<RecoveryShortfall>().is_some()) {
+            Error::Unrecoverable(e)
+        } else if chain_has(&|c| {
+            c.downcast_ref::<crate::net::transport::TransportError>()
+                .is_some()
+        }) {
+            Error::Transport(e)
+        } else if chain_has(&|c| {
+            c.downcast_ref::<crate::coordinator::ServeRejection>()
+                .is_some()
+        }) {
+            Error::Rejected(e)
+        } else if chain_has(&|c| {
+            c.downcast_ref::<crate::gf::kernels::KernelError>().is_some()
+                || c.downcast_ref::<crate::gf::kernels::LayoutMismatch>()
+                    .is_some()
+                || c.downcast_ref::<crate::gf::kernels::ShapeMismatch>()
+                    .is_some()
+        }) {
+            Error::Kernel(e)
+        } else {
+            Error::Compile(e)
+        }
+    }
+
+    /// The wrapped cause, whatever the variant.
+    pub fn inner(&self) -> &anyhow::Error {
+        match self {
+            Error::Compile(e)
+            | Error::Kernel(e)
+            | Error::Transport(e)
+            | Error::Rejected(e)
+            | Error::Unrecoverable(e) => e,
+        }
+    }
+
+    /// Consume the wrapper, yielding the full cause chain as `anyhow`.
+    pub fn into_inner(self) -> anyhow::Error {
+        match self {
+            Error::Compile(e)
+            | Error::Kernel(e)
+            | Error::Transport(e)
+            | Error::Rejected(e)
+            | Error::Unrecoverable(e) => e,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Short domain labels; the detail lives in the source chain.
+        // `Unrecoverable`'s label deliberately contains "unrecoverable"
+        // — callers match on it (tests pin this).
+        match self {
+            Error::Compile(_) => f.write_str("plan construction or compilation failed"),
+            Error::Kernel(_) => f.write_str("kernel rejected the payload"),
+            Error::Transport(_) => f.write_str("peer transport failed"),
+            Error::Rejected(_) => f.write_str("request rejected by admission control"),
+            Error::Unrecoverable(_) => f.write_str("unrecoverable failure pattern"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        let inner: &(dyn std::error::Error + 'static) = self.inner().as_ref();
+        Some(inner)
+    }
+}
+
+impl From<crate::coordinator::ServeRejection> for Error {
+    fn from(r: crate::coordinator::ServeRejection) -> Error {
+        Error::Rejected(anyhow::Error::new(r))
+    }
+}
+
+/// A degraded run's survivor set spans fewer than `K` dimensions: the
+/// lost outputs cannot be reconstructed. The typed marker
+/// [`Error::classify`] maps to [`Error::Unrecoverable`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecoveryShortfall {
+    /// Independent coordinates found among the survivors.
+    pub independent: usize,
+    /// Total surviving candidate coordinates.
+    pub survivors: usize,
+    /// Coordinates needed (`K`).
+    pub k: usize,
+    /// Crashed processors in the failure pattern.
+    pub crashed: usize,
+    /// Tainted (indirectly lost) processors.
+    pub tainted: usize,
+}
+
+impl fmt::Display for RecoveryShortfall {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "unrecoverable failure pattern: only {} independent coordinates among the \
+             {} survivors, K = {} needed ({} crashed, {} tainted)",
+            self.independent, self.survivors, self.k, self.crashed, self.tainted
+        )
+    }
+}
+
+impl std::error::Error for RecoveryShortfall {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_labels_are_stable() {
+        let e = Error::Unrecoverable(anyhow::anyhow!("detail"));
+        assert!(e.to_string().contains("unrecoverable"));
+        let e = Error::Rejected(anyhow::anyhow!("detail"));
+        assert!(e.to_string().contains("rejected"));
+    }
+
+    #[test]
+    fn source_chain_reaches_the_typed_marker() {
+        let shortfall = RecoveryShortfall {
+            independent: 2,
+            survivors: 3,
+            k: 4,
+            crashed: 3,
+            tainted: 0,
+        };
+        let e = Error::classify(anyhow::Error::new(shortfall).context("repair failed"));
+        assert!(matches!(e, Error::Unrecoverable(_)));
+        // An anyhow rewrap (what the serving tier does) must still see
+        // the marker through the chain.
+        let rewrapped = anyhow::Error::new(e);
+        assert!(rewrapped
+            .chain()
+            .any(|c| c.downcast_ref::<RecoveryShortfall>().is_some()));
+        assert!(rewrapped.to_string().contains("unrecoverable"));
+    }
+
+    #[test]
+    fn transport_errors_classify_as_transport() {
+        let te = crate::net::transport::TransportError::PeerClosed { round: 3, peer: 1 };
+        let e = Error::classify(anyhow::Error::new(te).context("peer run failed"));
+        assert!(matches!(e, Error::Transport(_)));
+    }
+
+    #[test]
+    fn unknown_errors_classify_as_compile() {
+        let e = Error::classify(anyhow::anyhow!("some planner failure"));
+        assert!(matches!(e, Error::Compile(_)));
+    }
+}

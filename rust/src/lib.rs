@@ -36,15 +36,36 @@
 //! the prepare-and-shoot per-rank loops on rayon workers —
 //! bit-identically to the sequential engine; `pjrt` enables the XLA
 //! runtime bridge (needs the `xla` bindings crate).
+//!
+//! ## Stable vs internal surface
+//!
+//! The **supported public surface** is what [`prelude`] re-exports:
+//! job configuration and execution ([`coordinator::EncodeJob`],
+//! [`coordinator::JobConfig`], [`coordinator::ExecOptions`],
+//! [`coordinator::PlanCache`]), the serving tier
+//! ([`coordinator::EncodeService`]), fault injection
+//! ([`net::FaultSpec`]), the field abstraction ([`gf::Field`] and its
+//! concrete fields), and the unified [`Error`]. Those types follow the
+//! crate's deprecation policy — entry points removed only after one
+//! release behind a `#[deprecated]` shim.
+//!
+//! Everything else — the plan IR ([`net::plan`]), the collectives, the
+//! kernel/backend internals, the transport substrate
+//! ([`net::transport`]) — is **internal**: exported `pub` for tests,
+//! benches and curious integrators, but free to change shape between
+//! minor versions without notice.
 
 pub mod codes;
 pub mod collectives;
 pub mod coordinator;
+pub mod error;
 pub mod framework;
 pub mod gf;
 pub mod net;
+pub mod prelude;
 pub mod runtime;
 pub mod util;
 
+pub use error::Error;
 pub use gf::{Field, GfPrime, Mat};
 pub use net::{CostModel, Packet, PacketBuf, SimReport};

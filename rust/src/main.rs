@@ -11,7 +11,7 @@
 //! (Hand-rolled argument parsing: the offline environment has no clap.)
 
 use anyhow::{Context, Result};
-use dce::coordinator::{EncodeJob, JobConfig};
+use dce::coordinator::{EncodeJob, ExecOptions, JobConfig};
 use dce::framework::costs;
 use dce::gf::{Field, GfPrime};
 use std::collections::HashMap;
@@ -56,6 +56,8 @@ fn print_usage() {
          \x20              [--algorithm auto|rs-specific|universal|multi-reduce|direct]\n\
          \x20              [--code rs-structured|rs-plain|lagrange|random]\n\
          \x20              [--verify native|freivalds|pjrt|off] [--alpha F] [--beta F] [--json]\n\
+         \x20              [--engine live|replay|peer-channel|peer-shmem|peer-tcp]\n\
+         \x20              (DCE_TRANSPORT=channel|shmem|tcp selects the peer engine by env)\n\
          \x20 dce table1   [--ports-max P]      regenerate Table I (measured vs formula)\n\
          \x20 dce sweep    --what rs|baselines  cost-comparison sweeps\n\
          \x20 dce service  [--workers N] [--requests N] [--w N]\n\
@@ -122,14 +124,25 @@ fn config_from_flags(flags: &HashMap<String, String>) -> Result<JobConfig> {
     if let Some(v) = flags.get("seed") {
         cfg.seed = v.parse()?;
     }
+    if let Some(v) = flags.get("engine") {
+        cfg.engine = v.parse()?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let cfg = config_from_flags(flags)?;
+    // `DCE_TRANSPORT=channel|shmem|tcp` selects the peer engine when no
+    // explicit engine was configured (the CI transport matrix uses it).
+    let engine = match cfg.engine {
+        dce::coordinator::Engine::Live => dce::net::transport::TransportKind::from_env()
+            .map(dce::coordinator::Engine::Peer)
+            .unwrap_or(cfg.engine),
+        e => e,
+    };
     let job = EncodeJob::synthetic(cfg)?;
-    let report = job.run()?;
+    let report = job.run(&ExecOptions::new().engine(engine))?;
     if flags.contains_key("json") {
         println!("{}", report.to_json());
     } else {

@@ -26,9 +26,12 @@ pub mod model;
 pub mod noisy;
 pub mod opt;
 pub mod payload;
+pub mod peer;
 pub mod plan;
+pub mod shard;
 pub mod sim;
 pub mod trace;
+pub mod transport;
 
 pub use exec::{
     replay, replay_batch, replay_batch_kernels, replay_batch_ntt, replay_batch_scalar,
@@ -47,9 +50,12 @@ pub use payload::{
     pkt_add, pkt_add_scaled, pkt_scale, pkt_zero, FrameHeader, FrameKind, Packet,
     PackedPacketBuf, PacketBuf, FRAME_HEADER_LEN, FRAME_MAGIC,
 };
+pub use peer::{execute_shard, merge_stats, run_peer, spawn_local, PeerRun, PeerStats, ShardedPlan};
 pub use plan::{compile, ComputeOp, Plan, PlanRecorder, RoundPlan, SendOp, SlotId};
+pub use shard::{LocalComb, LocalCompute, PlanShard, ShardRecv, ShardRound, ShardSend};
 pub use sim::{run, run_degraded, Collective, DegradedRun, Msg, Outputs, ProcId, Sim, SimReport};
 pub use trace::TraceEvent;
+pub use transport::{Transport, TransportError, TransportKind};
 
 #[cfg(feature = "parallel")]
 static PARALLEL_DISABLED: std::sync::atomic::AtomicBool =

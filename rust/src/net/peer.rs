@@ -1,0 +1,305 @@
+//! Peer-to-peer Plan execution: N ranks, each holding only its own
+//! [`PlanShard`], exchanging packets over a [`Transport`] with no
+//! global state — the paper's decentralized model made literal.
+//!
+//! Each rank runs the same loop: materialise this round's emissions
+//! from its local knowledge arena, ship them, collect the arrivals the
+//! schedule promises, cross the round barrier. Nothing outside the
+//! shard is consulted — no slot table, no other rank's schedule, no
+//! shared memory beyond the transport itself.
+//!
+//! Conformance contract (enforced by `tests/peer.rs`): outputs are
+//! bit-identical to [`exec::replay`](crate::net::exec::replay), and the
+//! **measured** traffic — rounds crossed, messages shipped, per-round
+//! maxima — reproduces [`Plan::report`] exactly, which is what makes
+//! the simulator an honest oracle for the real thing.
+
+use crate::gf::Field;
+use crate::net::payload::Packet;
+use crate::net::plan::Plan;
+use crate::net::shard::PlanShard;
+use crate::net::sim::{Outputs, ProcId, SimReport};
+use crate::net::transport::{self, Transport, TransportKind};
+use anyhow::{ensure, Context, Result};
+use std::time::Duration;
+
+/// A Plan cut into per-processor shards, ready for peer execution.
+#[derive(Clone, Debug)]
+pub struct ShardedPlan {
+    /// Participants, ascending; `shards[i]` belongs to `procs[i]`.
+    pub procs: Vec<ProcId>,
+    pub shards: Vec<PlanShard>,
+    /// `K` — inputs the collective encodes.
+    pub n_inputs: usize,
+    /// Plan rounds (= every rank's barrier count = `C1`).
+    pub n_rounds: usize,
+    /// The schedule's port budget `p` (transport sizing).
+    pub ports: usize,
+    /// Largest packet count of any single message (ring sizing).
+    pub max_msg_packets: usize,
+}
+
+impl ShardedPlan {
+    /// Shard `plan` for every participant. `owners[k]` is the rank
+    /// holding input `k` at start — the systematic layout's
+    /// `source(k) = k` in every collective this repo compiles.
+    pub fn new<F: Field>(plan: &Plan, f: &F, owners: &[ProcId]) -> Result<ShardedPlan> {
+        let procs = plan.participants(owners);
+        let shards = plan.shard_all(f, owners)?;
+        let max_msg_packets = shards.iter().map(|s| s.max_msg_packets()).max().unwrap_or(0);
+        Ok(ShardedPlan {
+            procs,
+            shards,
+            n_inputs: plan.n_inputs,
+            n_rounds: plan.rounds().len(),
+            ports: plan.ports,
+            max_msg_packets,
+        })
+    }
+}
+
+/// What one rank measured while executing its shard — honest counts
+/// from the execution loop itself, not from plan statics.
+#[derive(Clone, Debug, Default)]
+pub struct PeerStats {
+    /// Barriers crossed (= rounds executed).
+    pub rounds: u64,
+    /// Per round, the largest message (in field elements) **this rank
+    /// sent** — zero for rounds it sent nothing.
+    pub per_round_sent_max: Vec<u64>,
+    /// Messages this rank sent.
+    pub messages: u64,
+    /// Field elements this rank sent (its bandwidth share).
+    pub elems: u64,
+}
+
+/// The merged result of a peer run.
+#[derive(Clone, Debug)]
+pub struct PeerRun {
+    /// Final packet per processor — bit-identical to
+    /// [`exec::replay`](crate::net::exec::replay).
+    pub outputs: Outputs,
+    /// The merged measured traffic: `c1` = rounds every rank crossed,
+    /// `per_round_max[t]` = largest message any rank sent in round `t`,
+    /// `c2` = their sum, plus total messages and bandwidth.
+    pub measured: SimReport,
+}
+
+/// Execute one shard against a live transport. `my_inputs` are the
+/// values of `shard.owned`, in order. Returns this rank's final packet
+/// (if the Plan assigns one) and its measured traffic.
+pub fn execute_shard<F: Field>(
+    shard: &PlanShard,
+    f: &F,
+    w: usize,
+    my_inputs: &[Packet],
+    transport: &mut dyn Transport,
+) -> Result<(Option<Packet>, PeerStats)> {
+    ensure!(
+        my_inputs.len() == shard.owned.len(),
+        "rank {} holds {} inputs, shard expects {}",
+        shard.proc,
+        my_inputs.len(),
+        shard.owned.len()
+    );
+    for pkt in my_inputs {
+        ensure!(
+            pkt.len() == w,
+            "rank {}: input packet width {} != {w}",
+            shard.proc,
+            pkt.len()
+        );
+    }
+    // The local knowledge arena: owned inputs, then (per round) each
+    // emission materialised and each arrival, in shard index order.
+    let mut arena: Vec<Option<Packet>> = vec![None; shard.n_local];
+    for (i, pkt) in my_inputs.iter().enumerate() {
+        arena[i] = Some(pkt.clone());
+    }
+    let mut next = my_inputs.len();
+    let eval = |arena: &[Option<Packet>], comb: &[(u64, usize)]| -> Result<Packet> {
+        let terms: Vec<(u64, &[u64])> = comb
+            .iter()
+            .map(|&(c, j)| {
+                arena[j]
+                    .as_deref()
+                    .map(|p| (c, p))
+                    .with_context(|| format!("arena slot {j} not materialised"))
+            })
+            .collect::<Result<_>>()?;
+        let mut out = vec![0u64; w];
+        f.lincomb_into(&mut out, &terms);
+        Ok(out)
+    };
+    let mut stats = PeerStats::default();
+    for (t, round) in shard.rounds.iter().enumerate() {
+        let t32 = t as u32;
+        for comp in &round.computes {
+            let pkt = eval(&arena, &comp.comb)
+                .with_context(|| format!("rank {}: compute for slot {}", shard.proc, comp.slot))?;
+            arena[next] = Some(pkt);
+            next += 1;
+        }
+        let mut sent_max = 0u64;
+        for send in &round.sends {
+            let rows: Vec<Packet> = send
+                .locals
+                .iter()
+                .map(|&j| {
+                    arena[j]
+                        .clone()
+                        .with_context(|| format!("arena slot {j} not materialised"))
+                })
+                .collect::<Result<_>>()?;
+            transport
+                .send(t32, send.port, send.dst, &rows)
+                .with_context(|| {
+                    format!(
+                        "rank {}: send to {} port {} in round {t}",
+                        shard.proc, send.dst, send.port
+                    )
+                })?;
+            let elems = (rows.len() * w) as u64;
+            sent_max = sent_max.max(elems);
+            stats.messages += 1;
+            stats.elems += elems;
+        }
+        stats.per_round_sent_max.push(sent_max);
+        for recv in &round.recvs {
+            let rows = transport
+                .recv(t32, recv.port, recv.src)
+                .with_context(|| {
+                    format!(
+                        "rank {}: recv from {} port {} in round {t}",
+                        shard.proc, recv.src, recv.port
+                    )
+                })?;
+            ensure!(
+                rows.len() == recv.n_slots,
+                "rank {}: round {t} message from {} carries {} packets, schedule says {}",
+                shard.proc,
+                recv.src,
+                rows.len(),
+                recv.n_slots
+            );
+            ensure!(
+                recv.first_local == next,
+                "shard arena misalignment at rank {} round {t}",
+                shard.proc
+            );
+            for row in rows {
+                ensure!(
+                    row.len() == w,
+                    "rank {}: packet width {} != {w} from {}",
+                    shard.proc,
+                    row.len(),
+                    recv.src
+                );
+                arena[next] = Some(row);
+                next += 1;
+            }
+        }
+        transport
+            .barrier(t32)
+            .with_context(|| format!("rank {}: barrier for round {t}", shard.proc))?;
+        stats.rounds += 1;
+    }
+    let output = match &shard.output {
+        None => None,
+        Some(comb) => Some(
+            eval(&arena, comb).with_context(|| format!("rank {}: final output", shard.proc))?,
+        ),
+    };
+    Ok((output, stats))
+}
+
+/// Merge per-rank measurements into the global [`SimReport`] the
+/// simulator would produce: `C1` from barriers, `m_t` as the max over
+/// ranks, `C2` as their sum.
+pub fn merge_stats(n_rounds: usize, stats: &[PeerStats]) -> SimReport {
+    let mut per_round_max = vec![0u64; n_rounds];
+    for s in stats {
+        for (t, &m) in s.per_round_sent_max.iter().enumerate() {
+            per_round_max[t] = per_round_max[t].max(m);
+        }
+    }
+    SimReport {
+        c1: n_rounds as u64,
+        c2: per_round_max.iter().sum(),
+        per_round_max,
+        messages: stats.iter().map(|s| s.messages).sum(),
+        bandwidth: stats.iter().map(|s| s.elems).sum(),
+    }
+}
+
+/// Run all ranks of a sharded plan as threads over a fresh in-process
+/// mesh of the given kind — the test/bench harness for peer execution
+/// (`examples/peer_encode.rs` does the same dance with real processes
+/// over TCP).
+pub fn spawn_local<F: Field + Sync>(
+    sharded: &ShardedPlan,
+    f: &F,
+    inputs: &[Packet],
+    kind: TransportKind,
+    timeout: Duration,
+) -> Result<PeerRun> {
+    ensure!(
+        inputs.len() == sharded.n_inputs,
+        "{} inputs for a {}-input plan",
+        inputs.len(),
+        sharded.n_inputs
+    );
+    let w = inputs.first().map_or(0, |p| p.len());
+    for pkt in inputs {
+        ensure!(pkt.len() == w, "ragged input widths");
+    }
+    let max_msg_bytes = sharded.max_msg_packets * w * 8;
+    let mesh = transport::mesh(kind, &sharded.procs, sharded.ports, max_msg_bytes, timeout)?;
+    let ran: Vec<Result<(ProcId, Option<Packet>, PeerStats)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = sharded
+            .shards
+            .iter()
+            .zip(mesh)
+            .map(|(shard, mut transport)| {
+                let my_inputs: Vec<Packet> =
+                    shard.owned.iter().map(|&k| inputs[k].clone()).collect();
+                s.spawn(move || {
+                    let (out, stats) =
+                        execute_shard(shard, f, w, &my_inputs, transport.as_mut())?;
+                    Ok((shard.proc, out, stats))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("peer rank panicked"))
+            .collect()
+    });
+    let mut outputs = Outputs::new();
+    let mut stats = Vec::with_capacity(ran.len());
+    for r in ran {
+        let (proc, out, st) = r?;
+        if let Some(pkt) = out {
+            outputs.insert(proc, pkt);
+        }
+        stats.push(st);
+    }
+    Ok(PeerRun {
+        outputs,
+        measured: merge_stats(sharded.n_rounds, &stats),
+    })
+}
+
+/// Convenience: shard + run in one call (plan-cache paths hold a
+/// [`ShardedPlan`] and call [`spawn_local`] directly).
+pub fn run_peer<F: Field + Sync>(
+    plan: &Plan,
+    f: &F,
+    inputs: &[Packet],
+    kind: TransportKind,
+    timeout: Duration,
+) -> Result<PeerRun> {
+    let owners: Vec<ProcId> = (0..plan.n_inputs).collect();
+    let sharded = ShardedPlan::new(plan, f, &owners)?;
+    spawn_local(&sharded, f, inputs, kind, timeout)
+}

@@ -1,0 +1,398 @@
+//! Plan sharding: each processor's private slice of a compiled
+//! [`Plan`] — the paper's "no central processor" execution model.
+//!
+//! The Plan IR stores every slot as a linear combination over the `K`
+//! *inputs* (a row vector in `F^K`), which is global knowledge no
+//! single peer holds. A [`PlanShard`] re-expresses every emission the
+//! processor makes as a combination over what that processor *locally
+//! knows* at that point in the schedule: its own input plus the packets
+//! it received in earlier rounds. The reconstruction is a span solve —
+//! each local knowledge item has a row in `F^K`, the rows are kept in
+//! an incremental echelon basis, and each emission's row is expressed
+//! over that basis. Solvability is guaranteed for any plan recorded
+//! from a live collective: the live processor computed the very same
+//! packet from the very same local state, and every operator is linear.
+//!
+//! The shard is pure data (local slot indices, coefficients, wire
+//! schedule); executing it against a
+//! [`Transport`](crate::net::transport::Transport) is
+//! [`peer`](crate::net::peer)'s job.
+
+use crate::gf::Field;
+use crate::net::plan::{Plan, SlotId};
+use crate::net::sim::ProcId;
+use anyhow::{ensure, Context, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// A linear combination over a shard's *local* knowledge arena:
+/// `Σ coeff · local[idx]`, zero coefficients omitted.
+pub type LocalComb = Vec<(u64, usize)>;
+
+/// One packet this processor must materialise in a round, as a local
+/// combination. The executor appends it to the knowledge arena at the
+/// next free index (assignment order is the `computes` order).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LocalCompute {
+    /// The global Plan slot (for diagnostics only).
+    pub slot: SlotId,
+    pub comb: LocalComb,
+}
+
+/// One outgoing message: local arena indices, in wire order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSend {
+    pub dst: ProcId,
+    pub port: u32,
+    /// Arena indices of the payload packets.
+    pub locals: Vec<usize>,
+}
+
+/// One expected incoming message. Its packets land in the arena at
+/// `[first_local, first_local + n_slots)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardRecv {
+    pub src: ProcId,
+    pub port: u32,
+    pub n_slots: usize,
+    pub first_local: usize,
+}
+
+/// One round of a shard: materialise `computes`, ship `sends`, collect
+/// `recvs` (ascending `(src, port)`), cross the barrier. Sends are
+/// ordered ascending `(dst, port)` so both ends of a FIFO pair stream
+/// agree on intra-round order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardRound {
+    pub computes: Vec<LocalCompute>,
+    pub sends: Vec<ShardSend>,
+    pub recvs: Vec<ShardRecv>,
+}
+
+/// Everything one processor needs to play its part of a Plan — and
+/// nothing more. No global slot table, no other rank's schedule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanShard {
+    pub proc: ProcId,
+    /// Input slots this processor contributes, ascending; they seed the
+    /// knowledge arena at local indices `0..owned.len()`.
+    pub owned: Vec<SlotId>,
+    /// One entry per Plan round — empty rounds are kept so every rank
+    /// crosses every barrier and measured `C1` equals the Plan's.
+    pub rounds: Vec<ShardRound>,
+    /// Total knowledge arena size after the last round.
+    pub n_local: usize,
+    /// The processor's final packet, over the complete arena (`None`
+    /// when the Plan assigns it no output).
+    pub output: Option<LocalComb>,
+}
+
+impl PlanShard {
+    /// The largest packet count of any single message this shard sends
+    /// or receives (ring-buffer sizing).
+    pub fn max_msg_packets(&self) -> usize {
+        self.rounds
+            .iter()
+            .flat_map(|r| {
+                r.sends
+                    .iter()
+                    .map(|s| s.locals.len())
+                    .chain(r.recvs.iter().map(|r| r.n_slots))
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// An incremental echelon basis over `F^K` with combination tracking:
+/// every basis row remembers how it was formed from the raw knowledge
+/// rows, so expressing a target also yields the local coefficients.
+struct SpanBasis<'f, F: Field> {
+    f: &'f F,
+    k: usize,
+    /// Ascending pivot column; each row is zero before its pivot and 1
+    /// at it.
+    rows: Vec<BasisRow>,
+}
+
+struct BasisRow {
+    pivot: usize,
+    row: Vec<u64>,
+    /// `row = Σ combo[local] · knowledge_row[local]`.
+    combo: BTreeMap<usize, u64>,
+}
+
+impl<'f, F: Field> SpanBasis<'f, F> {
+    fn new(f: &'f F, k: usize) -> Self {
+        SpanBasis {
+            f,
+            k,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Reduce `row`/`combo` in place against the basis (one ascending
+    /// pivot pass — sound because every basis row is zero before its
+    /// own pivot, so earlier eliminations are never undone).
+    fn reduce(&self, row: &mut [u64], combo: &mut BTreeMap<usize, u64>) {
+        let f = self.f;
+        for b in &self.rows {
+            let c = row[b.pivot];
+            if c == 0 {
+                continue;
+            }
+            for (i, &bv) in b.row.iter().enumerate().skip(b.pivot) {
+                if bv != 0 {
+                    row[i] = f.sub(row[i], f.mul(c, bv));
+                }
+            }
+            for (&j, &bc) in &b.combo {
+                let cur = combo.get(&j).copied().unwrap_or(0);
+                let next = f.sub(cur, f.mul(c, bc));
+                if next == 0 {
+                    combo.remove(&j);
+                } else {
+                    combo.insert(j, next);
+                }
+            }
+        }
+    }
+
+    /// Add the raw row of knowledge item `local` to the span.
+    fn add(&mut self, local: usize, raw: &[u64]) {
+        debug_assert_eq!(raw.len(), self.k);
+        let mut row = raw.to_vec();
+        let mut combo = BTreeMap::from([(local, 1u64)]);
+        self.reduce(&mut row, &mut combo);
+        let Some(pivot) = row.iter().position(|&v| v != 0) else {
+            return; // linearly dependent — spans nothing new
+        };
+        let inv = self.f.inv(row[pivot]);
+        for v in row.iter_mut() {
+            if *v != 0 {
+                *v = self.f.mul(*v, inv);
+            }
+        }
+        for c in combo.values_mut() {
+            *c = self.f.mul(*c, inv);
+        }
+        let at = self.rows.partition_point(|b| b.pivot < pivot);
+        self.rows.insert(at, BasisRow { pivot, row, combo });
+    }
+
+    /// Express `target` over the span: `Some(comb)` with
+    /// `target = Σ comb · knowledge_row`, or `None` if out of span.
+    fn express(&self, target: &[u64]) -> Option<LocalComb> {
+        let mut row = target.to_vec();
+        let mut combo = BTreeMap::new();
+        self.reduce(&mut row, &mut combo);
+        if row.iter().any(|&v| v != 0) {
+            return None;
+        }
+        // reduce() built `row - Σ c·basis = 0`, i.e. the accumulated
+        // combo entered negated; flip signs to get target itself.
+        Some(
+            combo
+                .into_iter()
+                .map(|(j, c)| (self.f.neg(c), j))
+                .collect(),
+        )
+    }
+}
+
+/// The dense `F^K` row of a Plan slot: a unit vector for inputs, the
+/// stored lincomb otherwise.
+fn slot_row(plan: &Plan, slot: SlotId) -> Vec<u64> {
+    let mut row = vec![0u64; plan.n_inputs];
+    if slot < plan.n_inputs {
+        row[slot] = 1;
+    } else {
+        for &(c, s) in plan.lincomb(slot) {
+            row[s] = c;
+        }
+    }
+    row
+}
+
+impl Plan {
+    /// Every processor the schedule involves: input owners, message
+    /// endpoints, and output holders, ascending.
+    pub fn participants(&self, owners: &[ProcId]) -> Vec<ProcId> {
+        let mut set: BTreeSet<ProcId> = owners.iter().copied().collect();
+        set.extend(self.output_slots().keys().copied());
+        for round in self.rounds() {
+            for op in &round.sends {
+                set.insert(op.src);
+                set.insert(op.dst);
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Extract `proc`'s private slice of this Plan. `owners[k]` names
+    /// the processor holding input `k` at the start (the systematic
+    /// layout's `source(k)`). Fails only on a plan that is not locally
+    /// executable — an emission outside the sender's knowledge span,
+    /// which a plan recorded from a live collective can never be.
+    pub fn shard<F: Field>(&self, f: &F, proc: ProcId, owners: &[ProcId]) -> Result<PlanShard> {
+        ensure!(
+            owners.len() == self.n_inputs,
+            "owners table has {} entries for {} inputs",
+            owners.len(),
+            self.n_inputs
+        );
+        let owned: Vec<SlotId> = (0..self.n_inputs).filter(|&k| owners[k] == proc).collect();
+        let mut basis = SpanBasis::new(f, self.n_inputs);
+        // Global slot → local arena index, for everything this proc holds.
+        let mut local_of: HashMap<SlotId, usize> = HashMap::new();
+        for (i, &k) in owned.iter().enumerate() {
+            local_of.insert(k, i);
+            basis.add(i, &slot_row(self, k));
+        }
+        let mut n_local = owned.len();
+        let mut rounds = Vec::with_capacity(self.rounds().len());
+        for (t, round) in self.rounds().iter().enumerate() {
+            let mut sr = ShardRound::default();
+            // Own emissions first: solve each payload slot over the
+            // knowledge accumulated in rounds < t (this round's
+            // arrivals are not usable yet — the live engine delivers
+            // them one round later).
+            let mut sends: Vec<&crate::net::plan::SendOp> =
+                round.sends.iter().filter(|op| op.src == proc).collect();
+            sends.sort_by_key(|op| (op.dst, op.port));
+            for op in sends {
+                let mut locals = Vec::with_capacity(op.slots.len());
+                for &slot in &op.slots {
+                    let idx = match local_of.get(&slot) {
+                        Some(&idx) => idx,
+                        None => {
+                            let comb =
+                                basis.express(&slot_row(self, slot)).with_context(|| {
+                                    format!(
+                                        "slot {slot} is outside processor {proc}'s knowledge \
+                                         span in round {t} — plan is not locally executable"
+                                    )
+                                })?;
+                            let idx = n_local;
+                            n_local += 1;
+                            local_of.insert(slot, idx);
+                            sr.computes.push(LocalCompute { slot, comb });
+                            idx
+                        }
+                    };
+                    locals.push(idx);
+                }
+                sr.sends.push(ShardSend {
+                    dst: op.dst,
+                    port: op.port,
+                    locals,
+                });
+            }
+            // Then this round's arrivals, ascending (src, port): they
+            // join the arena and the span for rounds > t.
+            let mut recvs: Vec<&crate::net::plan::SendOp> =
+                round.sends.iter().filter(|op| op.dst == proc).collect();
+            recvs.sort_by_key(|op| (op.src, op.port));
+            for op in recvs {
+                let first_local = n_local;
+                for &slot in &op.slots {
+                    let idx = n_local;
+                    n_local += 1;
+                    local_of.entry(slot).or_insert(idx);
+                    basis.add(idx, &slot_row(self, slot));
+                }
+                sr.recvs.push(ShardRecv {
+                    src: op.src,
+                    port: op.port,
+                    n_slots: op.slots.len(),
+                    first_local,
+                });
+            }
+            rounds.push(sr);
+        }
+        let output = match self.output_slots().get(&proc) {
+            None => None,
+            Some(&slot) => Some(match local_of.get(&slot) {
+                Some(&idx) => vec![(1u64, idx)],
+                None => basis.express(&slot_row(self, slot)).with_context(|| {
+                    format!(
+                        "output slot {slot} is outside processor {proc}'s final knowledge span"
+                    )
+                })?,
+            }),
+        };
+        Ok(PlanShard {
+            proc,
+            owned,
+            rounds,
+            n_local,
+            output,
+        })
+    }
+
+    /// Shard the whole Plan: one [`PlanShard`] per participant, in
+    /// [`participants`](Plan::participants) order.
+    pub fn shard_all<F: Field>(&self, f: &F, owners: &[ProcId]) -> Result<Vec<PlanShard>> {
+        self.participants(owners)
+            .into_iter()
+            .map(|p| self.shard(f, p, owners))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gf::{Field as _, GfPrime};
+
+    #[test]
+    fn span_basis_solves_and_rejects() {
+        let f = GfPrime::default_field();
+        let mut b = SpanBasis::new(&f, 3);
+        b.add(0, &[1, 0, 0]);
+        b.add(1, &[1, 2, 0]);
+        let comb = b.express(&[4, 2, 0]).expect("in span");
+        // Verify: Σ comb · knowledge = [4, 2, 0]
+        let rows = [[1u64, 0, 0], [1, 2, 0]];
+        let mut acc = [0u64; 3];
+        for &(c, j) in &comb {
+            for i in 0..3 {
+                acc[i] = f.add(acc[i], f.mul(c, rows[j][i]));
+            }
+        }
+        assert_eq!(acc, [4, 2, 0]);
+        assert!(b.express(&[0, 0, 1]).is_none(), "e2 is out of span");
+        // Dependent adds change nothing.
+        b.add(2, &[2, 2, 0]);
+        assert!(b.express(&[0, 0, 5]).is_none());
+    }
+
+    #[test]
+    fn span_basis_tracks_combos_in_gf2e() {
+        let f = crate::gf::AnyField::parse("gf2e:8").unwrap();
+        let mut b = SpanBasis::new(&f, 4);
+        let rows: Vec<Vec<u64>> = vec![
+            vec![3, 1, 0, 7],
+            vec![0, 5, 2, 1],
+            vec![9, 0, 0, 4],
+        ];
+        for (i, r) in rows.iter().enumerate() {
+            b.add(i, r);
+        }
+        // A random-ish combination must round-trip.
+        let coeffs = [17u64, 101, 250];
+        let mut target = vec![0u64; 4];
+        for (c, r) in coeffs.iter().zip(&rows) {
+            for i in 0..4 {
+                target[i] = f.add(target[i], f.mul(*c, r[i]));
+            }
+        }
+        let comb = b.express(&target).expect("in span");
+        let mut acc = vec![0u64; 4];
+        for &(c, j) in &comb {
+            for i in 0..4 {
+                acc[i] = f.add(acc[i], f.mul(c, rows[j][i]));
+            }
+        }
+        assert_eq!(acc, target);
+    }
+}

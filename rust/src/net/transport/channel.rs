@@ -1,0 +1,197 @@
+//! In-process channel transport: one `std::sync::mpsc` channel per
+//! directed peer pair, the reference [`Transport`] substrate.
+//!
+//! Messages travel as owned `Vec<Packet>` — no serialization — so this
+//! is the fastest substrate and the one the conformance suite leans on
+//! as the cross-check for the byte-level ones (shmem, TCP). Round
+//! discipline is still enforced: a message tagged with the wrong round
+//! or port is a typed rejection, exactly like the framed transports.
+
+use super::{LocalBarrier, Transport, TransportError};
+use crate::net::payload::Packet;
+use crate::net::sim::ProcId;
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+struct WireMsg {
+    round: u32,
+    port: u32,
+    rows: Vec<Packet>,
+}
+
+/// One rank's endpoint of an mpsc mesh built by
+/// [`ChannelTransport::mesh`].
+pub struct ChannelTransport {
+    rank: ProcId,
+    procs: Vec<ProcId>,
+    txs: HashMap<ProcId, Sender<WireMsg>>,
+    rxs: HashMap<ProcId, Receiver<WireMsg>>,
+    barrier: Arc<LocalBarrier>,
+    timeout: Duration,
+}
+
+impl ChannelTransport {
+    /// Build a full mesh over `procs`: one endpoint per rank, connected
+    /// by a dedicated channel per directed pair, sharing one round
+    /// barrier. Every recv and barrier is bounded by `timeout`.
+    pub fn mesh(procs: &[ProcId], timeout: Duration) -> Vec<ChannelTransport> {
+        let barrier = Arc::new(LocalBarrier::new(procs.len()));
+        // senders[dst][src] / receivers[dst][src]
+        let mut rx_for: HashMap<ProcId, HashMap<ProcId, Receiver<WireMsg>>> =
+            procs.iter().map(|&p| (p, HashMap::new())).collect();
+        let mut tx_for: HashMap<ProcId, HashMap<ProcId, Sender<WireMsg>>> =
+            procs.iter().map(|&p| (p, HashMap::new())).collect();
+        for &src in procs {
+            for &dst in procs {
+                if src == dst {
+                    continue;
+                }
+                let (tx, rx) = mpsc::channel();
+                tx_for.get_mut(&src).unwrap().insert(dst, tx);
+                rx_for.get_mut(&dst).unwrap().insert(src, rx);
+            }
+        }
+        procs
+            .iter()
+            .map(|&rank| ChannelTransport {
+                rank,
+                procs: procs.to_vec(),
+                txs: tx_for.remove(&rank).unwrap(),
+                rxs: rx_for.remove(&rank).unwrap(),
+                barrier: barrier.clone(),
+                timeout,
+            })
+            .collect()
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn rank(&self) -> ProcId {
+        self.rank
+    }
+
+    fn peers(&self) -> &[ProcId] {
+        &self.procs
+    }
+
+    fn send(
+        &mut self,
+        round: u32,
+        port: u32,
+        dst: ProcId,
+        rows: &[Packet],
+    ) -> Result<(), TransportError> {
+        let tx = self
+            .txs
+            .get(&dst)
+            .ok_or(TransportError::PeerClosed { round, peer: dst })?;
+        tx.send(WireMsg {
+            round,
+            port,
+            rows: rows.to_vec(),
+        })
+        .map_err(|_| TransportError::PeerClosed { round, peer: dst })
+    }
+
+    fn recv(&mut self, round: u32, port: u32, src: ProcId) -> Result<Vec<Packet>, TransportError> {
+        let rx = self
+            .rxs
+            .get(&src)
+            .ok_or(TransportError::PeerClosed { round, peer: src })?;
+        let msg = rx.recv_timeout(self.timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => TransportError::Timeout {
+                round,
+                peer: src,
+                waited: self.timeout,
+            },
+            RecvTimeoutError::Disconnected => TransportError::PeerClosed { round, peer: src },
+        })?;
+        if msg.round != round {
+            return Err(TransportError::OutOfOrder {
+                peer: src,
+                expected_round: round,
+                got_round: msg.round,
+            });
+        }
+        if msg.port != port {
+            return Err(TransportError::PortMismatch {
+                peer: src,
+                round,
+                expected_port: port,
+                got_port: msg.port,
+            });
+        }
+        Ok(msg.rows)
+    }
+
+    fn barrier(&mut self, round: u32) -> Result<(), TransportError> {
+        self.barrier.wait(self.timeout).map_err(|waited| {
+            // No single peer to blame for a missed barrier; report the
+            // lowest other rank as the representative.
+            let peer = self
+                .procs
+                .iter()
+                .copied()
+                .find(|&p| p != self.rank)
+                .unwrap_or(self.rank);
+            TransportError::Timeout {
+                round,
+                peer,
+                waited,
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_two_ranks() {
+        let mut mesh = ChannelTransport::mesh(&[0, 1], Duration::from_secs(2));
+        let mut t1 = mesh.pop().unwrap();
+        let mut t0 = mesh.pop().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                t0.send(0, 0, 1, &[vec![1, 2], vec![3, 4]]).unwrap();
+                t0.barrier(0).unwrap();
+            });
+            s.spawn(move || {
+                let rows = t1.recv(0, 0, 0).unwrap();
+                assert_eq!(rows, vec![vec![1, 2], vec![3, 4]]);
+                t1.barrier(0).unwrap();
+            });
+        });
+    }
+
+    #[test]
+    fn wrong_round_is_out_of_order() {
+        let mut mesh = ChannelTransport::mesh(&[0, 1], Duration::from_secs(2));
+        let mut t1 = mesh.pop().unwrap();
+        let mut t0 = mesh.pop().unwrap();
+        t0.send(7, 0, 1, &[vec![9]]).unwrap();
+        match t1.recv(0, 0, 0) {
+            Err(TransportError::OutOfOrder {
+                expected_round: 0,
+                got_round: 7,
+                ..
+            }) => {}
+            other => panic!("expected OutOfOrder, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dropped_peer_is_typed_not_a_hang() {
+        let mut mesh = ChannelTransport::mesh(&[0, 1], Duration::from_millis(100));
+        let t1 = mesh.pop().unwrap();
+        let mut t0 = mesh.pop().unwrap();
+        drop(t1);
+        match t0.recv(0, 0, 1) {
+            Err(TransportError::PeerClosed { peer: 1, .. }) => {}
+            other => panic!("expected PeerClosed, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,348 @@
+//! Pluggable peer-to-peer transports for decentralized Plan execution.
+//!
+//! The paper's setting has **no central processor**: each of the `N`
+//! participants executes its slice of the schedule and exchanges packets
+//! directly with its peers. [`Transport`] is the substrate contract the
+//! [`peer`](crate::net::peer) executor runs on: round-synchronous
+//! [`send`](Transport::send)/[`recv`](Transport::recv) per port, peer
+//! addressing by [`ProcId`], and a [`barrier`](Transport::barrier) per
+//! round (the synchronous-round assumption of the cost model — `C1`
+//! counts barriers, `C2` counts the per-round maximum message size).
+//!
+//! Three implementations ship:
+//!
+//! * [`channel::ChannelTransport`] — in-process `std::sync::mpsc`
+//!   channels between threads; the reference substrate tests run on.
+//! * [`shmem::ShmemTransport`] — single-producer/single-consumer
+//!   shared-memory byte rings per directed pair, carrying the same wire
+//!   frames as TCP (lock-free: atomic head/tail cursors over one shared
+//!   buffer).
+//! * [`tcp::TcpTransport`] — framed TCP sockets over a full mesh,
+//!   reusing the `server.rs` wire discipline: the 40-byte
+//!   [`FrameHeader`](crate::net::payload::FrameHeader) with its hostile
+//!   caps, read timeouts instead of unbounded blocking, and per-stream
+//!   FIFO delivery.
+//!
+//! Every failure is a typed [`TransportError`] — a dropped peer surfaces
+//! as [`TransportError::PeerClosed`] or a bounded
+//! [`TransportError::Timeout`], never a hang; a frame for the wrong
+//! round is [`TransportError::OutOfOrder`] (the schedule is known a
+//! priori — Remark 1 — so mis-sequenced traffic is a protocol violation,
+//! not something to buffer).
+
+pub mod channel;
+pub mod shmem;
+pub mod tcp;
+
+pub use channel::ChannelTransport;
+pub use shmem::ShmemTransport;
+pub use tcp::{TcpTransport, BARRIER_PORT};
+
+use crate::net::payload::Packet;
+use crate::net::sim::ProcId;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Which transport substrate peer execution runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TransportKind {
+    /// In-process `mpsc` channels (threads).
+    Channel,
+    /// Shared-memory SPSC ring buffers (threads).
+    SharedMem,
+    /// Framed TCP sockets (threads or real processes).
+    Tcp,
+}
+
+impl TransportKind {
+    /// All substrates, for conformance sweeps.
+    pub const ALL: [TransportKind; 3] =
+        [TransportKind::Channel, TransportKind::SharedMem, TransportKind::Tcp];
+
+    /// The substrate requested through the `DCE_TRANSPORT` environment
+    /// variable (`channel` | `shmem` | `tcp`), if set and valid.
+    pub fn from_env() -> Option<TransportKind> {
+        std::env::var("DCE_TRANSPORT").ok()?.parse().ok()
+    }
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "channel" | "mpsc" => TransportKind::Channel,
+            "shmem" | "shm" | "shared-mem" => TransportKind::SharedMem,
+            "tcp" => TransportKind::Tcp,
+            other => anyhow::bail!("unknown transport {other:?} (channel|shmem|tcp)"),
+        })
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TransportKind::Channel => "channel",
+            TransportKind::SharedMem => "shmem",
+            TransportKind::Tcp => "tcp",
+        })
+    }
+}
+
+/// Everything a transport can fail with — typed, so the coordinator's
+/// unified error surface ([`Error::Transport`](crate::Error)) can route
+/// it, and bounded, so a lost peer never hangs the executor.
+#[derive(Debug)]
+pub enum TransportError {
+    /// No traffic from `peer` within the recv/barrier timeout.
+    Timeout {
+        round: u32,
+        peer: ProcId,
+        waited: Duration,
+    },
+    /// `peer` closed its side (crashed, exited, or dropped early).
+    PeerClosed { round: u32, peer: ProcId },
+    /// A frame tagged for a different round than the one the schedule
+    /// expects — mis-sequenced delivery is rejected, never buffered.
+    OutOfOrder {
+        peer: ProcId,
+        expected_round: u32,
+        got_round: u32,
+    },
+    /// A frame on an unexpected port within the right round.
+    PortMismatch {
+        peer: ProcId,
+        round: u32,
+        expected_port: u32,
+        got_port: u32,
+    },
+    /// A malformed or hostile frame (bad magic, oversized dimensions —
+    /// the `FrameHeader` caps — or a payload that fails to decode).
+    Frame { peer: ProcId, detail: String },
+    /// A message larger than the shared-memory ring can ever hold.
+    RingOverflow { need: usize, capacity: usize },
+    /// Socket-level failure underneath the framing.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Timeout {
+                round,
+                peer,
+                waited,
+            } => write!(
+                f,
+                "transport timeout: no traffic from peer {peer} for round {round} within {waited:?}"
+            ),
+            TransportError::PeerClosed { round, peer } => {
+                write!(f, "peer {peer} closed the connection during round {round}")
+            }
+            TransportError::OutOfOrder {
+                peer,
+                expected_round,
+                got_round,
+            } => write!(
+                f,
+                "out-of-order delivery from peer {peer}: expected round {expected_round}, got round {got_round}"
+            ),
+            TransportError::PortMismatch {
+                peer,
+                round,
+                expected_port,
+                got_port,
+            } => write!(
+                f,
+                "port mismatch from peer {peer} in round {round}: expected port {expected_port}, got {got_port}"
+            ),
+            TransportError::Frame { peer, detail } => {
+                write!(f, "bad frame from peer {peer}: {detail}")
+            }
+            TransportError::RingOverflow { need, capacity } => write!(
+                f,
+                "message of {need} bytes exceeds the {capacity}-byte ring capacity"
+            ),
+            TransportError::Io(e) => write!(f, "transport i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e)
+    }
+}
+
+/// One rank's endpoint of a round-synchronous peer mesh.
+///
+/// The contract mirrors the paper's network model: per round, a
+/// processor issues at most `p` sends and `p` receives, each addressed
+/// by peer [`ProcId`] and a per-source port number, then crosses the
+/// round [`barrier`](Transport::barrier). Delivery between one ordered
+/// peer pair is FIFO; rounds never interleave (a frame for round `t+1`
+/// arriving while `t` is expected is a typed
+/// [`OutOfOrder`](TransportError::OutOfOrder) rejection). All blocking
+/// calls are bounded by the transport's recv timeout.
+pub trait Transport: Send {
+    /// This endpoint's processor id.
+    fn rank(&self) -> ProcId;
+
+    /// Every participant in the mesh (including this rank), ascending.
+    fn peers(&self) -> &[ProcId];
+
+    /// Ship `rows` to `dst` through send-port `port` for round `round`.
+    fn send(
+        &mut self,
+        round: u32,
+        port: u32,
+        dst: ProcId,
+        rows: &[Packet],
+    ) -> Result<(), TransportError>;
+
+    /// Receive the message the schedule expects from `src` on `port` in
+    /// `round`. Blocks at most the transport's timeout.
+    fn recv(&mut self, round: u32, port: u32, src: ProcId) -> Result<Vec<Packet>, TransportError>;
+
+    /// Round barrier: returns once every rank has entered the barrier
+    /// for `round` (bounded by the timeout).
+    fn barrier(&mut self, round: u32) -> Result<(), TransportError>;
+}
+
+/// Build a full in-process mesh of `procs.len()` endpoints of the given
+/// kind — one boxed [`Transport`] per rank, in `procs` order. The TCP
+/// flavor binds ephemeral loopback listeners and connects them; see
+/// [`tcp::TcpTransport::process_mesh`] for real multi-process use.
+///
+/// `max_frame_bytes` sizes the shared-memory rings (largest serialized
+/// message; ignored by the other kinds); `timeout` bounds every recv
+/// and barrier.
+pub fn mesh(
+    kind: TransportKind,
+    procs: &[ProcId],
+    ports: usize,
+    max_frame_bytes: usize,
+    timeout: Duration,
+) -> anyhow::Result<Vec<Box<dyn Transport>>> {
+    Ok(match kind {
+        TransportKind::Channel => channel::ChannelTransport::mesh(procs, timeout)
+            .into_iter()
+            .map(|t| Box::new(t) as Box<dyn Transport>)
+            .collect(),
+        TransportKind::SharedMem => {
+            shmem::ShmemTransport::mesh(procs, ports, max_frame_bytes, timeout)
+                .into_iter()
+                .map(|t| Box::new(t) as Box<dyn Transport>)
+                .collect()
+        }
+        TransportKind::Tcp => tcp::TcpTransport::loopback_mesh(procs, timeout)?
+            .into_iter()
+            .map(|t| Box::new(t) as Box<dyn Transport>)
+            .collect(),
+    })
+}
+
+/// A reusable generation-counting barrier with a bounded wait — the
+/// in-process round barrier shared by the channel and shared-memory
+/// transports (`std::sync::Barrier` blocks forever when a peer dies;
+/// this one surfaces a typed timeout instead).
+pub(crate) struct LocalBarrier {
+    n: usize,
+    state: Mutex<(u64, usize)>, // (generation, arrived)
+    cv: Condvar,
+}
+
+impl LocalBarrier {
+    pub(crate) fn new(n: usize) -> Self {
+        LocalBarrier {
+            n,
+            state: Mutex::new((0, 0)),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Wait until all `n` ranks arrive, or `timeout` elapses.
+    pub(crate) fn wait(&self, timeout: Duration) -> Result<(), Duration> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().expect("barrier lock poisoned");
+        let gen = st.0;
+        st.1 += 1;
+        if st.1 == self.n {
+            st.0 += 1;
+            st.1 = 0;
+            self.cv.notify_all();
+            return Ok(());
+        }
+        while st.0 == gen {
+            let now = Instant::now();
+            if now >= deadline {
+                // Withdraw our arrival so a later retry (or a slow peer
+                // arriving after we error out) doesn't see a phantom.
+                st.1 = st.1.saturating_sub(1);
+                return Err(timeout);
+            }
+            let (guard, _res) = self
+                .cv
+                .wait_timeout(st, deadline - now)
+                .expect("barrier lock poisoned");
+            st = guard;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_kind_parses_and_displays() {
+        for (s, k) in [
+            ("channel", TransportKind::Channel),
+            ("mpsc", TransportKind::Channel),
+            ("shmem", TransportKind::SharedMem),
+            ("shm", TransportKind::SharedMem),
+            ("tcp", TransportKind::Tcp),
+        ] {
+            assert_eq!(s.parse::<TransportKind>().unwrap(), k);
+        }
+        assert!("carrier-pigeon".parse::<TransportKind>().is_err());
+        assert_eq!(TransportKind::SharedMem.to_string(), "shmem");
+        assert_eq!(
+            TransportKind::Tcp.to_string().parse::<TransportKind>().unwrap(),
+            TransportKind::Tcp
+        );
+    }
+
+    #[test]
+    fn local_barrier_times_out_instead_of_hanging() {
+        let b = LocalBarrier::new(2);
+        let t0 = Instant::now();
+        let err = b.wait(Duration::from_millis(50)).unwrap_err();
+        assert_eq!(err, Duration::from_millis(50));
+        assert!(t0.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn local_barrier_releases_all_ranks() {
+        let b = std::sync::Arc::new(LocalBarrier::new(3));
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let b = b.clone();
+                s.spawn(move || {
+                    for _round in 0..10 {
+                        b.wait(Duration::from_secs(5)).unwrap();
+                    }
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,415 @@
+//! Shared-memory transport: one single-producer/single-consumer byte
+//! ring per directed peer pair, carrying exactly the wire frames the
+//! TCP transport ships (40-byte [`FrameHeader`] + packed payload).
+//!
+//! The ring is the classic lock-free SPSC design: one fixed buffer, a
+//! monotonic write cursor (`head`) owned by the producer and a monotonic
+//! read cursor (`tail`) owned by the consumer, each published with
+//! `Release` and observed with `Acquire` so the byte copies are ordered
+//! against the cursor updates. Exactly one thread writes and exactly one
+//! reads per ring (the mesh hands each endpoint only its own sides), so
+//! no CAS or lock is ever needed. A `closed` flag set when the producing
+//! endpoint drops turns "peer died" into a typed
+//! [`TransportError::PeerClosed`] instead of a stuck consumer.
+
+use super::{LocalBarrier, Transport, TransportError};
+use crate::gf::kernels::SymbolLayout;
+use crate::net::payload::{
+    decode_rows_frame, encode_rows_frame, FrameHeader, FrameKind, Packet, FRAME_HEADER_LEN,
+};
+use crate::net::sim::ProcId;
+use std::cell::UnsafeCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One directed SPSC byte ring. `head`/`tail` are monotonic byte
+/// counts; the buffer index is `pos % cap`.
+struct Ring {
+    buf: UnsafeCell<Box<[u8]>>,
+    cap: usize,
+    head: AtomicUsize,
+    tail: AtomicUsize,
+    closed: AtomicBool,
+}
+
+// SAFETY: the mesh constructor gives the producing endpoint exclusive
+// write access and the consuming endpoint exclusive read access; the
+// byte ranges they touch are disjoint ([tail, head) is consumer-owned,
+// [head, tail + cap) producer-owned) and handed over by Release/Acquire
+// on the cursors.
+unsafe impl Sync for Ring {}
+
+impl Ring {
+    fn new(cap: usize) -> Ring {
+        Ring {
+            buf: UnsafeCell::new(vec![0u8; cap].into_boxed_slice()),
+            cap,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Producer side: append `bytes`, waiting for space until `deadline`.
+    fn push(&self, bytes: &[u8], deadline: Instant) -> Result<(), PushErr> {
+        if bytes.len() > self.cap {
+            return Err(PushErr::Overflow {
+                need: bytes.len(),
+                capacity: self.cap,
+            });
+        }
+        let head = self.head.load(Ordering::Relaxed);
+        loop {
+            let tail = self.tail.load(Ordering::Acquire);
+            if head - tail + bytes.len() <= self.cap {
+                break;
+            }
+            if self.closed.load(Ordering::Acquire) {
+                return Err(PushErr::Closed);
+            }
+            if Instant::now() >= deadline {
+                return Err(PushErr::Timeout);
+            }
+            std::thread::yield_now();
+        }
+        let at = head % self.cap;
+        let first = bytes.len().min(self.cap - at);
+        // SAFETY: sole producer; [head, head + len) is unpublished space
+        // the consumer cannot read until the Release store below.
+        unsafe {
+            let buf = &mut *self.buf.get();
+            buf[at..at + first].copy_from_slice(&bytes[..first]);
+            buf[..bytes.len() - first].copy_from_slice(&bytes[first..]);
+        }
+        self.head.store(head + bytes.len(), Ordering::Release);
+        Ok(())
+    }
+
+    /// Consumer side: read exactly `len` bytes, waiting until `deadline`.
+    fn pop_exact(&self, len: usize, deadline: Instant) -> Result<Vec<u8>, PopErr> {
+        if len > self.cap {
+            return Err(PopErr::Overflow {
+                need: len,
+                capacity: self.cap,
+            });
+        }
+        let tail = self.tail.load(Ordering::Relaxed);
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            if head - tail >= len {
+                break;
+            }
+            if self.closed.load(Ordering::Acquire) {
+                // Re-check after the closed flag: the producer publishes
+                // head before closing, so a final frame is never lost.
+                if self.head.load(Ordering::Acquire) - tail < len {
+                    return Err(PopErr::Closed);
+                }
+                break;
+            }
+            if Instant::now() >= deadline {
+                return Err(PopErr::Timeout);
+            }
+            std::thread::yield_now();
+        }
+        let at = tail % self.cap;
+        let first = len.min(self.cap - at);
+        let mut out = vec![0u8; len];
+        // SAFETY: sole consumer; [tail, tail + len) was published by the
+        // producer's Release store and is not rewritten until we bump
+        // tail below.
+        unsafe {
+            let buf = &*self.buf.get();
+            out[..first].copy_from_slice(&buf[at..at + first]);
+            out[first..].copy_from_slice(&buf[..len - first]);
+        }
+        self.tail.store(tail + len, Ordering::Release);
+        Ok(out)
+    }
+}
+
+enum PushErr {
+    Timeout,
+    Closed,
+    Overflow { need: usize, capacity: usize },
+}
+
+enum PopErr {
+    Timeout,
+    Closed,
+    Overflow { need: usize, capacity: usize },
+}
+
+/// One rank's endpoint of a shared-memory mesh built by
+/// [`ShmemTransport::mesh`].
+pub struct ShmemTransport {
+    rank: ProcId,
+    procs: Vec<ProcId>,
+    /// Rings this endpoint produces into, by destination.
+    out: HashMap<ProcId, Arc<Ring>>,
+    /// Rings this endpoint consumes from, by source.
+    inn: HashMap<ProcId, Arc<Ring>>,
+    barrier: Arc<LocalBarrier>,
+    timeout: Duration,
+    scratch: Vec<u8>,
+}
+
+impl ShmemTransport {
+    /// Build a full mesh over `procs`. Each directed pair gets a ring
+    /// sized to hold `ports` maximal frames (`max_msg_bytes` payload
+    /// bytes each) twice over, so one round of traffic never stalls the
+    /// producer; `timeout` bounds every wait.
+    pub fn mesh(
+        procs: &[ProcId],
+        ports: usize,
+        max_msg_bytes: usize,
+        timeout: Duration,
+    ) -> Vec<ShmemTransport> {
+        let frame = FRAME_HEADER_LEN + max_msg_bytes;
+        let cap = (2 * ports.max(1) * frame).max(4096);
+        let barrier = Arc::new(LocalBarrier::new(procs.len()));
+        let mut rings: HashMap<(ProcId, ProcId), Arc<Ring>> = HashMap::new();
+        for &src in procs {
+            for &dst in procs {
+                if src != dst {
+                    rings.insert((src, dst), Arc::new(Ring::new(cap)));
+                }
+            }
+        }
+        procs
+            .iter()
+            .map(|&rank| ShmemTransport {
+                rank,
+                procs: procs.to_vec(),
+                out: procs
+                    .iter()
+                    .filter(|&&p| p != rank)
+                    .map(|&p| (p, rings[&(rank, p)].clone()))
+                    .collect(),
+                inn: procs
+                    .iter()
+                    .filter(|&&p| p != rank)
+                    .map(|&p| (p, rings[&(p, rank)].clone()))
+                    .collect(),
+                barrier: barrier.clone(),
+                timeout,
+                scratch: Vec::new(),
+            })
+            .collect()
+    }
+
+    fn deadline(&self) -> Instant {
+        Instant::now() + self.timeout
+    }
+}
+
+impl Drop for ShmemTransport {
+    fn drop(&mut self) {
+        // Mark both sides: consumers of our rings learn no more bytes
+        // come, producers into us learn nobody will drain them — a dead
+        // peer becomes a typed PeerClosed, not a stuck spin.
+        for ring in self.out.values().chain(self.inn.values()) {
+            ring.closed.store(true, Ordering::Release);
+        }
+    }
+}
+
+/// Peer messages ride the serving tier's frame format: `tenant` carries
+/// the source rank and `req_id` packs `(round << 32) | port`, so the
+/// consumer can verify round discipline from the header alone.
+fn peer_req_id(round: u32, port: u32) -> u64 {
+    ((round as u64) << 32) | port as u64
+}
+
+impl Transport for ShmemTransport {
+    fn rank(&self) -> ProcId {
+        self.rank
+    }
+
+    fn peers(&self) -> &[ProcId] {
+        &self.procs
+    }
+
+    fn send(
+        &mut self,
+        round: u32,
+        port: u32,
+        dst: ProcId,
+        rows: &[Packet],
+    ) -> Result<(), TransportError> {
+        let ring = self
+            .out
+            .get(&dst)
+            .cloned()
+            .ok_or(TransportError::PeerClosed { round, peer: dst })?;
+        self.scratch.clear();
+        encode_rows_frame(
+            &mut self.scratch,
+            FrameKind::Request,
+            SymbolLayout::U64,
+            self.rank as u64,
+            peer_req_id(round, port),
+            rows,
+        )
+        .map_err(|e| TransportError::Frame {
+            peer: dst,
+            detail: format!("{e:#}"),
+        })?;
+        match ring.push(&self.scratch, self.deadline()) {
+            Ok(()) => Ok(()),
+            Err(PushErr::Timeout) => Err(TransportError::Timeout {
+                round,
+                peer: dst,
+                waited: self.timeout,
+            }),
+            Err(PushErr::Closed) => Err(TransportError::PeerClosed { round, peer: dst }),
+            Err(PushErr::Overflow { need, capacity }) => {
+                Err(TransportError::RingOverflow { need, capacity })
+            }
+        }
+    }
+
+    fn recv(&mut self, round: u32, port: u32, src: ProcId) -> Result<Vec<Packet>, TransportError> {
+        let ring = self
+            .inn
+            .get(&src)
+            .cloned()
+            .ok_or(TransportError::PeerClosed { round, peer: src })?;
+        let deadline = self.deadline();
+        let map_pop = |e: PopErr| match e {
+            PopErr::Timeout => TransportError::Timeout {
+                round,
+                peer: src,
+                waited: self.timeout,
+            },
+            PopErr::Closed => TransportError::PeerClosed { round, peer: src },
+            PopErr::Overflow { need, capacity } => TransportError::RingOverflow { need, capacity },
+        };
+        let head_bytes = ring.pop_exact(FRAME_HEADER_LEN, deadline).map_err(map_pop)?;
+        let head_arr: &[u8; FRAME_HEADER_LEN] =
+            head_bytes.as_slice().try_into().expect("exact header read");
+        let header = FrameHeader::parse(head_arr).map_err(|e| TransportError::Frame {
+            peer: src,
+            detail: format!("{e:#}"),
+        })?;
+        let payload = ring
+            .pop_exact(header.payload_len as usize, deadline)
+            .map_err(map_pop)?;
+        check_peer_frame(&header, round, port, src)?;
+        decode_rows_frame(&header, &payload).map_err(|e| TransportError::Frame {
+            peer: src,
+            detail: format!("{e:#}"),
+        })
+    }
+
+    fn barrier(&mut self, round: u32) -> Result<(), TransportError> {
+        self.barrier.wait(self.timeout).map_err(|waited| {
+            let peer = self
+                .procs
+                .iter()
+                .copied()
+                .find(|&p| p != self.rank)
+                .unwrap_or(self.rank);
+            TransportError::Timeout {
+                round,
+                peer,
+                waited,
+            }
+        })
+    }
+}
+
+/// Shared header validation for the framed transports: right source,
+/// right round, right port.
+pub(super) fn check_peer_frame(
+    header: &FrameHeader,
+    round: u32,
+    port: u32,
+    src: ProcId,
+) -> Result<(), TransportError> {
+    if header.tenant != src as u64 {
+        return Err(TransportError::Frame {
+            peer: src,
+            detail: format!("frame claims source rank {}, stream is from {src}", header.tenant),
+        });
+    }
+    let got_round = (header.req_id >> 32) as u32;
+    let got_port = header.req_id as u32;
+    if got_round != round {
+        return Err(TransportError::OutOfOrder {
+            peer: src,
+            expected_round: round,
+            got_round,
+        });
+    }
+    if got_port != port {
+        return Err(TransportError::PortMismatch {
+            peer: src,
+            round,
+            expected_port: port,
+            got_port,
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_roundtrip_with_wraparound() {
+        let ring = Ring::new(64);
+        let deadline = Instant::now() + Duration::from_secs(1);
+        for i in 0..50u8 {
+            let msg: Vec<u8> = (0..13).map(|j| i.wrapping_mul(7).wrapping_add(j)).collect();
+            ring.push(&msg, deadline).map_err(|_| "push").unwrap();
+            let got = ring.pop_exact(13, deadline).map_err(|_| "pop").unwrap();
+            assert_eq!(got, msg);
+        }
+    }
+
+    #[test]
+    fn roundtrip_two_ranks() {
+        let mut mesh = ShmemTransport::mesh(&[0, 1], 1, 1 << 12, Duration::from_secs(2));
+        let mut t1 = mesh.pop().unwrap();
+        let mut t0 = mesh.pop().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                t0.send(3, 1, 1, &[vec![5, 6, 7], vec![8, 9, 10]]).unwrap();
+                t0.barrier(3).unwrap();
+            });
+            s.spawn(move || {
+                let rows = t1.recv(3, 1, 0).unwrap();
+                assert_eq!(rows, vec![vec![5, 6, 7], vec![8, 9, 10]]);
+                t1.barrier(3).unwrap();
+            });
+        });
+    }
+
+    #[test]
+    fn dropped_peer_is_typed_not_a_hang() {
+        let mut mesh = ShmemTransport::mesh(&[0, 1], 1, 1 << 12, Duration::from_millis(200));
+        let t1 = mesh.pop().unwrap();
+        let mut t0 = mesh.pop().unwrap();
+        drop(t1);
+        match t0.recv(0, 0, 1) {
+            Err(TransportError::PeerClosed { peer: 1, .. }) => {}
+            other => panic!("expected PeerClosed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_message_is_ring_overflow() {
+        let mut mesh = ShmemTransport::mesh(&[0, 1], 1, 16, Duration::from_millis(200));
+        let _t1 = mesh.pop().unwrap();
+        let mut t0 = mesh.pop().unwrap();
+        let huge: Packet = vec![1; 1 << 12];
+        match t0.send(0, 0, 1, &[huge]) {
+            Err(TransportError::RingOverflow { .. }) => {}
+            other => panic!("expected RingOverflow, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,383 @@
+//! Framed TCP transport: a full peer mesh of sockets speaking the
+//! serving tier's wire discipline — every message is a 40-byte
+//! [`FrameHeader`] plus packed payload, parsed through the same
+//! hostile-input caps as `coordinator::server`, with read timeouts
+//! instead of unbounded blocking.
+//!
+//! Mesh formation uses the classic rank convention: rank `i` dials
+//! every lower rank and accepts from every higher rank, then identifies
+//! itself with a hello frame (`req_id = u64::MAX`, `tenant = rank`).
+//! One stream serves each unordered pair; kernel FIFO plus the
+//! round-synchronous schedule keeps frames in order, and anything
+//! mis-sequenced is a typed [`TransportError::OutOfOrder`] rejection.
+//!
+//! Peer frames reuse the header fields as: `tenant` = source rank,
+//! `req_id` = `(round << 32) | port`, with the reserved port
+//! [`BARRIER_PORT`] marking empty round-barrier frames.
+
+use super::shmem::check_peer_frame;
+use super::{Transport, TransportError};
+use crate::gf::kernels::SymbolLayout;
+use crate::net::payload::{
+    decode_rows_frame, encode_rows_frame, FrameHeader, FrameKind, Packet, FRAME_HEADER_LEN,
+};
+use crate::net::sim::ProcId;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+/// The port number reserved for round-barrier frames (no payload).
+pub const BARRIER_PORT: u32 = 0xFFFF_FFFF;
+
+/// The `req_id` of the mesh-formation hello frame.
+const HELLO_REQ_ID: u64 = u64::MAX;
+
+fn peer_req_id(round: u32, port: u32) -> u64 {
+    ((round as u64) << 32) | port as u64
+}
+
+fn map_io(e: std::io::Error, round: u32, peer: ProcId, timeout: Duration) -> TransportError {
+    use std::io::ErrorKind::*;
+    match e.kind() {
+        WouldBlock | TimedOut => TransportError::Timeout {
+            round,
+            peer,
+            waited: timeout,
+        },
+        UnexpectedEof | ConnectionReset | ConnectionAborted | BrokenPipe => {
+            TransportError::PeerClosed { round, peer }
+        }
+        _ => TransportError::Io(e),
+    }
+}
+
+/// Read one complete frame — header (parsed through the serving tier's
+/// hostile caps) and payload — from `stream`, blocking at most
+/// `timeout`. This is the exact code path [`TcpTransport::recv`] uses;
+/// it is public so the conformance suite can aim raw hostile bytes at
+/// it.
+pub fn read_frame_from(
+    stream: &mut TcpStream,
+    peer: ProcId,
+    round: u32,
+    timeout: Duration,
+) -> Result<(FrameHeader, Vec<u8>), TransportError> {
+    stream.set_read_timeout(Some(timeout))?;
+    let mut head = [0u8; FRAME_HEADER_LEN];
+    stream
+        .read_exact(&mut head)
+        .map_err(|e| map_io(e, round, peer, timeout))?;
+    let header = FrameHeader::parse(&head).map_err(|e| TransportError::Frame {
+        peer,
+        detail: format!("{e:#}"),
+    })?;
+    let mut payload = vec![0u8; header.payload_len as usize];
+    stream
+        .read_exact(&mut payload)
+        .map_err(|e| map_io(e, round, peer, timeout))?;
+    Ok((header, payload))
+}
+
+/// One rank's endpoint of a TCP mesh.
+pub struct TcpTransport {
+    rank: ProcId,
+    procs: Vec<ProcId>,
+    streams: HashMap<ProcId, TcpStream>,
+    timeout: Duration,
+    scratch: Vec<u8>,
+}
+
+impl TcpTransport {
+    /// Form this rank's endpoint of a full mesh: dial every rank below
+    /// `rank` at its address (retrying until `timeout`, so processes
+    /// may start in any order), accept every rank above from
+    /// `listener`, and exchange hello frames. `addrs` must map every
+    /// participant; `listener` must be bound at `addrs[rank]`.
+    ///
+    /// This is the real multi-process entry point —
+    /// `examples/peer_encode.rs` gives each forked process a rank and
+    /// the shared address table.
+    pub fn connect(
+        rank: ProcId,
+        listener: TcpListener,
+        addrs: &[(ProcId, SocketAddr)],
+        timeout: Duration,
+    ) -> anyhow::Result<TcpTransport> {
+        let deadline = Instant::now() + timeout;
+        let mut procs: Vec<ProcId> = addrs.iter().map(|&(p, _)| p).collect();
+        procs.sort_unstable();
+        anyhow::ensure!(
+            procs.contains(&rank),
+            "rank {rank} is not in the address table"
+        );
+        let mut streams = HashMap::new();
+        // Dial down...
+        for &(peer, addr) in addrs {
+            if peer >= rank {
+                continue;
+            }
+            let stream = loop {
+                match TcpStream::connect(addr) {
+                    Ok(s) => break s,
+                    Err(e) => {
+                        anyhow::ensure!(
+                            Instant::now() < deadline,
+                            "connecting to rank {peer} at {addr} timed out: {e}"
+                        );
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            };
+            stream.set_nodelay(true)?;
+            let mut hello = Vec::new();
+            encode_rows_frame(
+                &mut hello,
+                FrameKind::Request,
+                SymbolLayout::U64,
+                rank as u64,
+                HELLO_REQ_ID,
+                &[],
+            )?;
+            let mut stream = stream;
+            stream.write_all(&hello)?;
+            streams.insert(peer, stream);
+        }
+        // ...accept up. `accept` has no native timeout, so poll
+        // nonblocking against the same deadline as the dial side.
+        let expect_above = procs.iter().filter(|&&p| p > rank).count();
+        listener.set_nonblocking(true)?;
+        for _ in 0..expect_above {
+            let (mut stream, _) = loop {
+                match listener.accept() {
+                    Ok(conn) => break conn,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        anyhow::ensure!(
+                            Instant::now() < deadline,
+                            "mesh formation timed out accepting peers"
+                        );
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            };
+            stream.set_nonblocking(false)?;
+            stream.set_nodelay(true)?;
+            let (header, _payload) = read_frame_from(&mut stream, usize::MAX, 0, timeout)
+                .map_err(|e| anyhow::anyhow!("mesh hello failed: {e}"))?;
+            anyhow::ensure!(
+                header.req_id == HELLO_REQ_ID,
+                "expected a hello frame, got req_id {:#x}",
+                header.req_id
+            );
+            let peer = header.tenant as ProcId;
+            anyhow::ensure!(
+                procs.contains(&peer) && peer > rank,
+                "unexpected hello from rank {peer}"
+            );
+            anyhow::ensure!(
+                !streams.contains_key(&peer),
+                "duplicate hello from rank {peer}"
+            );
+            streams.insert(peer, stream);
+        }
+        Ok(TcpTransport {
+            rank,
+            procs,
+            streams,
+            timeout,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Build a whole mesh over loopback for in-process tests: bind one
+    /// ephemeral listener per rank, then form all endpoints on threads
+    /// (the dial/accept handshake requires every rank to make
+    /// progress concurrently). Endpoints return in `procs` order.
+    pub fn loopback_mesh(
+        procs: &[ProcId],
+        timeout: Duration,
+    ) -> anyhow::Result<Vec<TcpTransport>> {
+        let mut listeners = Vec::new();
+        let mut addrs = Vec::new();
+        for &p in procs {
+            let l = TcpListener::bind("127.0.0.1:0")?;
+            addrs.push((p, l.local_addr()?));
+            listeners.push(l);
+        }
+        let results: Vec<anyhow::Result<TcpTransport>> = std::thread::scope(|s| {
+            let handles: Vec<_> = procs
+                .iter()
+                .zip(listeners)
+                .map(|(&rank, listener)| {
+                    let addrs = &addrs;
+                    s.spawn(move || TcpTransport::connect(rank, listener, addrs, timeout))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("mesh thread panicked"))
+                .collect()
+        });
+        results.into_iter().collect()
+    }
+
+    fn stream(&mut self, peer: ProcId, round: u32) -> Result<&mut TcpStream, TransportError> {
+        self.streams
+            .get_mut(&peer)
+            .ok_or(TransportError::PeerClosed { round, peer })
+    }
+
+    fn send_frame(
+        &mut self,
+        round: u32,
+        port: u32,
+        dst: ProcId,
+        rows: &[Packet],
+    ) -> Result<(), TransportError> {
+        self.scratch.clear();
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let res = encode_rows_frame(
+            &mut scratch,
+            FrameKind::Request,
+            SymbolLayout::U64,
+            self.rank as u64,
+            peer_req_id(round, port),
+            rows,
+        );
+        let timeout = self.timeout;
+        let out = match res {
+            Ok(()) => {
+                let stream = self.stream(dst, round)?;
+                stream.set_write_timeout(Some(timeout))?;
+                stream
+                    .write_all(&scratch)
+                    .map_err(|e| map_io(e, round, dst, timeout))
+            }
+            Err(e) => Err(TransportError::Frame {
+                peer: dst,
+                detail: format!("{e:#}"),
+            }),
+        };
+        self.scratch = scratch;
+        out
+    }
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> ProcId {
+        self.rank
+    }
+
+    fn peers(&self) -> &[ProcId] {
+        &self.procs
+    }
+
+    fn send(
+        &mut self,
+        round: u32,
+        port: u32,
+        dst: ProcId,
+        rows: &[Packet],
+    ) -> Result<(), TransportError> {
+        self.send_frame(round, port, dst, rows)
+    }
+
+    fn recv(&mut self, round: u32, port: u32, src: ProcId) -> Result<Vec<Packet>, TransportError> {
+        let timeout = self.timeout;
+        let stream = self.stream(src, round)?;
+        let (header, payload) = read_frame_from(stream, src, round, timeout)?;
+        check_peer_frame(&header, round, port, src)?;
+        decode_rows_frame(&header, &payload).map_err(|e| TransportError::Frame {
+            peer: src,
+            detail: format!("{e:#}"),
+        })
+    }
+
+    /// The TCP barrier is message-based (there is no shared memory to
+    /// count arrivals in): ship an empty barrier frame to every peer,
+    /// then collect one from each. A peer that died mid-round surfaces
+    /// as `PeerClosed`/`Timeout` here, bounded by the recv timeout.
+    fn barrier(&mut self, round: u32) -> Result<(), TransportError> {
+        let peers: Vec<ProcId> = self
+            .procs
+            .iter()
+            .copied()
+            .filter(|&p| p != self.rank)
+            .collect();
+        for &p in &peers {
+            self.send_frame(round, BARRIER_PORT, p, &[])?;
+        }
+        let timeout = self.timeout;
+        for &p in &peers {
+            let stream = self.stream(p, round)?;
+            let (header, _payload) = read_frame_from(stream, p, round, timeout)?;
+            check_peer_frame(&header, round, BARRIER_PORT, p)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_roundtrip_and_barrier() {
+        let mesh = TcpTransport::loopback_mesh(&[0, 1, 2], Duration::from_secs(5)).unwrap();
+        let results: Vec<Vec<Packet>> = std::thread::scope(|s| {
+            let handles: Vec<_> = mesh
+                .into_iter()
+                .map(|mut t| {
+                    s.spawn(move || {
+                        let rank = t.rank();
+                        // Ring: each rank sends to (rank+1) % 3.
+                        let dst = (rank + 1) % 3;
+                        let src = (rank + 2) % 3;
+                        t.send(0, 0, dst, &[vec![rank as u64, 42]]).unwrap();
+                        let got = t.recv(0, 0, src).unwrap();
+                        t.barrier(0).unwrap();
+                        got
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results[0], vec![vec![2, 42]]);
+        assert_eq!(results[1], vec![vec![0, 42]]);
+        assert_eq!(results[2], vec![vec![1, 42]]);
+    }
+
+    #[test]
+    fn hostile_header_is_rejected_by_caps() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let attacker = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // A header promising 2^30 rows — the serving tier's caps
+            // must reject it before any allocation happens.
+            let mut buf = Vec::new();
+            buf.extend_from_slice(b"DCE1");
+            buf.push(2); // Request
+            buf.push(8); // u64 lane
+            buf.extend_from_slice(&[0; 2]);
+            buf.extend_from_slice(&0u64.to_le_bytes()); // tenant
+            buf.extend_from_slice(&0u64.to_le_bytes()); // req_id
+            buf.extend_from_slice(&(1u32 << 30).to_le_bytes()); // rows
+            buf.extend_from_slice(&1u32.to_le_bytes()); // width
+            buf.extend_from_slice(&8u32.to_le_bytes()); // payload_len
+            buf.extend_from_slice(&[0; 4]);
+            s.write_all(&buf).unwrap();
+            s
+        });
+        let (mut server_side, _) = listener.accept().unwrap();
+        let err = read_frame_from(&mut server_side, 0, 0, Duration::from_secs(2)).unwrap_err();
+        match err {
+            TransportError::Frame { detail, .. } => {
+                assert!(detail.contains("too large"), "unexpected detail: {detail}")
+            }
+            other => panic!("expected Frame error, got {other:?}"),
+        }
+        drop(attacker.join().unwrap());
+    }
+}

@@ -1,0 +1,41 @@
+//! The supported public surface, in one import.
+//!
+//! ```no_run
+//! use dce::prelude::*;
+//!
+//! let job = EncodeJob::synthetic(JobConfig::default())?;
+//! let report = job.run(&ExecOptions::new())?;
+//! # Ok::<(), Box<dyn std::error::Error>>(())
+//! ```
+//!
+//! Everything here follows the crate's deprecation policy (see the
+//! crate docs' *Stable vs internal surface*); examples import only
+//! from this module. Internal layers (plan IR, collectives, kernels,
+//! transports) stay behind their full paths on purpose — reaching for
+//! them is the signal you've left the supported surface.
+
+pub use crate::coordinator::{
+    BatchPolicy, DegradedInfo, EncodeJob, EncodeOutcome, EncodeRequest, EncodeResponse,
+    EncodeService, Engine, ExecOptions, JobConfig, JobReport, Metrics, PlanCache, RecoveryStats,
+    ServeOptions, ServeRejection, WireClient, WireServer,
+};
+pub use crate::error::{Error, RecoveryShortfall};
+pub use crate::gf::{AnyField, Field, Gf2e, GfPrime, IsaRequest, Mat};
+pub use crate::net::transport::TransportKind;
+pub use crate::net::{CostModel, FaultSpec, Packet, SimReport, POST_RUN};
+
+// Teaching surface: the building blocks the `examples/` walk through
+// (codes, frameworks, the round simulator, peer execution). Stable in
+// spirit — they mirror the paper — but their signatures track the
+// engine more closely than the job/service API above.
+pub use crate::codes::{GrsCode, LagrangeCode};
+pub use crate::collectives::TreeReduce;
+pub use crate::coordinator::wire_layout;
+pub use crate::framework::{A2aAlgo, NonSystematicEncode, SystematicEncode};
+pub use crate::gf::SymbolLayout;
+pub use crate::net::peer::{
+    execute_shard, merge_stats, run_peer, spawn_local, PeerRun, PeerStats, ShardedPlan,
+};
+pub use crate::net::transport::TcpTransport;
+pub use crate::net::{pkt_scale, run, Collective, ProcId, Sim};
+pub use crate::util::Rng;

@@ -2,7 +2,7 @@
 //! service, and config-file round trips.
 
 use dce::coordinator::config::{CodeKind, VerifyMode};
-use dce::coordinator::{EncodeJob, EncodeService, JobConfig};
+use dce::coordinator::{EncodeJob, EncodeService, ExecOptions, JobConfig};
 use dce::framework::{AlgoRequest, PlanChoice};
 use dce::gf::{Field, GfPrime};
 use std::path::Path;
@@ -28,7 +28,7 @@ fn jobs_across_the_config_matrix() {
             algorithm: algo,
             ..JobConfig::default()
         };
-        let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+        let rep = EncodeJob::synthetic(cfg).unwrap().run(&ExecOptions::new()).unwrap();
         assert_eq!(
             rep.verified,
             Some(true),
@@ -48,7 +48,7 @@ fn auto_planner_is_cost_and_structure_aware() {
         beta: 1.0,
         ..JobConfig::default()
     };
-    let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+    let rep = EncodeJob::synthetic(cfg).unwrap().run(&ExecOptions::new()).unwrap();
     assert_eq!(rep.choice, PlanChoice::RsSpecific);
     assert_eq!(rep.verified, Some(true));
 
@@ -59,7 +59,7 @@ fn auto_planner_is_cost_and_structure_aware() {
         w: 1,
         ..JobConfig::default()
     };
-    let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+    let rep = EncodeJob::synthetic(cfg).unwrap().run(&ExecOptions::new()).unwrap();
     assert_eq!(rep.choice, PlanChoice::Universal);
 
     // Unstructured points → universal is the only specific-free choice.
@@ -70,7 +70,7 @@ fn auto_planner_is_cost_and_structure_aware() {
         code: CodeKind::RsPlain,
         ..JobConfig::default()
     };
-    let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+    let rep = EncodeJob::synthetic(cfg).unwrap().run(&ExecOptions::new()).unwrap();
     assert_eq!(rep.choice, PlanChoice::Universal);
 }
 
@@ -85,7 +85,7 @@ fn config_file_roundtrip() {
     )
     .unwrap();
     let cfg = JobConfig::load(&path).unwrap();
-    let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+    let rep = EncodeJob::synthetic(cfg).unwrap().run(&ExecOptions::new()).unwrap();
     assert_eq!(rep.verified, Some(true));
 }
 
@@ -144,6 +144,6 @@ fn pjrt_verified_job_when_artifacts_present() {
         verify: VerifyMode::Pjrt,
         ..JobConfig::default()
     };
-    let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+    let rep = EncodeJob::synthetic(cfg).unwrap().run(&ExecOptions::new()).unwrap();
     assert_eq!(rep.verified, Some(true));
 }

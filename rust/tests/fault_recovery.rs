@@ -2,17 +2,20 @@
 //! field families, across degenerate shapes and **every failure count
 //! from 0 to R**, recovery from crashed processors must reproduce all
 //! sink outputs **bit-identically** to the healthy run — through both
-//! the live-sim (`EncodeJob::run_degraded`) and the batched-replay
-//! (`EncodeJob::run_degraded_cached` /
-//! `net::exec::replay_degraded_batch`) paths.
+//! the live-sim (`Engine::Live` + `ExecOptions::faults`) and the
+//! batched-replay (`Engine::Replay` / `net::exec::replay_degraded_batch`)
+//! paths.
 //!
 //! Also asserts the two engines produce identical failure analyses
 //! (delivered traffic, crashed/tainted sets, lost sinks) for mid-run
 //! crash-stop, dropped-link and per-round-erasure scenarios, and that
 //! unrecoverable patterns (fewer than `K` surviving coordinates) fail
-//! with a proper error on both paths instead of fabricating data.
+//! with a typed [`dce::Error::Unrecoverable`] on both paths instead of
+//! fabricating data.
 
-use dce::coordinator::{config::CodeKind, DegradedJobReport, EncodeJob, JobConfig, PlanCache};
+use dce::coordinator::{
+    config::CodeKind, DegradedInfo, EncodeJob, ExecOptions, JobConfig, JobReport, PlanCache,
+};
 use dce::framework::AlgoRequest;
 use dce::net::{FaultSpec, POST_RUN};
 
@@ -39,37 +42,56 @@ fn job_for(
     EncodeJob::synthetic(cfg).unwrap()
 }
 
+fn healthy_rows(job: &EncodeJob, cache: &PlanCache) -> Vec<Vec<u64>> {
+    job.encode(cache, &[&job.inputs], &ExecOptions::cached(cache))
+        .unwrap()
+        .coded
+        .remove(0)
+}
+
 /// Run both degraded paths under `faults` and assert full bit-identical
-/// repair against the healthy coded rows.
+/// repair against the healthy coded rows. Returns the live report plus
+/// its degraded analysis.
 fn assert_recovers(
     tag: &str,
     job: &EncodeJob,
     cache: &PlanCache,
     healthy: &[Vec<u64>],
     faults: &FaultSpec,
-) -> DegradedJobReport {
-    let live = job.run_degraded(faults).unwrap_or_else(|e| {
-        panic!("{tag}: live degraded run failed: {e:#}");
-    });
-    assert_eq!(live.coded, healthy, "{tag}: live repair ≡ healthy");
+) -> (JobReport, DegradedInfo) {
+    let live = job
+        .run(&ExecOptions::new().faults(faults))
+        .unwrap_or_else(|e| {
+            panic!("{tag}: live degraded run failed: {e:#}");
+        });
+    let ld = live
+        .degraded
+        .clone()
+        .expect("fault-injected run reports degraded info");
+    assert_eq!(ld.coded, healthy, "{tag}: live repair ≡ healthy");
     assert_eq!(live.verified, Some(true), "{tag}: live verification");
     assert_eq!(
-        live.outputs_recovered,
-        live.lost_sinks.len(),
+        ld.outputs_recovered,
+        ld.lost_sinks.len(),
         "{tag}: every lost sink recovered"
     );
-    let cached = job.run_degraded_cached(cache, faults).unwrap_or_else(|e| {
-        panic!("{tag}: cached degraded run failed: {e:#}");
-    });
-    assert_eq!(cached.coded, healthy, "{tag}: cached repair ≡ healthy");
+    let cached = job
+        .run(&ExecOptions::cached(cache).faults(faults))
+        .unwrap_or_else(|e| {
+            panic!("{tag}: cached degraded run failed: {e:#}");
+        });
+    let cd = cached
+        .degraded
+        .expect("fault-injected replay reports degraded info");
+    assert_eq!(cd.coded, healthy, "{tag}: cached repair ≡ healthy");
     assert_eq!(cached.sim, live.sim, "{tag}: delivered stats live ≡ replay");
-    assert_eq!(cached.crashed, live.crashed, "{tag}: crashed sets");
-    assert_eq!(cached.lost_sinks, live.lost_sinks, "{tag}: lost sinks");
+    assert_eq!(cd.crashed, ld.crashed, "{tag}: crashed sets");
+    assert_eq!(cd.lost_sinks, ld.lost_sinks, "{tag}: lost sinks");
     assert_eq!(
-        cached.surviving_sinks, live.surviving_sinks,
+        cd.surviving_sinks, ld.surviving_sinks,
         "{tag}: surviving sinks"
     );
-    live
+    (live, ld)
 }
 
 /// The satellite grid: every planner algorithm × both fields, post-run
@@ -93,20 +115,20 @@ fn every_algorithm_and_field_recovers_from_any_post_run_loss() {
         let tag = format!("{field} {algo:?} K={k} R={r}");
         let job = job_for(field, algo, code, k, r, p, w);
         let cache = PlanCache::new();
-        let healthy = job.encode_cached(&cache, &job.inputs).unwrap();
+        let healthy = healthy_rows(&job, &cache);
         let procs: Vec<usize> = (0..k + r).collect();
         for failures in 0..=r {
             let faults =
                 FaultSpec::random_crashes(failures as u64 * 31 + 7, &procs, failures, POST_RUN);
-            let rep = assert_recovers(
+            let (_, info) = assert_recovers(
                 &format!("{tag} failures={failures}"),
                 &job,
                 &cache,
                 &healthy,
                 &faults,
             );
-            assert_eq!(rep.faults_injected, failures as u64);
-            assert_eq!(rep.crashed.len(), failures);
+            assert_eq!(info.faults_injected, failures as u64);
+            assert_eq!(info.crashed.len(), failures);
         }
     }
 }
@@ -131,7 +153,7 @@ fn degenerate_shapes_recover_for_every_algorithm() {
             let tag = format!("{algo:?} K={k} R={r} p={p} W={w}");
             let job = job_for("prime:786433", algo, CodeKind::RsStructured, k, r, p, w);
             let cache = PlanCache::new();
-            let healthy = job.encode_cached(&cache, &job.inputs).unwrap();
+            let healthy = healthy_rows(&job, &cache);
             let procs: Vec<usize> = (0..k + r).collect();
             for failures in 0..=r {
                 let faults = FaultSpec::random_crashes(
@@ -161,32 +183,33 @@ fn degenerate_shapes_recover_for_every_algorithm() {
 fn mid_encode_sink_crash_loses_only_that_sink() {
     let job = job_for("prime:786433", AlgoRequest::Universal, CodeKind::RsStructured, 16, 4, 1, 2);
     let cache = PlanCache::new();
-    let healthy = job.encode_cached(&cache, &job.inputs).unwrap();
+    let healthy = healthy_rows(&job, &cache);
     for sink in 0..4usize {
         let faults = FaultSpec::new().crash(16 + sink);
-        let rep = assert_recovers(
+        let (rep, info) = assert_recovers(
             &format!("sink {sink} dead from round 1"),
             &job,
             &cache,
             &healthy,
             &faults,
         );
-        assert_eq!(rep.lost_sinks, vec![sink]);
+        assert_eq!(info.lost_sinks, vec![sink]);
         assert!(rep.sim.messages > 0, "the rest of the protocol ran");
     }
     // Same story through a dropped last-hop link: source 0 is the rank-1
     // child of row 0's reduce, so killing link 0 → sink 16 taints only
     // the sink.
     let faults = FaultSpec::new().drop_link(0, 16);
-    let rep = assert_recovers("link 0→16 dropped", &job, &cache, &healthy, &faults);
-    assert_eq!(rep.lost_sinks, vec![0]);
-    assert!(rep.crashed.is_empty(), "nobody crashed — taint only");
+    let (_, info) = assert_recovers("link 0→16 dropped", &job, &cache, &healthy, &faults);
+    assert_eq!(info.lost_sinks, vec![0]);
+    assert!(info.crashed.is_empty(), "nobody crashed — taint only");
 }
 
 /// Mid-encode *source* crashes: taint may spread to every sink, in
 /// which case fewer than K coordinates survive and both paths must
-/// refuse identically (a proper error, never fabricated data); when
-/// enough coordinates survive, both paths must repair identically.
+/// refuse identically (a typed `Error::Unrecoverable`, never fabricated
+/// data); when enough coordinates survive, both paths must repair
+/// identically.
 #[test]
 fn mid_encode_source_crash_is_consistent_across_engines() {
     for algo in [
@@ -197,23 +220,29 @@ fn mid_encode_source_crash_is_consistent_across_engines() {
     ] {
         let job = job_for("prime:786433", algo, CodeKind::RsStructured, 16, 4, 1, 2);
         let cache = PlanCache::new();
-        let healthy = job.encode_cached(&cache, &job.inputs).unwrap();
+        let healthy = healthy_rows(&job, &cache);
         for spec in [
             FaultSpec::new().crash_from(3, 2),
             FaultSpec::new().erase(1, 1, 2),
             FaultSpec::new().crash_from(0, 3).crash_after(17),
         ] {
             let tag = format!("{algo:?} {spec:?}");
-            let live = job.run_degraded(&spec);
-            let cached = job.run_degraded_cached(&cache, &spec);
+            let live = job.run(&ExecOptions::new().faults(&spec));
+            let cached = job.run(&ExecOptions::cached(&cache).faults(&spec));
             match (live, cached) {
                 (Ok(l), Ok(c)) => {
-                    assert_eq!(l.coded, healthy, "{tag}: live repair");
-                    assert_eq!(c.coded, healthy, "{tag}: cached repair");
+                    let ld = l.degraded.expect("degraded info");
+                    let cd = c.degraded.expect("degraded info");
+                    assert_eq!(ld.coded, healthy, "{tag}: live repair");
+                    assert_eq!(cd.coded, healthy, "{tag}: cached repair");
                     assert_eq!(l.sim, c.sim, "{tag}: delivered stats");
-                    assert_eq!(l.lost_sinks, c.lost_sinks, "{tag}: lost sinks");
+                    assert_eq!(ld.lost_sinks, cd.lost_sinks, "{tag}: lost sinks");
                 }
                 (Err(le), Err(ce)) => {
+                    assert!(
+                        matches!(le, dce::Error::Unrecoverable(_)),
+                        "{tag}: live error not typed: {le:#?}"
+                    );
                     assert!(
                         le.to_string().contains("unrecoverable"),
                         "{tag}: live error: {le:#}"
@@ -225,8 +254,8 @@ fn mid_encode_source_crash_is_consistent_across_engines() {
                 }
                 (l, c) => panic!(
                     "{tag}: engines disagree — live {:?}, cached {:?}",
-                    l.map(|r| r.lost_sinks),
-                    c.map(|r| r.lost_sinks)
+                    l.map(|r| r.degraded.map(|d| d.lost_sinks)),
+                    c.map(|r| r.degraded.map(|d| d.lost_sinks))
                 ),
             }
         }
@@ -253,11 +282,12 @@ fn degraded_batch_is_bit_identical_per_job_across_widths() {
             })
             .collect();
         let refs: Vec<&[Vec<u64>]> = jobs.iter().map(|x| x.as_slice()).collect();
-        let healthy = job.encode_batch_cached(&cache, &refs).unwrap();
-        let (coded, stats) = job
-            .encode_degraded_batch_cached(&cache, &refs, &faults)
-            .unwrap();
-        assert_eq!(coded, healthy, "B={b} W={w}");
+        let base = ExecOptions::cached(&cache);
+        let healthy = job.encode(&cache, &refs, &base).unwrap();
+        assert!(healthy.recovery.is_none(), "healthy batch reports no recovery");
+        let degraded = job.encode(&cache, &refs, &base.faults(&faults)).unwrap();
+        assert_eq!(degraded.coded, healthy.coded, "B={b} W={w}");
+        let stats = degraded.recovery.expect("fault-injected batch reports stats");
         assert_eq!(stats.outputs_recovered, (stats.outputs_lost * b) as u64);
     }
 }

@@ -178,14 +178,14 @@ fn non_two_adic_fields_fall_back_to_dense() {
 
 #[test]
 fn rs_ntt_code_kind_serves_through_the_coordinator() {
-    use dce::coordinator::{EncodeJob, JobConfig, PlanCache};
+    use dce::coordinator::{EncodeJob, ExecOptions, JobConfig, PlanCache};
     // The `rs-ntt` config kind builds the NTT-friendly geometry with
     // seeded non-unit multipliers; the cached batch path must verify
     // against the parity oracle whichever backend serves it.
     let cfg_text = "code = \"rs-ntt\"\nk = 16\nr = 4\nw = 3";
     let cfg = JobConfig::parse(cfg_text).unwrap();
     let job = EncodeJob::synthetic(cfg.clone()).unwrap();
-    let rep = job.run().unwrap();
+    let rep = job.run(&ExecOptions::new()).unwrap();
     assert_eq!(rep.verified, Some(true), "live rs-ntt run verifies");
     let cache = PlanCache::new();
     let f = job.field.clone();
@@ -198,9 +198,11 @@ fn rs_ntt_code_kind_serves_through_the_coordinator() {
         })
         .collect();
     let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
-    let batched = job.encode_batch_cached(&cache, &refs).unwrap();
+    let opts = ExecOptions::cached(&cache);
+    let batched = job.encode(&cache, &refs, &opts).unwrap().coded;
     for (x, y) in jobs.iter().zip(&batched) {
         assert!(dce::coordinator::verify::native(&f, &job.parity, x, y));
-        assert_eq!(y, &job.encode_cached(&cache, x).unwrap());
+        let one = job.encode(&cache, &[x], &opts).unwrap().coded.remove(0);
+        assert_eq!(y, &one);
     }
 }

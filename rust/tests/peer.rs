@@ -1,0 +1,293 @@
+//! Peer-execution conformance (the tentpole contract, C1/C2 honest):
+//! for every A2A variant, over both field families, across degenerate
+//! shapes, and over **all three transports**, peer-to-peer execution of
+//! a sharded plan must be
+//!
+//! * **bit-identical** to `exec::replay` (same outputs map), and
+//! * **exactly metered**: the traffic each rank measures while running
+//!   — barriers crossed, per-round send maxima, messages, bandwidth —
+//!   merges to the plan's static `SimReport`, and `(C1, C2)` equals
+//!   [`costs::plan_statics`] with no slack in either direction.
+//!
+//! The second clause is what makes the round simulator an honest
+//! oracle: the "no central processor" execution ships exactly the
+//! traffic the paper's accounting promises, on real channels, rings
+//! and sockets alike.
+
+use dce::codes::{structured::disjoint_family, StructuredPoints};
+use dce::collectives::{CauchyA2A, DftA2A, DrawLoose, PrepareShoot};
+use dce::coordinator::{Engine, ExecOptions, JobConfig, PlanCache};
+use dce::framework::{costs, A2aAlgo, SystematicEncode};
+use dce::gf::{Field, Gf2e, GfPrime, Mat};
+use dce::net::peer::run_peer;
+use dce::net::transport::TransportKind;
+use dce::net::{exec, plan, Collective, Packet};
+use dce::util::{ipow, Rng};
+use std::sync::Arc;
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(20);
+
+fn rand_inputs<F: Field>(f: &F, k: usize, w: usize, rng: &mut Rng) -> Vec<Packet> {
+    (0..k)
+        .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+        .collect()
+}
+
+/// Compile the collective once; peer-run it over every transport and
+/// pin outputs + measured traffic against replay and the plan statics.
+fn assert_peer_conforms<F, B>(tag: &str, f: &F, ports: usize, k: usize, w: usize, build: B)
+where
+    F: Field + Sync,
+    B: Fn(Vec<Packet>) -> Box<dyn Collective>,
+{
+    let compiled = plan::compile(ports, k, |basis| Ok(build(basis))).unwrap();
+    let mut rng = Rng::new(k as u64 * 7919 + ports as u64 * 53 + w as u64);
+    let inputs = rand_inputs(f, k, w, &mut rng);
+
+    let rep = exec::replay(&compiled, f, &inputs).unwrap();
+    let statics = costs::plan_statics(&compiled, w as u64);
+    assert_eq!(
+        (rep.report.c1, rep.report.c2),
+        statics,
+        "{tag}: replay report vs statics (test harness sanity)"
+    );
+
+    for kind in TransportKind::ALL {
+        let peer = run_peer(&compiled, f, &inputs, kind, TIMEOUT)
+            .unwrap_or_else(|e| panic!("{tag} over {kind}: {e:#}"));
+        assert_eq!(peer.outputs, rep.outputs, "{tag} over {kind}: outputs");
+        // The full report — per-round maxima included — not just sums.
+        assert_eq!(
+            peer.measured, rep.report,
+            "{tag} over {kind}: measured traffic vs replay report"
+        );
+        assert_eq!(
+            (peer.measured.c1, peer.measured.c2),
+            statics,
+            "{tag} over {kind}: measured (C1, C2) vs costs::plan_statics"
+        );
+        assert_eq!(
+            (peer.measured.messages, peer.measured.bandwidth),
+            (rep.report.messages, rep.report.bandwidth),
+            "{tag} over {kind}: message/bandwidth counts"
+        );
+    }
+}
+
+#[test]
+fn universal_prepare_shoot_prime_including_degenerate() {
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xBEE1);
+    for (k, p, w) in [
+        (1usize, 1usize, 1usize), // fully degenerate
+        (2, 1, 1),
+        (5, 1, 2),
+        (16, 1, 4),
+        (10, 2, 1),
+        (25, 2, 3),
+    ] {
+        let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+        let c2 = c.clone();
+        assert_peer_conforms(&format!("ps K={k} p={p} w={w}"), &f, p, k, w, move |ins| {
+            Box::new(PrepareShoot::new(f, (0..k).collect(), p, c2.clone(), ins))
+        });
+    }
+}
+
+#[test]
+fn universal_prepare_shoot_gf2e() {
+    let f = Gf2e::new(8).unwrap();
+    let mut rng = Rng::new(0xBEE2);
+    for (k, p, w) in [(1usize, 1usize, 1usize), (13, 2, 3), (16, 1, 2)] {
+        let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+        let ff = f.clone();
+        assert_peer_conforms(
+            &format!("ps/gf2e K={k} p={p} w={w}"),
+            &f,
+            p,
+            k,
+            w,
+            move |ins| {
+                Box::new(PrepareShoot::new(
+                    ff.clone(),
+                    (0..k).collect(),
+                    p,
+                    c.clone(),
+                    ins,
+                ))
+            },
+        );
+    }
+}
+
+#[test]
+fn dft_a2a_both_fields() {
+    let f = GfPrime::default_field();
+    for (p_base, h, p, w) in [(2u64, 3u32, 1usize, 1usize), (4, 2, 3, 2), (2, 4, 1, 3)] {
+        let k = ipow(p_base, h) as usize;
+        assert_peer_conforms(
+            &format!("dft P={p_base} H={h} p={p}"),
+            &f,
+            p,
+            k,
+            w,
+            move |ins| {
+                Box::new(DftA2A::new(f, (0..k).collect(), p, p_base, h, ins, false).unwrap())
+            },
+        );
+    }
+    // GF(256): q−1 = 255 = 3·5·17 — prime radixes only.
+    let f = Gf2e::new(8).unwrap();
+    for (p_base, p, w) in [(3u64, 2usize, 2usize), (5, 2, 1)] {
+        let k = p_base as usize;
+        let ff = f.clone();
+        assert_peer_conforms(
+            &format!("dft/gf2e P={p_base} p={p}"),
+            &f,
+            p,
+            k,
+            w,
+            move |ins| {
+                Box::new(
+                    DftA2A::new(ff.clone(), (0..k).collect(), p, p_base, 1, ins, false).unwrap(),
+                )
+            },
+        );
+    }
+}
+
+#[test]
+fn draw_loose_both_fields() {
+    let f = GfPrime::default_field();
+    for (n, p_base, p, w, invert) in [
+        (8usize, 2u64, 1usize, 1usize, false),
+        (12, 2, 3, 1, false),
+        (24, 2, 1, 1, true),
+        (5, 2, 1, 2, false), // H = 0 fallback (Remark 8)
+    ] {
+        let hmax = StructuredPoints::max_h(&f, n as u64, p_base);
+        let m = n / ipow(p_base, hmax) as usize;
+        let sp = StructuredPoints::new(&f, n, p_base, (0..m as u64).collect()).unwrap();
+        assert_peer_conforms(
+            &format!("dl n={n} P={p_base} p={p} inv={invert}"),
+            &f,
+            p,
+            n,
+            w,
+            move |ins| {
+                Box::new(DrawLoose::new(f, (0..n).collect(), p, &sp, ins, invert).unwrap())
+            },
+        );
+    }
+    // GF(256), radix 3: M = 2, Z = 3.
+    let f = Gf2e::new(8).unwrap();
+    let n = 6usize;
+    let sp = StructuredPoints::new(&f, n, 3, vec![0, 1]).unwrap();
+    let ff = f.clone();
+    assert_peer_conforms("dl/gf2e n=6", &f, 1, n, 2, move |ins| {
+        Box::new(DrawLoose::new(ff.clone(), (0..n).collect(), 1, &sp, ins, false).unwrap())
+    });
+}
+
+#[test]
+fn cauchy_a2a_both_fields() {
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xBEE4);
+    for (n, p, w) in [(8usize, 1usize, 1usize), (16, 2, 2)] {
+        let fam = disjoint_family(&f, n, 2, 2).unwrap();
+        let pre: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+        let post: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+        assert_peer_conforms(&format!("cauchy n={n} p={p}"), &f, p, n, w, move |ins| {
+            Box::new(
+                CauchyA2A::new(
+                    f,
+                    (0..n).collect(),
+                    p,
+                    &fam[0],
+                    &fam[1],
+                    pre.clone(),
+                    post.clone(),
+                    ins,
+                )
+                .unwrap(),
+            )
+        });
+    }
+    let f = Gf2e::new(8).unwrap();
+    let n = 6usize;
+    let fam = disjoint_family(&f, n, 3, 2).unwrap();
+    let pre: Vec<u64> = (0..n).map(|_| rng.range(1, 256)).collect();
+    let post: Vec<u64> = (0..n).map(|_| rng.range(1, 256)).collect();
+    let ff = f.clone();
+    assert_peer_conforms("cauchy/gf2e n=6", &f, 1, n, 2, move |ins| {
+        Box::new(
+            CauchyA2A::new(
+                ff.clone(),
+                (0..n).collect(),
+                1,
+                &fam[0],
+                &fam[1],
+                pre.clone(),
+                post.clone(),
+                ins,
+            )
+            .unwrap(),
+        )
+    });
+}
+
+#[test]
+fn systematic_framework_degenerate_shapes() {
+    // The framework around the A2As at the degenerate corners the
+    // contract names: K=1, R=1, p=1, W=1 (and small mixes).
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xBEE5);
+    for (k, r, p, w) in [
+        (1usize, 1usize, 1usize, 1usize),
+        (4, 1, 1, 1),
+        (1, 4, 1, 1),
+        (1, 1, 1, 3),
+        (2, 2, 1, 1),
+        (12, 4, 2, 2),
+    ] {
+        let a = Arc::new(Mat::random(&f, k, r, rng.next_u64()));
+        let a2 = a.clone();
+        assert_peer_conforms(
+            &format!("sys K={k} R={r} p={p} w={w}"),
+            &f,
+            p,
+            k,
+            w,
+            move |ins| {
+                Box::new(SystematicEncode::new(f, a2.clone(), ins, p, A2aAlgo::Universal).unwrap())
+            },
+        );
+    }
+}
+
+#[test]
+fn job_peer_engine_over_every_transport() {
+    // The coordinator-facing path: one cached plan, three transports,
+    // all bit-identical to the replay engine with identical reports.
+    let cache = PlanCache::new();
+    let cfg = JobConfig {
+        k: 12,
+        r: 4,
+        w: 5,
+        ..JobConfig::default()
+    };
+    let job = dce::coordinator::EncodeJob::synthetic(cfg).unwrap();
+    let replayed = job.run(&ExecOptions::cached(&cache)).unwrap();
+    for kind in TransportKind::ALL {
+        let peer = job
+            .run(&ExecOptions::cached(&cache).engine(Engine::Peer(kind)))
+            .unwrap_or_else(|e| panic!("peer engine over {kind}: {e}"));
+        assert_eq!(peer.verified, Some(true), "{kind}");
+        assert_eq!(peer.sim, replayed.sim, "{kind}: measured vs replay report");
+        assert_eq!(peer.cost, replayed.cost, "{kind}");
+    }
+    // Three engine runs, one shape: exactly one compile.
+    assert_eq!(cache.len(), 1);
+    assert_eq!(cache.stats().1, 1);
+}

@@ -462,7 +462,7 @@ fn compiled_plan_carries_opt_and_cross_checked_sink_rows() {
     // The coordinator-facing path: every cached CompiledPlan stores the
     // optimized form, and its flattened sink rows equal the parity
     // columns (compile_plan cross-checks; re-assert here explicitly).
-    use dce::coordinator::{EncodeJob, JobConfig, PlanCache};
+    use dce::coordinator::{EncodeJob, ExecOptions, JobConfig, PlanCache};
     use dce::framework::AlgoRequest;
     let cache = PlanCache::new();
     for algo in [
@@ -491,8 +491,8 @@ fn compiled_plan_carries_opt_and_cross_checked_sink_rows() {
             }
         }
         // Live vs cached equivalence through the optimized path.
-        let live = job.run().unwrap();
-        let cached = job.run_cached(&cache).unwrap();
+        let live = job.run(&ExecOptions::new()).unwrap();
+        let cached = job.run(&ExecOptions::cached(&cache)).unwrap();
         assert_eq!(cached.sim, live.sim, "{algo:?}");
         assert_eq!(cached.verified, Some(true), "{algo:?}");
     }

@@ -11,7 +11,7 @@
 
 use dce::codes::{structured::disjoint_family, StructuredPoints};
 use dce::collectives::{CauchyA2A, DftA2A, DrawLoose, MultiReduce, PrepareShoot};
-use dce::coordinator::{EncodeJob, JobConfig, PlanCache};
+use dce::coordinator::{EncodeJob, ExecOptions, JobConfig, PlanCache};
 use dce::framework::{A2aAlgo, AlgoRequest, SystematicEncode};
 use dce::gf::{Field, Gf2e, GfPrime, Mat};
 use dce::net::{exec, plan, run, Collective, Packet, Sim};
@@ -270,8 +270,8 @@ fn framework_compile_plan_replays_rs_specific() {
             ..JobConfig::default()
         };
         let job = EncodeJob::synthetic(cfg).unwrap();
-        let live = job.run().unwrap();
-        let cached = job.run_cached(&cache).unwrap();
+        let live = job.run(&ExecOptions::new()).unwrap();
+        let cached = job.run(&ExecOptions::cached(&cache)).unwrap();
         assert_eq!(cached.sim, live.sim, "w={w}");
         assert_eq!(cached.verified, Some(true), "w={w}");
     }

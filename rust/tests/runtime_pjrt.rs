@@ -5,7 +5,7 @@
 //! Requires `make artifacts` (skips gracefully when artifacts are absent
 //! so plain `cargo test` works in a fresh checkout).
 
-use dce::coordinator::{config::VerifyMode, EncodeJob, JobConfig};
+use dce::coordinator::{config::VerifyMode, EncodeJob, ExecOptions, JobConfig};
 use dce::gf::{Field, GfPrime, Mat};
 use dce::runtime::Runtime;
 use std::path::Path;
@@ -56,7 +56,7 @@ fn full_job_with_pjrt_verification() {
         verify: VerifyMode::Pjrt,
         ..JobConfig::default()
     };
-    let rep = EncodeJob::synthetic(cfg).unwrap().run().unwrap();
+    let rep = EncodeJob::synthetic(cfg).unwrap().run(&ExecOptions::new()).unwrap();
     assert_eq!(
         rep.verified,
         Some(true),

@@ -5,7 +5,8 @@
 //! embedding application would see them.
 
 use dce::coordinator::{
-    verify, BatchPolicy, EncodeJob, EncodeService, JobConfig, PlanCache, ServeRejection,
+    verify, BatchPolicy, EncodeJob, EncodeService, ExecOptions, JobConfig, PlanCache,
+    ServeRejection,
     WireClient, WireServer,
 };
 use dce::gf::Field;
@@ -51,7 +52,7 @@ fn zero_delay_policy_serves_immediately_and_correctly() {
     for _ in 0..10 {
         let x = payload(&cfg, &mut rng, 3);
         let y = svc.submit(x.clone()).unwrap().recv().unwrap().y.unwrap();
-        assert_eq!(y, oracle.encode_cached(&cache, &x).unwrap());
+        assert_eq!(y, oracle.encode(&cache, &[&x], &ExecOptions::cached(&cache)).unwrap().coded.remove(0));
     }
     assert!(
         t0.elapsed() < Duration::from_millis(500),
@@ -134,7 +135,7 @@ fn partial_and_full_batches_are_bit_identical() {
     let cache = PlanCache::new();
     let direct: Vec<_> = payloads
         .iter()
-        .map(|x| oracle.encode_cached(&cache, x).unwrap())
+        .map(|x| oracle.encode(&cache, &[x], &ExecOptions::cached(&cache)).unwrap().coded.remove(0))
         .collect();
 
     // Full: occupancy fires one batch of exactly 6.
@@ -280,7 +281,7 @@ fn wire_round_trip_bit_matches_direct() {
         let x = &payloads[id as usize].1;
         assert_eq!(
             y.unwrap(),
-            oracle.encode_cached(&cache, x).unwrap(),
+            oracle.encode(&cache, &[x], &ExecOptions::cached(&cache)).unwrap().coded.remove(0),
             "wire bytes diverged for req {id}"
         );
         got += 1;

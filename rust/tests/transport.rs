@@ -1,0 +1,236 @@
+//! Transport conformance: one suite, all three substrates.
+//!
+//! Every test below sweeps [`TransportKind::ALL`] through the same
+//! [`transport::mesh`] factory the peer executor uses, so the contract
+//! is pinned *per implementation*, not just for the reference channel
+//! substrate:
+//!
+//! * round-synchronous delivery — a frame tagged for the wrong round is
+//!   a typed [`TransportError::OutOfOrder`] rejection, never buffered;
+//! * wrong-port frames are [`TransportError::PortMismatch`];
+//! * a dropped peer surfaces as `PeerClosed`/`Timeout` **bounded by the
+//!   recv timeout**, never a hang — on sockets, rings, and channels;
+//! * the TCP framing inherits the serving tier's hostile-input caps:
+//!   raw adversarial headers are rejected before any allocation.
+
+use dce::net::payload::{Packet, FRAME_HEADER_LEN};
+use dce::net::transport::{self, tcp::read_frame_from, Transport, TransportError, TransportKind};
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+const PROCS: [usize; 3] = [0, 1, 2];
+const FRAME_BYTES: usize = 1 << 12;
+
+fn mesh(kind: TransportKind, timeout: Duration) -> Vec<Box<dyn Transport>> {
+    transport::mesh(kind, &PROCS, 2, FRAME_BYTES, timeout).unwrap()
+}
+
+#[test]
+fn ring_exchange_and_barriers_on_every_substrate() {
+    for kind in TransportKind::ALL {
+        let endpoints = mesh(kind, Duration::from_secs(5));
+        let results: Vec<Vec<Packet>> = std::thread::scope(|s| {
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut t| {
+                    s.spawn(move || {
+                        let n = PROCS.len();
+                        let rank = t.rank();
+                        assert_eq!(t.peers(), PROCS.as_slice(), "{kind}: peers()");
+                        let mut got = Vec::new();
+                        // Two rounds of a rotating ring, two ports each:
+                        // exercises round tags, port tags, and barriers.
+                        for round in 0..2u32 {
+                            let dst = (rank + 1 + round as usize) % n;
+                            let src = (rank + n - 1 - round as usize) % n;
+                            for port in 0..2u32 {
+                                let payload =
+                                    vec![vec![rank as u64, round as u64, port as u64, 42]];
+                                t.send(round, port, dst, &payload).unwrap();
+                            }
+                            for port in 0..2u32 {
+                                let rows = t.recv(round, port, src).unwrap();
+                                assert_eq!(
+                                    rows,
+                                    vec![vec![src as u64, round as u64, port as u64, 42]],
+                                    "{kind}: round {round} port {port} payload"
+                                );
+                                got.extend(rows);
+                            }
+                            t.barrier(round).unwrap();
+                        }
+                        got
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results.len(), PROCS.len(), "{kind}");
+    }
+}
+
+#[test]
+fn wrong_round_is_rejected_not_buffered_on_every_substrate() {
+    for kind in TransportKind::ALL {
+        let mut endpoints = mesh(kind, Duration::from_secs(2));
+        let mut t1 = endpoints.remove(1);
+        let mut t0 = endpoints.remove(0);
+        // A frame for round 7 arriving while the schedule expects round
+        // 0 is a protocol violation (the schedule is known a priori).
+        t0.send(7, 0, 1, &[vec![9, 9, 9]]).unwrap();
+        match t1.recv(0, 0, 0) {
+            Err(TransportError::OutOfOrder {
+                peer: 0,
+                expected_round: 0,
+                got_round: 7,
+            }) => {}
+            other => panic!("{kind}: expected OutOfOrder, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn wrong_port_is_rejected_on_every_substrate() {
+    for kind in TransportKind::ALL {
+        let mut endpoints = mesh(kind, Duration::from_secs(2));
+        let mut t1 = endpoints.remove(1);
+        let mut t0 = endpoints.remove(0);
+        t0.send(0, 3, 1, &[vec![1]]).unwrap();
+        match t1.recv(0, 0, 0) {
+            Err(TransportError::PortMismatch {
+                peer: 0,
+                round: 0,
+                expected_port: 0,
+                got_port: 3,
+            }) => {}
+            other => panic!("{kind}: expected PortMismatch, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn dropped_peer_is_typed_and_bounded_on_every_substrate() {
+    let timeout = Duration::from_millis(300);
+    for kind in TransportKind::ALL {
+        let mut endpoints = mesh(kind, timeout);
+        let t2 = endpoints.remove(2);
+        let t1 = endpoints.remove(1);
+        let mut t0 = endpoints.remove(0);
+        drop(t1); // rank 1 dies before sending anything
+        drop(t2);
+        let t0_start = Instant::now();
+        match t0.recv(0, 0, 1) {
+            // Which typed error depends on when the substrate learns of
+            // the death (a closed channel/ring/socket vs. pure silence),
+            // but it must be one of the two — and it must be *bounded*.
+            Err(TransportError::PeerClosed { peer: 1, .. })
+            | Err(TransportError::Timeout { peer: 1, .. }) => {}
+            other => panic!("{kind}: expected PeerClosed/Timeout, got {other:?}"),
+        }
+        assert!(
+            t0_start.elapsed() < Duration::from_secs(10),
+            "{kind}: recv from a dead peer must be bounded by the timeout"
+        );
+    }
+}
+
+#[test]
+fn barrier_with_an_absent_peer_times_out_on_every_substrate() {
+    let timeout = Duration::from_millis(300);
+    for kind in TransportKind::ALL {
+        let mut endpoints = mesh(kind, timeout);
+        let _t2 = endpoints.remove(2); // alive but never enters the barrier
+        let _t1 = endpoints.remove(1);
+        let mut t0 = endpoints.remove(0);
+        let t0_start = Instant::now();
+        match t0.barrier(0) {
+            Err(TransportError::Timeout { .. }) | Err(TransportError::PeerClosed { .. }) => {}
+            Ok(()) => panic!("{kind}: barrier completed without the other ranks"),
+            Err(other) => panic!("{kind}: expected Timeout, got {other:?}"),
+        }
+        assert!(
+            t0_start.elapsed() < Duration::from_secs(10),
+            "{kind}: a missed barrier must be bounded by the timeout"
+        );
+    }
+}
+
+/// Aim raw hostile bytes at the exact read path `TcpTransport::recv`
+/// uses. The serving tier's header caps must reject each frame before
+/// any payload allocation happens.
+type HeaderMutation = Box<dyn Fn(&mut [u8; FRAME_HEADER_LEN]) + Send>;
+
+#[test]
+fn tcp_rejects_hostile_framed_headers() {
+    // (mutation, expected substring in the typed Frame error)
+    let cases: Vec<(&str, HeaderMutation)> = vec![
+        (
+            "bad frame magic",
+            Box::new(|h| h[0..4].copy_from_slice(b"EVIL")),
+        ),
+        (
+            "too large", // rows far beyond MAX_FRAME_DIM
+            Box::new(|h| h[24..28].copy_from_slice(&(1u32 << 30).to_le_bytes())),
+        ),
+        (
+            "too large", // payload_len beyond MAX_FRAME_PAYLOAD
+            Box::new(|h| h[32..36].copy_from_slice(&u32::MAX.to_le_bytes())),
+        ),
+        (
+            "does not match", // rows×width disagrees with payload_len
+            Box::new(|h| h[24..28].copy_from_slice(&7u32.to_le_bytes())),
+        ),
+    ];
+    for (expect, mutate) in cases {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let attacker = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // Start from a well-formed header for 1×1 u64 rows...
+            let mut h = [0u8; FRAME_HEADER_LEN];
+            h[0..4].copy_from_slice(b"DCE1");
+            h[4] = 2; // Request
+            h[5] = 8; // u64 lane
+            h[24..28].copy_from_slice(&1u32.to_le_bytes()); // rows
+            h[28..32].copy_from_slice(&1u32.to_le_bytes()); // width
+            h[32..36].copy_from_slice(&8u32.to_le_bytes()); // payload_len
+            // ...then break exactly one invariant.
+            mutate(&mut h);
+            s.write_all(&h).unwrap();
+            s
+        });
+        let (mut victim, _) = listener.accept().unwrap();
+        let err = read_frame_from(&mut victim, 0, 0, Duration::from_secs(2)).unwrap_err();
+        match err {
+            TransportError::Frame { detail, .. } => assert!(
+                detail.contains(expect),
+                "expected {expect:?} in {detail:?}"
+            ),
+            other => panic!("expected Frame error, got {other:?}"),
+        }
+        drop(attacker.join().unwrap());
+    }
+}
+
+/// A hostile *victim-side* variant: the peer closes mid-header. The
+/// reader must surface `PeerClosed`, not block or return garbage.
+#[test]
+fn tcp_truncated_header_is_peer_closed() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let attacker = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"DCE1").unwrap(); // 4 of 40 header bytes, then hang up
+        drop(s);
+    });
+    let (mut victim, _) = listener.accept().unwrap();
+    let t0 = Instant::now();
+    let err = read_frame_from(&mut victim, 3, 0, Duration::from_secs(2)).unwrap_err();
+    match err {
+        TransportError::PeerClosed { peer: 3, .. } => {}
+        other => panic!("expected PeerClosed, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(10));
+    attacker.join().unwrap();
+}

@@ -20,7 +20,8 @@ Gating rules
   - ``slots_after`` must not increase (optimizer regressions),
   - ``recovery_exact``, ``packed_equals_scalar``,
     ``simd_equals_scalar``, ``backend_equals_dense``,
-    ``responses_match_direct`` and ``shutdown_drained`` must not flip
+    ``responses_match_direct``, ``shutdown_drained``,
+    ``peer_equals_replay`` and ``peer_matches_statics`` must not flip
     away from ``true``.
 * **Timing** fields gate only when *both* files were produced with
   ``smoke == false`` (a real multi-iteration run on comparable
@@ -77,7 +78,8 @@ EXACT_LOWER_OR_EQUAL = {"slots_after"}
 # Booleans that may never flip away from true: exact erasure recovery,
 # packed-kernel/scalar bit-identity, SIMD-tier/scalar-tier bit-identity,
 # NTT-backend/dense bit-identity, serving-tier/direct-path bit-identity,
-# and the zero-drop graceful-shutdown guarantee.
+# the zero-drop graceful-shutdown guarantee, and peer-execution
+# bit-identity / measured-traffic == plan-statics conformance.
 EXACT_MUST_HOLD = {
     "recovery_exact",
     "packed_equals_scalar",
@@ -85,6 +87,8 @@ EXACT_MUST_HOLD = {
     "backend_equals_dense",
     "responses_match_direct",
     "shutdown_drained",
+    "peer_equals_replay",
+    "peer_matches_statics",
 }
 # Numbers that move with the hardware, not with regressions: report
 # shifts as notices, never failures.
