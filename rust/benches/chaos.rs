@@ -1,0 +1,266 @@
+//! Bench: **chaos-hardened peer execution** — what fault tolerance
+//! costs on the wire and through the coordinator.
+//!
+//! Two sweeps, correctness asserted inline every iteration:
+//!
+//! * **Transient absorption** — the same plan runs over every transport
+//!   through a clean mesh and through a mesh with full-rate injected
+//!   delay + duplication + reorder; outputs must stay bit-identical and
+//!   nothing may be reported dropped (`transient_bit_identical` in the
+//!   JSON is a hard trend gate). Retry and delayed-round counts land in
+//!   the rows.
+//! * **Degraded sweep** — the coordinator's peer engine runs with `F`
+//!   post-run sink crashes for `F` in {0, 1, 2, 4}; lost rows must be
+//!   healed bit-identically to the healthy oracle and the peer-side
+//!   degraded telemetry must agree with the replay engine's analysis
+//!   (`peer_degraded_equals_analysis` is a hard trend gate). Recovery
+//!   wall time and recovered-row counts land in the rows.
+//!
+//! Results land in `BENCH_chaos.json` at the repo root.
+
+use dce::coordinator::config::VerifyMode;
+use dce::coordinator::{EncodeJob, Engine, ExecOptions, JobConfig, PlanCache};
+use dce::framework::{A2aAlgo, AlgoRequest, SystematicEncode};
+use dce::gf::{Field, GfPrime, Mat};
+use dce::net::peer::{spawn_local_chaos, DegradedPeerRun, RetryPolicy, ShardedPlan};
+use dce::net::transport::{ChaosSpec, TransportKind};
+use dce::net::{exec, plan, Collective, FaultSpec, Packet, ProcId};
+use dce::util::{bench_iters, bench_smoke, Rng};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const TIMEOUT: Duration = Duration::from_secs(20);
+
+struct TransientRow {
+    kind: String,
+    clean_us: u64,
+    chaos_us: u64,
+    retries: u64,
+    rounds_delayed: u64,
+}
+
+struct SweepRow {
+    lost: usize,
+    run_us: u64,
+    recovery_us: u64,
+    recovered: u64,
+}
+
+fn median_us(samples: &mut Vec<u64>) -> u64 {
+    samples.sort_unstable();
+    samples[samples.len() / 2]
+}
+
+/// Every transient knob at full rate: each receive sees a stale
+/// duplicate, a delayed attempt, and a reordered attempt before the
+/// real frame lands — the worst stacking the retry budget must absorb.
+fn full_transients(seed: u64) -> ChaosSpec {
+    ChaosSpec::new()
+        .with_seed(seed)
+        .delay(1000, 1)
+        .dup(1000)
+        .reorder(1000)
+}
+
+fn peer_channel() -> Engine {
+    Engine::Peer(TransportKind::Channel)
+}
+
+/// Median wall time of `iters` chaos-mesh runs, plus the last run.
+fn timed_mesh(
+    sharded: &ShardedPlan,
+    f: &GfPrime,
+    inputs: &[Packet],
+    kind: TransportKind,
+    spec: &ChaosSpec,
+    iters: usize,
+) -> (u64, DegradedPeerRun) {
+    let policy = RetryPolicy::default();
+    let mut samples = Vec::with_capacity(iters);
+    let mut last = None;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        let run = spawn_local_chaos(sharded, f, inputs, kind, TIMEOUT, spec, &policy)
+            .unwrap_or_else(|e| panic!("mesh over {kind}: {e:#}"));
+        samples.push(t0.elapsed().as_micros() as u64);
+        last = Some(run);
+    }
+    (median_us(&mut samples), last.expect("at least one iteration"))
+}
+
+fn main() {
+    let iters = bench_iters(12);
+    let smoke = bench_smoke();
+    let mut bit_identical = true;
+    let mut equals_analysis = true;
+
+    // Part 1: transient absorption at the mesh layer, per transport.
+    let f = GfPrime::default_field();
+    let (k, r, p, w) = (12usize, 4usize, 2usize, 16usize);
+    let a = Arc::new(Mat::random(&f, k, r, 0xC4A0_5EED));
+    let build = move |ins: Vec<Packet>| -> Box<dyn Collective> {
+        Box::new(SystematicEncode::new(f, a, ins, p, A2aAlgo::Universal).unwrap())
+    };
+    let compiled = plan::compile(p, k, |basis| Ok(build(basis))).unwrap();
+    let mut rng = Rng::new(0xC4A0);
+    let inputs: Vec<Packet> = (0..k)
+        .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+        .collect();
+    let rep = exec::replay(&compiled, &f, &inputs).unwrap();
+    let owners: Vec<ProcId> = (0..compiled.n_inputs).collect();
+    let sharded = ShardedPlan::new(&compiled, &f, &owners).unwrap();
+    println!("## transient absorption: K={k} R={r} p={p} W={w}, full-rate delay+dup+reorder");
+
+    let clean = ChaosSpec::new();
+    let chaos = full_transients(0xBE2C);
+    let mut transients = Vec::new();
+    for kind in TransportKind::ALL {
+        let (clean_us, base) = timed_mesh(&sharded, &f, &inputs, kind, &clean, iters);
+        if base.outputs != rep.outputs {
+            bit_identical = false;
+        }
+        let (chaos_us, run) = timed_mesh(&sharded, &f, &inputs, kind, &chaos, iters);
+        if run.outputs != rep.outputs || run.report.dropped_messages != 0 {
+            bit_identical = false;
+        }
+        let retries = run.retries;
+        let delayed = run.rounds_delayed;
+        println!(
+            "  {kind:<7}: clean {clean_us:>7} us, chaos {chaos_us:>7} us, \
+             retries {retries}, rounds delayed {delayed}"
+        );
+        transients.push(TransientRow {
+            kind: kind.to_string(),
+            clean_us,
+            chaos_us,
+            retries,
+            rounds_delayed: delayed,
+        });
+    }
+
+    // Part 2: degraded healing through the coordinator, channel mesh.
+    let cfg = JobConfig {
+        k: 16,
+        r: 8,
+        w: 32,
+        ports: 2,
+        algorithm: AlgoRequest::Universal,
+        verify: VerifyMode::Off,
+        ..JobConfig::default()
+    };
+    let job = EncodeJob::synthetic(cfg).unwrap();
+    let cache = PlanCache::new();
+    let opts = ExecOptions::cached(&cache);
+    let healthy = job.encode(&cache, &[&job.inputs], &opts).unwrap();
+    println!("## degraded sweep: K=16 R=8 W=32, crash_after on F sinks, channel mesh");
+
+    let mut sweep = Vec::new();
+    for lost in [0usize, 1, 2, 4] {
+        let mut spec = FaultSpec::new();
+        for pid in 16..16 + lost {
+            spec = spec.crash_after(pid);
+        }
+        let opts_f = if lost == 0 {
+            opts.engine(peer_channel())
+        } else {
+            opts.faults(&spec).engine(peer_channel())
+        };
+        let mut samples = Vec::with_capacity(iters);
+        let mut last = None;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let rep = job.run(&opts_f).expect("peer run");
+            samples.push(t0.elapsed().as_micros() as u64);
+            last = Some(rep);
+        }
+        let us = median_us(&mut samples);
+        let rep = last.expect("at least one iteration");
+
+        let out = job.encode(&cache, &[&job.inputs], &opts_f).unwrap();
+        if out.coded != healthy.coded {
+            equals_analysis = false;
+        }
+        let (rec_us, recovered) = match &out.recovery {
+            Some(s) => (s.recovery_wall.as_micros() as u64, s.outputs_recovered),
+            None => (0, 0),
+        };
+        if lost > 0 {
+            let replayed = job.run(&opts.faults(&spec)).unwrap();
+            let da = replayed.degraded.as_ref().expect("replay degraded");
+            let db = rep.degraded.as_ref().expect("peer degraded");
+            if db.coded != da.coded || db.crashed != da.crashed {
+                equals_analysis = false;
+            }
+            if db.lost_sinks != da.lost_sinks || rep.sim != replayed.sim {
+                equals_analysis = false;
+            }
+            if recovered != lost as u64 {
+                equals_analysis = false;
+            }
+        }
+        println!("  lost={lost}: {us:>8} us/run (recovery {rec_us} us, {recovered} rows)");
+        sweep.push(SweepRow {
+            lost,
+            run_us: us,
+            recovery_us: rec_us,
+            recovered,
+        });
+    }
+
+    assert!(bit_identical, "transient chaos must leave outputs bit-identical");
+    assert!(equals_analysis, "peer degraded path must match replay analysis");
+
+    let transient_json: Vec<String> = transients
+        .iter()
+        .map(|t| {
+            format!(
+                concat!(
+                    "{{\"kind\":\"{}\",\"clean_us\":{},\"chaos_us\":{},",
+                    "\"retries\":{},\"rounds_delayed\":{}}}"
+                ),
+                t.kind,
+                t.clean_us,
+                t.chaos_us,
+                t.retries,
+                t.rounds_delayed
+            )
+        })
+        .collect();
+    let sweep_json: Vec<String> = sweep
+        .iter()
+        .map(|s| {
+            format!(
+                concat!(
+                    "{{\"lost_sinks\":{},\"run_us\":{},",
+                    "\"recovery_us\":{},\"outputs_recovered\":{}}}"
+                ),
+                s.lost,
+                s.run_us,
+                s.recovery_us,
+                s.recovered
+            )
+        })
+        .collect();
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"chaos\",\"smoke\":{},\"iters\":{},",
+            "\"transient_bit_identical\":{},",
+            "\"peer_degraded_equals_analysis\":{},",
+            "\"transients\":[{}],\"sweep\":[{}]}}"
+        ),
+        smoke,
+        iters,
+        bit_identical,
+        equals_analysis,
+        transient_json.join(","),
+        sweep_json.join(",")
+    );
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("manifest dir has a parent")
+        .join("BENCH_chaos.json");
+    std::fs::write(&path, format!("{json}\n"))
+        .unwrap_or_else(|e| panic!("could not write {}: {e}", path.display()));
+    println!("wrote {}", path.display());
+    println!("\nchaos bench complete");
+}

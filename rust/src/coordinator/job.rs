@@ -19,8 +19,8 @@ use crate::codes::{GrsCode, Recovery, StructuredPoints};
 use crate::error::{Error, RecoveryShortfall};
 use crate::framework::{systematic::Layout, CompiledPlan, PlanChoice, PlannedJob};
 use crate::gf::{AnyField, Field, IsaRequest, IsaTier, Mat};
-use crate::net::peer::{spawn_local, ShardedPlan};
-use crate::net::transport::TransportKind;
+use crate::net::peer::{spawn_local, spawn_local_chaos, RetryPolicy, ShardedPlan};
+use crate::net::transport::{ChaosSpec, TransportKind};
 use crate::net::{run, DegradedReport, FaultSpec, Outputs, Packet, ProcId, Sim, SimReport};
 use crate::util::{ipow, Rng};
 use std::sync::{Arc, OnceLock};
@@ -75,8 +75,10 @@ pub struct ExecOptions<'a> {
     /// Compiled-plan cache for the `Replay`/`Peer` engines (and for
     /// [`EncodeJob::run`]'s compile step). `None` compiles privately.
     pub cache: Option<&'a PlanCache>,
-    /// Fault injection: a degraded run with survivor repair. Not
-    /// supported on the `Peer` engine.
+    /// Fault injection: a degraded run with survivor repair. On the
+    /// `Peer` engine the same directives drive a seeded
+    /// [`ChaosTransport`](crate::net::transport::ChaosTransport) under
+    /// every rank and the mesh heals itself before the repair tail.
     pub faults: Option<&'a FaultSpec>,
     /// Per-call ISA override; `None` keeps the config's request.
     pub isa: Option<IsaRequest>,
@@ -128,6 +130,14 @@ pub struct DegradedInfo {
     pub outputs_recovered: usize,
     /// Wall time of the recovery pass (operator build + lincombs).
     pub recovery_wall: Duration,
+    /// Transient recv/barrier retries absorbed by the mesh (`Peer`
+    /// engine only; the simulator engines report zero).
+    pub peer_retries: u64,
+    /// Rank-rounds that needed at least one retry (`Peer` engine only).
+    pub peer_rounds_delayed: u64,
+    /// Dead peers the mesh detected on the wire and gossiped (`Peer`
+    /// engine only).
+    pub peer_crashes_detected: u64,
     /// All `R` coded rows in sink order — surviving sinks verbatim,
     /// lost sinks reconstructed; bit-identical to a healthy run's.
     pub coded: Vec<Packet>,
@@ -338,9 +348,9 @@ impl EncodeJob {
             (Engine::Peer(kind), None) => {
                 self.with_cache(opts, |job, cache| job.run_peer(cache, kind, opts.isa))
             }
-            (Engine::Peer(_), Some(_)) => anyhow::bail!(
-                "fault injection is not supported on the peer engine (use live or replay)"
-            ),
+            (Engine::Peer(kind), Some(faults)) => self.with_cache(opts, |job, cache| {
+                job.run_peer_degraded(cache, kind, faults, opts.isa)
+            }),
         }
     }
 
@@ -365,9 +375,9 @@ impl EncodeJob {
         opts: &ExecOptions,
     ) -> anyhow::Result<EncodeOutcome> {
         match (opts.engine, opts.faults) {
-            (Engine::Peer(_), Some(_)) => anyhow::bail!(
-                "fault injection is not supported on the peer engine (use live or replay)"
-            ),
+            (Engine::Peer(kind), Some(faults)) => {
+                self.encode_peer_degraded(cache, batch, kind, faults, opts.isa)
+            }
             (_, Some(faults)) => {
                 let (coded, stats) =
                     self.encode_degraded_impl(cache, batch, faults, opts.isa)?;
@@ -529,6 +539,103 @@ impl EncodeJob {
         Ok(EncodeOutcome {
             coded,
             recovery: None,
+        })
+    }
+
+    /// Peer engine under fault injection: wrap every rank's transport
+    /// in a [`ChaosTransport`](crate::net::transport::ChaosTransport)
+    /// driving the same `FaultSpec` directives, let the mesh heal
+    /// itself (crash gossip + zero substitution), then repair the lost
+    /// sink outputs from survivors exactly like the simulator engines.
+    fn run_peer_degraded(
+        &self,
+        cache: &PlanCache,
+        kind: TransportKind,
+        faults: &FaultSpec,
+        isa: Option<IsaRequest>,
+    ) -> anyhow::Result<JobReport> {
+        let t0 = Instant::now();
+        let compiled = self.compiled_with(cache, isa)?;
+        let sharded = self.sharded(&compiled)?;
+        let chaos = ChaosSpec::from_fault_spec(faults);
+        let run = spawn_local_chaos(
+            &sharded,
+            &self.field,
+            &self.inputs,
+            kind,
+            PEER_TIMEOUT,
+            &chaos,
+            &RetryPolicy::default(),
+        )?;
+        let mut report = self.finish_degraded(
+            compiled.choice,
+            compiled.layout,
+            run.report,
+            &run.outputs,
+            faults,
+            t0,
+        )?;
+        let d = report.degraded.as_mut().expect("degraded path set info");
+        d.peer_retries = run.retries;
+        d.peer_rounds_delayed = run.rounds_delayed;
+        d.peer_crashes_detected = run.crashes_detected.len() as u64;
+        Ok(report)
+    }
+
+    /// Peer engine, batched, under fault injection: every job runs the
+    /// full chaos-wrapped collective; the repair strategy is planned
+    /// once (the failure pattern is shape-level, pinned deterministic
+    /// by the seeded injector) and applied per job.
+    fn encode_peer_degraded(
+        &self,
+        cache: &PlanCache,
+        batch: &[&[Packet]],
+        kind: TransportKind,
+        faults: &FaultSpec,
+        isa: Option<IsaRequest>,
+    ) -> anyhow::Result<EncodeOutcome> {
+        let compiled = self.compiled_with(cache, isa)?;
+        let sharded = self.sharded(&compiled)?;
+        let chaos = ChaosSpec::from_fault_spec(faults);
+        let policy = RetryPolicy::default();
+        let mut repair: Option<Repair> = None;
+        let mut recovery_wall = Duration::ZERO;
+        let mut healing = (0u64, 0u64, 0u64);
+        let mut coded = Vec::with_capacity(batch.len());
+        for x in batch {
+            self.check_canonical(x)?;
+            let run = spawn_local_chaos(
+                &sharded,
+                &self.field,
+                x,
+                kind,
+                PEER_TIMEOUT,
+                &chaos,
+                &policy,
+            )?;
+            healing.0 += run.retries;
+            healing.1 += run.rounds_delayed;
+            healing.2 += run.crashes_detected.len() as u64;
+            let rt0 = Instant::now();
+            if repair.is_none() {
+                repair = Some(self.plan_repair(&compiled.layout, &run.report)?);
+            }
+            let rep = repair.as_ref().expect("repair planned on first job");
+            coded.push(self.apply_repair(rep, &compiled.layout, x, &run.outputs)?);
+            recovery_wall += rt0.elapsed();
+        }
+        let outputs_lost = repair.as_ref().map_or(0, |r| r.lost_sinks.len());
+        Ok(EncodeOutcome {
+            coded,
+            recovery: Some(RecoveryStats {
+                faults_injected: faults.injected(),
+                outputs_lost,
+                outputs_recovered: (outputs_lost * batch.len()) as u64,
+                recovery_wall,
+                peer_retries: healing.0,
+                peer_rounds_delayed: healing.1,
+                peer_crashes_detected: healing.2,
+            }),
         })
     }
 
@@ -699,6 +806,9 @@ impl EncodeJob {
             outputs_lost: repair.lost_sinks.len(),
             outputs_recovered: (repair.lost_sinks.len() * jobs.len()) as u64,
             recovery_wall: rt0.elapsed(),
+            peer_retries: 0,
+            peer_rounds_delayed: 0,
+            peer_crashes_detected: 0,
         };
         Ok((coded, stats))
     }
@@ -734,6 +844,9 @@ impl EncodeJob {
                 surviving_sinks: repair.surviving_sinks,
                 lost_sinks: repair.lost_sinks,
                 recovery_wall,
+                peer_retries: 0,
+                peer_rounds_delayed: 0,
+                peer_crashes_detected: 0,
                 coded,
             }),
         })
@@ -972,6 +1085,14 @@ pub struct RecoveryStats {
     /// Wall time of the recovery pass (operator build + lincombs, whole
     /// batch).
     pub recovery_wall: Duration,
+    /// Transient recv/barrier retries absorbed by the mesh (`Peer`
+    /// engine only; the simulator engines report zero).
+    pub peer_retries: u64,
+    /// Rank-rounds that needed at least one retry (`Peer` engine only).
+    pub peer_rounds_delayed: u64,
+    /// Dead peers detected on the wire, summed over the batch (`Peer`
+    /// engine only).
+    pub peer_crashes_detected: u64,
 }
 
 /// One failure pattern's repair strategy: which sinks are lost, which
@@ -1152,24 +1273,86 @@ mod tests {
     }
 
     #[test]
-    fn peer_engine_rejects_fault_injection() {
+    fn peer_engine_heals_fault_injection() {
+        let cache = crate::coordinator::PlanCache::new();
         let cfg = JobConfig {
-            k: 4,
-            r: 2,
-            w: 1,
+            k: 16,
+            r: 4,
+            w: 6,
             ..JobConfig::default()
         };
         let job = EncodeJob::synthetic(cfg).unwrap();
-        let faults = crate::net::FaultSpec::new().crash_after(0);
-        let err = job
+        let opts = ExecOptions::cached(&cache);
+        let healthy = job
+            .encode(&cache, &[job.inputs.as_slice()], &opts)
+            .unwrap()
+            .coded
+            .remove(0);
+        // Lose two sinks and one source after the run completed.
+        let faults = crate::net::FaultSpec::new()
+            .crash_after(16)
+            .crash_after(18)
+            .crash_after(3);
+        let replayed = job.run(&opts.faults(&faults)).unwrap();
+        let peer = job
             .run(
-                &ExecOptions::new()
-                    .engine(Engine::Peer(TransportKind::Channel))
-                    .faults(&faults),
+                &opts
+                    .faults(&faults)
+                    .engine(Engine::Peer(TransportKind::Channel)),
             )
-            .unwrap_err();
-        assert!(matches!(err, Error::Compile(_)));
-        assert!(format!("{:#}", err.inner()).contains("not supported"));
+            .unwrap();
+        let d = peer.degraded.as_ref().expect("degraded info");
+        assert_eq!(d.coded, healthy, "peer repair ≡ healthy");
+        assert_eq!(peer.verified, Some(true));
+        assert_eq!(d.lost_sinks, vec![0, 2]);
+        assert_eq!(d.outputs_recovered, 2);
+        // The peer mesh's receive-side observations reproduce the plan
+        // analysis: the delivered report matches the replay engine's.
+        assert_eq!(peer.sim, replayed.sim);
+        let rd = replayed.degraded.as_ref().unwrap();
+        assert_eq!(d.crashed, rd.crashed);
+        assert_eq!(d.peer_retries, 0, "post-run crashes never stall a round");
+        assert_eq!(d.peer_crashes_detected, 0, "post-run deaths leave no wire trace");
+    }
+
+    #[test]
+    fn peer_degraded_encode_matches_healthy_batch() {
+        let cache = crate::coordinator::PlanCache::new();
+        let cfg = JobConfig {
+            k: 8,
+            r: 4,
+            w: 3,
+            ..JobConfig::default()
+        };
+        let job = EncodeJob::synthetic(cfg.clone()).unwrap();
+        let f = job.field.clone();
+        use crate::gf::Field;
+        let mut rng = crate::util::Rng::new(29);
+        let jobs: Vec<Vec<Packet>> = (0..3)
+            .map(|_| {
+                (0..cfg.k)
+                    .map(|_| (0..cfg.w).map(|_| rng.below(f.order())).collect())
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[Packet]> = jobs.iter().map(|x| x.as_slice()).collect();
+        let opts = ExecOptions::cached(&cache);
+        let healthy = job.encode(&cache, &refs, &opts).unwrap().coded;
+        // One sink dies after encoding: its output is rebuilt per job.
+        let faults = crate::net::FaultSpec::new().crash_after(8);
+        let out = job
+            .encode(
+                &cache,
+                &refs,
+                &opts
+                    .faults(&faults)
+                    .engine(Engine::Peer(TransportKind::Channel)),
+            )
+            .unwrap();
+        assert_eq!(out.coded, healthy, "peer degraded batch ≡ healthy batch");
+        let stats = out.recovery.expect("recovery stats");
+        assert_eq!(stats.outputs_lost, 1);
+        assert_eq!(stats.outputs_recovered, jobs.len() as u64);
     }
 
     #[test]

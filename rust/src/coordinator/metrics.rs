@@ -67,6 +67,15 @@ pub const OUTPUTS_RECOVERED: &str = "outputs_recovered";
 /// Latency-series name: wall time of the erasure-recovery pass
 /// (decode-matrix build + survivor lincombs), per served batch.
 pub const RECOVERY_LATENCY: &str = "recovery_latency";
+/// Counter name: transient recv/barrier retries absorbed by peer-engine
+/// meshes (delay/duplicate/reorder faults healed by bounded backoff).
+pub const PEER_RETRIES: &str = "peer_retries";
+/// Counter name: peer rank-rounds that needed at least one retry — the
+/// straggler-round signal behind `peer_retries`.
+pub const PEER_ROUNDS_DELAYED: &str = "peer_rounds_delayed";
+/// Counter name: dead peers detected on the wire (and gossiped) by
+/// peer-engine meshes while serving degraded.
+pub const PEER_CRASHES_DETECTED: &str = "peer_crashes_detected";
 /// Counter name: jobs rejected because their packed-buffer layout did
 /// not match the plan's kernels (a typed
 /// [`LayoutMismatch`](crate::gf::kernels::LayoutMismatch), not a

@@ -545,7 +545,39 @@ impl EncodeService {
         queue_depth: usize,
         faults: crate::net::FaultSpec,
     ) -> Result<Self> {
-        Self::start_replay_inner(cfg, n_workers, queue_depth, cfg.serve.policy(), Some(faults))
+        Self::start_replay_inner(
+            cfg,
+            n_workers,
+            queue_depth,
+            cfg.serve.policy(),
+            Some(faults),
+            super::Engine::Replay,
+        )
+    }
+
+    /// Start a degraded **peer** service: every request runs the full
+    /// chaos-wrapped peer collective (the `FaultSpec` directives drive
+    /// a seeded fault-injecting transport under every rank), the mesh
+    /// heals transient faults and gossips crashes, and lost sink
+    /// outputs are repaired from survivors — responses stay
+    /// bit-identical to the healthy service's. Healing telemetry lands
+    /// in `peer_retries` / `peer_rounds_delayed` /
+    /// `peer_crashes_detected` next to the recovery counters.
+    pub fn start_peer_degraded(
+        cfg: &super::JobConfig,
+        n_workers: usize,
+        queue_depth: usize,
+        kind: crate::net::transport::TransportKind,
+        faults: crate::net::FaultSpec,
+    ) -> Result<Self> {
+        Self::start_replay_inner(
+            cfg,
+            n_workers,
+            queue_depth,
+            cfg.serve.policy(),
+            Some(faults),
+            super::Engine::Peer(kind),
+        )
     }
 
     /// [`start_replay`](EncodeService::start_replay) with an explicit
@@ -556,7 +588,7 @@ impl EncodeService {
         queue_depth: usize,
         policy: BatchPolicy,
     ) -> Result<Self> {
-        Self::start_replay_inner(cfg, n_workers, queue_depth, policy, None)
+        Self::start_replay_inner(cfg, n_workers, queue_depth, policy, None, super::Engine::Replay)
     }
 
     /// The shared replay-service spawner: healthy micro-batching when
@@ -567,6 +599,7 @@ impl EncodeService {
         queue_depth: usize,
         policy: BatchPolicy,
         faults: Option<crate::net::FaultSpec>,
+        engine: super::Engine,
     ) -> Result<Self> {
         anyhow::ensure!(policy.max_batch >= 1, "batch policy needs max_batch >= 1");
         anyhow::ensure!(n_workers >= 1, "need at least one worker");
@@ -604,7 +637,7 @@ impl EncodeService {
                     };
                     let metrics_for_recovery = metrics.clone();
                     batch_worker(&dispatcher, &metrics, move |jobs| {
-                        let base = super::job::ExecOptions::cached(&cache);
+                        let base = super::job::ExecOptions::cached(&cache).engine(engine);
                         let opts = match &*faults {
                             None => base,
                             Some(spec) => base.faults(spec),
@@ -618,6 +651,20 @@ impl EncodeService {
                             m.incr(metrics::FAULTS_INJECTED, injected);
                             m.incr(metrics::OUTPUTS_RECOVERED, stats.outputs_recovered);
                             m.observe(metrics::RECOVERY_LATENCY, stats.recovery_wall);
+                            // Peer-engine healing telemetry; the replay
+                            // path reports zeros, which stay silent.
+                            if stats.peer_retries > 0 {
+                                m.incr(metrics::PEER_RETRIES, stats.peer_retries);
+                            }
+                            if stats.peer_rounds_delayed > 0 {
+                                m.incr(metrics::PEER_ROUNDS_DELAYED, stats.peer_rounds_delayed);
+                            }
+                            if stats.peer_crashes_detected > 0 {
+                                m.incr(
+                                    metrics::PEER_CRASHES_DETECTED,
+                                    stats.peer_crashes_detected,
+                                );
+                            }
                         }
                         Ok(out.coded)
                     });
@@ -1120,6 +1167,51 @@ mod tests {
             "two sinks repaired per request"
         );
         assert!(svc.metrics.latency_summary(metrics::RECOVERY_LATENCY).is_some());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn peer_degraded_service_heals_and_reports_telemetry() {
+        let cfg = JobConfig {
+            k: 8,
+            r: 4,
+            w: 4,
+            ..JobConfig::default()
+        };
+        let f = cfg.any_field().unwrap();
+        let oracle_job = EncodeJob::synthetic(cfg.clone()).unwrap();
+        // Sink 0 (proc 8) crash-stops from round 1: the chaos injector
+        // under every rank swallows its traffic, the mesh detects and
+        // gossips the death, and the repair tail rebuilds its row.
+        let faults = crate::net::FaultSpec::new().crash(8);
+        let svc = EncodeService::start_peer_degraded(
+            &cfg,
+            1,
+            8,
+            crate::net::transport::TransportKind::Channel,
+            faults,
+        )
+        .unwrap();
+        let mut rng = crate::util::Rng::new(99);
+        let n_req = 2usize;
+        for _ in 0..n_req {
+            let x: Vec<Vec<u64>> = (0..cfg.k)
+                .map(|_| (0..cfg.w).map(|_| rng.below(f.order())).collect())
+                .collect();
+            let y = svc.submit(x.clone()).unwrap().recv().unwrap().y.unwrap();
+            assert_eq!(y.len(), cfg.r, "all R rows, the repaired ones included");
+            // A repaired row that diverged from x·A fails verification.
+            assert!(verify::native(&f, &oracle_job.parity, &x, &y));
+        }
+        assert_eq!(svc.metrics.counter(metrics::FAULTS_INJECTED), n_req as u64);
+        assert!(
+            svc.metrics.counter(metrics::OUTPUTS_RECOVERED) >= n_req as u64,
+            "the dead sink's row is rebuilt for every request"
+        );
+        assert!(
+            svc.metrics.counter(metrics::PEER_CRASHES_DETECTED) >= n_req as u64,
+            "every request's mesh detects the dead sink"
+        );
         svc.shutdown();
     }
 

@@ -127,8 +127,24 @@ impl FaultSpec {
         self.crashes.contains_key(&pid)
     }
 
-    fn link_or_erasure(&self, round: u64, src: ProcId, dst: ProcId) -> bool {
+    pub(crate) fn link_or_erasure(&self, round: u64, src: ProcId, dst: ProcId) -> bool {
         self.links.contains(&(src, dst)) || self.erasures.contains(&(round, src, dst))
+    }
+
+    /// Crash directives as `(pid, first dead round)` pairs (1-based) —
+    /// the chaos layer mirrors them onto the wire.
+    pub(crate) fn crash_entries(&self) -> impl Iterator<Item = (ProcId, u64)> + '_ {
+        self.crashes.iter().map(|(&p, &r)| (p, r))
+    }
+
+    /// Dropped directed links, ascending.
+    pub(crate) fn link_entries(&self) -> impl Iterator<Item = (ProcId, ProcId)> + '_ {
+        self.links.iter().copied()
+    }
+
+    /// Single-round erasures `(round, src, dst)`, ascending.
+    pub(crate) fn erasure_entries(&self) -> impl Iterator<Item = (u64, ProcId, ProcId)> + '_ {
+        self.erasures.iter().copied()
     }
 }
 

@@ -50,12 +50,15 @@ pub use payload::{
     pkt_add, pkt_add_scaled, pkt_scale, pkt_zero, FrameHeader, FrameKind, Packet,
     PackedPacketBuf, PacketBuf, FRAME_HEADER_LEN, FRAME_MAGIC,
 };
-pub use peer::{execute_shard, merge_stats, run_peer, spawn_local, PeerRun, PeerStats, ShardedPlan};
+pub use peer::{
+    execute_shard, merge_stats, run_peer, spawn_local, spawn_local_chaos, DegradedPeerRun,
+    PeerRun, PeerStats, RetryPolicy, ShardedPlan,
+};
 pub use plan::{compile, ComputeOp, Plan, PlanRecorder, RoundPlan, SendOp, SlotId};
 pub use shard::{LocalComb, LocalCompute, PlanShard, ShardRecv, ShardRound, ShardSend};
 pub use sim::{run, run_degraded, Collective, DegradedRun, Msg, Outputs, ProcId, Sim, SimReport};
 pub use trace::TraceEvent;
-pub use transport::{Transport, TransportError, TransportKind};
+pub use transport::{ChaosSpec, ChaosTransport, Transport, TransportError, TransportKind};
 
 #[cfg(feature = "parallel")]
 static PARALLEL_DISABLED: std::sync::atomic::AtomicBool =

@@ -8,6 +8,21 @@
 //! shard is consulted — no slot table, no other rank's schedule, no
 //! shared memory beyond the transport itself.
 //!
+//! The loop is **chaos-hardened**. Transient faults — stragglers,
+//! duplicated frames, reorder-within-round, whether injected by
+//! [`ChaosTransport`] or produced by a real network — are absorbed by
+//! bounded retry with exponential backoff ([`RetryPolicy`]): outputs
+//! stay bit-identical to a healthy run, with only `retries` /
+//! `rounds_delayed` counters as evidence. Permanent faults — crash-stop
+//! ranks, partitions — are handled by the degraded executor
+//! ([`execute_shard_degraded`]): ranks detect dead peers through typed
+//! `PeerClosed`/`Timeout` errors, zero-substitute the missing inputs
+//! exactly like the round simulator, gossip the crash set after the
+//! last scheduled round, and the harness folds every rank's
+//! receive-side observations through the same taint closure as
+//! [`fault::analyze_plan`](crate::net::fault::analyze_plan) — which is
+//! why `tests/chaos.rs` can assert the two reports equal.
+//!
 //! Conformance contract (enforced by `tests/peer.rs`): outputs are
 //! bit-identical to [`exec::replay`](crate::net::exec::replay), and the
 //! **measured** traffic — rounds crossed, messages shipped, per-round
@@ -15,12 +30,16 @@
 //! the simulator an honest oracle for the real thing.
 
 use crate::gf::Field;
+use crate::net::fault::DegradedReport;
 use crate::net::payload::Packet;
 use crate::net::plan::Plan;
 use crate::net::shard::PlanShard;
 use crate::net::sim::{Outputs, ProcId, SimReport};
-use crate::net::transport::{self, Transport, TransportKind};
+use crate::net::transport::{
+    self, ChaosSpec, ChaosTransport, Transport, TransportError, TransportKind,
+};
 use anyhow::{ensure, Context, Result};
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Duration;
 
 /// A Plan cut into per-processor shards, ready for peer execution.
@@ -58,6 +77,107 @@ impl ShardedPlan {
     }
 }
 
+/// Bounded retry with exponential backoff for *transient* transport
+/// faults. The budget covers the worst honest stacking a single
+/// receive can suffer under injected chaos (a straggler's charged
+/// timeouts, plus one stale duplicate, plus one reorder) with slack;
+/// anything that outlives it is treated as permanent.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts per operation (first try included).
+    pub max_attempts: u32,
+    /// Backoff before retry `i` is `base_backoff * 2^i`, capped.
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 6,
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(20),
+        }
+    }
+}
+
+impl RetryPolicy {
+    fn backoff(&self, attempt: u32) -> Duration {
+        let factor = 2u32.saturating_pow(attempt.min(16));
+        (self.base_backoff * factor).min(self.max_backoff)
+    }
+}
+
+/// Can a retry of the same operation heal this error?
+///
+/// * `Timeout` — a straggler (or an injected delay): the frame may
+///   still arrive.
+/// * `OutOfOrder` carrying an *older* round — a stale duplicate that
+///   the substrate consumed (or the chaos layer synthesized); the
+///   genuine frame is still next in FIFO order. A *newer* round means
+///   this rank fell behind the mesh — not healable by retrying.
+/// * `PortMismatch` — within-round reordering; same reasoning.
+fn is_transient(e: &TransportError) -> bool {
+    match e {
+        TransportError::Timeout { .. } => true,
+        TransportError::OutOfOrder {
+            expected_round,
+            got_round,
+            ..
+        } => got_round < expected_round,
+        TransportError::PortMismatch { .. } => true,
+        _ => false,
+    }
+}
+
+/// Receive with bounded retry: transient faults are retried (counted
+/// into `retries`), everything else — and a transient fault that
+/// outlives the budget — surfaces as the final error.
+fn recv_hardened(
+    transport: &mut dyn Transport,
+    round: u32,
+    port: u32,
+    src: ProcId,
+    policy: &RetryPolicy,
+    retries: &mut u64,
+) -> Result<Vec<Packet>, TransportError> {
+    let mut attempt = 0u32;
+    loop {
+        match transport.recv(round, port, src) {
+            Ok(rows) => return Ok(rows),
+            Err(e) if is_transient(&e) && attempt + 1 < policy.max_attempts.max(1) => {
+                *retries += 1;
+                std::thread::sleep(policy.backoff(attempt));
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Barrier with bounded retry — safe because every substrate's barrier
+/// is retry-idempotent (identified arrivals on `LocalBarrier`, resumed
+/// send/collect state on TCP).
+fn barrier_hardened(
+    transport: &mut dyn Transport,
+    round: u32,
+    policy: &RetryPolicy,
+    retries: &mut u64,
+) -> Result<(), TransportError> {
+    let mut attempt = 0u32;
+    loop {
+        match transport.barrier(round) {
+            Ok(()) => return Ok(()),
+            Err(e) if is_transient(&e) && attempt + 1 < policy.max_attempts.max(1) => {
+                *retries += 1;
+                std::thread::sleep(policy.backoff(attempt));
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
 /// What one rank measured while executing its shard — honest counts
 /// from the execution loop itself, not from plan statics.
 #[derive(Clone, Debug, Default)]
@@ -71,6 +191,10 @@ pub struct PeerStats {
     pub messages: u64,
     /// Field elements this rank sent (its bandwidth share).
     pub elems: u64,
+    /// Transient transport faults absorbed by retry.
+    pub retries: u64,
+    /// Rounds in which at least one retry happened (straggler rounds).
+    pub rounds_delayed: u64,
 }
 
 /// The merged result of a peer run.
@@ -83,11 +207,40 @@ pub struct PeerRun {
     /// `per_round_max[t]` = largest message any rank sent in round `t`,
     /// `c2` = their sum, plus total messages and bandwidth.
     pub measured: SimReport,
+    /// Transient faults absorbed across all ranks (zero on a healthy
+    /// mesh; the *only* trace a transient chaos scenario leaves).
+    pub retries: u64,
+    /// Rank-rounds that needed at least one retry.
+    pub rounds_delayed: u64,
+}
+
+fn eval_comb<F: Field>(
+    f: &F,
+    w: usize,
+    arena: &[Option<Packet>],
+    comb: &[(u64, usize)],
+) -> Result<Packet> {
+    let terms: Vec<(u64, &[u64])> = comb
+        .iter()
+        .map(|&(c, j)| {
+            arena[j]
+                .as_deref()
+                .map(|p| (c, p))
+                .with_context(|| format!("arena slot {j} not materialised"))
+        })
+        .collect::<Result<_>>()?;
+    let mut out = vec![0u64; w];
+    f.lincomb_into(&mut out, &terms);
+    Ok(out)
 }
 
 /// Execute one shard against a live transport. `my_inputs` are the
 /// values of `shard.owned`, in order. Returns this rank's final packet
 /// (if the Plan assigns one) and its measured traffic.
+///
+/// Transient faults are absorbed through the default [`RetryPolicy`];
+/// permanent faults surface as errors (use [`execute_shard_degraded`]
+/// to survive those).
 pub fn execute_shard<F: Field>(
     shard: &PlanShard,
     f: &F,
@@ -95,6 +248,7 @@ pub fn execute_shard<F: Field>(
     my_inputs: &[Packet],
     transport: &mut dyn Transport,
 ) -> Result<(Option<Packet>, PeerStats)> {
+    let policy = RetryPolicy::default();
     ensure!(
         my_inputs.len() == shard.owned.len(),
         "rank {} holds {} inputs, shard expects {}",
@@ -117,25 +271,12 @@ pub fn execute_shard<F: Field>(
         arena[i] = Some(pkt.clone());
     }
     let mut next = my_inputs.len();
-    let eval = |arena: &[Option<Packet>], comb: &[(u64, usize)]| -> Result<Packet> {
-        let terms: Vec<(u64, &[u64])> = comb
-            .iter()
-            .map(|&(c, j)| {
-                arena[j]
-                    .as_deref()
-                    .map(|p| (c, p))
-                    .with_context(|| format!("arena slot {j} not materialised"))
-            })
-            .collect::<Result<_>>()?;
-        let mut out = vec![0u64; w];
-        f.lincomb_into(&mut out, &terms);
-        Ok(out)
-    };
     let mut stats = PeerStats::default();
     for (t, round) in shard.rounds.iter().enumerate() {
         let t32 = t as u32;
+        let retries_before = stats.retries;
         for comp in &round.computes {
-            let pkt = eval(&arena, &comp.comb)
+            let pkt = eval_comb(f, w, &arena, &comp.comb)
                 .with_context(|| format!("rank {}: compute for slot {}", shard.proc, comp.slot))?;
             arena[next] = Some(pkt);
             next += 1;
@@ -166,14 +307,20 @@ pub fn execute_shard<F: Field>(
         }
         stats.per_round_sent_max.push(sent_max);
         for recv in &round.recvs {
-            let rows = transport
-                .recv(t32, recv.port, recv.src)
-                .with_context(|| {
-                    format!(
-                        "rank {}: recv from {} port {} in round {t}",
-                        shard.proc, recv.src, recv.port
-                    )
-                })?;
+            let rows = recv_hardened(
+                transport,
+                t32,
+                recv.port,
+                recv.src,
+                &policy,
+                &mut stats.retries,
+            )
+            .with_context(|| {
+                format!(
+                    "rank {}: recv from {} port {} in round {t}",
+                    shard.proc, recv.src, recv.port
+                )
+            })?;
             ensure!(
                 rows.len() == recv.n_slots,
                 "rank {}: round {t} message from {} carries {} packets, schedule says {}",
@@ -199,15 +346,18 @@ pub fn execute_shard<F: Field>(
                 next += 1;
             }
         }
-        transport
-            .barrier(t32)
+        barrier_hardened(transport, t32, &policy, &mut stats.retries)
             .with_context(|| format!("rank {}: barrier for round {t}", shard.proc))?;
         stats.rounds += 1;
+        if stats.retries > retries_before {
+            stats.rounds_delayed += 1;
+        }
     }
     let output = match &shard.output {
         None => None,
         Some(comb) => Some(
-            eval(&arena, comb).with_context(|| format!("rank {}: final output", shard.proc))?,
+            eval_comb(f, w, &arena, comb)
+                .with_context(|| format!("rank {}: final output", shard.proc))?,
         ),
     };
     Ok((output, stats))
@@ -232,10 +382,381 @@ pub fn merge_stats(n_rounds: usize, stats: &[PeerStats]) -> SimReport {
     }
 }
 
+/// One rank's receive-side trace of a degraded run — everything the
+/// harness needs to reconstruct the global taint closure without any
+/// rank ever holding global state.
+#[derive(Clone, Debug, Default)]
+struct RankObservation {
+    /// 1-based round at which this rank found *itself* dead (its first
+    /// wire operation of that round failed self-addressed).
+    self_crashed_from: Option<u64>,
+    /// Peer → earliest 1-based round this rank saw it dead.
+    crash_seen: BTreeMap<ProcId, u64>,
+    /// Every receive the schedule promised this rank, in round order:
+    /// `(round, src, elems, delivered)`. Ghost rounds log their
+    /// scheduled arrivals as undelivered — that is what makes the union
+    /// over ranks exactly the schedule's message multiset.
+    in_edges: Vec<(u64, ProcId, u64, bool)>,
+}
+
+/// What one rank's degraded execution produced.
+struct ShardOutcome {
+    proc: ProcId,
+    output: Option<Packet>,
+    stats: PeerStats,
+    obs: RankObservation,
+}
+
+/// The merged result of a chaos run with permanent faults: surviving
+/// outputs, the wire-observed [`DegradedReport`], and the healing
+/// telemetry the coordinator exports as metrics.
+#[derive(Clone, Debug)]
+pub struct DegradedPeerRun {
+    /// Outputs of every rank that finished — crashed ranks' outputs are
+    /// dropped (a dead node holds nothing), tainted ranks' garbage is
+    /// kept, mirroring the live engine's degraded semantics.
+    pub outputs: Outputs,
+    /// Built from receive-side observations only; `tests/chaos.rs`
+    /// asserts it equals [`analyze_plan`](crate::net::fault::analyze_plan)
+    /// on the same spec.
+    pub report: DegradedReport,
+    /// Transient faults absorbed across ranks.
+    pub retries: u64,
+    /// Rank-rounds that needed at least one retry.
+    pub rounds_delayed: u64,
+    /// Dead peers detected on the wire (union over ranks, incl. the
+    /// self-detections gossiped after the last round).
+    pub crashes_detected: BTreeSet<ProcId>,
+}
+
+/// Execute one shard expecting *permanent* faults: a dead peer's
+/// missing inputs are zero-substituted (exactly like the round
+/// simulator's degraded walk), this rank's own crash turns it into a
+/// **ghost** that keeps crossing barriers so the mesh stays
+/// round-synchronous, and after the last scheduled round the alive
+/// ranks gossip their crash observations so every survivor knows the
+/// full crash set.
+fn execute_shard_degraded<F: Field>(
+    shard: &PlanShard,
+    f: &F,
+    w: usize,
+    my_inputs: &[Packet],
+    transport: &mut dyn Transport,
+    policy: &RetryPolicy,
+) -> Result<ShardOutcome> {
+    ensure!(
+        my_inputs.len() == shard.owned.len(),
+        "rank {} holds {} inputs, shard expects {}",
+        shard.proc,
+        my_inputs.len(),
+        shard.owned.len()
+    );
+    let me = shard.proc;
+    let procs: Vec<ProcId> = transport.peers().to_vec();
+    let mut arena: Vec<Option<Packet>> = vec![None; shard.n_local];
+    for (i, pkt) in my_inputs.iter().enumerate() {
+        arena[i] = Some(pkt.clone());
+    }
+    let mut next = my_inputs.len();
+    let mut stats = PeerStats::default();
+    let mut obs = RankObservation::default();
+    for (t, round) in shard.rounds.iter().enumerate() {
+        let t32 = t as u32;
+        let t1 = t as u64 + 1;
+        let retries_before = stats.retries;
+        let mut ghost = obs.self_crashed_from.is_some();
+        if !ghost {
+            for comp in &round.computes {
+                let pkt = eval_comb(f, w, &arena, &comp.comb).with_context(|| {
+                    format!("rank {me}: compute for slot {}", comp.slot)
+                })?;
+                arena[next] = Some(pkt);
+                next += 1;
+            }
+            let mut sent_max = 0u64;
+            for send in &round.sends {
+                let rows: Vec<Packet> = send
+                    .locals
+                    .iter()
+                    .map(|&j| {
+                        arena[j]
+                            .clone()
+                            .with_context(|| format!("arena slot {j} not materialised"))
+                    })
+                    .collect::<Result<_>>()?;
+                match transport.send(t32, send.port, send.dst, &rows) {
+                    Ok(()) => {
+                        let elems = (rows.len() * w) as u64;
+                        sent_max = sent_max.max(elems);
+                        stats.messages += 1;
+                        stats.elems += elems;
+                    }
+                    Err(TransportError::PeerClosed { peer, .. }) if peer == me => {
+                        // Our own crash round: every wire op from here
+                        // on is dead — become a ghost.
+                        obs.self_crashed_from = Some(t1);
+                        ghost = true;
+                        break;
+                    }
+                    Err(TransportError::PeerClosed { peer, .. }) => {
+                        let e = obs.crash_seen.entry(peer).or_insert(t1);
+                        *e = (*e).min(t1);
+                    }
+                    Err(TransportError::Timeout { .. }) => {
+                        // The frame may be lost; the receiver's side of
+                        // the trace decides what that means.
+                    }
+                    Err(e) => {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "rank {me}: send to {} port {} in round {t}",
+                                send.dst, send.port
+                            )
+                        })
+                    }
+                }
+            }
+            stats.per_round_sent_max.push(sent_max);
+        }
+        for recv in &round.recvs {
+            let elems = (recv.n_slots * w) as u64;
+            if ghost {
+                obs.in_edges.push((t1, recv.src, elems, false));
+                continue;
+            }
+            ensure!(
+                recv.first_local == next,
+                "shard arena misalignment at rank {me} round {t}"
+            );
+            // Known-dead source: don't burn a timeout on silence we can
+            // predict — synthesize the drop directly.
+            let known_dead = obs.crash_seen.get(&recv.src).is_some_and(|&r| r <= t1);
+            let got = if known_dead {
+                Err(TransportError::PeerClosed {
+                    round: t32,
+                    peer: recv.src,
+                })
+            } else {
+                recv_hardened(transport, t32, recv.port, recv.src, policy, &mut stats.retries)
+            };
+            match got {
+                Ok(rows) => {
+                    ensure!(
+                        rows.len() == recv.n_slots,
+                        "rank {me}: round {t} message from {} carries {} packets, schedule says {}",
+                        recv.src,
+                        rows.len(),
+                        recv.n_slots
+                    );
+                    for row in rows {
+                        ensure!(
+                            row.len() == w,
+                            "rank {me}: packet width {} != {w} from {}",
+                            row.len(),
+                            recv.src
+                        );
+                        arena[next] = Some(row);
+                        next += 1;
+                    }
+                    obs.in_edges.push((t1, recv.src, elems, true));
+                }
+                Err(TransportError::PeerClosed { peer, .. }) if peer == me => {
+                    obs.self_crashed_from = Some(t1);
+                    ghost = true;
+                    obs.in_edges.push((t1, recv.src, elems, false));
+                }
+                Err(TransportError::PeerClosed { .. }) => {
+                    // The source is *crashed* (closed its side): it
+                    // stays dead — remember the round so later rounds
+                    // take the fast path instead of burning timeouts.
+                    let e = obs.crash_seen.entry(recv.src).or_insert(t1);
+                    *e = (*e).min(t1);
+                    // Zero-substitute the missing packets — the exact
+                    // degraded semantics of `sim::run_degraded`: the
+                    // schedule marches on, the values are zeros.
+                    for _ in 0..recv.n_slots {
+                        arena[next] = Some(vec![0u64; w]);
+                        next += 1;
+                    }
+                    obs.in_edges.push((t1, recv.src, elems, false));
+                }
+                Err(TransportError::Timeout { .. }) => {
+                    // Silence (partition or single-round erasure): the
+                    // message is lost but the source may be alive —
+                    // and an erased link heals next round, so this
+                    // must NOT mark the source dead.
+                    for _ in 0..recv.n_slots {
+                        arena[next] = Some(vec![0u64; w]);
+                        next += 1;
+                    }
+                    obs.in_edges.push((t1, recv.src, elems, false));
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!(
+                            "rank {me}: recv from {} port {} in round {t}",
+                            recv.src, recv.port
+                        )
+                    })
+                }
+            }
+        }
+        cross_degraded_barrier(transport, t32, t1, &obs, policy, &mut stats.retries)
+            .with_context(|| format!("rank {me}: barrier for round {t}"))?;
+        stats.rounds += 1;
+        if stats.retries > retries_before {
+            stats.rounds_delayed += 1;
+        }
+    }
+    gossip_crash_set(
+        transport,
+        shard.rounds.len() as u32,
+        &procs,
+        &mut obs,
+        policy,
+        &mut stats.retries,
+    )?;
+    let output = match (&shard.output, obs.self_crashed_from) {
+        (_, Some(_)) | (None, _) => None,
+        (Some(comb), None) => Some(
+            eval_comb(f, w, &arena, comb).with_context(|| format!("rank {me}: final output"))?,
+        ),
+    };
+    Ok(ShardOutcome {
+        proc: me,
+        output,
+        stats,
+        obs,
+    })
+}
+
+/// Cross a round barrier in a degraded run: retry transients, and
+/// treat an error blamed on a peer we already know is dead as crossed
+/// (on a real mesh the dead process cannot arrive; every survivor
+/// makes the same call, so the mesh stays synchronized).
+fn cross_degraded_barrier(
+    transport: &mut dyn Transport,
+    round: u32,
+    t1: u64,
+    obs: &RankObservation,
+    policy: &RetryPolicy,
+    retries: &mut u64,
+) -> Result<(), TransportError> {
+    let mut attempt = 0u32;
+    loop {
+        match transport.barrier(round) {
+            Ok(()) => return Ok(()),
+            Err(
+                TransportError::Timeout { peer, .. } | TransportError::PeerClosed { peer, .. },
+            ) if obs.crash_seen.get(&peer).is_some_and(|&r| r <= t1) => {
+                return Ok(());
+            }
+            Err(e) if is_transient(&e) && attempt + 1 < policy.max_attempts.max(1) => {
+                *retries += 1;
+                std::thread::sleep(policy.backoff(attempt));
+                attempt += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// One extra all-to-all after the last scheduled round: each alive
+/// rank ships its `crash_seen` map (packed as one `u64` per
+/// participant — 0 for "alive as far as I know") and min-merges what
+/// it hears back. Ghosts skip it (their sends are dead); partitioned
+/// links lose it (crash knowledge travels only where messages can).
+fn gossip_crash_set(
+    transport: &mut dyn Transport,
+    round: u32,
+    procs: &[ProcId],
+    obs: &mut RankObservation,
+    policy: &RetryPolicy,
+    retries: &mut u64,
+) -> Result<()> {
+    let me = transport.rank();
+    let t1 = round as u64 + 1;
+    let ghost = obs.self_crashed_from.is_some();
+    if !ghost {
+        let mut packet = vec![0u64; procs.len()];
+        for (i, &p) in procs.iter().enumerate() {
+            if let Some(&r) = obs.crash_seen.get(&p) {
+                packet[i] = r;
+            }
+        }
+        let rows = [packet];
+        for &dst in procs {
+            if dst == me {
+                continue;
+            }
+            match transport.send(round, 0, dst, &rows) {
+                Ok(()) | Err(TransportError::Timeout { .. }) => {}
+                Err(TransportError::PeerClosed { peer, .. }) if peer == me => {
+                    obs.self_crashed_from = Some(t1);
+                    break;
+                }
+                Err(TransportError::PeerClosed { peer, .. }) => {
+                    let e = obs.crash_seen.entry(peer).or_insert(t1);
+                    *e = (*e).min(t1);
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("rank {me}: crash gossip to {dst}"))
+                }
+            }
+        }
+    }
+    if obs.self_crashed_from.is_none() {
+        for &src in procs {
+            if src == me {
+                continue;
+            }
+            if obs.crash_seen.get(&src).is_some_and(|&r| r <= t1) {
+                continue; // the dead don't gossip
+            }
+            match recv_hardened(transport, round, 0, src, policy, retries) {
+                Ok(rows) => {
+                    if let Some(row) = rows.first() {
+                        for (i, &p) in procs.iter().enumerate() {
+                            match row.get(i) {
+                                Some(&r) if r > 0 && p != me => {
+                                    let e = obs.crash_seen.entry(p).or_insert(r);
+                                    *e = (*e).min(r);
+                                }
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+                Err(TransportError::PeerClosed { peer, .. }) if peer == me => {
+                    obs.self_crashed_from = Some(t1);
+                    break;
+                }
+                Err(TransportError::PeerClosed { peer, .. }) if peer == src => {
+                    let e = obs.crash_seen.entry(src).or_insert(t1);
+                    *e = (*e).min(t1);
+                }
+                Err(TransportError::Timeout { .. }) => {
+                    // Partitioned away: no gossip across a cut link.
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| format!("rank {me}: crash gossip from {src}"))
+                }
+            }
+        }
+    }
+    cross_degraded_barrier(transport, round, t1, obs, policy, retries)
+        .with_context(|| format!("rank {me}: gossip barrier"))?;
+    Ok(())
+}
+
 /// Run all ranks of a sharded plan as threads over a fresh in-process
 /// mesh of the given kind — the test/bench harness for peer execution
 /// (`examples/peer_encode.rs` does the same dance with real processes
 /// over TCP).
+///
+/// When `DCE_CHAOS` names a *transient-only* scenario, every endpoint
+/// is wrapped in a [`ChaosTransport`] — the run must still produce
+/// bit-identical outputs, just with nonzero `retries`.
 pub fn spawn_local<F: Field + Sync>(
     sharded: &ShardedPlan,
     f: &F,
@@ -254,7 +775,20 @@ pub fn spawn_local<F: Field + Sync>(
         ensure!(pkt.len() == w, "ragged input widths");
     }
     let max_msg_bytes = sharded.max_msg_packets * w * 8;
-    let mesh = transport::mesh(kind, &sharded.procs, sharded.ports, max_msg_bytes, timeout)?;
+    let mut mesh = transport::mesh(kind, &sharded.procs, sharded.ports, max_msg_bytes, timeout)?;
+    if let Some(spec) = ChaosSpec::from_env() {
+        if spec.is_transient_only() {
+            mesh = mesh
+                .into_iter()
+                .map(|t| Box::new(ChaosTransport::wrap(t, spec.clone())) as Box<dyn Transport>)
+                .collect();
+        } else {
+            eprintln!(
+                "dce: DCE_CHAOS carries permanent faults; those need the chaos harness \
+                 (spawn_local_chaos), ignoring for this healthy run"
+            );
+        }
+    }
     let ran: Vec<Result<(ProcId, Option<Packet>, PeerStats)>> = std::thread::scope(|s| {
         let handles: Vec<_> = sharded
             .shards
@@ -285,8 +819,140 @@ pub fn spawn_local<F: Field + Sync>(
         stats.push(st);
     }
     Ok(PeerRun {
-        outputs,
         measured: merge_stats(sharded.n_rounds, &stats),
+        retries: stats.iter().map(|s| s.retries).sum(),
+        rounds_delayed: stats.iter().map(|s| s.rounds_delayed).sum(),
+        outputs,
+    })
+}
+
+/// Run a sharded plan under a [`ChaosSpec`] that may include permanent
+/// faults: every endpoint is chaos-wrapped, every rank runs the
+/// degraded executor, and the harness folds the receive-side traces
+/// through the taint closure — producing a [`DegradedReport`] that
+/// must equal [`analyze_plan`](crate::net::fault::analyze_plan) on
+/// `chaos.to_fault_spec()`.
+pub fn spawn_local_chaos<F: Field + Sync>(
+    sharded: &ShardedPlan,
+    f: &F,
+    inputs: &[Packet],
+    kind: TransportKind,
+    timeout: Duration,
+    chaos: &ChaosSpec,
+    policy: &RetryPolicy,
+) -> Result<DegradedPeerRun> {
+    ensure!(
+        inputs.len() == sharded.n_inputs,
+        "{} inputs for a {}-input plan",
+        inputs.len(),
+        sharded.n_inputs
+    );
+    let w = inputs.first().map_or(0, |p| p.len());
+    for pkt in inputs {
+        ensure!(pkt.len() == w, "ragged input widths");
+    }
+    let n_procs = sharded.procs.len();
+    // The gossip packet (one u64 per participant) must also fit.
+    let max_msg_bytes = (sharded.max_msg_packets * w * 8).max((n_procs + 1) * 8);
+    let mesh = transport::mesh(
+        kind,
+        &sharded.procs,
+        sharded.ports.max(1),
+        max_msg_bytes,
+        timeout,
+    )?;
+    let ran: Vec<Result<ShardOutcome>> = std::thread::scope(|s| {
+        let handles: Vec<_> = sharded
+            .shards
+            .iter()
+            .zip(mesh)
+            .map(|(shard, transport)| {
+                let my_inputs: Vec<Packet> =
+                    shard.owned.iter().map(|&k| inputs[k].clone()).collect();
+                let mut chaotic = ChaosTransport::wrap(transport, chaos.clone());
+                s.spawn(move || {
+                    execute_shard_degraded(shard, f, w, &my_inputs, &mut chaotic, policy)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("peer rank panicked"))
+            .collect()
+    });
+    let outcomes: Vec<ShardOutcome> = ran.into_iter().collect::<Result<_>>()?;
+    // The authoritative crash set is the spec's directives (a rank
+    // whose crash round lies beyond its schedule — POST_RUN, or a
+    // degenerate shard with no wire traffic — has no wire op to fail,
+    // so no self-report; the directive still loses its output).
+    let crash_round: BTreeMap<ProcId, u64> = chaos.crash_entries().collect();
+    let mut crashes_detected: BTreeSet<ProcId> = BTreeSet::new();
+    for o in &outcomes {
+        crashes_detected.extend(o.obs.crash_seen.keys().copied());
+        if o.obs.self_crashed_from.is_some() {
+            crashes_detected.insert(o.proc);
+        }
+    }
+    // Fold every rank's receive-side trace through the same taint
+    // closure as `fault::analyze_plan`: each scheduled message appears
+    // exactly once (its receiver logged it — ghosts included), rounds
+    // ascend, and taint propagates only across strictly later rounds,
+    // so within-round order is immaterial.
+    let mut edges: Vec<(u64, ProcId, ProcId, u64, bool)> = Vec::new();
+    for o in &outcomes {
+        for &(t, src, elems, delivered) in &o.obs.in_edges {
+            edges.push((t, src, o.proc, elems, delivered));
+        }
+    }
+    edges.sort_unstable_by_key(|&(t, src, dst, ..)| (t, src, dst));
+    let alive_at = |pid: ProcId, t: u64| !crash_round.get(&pid).is_some_and(|&r| t >= r);
+    let mut taint: BTreeMap<ProcId, u64> = BTreeMap::new();
+    let mut delivered_report = SimReport {
+        c1: sharded.n_rounds as u64,
+        per_round_max: vec![0u64; sharded.n_rounds],
+        ..SimReport::default()
+    };
+    let mut dropped_messages = 0u64;
+    let mut dropped_elems = 0u64;
+    for &(t, src, dst, elems, delivered) in &edges {
+        if !delivered {
+            dropped_messages += 1;
+            dropped_elems += elems;
+            if alive_at(dst, t) {
+                taint.entry(dst).or_insert(t);
+            }
+        } else {
+            if taint.get(&src).is_some_and(|&t0| t0 < t) {
+                taint.entry(dst).or_insert(t);
+            }
+            let slot = &mut delivered_report.per_round_max[(t - 1) as usize];
+            *slot = (*slot).max(elems);
+            delivered_report.messages += 1;
+            delivered_report.bandwidth += elems;
+        }
+    }
+    delivered_report.c2 = delivered_report.per_round_max.iter().sum();
+    let report = DegradedReport {
+        delivered: delivered_report,
+        dropped_messages,
+        dropped_elems,
+        crashed: crash_round.keys().copied().collect(),
+        tainted: taint.keys().copied().collect(),
+    };
+    let mut outputs = Outputs::new();
+    for o in &outcomes {
+        if let Some(pkt) = &o.output {
+            if !crash_round.contains_key(&o.proc) {
+                outputs.insert(o.proc, pkt.clone());
+            }
+        }
+    }
+    Ok(DegradedPeerRun {
+        outputs,
+        report,
+        retries: outcomes.iter().map(|o| o.stats.retries).sum(),
+        rounds_delayed: outcomes.iter().map(|o| o.stats.rounds_delayed).sum(),
+        crashes_detected,
     })
 }
 

@@ -37,7 +37,7 @@ impl ChannelTransport {
     /// by a dedicated channel per directed pair, sharing one round
     /// barrier. Every recv and barrier is bounded by `timeout`.
     pub fn mesh(procs: &[ProcId], timeout: Duration) -> Vec<ChannelTransport> {
-        let barrier = Arc::new(LocalBarrier::new(procs.len()));
+        let barrier = Arc::new(LocalBarrier::new(procs));
         // senders[dst][src] / receivers[dst][src]
         let mut rx_for: HashMap<ProcId, HashMap<ProcId, Receiver<WireMsg>>> =
             procs.iter().map(|&p| (p, HashMap::new())).collect();
@@ -127,19 +127,13 @@ impl Transport for ChannelTransport {
     }
 
     fn barrier(&mut self, round: u32) -> Result<(), TransportError> {
-        self.barrier.wait(self.timeout).map_err(|waited| {
-            // No single peer to blame for a missed barrier; report the
-            // lowest other rank as the representative.
-            let peer = self
-                .procs
-                .iter()
-                .copied()
-                .find(|&p| p != self.rank)
-                .unwrap_or(self.rank);
+        self.barrier.wait(self.rank, self.timeout).map_err(|miss| {
+            // Blame the first rank that had not arrived when we gave up.
+            let peer = miss.missing.first().copied().unwrap_or(self.rank);
             TransportError::Timeout {
                 round,
                 peer,
-                waited,
+                waited: miss.waited,
             }
         })
     }

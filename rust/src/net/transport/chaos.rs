@@ -1,0 +1,699 @@
+//! Seeded, deterministic fault injection at the frame layer.
+//!
+//! [`ChaosTransport`] decorates any [`Transport`] — channel, shmem, or
+//! TCP — and perturbs its traffic according to a [`ChaosSpec`]:
+//!
+//! * **Transient** faults (stragglers via per-link delay, duplicated
+//!   frames, reorder-within-round) surface as the same typed
+//!   [`TransportError`]s a hostile network would produce. A hardened
+//!   executor must absorb them completely: outputs stay bit-identical
+//!   to a healthy run.
+//! * **Permanent** faults (crash-at-round, partitioned links,
+//!   single-round erasures) reuse the [`FaultSpec`] vocabulary of the
+//!   round simulator, so one scenario drives both the simulator
+//!   ([`fault::analyze_plan`](crate::net::fault::analyze_plan)) and the
+//!   real mesh — that equivalence is what `tests/chaos.rs` asserts.
+//!
+//! Every decision is a pure function of `(seed, fault kind, round,
+//! port, src, dst)` — no RNG state, no wall clock — so a scenario
+//! replays identically across transports, thread schedules, and
+//! processes. Crucially, injected failures are *synthesized before
+//! touching the inner transport*: the real frame stays queued in
+//! order, so a retry after an injected timeout finds the genuine
+//! payload and the substrate's strict round/port FIFO is never
+//! poisoned.
+
+use crate::net::fault::FaultSpec;
+use crate::net::payload::Packet;
+use crate::net::sim::ProcId;
+use crate::net::transport::{Transport, TransportError};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::time::Duration;
+
+/// Salt constants keep the per-fault-kind hash streams independent:
+/// whether a link is delayed says nothing about whether it duplicates.
+const SALT_DELAY: u64 = 0x9E37_79B9_7F4A_7C15;
+const SALT_DUP: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const SALT_REORDER: u64 = 0x1656_67B1_9E37_79F9;
+
+/// A deterministic chaos scenario: transient knobs (per-mille rates
+/// under a seed) plus permanent directives borrowed verbatim from the
+/// [`FaultSpec`] vocabulary (1-based rounds, [`POST_RUN`] sentinel).
+///
+/// [`POST_RUN`]: crate::net::fault::POST_RUN
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChaosSpec {
+    /// Seed for every injection decision.
+    pub seed: u64,
+    /// Per-mille (0..=1000) chance a scheduled receive is a straggler.
+    pub delay_per_mille: u16,
+    /// How many consecutive timeouts a straggler costs (normalised to
+    /// at least 1; keep below the executor's retry budget).
+    pub delay_attempts: u32,
+    /// Per-mille chance a delivered frame is followed by a stale
+    /// duplicate on the same link.
+    pub dup_per_mille: u16,
+    /// Per-mille chance the frames of one round arrive port-swapped.
+    pub reorder_per_mille: u16,
+    /// `pid -> first dead round` (1-based), exactly like `FaultSpec`.
+    crashes: BTreeMap<ProcId, u64>,
+    /// Directed links that never deliver (partition edges).
+    partitions: BTreeSet<(ProcId, ProcId)>,
+    /// Single-round erasures `(round, src, dst)`, 1-based.
+    erasures: BTreeSet<(u64, ProcId, ProcId)>,
+}
+
+impl ChaosSpec {
+    pub fn new() -> Self {
+        ChaosSpec::default()
+    }
+
+    /// No faults at all — the decorator becomes a pass-through.
+    pub fn is_empty(&self) -> bool {
+        *self == ChaosSpec::default() || {
+            self.delay_per_mille == 0
+                && self.dup_per_mille == 0
+                && self.reorder_per_mille == 0
+                && self.crashes.is_empty()
+                && self.partitions.is_empty()
+                && self.erasures.is_empty()
+        }
+    }
+
+    /// Only transient faults (delay/dup/reorder) — the hardened
+    /// executor must absorb these bit-identically, with no degraded
+    /// report.
+    pub fn is_transient_only(&self) -> bool {
+        self.crashes.is_empty() && self.partitions.is_empty() && self.erasures.is_empty()
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Straggle `per_mille`‰ of receives for `attempts` timeouts each.
+    pub fn delay(mut self, per_mille: u16, attempts: u32) -> Self {
+        self.delay_per_mille = per_mille.min(1000);
+        self.delay_attempts = attempts;
+        self
+    }
+
+    /// Duplicate `per_mille`‰ of delivered frames.
+    pub fn dup(mut self, per_mille: u16) -> Self {
+        self.dup_per_mille = per_mille.min(1000);
+        self
+    }
+
+    /// Port-swap `per_mille`‰ of within-round deliveries.
+    pub fn reorder(mut self, per_mille: u16) -> Self {
+        self.reorder_per_mille = per_mille.min(1000);
+        self
+    }
+
+    /// `pid` is dead for the entire run (from round 1 on).
+    pub fn crash(self, pid: ProcId) -> Self {
+        self.crash_from(pid, 1)
+    }
+
+    /// `pid` is dead from 1-based `round` on.
+    pub fn crash_from(mut self, pid: ProcId, round: u64) -> Self {
+        let r = self.crashes.entry(pid).or_insert(round);
+        *r = (*r).min(round);
+        self
+    }
+
+    /// `pid` executes every round healthily, then its output is lost —
+    /// [`POST_RUN`](crate::net::fault::POST_RUN) storage loss.
+    pub fn crash_after(self, pid: ProcId) -> Self {
+        self.crash_from(pid, crate::net::fault::POST_RUN)
+    }
+
+    /// The directed link `src -> dst` never delivers.
+    pub fn partition(mut self, src: ProcId, dst: ProcId) -> Self {
+        self.partitions.insert((src, dst));
+        self
+    }
+
+    /// Cut every directed link between the two groups (a network
+    /// partition: `a` and `b` can no longer talk in either direction).
+    pub fn split(mut self, a: &[ProcId], b: &[ProcId]) -> Self {
+        for &x in a {
+            for &y in b {
+                self.partitions.insert((x, y));
+                self.partitions.insert((y, x));
+            }
+        }
+        self
+    }
+
+    /// Drop exactly the message `src -> dst` of 1-based `round`.
+    pub fn erase(mut self, round: u64, src: ProcId, dst: ProcId) -> Self {
+        self.erasures.insert((round, src, dst));
+        self
+    }
+
+    /// The permanent directives as a [`FaultSpec`], so the simulator's
+    /// [`analyze_plan`](crate::net::fault::analyze_plan) predicts what
+    /// the chaos-wrapped mesh will produce.
+    pub fn to_fault_spec(&self) -> FaultSpec {
+        let mut spec = FaultSpec::new();
+        for (&pid, &round) in &self.crashes {
+            spec = spec.crash_from(pid, round);
+        }
+        for &(src, dst) in &self.partitions {
+            spec = spec.drop_link(src, dst);
+        }
+        for &(round, src, dst) in &self.erasures {
+            spec = spec.erase(round, src, dst);
+        }
+        spec
+    }
+
+    /// Mirror a simulator [`FaultSpec`] onto the wire (the inverse of
+    /// [`to_fault_spec`](ChaosSpec::to_fault_spec); transient knobs
+    /// stay zero — the simulator has no notion of them).
+    pub fn from_fault_spec(spec: &FaultSpec) -> Self {
+        let mut chaos = ChaosSpec::new();
+        for (pid, round) in spec.crash_entries() {
+            chaos = chaos.crash_from(pid, round);
+        }
+        for (src, dst) in spec.link_entries() {
+            chaos = chaos.partition(src, dst);
+        }
+        for (round, src, dst) in spec.erasure_entries() {
+            chaos = chaos.erase(round, src, dst);
+        }
+        chaos
+    }
+
+    /// Is `pid` dead at 1-based round `t1`?
+    fn crashed_at(&self, pid: ProcId, t1: u64) -> bool {
+        self.crashes.get(&pid).is_some_and(|&r| t1 >= r)
+    }
+
+    /// Is the directed message `src -> dst` of round `t1` cut?
+    fn cut(&self, t1: u64, src: ProcId, dst: ProcId) -> bool {
+        self.partitions.contains(&(src, dst)) || self.erasures.contains(&(t1, src, dst))
+    }
+
+    /// Crash directives `(pid, first dead round)` for the harness.
+    pub(crate) fn crash_entries(&self) -> impl Iterator<Item = (ProcId, u64)> + '_ {
+        self.crashes.iter().map(|(&p, &r)| (p, r))
+    }
+
+    /// The scenario requested through `DCE_CHAOS`, if set and valid.
+    /// Unknown or malformed values degrade to no chaos with a stderr
+    /// note — same discipline as `DCE_FORCE_ISA`.
+    pub fn from_env() -> Option<ChaosSpec> {
+        let raw = std::env::var("DCE_CHAOS").ok()?;
+        match raw.parse::<ChaosSpec>() {
+            Ok(spec) if spec.is_empty() => None,
+            Ok(spec) => Some(spec),
+            Err(e) => {
+                eprintln!("dce: ignoring DCE_CHAOS={raw:?}: {e}; running without chaos");
+                None
+            }
+        }
+    }
+}
+
+/// `DCE_CHAOS` grammar: comma-separated `key=value` pairs, all
+/// transient (permanent faults need a schedule-aware harness, not an
+/// env knob). Keys: `delay`/`dup`/`reorder` (per-mille, 0..=1000),
+/// `attempts` (1..=3 timeouts per straggler), `seed` (u64). `off`,
+/// `none`, and the empty string mean no chaos.
+impl std::str::FromStr for ChaosSpec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        let s = s.trim();
+        if s.is_empty() || s == "off" || s == "none" {
+            return Ok(ChaosSpec::default());
+        }
+        let mut spec = ChaosSpec::default();
+        for pair in s.split(',') {
+            let (key, value) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("expected key=value, got {pair:?}"))?;
+            let key = key.trim();
+            let value = value.trim();
+            let per_mille = || -> anyhow::Result<u16> {
+                let v: u16 = value.parse()?;
+                anyhow::ensure!(v <= 1000, "{key} is per-mille (0..=1000), got {v}");
+                Ok(v)
+            };
+            match key {
+                "delay" => spec.delay_per_mille = per_mille()?,
+                "dup" => spec.dup_per_mille = per_mille()?,
+                "reorder" => spec.reorder_per_mille = per_mille()?,
+                "attempts" => {
+                    let v: u32 = value.parse()?;
+                    anyhow::ensure!(
+                        (1..=3).contains(&v),
+                        "attempts must be 1..=3 (stay under the retry budget), got {v}"
+                    );
+                    spec.delay_attempts = v;
+                }
+                "seed" => spec.seed = value.parse()?,
+                other => anyhow::bail!(
+                    "unknown chaos key {other:?} (delay|dup|reorder|attempts|seed)"
+                ),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+impl std::fmt::Display for ChaosSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_empty() {
+            return f.write_str("off");
+        }
+        let mut sep = "";
+        let mut put = |f: &mut std::fmt::Formatter<'_>, part: String| {
+            let r = write!(f, "{sep}{part}");
+            sep = ",";
+            r
+        };
+        if self.delay_per_mille > 0 {
+            put(f, format!("delay={}", self.delay_per_mille))?;
+            put(f, format!("attempts={}", self.delay_attempts.max(1)))?;
+        }
+        if self.dup_per_mille > 0 {
+            put(f, format!("dup={}", self.dup_per_mille))?;
+        }
+        if self.reorder_per_mille > 0 {
+            put(f, format!("reorder={}", self.reorder_per_mille))?;
+        }
+        if self.seed != 0 {
+            put(f, format!("seed={}", self.seed))?;
+        }
+        if !self.is_transient_only() {
+            put(
+                f,
+                format!(
+                    "+{} crash/{} link/{} erase",
+                    self.crashes.len(),
+                    self.partitions.len(),
+                    self.erasures.len()
+                ),
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// splitmix64 — the same tiny deterministic mixer `FaultSpec` uses for
+/// `random_crashes`; enough bits to make per-mille draws unbiased.
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// One decision hash per `(fault kind, round, port, src, dst)` event.
+fn event_hash(seed: u64, salt: u64, round: u32, port: u32, src: ProcId, dst: ProcId) -> u64 {
+    let mut h = mix(seed ^ salt);
+    h = mix(h ^ (((round as u64) << 32) | port as u64));
+    h = mix(h ^ (((src as u64) << 32) | dst as u64));
+    h
+}
+
+fn fires(h: u64, per_mille: u16) -> bool {
+    per_mille > 0 && h % 1000 < per_mille as u64
+}
+
+/// The decorator: wraps any substrate and injects the spec's faults.
+///
+/// Synthesized failures never consume from the inner transport, so the
+/// substrate's FIFO discipline survives retries; permanent drops
+/// swallow the send side (the frame is simply never shipped), so the
+/// receiver observes exactly the silence a real partition produces.
+pub struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    spec: ChaosSpec,
+    /// Remaining injected timeouts per in-flight `(round, port, src)`.
+    delay_left: HashMap<(u32, u32, ProcId), u32>,
+    /// Reorder already injected for `(round, port, src)`.
+    reordered: HashSet<(u32, u32, ProcId)>,
+    /// Pending stale duplicate per link: the `(round, port)` of the
+    /// frame that was delivered twice.
+    stale: HashMap<ProcId, (u32, u32)>,
+}
+
+impl ChaosTransport {
+    pub fn wrap(inner: Box<dyn Transport>, spec: ChaosSpec) -> Self {
+        ChaosTransport {
+            inner,
+            spec,
+            delay_left: HashMap::new(),
+            reordered: HashSet::new(),
+            stale: HashMap::new(),
+        }
+    }
+
+    /// The scenario this endpoint runs under.
+    pub fn spec(&self) -> &ChaosSpec {
+        &self.spec
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn rank(&self) -> ProcId {
+        self.inner.rank()
+    }
+
+    fn peers(&self) -> &[ProcId] {
+        self.inner.peers()
+    }
+
+    fn send(
+        &mut self,
+        round: u32,
+        port: u32,
+        dst: ProcId,
+        rows: &[Packet],
+    ) -> Result<(), TransportError> {
+        let me = self.inner.rank();
+        let t1 = round as u64 + 1; // FaultSpec rounds are 1-based
+        if self.spec.crashed_at(me, t1) {
+            // The sentinel a rank's own crash surfaces as: its first
+            // wire operation of the dead round fails self-addressed.
+            return Err(TransportError::PeerClosed { round, peer: me });
+        }
+        if self.spec.crashed_at(dst, t1) || self.spec.cut(t1, me, dst) {
+            // A dead or partitioned destination: the frame vanishes.
+            // The receiver sees pure silence, exactly like the real
+            // failure — no half-delivered state to clean up.
+            return Ok(());
+        }
+        self.inner.send(round, port, dst, rows)
+    }
+
+    fn recv(&mut self, round: u32, port: u32, src: ProcId) -> Result<Vec<Packet>, TransportError> {
+        let me = self.inner.rank();
+        let t1 = round as u64 + 1;
+        if self.spec.crashed_at(me, t1) {
+            return Err(TransportError::PeerClosed { round, peer: me });
+        }
+        if self.spec.crashed_at(src, t1) {
+            return Err(TransportError::PeerClosed { round, peer: src });
+        }
+        if self.spec.cut(t1, src, me) {
+            // Partition/erasure: silence. The executor's bounded wait
+            // expires; report it as already-elapsed so tests stay fast.
+            return Err(TransportError::Timeout {
+                round,
+                peer: src,
+                waited: Duration::ZERO,
+            });
+        }
+        // A stale duplicate from an earlier exchange arrives first.
+        if let Some(&(sr, sp)) = self.stale.get(&src) {
+            self.stale.remove(&src);
+            if sr != round {
+                return Err(TransportError::OutOfOrder {
+                    peer: src,
+                    expected_round: round,
+                    got_round: sr,
+                });
+            }
+            if sp != port {
+                return Err(TransportError::PortMismatch {
+                    peer: src,
+                    round,
+                    expected_port: port,
+                    got_port: sp,
+                });
+            }
+            // Duplicate of the very frame we are about to read: the
+            // substrate would de-dup it by FIFO position; drop it.
+        }
+        // Straggler: charge the configured number of timeouts before
+        // letting the (already queued) genuine frame through.
+        let key = (round, port, src);
+        let budget = self.spec.delay_attempts.max(1);
+        match self.delay_left.entry(key) {
+            std::collections::hash_map::Entry::Vacant(v) => {
+                let h = event_hash(self.spec.seed, SALT_DELAY, round, port, src, me);
+                if fires(h, self.spec.delay_per_mille) {
+                    v.insert(budget - 1);
+                    return Err(TransportError::Timeout {
+                        round,
+                        peer: src,
+                        waited: Duration::ZERO,
+                    });
+                }
+            }
+            std::collections::hash_map::Entry::Occupied(mut o) => {
+                if *o.get() > 0 {
+                    *o.get_mut() -= 1;
+                    return Err(TransportError::Timeout {
+                        round,
+                        peer: src,
+                        waited: Duration::ZERO,
+                    });
+                }
+            }
+        }
+        // Reorder-within-round: the link's other-port frame shows up
+        // first, exactly once; the retry finds the right one.
+        let rh = event_hash(self.spec.seed, SALT_REORDER, round, port, src, me);
+        if fires(rh, self.spec.reorder_per_mille) && self.reordered.insert(key) {
+            return Err(TransportError::PortMismatch {
+                peer: src,
+                round,
+                expected_port: port,
+                got_port: port ^ 1,
+            });
+        }
+        let rows = self.inner.recv(round, port, src)?;
+        self.delay_left.remove(&key);
+        let dh = event_hash(self.spec.seed, SALT_DUP, round, port, src, me);
+        if fires(dh, self.spec.dup_per_mille) {
+            self.stale.insert(src, (round, port));
+        }
+        Ok(rows)
+    }
+
+    fn barrier(&mut self, round: u32) -> Result<(), TransportError> {
+        // Barriers always pass through: a crashed rank's *executor*
+        // decides whether to keep crossing them (the ghost protocol in
+        // `net::peer`), and transient faults never touch the barrier —
+        // the round structure is the one invariant chaos preserves.
+        self.inner.barrier(round)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::channel::ChannelTransport;
+
+    fn chaos_pair(spec: ChaosSpec) -> (ChaosTransport, ChaosTransport) {
+        let mut mesh = ChannelTransport::mesh(&[0, 1], Duration::from_millis(200));
+        let b = mesh.pop().unwrap();
+        let a = mesh.pop().unwrap();
+        (
+            ChaosTransport::wrap(Box::new(a), spec.clone()),
+            ChaosTransport::wrap(Box::new(b), spec),
+        )
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_rate_bounded() {
+        assert_eq!(
+            event_hash(7, SALT_DELAY, 3, 1, 0, 2),
+            event_hash(7, SALT_DELAY, 3, 1, 0, 2)
+        );
+        assert_ne!(
+            event_hash(7, SALT_DELAY, 3, 1, 0, 2),
+            event_hash(7, SALT_DUP, 3, 1, 0, 2),
+            "fault kinds draw from independent streams"
+        );
+        for h in 0..10_000u64 {
+            assert!(!fires(mix(h), 0), "rate 0 never fires");
+            assert!(fires(mix(h), 1000), "rate 1000 always fires");
+        }
+    }
+
+    #[test]
+    fn delay_charges_timeouts_then_delivers_intact() {
+        let spec = ChaosSpec::new().delay(1000, 2).with_seed(5);
+        let (mut a, mut b) = chaos_pair(spec);
+        a.send(0, 0, 1, &[vec![1, 2, 3]]).unwrap();
+        for attempt in 0..2 {
+            match b.recv(0, 0, 0) {
+                Err(TransportError::Timeout { round: 0, peer: 0, .. }) => {}
+                other => panic!("attempt {attempt}: expected injected Timeout, got {other:?}"),
+            }
+        }
+        assert_eq!(b.recv(0, 0, 0).unwrap(), vec![vec![1, 2, 3]]);
+    }
+
+    #[test]
+    fn dup_surfaces_one_stale_frame_then_heals() {
+        let spec = ChaosSpec::new().dup(1000);
+        let (mut a, mut b) = chaos_pair(spec);
+        a.send(0, 0, 1, &[vec![7]]).unwrap();
+        assert_eq!(b.recv(0, 0, 0).unwrap(), vec![vec![7]]);
+        b.barrier(0).unwrap_err(); // only one of two ranks arrives
+        a.send(1, 0, 1, &[vec![8]]).unwrap();
+        match b.recv(1, 0, 0) {
+            Err(TransportError::OutOfOrder {
+                peer: 0,
+                expected_round: 1,
+                got_round: 0,
+            }) => {}
+            other => panic!("expected the stale round-0 duplicate, got {other:?}"),
+        }
+        assert_eq!(b.recv(1, 0, 0).unwrap(), vec![vec![8]], "retry heals");
+    }
+
+    #[test]
+    fn reorder_swaps_ports_exactly_once() {
+        let spec = ChaosSpec::new().reorder(1000);
+        let (mut a, mut b) = chaos_pair(spec);
+        a.send(0, 0, 1, &[vec![9]]).unwrap();
+        match b.recv(0, 0, 0) {
+            Err(TransportError::PortMismatch {
+                peer: 0,
+                round: 0,
+                expected_port: 0,
+                got_port: 1,
+            }) => {}
+            other => panic!("expected injected PortMismatch, got {other:?}"),
+        }
+        assert_eq!(b.recv(0, 0, 0).unwrap(), vec![vec![9]]);
+    }
+
+    #[test]
+    fn crash_directives_surface_as_typed_sentinels() {
+        let spec = ChaosSpec::new().crash_from(0, 1);
+        let (mut a, mut b) = chaos_pair(spec);
+        // The dead rank's own sends fail self-addressed...
+        match a.send(0, 0, 1, &[vec![1]]) {
+            Err(TransportError::PeerClosed { round: 0, peer: 0 }) => {}
+            other => panic!("expected self-addressed PeerClosed, got {other:?}"),
+        }
+        // ...and the survivor sees the crash as PeerClosed{src}.
+        match b.recv(0, 0, 0) {
+            Err(TransportError::PeerClosed { round: 0, peer: 0 }) => {}
+            other => panic!("expected PeerClosed from dead src, got {other:?}"),
+        }
+        // Sends *to* the dead rank are swallowed, not errors.
+        b.send(0, 0, 0, &[vec![2]]).unwrap();
+    }
+
+    #[test]
+    fn crash_round_gates_by_one_based_round() {
+        let spec = ChaosSpec::new().crash_from(0, 2); // healthy in round 0 (t1=1)
+        let (mut a, mut b) = chaos_pair(spec);
+        a.send(0, 0, 1, &[vec![3]]).unwrap();
+        assert_eq!(b.recv(0, 0, 0).unwrap(), vec![vec![3]]);
+        match a.send(1, 0, 1, &[vec![4]]) {
+            Err(TransportError::PeerClosed { round: 1, peer: 0 }) => {}
+            other => panic!("round 1 (t1=2) must be dead, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn partitions_and_erasures_are_directed_silence() {
+        let spec = ChaosSpec::new().partition(0, 1).erase(1, 1, 0);
+        let (mut a, mut b) = chaos_pair(spec);
+        a.send(0, 0, 1, &[vec![1]]).unwrap(); // swallowed
+        match b.recv(0, 0, 0) {
+            Err(TransportError::Timeout { round: 0, peer: 0, .. }) => {}
+            other => panic!("cut link must be silence, got {other:?}"),
+        }
+        // Reverse direction of the partition is untouched.
+        b.send(0, 0, 0, &[vec![2]]).unwrap();
+        assert_eq!(a.recv(0, 0, 1).unwrap(), vec![vec![2]]);
+        // The erasure hits exactly round 1 (t1=2) of link 1 -> 0.
+        b.send(1, 0, 0, &[vec![3]]).unwrap();
+        match a.recv(1, 0, 1) {
+            Err(TransportError::Timeout { round: 1, peer: 1, .. }) => {}
+            other => panic!("erased message must be silence, got {other:?}"),
+        }
+        b.send(2, 0, 0, &[vec![4]]).unwrap();
+        // Round 1's frame is still queued under the cut — the channel
+        // substrate rejects it as OutOfOrder when round 2 reads it, so
+        // drain it first the way the hardened executor's known-dead
+        // bookkeeping does: skip the recv entirely. Here we just
+        // assert the erasure did not leak into a *different* round's
+        // verdict by opening a fresh pair.
+        let spec2 = ChaosSpec::new().erase(1, 1, 0);
+        let (mut a2, mut b2) = chaos_pair(spec2);
+        b2.send(0, 0, 0, &[vec![5]]).unwrap();
+        assert_eq!(a2.recv(0, 0, 1).unwrap(), vec![vec![5]]);
+    }
+
+    #[test]
+    fn fault_spec_roundtrip_preserves_permanent_directives() {
+        let chaos = ChaosSpec::new()
+            .crash_from(2, 3)
+            .crash_after(4)
+            .partition(0, 1)
+            .erase(2, 1, 0);
+        let spec = chaos.to_fault_spec();
+        assert!(spec.crashed_by(2, 3) && !spec.crashed_by(2, 2));
+        assert!(spec.is_crashed(4));
+        assert_eq!(ChaosSpec::from_fault_spec(&spec), chaos);
+        assert!(!chaos.is_transient_only());
+        assert!(ChaosSpec::new().delay(10, 1).is_transient_only());
+    }
+
+    #[test]
+    fn spec_parses_like_an_env_knob() {
+        let spec: ChaosSpec = "delay=200,attempts=2,dup=50,reorder=50,seed=42"
+            .parse()
+            .unwrap();
+        assert_eq!(spec.delay_per_mille, 200);
+        assert_eq!(spec.delay_attempts, 2);
+        assert_eq!(spec.dup_per_mille, 50);
+        assert_eq!(spec.reorder_per_mille, 50);
+        assert_eq!(spec.seed, 42);
+        assert!(spec.is_transient_only());
+        for ok_empty in ["", "off", "none", "  "] {
+            assert!(ok_empty.parse::<ChaosSpec>().unwrap().is_empty());
+        }
+        for junk in [
+            "delay",      // no value
+            "delay=1001", // over per-mille
+            "attempts=0", // under budget floor
+            "attempts=9", // over budget cap
+            "gremlins=5", // unknown key
+            "seed=abc",   // unparseable
+        ] {
+            assert!(junk.parse::<ChaosSpec>().is_err(), "{junk:?} must be rejected");
+        }
+        // Display round-trips the transient knobs.
+        let shown = spec.to_string();
+        assert_eq!(shown.parse::<ChaosSpec>().unwrap(), spec);
+        assert_eq!(ChaosSpec::default().to_string(), "off");
+    }
+
+    #[test]
+    fn from_env_degrades_to_none_with_a_note() {
+        // Sequential on purpose: process env is shared state. Restore
+        // whatever the harness had (CI pins DCE_CHAOS in its chaos
+        // smoke entry).
+        let saved = std::env::var("DCE_CHAOS").ok();
+        std::env::remove_var("DCE_CHAOS");
+        assert_eq!(ChaosSpec::from_env(), None);
+        std::env::set_var("DCE_CHAOS", "delay=100,seed=1");
+        assert_eq!(
+            ChaosSpec::from_env(),
+            Some(ChaosSpec::new().delay(100, 0).with_seed(1))
+        );
+        std::env::set_var("DCE_CHAOS", "utter-nonsense");
+        assert_eq!(ChaosSpec::from_env(), None, "junk degrades to no chaos");
+        std::env::set_var("DCE_CHAOS", "off");
+        assert_eq!(ChaosSpec::from_env(), None);
+        match saved {
+            Some(v) => std::env::set_var("DCE_CHAOS", v),
+            None => std::env::remove_var("DCE_CHAOS"),
+        }
+    }
+}

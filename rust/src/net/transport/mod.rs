@@ -31,15 +31,18 @@
 //! not something to buffer).
 
 pub mod channel;
+pub mod chaos;
 pub mod shmem;
 pub mod tcp;
 
 pub use channel::ChannelTransport;
+pub use chaos::{ChaosSpec, ChaosTransport};
 pub use shmem::ShmemTransport;
 pub use tcp::{TcpTransport, BARRIER_PORT};
 
 use crate::net::payload::Packet;
 use crate::net::sim::ProcId;
+use std::collections::BTreeSet;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -60,9 +63,21 @@ impl TransportKind {
         [TransportKind::Channel, TransportKind::SharedMem, TransportKind::Tcp];
 
     /// The substrate requested through the `DCE_TRANSPORT` environment
-    /// variable (`channel` | `shmem` | `tcp`), if set and valid.
+    /// variable (`channel` | `shmem` | `tcp`), if set and valid. An
+    /// unknown value degrades to `None` (the caller's default) with a
+    /// stderr note — same discipline as `DCE_FORCE_ISA`, so a typo'd
+    /// deployment is visible instead of silently running on channels.
     pub fn from_env() -> Option<TransportKind> {
-        std::env::var("DCE_TRANSPORT").ok()?.parse().ok()
+        let raw = std::env::var("DCE_TRANSPORT").ok()?;
+        match raw.parse() {
+            Ok(kind) => Some(kind),
+            Err(e) => {
+                eprintln!(
+                    "dce: ignoring DCE_TRANSPORT={raw:?}: {e}; using the default transport"
+                );
+                None
+            }
+        }
     }
 }
 
@@ -250,44 +265,75 @@ pub fn mesh(
     })
 }
 
+/// Why a [`LocalBarrier::wait`] gave up: how long it actually waited
+/// and which ranks had not arrived at that moment — so the transports
+/// can blame a *specific* absent peer instead of guessing.
+pub(crate) struct BarrierMiss {
+    pub(crate) waited: Duration,
+    pub(crate) missing: Vec<ProcId>,
+}
+
 /// A reusable generation-counting barrier with a bounded wait — the
 /// in-process round barrier shared by the channel and shared-memory
 /// transports (`std::sync::Barrier` blocks forever when a peer dies;
 /// this one surfaces a typed timeout instead).
+///
+/// Arrivals are **identified by rank**, not anonymously counted. The
+/// old counter design withdrew a timed-out arrival with a decrement;
+/// under timeout-then-retry in the same generation, any interleaving
+/// that pairs one withdrawal with two arrivals from the same rank
+/// releases the barrier with a rank still missing. A set is immune by
+/// construction: re-arrival is idempotent, withdrawal removes exactly
+/// this rank's entry, and the barrier opens only when every distinct
+/// participant is present (pinned by
+/// `local_barrier_retry_cannot_double_count`).
 pub(crate) struct LocalBarrier {
-    n: usize,
-    state: Mutex<(u64, usize)>, // (generation, arrived)
+    procs: Vec<ProcId>,
+    state: Mutex<(u64, BTreeSet<ProcId>)>, // (generation, arrived ranks)
     cv: Condvar,
 }
 
 impl LocalBarrier {
-    pub(crate) fn new(n: usize) -> Self {
+    pub(crate) fn new(procs: &[ProcId]) -> Self {
         LocalBarrier {
-            n,
-            state: Mutex::new((0, 0)),
+            procs: procs.to_vec(),
+            state: Mutex::new((0, BTreeSet::new())),
             cv: Condvar::new(),
         }
     }
 
-    /// Wait until all `n` ranks arrive, or `timeout` elapses.
-    pub(crate) fn wait(&self, timeout: Duration) -> Result<(), Duration> {
-        let deadline = Instant::now() + timeout;
+    /// Wait as `who` until every participant arrives, or `timeout`
+    /// elapses. A rank that timed out may retry in the same
+    /// generation: its earlier withdrawn arrival cannot double-count.
+    pub(crate) fn wait(&self, who: ProcId, timeout: Duration) -> Result<(), BarrierMiss> {
+        let start = Instant::now();
+        let deadline = start + timeout;
         let mut st = self.state.lock().expect("barrier lock poisoned");
         let gen = st.0;
-        st.1 += 1;
-        if st.1 == self.n {
+        st.1.insert(who);
+        if st.1.len() == self.procs.len() {
             st.0 += 1;
-            st.1 = 0;
+            st.1.clear();
             self.cv.notify_all();
             return Ok(());
         }
         while st.0 == gen {
             let now = Instant::now();
             if now >= deadline {
-                // Withdraw our arrival so a later retry (or a slow peer
-                // arriving after we error out) doesn't see a phantom.
-                st.1 = st.1.saturating_sub(1);
-                return Err(timeout);
+                // Withdraw *our own* arrival so a later retry (or a
+                // slow peer arriving after we error out) doesn't see a
+                // phantom — removing by rank cannot touch anyone else.
+                let missing: Vec<ProcId> = self
+                    .procs
+                    .iter()
+                    .copied()
+                    .filter(|p| !st.1.contains(p))
+                    .collect();
+                st.1.remove(&who);
+                return Err(BarrierMiss {
+                    waited: start.elapsed(),
+                    missing,
+                });
             }
             let (guard, _res) = self
                 .cv
@@ -324,25 +370,93 @@ mod tests {
 
     #[test]
     fn local_barrier_times_out_instead_of_hanging() {
-        let b = LocalBarrier::new(2);
+        let b = LocalBarrier::new(&[0, 1]);
         let t0 = Instant::now();
-        let err = b.wait(Duration::from_millis(50)).unwrap_err();
-        assert_eq!(err, Duration::from_millis(50));
+        let miss = b.wait(0, Duration::from_millis(50)).unwrap_err();
+        assert!(miss.waited >= Duration::from_millis(50));
+        assert_eq!(miss.missing, vec![1], "the absent rank is named");
         assert!(t0.elapsed() < Duration::from_secs(5));
     }
 
     #[test]
     fn local_barrier_releases_all_ranks() {
-        let b = std::sync::Arc::new(LocalBarrier::new(3));
+        let b = std::sync::Arc::new(LocalBarrier::new(&[0, 1, 2]));
         std::thread::scope(|s| {
-            for _ in 0..3 {
+            for rank in 0..3 {
                 let b = b.clone();
                 s.spawn(move || {
                     for _round in 0..10 {
-                        b.wait(Duration::from_secs(5)).unwrap();
+                        b.wait(rank, Duration::from_secs(5)).unwrap();
                     }
                 });
             }
+        });
+    }
+
+    #[test]
+    fn transport_kind_from_env_degrades_with_a_note() {
+        // Sequential on purpose: process env is shared state. Restore
+        // whatever the harness had (CI pins DCE_TRANSPORT=tcp in one
+        // matrix entry).
+        let saved = std::env::var("DCE_TRANSPORT").ok();
+        std::env::remove_var("DCE_TRANSPORT");
+        assert_eq!(TransportKind::from_env(), None);
+        std::env::set_var("DCE_TRANSPORT", "shmem");
+        assert_eq!(TransportKind::from_env(), Some(TransportKind::SharedMem));
+        std::env::set_var("DCE_TRANSPORT", "carrier-pigeon");
+        assert_eq!(
+            TransportKind::from_env(),
+            None,
+            "junk degrades to the default, with a stderr note"
+        );
+        match saved {
+            Some(v) => std::env::set_var("DCE_TRANSPORT", v),
+            None => std::env::remove_var("DCE_TRANSPORT"),
+        }
+    }
+
+    /// The satellite regression: with the old anonymous counter, a
+    /// timed-out rank that retried in the same generation could pair
+    /// one withdrawal with two arrivals and release the barrier while
+    /// a rank was still missing. Identified arrivals make re-arrival
+    /// idempotent: however many times the lone rank times out and
+    /// retries, a 2-party barrier never opens for it alone.
+    #[test]
+    fn local_barrier_retry_cannot_double_count() {
+        let b = LocalBarrier::new(&[0, 1]);
+        for attempt in 0..3 {
+            let miss = b.wait(0, Duration::from_millis(20)).unwrap_err();
+            assert_eq!(
+                miss.missing,
+                vec![1],
+                "attempt {attempt}: rank 0 alone must keep timing out"
+            );
+        }
+        // Generation must be untouched by the failed attempts.
+        let st = b.state.lock().unwrap();
+        assert_eq!(st.0, 0, "no phantom release happened");
+        assert!(st.1.is_empty(), "every withdrawn arrival was cleaned up");
+    }
+
+    /// Timeout-then-retry convergence: rank 0 gives up once while rank
+    /// 1 is slow, retries the same generation, and both sides converge
+    /// — and the *next* generation still works (no leaked state).
+    #[test]
+    fn local_barrier_timeout_then_retry_converges() {
+        let b = std::sync::Arc::new(LocalBarrier::new(&[0, 1]));
+        std::thread::scope(|s| {
+            let slow = {
+                let b = b.clone();
+                s.spawn(move || {
+                    std::thread::sleep(Duration::from_millis(60));
+                    b.wait(1, Duration::from_secs(5)).unwrap();
+                    b.wait(1, Duration::from_secs(5)).unwrap();
+                })
+            };
+            assert!(b.wait(0, Duration::from_millis(10)).is_err(), "first try times out");
+            b.wait(0, Duration::from_secs(5)).unwrap();
+            b.wait(0, Duration::from_secs(5)).unwrap();
+            slow.join().unwrap();
         });
     }
 }

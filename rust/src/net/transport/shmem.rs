@@ -169,7 +169,7 @@ impl ShmemTransport {
     ) -> Vec<ShmemTransport> {
         let frame = FRAME_HEADER_LEN + max_msg_bytes;
         let cap = (2 * ports.max(1) * frame).max(4096);
-        let barrier = Arc::new(LocalBarrier::new(procs.len()));
+        let barrier = Arc::new(LocalBarrier::new(procs));
         let mut rings: HashMap<(ProcId, ProcId), Arc<Ring>> = HashMap::new();
         for &src in procs {
             for &dst in procs {
@@ -305,17 +305,13 @@ impl Transport for ShmemTransport {
     }
 
     fn barrier(&mut self, round: u32) -> Result<(), TransportError> {
-        self.barrier.wait(self.timeout).map_err(|waited| {
-            let peer = self
-                .procs
-                .iter()
-                .copied()
-                .find(|&p| p != self.rank)
-                .unwrap_or(self.rank);
+        self.barrier.wait(self.rank, self.timeout).map_err(|miss| {
+            // Blame the first rank that had not arrived when we gave up.
+            let peer = miss.missing.first().copied().unwrap_or(self.rank);
             TransportError::Timeout {
                 round,
                 peer,
-                waited,
+                waited: miss.waited,
             }
         })
     }

@@ -86,6 +86,16 @@ pub struct TcpTransport {
     streams: HashMap<ProcId, TcpStream>,
     timeout: Duration,
     scratch: Vec<u8>,
+    /// In-progress barrier state, so a timed-out [`Transport::barrier`]
+    /// can be *retried* without poisoning the mesh: which round the
+    /// barrier frames were sent for, which peers still need ours, and
+    /// which peers we still owe a collect from. Without this, a retry
+    /// would re-send to everyone (duplicate frames the peers reject as
+    /// `OutOfOrder` next round) and re-collect from peers already
+    /// counted (a permanent wedge).
+    barrier_sent: Option<u32>,
+    barrier_send_pending: Vec<ProcId>,
+    barrier_recv_pending: Vec<ProcId>,
 }
 
 impl TcpTransport {
@@ -187,6 +197,9 @@ impl TcpTransport {
             streams,
             timeout,
             scratch: Vec::new(),
+            barrier_sent: None,
+            barrier_send_pending: Vec::new(),
+            barrier_recv_pending: Vec::new(),
         })
     }
 
@@ -298,22 +311,37 @@ impl Transport for TcpTransport {
     /// count arrivals in): ship an empty barrier frame to every peer,
     /// then collect one from each. A peer that died mid-round surfaces
     /// as `PeerClosed`/`Timeout` here, bounded by the recv timeout.
+    ///
+    /// The barrier is **retry-idempotent**: on failure the send/collect
+    /// progress for `round` is kept, so a retry resumes where it
+    /// stopped — no peer is sent a duplicate frame, no peer is
+    /// collected twice. This is what lets the hardened executor treat
+    /// a barrier timeout as transient on TCP, just like on the
+    /// `LocalBarrier` substrates.
     fn barrier(&mut self, round: u32) -> Result<(), TransportError> {
-        let peers: Vec<ProcId> = self
-            .procs
-            .iter()
-            .copied()
-            .filter(|&p| p != self.rank)
-            .collect();
-        for &p in &peers {
+        if self.barrier_sent != Some(round) {
+            let peers: Vec<ProcId> = self
+                .procs
+                .iter()
+                .copied()
+                .filter(|&p| p != self.rank)
+                .collect();
+            self.barrier_sent = Some(round);
+            self.barrier_send_pending = peers.clone();
+            self.barrier_recv_pending = peers;
+        }
+        while let Some(p) = self.barrier_send_pending.first().copied() {
             self.send_frame(round, BARRIER_PORT, p, &[])?;
+            self.barrier_send_pending.remove(0);
         }
         let timeout = self.timeout;
-        for &p in &peers {
+        while let Some(p) = self.barrier_recv_pending.first().copied() {
             let stream = self.stream(p, round)?;
             let (header, _payload) = read_frame_from(stream, p, round, timeout)?;
             check_peer_frame(&header, round, BARRIER_PORT, p)?;
+            self.barrier_recv_pending.remove(0);
         }
+        self.barrier_sent = None;
         Ok(())
     }
 }

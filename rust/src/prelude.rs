@@ -34,8 +34,9 @@ pub use crate::coordinator::wire_layout;
 pub use crate::framework::{A2aAlgo, NonSystematicEncode, SystematicEncode};
 pub use crate::gf::SymbolLayout;
 pub use crate::net::peer::{
-    execute_shard, merge_stats, run_peer, spawn_local, PeerRun, PeerStats, ShardedPlan,
+    execute_shard, merge_stats, run_peer, spawn_local, spawn_local_chaos, DegradedPeerRun,
+    PeerRun, PeerStats, RetryPolicy, ShardedPlan,
 };
-pub use crate::net::transport::TcpTransport;
+pub use crate::net::transport::{ChaosSpec, TcpTransport};
 pub use crate::net::{pkt_scale, run, Collective, ProcId, Sim};
 pub use crate::util::Rng;

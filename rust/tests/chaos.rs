@@ -1,0 +1,294 @@
+//! Chaos conformance (the robustness contract): seeded fault injection
+//! at the frame layer must be
+//!
+//! * **invisible** for transient faults — delayed, duplicated and
+//!   reordered frames are absorbed by bounded retry, leaving outputs
+//!   bit-identical, the delivered report exactly the healthy one, and a
+//!   nonzero `retries` counter as the only trace — and
+//! * **exactly analyzable** for permanent faults — the mesh's
+//!   receive-side [`DegradedReport`](dce::net::DegradedReport) must
+//!   equal [`analyze_plan`](dce::net::analyze_plan) on the same spec,
+//!   crashed ranks' outputs are dropped, and every untainted survivor
+//!   stays bit-identical to the healthy run.
+//!
+//! Both clauses are pinned across all four A2A variants, both field
+//! families, degenerate shapes, and (for a representative shape) all
+//! three transports; the coordinator path at the end pins that the
+//! repaired coded rows a degraded peer mesh serves match the healthy
+//! oracle bit for bit.
+
+use dce::codes::structured::disjoint_family;
+use dce::codes::StructuredPoints;
+use dce::collectives::{CauchyA2A, DftA2A, DrawLoose, PrepareShoot};
+use dce::coordinator::{Engine, ExecOptions, JobConfig, PlanCache};
+use dce::framework::{A2aAlgo, SystematicEncode};
+use dce::gf::{Field, Gf2e, GfPrime, Mat};
+use dce::net::peer::{spawn_local_chaos, RetryPolicy, ShardedPlan};
+use dce::net::transport::{ChaosSpec, TransportKind};
+use dce::net::{analyze_plan, exec, plan, Collective, FaultSpec, Packet, ProcId};
+use dce::util::{ipow, Rng};
+use std::sync::Arc;
+use std::time::Duration;
+
+const TIMEOUT: Duration = Duration::from_secs(20);
+
+/// The transports a conformance sweep runs over.
+type Kinds = &'static [TransportKind];
+
+/// The cheap default: variant coverage runs over in-process channels;
+/// one representative shape sweeps `TransportKind::ALL` below.
+const CH: Kinds = &[TransportKind::Channel];
+
+/// Full-rate transient knobs: every first recv per (round, port, src)
+/// times out once, every delivered frame leaves a duplicate behind, and
+/// every key is reordered once — deterministic worst-case stacking that
+/// stays strictly inside the default retry budget.
+fn full_transients(seed: u64) -> ChaosSpec {
+    ChaosSpec::new()
+        .with_seed(seed)
+        .delay(1000, 1)
+        .dup(1000)
+        .reorder(1000)
+}
+
+fn rand_inputs<F: Field>(f: &F, k: usize, w: usize, rng: &mut Rng) -> Vec<Packet> {
+    (0..k)
+        .map(|_| (0..w).map(|_| rng.below(f.order())).collect())
+        .collect()
+}
+
+/// Compile the collective once, then pin both chaos clauses against the
+/// healthy replay oracle: transient-only specs over every `kind` in
+/// `kinds`, and a battery of permanent specs (mid-schedule crash,
+/// post-run crash, partition, single-round erasure, everything combined
+/// with full-rate transients) on the first one.
+fn assert_conforms<F, B>(tag: &str, f: &F, p: usize, k: usize, w: usize, kinds: Kinds, build: B)
+where
+    F: Field + Sync,
+    B: FnOnce(Vec<Packet>) -> Box<dyn Collective>,
+{
+    let compiled = plan::compile(p, k, |basis| Ok(build(basis))).unwrap();
+    let mut rng = Rng::new(k as u64 * 6007 + p as u64 * 101 + w as u64);
+    let inputs = rand_inputs(f, k, w, &mut rng);
+    let rep = exec::replay(&compiled, f, &inputs).unwrap();
+    let owners: Vec<ProcId> = (0..compiled.n_inputs).collect();
+    let sharded = ShardedPlan::new(&compiled, f, &owners).unwrap();
+    let policy = RetryPolicy::default();
+
+    // Clause 1: transient chaos is invisible on every requested
+    // transport — bit-identical outputs, healthy delivered report,
+    // nothing crashed, nothing tainted, nothing dropped.
+    let transient = full_transients(0xC4A0 ^ k as u64);
+    for &kind in kinds {
+        let run = spawn_local_chaos(&sharded, f, &inputs, kind, TIMEOUT, &transient, &policy)
+            .unwrap_or_else(|e| panic!("{tag} over {kind} (transient): {e:#}"));
+        assert_eq!(run.outputs, rep.outputs, "{tag} over {kind}: outputs");
+        assert_eq!(
+            run.report.delivered, rep.report,
+            "{tag} over {kind}: transient delivered report"
+        );
+        assert_eq!(run.report.dropped_messages, 0, "{tag} over {kind}");
+        assert!(run.report.crashed.is_empty(), "{tag} over {kind}");
+        assert!(run.report.tainted.is_empty(), "{tag} over {kind}");
+        assert!(run.crashes_detected.is_empty(), "{tag} over {kind}");
+        if rep.report.messages > 0 {
+            assert!(
+                run.retries > 0 && run.rounds_delayed > 0,
+                "{tag} over {kind}: full-rate chaos left no retry trace"
+            );
+        }
+    }
+
+    // Clause 2: permanent specs on the first transport. Every scenario
+    // is checked the same way: the peer mesh's report equals the static
+    // plan analysis, crashed outputs are gone, survivors bit-identical.
+    let kind = kinds[0];
+    let check = |what: &str, chaos: &ChaosSpec| {
+        let expected = analyze_plan(&compiled, w, &chaos.to_fault_spec());
+        let run = spawn_local_chaos(&sharded, f, &inputs, kind, TIMEOUT, chaos, &policy)
+            .unwrap_or_else(|e| panic!("{tag} / {what}: {e:#}"));
+        assert_eq!(run.report, expected, "{tag} / {what}: peer report");
+        for pid in &run.report.crashed {
+            let kept = run.outputs.contains_key(pid);
+            assert!(!kept, "{tag} / {what}: crashed rank {pid} kept an output");
+        }
+        for (pid, pkt) in &rep.outputs {
+            if run.report.survives(*pid) {
+                let got = run.outputs.get(pid);
+                assert_eq!(got, Some(pkt), "{tag} / {what}: survivor {pid}");
+            }
+        }
+    };
+    let procs = &sharded.procs;
+    let mid = procs[procs.len() / 2];
+    let mid_round = (sharded.n_rounds as u64 / 2).max(1);
+    let mid_crash = ChaosSpec::new().crash_from(mid, mid_round);
+    let post_crash = ChaosSpec::new().crash_after(procs[0]);
+    check("mid-schedule crash", &mid_crash);
+    check("post-run crash", &post_crash);
+    if procs.len() > 1 {
+        let (a, b) = (procs[0], procs[procs.len() - 1]);
+        check("partition", &ChaosSpec::new().partition(a, b));
+        check("round-1 erasure", &ChaosSpec::new().erase(1, b, a));
+        let combined = full_transients(0xD0C ^ k as u64)
+            .crash_from(mid, mid_round)
+            .partition(a, b);
+        check("combined crash + cut + transients", &combined);
+    }
+}
+
+#[test]
+fn prepare_shoot_prime_including_degenerate() {
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xCA01);
+    for (k, p, w) in [(1usize, 1usize, 1usize), (5, 1, 2), (10, 2, 1)] {
+        let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+        let tag = format!("ps K={k} p={p} w={w}");
+        assert_conforms(&tag, &f, p, k, w, CH, move |ins| {
+            Box::new(PrepareShoot::new(f, (0..k).collect(), p, c, ins))
+        });
+    }
+}
+
+#[test]
+fn prepare_shoot_gf2e() {
+    let f = Gf2e::new(8).unwrap();
+    let mut rng = Rng::new(0xCA02);
+    let (k, p, w) = (13usize, 2usize, 3usize);
+    let c = Arc::new(Mat::random(&f, k, k, rng.next_u64()));
+    let ff = f.clone();
+    assert_conforms("ps/gf2e K=13 p=2 w=3", &f, p, k, w, CH, move |ins| {
+        Box::new(PrepareShoot::new(ff, (0..k).collect(), p, c, ins))
+    });
+}
+
+#[test]
+fn dft_a2a_both_fields() {
+    let f = GfPrime::default_field();
+    let (p_base, h, p, w) = (2u64, 3u32, 1usize, 2usize);
+    let k = ipow(p_base, h) as usize;
+    assert_conforms("dft P=2 H=3 p=1", &f, p, k, w, CH, move |ins| {
+        Box::new(DftA2A::new(f, (0..k).collect(), p, p_base, h, ins, false).unwrap())
+    });
+    // GF(256): q−1 = 255 = 3·5·17 — prime radixes only.
+    let f = Gf2e::new(8).unwrap();
+    let k = 3usize;
+    let ff = f.clone();
+    assert_conforms("dft/gf2e P=3 p=2", &f, 2, k, 2, CH, move |ins| {
+        Box::new(DftA2A::new(ff, (0..k).collect(), 2, 3, 1, ins, false).unwrap())
+    });
+}
+
+#[test]
+fn draw_loose_both_fields() {
+    let f = GfPrime::default_field();
+    let (n, p_base, p, w) = (12usize, 2u64, 3usize, 1usize);
+    let hmax = StructuredPoints::max_h(&f, n as u64, p_base);
+    let m = n / ipow(p_base, hmax) as usize;
+    let sp = StructuredPoints::new(&f, n, p_base, (0..m as u64).collect()).unwrap();
+    assert_conforms("dl n=12 P=2 p=3", &f, p, n, w, CH, move |ins| {
+        Box::new(DrawLoose::new(f, (0..n).collect(), p, &sp, ins, false).unwrap())
+    });
+    // GF(256), radix 3: M = 2, Z = 3.
+    let f = Gf2e::new(8).unwrap();
+    let n = 6usize;
+    let sp = StructuredPoints::new(&f, n, 3, vec![0, 1]).unwrap();
+    let ff = f.clone();
+    assert_conforms("dl/gf2e n=6", &f, 1, n, 2, CH, move |ins| {
+        Box::new(DrawLoose::new(ff, (0..n).collect(), 1, &sp, ins, false).unwrap())
+    });
+}
+
+#[test]
+fn cauchy_a2a_both_fields() {
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xCA04);
+    let (n, p, w) = (8usize, 1usize, 1usize);
+    let fam = disjoint_family(&f, n, 2, 2).unwrap();
+    let pre: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+    let post: Vec<u64> = (0..n).map(|_| rng.range(1, f.order())).collect();
+    assert_conforms("cauchy n=8 p=1", &f, p, n, w, CH, move |ins| {
+        let a2a = CauchyA2A::new(f, (0..n).collect(), p, &fam[0], &fam[1], pre, post, ins);
+        Box::new(a2a.unwrap())
+    });
+    let f = Gf2e::new(8).unwrap();
+    let n = 6usize;
+    let fam = disjoint_family(&f, n, 3, 2).unwrap();
+    let pre: Vec<u64> = (0..n).map(|_| rng.range(1, 256)).collect();
+    let post: Vec<u64> = (0..n).map(|_| rng.range(1, 256)).collect();
+    let ff = f.clone();
+    assert_conforms("cauchy/gf2e n=6", &f, 1, n, 2, CH, move |ins| {
+        let a2a = CauchyA2A::new(ff, (0..n).collect(), 1, &fam[0], &fam[1], pre, post, ins);
+        Box::new(a2a.unwrap())
+    });
+}
+
+#[test]
+fn systematic_framework_degenerate_shapes() {
+    // The framework around the A2As at the contract's degenerate
+    // corners: K=1, R=1, p=1, W=1 (and small mixes).
+    let f = GfPrime::default_field();
+    let mut rng = Rng::new(0xCA05);
+    let shapes: [(usize, usize, usize, usize); 3] = [(1, 1, 1, 1), (2, 2, 1, 1), (12, 4, 2, 2)];
+    for (k, r, p, w) in shapes {
+        let a = Arc::new(Mat::random(&f, k, r, rng.next_u64()));
+        let tag = format!("sys K={k} R={r} p={p} w={w}");
+        assert_conforms(&tag, &f, p, k, w, CH, move |ins| {
+            Box::new(SystematicEncode::new(f, a, ins, p, A2aAlgo::Universal).unwrap())
+        });
+    }
+}
+
+#[test]
+fn representative_shape_conforms_on_every_transport() {
+    // One mid-sized systematic shape, both chaos clauses, all three
+    // substrates — rings and sockets heal exactly like channels.
+    let f = GfPrime::default_field();
+    let a = Arc::new(Mat::random(&f, 10, 4, 0xCA06));
+    assert_conforms("sys K=10 R=4", &f, 2, 10, 2, &TransportKind::ALL, move |ins| {
+        Box::new(SystematicEncode::new(f, a, ins, 2, A2aAlgo::Universal).unwrap())
+    });
+}
+
+#[test]
+fn coordinator_recovers_lost_sinks_through_degraded_peer_mesh() {
+    // End-to-end healing: a sink crash-stops mid-run and a source dies
+    // post-run; on every transport the peer engine's repaired coded
+    // rows match the healthy oracle bit for bit, its delivered report
+    // matches the replay engine's fault analysis, and the healing
+    // telemetry lands in the degraded info.
+    let cache = PlanCache::new();
+    let cfg = JobConfig {
+        k: 12,
+        r: 4,
+        w: 5,
+        ..JobConfig::default()
+    };
+    let job = dce::coordinator::EncodeJob::synthetic(cfg).unwrap();
+    let opts = ExecOptions::cached(&cache);
+    let healthy = job
+        .encode(&cache, &[job.inputs.as_slice()], &opts)
+        .unwrap()
+        .coded
+        .remove(0);
+    let faults = FaultSpec::new().crash_from(13, 2).crash_after(3);
+    let replayed = job.run(&opts.faults(&faults)).unwrap();
+    let rd = replayed.degraded.as_ref().expect("replay degraded");
+    assert_eq!(rd.coded, healthy, "replay oracle sanity");
+    for kind in TransportKind::ALL {
+        let peer = job
+            .run(&opts.faults(&faults).engine(Engine::Peer(kind)))
+            .unwrap_or_else(|e| panic!("degraded peer engine over {kind}: {e:#}"));
+        let d = peer.degraded.as_ref().expect("peer degraded");
+        assert_eq!(d.coded, healthy, "{kind}: repaired rows match");
+        assert_eq!(peer.verified, Some(true), "{kind}");
+        assert_eq!(peer.sim, replayed.sim, "{kind}: sim reports agree");
+        assert_eq!(d.crashed, rd.crashed, "{kind}");
+        assert_eq!(d.lost_sinks, rd.lost_sinks, "{kind}");
+        assert_eq!(d.surviving_sinks, rd.surviving_sinks, "{kind}");
+        assert_eq!(d.outputs_recovered, rd.outputs_recovered, "{kind}");
+        // The mid-run sink death is detected on the wire (self-report
+        // gossiped); the post-run source death leaves no wire trace.
+        assert_eq!(d.peer_crashes_detected, 1, "{kind}");
+    }
+}

@@ -11,7 +11,10 @@
 //! * a dropped peer surfaces as `PeerClosed`/`Timeout` **bounded by the
 //!   recv timeout**, never a hang — on sockets, rings, and channels;
 //! * the TCP framing inherits the serving tier's hostile-input caps:
-//!   raw adversarial headers are rejected before any allocation.
+//!   raw adversarial headers are rejected before any allocation;
+//! * hostile *timing* is typed too — a mid-frame hangup is `PeerClosed`,
+//!   a connected-but-silent peer costs exactly one recv `Timeout`, and a
+//!   timed-out barrier withdraws cleanly so a later retry converges.
 
 use dce::net::payload::{Packet, FRAME_HEADER_LEN};
 use dce::net::transport::{self, tcp::read_frame_from, Transport, TransportError, TransportKind};
@@ -233,4 +236,118 @@ fn tcp_truncated_header_is_peer_closed() {
     }
     assert!(t0.elapsed() < Duration::from_secs(10));
     attacker.join().unwrap();
+}
+
+/// A peer that dies *mid-payload* — valid header, half the rows, then a
+/// hangup — must surface `PeerClosed`: no garbage rows, no hang.
+#[test]
+fn tcp_mid_frame_reset_is_peer_closed_and_bounded() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let attacker = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut h = [0u8; FRAME_HEADER_LEN];
+        h[0..4].copy_from_slice(b"DCE1");
+        h[4] = 2; // Request
+        h[5] = 8; // u64 lane
+        h[24..28].copy_from_slice(&1u32.to_le_bytes()); // rows
+        h[28..32].copy_from_slice(&2u32.to_le_bytes()); // width
+        h[32..36].copy_from_slice(&16u32.to_le_bytes()); // payload_len
+        s.write_all(&h).unwrap();
+        s.write_all(&42u64.to_le_bytes()).unwrap(); // 8 of 16 bytes...
+        drop(s); // ...then the connection dies mid-frame
+    });
+    let (mut victim, _) = listener.accept().unwrap();
+    let t0 = Instant::now();
+    let err = read_frame_from(&mut victim, 5, 0, Duration::from_secs(2)).unwrap_err();
+    match err {
+        TransportError::PeerClosed { peer: 5, .. } => {}
+        other => panic!("expected PeerClosed, got {other:?}"),
+    }
+    assert!(t0.elapsed() < Duration::from_secs(10));
+    attacker.join().unwrap();
+}
+
+/// A peer that connects and then goes silent costs exactly one recv
+/// timeout — a typed `Timeout` carrying the round, never a hang and
+/// never a misdiagnosed `PeerClosed`.
+#[test]
+fn tcp_connected_but_silent_peer_is_a_typed_timeout() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let _silent = TcpStream::connect(addr).unwrap(); // never writes
+    let (mut victim, _) = listener.accept().unwrap();
+    let t0 = Instant::now();
+    let err = read_frame_from(&mut victim, 7, 4, Duration::from_millis(300)).unwrap_err();
+    match err {
+        TransportError::Timeout { peer: 7, round: 4, .. } => {}
+        other => panic!("expected Timeout, got {other:?}"),
+    }
+    let waited = t0.elapsed();
+    assert!(
+        waited >= Duration::from_millis(250),
+        "a silent peer must cost one full recv timeout: {waited:?}"
+    );
+    assert!(waited < Duration::from_secs(10));
+}
+
+/// A barrier against peers that died outright (endpoints dropped before
+/// arriving) is a typed, bounded failure on every substrate.
+#[test]
+fn barrier_against_dead_peers_is_typed_and_bounded_on_every_substrate() {
+    let timeout = Duration::from_millis(300);
+    for kind in TransportKind::ALL {
+        let mut endpoints = mesh(kind, timeout);
+        drop(endpoints.remove(2)); // both other ranks die outright
+        drop(endpoints.remove(1));
+        let mut t0 = endpoints.remove(0);
+        let t0_start = Instant::now();
+        match t0.barrier(0) {
+            Err(TransportError::Timeout { .. }) | Err(TransportError::PeerClosed { .. }) => {}
+            Ok(()) => panic!("{kind}: barrier completed against dead peers"),
+            Err(other) => panic!("{kind}: expected Timeout/PeerClosed, got {other:?}"),
+        }
+        assert!(
+            t0_start.elapsed() < Duration::from_secs(10),
+            "{kind}: a dead-peer barrier must be bounded by the timeout"
+        );
+    }
+}
+
+/// The regression pinned here: a barrier that times out must withdraw
+/// cleanly — a later retry by the same rank (once the stragglers show
+/// up) converges, and the *next* round's barrier still works. This
+/// exercises the identified-arrival bookkeeping on channels and rings
+/// and the send-resume state on sockets.
+#[test]
+fn barrier_timeout_then_retry_converges_on_every_substrate() {
+    for kind in TransportKind::ALL {
+        let mut endpoints = mesh(kind, Duration::from_millis(500));
+        let t2 = endpoints.remove(2);
+        let t1 = endpoints.remove(1);
+        let mut t0 = endpoints.remove(0);
+        // Rank 0 reaches the barrier alone and times out...
+        match t0.barrier(0) {
+            Err(TransportError::Timeout { .. }) => {}
+            Ok(()) => panic!("{kind}: lone barrier completed"),
+            Err(other) => panic!("{kind}: expected Timeout, got {other:?}"),
+        }
+        // ...then the stragglers arrive and everyone retries.
+        let joiners = [t1, t2].map(|mut t| {
+            std::thread::spawn(move || {
+                t.barrier(0).unwrap();
+                t.barrier(1).unwrap();
+                t
+            })
+        });
+        if let Err(e) = t0.barrier(0) {
+            panic!("{kind}: retry after a timed-out barrier: {e}");
+        }
+        if let Err(e) = t0.barrier(1) {
+            panic!("{kind}: follow-up barrier after recovery: {e}");
+        }
+        for j in joiners {
+            j.join().unwrap();
+        }
+    }
 }

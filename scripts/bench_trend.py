@@ -21,8 +21,9 @@ Gating rules
   - ``recovery_exact``, ``packed_equals_scalar``,
     ``simd_equals_scalar``, ``backend_equals_dense``,
     ``responses_match_direct``, ``shutdown_drained``,
-    ``peer_equals_replay`` and ``peer_matches_statics`` must not flip
-    away from ``true``.
+    ``peer_equals_replay``, ``peer_matches_statics``,
+    ``transient_bit_identical`` and ``peer_degraded_equals_analysis``
+    must not flip away from ``true``.
 * **Timing** fields gate only when *both* files were produced with
   ``smoke == false`` (a real multi-iteration run on comparable
   hardware). Smoke runs execute one iteration on shared runners — their
@@ -78,8 +79,10 @@ EXACT_LOWER_OR_EQUAL = {"slots_after"}
 # Booleans that may never flip away from true: exact erasure recovery,
 # packed-kernel/scalar bit-identity, SIMD-tier/scalar-tier bit-identity,
 # NTT-backend/dense bit-identity, serving-tier/direct-path bit-identity,
-# the zero-drop graceful-shutdown guarantee, and peer-execution
-# bit-identity / measured-traffic == plan-statics conformance.
+# the zero-drop graceful-shutdown guarantee, peer-execution
+# bit-identity / measured-traffic == plan-statics conformance, and the
+# chaos invariants (transient faults absorbed bit-identically; the
+# peer-side degraded report equal to the replay engine's analysis).
 EXACT_MUST_HOLD = {
     "recovery_exact",
     "packed_equals_scalar",
@@ -89,6 +92,8 @@ EXACT_MUST_HOLD = {
     "shutdown_drained",
     "peer_equals_replay",
     "peer_matches_statics",
+    "transient_bit_identical",
+    "peer_degraded_equals_analysis",
 }
 # Numbers that move with the hardware, not with regressions: report
 # shifts as notices, never failures.
